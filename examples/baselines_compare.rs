@@ -1,0 +1,65 @@
+//! Baseline comparison scenario (paper §4.7, Figure 9): FedComLoc vs
+//! FedAvg, sparseFedAvg, Scaffold and FedDyn under identical data, sampling
+//! and bit accounting.
+//!
+//!     cargo run --release --example baselines_compare
+
+use fedcomloc::compress::{Identity, TopK};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::model::{native::NativeTrainer, ModelKind};
+use std::sync::Arc;
+
+fn main() {
+    let cfg = RunConfig {
+        rounds: 40,
+        train_n: 8_000,
+        test_n: 1_500,
+        eval_every: 5,
+        ..RunConfig::default_mnist()
+    };
+    let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
+
+    let runs: Vec<(&str, AlgorithmSpec)> = vec![
+        (
+            "FedAvg",
+            AlgorithmSpec::FedAvg {
+                compressor: Box::new(Identity),
+            },
+        ),
+        (
+            "sparseFedAvg 30%",
+            AlgorithmSpec::FedAvg {
+                compressor: Box::new(TopK::with_density(0.3)),
+            },
+        ),
+        ("Scaffold", AlgorithmSpec::Scaffold),
+        ("FedDyn", AlgorithmSpec::FedDyn { alpha: 0.01 }),
+        (
+            "FedComLoc 30%",
+            AlgorithmSpec::FedComLoc {
+                variant: Variant::Com,
+                compressor: Box::new(TopK::with_density(0.3)),
+            },
+        ),
+    ];
+
+    println!(
+        "{:<18}{:>10}{:>14}{:>14}{:>14}",
+        "method", "best_acc", "final_loss", "uplink_MB", "rounds→55%"
+    );
+    for (label, spec) in runs {
+        let log = run(&cfg, trainer.clone(), &spec);
+        let to_target = log
+            .rounds_to_accuracy(0.55)
+            .map(|(r, _)| r.to_string())
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{label:<18}{:>10.4}{:>14.4}{:>14.2}{:>14}",
+            log.best_accuracy().unwrap_or(0.0),
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits() as f64 / 8e6,
+            to_target,
+        );
+        let _ = log.save(std::path::Path::new("results/example_baselines"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Quantization scenario (paper §4.4): Q_r sweep on FedMNIST with exact
+//! wire accounting, plus a double-compression configuration (Appendix B.3).
+//!
+//!     cargo run --release --example quantization_sweep
+
+use fedcomloc::compress::{Compressor, DoubleCompress, Identity, QuantizeR};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::model::{native::NativeTrainer, ModelKind};
+use std::sync::Arc;
+
+fn main() {
+    let cfg = RunConfig {
+        rounds: 40,
+        train_n: 8_000,
+        test_n: 1_500,
+        eval_every: 5,
+        ..RunConfig::default_mnist()
+    };
+    let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
+
+    let cases: Vec<(&str, Box<dyn Compressor>)> = vec![
+        ("fp32 baseline", Box::new(Identity)),
+        ("Q_16", Box::new(QuantizeR::new(16))),
+        ("Q_8", Box::new(QuantizeR::new(8))),
+        ("Q_4", Box::new(QuantizeR::new(4))),
+        ("TopK25% + Q_8", Box::new(DoubleCompress::new(0.25, 8))),
+    ];
+
+    println!(
+        "{:<16}{:>10}{:>14}{:>14}{:>18}",
+        "compressor", "best_acc", "final_loss", "uplink_MB", "bits/coord (wire)"
+    );
+    for (label, compressor) in cases {
+        let bits_per_coord =
+            compressor.nominal_bits(ModelKind::Mlp.dim()) as f64 / ModelKind::Mlp.dim() as f64;
+        let spec = AlgorithmSpec::FedComLoc {
+            variant: Variant::Com,
+            compressor,
+        };
+        let log = run(&cfg, trainer.clone(), &spec);
+        println!(
+            "{label:<16}{:>10.4}{:>14.4}{:>14.2}{:>18.2}",
+            log.best_accuracy().unwrap_or(0.0),
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits() as f64 / 8e6,
+            bits_per_coord,
+        );
+        let _ = log.save(std::path::Path::new("results/example_quant"));
+    }
+    println!("\npaper reading (Fig 5): 16-bit ≈ free; 8-bit minor loss; 4-bit visible degradation.");
+}

@@ -1,0 +1,48 @@
+//! Quickstart: FedComLoc-Com with 30% TopK on FedMNIST in ~20 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the native compute plane so it works before `make artifacts`; see
+//! `e2e_fedmnist` for the full AOT/PJRT pipeline.
+
+use fedcomloc::compress::TopK;
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::model::{native::NativeTrainer, ModelKind};
+use std::sync::Arc;
+
+fn main() {
+    // The paper's §4 default shape, scaled for a quick local run.
+    let cfg = RunConfig {
+        rounds: 30,
+        train_n: 6_000,
+        test_n: 1_000,
+        eval_every: 5,
+        ..RunConfig::default_mnist()
+    };
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,                         // uplink compression
+        compressor: Box::new(TopK::with_density(0.3)), // keep 30% of weights
+    };
+    let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
+
+    let log = run(&cfg, trainer, &spec);
+
+    println!("\nround  train_loss  test_acc  cum_uplink_MB");
+    for r in &log.records {
+        if let Some(acc) = r.test_accuracy {
+            println!(
+                "{:>5}  {:>10.4}  {:>8.4}  {:>12.2}",
+                r.round,
+                r.train_loss,
+                acc,
+                r.cum_uplink_bits as f64 / 8e6
+            );
+        }
+    }
+    println!(
+        "\nbest accuracy: {:.4} with {:.1} MB total uplink (dense would be {:.1} MB)",
+        log.best_accuracy().unwrap(),
+        log.total_uplink_bits() as f64 / 8e6,
+        (32 * ModelKind::Mlp.dim() * cfg.clients_per_round * cfg.rounds) as f64 / 8e6,
+    );
+}

@@ -1,0 +1,6 @@
+"""FedComLoc compile path (Layer 1 + Layer 2).
+
+Python runs ONLY at build time: `python -m compile.aot` lowers the JAX/Pallas
+programs to HLO text under artifacts/, which the Rust coordinator loads via
+PJRT. Nothing in this package is imported at runtime.
+"""

@@ -1,0 +1,121 @@
+"""AOT lowering: JAX/Pallas programs -> artifacts/*.hlo.txt + manifest.json.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here. `make artifacts` skips the rebuild when inputs are
+unchanged, and the Rust binary is self-contained afterwards.
+
+Usage: python -m compile.aot [--out DIR] [--models mlp,cnn] [--check]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_program(name, program):
+    """Lower one (model, program) pair; returns (hlo_text, manifest entry)."""
+    fn = M.PROGRAMS[program](name)
+    args = M.example_args(name, program)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_shapes = jax.eval_shape(fn, *args)
+    flat_out = jax.tree_util.tree_leaves(out_shapes)
+    entry = {
+        "file": f"{name}_{program}.hlo.txt",
+        "inputs": [_shape_entry(a) for a in args],
+        "outputs": [_shape_entry(o) for o in flat_out],
+    }
+    return text, entry
+
+
+def lower_quantize(dim=8192):
+    fn = M.build_quantize()
+    S = jax.ShapeDtypeStruct
+    args = (S((dim,), jnp.float32), S((dim,), jnp.float32), S((), jnp.float32))
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    entry = {
+        "file": "quantize.hlo.txt",
+        "inputs": [_shape_entry(a) for a in args],
+        "outputs": [{"shape": [dim], "dtype": "float32"}],
+    }
+    return text, entry
+
+
+def build_all(out_dir, models=("mlp", "cnn")):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "hlo": "text", "artifacts": {}, "models": {}}
+    for name in models:
+        model = M.MODELS[name]
+        manifest["models"][name] = {
+            "dim": model.DIM,
+            "batch": M.BATCH[name],
+            "eval_batch": M.EVAL_BATCH[name],
+            "input_shape": list(M.INPUT_SHAPE[name]),
+            "num_classes": 10,
+        }
+        for program in M.PROGRAMS:
+            key = f"{name}_{program}"
+            print(f"lowering {key} ...", flush=True)
+            text, entry = lower_program(name, program)
+            path = os.path.join(out_dir, entry["file"])
+            with open(path, "w") as f:
+                f.write(text)
+            entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+            manifest["artifacts"][key] = entry
+            print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)", flush=True)
+    print("lowering quantize ...", flush=True)
+    text, entry = lower_quantize()
+    with open(os.path.join(out_dir, entry["file"]), "w") as f:
+        f.write(text)
+    entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+    manifest["artifacts"]["quantize"] = entry
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest with {len(manifest['artifacts'])} artifacts -> {out_dir}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--models",
+        default="mlp,cnn",
+        help="comma-separated subset of models to lower",
+    )
+    args = ap.parse_args(argv)
+    models = tuple(m for m in args.models.split(",") if m)
+    for m in models:
+        if m not in M.MODELS:
+            ap.error(f"unknown model {m!r}")
+    build_all(args.out, models)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT HLO).
+
+Modules:
+  dense     — fused y = act(x @ W + b) MXU-blocked matmul
+  sgd_cv    — fused Scaffnew step x − γ(g − h)
+  topk      — TopK threshold-mask (Definition 3.1)
+  quantize  — stochastic quantizer Q_r (Definition 3.2)
+  ref       — pure-jnp oracles for all of the above
+  common    — shared tiling/BlockSpec plumbing
+
+All kernels lower with interpret=True (CPU-PJRT compatible HLO); see
+DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import common, dense, quantize, ref, sgd_cv, topk  # noqa: F401

@@ -1,0 +1,95 @@
+"""Shared Pallas plumbing: tiling helpers for 1-D elementwise kernels.
+
+TPU-minded structure even though we lower with interpret=True for the CPU
+PJRT plugin (see DESIGN.md §Hardware-Adaptation): elementwise work is tiled
+into (8, 128) VPU-shaped lanes, wide vectors are padded up to a whole number
+of tiles, and each grid step touches one VMEM-sized block. The same helpers
+serve the topk-mask, quantize, and sgd_cv kernels so they all share one
+audited schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One VPU tile: 8 sublanes × 128 lanes of f32.
+SUBLANES = 8
+LANES = 128
+TILE = SUBLANES * LANES
+# Max elements per grid step: 2^18 f32 = 1 MiB per operand in VMEM — large
+# enough that the whole MLP parameter vector is a single block and the CNN's
+# 744k vector is three, small enough that a 4-operand kernel stays ≪ 16 MiB.
+# (Perf note, EXPERIMENTS.md §Perf: interpret-lowered Pallas grids become
+# XLA while-loops with per-step buffer copies; shrinking the grid from 91
+# steps to ≤3 cut the CNN fused-update overhead by ~20×.)
+MAX_BLOCK = 1 << 18
+
+# All Pallas kernels in this project MUST run in interpret mode: real TPU
+# lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+INTERPRET = True
+
+
+def block_geometry(n: int):
+    """(padded_len, block) for an n-element vector: pad to whole tiles, one
+    grid step per MAX_BLOCK elements."""
+    tiles = max((n + TILE - 1) // TILE, 1)
+    m0 = tiles * TILE
+    block = min(m0, MAX_BLOCK)
+    m = (m0 + block - 1) // block * block
+    return m, block
+
+
+def padded_len(n: int) -> int:
+    """Smallest padded length for an n-element vector (see block_geometry)."""
+    return block_geometry(n)[0]
+
+
+def pad_to(v, m):
+    """Pad a flat vector with zeros to length m."""
+    n = v.shape[0]
+    if m == n:
+        return v
+    return jnp.pad(v, (0, m - n))
+
+
+def elementwise_call(kernel, out_dtype, *flat_inputs, scalars=()):
+    """Run `kernel` over 1-D inputs tiled as (rows, LANES) blocks.
+
+    flat_inputs: same-length 1-D arrays, padded here and un-padded after.
+    scalars: () -shaped values broadcast to every block via a (1, 1) ref.
+    kernel signature: kernel(*input_refs, *scalar_refs, out_ref).
+    """
+    n = flat_inputs[0].shape[0]
+    for v in flat_inputs[1:]:
+        assert v.shape == flat_inputs[0].shape, "elementwise inputs must match"
+    m, block = block_geometry(n)
+    rows_per_block = block // LANES
+    grid = (m // block,)
+
+    padded = [pad_to(v, m).reshape(m // LANES, LANES) for v in flat_inputs]
+    scalar_arrays = [jnp.asarray(s, jnp.float32).reshape(1, 1) for s in scalars]
+
+    in_specs = [
+        pl.BlockSpec((rows_per_block, LANES), lambda i: (i, 0)) for _ in padded
+    ] + [pl.BlockSpec((1, 1), lambda i: (0, 0)) for _ in scalar_arrays]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((rows_per_block, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m // LANES, LANES), out_dtype),
+        interpret=INTERPRET,
+    )(*padded, *scalar_arrays)
+    return out.reshape(m)[:n]
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+@functools.lru_cache(maxsize=None)
+def _noop():  # pragma: no cover - placeholder keeping functools imported
+    return None

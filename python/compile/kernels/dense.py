@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused dense layer y = act(x @ W + b).
+
+The MXU-shaped hot-spot of the MLP forward/backward. Blocking follows the
+classic TPU schedule: grid over (M/bm, N/bn) output tiles; each grid step
+loads an (bm, K) x-panel and a (K, bn) W-panel into VMEM, runs one MXU
+matmul accumulating in f32, adds the bias row, applies the activation, and
+writes the (bm, bn) tile. K stays unblocked — for this model family
+K ≤ 1600, so the VMEM footprint per step is
+
+    bm·K + K·bn + bm·bn floats ≤ 128·1600·2 + 128·128 ≈ 1.7 MiB ≪ 16 MiB,
+
+leaving headroom for double-buffering (see DESIGN.md §8 for the MXU
+utilization estimates). Ragged M/N are handled by padding to tile multiples
+and slicing the result; zero-padding is exact for matmul+bias.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, cdiv
+
+BM = 128
+BN = 128
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _dense_impl(x, w, b, activation: str):
+    """The raw pallas_call (no AD) — see `dense` for the public entry."""
+    assert activation in ("none", "relu")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    bm = min(BM, m) if m % BM else BM
+    bn = min(BN, n) if n % BN else BN
+    # Pad M and N up to tile multiples (K needs no padding: it is unblocked).
+    mp = cdiv(m, bm) * bm
+    np_ = cdiv(n, bn) * bn
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    if np_ != n:
+        w = jnp.pad(w, ((0, 0), (0, np_ - n)))
+        b = jnp.pad(b, (0, np_ - n))
+    b2 = b.reshape(1, np_)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b2)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Custom VJP: pallas_call does not support reverse-mode AD, so the backward
+# pass is written by hand — and itself runs through the same Pallas kernel,
+# which is exactly what a production TPU stack does (fwd and bwd matmuls
+# share one audited schedule):
+#   dX = dY' @ Wᵀ,  dW = Xᵀ @ dY',  db = Σ_rows dY',
+# with dY' = dY ⊙ 1[y > 0] when the activation is ReLU.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dense(x, w, b, activation):
+    return _dense_impl(x, w, b, activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = _dense_impl(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, res, dy):
+    x, w, y = res
+    if activation == "relu":
+        dy = jnp.where(y > 0, dy, jnp.zeros_like(dy))
+    zeros_k = jnp.zeros((x.shape[1],), jnp.float32)
+    zeros_n = jnp.zeros((w.shape[1],), jnp.float32)
+    dx = _dense_impl(dy, w.T, zeros_k, "none")
+    dw = _dense_impl(x.T, dy, zeros_n, "none")
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+_dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def dense(x, w, b, activation: str = "none"):
+    """y = act(x @ w + b); x:[M,K] f32, w:[K,N], b:[N]; act ∈ {none, relu}.
+
+    Differentiable (custom VJP above); both passes run the Pallas kernel.
+    """
+    return _dense(x, w, b, activation)

@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: stochastic quantizer Q_r (paper Definition 3.2).
+
+Per coordinate: level = ⌊2^r·y⌋ + 1[u < frac] with y = |x_i|/‖x‖₂, output
+‖x‖₂·sgn(x_i)·level/2^r. The rounding uniforms u are an explicit input —
+randomness is externalized so (a) the kernel is a pure function checkable
+against `ref.quantize_ref`, and (b) the Rust coordinator can drive the same
+stochastic rounding it uses for the wire codec. The global ‖x‖₂ reduction is
+computed once in jnp; Pallas owns the elementwise quantization stream.
+"""
+
+import jax.numpy as jnp
+
+from . import common
+
+
+def _quant_kernel(x_ref, u_ref, norm_ref, s_ref, o_ref):
+    norm = norm_ref[0, 0]
+    s = s_ref[0, 0]
+    x = x_ref[...]
+    safe = jnp.where(norm > 0, norm, jnp.float32(1.0))
+    scaled = jnp.abs(x) / safe * s
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    level = lo + (u_ref[...] < frac).astype(jnp.float32)
+    q = norm * jnp.sign(x) * level / s
+    o_ref[...] = jnp.where(norm > 0, q, jnp.zeros_like(x))
+
+
+def quantize(x, u, bits):
+    """Q_r(x) with rounding uniforms u ∈ [0,1); bits may be traced."""
+    assert x.shape == u.shape and x.ndim == 1
+    x = x.astype(jnp.float32)
+    s = jnp.float32(2.0) ** jnp.asarray(bits, jnp.float32)
+    norm = jnp.sqrt(jnp.sum(jnp.square(x)))
+    return common.elementwise_call(
+        _quant_kernel, jnp.float32, x, u.astype(jnp.float32), scalars=(norm, s)
+    )

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematical definition of the corresponding
+kernel in this package, written with plain jax.numpy ops only. pytest +
+hypothesis sweep shapes/dtypes and assert_allclose kernel-vs-ref; the AOT
+artifacts are only ever built from kernels that pass those checks.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation: str = "none"):
+    """y = act(x @ w + b) — oracle for kernels.dense.dense."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def sgd_cv_ref(x, g, h, gamma):
+    """Scaffnew local step x − γ·(g − h) — oracle for kernels.sgd_cv."""
+    return x - gamma * (g - h)
+
+
+def topk_threshold_ref(x, k):
+    """|value| of the k-th largest-magnitude entry of flat x (k ≥ 1)."""
+    mags = jnp.sort(jnp.abs(x.reshape(-1)))
+    d = mags.shape[0]
+    idx = jnp.clip(d - k, 0, d - 1)
+    return mags[idx]
+
+
+def topk_mask_ref(x, threshold):
+    """Keep entries with |x| ≥ threshold — oracle for kernels.topk.mask."""
+    return jnp.where(jnp.abs(x) >= threshold, x, jnp.zeros_like(x))
+
+
+def topk_ref(x, density):
+    """Full TopK by density ratio (Definition 3.1; ties keep ≥K entries)."""
+    d = x.reshape(-1).shape[0]
+    k = jnp.clip(jnp.ceil(density * d).astype(jnp.int32), 1, d)
+    return topk_mask_ref(x, topk_threshold_ref(x, k))
+
+
+def quantize_ref(x, u, bits):
+    """Stochastic quantizer Q_r (Definition 3.2) with externalized noise.
+
+    u ∈ [0,1) supplies the stochastic-rounding uniforms, making the operator
+    a deterministic function of (x, u) — which is what lets pytest compare
+    the Pallas kernel against this oracle exactly, and the Rust runtime test
+    cross-check the wire codec against the compiled artifact.
+    """
+    s = jnp.float32(2.0) ** jnp.float32(bits)
+    norm = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+    safe = jnp.where(norm > 0, norm, jnp.float32(1.0))
+    y = jnp.abs(x) / safe
+    scaled = y * s
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    level = lo + (u < frac).astype(jnp.float32)
+    q = norm * jnp.sign(x) * level / s
+    return jnp.where(norm > 0, q, jnp.zeros_like(x))

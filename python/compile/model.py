@@ -1,0 +1,126 @@
+"""L2 program builders: the jitted functions that become AOT artifacts.
+
+Every FedComLoc/baseline algorithm in the Rust coordinator is driven by four
+programs per model family (paper Algorithm 1 + §4 baselines):
+
+  train_step(params, h, x, y, γ)            -> (params', loss)
+      ĝ = ∇f(params) on the minibatch; params' = params − γ(ĝ − h) via the
+      fused L1 sgd_cv kernel. h = 0 recovers plain SGD (FedAvg local step).
+
+  train_step_local(params, h, x, y, γ, ρ)   -> (params', loss)
+      FedComLoc-Local: gradient evaluated at TopK_ρ(params) (in-graph L1
+      topk kernel), update applied to the un-masked params (Alg. 1 l.6–7).
+
+  grad(params, x, y)                        -> (g, loss)
+      Raw minibatch gradient — Scaffold/FedDyn/FedAvg aggregate these with
+      algorithm-specific server logic in Rust.
+
+  evaluate(params, x, y)                    -> (per-example loss, correct)
+      Vector outputs so the Rust side can mask padded eval rows exactly.
+
+Plus one standalone compression program:
+
+  quantize(x, u, r)                         -> Q_r(x)
+      The L1 quantizer; used by the runtime cross-check test that pins the
+      Rust wire codec and the Pallas kernel to the same semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quantize as quantize_kernel
+from .kernels import sgd_cv, topk
+from .models import cnn, mlp
+
+MODELS = {"mlp": mlp, "cnn": cnn}
+
+# Static batch geometry per model family (the AOT executables have fixed
+# shapes; the Rust loader pads/chunks to these — see data/loader.rs).
+BATCH = {"mlp": 64, "cnn": 32}
+EVAL_BATCH = {"mlp": 256, "cnn": 128}
+INPUT_SHAPE = {"mlp": (784,), "cnn": (3, 32, 32)}
+
+
+def build_train_step(name):
+    model = MODELS[name]
+
+    def train_step(params, h, x, y, gamma):
+        loss, g = jax.value_and_grad(model.loss_fn)(params, x, y)
+        new_params = sgd_cv.sgd_cv(params, g, h, gamma)
+        return new_params, loss
+
+    return train_step
+
+
+def build_train_step_local(name):
+    model = MODELS[name]
+
+    def train_step_local(params, h, x, y, gamma, density):
+        masked = topk.topk(params, density)
+        loss, g = jax.value_and_grad(model.loss_fn)(masked, x, y)
+        new_params = sgd_cv.sgd_cv(params, g, h, gamma)
+        return new_params, loss
+
+    return train_step_local
+
+
+def build_grad(name):
+    model = MODELS[name]
+
+    def grad(params, x, y):
+        loss, g = jax.value_and_grad(model.loss_fn)(params, x, y)
+        return g, loss
+
+    return grad
+
+
+def build_evaluate(name):
+    model = MODELS[name]
+
+    def evaluate(params, x, y):
+        return model.per_example_metrics(params, x, y)
+
+    return evaluate
+
+
+def build_quantize():
+    def quantize(x, u, r):
+        return quantize_kernel.quantize(x, u, r)
+
+    return quantize
+
+
+def example_args(name, program):
+    """ShapeDtypeStructs for jax.jit(...).lower(...) of a given program."""
+    model = MODELS[name]
+    d = model.DIM
+    b = BATCH[name]
+    e = EVAL_BATCH[name]
+    xs = INPUT_SHAPE[name]
+    f32 = jnp.float32
+    i32 = jnp.int32
+    S = jax.ShapeDtypeStruct
+    if program == "train_step":
+        return (S((d,), f32), S((d,), f32), S((b, *xs), f32), S((b,), i32), S((), f32))
+    if program == "train_step_local":
+        return (
+            S((d,), f32),
+            S((d,), f32),
+            S((b, *xs), f32),
+            S((b,), i32),
+            S((), f32),
+            S((), f32),
+        )
+    if program == "grad":
+        return (S((d,), f32), S((b, *xs), f32), S((b,), i32))
+    if program == "evaluate":
+        return (S((d,), f32), S((e, *xs), f32), S((e,), i32))
+    raise ValueError(f"unknown program {program!r}")
+
+
+PROGRAMS = {
+    "train_step": build_train_step,
+    "train_step_local": build_train_step_local,
+    "grad": build_grad,
+    "evaluate": build_evaluate,
+}

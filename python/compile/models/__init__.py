@@ -1,0 +1,3 @@
+"""L2 model definitions over flat parameter vectors (mlp, cnn)."""
+
+from . import cnn, mlp  # noqa: F401

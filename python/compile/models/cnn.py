@@ -1,0 +1,124 @@
+"""L2 model: FedLab-style CNN for FedCIFAR10 over a FLAT parameter vector.
+
+Layout (must match rust/src/model/cnn.rs):
+  [Wc1 32×(3·5·5) | bc1 32 | Wc2 64×(32·5·5) | bc2 64 |
+   W3 1600×384 | b3 384 | W4 384×192 | b4 192 | W5 192×10 | b5 10]
+conv weights OIHW, activations NCHW, valid padding, stride 1, 2×2 maxpool.
+d = 744,330.
+
+Convolutions lower to XLA's native conv (lax.conv_general_dilated) — see
+DESIGN.md §Hardware-Adaptation; the dense tail and the fused update run
+through the L1 Pallas kernels so the hot dense FLOPs share the audited
+BlockSpec schedule with the MLP.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import dense
+
+IN_CH, SIDE, K = 3, 32, 5
+C1, C2 = 32, 64
+FC_IN, F1, F2, OUT = C2 * 5 * 5, 384, 192, 10
+
+DIM = (
+    C1 * IN_CH * K * K
+    + C1
+    + C2 * C1 * K * K
+    + C2
+    + FC_IN * F1
+    + F1
+    + F1 * F2
+    + F2
+    + F2 * OUT
+    + OUT
+)
+
+
+def _slices():
+    o = 0
+    out = {}
+    for name, shape in (
+        ("wc1", (C1, IN_CH, K, K)),
+        ("bc1", (C1,)),
+        ("wc2", (C2, C1, K, K)),
+        ("bc2", (C2,)),
+        ("w3", (FC_IN, F1)),
+        ("b3", (F1,)),
+        ("w4", (F1, F2)),
+        ("b4", (F2,)),
+        ("w5", (F2, OUT)),
+        ("b5", (OUT,)),
+    ):
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = (o, o + size, shape)
+        o += size
+    assert o == DIM
+    return out
+
+
+SLICES = _slices()
+
+
+def unpack(params):
+    assert params.shape == (DIM,)
+    return {
+        name: params[lo:hi].reshape(shape)
+        for name, (lo, hi, shape) in SLICES.items()
+    }
+
+
+def _conv(x, w, b):
+    """NCHW valid conv, stride 1, + bias."""
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def forward(params, x):
+    """Logits for x:[B, 3, 32, 32]."""
+    p = unpack(params)
+    y = jnp.maximum(_conv(x, p["wc1"], p["bc1"]), 0.0)
+    y = _maxpool2(y)  # [B, 32, 14, 14]
+    y = jnp.maximum(_conv(y, p["wc2"], p["bc2"]), 0.0)
+    y = _maxpool2(y)  # [B, 64, 5, 5]
+    y = y.reshape(y.shape[0], FC_IN)  # channel-major flatten (matches Rust)
+    y = dense.dense(y, p["w3"], p["b3"], activation="relu")
+    y = dense.dense(y, p["w4"], p["b4"], activation="relu")
+    return dense.dense(y, p["w5"], p["b5"], activation="none")
+
+
+def loss_fn(params, x, y):
+    logits = forward(params, x)
+    zmax = logits.max(axis=1)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - zmax[:, None]), axis=1)) + zmax
+    label_logit = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - label_logit)
+
+
+def per_example_metrics(params, x, y):
+    logits = forward(params, x)
+    zmax = logits.max(axis=1)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - zmax[:, None]), axis=1)) + zmax
+    label_logit = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    losses = logz - label_logit
+    correct = (jnp.argmax(logits, axis=1) == y).astype(jnp.int32)
+    return losses, correct

@@ -1,0 +1,77 @@
+"""L2 model: three-layer MLP for FedMNIST over a FLAT parameter vector.
+
+Layout (must match rust/src/model/mlp.rs byte-for-byte):
+  [W1 784×128 | b1 128 | W2 128×64 | b2 64 | W3 64×10 | b3 10]
+weights row-major [in][out] so forward is x @ W + b. d = 109,386.
+
+The dense layers run through the L1 Pallas kernel (kernels.dense), so the
+whole forward — and, via jax.grad, the backward — lowers into one HLO module
+together with the fused Scaffnew update.
+"""
+
+import jax.numpy as jnp
+
+from ..kernels import dense
+
+IN, H1, H2, OUT = 784, 128, 64, 10
+DIM = IN * H1 + H1 + H1 * H2 + H2 + H2 * OUT + OUT
+
+
+def _slices():
+    o = 0
+    out = {}
+    for name, shape in (
+        ("w1", (IN, H1)),
+        ("b1", (H1,)),
+        ("w2", (H1, H2)),
+        ("b2", (H2,)),
+        ("w3", (H2, OUT)),
+        ("b3", (OUT,)),
+    ):
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = (o, o + size, shape)
+        o += size
+    assert o == DIM
+    return out
+
+
+SLICES = _slices()
+
+
+def unpack(params):
+    """Flat [DIM] vector -> dict of shaped arrays."""
+    assert params.shape == (DIM,)
+    return {
+        name: params[lo:hi].reshape(shape)
+        for name, (lo, hi, shape) in SLICES.items()
+    }
+
+
+def forward(params, x):
+    """Logits for x:[B, 784]; params flat [DIM]."""
+    p = unpack(params)
+    a1 = dense.dense(x, p["w1"], p["b1"], activation="relu")
+    a2 = dense.dense(a1, p["w2"], p["b2"], activation="relu")
+    return dense.dense(a2, p["w3"], p["b3"], activation="none")
+
+
+def loss_fn(params, x, y):
+    """Mean softmax cross-entropy; y:[B] int32 labels."""
+    logits = forward(params, x)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(axis=1, keepdims=True)), axis=1))
+    zmax = logits.max(axis=1)
+    label_logit = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    return jnp.mean(logz + zmax - label_logit)
+
+
+def per_example_metrics(params, x, y):
+    """(per-example CE loss [B], correct [B] int32) for evaluation."""
+    logits = forward(params, x)
+    zmax = logits.max(axis=1)
+    logz = jnp.log(jnp.sum(jnp.exp(logits - zmax[:, None]), axis=1)) + zmax
+    label_logit = jnp.take_along_axis(logits, y[:, None], axis=1)[:, 0]
+    losses = logz - label_logit
+    correct = (jnp.argmax(logits, axis=1) == y).astype(jnp.int32)
+    return losses, correct

@@ -1,0 +1,230 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+hypothesis sweeps shapes and value ranges; assert_allclose is the contract
+that gates `make artifacts`.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import common, dense, quantize, ref, sgd_cv, topk
+
+RNG = np.random.default_rng(0)
+
+
+def vec(n, scale=1.0, rng=RNG):
+    return jnp.asarray(rng.normal(0.0, scale, n).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# sgd_cv
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    gamma=st.floats(min_value=0.0, max_value=2.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sgd_cv_matches_ref(n, gamma, seed):
+    rng = np.random.default_rng(seed)
+    x, g, h = (vec(n, rng=rng) for _ in range(3))
+    got = sgd_cv.sgd_cv(x, g, h, jnp.float32(gamma))
+    want = ref.sgd_cv_ref(x, g, h, jnp.float32(gamma))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_cv_zero_h_is_sgd():
+    x, g = vec(300), vec(300)
+    h = jnp.zeros(300, jnp.float32)
+    got = sgd_cv.sgd_cv(x, g, h, jnp.float32(0.1))
+    np.testing.assert_allclose(got, x - 0.1 * g, rtol=1e-6, atol=1e-7)
+
+
+def test_sgd_cv_exact_block_multiple():
+    n = common.MAX_BLOCK * 2  # no ragged tail
+    x, g, h = vec(n), vec(n), vec(n)
+    got = sgd_cv.sgd_cv(x, g, h, jnp.float32(0.5))
+    want = ref.sgd_cv_ref(x, g, h, jnp.float32(0.5))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# topk
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4000),
+    density=st.floats(min_value=0.01, max_value=1.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_topk_matches_ref(n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = vec(n, rng=rng)
+    got = topk.topk(x, jnp.float32(density))
+    want = ref.topk_ref(x, jnp.float32(density))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=10, max_value=3000),
+    density=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_topk_keeps_k_entries_no_ties(n, density, seed):
+    # Continuous random values: ties have measure zero, so nnz == K exactly.
+    rng = np.random.default_rng(seed)
+    x = vec(n, rng=rng)
+    k = int(min(max(np.ceil(density * n), 1), n))
+    got = np.asarray(topk.topk(x, jnp.float32(density)))
+    assert int((got != 0).sum()) == k
+
+
+def test_topk_density_one_is_identity():
+    x = vec(1000)
+    got = topk.topk(x, jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))
+
+
+def test_topk_definition_optimality():
+    # Dropped entries must all be smaller in magnitude than kept ones.
+    x = vec(500)
+    got = np.asarray(topk.topk(x, jnp.float32(0.2)))
+    kept = np.abs(np.asarray(x))[got != 0]
+    dropped = np.abs(np.asarray(x))[got == 0]
+    assert kept.min() >= dropped.max()
+
+
+# --------------------------------------------------------------------------
+# quantize
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4000),
+    bits=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quantize_matches_ref(n, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = vec(n, rng=rng)
+    u = jnp.asarray(rng.random(n).astype(np.float32))
+    got = quantize.quantize(x, u, jnp.float32(bits))
+    want = ref.quantize_ref(x, u, jnp.float32(bits))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_quantize_zero_vector():
+    x = jnp.zeros(100, jnp.float32)
+    u = jnp.full(100, 0.5, jnp.float32)
+    got = quantize.quantize(x, u, jnp.float32(8))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(100, np.float32))
+
+
+def test_quantize_error_bounded_by_grid():
+    x = vec(512)
+    u = jnp.asarray(RNG.random(512).astype(np.float32))
+    for bits in (4, 8, 16):
+        got = np.asarray(quantize.quantize(x, u, jnp.float32(bits)))
+        norm = float(jnp.linalg.norm(x))
+        assert np.max(np.abs(got - np.asarray(x))) <= norm / 2**bits + 1e-5
+
+
+def test_quantize_unbiased_monte_carlo():
+    x = vec(64, scale=0.3)
+    rng = np.random.default_rng(7)
+    acc = np.zeros(64, np.float64)
+    trials = 3000
+    for _ in range(trials):
+        u = jnp.asarray(rng.random(64).astype(np.float32))
+        acc += np.asarray(quantize.quantize(x, u, jnp.float32(2)), np.float64)
+    norm = float(jnp.linalg.norm(x))
+    np.testing.assert_allclose(acc / trials, np.asarray(x), atol=0.02 * norm)
+
+
+# --------------------------------------------------------------------------
+# dense
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=160),
+    k=st.integers(min_value=1, max_value=200),
+    n=st.integers(min_value=1, max_value=160),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.1, (k, n)).astype(np.float32))
+    b = jnp.asarray(rng.normal(0, 0.1, n).astype(np.float32))
+    got = dense.dense(x, w, b, activation=act)
+    want = ref.dense_ref(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_model_shapes():
+    # The exact layer shapes the MLP/CNN artifacts use.
+    for m, k, n in [(64, 784, 128), (64, 128, 64), (64, 64, 10), (32, 1600, 384)]:
+        x = jnp.asarray(RNG.normal(0, 1, (m, k)).astype(np.float32))
+        w = jnp.asarray(RNG.normal(0, 0.05, (k, n)).astype(np.float32))
+        b = jnp.asarray(RNG.normal(0, 0.05, n).astype(np.float32))
+        got = dense.dense(x, w, b, activation="relu")
+        want = ref.dense_ref(x, w, b, activation="relu")
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_relu_clamps():
+    x = -jnp.ones((4, 8), jnp.float32)
+    w = jnp.eye(8, dtype=jnp.float32)
+    b = jnp.zeros(8, jnp.float32)
+    got = np.asarray(dense.dense(x, w, b, activation="relu"))
+    assert (got == 0).all()
+
+
+# --------------------------------------------------------------------------
+# kernels inside jit / grad (they must trace cleanly for AOT)
+# --------------------------------------------------------------------------
+
+
+def test_kernels_compose_under_jit():
+    @jax.jit
+    def f(x, g, h, gamma, density):
+        masked = topk.topk(x, density)
+        return sgd_cv.sgd_cv(masked, g, h, gamma)
+
+    x, g, h = vec(2000), vec(2000), vec(2000)
+    got = f(x, g, h, jnp.float32(0.1), jnp.float32(0.5))
+    want = ref.sgd_cv_ref(ref.topk_ref(x, 0.5), g, h, 0.1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_dense_is_differentiable():
+    # jax.grad must flow through the pallas_call (interpret mode supports AD).
+    x = jnp.asarray(RNG.normal(0, 1, (8, 16)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(0, 0.2, (16, 4)).astype(np.float32))
+    b = jnp.zeros(4, jnp.float32)
+
+    def loss(w):
+        return jnp.sum(dense.dense(x, w, b, activation="relu") ** 2)
+
+    g = jax.grad(loss)(w)
+    assert g.shape == w.shape
+    # Numeric spot-check.
+    eps = 1e-3
+    idx = (3, 2)
+    wp = w.at[idx].add(eps)
+    wm = w.at[idx].add(-eps)
+    num = (loss(wp) - loss(wm)) / (2 * eps)
+    np.testing.assert_allclose(num, g[idx], rtol=5e-2, atol=1e-3)

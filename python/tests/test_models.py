@@ -1,0 +1,136 @@
+"""L2 correctness: models over flat parameter vectors, train/eval programs."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.models import cnn, mlp
+
+RNG = np.random.default_rng(0)
+
+
+def he_init_mlp():
+    """He-init matching rust/src/model/mlp.rs (layout check only needs shape)."""
+    p = np.zeros(mlp.DIM, np.float32)
+    for name, (lo, hi, shape) in mlp.SLICES.items():
+        if name.startswith("w"):
+            fan_in = shape[0]
+            p[lo:hi] = RNG.normal(0, np.sqrt(2 / fan_in), hi - lo)
+    return jnp.asarray(p)
+
+
+def batch_mlp(b=8):
+    x = jnp.asarray(RNG.random((b, 784)).astype(np.float32))
+    y = jnp.asarray(RNG.integers(0, 10, b).astype(np.int32))
+    return x, y
+
+
+def test_dims_match_rust_layout():
+    assert mlp.DIM == 109_386
+    assert cnn.DIM == 744_330
+    # Slices tile the whole vector contiguously.
+    for mod in (mlp, cnn):
+        cursor = 0
+        for name, (lo, hi, shape) in mod.SLICES.items():
+            assert lo == cursor, name
+            size = int(np.prod(shape))
+            assert hi - lo == size
+            cursor = hi
+        assert cursor == mod.DIM
+
+
+def test_mlp_forward_shapes_and_loss():
+    p = he_init_mlp()
+    x, y = batch_mlp(8)
+    logits = mlp.forward(p, x)
+    assert logits.shape == (8, 10)
+    loss = mlp.loss_fn(p, x, y)
+    # ~uniform logits at init -> loss ≈ ln(10)
+    assert 1.5 < float(loss) < 3.5
+
+
+def test_mlp_grad_descends():
+    p = he_init_mlp()
+    x, y = batch_mlp(16)
+    fn = jax.jit(M.PROGRAMS["grad"]("mlp"))
+    params = p
+    losses = []
+    for _ in range(15):
+        g, loss = fn(params, x, y)
+        params = params - 0.1 * g
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.6, losses
+
+
+def test_train_step_equals_grad_then_update():
+    p = he_init_mlp()
+    h = jnp.asarray(RNG.normal(0, 0.01, mlp.DIM).astype(np.float32))
+    x, y = batch_mlp(8)
+    gamma = jnp.float32(0.07)
+    new_p, loss1 = jax.jit(M.PROGRAMS["train_step"]("mlp"))(p, h, x, y, gamma)
+    g, loss2 = jax.jit(M.PROGRAMS["grad"]("mlp"))(p, x, y)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(new_p), np.asarray(p - gamma * (g - h)), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_train_step_local_density_one_matches_plain():
+    p = he_init_mlp()
+    h = jnp.zeros(mlp.DIM, jnp.float32)
+    x, y = batch_mlp(8)
+    plain, _ = jax.jit(M.PROGRAMS["train_step"]("mlp"))(p, h, x, y, jnp.float32(0.1))
+    masked, _ = jax.jit(M.PROGRAMS["train_step_local"]("mlp"))(
+        p, h, x, y, jnp.float32(0.1), jnp.float32(1.0)
+    )
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(masked), atol=1e-6)
+    low, _ = jax.jit(M.PROGRAMS["train_step_local"]("mlp"))(
+        p, h, x, y, jnp.float32(0.1), jnp.float32(0.02)
+    )
+    assert not np.allclose(np.asarray(plain), np.asarray(low))
+
+
+def test_evaluate_per_example_outputs():
+    p = he_init_mlp()
+    x, y = batch_mlp(12)
+    losses, correct = jax.jit(M.PROGRAMS["evaluate"]("mlp"))(p, x, y)
+    assert losses.shape == (12,)
+    assert correct.shape == (12,)
+    assert set(np.asarray(correct).tolist()) <= {0, 1}
+    assert (np.asarray(losses) > 0).all()
+    # Mean of per-example losses equals loss_fn.
+    np.testing.assert_allclose(
+        float(jnp.mean(losses)), float(mlp.loss_fn(p, x, y)), rtol=1e-5
+    )
+
+
+def test_cnn_forward_and_grad():
+    p = np.zeros(cnn.DIM, np.float32)
+    for name, (lo, hi, shape) in cnn.SLICES.items():
+        if name.startswith("w"):
+            fan_in = int(np.prod(shape[1:])) if len(shape) == 4 else shape[0]
+            p[lo:hi] = RNG.normal(0, np.sqrt(2 / fan_in), hi - lo)
+    p = jnp.asarray(p)
+    x = jnp.asarray(RNG.random((4, 3, 32, 32)).astype(np.float32))
+    y = jnp.asarray(RNG.integers(0, 10, 4).astype(np.int32))
+    logits = cnn.forward(p, x)
+    assert logits.shape == (4, 10)
+    g, loss = jax.jit(M.PROGRAMS["grad"]("cnn"))(p, x, y)
+    assert g.shape == (cnn.DIM,)
+    assert float(loss) > 0
+    # Gradient must touch every layer (no dead blocks).
+    for name, (lo, hi, _) in cnn.SLICES.items():
+        block = np.asarray(g[lo:hi])
+        assert np.abs(block).max() > 0, f"zero gradient block {name}"
+
+
+def test_example_args_shapes():
+    for name in ("mlp", "cnn"):
+        for program in M.PROGRAMS:
+            args = M.example_args(name, program)
+            assert args[0].shape == (M.MODELS[name].DIM,)
+    with pytest.raises(ValueError):
+        M.example_args("mlp", "nope")

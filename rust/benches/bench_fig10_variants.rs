@@ -1,0 +1,29 @@
+//! Figure 10: FedComLoc-Com vs -Local vs -Global × density (FedCIFAR10).
+
+mod common;
+
+use fedcomloc::compress::TopK;
+use fedcomloc::fed::{run, AlgorithmSpec, Variant};
+
+fn main() {
+    println!("== Figure 10: variant ablation (bench scale, FedCIFAR10) ==");
+    let trainer = common::cnn_trainer();
+    println!("  {:<8}{:>12}{:>12}{:>12}", "K", "Com", "Local", "Global");
+    for &density in &[0.10f64, 0.90] {
+        print!("  {:<8}", format!("{:.0}%", density * 100.0));
+        for variant in [Variant::Com, Variant::Local, Variant::Global] {
+            let cfg = common::cifar_cfg();
+            let spec = AlgorithmSpec::FedComLoc {
+                variant,
+                compressor: Box::new(TopK::with_density(density)),
+            };
+            let acc = run(&cfg, trainer.clone(), &spec)
+                .best_accuracy()
+                .unwrap_or(0.0);
+            print!("{acc:>12.4}");
+        }
+        println!();
+    }
+    println!("\n  paper shape: -Local tends to win at high sparsity (no wire");
+    println!("  loss); -Com > -Global at low sparsity.");
+}

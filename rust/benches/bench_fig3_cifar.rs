@@ -1,0 +1,59 @@
+//! Figure 3: CNN on FedCIFAR10 — density sweep, tuned vs fixed stepsize.
+
+mod common;
+
+use fedcomloc::compress::{Identity, TopK};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+
+fn spec(density: f64) -> AlgorithmSpec {
+    AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: if density >= 1.0 {
+            Box::new(Identity)
+        } else {
+            Box::new(TopK::with_density(density))
+        },
+    }
+}
+
+fn main() {
+    println!("== Figure 3: CNN / FedCIFAR10 (bench scale) ==");
+    let trainer = common::cnn_trainer();
+    println!("-- tuned γ per density (grid 0.01/0.05) --");
+    for &density in &[1.0, 0.10, 0.50] {
+        let mut best = (0.0f64, 0.0f32, 0u64);
+        for &gamma in &[0.01f32, 0.05] {
+            let cfg = RunConfig {
+                gamma,
+                ..common::cifar_cfg()
+            };
+            let log = run(&cfg, trainer.clone(), &spec(density));
+            let acc = log.best_accuracy().unwrap_or(0.0);
+            if acc > best.0 {
+                best = (acc, gamma, log.total_uplink_bits());
+            }
+        }
+        common::row(
+            &format!("K={:>3.0}% tuned γ={}", density * 100.0, best.1),
+            best.0,
+            f64::NAN,
+            best.2,
+        );
+    }
+    println!("-- fixed γ=0.01 --");
+    for &density in &[1.0, 0.10, 0.50] {
+        let cfg = RunConfig {
+            gamma: 0.01,
+            ..common::cifar_cfg()
+        };
+        let log = run(&cfg, trainer.clone(), &spec(density));
+        common::row(
+            &format!("K={:>3.0}% fixed", density * 100.0),
+            log.best_accuracy().unwrap_or(0.0),
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits(),
+        );
+    }
+    println!("\n  paper shape: per-bit, sparsified converge faster when γ tuned;");
+    println!("  at fixed small γ, K=10% is slowest per round.");
+}

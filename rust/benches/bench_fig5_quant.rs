@@ -1,0 +1,64 @@
+//! Figures 5/7/14/15: quantization sweep + heterogeneity ablation.
+
+mod common;
+
+use fedcomloc::compress::QuantizeR;
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+
+fn spec(bits: u32) -> AlgorithmSpec {
+    AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(QuantizeR::new(bits)),
+    }
+}
+
+fn main() {
+    println!("== Figure 5: Q_r sweep on FedMNIST (bench scale) ==");
+    let trainer = common::mlp_trainer();
+    let mut base = 0.0;
+    for &bits in &[32u32, 16, 8, 4] {
+        let cfg = common::mnist_cfg();
+        let log = run(&cfg, trainer.clone(), &spec(bits));
+        let acc = log.best_accuracy().unwrap_or(0.0);
+        if bits == 32 {
+            base = acc;
+        }
+        common::row(
+            &format!("r={bits:>2} (Δ vs r32 {:+.2}%)", (base - acc) / base.max(1e-9) * 100.0),
+            acc,
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits(),
+        );
+    }
+
+    println!("\n== Figures 7/14: Q_r × α (bench scale) ==");
+    for &bits in &[8u32, 16] {
+        for &alpha in &[0.1, 0.7] {
+            let cfg = RunConfig {
+                dirichlet_alpha: alpha,
+                ..common::mnist_cfg()
+            };
+            let log = run(&cfg, trainer.clone(), &spec(bits));
+            common::row(
+                &format!("r={bits:>2} α={alpha}"),
+                log.best_accuracy().unwrap_or(0.0),
+                log.final_train_loss().unwrap_or(f64::NAN),
+                log.total_uplink_bits(),
+            );
+        }
+    }
+
+    println!("\n== Figure 15: Q_r on FedCIFAR10 (bench scale) ==");
+    let trainer = common::cnn_trainer();
+    for &bits in &[32u32, 8] {
+        let cfg = common::cifar_cfg();
+        let log = run(&cfg, trainer.clone(), &spec(bits));
+        common::row(
+            &format!("cifar r={bits:>2}"),
+            log.best_accuracy().unwrap_or(0.0),
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits(),
+        );
+    }
+    println!("\n  paper shape: r=16 ≈ free (−0.14%), minor sensitivity to α.");
+}

@@ -1,0 +1,72 @@
+//! Figure 9: FedComLoc vs FedAvg / sparseFedAvg / Scaffold / FedDyn.
+
+mod common;
+
+use fedcomloc::compress::{Identity, TopK};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+
+fn main() {
+    println!("== Figure 9: baselines (bench scale) ==");
+    let trainer = common::mlp_trainer();
+    println!("-- left panel: compressed (sparseFedAvg γ=0.1 vs FedComLoc γ=0.05) --");
+    let left: Vec<(&str, f32, AlgorithmSpec)> = vec![
+        (
+            "sparseFedAvg K=30%",
+            0.1,
+            AlgorithmSpec::FedAvg {
+                compressor: Box::new(TopK::with_density(0.3)),
+            },
+        ),
+        (
+            "FedComLoc-Com K=30%",
+            0.05,
+            AlgorithmSpec::FedComLoc {
+                variant: Variant::Com,
+                compressor: Box::new(TopK::with_density(0.3)),
+            },
+        ),
+    ];
+    for (label, gamma, spec) in left {
+        let cfg = RunConfig {
+            gamma,
+            ..common::mnist_cfg()
+        };
+        let log = run(&cfg, trainer.clone(), &spec);
+        common::row(
+            label,
+            log.best_accuracy().unwrap_or(0.0),
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits(),
+        );
+    }
+    println!("-- right panel: uncompressed, shared γ --");
+    let right: Vec<(&str, AlgorithmSpec)> = vec![
+        (
+            "FedAvg",
+            AlgorithmSpec::FedAvg {
+                compressor: Box::new(Identity),
+            },
+        ),
+        ("Scaffold", AlgorithmSpec::Scaffold),
+        ("FedDyn", AlgorithmSpec::FedDyn { alpha: 0.01 }),
+        (
+            "FedComLoc (dense)",
+            AlgorithmSpec::FedComLoc {
+                variant: Variant::Com,
+                compressor: Box::new(Identity),
+            },
+        ),
+    ];
+    for (label, spec) in right {
+        let cfg = common::mnist_cfg();
+        let log = run(&cfg, trainer.clone(), &spec);
+        common::row(
+            label,
+            log.best_accuracy().unwrap_or(0.0),
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits(),
+        );
+    }
+    println!("\n  paper shape: FedComLoc-type methods converge faster than");
+    println!("  sparseFedAvg despite the lower learning rate; Scaffold pays 2x bits.");
+}

@@ -1,0 +1,39 @@
+//! Micro-bench: the compression hot path (encode + decode) at model sizes.
+//!
+//! This is the L3 cost FedComLoc adds per communication round; the TopK
+//! selection (select_nth_unstable) and the quantizer bit-packing dominate.
+//! Tracked across commits via target/benchkit/*.jsonl (EXPERIMENTS.md §Perf).
+
+use fedcomloc::compress::{Compressor, DoubleCompress, Identity, QuantizeR, TopK};
+use fedcomloc::util::benchkit::{bb, Bench};
+use fedcomloc::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(42);
+    for &(label, d) in &[("mlp d=109k", 109_386usize), ("cnn d=744k", 744_330)] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let mut b = Bench::new(&format!("compress_{}", label.split(' ').next().unwrap()));
+        let cases: Vec<(String, Box<dyn Compressor>)> = vec![
+            ("identity".into(), Box::new(Identity)),
+            ("topk 10%".into(), Box::new(TopK::with_density(0.10))),
+            ("topk 30%".into(), Box::new(TopK::with_density(0.30))),
+            ("topk 90%".into(), Box::new(TopK::with_density(0.90))),
+            ("q4".into(), Box::new(QuantizeR::new(4))),
+            ("q8".into(), Box::new(QuantizeR::new(8))),
+            ("q16".into(), Box::new(QuantizeR::new(16))),
+            ("topk25+q8".into(), Box::new(DoubleCompress::new(0.25, 8))),
+        ];
+        for (name, comp) in cases {
+            let mut enc_rng = Rng::seed_from_u64(7);
+            b.case(&format!("{label} encode {name}"), || {
+                bb(comp.compress(bb(&x), &mut enc_rng));
+            });
+            let mut dec_rng = Rng::seed_from_u64(7);
+            let encoded = comp.compress(&x, &mut dec_rng);
+            b.case(&format!("{label} decode {name}"), || {
+                bb(comp.decompress(bb(&encoded)));
+            });
+        }
+        b.finish();
+    }
+}

@@ -1,0 +1,67 @@
+//! Micro-bench: PJRT executable call latency (the AOT plane's hot path).
+//!
+//! Requires `make artifacts`; prints a note and exits cleanly otherwise.
+//! Compares the compiled train_step/grad/evaluate against the native plane
+//! so the auto trainer policy in experiments::ExpOptions stays justified.
+
+use fedcomloc::data::loader::{eval_batches, ClientLoader};
+use fedcomloc::data::{synthetic, DatasetKind};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::{init_params, LocalTrainer, ModelKind};
+use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, PjrtTrainer};
+use fedcomloc::util::benchkit::{bb, Bench};
+use fedcomloc::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !artifacts_available(&dir) {
+        println!("bench_micro_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    for kind in [ModelKind::Mlp, ModelKind::Cnn] {
+        let pjrt = match PjrtTrainer::load(&dir, kind) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("skip {kind:?}: {e}");
+                continue;
+            }
+        };
+        let native = NativeTrainer::new(kind);
+        let mut rng = Rng::seed_from_u64(5);
+        let dataset_kind = match kind {
+            ModelKind::Mlp => DatasetKind::Mnist,
+            ModelKind::Cnn => DatasetKind::Cifar10,
+        };
+        let tt = synthetic::generate(dataset_kind, 512, 256, &mut rng);
+        let data = Arc::new(tt.train);
+        let mut loader = ClientLoader::new(
+            Arc::clone(&data),
+            (0..512).collect(),
+            pjrt.batch_size(),
+            Rng::seed_from_u64(6),
+        );
+        let batch = loader.next_batch();
+        let params = init_params(kind, &mut rng);
+        let h = vec![0.0f32; params.len()];
+        let eb = eval_batches(&tt.test, pjrt.eval_batch_size());
+
+        let mut b = Bench::new(&format!("runtime_{}", kind.name()));
+        b.case("pjrt train_step", || {
+            bb(pjrt.train_step(bb(&params), bb(&h), bb(&batch), 0.05));
+        });
+        b.case("native train_step", || {
+            bb(native.train_step(bb(&params), bb(&h), bb(&batch), 0.05));
+        });
+        b.case("pjrt train_step_masked 30%", || {
+            bb(pjrt.train_step_masked(bb(&params), bb(&h), bb(&batch), 0.05, 0.3));
+        });
+        b.case("pjrt grad", || {
+            bb(pjrt.grad(bb(&params), bb(&batch)));
+        });
+        b.case("pjrt eval (full test set)", || {
+            bb(pjrt.eval(bb(&params), bb(&eb)));
+        });
+        b.finish();
+    }
+}

@@ -1,0 +1,80 @@
+//! Micro-bench: the local-step hot path on the native plane — gradient,
+//! fused control-variate update, aggregation, and the full step.
+
+use fedcomloc::data::loader::ClientLoader;
+use fedcomloc::data::{synthetic, DatasetKind};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::{init_params, LocalTrainer, ModelKind};
+use fedcomloc::tensor;
+use fedcomloc::util::benchkit::{bb, Bench};
+use fedcomloc::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut rng = Rng::seed_from_u64(1);
+    let tt = synthetic::generate(DatasetKind::Mnist, 512, 64, &mut rng);
+    let data = Arc::new(tt.train);
+    let mut loader = ClientLoader::new(
+        Arc::clone(&data),
+        (0..512).collect(),
+        64,
+        Rng::seed_from_u64(2),
+    );
+    let batch = loader.next_batch();
+    let trainer = NativeTrainer::new(ModelKind::Mlp);
+    let params = init_params(ModelKind::Mlp, &mut rng);
+    let mut h = vec![0.0f32; params.len()];
+    rng.fill_normal_f32(&mut h, 0.0, 0.01);
+
+    let mut b = Bench::new("train_step_native_mlp");
+    b.case("grad (fwd+bwd, batch 64)", || {
+        bb(trainer.grad(bb(&params), bb(&batch)));
+    });
+    b.case("train_step (fused)", || {
+        bb(trainer.train_step(bb(&params), bb(&h), bb(&batch), 0.05));
+    });
+    b.case("train_step_masked K=30%", || {
+        bb(trainer.train_step_masked(bb(&params), bb(&h), bb(&batch), 0.05, 0.3));
+    });
+
+    // Host-side vector ops at model size.
+    let g = trainer.grad(&params, &batch).0;
+    let mut out = vec![0.0f32; params.len()];
+    b.case("sgd_control_variate_step d=109k", || {
+        tensor::sgd_control_variate_step(bb(&params), bb(&g), bb(&h), 0.05, &mut out);
+        bb(&out);
+    });
+    let rows: Vec<Vec<f32>> = (0..10).map(|_| params.clone()).collect();
+    let row_refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    b.case("server mean of 10 models", || {
+        tensor::mean_into(bb(&row_refs), &mut out);
+        bb(&out);
+    });
+    b.case("control_variate_update", || {
+        let mut hh = h.clone();
+        tensor::control_variate_update(&mut hh, bb(&params), bb(&g), 2.0);
+        bb(&hh);
+    });
+    b.finish();
+
+    // CNN single step (heavier; fewer samples by config).
+    let mut rng = Rng::seed_from_u64(3);
+    let tt = synthetic::generate(DatasetKind::Cifar10, 128, 32, &mut rng);
+    let data = Arc::new(tt.train);
+    let mut loader = ClientLoader::new(
+        Arc::clone(&data),
+        (0..128).collect(),
+        32,
+        Rng::seed_from_u64(4),
+    );
+    let batch = loader.next_batch();
+    let trainer = NativeTrainer::new(ModelKind::Cnn);
+    let params = init_params(ModelKind::Cnn, &mut rng);
+    let h = vec![0.0f32; params.len()];
+    let mut b = Bench::new("train_step_native_cnn");
+    b.case("cnn grad (batch 32)", || {
+        bb(trainer.grad(bb(&params), bb(&batch)));
+    });
+    let _ = h;
+    b.finish();
+}

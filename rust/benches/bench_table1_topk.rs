@@ -1,0 +1,59 @@
+//! Table 1 + Figure 1: TopK sparsity sweep on FedMNIST.
+//!
+//! Regenerates the paper's accuracy row and bits-axis series at bench scale
+//! (env FEDCOMLOC_BENCH_ROUNDS to widen), and times each full federated run
+//! so the communication/computation trade is visible in wall clock too.
+
+mod common;
+
+use fedcomloc::compress::{Identity, TopK};
+use fedcomloc::fed::{run, AlgorithmSpec, Variant};
+
+fn spec(density: f64) -> AlgorithmSpec {
+    AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: if density >= 1.0 {
+            Box::new(Identity)
+        } else {
+            Box::new(TopK::with_density(density))
+        },
+    }
+}
+
+fn main() {
+    println!("== Table 1 / Figure 1: Top-K ratios (bench scale) ==");
+    let trainer = common::mlp_trainer();
+    let mut baseline = None;
+    let mut rows = Vec::new();
+    for &density in &[1.0, 0.10, 0.30, 0.50, 0.70, 0.90] {
+        let cfg = common::mnist_cfg();
+        let t0 = std::time::Instant::now();
+        let log = run(&cfg, trainer.clone(), &spec(density));
+        let wall = t0.elapsed();
+        let acc = log.best_accuracy().unwrap_or(0.0);
+        if density >= 1.0 {
+            baseline = Some(acc);
+        }
+        common::row(
+            &format!("K={:>3.0}% ({wall:.2?})", density * 100.0),
+            acc,
+            log.final_train_loss().unwrap_or(f64::NAN),
+            log.total_uplink_bits(),
+        );
+        rows.push((density, acc, log.total_uplink_bits()));
+    }
+    if let Some(b) = baseline {
+        println!("\n  Decrease vs K=100% (paper Table 1 row 2):");
+        for &(d, a, _) in &rows {
+            if d < 1.0 {
+                println!("    K={:>3.0}%: {:+.2}%", d * 100.0, (b - a) / b * 100.0);
+            }
+        }
+    }
+    let dense_bits = rows[0].2 as f64;
+    let k10_bits = rows[1].2 as f64;
+    println!(
+        "\n  bits ratio K=10% vs dense: {:.3} (paper: ≈0.10 of uplink payload)",
+        k10_bits / dense_bits
+    );
+}

@@ -1,0 +1,50 @@
+//! Table 2 + Figures 2/12: Dirichlet heterogeneity × sparsity grid.
+
+mod common;
+
+use fedcomloc::compress::{Identity, TopK};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+
+fn main() {
+    println!("== Table 2: α × K accuracy grid (bench scale) ==");
+    let trainer = common::mlp_trainer();
+    let alphas = [0.1, 0.3, 0.7, 1.0];
+    let densities = [1.0, 0.10, 0.50];
+    print!("{:<10}", "");
+    for a in alphas {
+        print!("{:>12}", format!("α={a}"));
+    }
+    println!();
+    let mut grid = Vec::new();
+    for &density in &densities {
+        print!("{:<10}", format!("K={:.0}%", density * 100.0));
+        let mut row = Vec::new();
+        for &alpha in &alphas {
+            let cfg = RunConfig {
+                dirichlet_alpha: alpha,
+                ..common::mnist_cfg()
+            };
+            let spec = AlgorithmSpec::FedComLoc {
+                variant: Variant::Com,
+                compressor: if density >= 1.0 {
+                    Box::new(Identity)
+                } else {
+                    Box::new(TopK::with_density(density))
+                },
+            };
+            let acc = run(&cfg, trainer.clone(), &spec)
+                .best_accuracy()
+                .unwrap_or(0.0);
+            print!("{acc:>12.4}");
+            row.push(acc);
+        }
+        println!();
+        grid.push(row);
+    }
+    println!("\n  paper shape: accuracy rises with α; K=10% is the most α-sensitive row.");
+    let k10 = &grid[1];
+    println!(
+        "  K=10% spread (α=1.0 − α=0.1): {:+.4} (paper: +0.0701 absolute)",
+        k10.last().unwrap() - k10.first().unwrap()
+    );
+}

@@ -1,0 +1,59 @@
+#![allow(dead_code)]
+//! Shared setup for the paper-figure benches: a scaled-down RunConfig and
+//! a native-plane trainer (benches must run on a fresh checkout without
+//! artifacts; the PJRT plane is covered by bench_micro_runtime).
+//!
+//! Scale: FEDCOMLOC_BENCH_ROUNDS overrides the default 15 communication
+//! rounds; paper-scale reproduction goes through `fedcomloc experiment`.
+
+use fedcomloc::fed::RunConfig;
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::ModelKind;
+use std::sync::Arc;
+
+pub fn bench_rounds() -> usize {
+    std::env::var("FEDCOMLOC_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15)
+}
+
+pub fn mnist_cfg() -> RunConfig {
+    RunConfig {
+        rounds: bench_rounds(),
+        train_n: 4_000,
+        test_n: 800,
+        n_clients: 50,
+        clients_per_round: 10,
+        eval_every: 5,
+        ..RunConfig::default_mnist()
+    }
+}
+
+pub fn cifar_cfg() -> RunConfig {
+    RunConfig {
+        rounds: bench_rounds().min(8),
+        train_n: 1_200,
+        test_n: 300,
+        n_clients: 10,
+        clients_per_round: 5,
+        eval_every: 4,
+        ..RunConfig::default_cifar()
+    }
+}
+
+pub fn mlp_trainer() -> Arc<NativeTrainer> {
+    Arc::new(NativeTrainer::new(ModelKind::Mlp))
+}
+
+pub fn cnn_trainer() -> Arc<NativeTrainer> {
+    Arc::new(NativeTrainer::new(ModelKind::Cnn))
+}
+
+/// Print one experiment data row in a uniform format.
+pub fn row(label: &str, acc: f64, loss: f64, uplink_bits: u64) {
+    println!(
+        "  {label:<28} best_acc={acc:<8.4} final_loss={loss:<8.4} uplink={:.2} MB",
+        uplink_bits as f64 / 8e6
+    );
+}

@@ -1,0 +1,328 @@
+//! Command-line argument parsing substrate (clap is not vendored offline).
+//!
+//! Supports the patterns the `fedcomloc` binary uses: positional
+//! subcommands, `--flag`, `--key value` / `--key=value`, repeated options,
+//! and auto-generated `--help` text from registered option metadata.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value_name: Option<&'static str>, // None => boolean flag
+    pub help: &'static str,
+    pub default: Option<String>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    values: BTreeMap<String, Vec<String>>,
+    flags: BTreeMap<String, usize>,
+    specs: Vec<OptSpec>,
+    program: String,
+    about: String,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option '--{0}' (try --help)")]
+    UnknownOption(String),
+    #[error("option '--{0}' requires a value")]
+    MissingValue(String),
+    #[error("invalid value for '--{key}': '{value}' ({reason})")]
+    InvalidValue {
+        key: String,
+        value: String,
+        reason: String,
+    },
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Builder for a command's interface.
+pub struct Command {
+    name: String,
+    about: String,
+    specs: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+        }
+    }
+
+    /// `--name <VALUE>` option.
+    pub fn opt(mut self, name: &'static str, value_name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            value_name: Some(value_name),
+            help,
+            default: None,
+        });
+        self
+    }
+
+    /// `--name <VALUE>` option with default shown in help.
+    pub fn opt_default(
+        mut self,
+        name: &'static str,
+        value_name: &'static str,
+        help: &'static str,
+        default: &str,
+    ) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            value_name: Some(value_name),
+            help,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            value_name: None,
+            help,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{}\n\nUSAGE:\n    {} [OPTIONS]\n\nOPTIONS:\n", self.about, self.name);
+        for spec in &self.specs {
+            let lhs = match spec.value_name {
+                Some(v) => format!("--{} <{}>", spec.name, v),
+                None => format!("--{}", spec.name),
+            };
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("    {lhs:<28} {}{}\n", spec.help, default));
+        }
+        s.push_str("    --help                       Print this help\n");
+        s
+    }
+
+    /// Parse a token stream (not including the program/subcommand name).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, CliError> {
+        let is_flag = |name: &str| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .map(|s| s.value_name.is_none())
+        };
+        let mut args = Args {
+            program: self.name.clone(),
+            about: self.about.clone(),
+            specs: self.specs.clone(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                args.flags.insert("help".into(), 1);
+                i += 1;
+                continue;
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_value) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                match is_flag(&name) {
+                    None => return Err(CliError::UnknownOption(name)),
+                    Some(true) => {
+                        *args.flags.entry(name).or_insert(0) += 1;
+                        i += 1;
+                    }
+                    Some(false) => {
+                        let value = if let Some(v) = inline_value {
+                            v
+                        } else {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        };
+                        args.values.entry(name).or_default().push(value);
+                        i += 1;
+                    }
+                }
+            } else {
+                args.positionals.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn wants_help(&self) -> bool {
+        self.flags.contains_key("help")
+    }
+
+    pub fn help_text(&self) -> String {
+        Command {
+            name: self.program.clone(),
+            about: self.about.clone(),
+            specs: self.specs.clone(),
+        }
+        .help_text()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|e| CliError::InvalidValue {
+                key: name.to_string(),
+                value: raw.to_string(),
+                reason: e.to_string(),
+            }),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parsed(name)?.unwrap_or(default))
+    }
+
+    /// Parse a comma-separated list option, e.g. `--densities 0.1,0.3,1.0`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse::<T>().map_err(|e| CliError::InvalidValue {
+                        key: name.to_string(),
+                        value: s.to_string(),
+                        reason: e.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "Train a federated model")
+            .opt_default("rounds", "N", "communication rounds", "500")
+            .opt("lr", "F", "learning rate")
+            .opt("density", "F", "TopK density ratio")
+            .flag("verbose", "log per-round metrics")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let args = cmd()
+            .parse(&toks(&["--rounds", "100", "--lr=0.05", "--verbose", "extra"]))
+            .unwrap();
+        assert_eq!(args.get("rounds"), Some("100"));
+        assert_eq!(args.get_or::<f64>("lr", 0.1).unwrap(), 0.05);
+        assert!(args.flag("verbose"));
+        assert_eq!(args.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let args = cmd().parse(&toks(&[])).unwrap();
+        assert_eq!(args.get_or::<usize>("rounds", 500).unwrap(), 500);
+        assert!(!args.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            cmd().parse(&toks(&["--nope"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cmd().parse(&toks(&["--lr"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_value_carries_context() {
+        let args = cmd().parse(&toks(&["--lr", "abc"])).unwrap();
+        let err = args.get_parsed::<f64>("lr").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("lr") && msg.contains("abc"), "{msg}");
+    }
+
+    #[test]
+    fn list_option() {
+        let args = cmd().parse(&toks(&["--density", "0.1,0.3,1.0"])).unwrap();
+        let v: Vec<f64> = args.get_list("density").unwrap().unwrap();
+        assert_eq!(v, vec![0.1, 0.3, 1.0]);
+    }
+
+    #[test]
+    fn help_text_lists_options() {
+        let h = cmd().help_text();
+        assert!(h.contains("--rounds <N>"));
+        assert!(h.contains("[default: 500]"));
+        assert!(h.contains("--verbose"));
+        let args = cmd().parse(&toks(&["--help"])).unwrap();
+        assert!(args.wants_help());
+    }
+
+    #[test]
+    fn repeated_options_keep_all_last_wins() {
+        let args = cmd().parse(&toks(&["--lr", "0.1", "--lr", "0.2"])).unwrap();
+        assert_eq!(args.get("lr"), Some("0.2"));
+        assert_eq!(args.get_all("lr"), vec!["0.1", "0.2"]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Identity "compressor": dense f32 wire format (the K=100% baseline).
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".to_string()
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
+        let mut payload = Vec::with_capacity(x.len() * 4);
+        for v in x {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Compressed {
+            wire_bits: 32 * x.len() as u64,
+            dim: x.len(),
+            codec: Codec::Dense,
+            payload,
+        }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+        assert_eq!(c.codec, Codec::Dense);
+        assert_eq!(c.payload.len(), c.dim * 4);
+        c.payload
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    }
+
+    fn apply(&self, _x: &mut [f32], _rng: &mut Rng) {}
+
+    fn nominal_bits(&self, d: usize) -> u64 {
+        32 * d as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Rng::seed_from_u64(0);
+        let x = vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE, 1e30];
+        let c = Identity.compress(&x, &mut rng);
+        assert_eq!(c.wire_bits, 32 * 5);
+        assert_eq!(Identity.decompress(&c), x);
+    }
+
+    #[test]
+    fn apply_is_noop() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut x = vec![1.0, 2.0];
+        Identity.apply(&mut x, &mut rng);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,347 @@
+//! Stochastic binary quantizer Q_r (paper Definition 3.2, after QSGD —
+//! Alistarh et al., 2017).
+//!
+//! For x ≠ 0:  Q_r(x)_i = ‖x‖₂ · sgn(x_i) · ξ_i,  where ξ_i stochastically
+//! rounds y_i = |x_i|/‖x‖₂ onto the grid {0, 1/2^r, …, 2^r/2^r}: up with
+//! probability 2^r·y_i − ⌊2^r·y_i⌋, down otherwise. This makes Q_r unbiased
+//! (E[Q_r(x)] = x) with minimal variance over distributions supported on the
+//! grid. Q_r(0) = 0.
+//!
+//! **Bucketing.** Normalizing by the global ‖x‖₂ of a 10⁵-dim model makes
+//! y_i ≈ 1/√d ≈ 0.003, far below the 2^-r grid for small r — quantization
+//! would zero the model. Like QSGD in practice (Alistarh et al. use bucket
+//! size 512; per-tensor quantization is the same idea), we quantize in
+//! buckets of `bucket_size` coordinates, each with its own norm.
+//!
+//! Wire format per bucket: 32-bit norm + per coordinate 1 sign bit +
+//! (r+1)-bit level (levels range over 0..=2^r). Exact cost:
+//! ⌈d/B⌉·32 + d·(r+2) bits — we count *real* bits, so "16-bit" quantization
+//! costs ≈18 bits/coordinate on our wire, slightly above the paper's
+//! nominal r bits/coordinate (EXPERIMENTS.md notes this).
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::bitio::{bits_for, BitReader, BitWriter};
+use crate::util::rng::Rng;
+
+pub const DEFAULT_BUCKET: usize = 1024;
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantizeR {
+    /// Number of quantization bits r (levels = 2^r), 1..=32.
+    pub bits: u32,
+    /// Coordinates per normalization bucket (see module docs).
+    pub bucket_size: usize,
+}
+
+impl QuantizeR {
+    pub fn new(bits: u32) -> Self {
+        Self::with_bucket(bits, DEFAULT_BUCKET)
+    }
+
+    pub fn with_bucket(bits: u32, bucket_size: usize) -> Self {
+        assert!((1..=32).contains(&bits), "bits in 1..=32");
+        assert!(bucket_size > 0);
+        Self { bits, bucket_size }
+    }
+
+    #[inline]
+    fn levels(&self) -> u64 {
+        1u64 << self.bits
+    }
+
+    /// Stochastically quantize one normalized magnitude y = |x_i|/‖x‖ ∈ [0,1]
+    /// to an integer level in 0..=2^r.
+    #[inline]
+    fn quantize_level(&self, y: f32, rng: &mut Rng) -> u64 {
+        let s = self.levels() as f64;
+        let scaled = (y as f64 * s).clamp(0.0, s);
+        let lo = scaled.floor();
+        let frac = scaled - lo;
+        let level = if rng.uniform() < frac { lo + 1.0 } else { lo };
+        level as u64
+    }
+}
+
+impl Compressor for QuantizeR {
+    fn name(&self) -> String {
+        format!("q{}", self.bits)
+    }
+
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        let level_bits = self.bits + 1;
+        let mut w = BitWriter::with_capacity(8 + (d * (level_bits as usize + 1)).div_ceil(8));
+        for bucket in x.chunks(self.bucket_size) {
+            // Non-finite norms (diverged models) encode as 0 so encoder and
+            // decoder agree on the bucket being skipped.
+            let raw = crate::tensor::norm2(bucket);
+            let norm = if raw.is_finite() { raw } else { 0.0 };
+            w.write_f32(norm);
+            if norm > 0.0 {
+                for &v in bucket {
+                    w.write_bit(v.is_sign_negative());
+                    let y = (v.abs() / norm).min(1.0);
+                    w.write_bits(self.quantize_level(y, rng), level_bits);
+                }
+            }
+        }
+        let wire_bits = w.bit_len();
+        Compressed {
+            payload: w.finish(),
+            wire_bits,
+            dim: d,
+            codec: Codec::Quantized { bits: self.bits },
+        }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+        let bits = match c.codec {
+            Codec::Quantized { bits } => bits,
+            other => panic!("QuantizeR::decompress on {other:?}"),
+        };
+        let mut r = BitReader::new(&c.payload);
+        let s = (1u64 << bits) as f32;
+        let level_bits = bits + 1;
+        let mut out = Vec::with_capacity(c.dim);
+        let mut remaining = c.dim;
+        while remaining > 0 {
+            let take = remaining.min(self.bucket_size);
+            let norm = r.read_f32();
+            if norm <= 0.0 {
+                out.extend(std::iter::repeat(0.0f32).take(take));
+            } else {
+                for _ in 0..take {
+                    let neg = r.read_bit();
+                    let level = r.read_bits(level_bits) as f32;
+                    let mag = norm * level / s;
+                    out.push(if neg { -mag } else { mag });
+                }
+            }
+            remaining -= take;
+        }
+        out
+    }
+
+    fn nominal_bits(&self, d: usize) -> u64 {
+        32 * d.div_ceil(self.bucket_size) as u64 + d as u64 * (self.bits as u64 + 2)
+    }
+}
+
+/// Encoder for the double-compression codec (TopK then quantize survivors):
+/// 32-bit K, then per survivor-bucket (DEFAULT_BUCKET survivors) a 32-bit
+/// norm followed by (index, sign, level) triples. Bucketing over the
+/// *survivor sequence* matters just as for the dense quantizer: a single
+/// global norm at r=4 destroys the small survivors and destabilizes
+/// training (observed as divergence in the Figure 16 runs).
+pub(super) fn encode_sparse_quantized(
+    d: usize,
+    idx: &[usize],
+    vals: &[f32],
+    bits: u32,
+    rng: &mut Rng,
+) -> Compressed {
+    assert_eq!(idx.len(), vals.len());
+    let q = QuantizeR::new(bits);
+    let bucket = q.bucket_size;
+    let idx_bits = bits_for(d as u64);
+    let level_bits = bits + 1;
+    let mut w = BitWriter::with_capacity(
+        8 + (idx.len() * (idx_bits as usize + 1 + level_bits as usize)).div_ceil(8),
+    );
+    w.write_u32(idx.len() as u32);
+    for (ichunk, vchunk) in idx.chunks(bucket).zip(vals.chunks(bucket)) {
+        let raw = crate::tensor::norm2(vchunk);
+        let norm = if raw.is_finite() { raw } else { 0.0 };
+        w.write_f32(norm);
+        for (&i, &v) in ichunk.iter().zip(vchunk) {
+            w.write_bits(i as u64, idx_bits);
+            if norm > 0.0 {
+                w.write_bit(v.is_sign_negative());
+                let y = (v.abs() / norm).min(1.0);
+                w.write_bits(q.quantize_level(y, rng), level_bits);
+            }
+        }
+    }
+    let wire_bits = w.bit_len();
+    Compressed {
+        payload: w.finish(),
+        wire_bits,
+        dim: d,
+        codec: Codec::SparseQuantized { bits },
+    }
+}
+
+pub(super) fn decode_sparse_quantized(c: &Compressed) -> Vec<f32> {
+    let bits = match c.codec {
+        Codec::SparseQuantized { bits } => bits,
+        other => panic!("decode_sparse_quantized on {other:?}"),
+    };
+    let bucket = QuantizeR::new(bits).bucket_size;
+    let mut out = vec![0.0f32; c.dim];
+    let mut r = BitReader::new(&c.payload);
+    let k = r.read_u32() as usize;
+    let idx_bits = bits_for(c.dim as u64);
+    let s = (1u64 << bits) as f32;
+    let level_bits = bits + 1;
+    let mut remaining = k;
+    while remaining > 0 {
+        let take = remaining.min(bucket);
+        let norm = r.read_f32();
+        for _ in 0..take {
+            let i = r.read_bits(idx_bits) as usize;
+            if norm > 0.0 {
+                let neg = r.read_bit();
+                let level = r.read_bits(level_bits) as f32;
+                let mag = norm * level / s;
+                out[i] = if neg { -mag } else { mag };
+            }
+        }
+        remaining -= take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{l2_distance, norm2};
+
+    #[test]
+    fn zero_vector_maps_to_zero() {
+        let mut rng = Rng::seed_from_u64(0);
+        let x = vec![0.0f32; 17];
+        let q = QuantizeR::new(4);
+        let c = q.compress(&x, &mut rng);
+        assert_eq!(q.decompress(&c), x);
+        // Wire cost for the zero vector is just the bucket-norm header.
+        assert_eq!(c.wire_bits, 32);
+    }
+
+    #[test]
+    fn unbiasedness() {
+        // E[Q_r(x)] = x: average many independent quantizations.
+        let mut rng = Rng::seed_from_u64(1);
+        let x = vec![0.3f32, -0.5, 0.01, 0.8, -0.02];
+        let q = QuantizeR::new(2);
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; x.len()];
+        for _ in 0..trials {
+            let c = q.compress(&x, &mut rng);
+            for (a, v) in acc.iter_mut().zip(q.decompress(&c)) {
+                *a += v as f64;
+            }
+        }
+        for (a, &xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - xi as f64).abs() < 0.01,
+                "mean={mean} expected={xi}"
+            );
+        }
+    }
+
+    #[test]
+    fn high_bits_near_lossless() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x: Vec<f32> = (0..256).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let q = QuantizeR::new(16);
+        let c = q.compress(&x, &mut rng);
+        let y = q.decompress(&c);
+        let rel = l2_distance(&x, &y) / norm2(&x);
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn bucketed_quantization_is_finer_than_global() {
+        // With per-bucket norms, a vector with one huge bucket does not
+        // destroy the resolution of the others.
+        let mut rng = Rng::seed_from_u64(11);
+        let mut x = vec![0.01f32; 2048];
+        for v in x.iter_mut().take(1024) {
+            *v = 100.0;
+        }
+        // Bucketed: the small bucket keeps its own norm (~0.32), so its
+        // values stochastically round to 0 or one grid cell (~0.02) — many
+        // survive as nonzero and the bucket mean is preserved.
+        let q_bucketed = QuantizeR::with_bucket(4, 1024);
+        let y = q_bucketed.decompress(&q_bucketed.compress(&x, &mut rng));
+        let nnz_bucketed = y[1024..].iter().filter(|&&v| v != 0.0).count();
+        let mean_bucketed: f32 = y[1024..].iter().sum::<f32>() / 1024.0;
+        assert!(nnz_bucketed > 100, "bucketed nnz {nnz_bucketed}");
+        assert!((mean_bucketed - 0.01).abs() < 0.005, "mean {mean_bucketed}");
+        // Global norm (~3200): grid cell ~200 ⇒ the small half is wiped out.
+        let q_global = QuantizeR::with_bucket(4, 4096);
+        let z = q_global.decompress(&q_global.compress(&x, &mut rng));
+        let nnz_global = z[1024..].iter().filter(|&&v| v != 0.0).count();
+        assert!(
+            nnz_global < nnz_bucketed / 10,
+            "global nnz {nnz_global} vs bucketed {nnz_bucketed}"
+        );
+    }
+
+    #[test]
+    fn low_bits_error_bounded_by_grid() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 11.0).collect();
+        let norm = norm2(&x);
+        let q = QuantizeR::new(4);
+        let c = q.compress(&x, &mut rng);
+        let y = q.decompress(&c);
+        // Per-coordinate error at most one grid cell: norm / 2^r.
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!((xi - yi).abs() <= norm / 16.0 + 1e-6, "{xi} vs {yi}");
+        }
+    }
+
+    #[test]
+    fn signs_preserved() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x = vec![1.0f32, -1.0, 0.5, -0.5];
+        let q = QuantizeR::new(8);
+        let c = q.compress(&x, &mut rng);
+        for (xi, yi) in x.iter().zip(q.decompress(&c)) {
+            assert!(xi * yi >= 0.0, "sign flip: {xi} -> {yi}");
+        }
+    }
+
+    #[test]
+    fn wire_bits_formula() {
+        let mut rng = Rng::seed_from_u64(5);
+        let d: usize = 1001;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for bits in [1u32, 4, 8, 16, 32] {
+            let q = QuantizeR::new(bits);
+            let c = q.compress(&x, &mut rng);
+            let buckets = d.div_ceil(q.bucket_size) as u64;
+            assert_eq!(c.wire_bits, 32 * buckets + d as u64 * (bits as u64 + 2));
+            assert!(c.wire_bits <= q.nominal_bits(d));
+        }
+    }
+
+    #[test]
+    fn compression_beats_dense_below_30_bits() {
+        let mut rng = Rng::seed_from_u64(6);
+        let d = 4096;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let c16 = QuantizeR::new(16).compress(&x, &mut rng);
+        let c4 = QuantizeR::new(4).compress(&x, &mut rng);
+        assert!(c16.wire_bits < super::super::dense_bits(d));
+        assert!(c4.wire_bits < c16.wire_bits / 2);
+    }
+
+    #[test]
+    fn sparse_quantized_roundtrip() {
+        let mut rng = Rng::seed_from_u64(7);
+        let d = 500;
+        let idx = vec![3usize, 77, 178, 400, 499];
+        let vals = vec![1.0f32, -2.0, 0.5, -0.25, 3.0];
+        let c = encode_sparse_quantized(d, &idx, &vals, 8, &mut rng);
+        let y = decode_sparse_quantized(&c);
+        assert_eq!(y.len(), d);
+        let norm = norm2(&vals);
+        for (j, &i) in idx.iter().enumerate() {
+            assert!((y[i] - vals[j]).abs() <= norm / 256.0 + 1e-6);
+        }
+        assert_eq!(y.iter().filter(|&&v| v != 0.0).count(), idx.len());
+    }
+}

@@ -1,0 +1,334 @@
+//! TopK sparsifier (paper Definition 3.1) with adaptive sparse wire format.
+//!
+//! `TopK(x)` keeps the K largest-|·| coordinates — the arg-min of ‖y−x‖ over
+//! ‖y‖₀ ≤ K — selected exactly via `select_nth_unstable` (average O(d), no
+//! full sort on the hot path; see bench_micro_compress).
+//!
+//! Two encodings, picked per message by actual size:
+//!  * `SparseIdx`   — K × (ceil(log2 d)-bit index + 32-bit value); wins for
+//!                    small K/d.
+//!  * `SparseBitmap`— d-bit occupancy bitmap + K × 32-bit values; wins once
+//!                    K/d ≳ 1/(log2 d + 32) ≈ 2–3 % for typical d.
+//!
+//! Ties (equal |x_i|) are broken toward lower index, matching Definition
+//! 3.1's "chosen arbitrarily" clause deterministically.
+
+use super::{Codec, Compressed, Compressor};
+use crate::util::bitio::{bits_for, BitReader, BitWriter};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    /// Density ratio in (0, 1]: the paper specifies K as "the enforced
+    /// density ratio, i.e. the ratio of nonzero parameters" (§4 Default
+    /// Configuration), so K = ceil(density · d).
+    pub density: f64,
+    /// Optional absolute K override (used when the caller wants an exact
+    /// count rather than a ratio).
+    pub k_abs: Option<usize>,
+}
+
+impl TopK {
+    pub fn with_density(density: f64) -> Self {
+        assert!(density > 0.0 && density <= 1.0, "density in (0,1]");
+        Self {
+            density,
+            k_abs: None,
+        }
+    }
+
+    pub fn with_k(k: usize) -> Self {
+        assert!(k > 0);
+        Self {
+            density: 1.0,
+            k_abs: Some(k),
+        }
+    }
+
+    /// K for a given dimension.
+    pub fn k_for(&self, d: usize) -> usize {
+        match self.k_abs {
+            Some(k) => k.min(d),
+            None => ((self.density * d as f64).ceil() as usize).clamp(1, d),
+        }
+    }
+}
+
+/// Indices of the K largest-magnitude entries, ascending index order.
+/// Exact selection; deterministic tie-break toward lower index.
+pub fn select_topk_indices(x: &[f32], k: usize) -> Vec<usize> {
+    let d = x.len();
+    let k = k.min(d);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == d {
+        return (0..d).collect();
+    }
+    // Pack (magnitude, index) into one u64 key: |x| as IEEE-754 bits is
+    // monotone for non-negative floats, so integer comparison on
+    // (mag << 32 | !index) sorts by descending magnitude with ascending-
+    // index tie-break — one integer cmp per comparison instead of an f32
+    // partial_cmp chain (≈1.7× faster selection; EXPERIMENTS.md §Perf L3).
+    let mut keys: Vec<u64> = x
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64)
+        .collect();
+    keys.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
+    keys.truncate(k);
+    let mut idx: Vec<usize> = keys.into_iter().map(|key| !(key as u32) as usize).collect();
+    idx.sort_unstable();
+    idx
+}
+
+/// Semantic TopK: zero out everything but the K largest-|·| entries.
+pub fn apply_topk(x: &mut [f32], k: usize) {
+    let keep = select_topk_indices(x, k);
+    let mut keep_iter = keep.iter().peekable();
+    for (i, v) in x.iter_mut().enumerate() {
+        if keep_iter.peek() == Some(&&i) {
+            keep_iter.next();
+        } else {
+            *v = 0.0;
+        }
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        match self.k_abs {
+            Some(k) => format!("topk(k={k})"),
+            None => format!("topk({:.2})", self.density),
+        }
+    }
+
+    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
+        let d = x.len();
+        let k = self.k_for(d);
+        let idx = select_topk_indices(x, k);
+        encode_sparse(d, &idx, x)
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+        decode_sparse(c)
+    }
+
+    fn apply(&self, x: &mut [f32], _rng: &mut Rng) {
+        apply_topk(x, self.k_for(x.len()));
+    }
+
+    fn nominal_bits(&self, d: usize) -> u64 {
+        let k = self.k_for(d) as u64;
+        let idx_mode = 64 + k * (bits_for(d as u64) as u64 + 32);
+        let bitmap_mode = 64 + d as u64 + k * 32;
+        idx_mode.min(bitmap_mode)
+    }
+}
+
+/// Header layout (both sparse codecs): 32-bit K, then mode-specific body.
+/// Dim travels out-of-band in `Compressed::dim` (the transport already knows
+/// the model dimension; we still count a 32-bit K header as wire overhead).
+pub(super) fn encode_sparse(d: usize, idx: &[usize], x: &[f32]) -> Compressed {
+    let k = idx.len();
+    let idx_bits = bits_for(d as u64);
+    let size_idx_mode: u64 = 32 + (k as u64) * (idx_bits as u64 + 32);
+    let size_bitmap_mode: u64 = 32 + d as u64 + (k as u64) * 32;
+
+    // Layout (both modes): header, bit-packed index block, byte-alignment
+    // pad (≤7 bits, counted), then values as raw LE f32 — the aligned value
+    // block encodes/decodes at memcpy speed (EXPERIMENTS.md §Perf L3).
+    if size_idx_mode <= size_bitmap_mode {
+        let mut w = BitWriter::with_capacity((size_idx_mode / 8 + 2) as usize);
+        w.write_u32(k as u32);
+        for &i in idx {
+            w.write_bits(i as u64, idx_bits);
+        }
+        w.align_to_byte();
+        for &i in idx {
+            w.write_f32_aligned(x[i]);
+        }
+        let wire_bits = w.bit_len();
+        Compressed {
+            payload: w.finish(),
+            wire_bits,
+            dim: d,
+            codec: Codec::SparseIdx,
+        }
+    } else {
+        let mut w = BitWriter::with_capacity((size_bitmap_mode / 8 + 2) as usize);
+        w.write_u32(k as u32);
+        let mut iter = idx.iter().peekable();
+        for i in 0..d {
+            let hit = iter.peek() == Some(&&i);
+            if hit {
+                iter.next();
+            }
+            w.write_bit(hit);
+        }
+        w.align_to_byte();
+        for &i in idx {
+            w.write_f32_aligned(x[i]);
+        }
+        let wire_bits = w.bit_len();
+        Compressed {
+            payload: w.finish(),
+            wire_bits,
+            dim: d,
+            codec: Codec::SparseBitmap,
+        }
+    }
+}
+
+pub(super) fn decode_sparse(c: &Compressed) -> Vec<f32> {
+    let mut out = vec![0.0f32; c.dim];
+    let mut r = BitReader::new(&c.payload);
+    let k = r.read_u32() as usize;
+    match c.codec {
+        Codec::SparseIdx => {
+            let idx_bits = bits_for(c.dim as u64);
+            let hits: Vec<usize> = (0..k).map(|_| r.read_bits(idx_bits) as usize).collect();
+            r.align_to_byte();
+            for i in hits {
+                out[i] = r.read_f32_aligned();
+            }
+        }
+        Codec::SparseBitmap => {
+            let mut hits = Vec::with_capacity(k);
+            for i in 0..c.dim {
+                if r.read_bit() {
+                    hits.push(i);
+                }
+            }
+            assert_eq!(hits.len(), k, "bitmap population mismatch");
+            r.align_to_byte();
+            for i in hits {
+                out[i] = r.read_f32_aligned();
+            }
+        }
+        other => panic!("decode_sparse on {other:?}"),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::nnz;
+
+    fn rt(x: &[f32], density: f64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(0);
+        let c = TopK::with_density(density);
+        let enc = c.compress(x, &mut rng);
+        c.decompress(&enc)
+    }
+
+    #[test]
+    fn keeps_exactly_k_largest() {
+        let x = vec![0.1, -5.0, 3.0, 0.0, -0.2, 4.0];
+        let y = rt(&x, 0.5); // k = 3
+        assert_eq!(y, vec![0.0, -5.0, 3.0, 0.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn k100_is_identity_on_support() {
+        let x: Vec<f32> = (0..97).map(|i| (i as f32 - 48.0) * 0.3).collect();
+        let y = rt(&x, 1.0);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn definition_3_1_optimality() {
+        // TopK(x) must minimize ||y - x|| over ||y||_0 <= K: equivalently
+        // the dropped mass must be the d-K smallest |x_i|.
+        let mut rng = Rng::seed_from_u64(7);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..50).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let k = 1 + rng.below_usize(49);
+            let idx = select_topk_indices(&x, k);
+            let kept_min = idx.iter().map(|&i| x[i].abs()).fold(f32::MAX, f32::min);
+            let dropped_max = (0..50)
+                .filter(|i| !idx.contains(i))
+                .map(|i| x[i].abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                kept_min >= dropped_max,
+                "kept_min={kept_min} dropped_max={dropped_max}"
+            );
+        }
+    }
+
+    #[test]
+    fn tie_break_is_deterministic() {
+        let x = vec![1.0f32; 10];
+        let idx = select_topk_indices(&x, 3);
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn apply_matches_roundtrip() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x: Vec<f32> = (0..301).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let c = TopK::with_density(0.1);
+        let via_wire = {
+            let enc = c.compress(&x, &mut rng);
+            c.decompress(&enc)
+        };
+        let mut via_apply = x.clone();
+        c.apply(&mut via_apply, &mut rng);
+        assert_eq!(via_wire, via_apply);
+        assert_eq!(nnz(&via_apply), c.k_for(x.len()));
+    }
+
+    #[test]
+    fn codec_choice_minimizes_bits() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x: Vec<f32> = (0..10_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // Very sparse -> index mode.
+        let sparse = TopK::with_density(0.01).compress(&x, &mut rng);
+        assert_eq!(sparse.codec, Codec::SparseIdx);
+        // Dense-ish -> bitmap mode.
+        let densek = TopK::with_density(0.9).compress(&x, &mut rng);
+        assert_eq!(densek.codec, Codec::SparseBitmap);
+        // Both must beat (or match) naive K*(32+32).
+        let k = 100u64;
+        assert!(sparse.wire_bits <= 32 + k * 64);
+    }
+
+    #[test]
+    fn wire_bits_match_payload() {
+        let mut rng = Rng::seed_from_u64(5);
+        let x: Vec<f32> = (0..777).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for density in [0.01, 0.1, 0.5, 1.0] {
+            let enc = TopK::with_density(density).compress(&x, &mut rng);
+            assert!(enc.wire_bits <= 8 * enc.payload.len() as u64);
+            assert!(enc.wire_bits + 8 > 8 * enc.payload.len() as u64);
+        }
+    }
+
+    #[test]
+    fn k_abs_override() {
+        let c = TopK::with_k(5);
+        assert_eq!(c.k_for(100), 5);
+        assert_eq!(c.k_for(3), 3); // clamped to d
+        assert_eq!(c.name(), "topk(k=5)");
+    }
+
+    #[test]
+    fn k_rounding_matches_paper_convention() {
+        // "K=30% means retaining 30% of parameters"
+        let c = TopK::with_density(0.3);
+        assert_eq!(c.k_for(100), 30);
+        assert_eq!(c.k_for(10), 3);
+        assert_eq!(c.k_for(109_386), 32_816); // MLP dim from Appendix A
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(select_topk_indices(&[], 3).is_empty());
+        assert_eq!(select_topk_indices(&[2.0], 1), vec![0]);
+        let mut x = vec![1.0, -3.0];
+        apply_topk(&mut x, 1);
+        assert_eq!(x, vec![0.0, -3.0]);
+    }
+}

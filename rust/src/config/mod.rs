@@ -1,0 +1,199 @@
+//! Configuration system: typed [`RunConfig`] construction from presets,
+//! TOML files, and CLI overrides (highest precedence last).
+//!
+//! ```toml
+//! # experiment.toml
+//! [run]
+//! dataset = "fedmnist"
+//! rounds = 500
+//! clients = 100
+//! sampled = 10
+//! alpha = 0.7
+//! p = 0.1
+//! gamma = 0.05
+//! ```
+
+pub mod presets;
+
+use crate::data::DatasetKind;
+use crate::fed::RunConfig;
+use crate::util::toml::{self, TomlValue};
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("cannot read {0}: {1}")]
+    Io(std::path::PathBuf, std::io::Error),
+    #[error("{0}")]
+    Toml(#[from] toml::TomlError),
+    #[error("config key '{key}': {reason}")]
+    Invalid { key: String, reason: String },
+}
+
+/// Apply `[run]` table keys from a TOML document onto a RunConfig.
+pub fn apply_toml(cfg: &mut RunConfig, doc: &toml::TomlDoc) -> Result<(), ConfigError> {
+    let table = match doc.tables.get("run") {
+        Some(t) => t,
+        None => return Ok(()),
+    };
+    for (key, value) in table {
+        apply_kv(cfg, key, value).map_err(|reason| ConfigError::Invalid {
+            key: key.clone(),
+            reason,
+        })?;
+    }
+    Ok(())
+}
+
+pub fn load_file(cfg: &mut RunConfig, path: &Path) -> Result<(), ConfigError> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| ConfigError::Io(path.to_path_buf(), e))?;
+    let doc = toml::parse(&text)?;
+    apply_toml(cfg, &doc)
+}
+
+fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(), String> {
+    let as_usize = || value.as_usize().ok_or_else(|| "expected integer".to_string());
+    let as_f64 = || value.as_f64().ok_or_else(|| "expected number".to_string());
+    match key {
+        "dataset" => {
+            let s = value.as_str().ok_or("expected string")?;
+            cfg.dataset =
+                DatasetKind::parse(s).ok_or_else(|| format!("unknown dataset '{s}'"))?;
+        }
+        "train_n" => cfg.train_n = as_usize()?,
+        "test_n" => cfg.test_n = as_usize()?,
+        "clients" | "n_clients" => cfg.n_clients = as_usize()?,
+        "sampled" | "clients_per_round" => cfg.clients_per_round = as_usize()?,
+        "alpha" | "dirichlet_alpha" => cfg.dirichlet_alpha = as_f64()?,
+        "rounds" => cfg.rounds = as_usize()?,
+        "p" => cfg.p = as_f64()?,
+        "local_steps" => cfg.local_steps = as_usize()?,
+        "gamma" | "lr" => cfg.gamma = as_f64()? as f32,
+        "batch_size" => cfg.batch_size = as_usize()?,
+        "eval_batch" => cfg.eval_batch = as_usize()?,
+        "eval_every" => cfg.eval_every = as_usize()?,
+        "seed" => cfg.seed = as_usize()? as u64,
+        "tau" => cfg.tau = as_f64()?,
+        "threads" => cfg.threads = as_usize()?,
+        "data_dir" => {
+            cfg.data_dir = value.as_str().ok_or("expected string")?.into();
+        }
+        other => return Err(format!("unknown key '{other}'")),
+    }
+    Ok(())
+}
+
+/// Apply `--key value` style CLI overrides (see `fedcomloc train --help`).
+pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), ConfigError> {
+    let pairs: &[(&str, &str)] = &[
+        ("dataset", "dataset"),
+        ("train-n", "train_n"),
+        ("test-n", "test_n"),
+        ("clients", "clients"),
+        ("sampled", "sampled"),
+        ("alpha", "alpha"),
+        ("rounds", "rounds"),
+        ("p", "p"),
+        ("local-steps", "local_steps"),
+        ("gamma", "gamma"),
+        ("batch-size", "batch_size"),
+        ("eval-batch", "eval_batch"),
+        ("eval-every", "eval_every"),
+        ("seed", "seed"),
+        ("tau", "tau"),
+        ("threads", "threads"),
+        ("data-dir", "data_dir"),
+    ];
+    for (flag, key) in pairs {
+        if let Some(raw) = args.get(flag) {
+            let value = parse_flag_value(key, raw);
+            apply_kv(cfg, key, &value).map_err(|reason| ConfigError::Invalid {
+                key: (*flag).to_string(),
+                reason,
+            })?;
+        }
+    }
+    Ok(())
+}
+
+fn parse_flag_value(key: &str, raw: &str) -> TomlValue {
+    match key {
+        "dataset" | "data_dir" => TomlValue::Str(raw.to_string()),
+        "alpha" | "p" | "gamma" | "tau" => raw
+            .parse::<f64>()
+            .map(TomlValue::Float)
+            .unwrap_or_else(|_| TomlValue::Str(raw.to_string())),
+        _ => raw
+            .parse::<i64>()
+            .map(TomlValue::Int)
+            .unwrap_or_else(|_| TomlValue::Str(raw.to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_overrides_apply() {
+        let mut cfg = RunConfig::default_mnist();
+        let doc = toml::parse(
+            r#"
+[run]
+dataset = "cifar10"
+rounds = 123
+alpha = 0.3
+gamma = 0.01
+clients = 50
+"#,
+        )
+        .unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.dataset, DatasetKind::Cifar10);
+        assert_eq!(cfg.rounds, 123);
+        assert_eq!(cfg.dirichlet_alpha, 0.3);
+        assert_eq!(cfg.gamma, 0.01);
+        assert_eq!(cfg.n_clients, 50);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = RunConfig::default_mnist();
+        let doc = toml::parse("[run]\nwat = 1").unwrap();
+        let err = apply_toml(&mut cfg, &doc).unwrap_err();
+        assert!(err.to_string().contains("wat"));
+    }
+
+    #[test]
+    fn missing_run_table_is_noop() {
+        let mut cfg = RunConfig::default_mnist();
+        let rounds = cfg.rounds;
+        let doc = toml::parse("[other]\nx = 1").unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.rounds, rounds);
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let mut cfg = RunConfig::default_mnist();
+        let cmd = crate::cli::Command::new("train", "t")
+            .opt("rounds", "N", "")
+            .opt("alpha", "F", "")
+            .opt("dataset", "NAME", "");
+        let args = cmd
+            .parse(&[
+                "--rounds".into(),
+                "77".into(),
+                "--alpha".into(),
+                "0.1".into(),
+                "--dataset".into(),
+                "cifar10".into(),
+            ])
+            .unwrap();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.rounds, 77);
+        assert_eq!(cfg.dirichlet_alpha, 0.1);
+        assert_eq!(cfg.dataset, DatasetKind::Cifar10);
+    }
+}

@@ -1,0 +1,94 @@
+//! Named experiment presets.
+//!
+//! `paper-*` presets restore the paper's full §4 configuration (60k samples,
+//! 500/2500 rounds); `scaled-*` are the defaults sized for this CPU testbed
+//! (DESIGN.md §5 records the substitution). Select with `--preset`.
+
+use crate::data::DatasetKind;
+use crate::fed::RunConfig;
+
+pub fn by_name(name: &str) -> Option<RunConfig> {
+    match name {
+        "scaled-mnist" => Some(RunConfig::default_mnist()),
+        "scaled-cifar" => Some(RunConfig::default_cifar()),
+        "paper-mnist" => Some(RunConfig {
+            dataset: DatasetKind::Mnist,
+            train_n: 60_000,
+            test_n: 10_000,
+            n_clients: 100,
+            clients_per_round: 10,
+            dirichlet_alpha: 0.7,
+            rounds: 500,
+            p: 0.1,
+            local_steps: 10,
+            gamma: 0.05,
+            batch_size: 64,
+            eval_batch: 256,
+            eval_every: 10,
+            seed: 42,
+            tau: 0.01,
+            threads: 0,
+            data_dir: std::path::PathBuf::from("data"),
+        }),
+        "paper-cifar" => Some(RunConfig {
+            dataset: DatasetKind::Cifar10,
+            train_n: 50_000,
+            test_n: 10_000,
+            n_clients: 10,
+            clients_per_round: 10,
+            dirichlet_alpha: 0.7,
+            rounds: 2_500,
+            p: 0.1,
+            local_steps: 10,
+            gamma: 0.05,
+            batch_size: 32,
+            eval_batch: 128,
+            eval_every: 50,
+            seed: 42,
+            tau: 0.01,
+            threads: 0,
+            data_dir: std::path::PathBuf::from("data"),
+        }),
+        "smoke" => Some(RunConfig {
+            train_n: 1_000,
+            test_n: 200,
+            n_clients: 10,
+            clients_per_round: 3,
+            rounds: 5,
+            eval_every: 5,
+            ..RunConfig::default_mnist()
+        }),
+        _ => None,
+    }
+}
+
+pub fn names() -> &'static [&'static str] {
+    &["scaled-mnist", "scaled-cifar", "paper-mnist", "paper-cifar", "smoke"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_resolve() {
+        for name in names() {
+            let cfg = by_name(name).unwrap_or_else(|| panic!("{name}"));
+            assert!(cfg.rounds > 0);
+            assert!(cfg.clients_per_round <= cfg.n_clients);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn paper_presets_match_section_4() {
+        let m = by_name("paper-mnist").unwrap();
+        assert_eq!(m.rounds, 500);
+        assert_eq!(m.n_clients, 100);
+        assert_eq!(m.clients_per_round, 10);
+        assert_eq!(m.p, 0.1);
+        assert_eq!(m.dirichlet_alpha, 0.7);
+        let c = by_name("paper-cifar").unwrap();
+        assert_eq!(c.rounds, 2_500);
+    }
+}

@@ -1,0 +1,258 @@
+//! Dirichlet label-skew federated partitioning (paper §4 "Heterogeneous
+//! Setting", Appendix B.1; FedLab-style LDA partitioning).
+//!
+//! For each class c, draw proportions over the n clients from Dir(α·1_n)
+//! and split that class's examples accordingly. Smaller α ⇒ each class
+//! concentrates on fewer clients ⇒ more heterogeneity (Figure 11). α → ∞
+//! approaches a uniform IID split.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Partition result: per-client example indices into the source dataset.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub client_indices: Vec<Vec<usize>>,
+    pub alpha: f64,
+}
+
+impl Partition {
+    pub fn num_clients(&self) -> usize {
+        self.client_indices.len()
+    }
+
+    /// Per-client class histogram (rows: clients, cols: classes) — the data
+    /// behind the paper's Figure 11 visualization.
+    pub fn class_histogram(&self, data: &Dataset) -> Vec<Vec<usize>> {
+        self.client_indices
+            .iter()
+            .map(|idx| {
+                let mut h = vec![0usize; data.num_classes];
+                for &i in idx {
+                    h[data.labels[i] as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+
+    /// Mean (over clients) total-variation distance between the client's
+    /// class distribution and the global one — a scalar heterogeneity gauge
+    /// used in tests and data-stats output.
+    pub fn heterogeneity_tv(&self, data: &Dataset) -> f64 {
+        let global = data.class_counts();
+        let gtotal: usize = global.iter().sum();
+        let gdist: Vec<f64> = global.iter().map(|&c| c as f64 / gtotal as f64).collect();
+        let hists = self.class_histogram(data);
+        let mut acc = 0.0;
+        let mut counted = 0usize;
+        for h in &hists {
+            let total: usize = h.iter().sum();
+            if total == 0 {
+                continue;
+            }
+            let tv: f64 = h
+                .iter()
+                .zip(&gdist)
+                .map(|(&c, &g)| (c as f64 / total as f64 - g).abs())
+                .sum::<f64>()
+                / 2.0;
+            acc += tv;
+            counted += 1;
+        }
+        if counted == 0 {
+            0.0
+        } else {
+            acc / counted as f64
+        }
+    }
+}
+
+/// Dirichlet partition of `data` into `n_clients` shards.
+///
+/// Guarantees: every example is assigned exactly once; every client receives
+/// at least `min_per_client` examples (rebalanced from the largest shards —
+/// without this, tiny-α draws can leave clients empty, which would make the
+/// paper's 10-of-100 sampling degenerate).
+pub fn partition(
+    data: &Dataset,
+    n_clients: usize,
+    alpha: f64,
+    min_per_client: usize,
+    rng: &mut Rng,
+) -> Partition {
+    assert!(n_clients > 0);
+    assert!(alpha > 0.0, "Dirichlet alpha must be positive");
+    // Bucket example ids by class, shuffled.
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.num_classes];
+    for (i, &l) in data.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    for bucket in &mut by_class {
+        rng.shuffle(bucket);
+    }
+
+    let mut client_indices: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for bucket in &by_class {
+        if bucket.is_empty() {
+            continue;
+        }
+        let props = rng.dirichlet(alpha, n_clients);
+        // Largest-remainder allocation of bucket.len() items by props.
+        let n = bucket.len();
+        let mut alloc: Vec<usize> = props.iter().map(|&p| (p * n as f64).floor() as usize).collect();
+        let mut assigned: usize = alloc.iter().sum();
+        // Distribute the remainder to the largest fractional parts.
+        let mut frac: Vec<(f64, usize)> = props
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p * n as f64 - (p * n as f64).floor(), i))
+            .collect();
+        frac.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut fi = 0;
+        while assigned < n {
+            alloc[frac[fi % n_clients].1] += 1;
+            assigned += 1;
+            fi += 1;
+        }
+        let mut cursor = 0;
+        for (client, &take) in alloc.iter().enumerate() {
+            client_indices[client].extend_from_slice(&bucket[cursor..cursor + take]);
+            cursor += take;
+        }
+        debug_assert_eq!(cursor, n);
+    }
+
+    // Rebalance: top up clients below the floor from the largest shards.
+    let floor = min_per_client.min(data.len() / n_clients.max(1));
+    loop {
+        let (small_i, small_n) = client_indices
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (i, v.len()))
+            .min_by_key(|&(_, n)| n)
+            .unwrap();
+        if small_n >= floor {
+            break;
+        }
+        let (big_i, _) = client_indices
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (i, v.len()))
+            .max_by_key(|&(_, n)| n)
+            .unwrap();
+        let moved = client_indices[big_i].pop().expect("donor shard empty");
+        client_indices[small_i].push(moved);
+    }
+
+    for shard in &mut client_indices {
+        rng.shuffle(shard);
+    }
+    Partition {
+        client_indices,
+        alpha,
+    }
+}
+
+/// Render the Figure 11-style per-client class distribution as text (rows:
+/// first `max_clients` clients; one bar per class).
+pub fn render_histogram(partition: &Partition, data: &Dataset, max_clients: usize) -> String {
+    let hist = partition.class_histogram(data);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "client-class distribution (alpha={}, showing {} of {} clients)\n",
+        partition.alpha,
+        max_clients.min(hist.len()),
+        hist.len()
+    ));
+    for (c, h) in hist.iter().take(max_clients).enumerate() {
+        let total: usize = h.iter().sum();
+        out.push_str(&format!("client {c:>3} ({total:>5} ex): "));
+        for &count in h {
+            let frac = if total == 0 { 0.0 } else { count as f64 / total as f64 };
+            let bar = (frac * 20.0).round() as usize;
+            out.push_str(&format!("{:>4}|{}", count, "#".repeat(bar)));
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic, DatasetKind};
+
+    fn dataset(n: usize) -> Dataset {
+        let mut rng = Rng::seed_from_u64(9);
+        synthetic::generate(DatasetKind::Mnist, n, 10, &mut rng).train
+    }
+
+    #[test]
+    fn partition_covers_all_examples_once() {
+        let data = dataset(2000);
+        let mut rng = Rng::seed_from_u64(1);
+        let p = partition(&data, 100, 0.7, 5, &mut rng);
+        let mut seen = vec![false; data.len()];
+        for shard in &p.client_indices {
+            for &i in shard {
+                assert!(!seen[i], "example {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some examples unassigned");
+    }
+
+    #[test]
+    fn min_per_client_enforced() {
+        let data = dataset(2000);
+        let mut rng = Rng::seed_from_u64(2);
+        let p = partition(&data, 100, 0.1, 5, &mut rng);
+        assert!(p.client_indices.iter().all(|s| s.len() >= 5));
+    }
+
+    #[test]
+    fn smaller_alpha_is_more_heterogeneous() {
+        let data = dataset(4000);
+        let mut tvs = Vec::new();
+        for &alpha in &[0.1, 0.5, 1.0, 10.0, 1000.0] {
+            let mut rng = Rng::seed_from_u64(3);
+            let p = partition(&data, 20, alpha, 1, &mut rng);
+            tvs.push(p.heterogeneity_tv(&data));
+        }
+        // TV distance should decrease (weakly) as alpha grows.
+        for w in tvs.windows(2) {
+            assert!(
+                w[0] >= w[1] - 0.02,
+                "heterogeneity not monotone: {tvs:?}"
+            );
+        }
+        assert!(tvs[0] > 0.4, "alpha=0.1 should be very skewed: {tvs:?}");
+        assert!(*tvs.last().unwrap() < 0.15, "alpha=1000 nearly IID: {tvs:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = dataset(500);
+        let mut r1 = Rng::seed_from_u64(4);
+        let mut r2 = Rng::seed_from_u64(4);
+        let p1 = partition(&data, 10, 0.7, 1, &mut r1);
+        let p2 = partition(&data, 10, 0.7, 1, &mut r2);
+        assert_eq!(p1.client_indices, p2.client_indices);
+    }
+
+    #[test]
+    fn histogram_shape_and_render() {
+        let data = dataset(500);
+        let mut rng = Rng::seed_from_u64(5);
+        let p = partition(&data, 10, 0.3, 1, &mut rng);
+        let h = p.class_histogram(&data);
+        assert_eq!(h.len(), 10);
+        assert_eq!(h[0].len(), 10);
+        let total: usize = h.iter().flat_map(|r| r.iter()).sum();
+        assert_eq!(total, data.len());
+        let text = render_histogram(&p, &data, 5);
+        assert!(text.contains("client   0"));
+    }
+}

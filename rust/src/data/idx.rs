@@ -1,0 +1,224 @@
+//! Loaders for the real datasets' on-disk formats:
+//!
+//! * MNIST IDX (`train-images-idx3-ubyte`, `train-labels-idx1-ubyte`, and
+//!   the `t10k-*` pair), optionally `.gz`-less raw files only (no flate2
+//!   dependency on this path — the vendored flate2 belongs to `xla`'s build
+//!   graph; users should gunzip first, as the README notes);
+//! * CIFAR-10 binary batches (`data_batch_{1..5}.bin`, `test_batch.bin`),
+//!   3073-byte records: 1 label byte + 3×32×32 pixel bytes.
+//!
+//! When the files are absent, [`try_load`] returns `None` and the caller
+//! falls back to the synthetic generators.
+
+use super::{Dataset, DatasetKind, TrainTest};
+use std::io::Read;
+use std::path::Path;
+
+/// Attempt to load real data; `None` when files are missing/corrupt.
+pub fn try_load(
+    kind: DatasetKind,
+    dir: &Path,
+    train_n: usize,
+    test_n: usize,
+) -> Option<TrainTest> {
+    match kind {
+        DatasetKind::Mnist => {
+            let train = load_mnist_pair(
+                &dir.join("train-images-idx3-ubyte"),
+                &dir.join("train-labels-idx1-ubyte"),
+                train_n,
+            )?;
+            let test = load_mnist_pair(
+                &dir.join("t10k-images-idx3-ubyte"),
+                &dir.join("t10k-labels-idx1-ubyte"),
+                test_n,
+            )?;
+            Some(TrainTest { train, test })
+        }
+        DatasetKind::Cifar10 => {
+            let train_files: Vec<_> = (1..=5)
+                .map(|i| dir.join(format!("data_batch_{i}.bin")))
+                .collect();
+            let train = load_cifar_batches(&train_files, train_n)?;
+            let test = load_cifar_batches(&[dir.join("test_batch.bin")], test_n)?;
+            Some(TrainTest { train, test })
+        }
+    }
+}
+
+fn read_all(path: &Path) -> Option<Vec<u8>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path).ok()?.read_to_end(&mut buf).ok()?;
+    Some(buf)
+}
+
+fn be_u32(b: &[u8], off: usize) -> Option<u32> {
+    Some(u32::from_be_bytes([
+        *b.get(off)?,
+        *b.get(off + 1)?,
+        *b.get(off + 2)?,
+        *b.get(off + 3)?,
+    ]))
+}
+
+/// Parse an IDX3 image file + IDX1 label file into a Dataset (pixels → [0,1]).
+fn load_mnist_pair(images: &Path, labels: &Path, limit: usize) -> Option<Dataset> {
+    let img = read_all(images)?;
+    let lab = read_all(labels)?;
+    if be_u32(&img, 0)? != 0x0000_0803 || be_u32(&lab, 0)? != 0x0000_0801 {
+        log::warn!("bad IDX magic in {} / {}", images.display(), labels.display());
+        return None;
+    }
+    let n_img = be_u32(&img, 4)? as usize;
+    let rows = be_u32(&img, 8)? as usize;
+    let cols = be_u32(&img, 12)? as usize;
+    let n_lab = be_u32(&lab, 4)? as usize;
+    if rows != 28 || cols != 28 || n_img != n_lab {
+        return None;
+    }
+    let n = n_img.min(limit.max(1));
+    let dim = rows * cols;
+    if img.len() < 16 + n * dim || lab.len() < 8 + n {
+        return None;
+    }
+    let features: Vec<f32> = img[16..16 + n * dim]
+        .iter()
+        .map(|&b| b as f32 / 255.0)
+        .collect();
+    let labels_v: Vec<u8> = lab[8..8 + n].to_vec();
+    if labels_v.iter().any(|&l| l > 9) {
+        return None;
+    }
+    Some(Dataset {
+        kind: DatasetKind::Mnist,
+        features,
+        labels: labels_v,
+        feature_dim: dim,
+        num_classes: 10,
+    })
+}
+
+/// Parse CIFAR-10 binary batches (label byte + 3072 pixel bytes per record).
+fn load_cifar_batches(paths: &[std::path::PathBuf], limit: usize) -> Option<Dataset> {
+    const REC: usize = 3073;
+    let mut features = Vec::new();
+    let mut labels = Vec::new();
+    for path in paths {
+        let buf = read_all(path)?;
+        if buf.len() % REC != 0 {
+            return None;
+        }
+        for rec in buf.chunks_exact(REC) {
+            if labels.len() >= limit {
+                break;
+            }
+            let label = rec[0];
+            if label > 9 {
+                return None;
+            }
+            labels.push(label);
+            features.extend(rec[1..].iter().map(|&b| b as f32 / 255.0));
+        }
+    }
+    if labels.is_empty() {
+        return None;
+    }
+    Some(Dataset {
+        kind: DatasetKind::Cifar10,
+        features,
+        labels,
+        feature_dim: 3072,
+        num_classes: 10,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_idx_pair(dir: &Path, prefix: &str, n: usize) {
+        let mut img = Vec::new();
+        img.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        for i in 0..n * 784 {
+            img.push((i % 251) as u8);
+        }
+        let mut lab = Vec::new();
+        lab.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        lab.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            lab.push((i % 10) as u8);
+        }
+        std::fs::File::create(dir.join(format!("{prefix}-images-idx3-ubyte")))
+            .unwrap()
+            .write_all(&img)
+            .unwrap();
+        std::fs::File::create(dir.join(format!("{prefix}-labels-idx1-ubyte")))
+            .unwrap()
+            .write_all(&lab)
+            .unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedcomloc_idx_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_synthetic_idx_files() {
+        let dir = tmpdir("mnist");
+        write_idx_pair(&dir, "train", 50);
+        write_idx_pair(&dir, "t10k", 20);
+        let tt = try_load(DatasetKind::Mnist, &dir, 40, 20).unwrap();
+        assert_eq!(tt.train.len(), 40); // truncated to limit
+        assert_eq!(tt.test.len(), 20);
+        assert_eq!(tt.train.labels[3], 3);
+        assert!((tt.train.features[1] - 1.0 / 255.0).abs() < 1e-6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_files_return_none() {
+        assert!(try_load(DatasetKind::Mnist, Path::new("/nonexistent"), 10, 10).is_none());
+        assert!(try_load(DatasetKind::Cifar10, Path::new("/nonexistent"), 10, 10).is_none());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = tmpdir("badmagic");
+        std::fs::write(dir.join("train-images-idx3-ubyte"), [0u8; 32]).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), [0u8; 16]).unwrap();
+        assert!(try_load(DatasetKind::Mnist, &dir, 10, 10).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn loads_cifar_binary() {
+        let dir = tmpdir("cifar");
+        for b in 1..=5 {
+            let mut buf = Vec::new();
+            for rec in 0..10 {
+                buf.push((rec % 10) as u8);
+                buf.extend(std::iter::repeat(128u8).take(3072));
+            }
+            std::fs::write(dir.join(format!("data_batch_{b}.bin")), &buf).unwrap();
+        }
+        let mut buf = Vec::new();
+        for rec in 0..10 {
+            buf.push((rec % 10) as u8);
+            buf.extend(std::iter::repeat(64u8).take(3072));
+        }
+        std::fs::write(dir.join("test_batch.bin"), &buf).unwrap();
+        let tt = try_load(DatasetKind::Cifar10, &dir, 30, 10).unwrap();
+        assert_eq!(tt.train.len(), 30);
+        assert_eq!(tt.test.len(), 10);
+        assert_eq!(tt.train.feature_dim, 3072);
+        assert!((tt.test.features[0] - 64.0 / 255.0).abs() < 1e-6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,135 @@
+//! Dataset substrate: in-memory classification datasets, federated
+//! Dirichlet partitioning, and per-client batch loading.
+//!
+//! The paper evaluates on FedMNIST (MLP) and FedCIFAR10 (CNN) distributed
+//! over 100 clients by a Dirichlet label-skew model (§4, Appendix A/B.1).
+//! This environment has no network access, so the default datasets are
+//! deterministic *synthetic* equivalents with identical shapes and class
+//! structure (see [`synthetic`] and DESIGN.md §5); when real MNIST IDX /
+//! CIFAR-10 binary files are present under `data/`, [`idx`] loads those
+//! instead ([`load_or_synthesize`]).
+
+pub mod dirichlet;
+pub mod idx;
+pub mod loader;
+pub mod synthetic;
+
+use crate::util::rng::Rng;
+
+/// Which benchmark family a dataset mimics (decides shapes and the model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 1×28×28 grayscale, 10 classes (MNIST-shaped; MLP model).
+    Mnist,
+    /// 3×32×32 color, 10 classes (CIFAR10-shaped; CNN model).
+    Cifar10,
+}
+
+impl DatasetKind {
+    pub fn feature_dim(self) -> usize {
+        match self {
+            DatasetKind::Mnist => 28 * 28,
+            DatasetKind::Cifar10 => 3 * 32 * 32,
+        }
+    }
+
+    pub fn num_classes(self) -> usize {
+        10
+    }
+
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "mnist" | "fedmnist" => Some(DatasetKind::Mnist),
+            "cifar" | "cifar10" | "fedcifar10" => Some(DatasetKind::Cifar10),
+            _ => None,
+        }
+    }
+}
+
+/// A dense in-memory labelled dataset (row-major features).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub features: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub feature_dim: usize,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn example(&self, i: usize) -> (&[f32], u8) {
+        let lo = i * self.feature_dim;
+        (&self.features[lo..lo + self.feature_dim], self.labels[i])
+    }
+
+    /// Per-class counts (used by `data-stats` / Figure 11 reproduction).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Train/test pair.
+#[derive(Debug, Clone)]
+pub struct TrainTest {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Load real data from `data_dir` if the well-known files exist, otherwise
+/// synthesize (the default in this offline environment). `train_n`/`test_n`
+/// bound the sizes (real data is truncated; synthetic is generated at
+/// exactly these sizes).
+pub fn load_or_synthesize(
+    kind: DatasetKind,
+    data_dir: &std::path::Path,
+    train_n: usize,
+    test_n: usize,
+    seed: u64,
+) -> TrainTest {
+    if let Some(real) = idx::try_load(kind, data_dir, train_n, test_n) {
+        log::info!("loaded real {kind:?} from {}", data_dir.display());
+        return real;
+    }
+    let mut rng = Rng::seed_from_u64(seed);
+    synthetic::generate(kind, train_n, test_n, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_shapes() {
+        assert_eq!(DatasetKind::Mnist.feature_dim(), 784);
+        assert_eq!(DatasetKind::Cifar10.feature_dim(), 3072);
+        assert_eq!(DatasetKind::parse("FedMNIST"), Some(DatasetKind::Mnist));
+        assert_eq!(DatasetKind::parse("cifar10"), Some(DatasetKind::Cifar10));
+        assert_eq!(DatasetKind::parse("imagenet"), None);
+    }
+
+    #[test]
+    fn load_or_synthesize_falls_back() {
+        let tt = load_or_synthesize(
+            DatasetKind::Mnist,
+            std::path::Path::new("/nonexistent"),
+            200,
+            50,
+            1,
+        );
+        assert_eq!(tt.train.len(), 200);
+        assert_eq!(tt.test.len(), 50);
+        assert_eq!(tt.train.feature_dim, 784);
+    }
+}

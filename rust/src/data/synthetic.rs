@@ -1,0 +1,267 @@
+//! Deterministic synthetic stand-ins for MNIST / CIFAR-10.
+//!
+//! The paper's experiments need a 10-class image dataset whose federated
+//! partitions produce heterogeneous, learnable local objectives. We build
+//! class-conditional generative models with enough intra-class variation
+//! that the tasks are non-trivial (a linear model does not saturate them)
+//! yet cheap to generate:
+//!
+//! * each class has `MODES` sub-prototypes, smooth low-frequency random
+//!   fields (sums of 2-D cosines with class-specific spectra) — this gives
+//!   images local spatial correlation like natural digits/photos;
+//! * a sample picks a mode, scales it by a random amplitude, applies a
+//!   small random translation (±2 px), and adds pixel noise;
+//! * CIFAR-like data correlates the three channels through a class hue.
+//!
+//! Pixel range is [0, 1] after the same normalization the real loaders use,
+//! so model code is agnostic to which source produced the data.
+
+use super::{Dataset, DatasetKind, TrainTest};
+use crate::util::rng::Rng;
+
+const MODES: usize = 3;
+
+/// Class-conditional generator parameters for one (class, mode) pair.
+struct Prototype {
+    /// Full-resolution single-channel field in [0,1].
+    field: Vec<f32>,
+    side: usize,
+}
+
+fn make_prototype(side: usize, rng: &mut Rng) -> Prototype {
+    // Sum of random low-frequency cosines: smooth blobs, distinct per draw.
+    let waves = 6;
+    let params: Vec<(f32, f32, f32, f32)> = (0..waves)
+        .map(|_| {
+            (
+                rng.uniform_range(0.5, 3.5) as f32,                    // fx
+                rng.uniform_range(0.5, 3.5) as f32,                    // fy
+                rng.uniform_range(0.0, std::f64::consts::TAU) as f32,  // phase
+                rng.uniform_range(0.4, 1.0) as f32,                    // amplitude
+            )
+        })
+        .collect();
+    let mut field = vec![0.0f32; side * side];
+    let mut lo = f32::MAX;
+    let mut hi = f32::MIN;
+    for y in 0..side {
+        for x in 0..side {
+            let (u, v) = (x as f32 / side as f32, y as f32 / side as f32);
+            let mut s = 0.0;
+            for &(fx, fy, ph, amp) in &params {
+                s += amp * (std::f32::consts::TAU * (fx * u + fy * v) + ph).cos();
+            }
+            field[y * side + x] = s;
+            lo = lo.min(s);
+            hi = hi.max(s);
+        }
+    }
+    let span = (hi - lo).max(1e-6);
+    for p in &mut field {
+        *p = (*p - lo) / span;
+    }
+    Prototype { field, side }
+}
+
+impl Prototype {
+    /// Sample the field at (x, y) with an integer translation, clamped.
+    #[inline]
+    fn at(&self, x: i32, y: i32) -> f32 {
+        let cx = x.clamp(0, self.side as i32 - 1) as usize;
+        let cy = y.clamp(0, self.side as i32 - 1) as usize;
+        self.field[cy * self.side + cx]
+    }
+}
+
+/// Generate a train/test pair. Labels are balanced (round-robin) before
+/// shuffling so Dirichlet partitions see the full class palette.
+pub fn generate(kind: DatasetKind, train_n: usize, test_n: usize, rng: &mut Rng) -> TrainTest {
+    let classes = kind.num_classes();
+    let (side, channels) = match kind {
+        DatasetKind::Mnist => (28usize, 1usize),
+        DatasetKind::Cifar10 => (32usize, 3usize),
+    };
+    // Build the generator bank once from a derived stream so train and test
+    // come from the *same* distribution.
+    let mut proto_rng = rng.derive(0xB10B);
+    let protos: Vec<Vec<Prototype>> = (0..classes)
+        .map(|_| (0..MODES).map(|_| make_prototype(side, &mut proto_rng)).collect())
+        .collect();
+    // Class hue rotation for multi-channel data.
+    let hues: Vec<[f32; 3]> = (0..classes)
+        .map(|c| {
+            let theta = c as f32 / classes as f32 * std::f32::consts::TAU;
+            [
+                0.6 + 0.4 * theta.cos(),
+                0.6 + 0.4 * (theta + 2.1).cos(),
+                0.6 + 0.4 * (theta + 4.2).cos(),
+            ]
+        })
+        .collect();
+
+    let make_split = |n: usize, rng: &mut Rng| -> Dataset {
+        let dim = kind.feature_dim();
+        let mut features = vec![0.0f32; n * dim];
+        let mut labels = vec![0u8; n];
+        // Balanced labels, then shuffle example order.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for (slot, &i) in order.iter().enumerate() {
+            let class = slot % classes;
+            labels[i] = class as u8;
+            let proto = &protos[class][rng.below_usize(MODES)];
+            let amp = rng.uniform_range(0.7, 1.3) as f32;
+            let (dx, dy) = (
+                rng.below(5) as i32 - 2, // ±2 px translation
+                rng.below(5) as i32 - 2,
+            );
+            let noise_std = 0.12f32;
+            let base = i * dim;
+            for ch in 0..channels {
+                let gain = if channels == 1 { 1.0 } else { hues[class][ch] };
+                for y in 0..side {
+                    for x in 0..side {
+                        let v = proto.at(x as i32 + dx, y as i32 + dy) * amp * gain
+                            + rng.normal_f32(0.0, noise_std);
+                        features[base + ch * side * side + y * side + x] = v.clamp(0.0, 1.0);
+                    }
+                }
+            }
+        }
+        Dataset {
+            kind,
+            features,
+            labels,
+            feature_dim: dim,
+            num_classes: classes,
+        }
+    };
+
+    let mut train_rng = rng.derive(0x7124);
+    let mut test_rng = rng.derive(0x7E57);
+    TrainTest {
+        train: make_split(train_n, &mut train_rng),
+        test: make_split(test_n, &mut test_rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(kind: DatasetKind, n: usize) -> TrainTest {
+        let mut rng = Rng::seed_from_u64(42);
+        generate(kind, n, n / 4, &mut rng)
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let tt = gen(DatasetKind::Mnist, 400);
+        assert_eq!(tt.train.len(), 400);
+        assert_eq!(tt.train.features.len(), 400 * 784);
+        assert!(tt.train.features.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(tt.train.labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let tt = gen(DatasetKind::Mnist, 1000);
+        let counts = tt.train.class_counts();
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gen(DatasetKind::Mnist, 100);
+        let b = gen(DatasetKind::Mnist, 100);
+        assert_eq!(a.train.features, b.train.features);
+        assert_eq!(a.train.labels, b.train.labels);
+    }
+
+    #[test]
+    fn classes_are_separable_by_centroid() {
+        // A nearest-class-centroid classifier on train centroids must beat
+        // chance by a wide margin on test — i.e. the task is learnable.
+        let tt = gen(DatasetKind::Mnist, 2000);
+        let d = tt.train.feature_dim;
+        let mut centroids = vec![vec![0.0f64; d]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..tt.train.len() {
+            let (x, y) = tt.train.example(i);
+            counts[y as usize] += 1;
+            for (c, &v) in centroids[y as usize].iter_mut().zip(x) {
+                *c += v as f64;
+            }
+        }
+        for (c, n) in centroids.iter_mut().zip(counts) {
+            c.iter_mut().for_each(|v| *v /= n as f64);
+        }
+        let mut correct = 0;
+        for i in 0..tt.test.len() {
+            let (x, y) = tt.test.example(i);
+            let pred = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = centroids[a]
+                        .iter()
+                        .zip(x)
+                        .map(|(c, &v)| (c - v as f64).powi(2))
+                        .sum();
+                    let db: f64 = centroids[b]
+                        .iter()
+                        .zip(x)
+                        .map(|(c, &v)| (c - v as f64).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if pred == y as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / tt.test.len() as f64;
+        assert!(acc > 0.5, "centroid accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn not_trivially_constant_within_class() {
+        // Within-class variance must be non-negligible (modes + noise),
+        // otherwise the FL dynamics would be unrealistically easy.
+        let tt = gen(DatasetKind::Mnist, 500);
+        let (x0, y0) = tt.train.example(0);
+        let mut max_dist = 0.0f32;
+        for i in 1..tt.train.len() {
+            let (xi, yi) = tt.train.example(i);
+            if yi == y0 {
+                let dist = crate::tensor::l2_distance(x0, xi);
+                max_dist = max_dist.max(dist);
+            }
+        }
+        assert!(max_dist > 1.0, "within-class spread too small: {max_dist}");
+    }
+
+    #[test]
+    fn cifar_has_three_correlated_channels() {
+        let tt = gen(DatasetKind::Cifar10, 100);
+        assert_eq!(tt.train.feature_dim, 3072);
+        let (x, _) = tt.train.example(0);
+        let (r, g) = (&x[0..1024], &x[1024..2048]);
+        // channels share the spatial field -> strongly correlated
+        let corr = correlation(r, g);
+        assert!(corr > 0.3, "channel correlation {corr}");
+    }
+
+    fn correlation(a: &[f32], b: &[f32]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for (&x, &y) in a.iter().zip(b) {
+            cov += (x as f64 - ma) * (y as f64 - mb);
+            va += (x as f64 - ma).powi(2);
+            vb += (y as f64 - mb).powi(2);
+        }
+        cov / (va.sqrt() * vb.sqrt()).max(1e-12)
+    }
+}

@@ -1,0 +1,107 @@
+//! Figure 9: FedComLoc variants vs FedAvg / sparseFedAvg / Scaffold / FedDyn.
+//!
+//! Left panel: compressed methods (sparseFedAvg at γ=0.1 vs FedComLoc at the
+//! lower γ=0.05, as in §4.7). Right panel: uncompressed FedAvg vs Scaffold
+//! vs FedDyn vs FedComLoc at a shared γ.
+
+use super::ExpOptions;
+use crate::compress::{Identity, TopK};
+use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::model::ModelKind;
+
+pub const DENSITY: f64 = 0.30;
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let trainer = opts.make_trainer(ModelKind::Mlp);
+
+    println!("\n=== Figure 9 (left): compressed methods ===");
+    // sparseFedAvg at γ=0.1; FedComLoc variants at γ=0.05 (paper §4.7).
+    let runs: Vec<(&str, f32, AlgorithmSpec)> = vec![
+        (
+            "sparseFedAvg",
+            0.1,
+            AlgorithmSpec::FedAvg {
+                compressor: Box::new(TopK::with_density(DENSITY)),
+            },
+        ),
+        (
+            "FedComLoc-Com",
+            0.05,
+            AlgorithmSpec::FedComLoc {
+                variant: Variant::Com,
+                compressor: Box::new(TopK::with_density(DENSITY)),
+            },
+        ),
+        (
+            "FedComLoc-Local",
+            0.05,
+            AlgorithmSpec::FedComLoc {
+                variant: Variant::Local,
+                compressor: Box::new(TopK::with_density(DENSITY)),
+            },
+        ),
+        (
+            "FedComLoc-Global",
+            0.05,
+            AlgorithmSpec::FedComLoc {
+                variant: Variant::Global,
+                compressor: Box::new(TopK::with_density(DENSITY)),
+            },
+        ),
+    ];
+    report(opts, &trainer, runs, "fig9-left")?;
+
+    println!("\n=== Figure 9 (right): uncompressed methods, shared γ ===");
+    let gamma = 0.05; // paper uses a uniform small rate for this panel
+    let runs: Vec<(&str, f32, AlgorithmSpec)> = vec![
+        (
+            "FedAvg",
+            gamma,
+            AlgorithmSpec::FedAvg {
+                compressor: Box::new(Identity),
+            },
+        ),
+        ("Scaffold", gamma, AlgorithmSpec::Scaffold),
+        ("FedDyn", gamma, AlgorithmSpec::FedDyn { alpha: 0.01 }),
+        (
+            "FedComLoc",
+            gamma,
+            AlgorithmSpec::FedComLoc {
+                variant: Variant::Com,
+                compressor: Box::new(Identity),
+            },
+        ),
+    ];
+    report(opts, &trainer, runs, "fig9-right")?;
+    Ok(())
+}
+
+fn report(
+    opts: &ExpOptions,
+    trainer: &std::sync::Arc<dyn crate::model::LocalTrainer>,
+    runs: Vec<(&str, f32, AlgorithmSpec)>,
+    tag: &str,
+) -> anyhow::Result<()> {
+    println!(
+        "{:<18}{:>8}{:>12}{:>12}{:>16}{:>16}",
+        "method", "γ", "best_acc", "final_loss", "uplink_bits", "rounds_to_60%"
+    );
+    for (name, gamma, spec) in runs {
+        let cfg = RunConfig {
+            gamma,
+            ..opts.scale_cfg(RunConfig::default_mnist())
+        };
+        log::info!("{tag}: {name}");
+        let log = fed_run(&cfg, trainer.clone(), &spec);
+        let acc = log.best_accuracy().unwrap_or(0.0);
+        let loss = log.final_train_loss().unwrap_or(f64::NAN);
+        let bits = log.total_uplink_bits();
+        let to60 = log
+            .rounds_to_accuracy(0.60)
+            .map(|(r, _)| r.to_string())
+            .unwrap_or_else(|| "-".into());
+        opts.save(tag, &log);
+        println!("{name:<18}{gamma:>8}{acc:>12.4}{loss:>12.4}{bits:>16}{to60:>16}");
+    }
+    Ok(())
+}

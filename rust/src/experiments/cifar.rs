@@ -1,0 +1,74 @@
+//! Figure 3: CNN on FedCIFAR10 — density sweep with tuned vs fixed stepsize.
+//!
+//! Left columns of the paper's figure tune γ per density from the §4.3 grid;
+//! the right columns fix γ = 0.01 (the maximum stepsize that converges for
+//! every configuration). The tuned sweep here uses a reduced grid to stay
+//! inside the testbed budget; `--scale`/presets widen it.
+
+use super::ExpOptions;
+use crate::compress::{Identity, TopK};
+use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::model::ModelKind;
+
+pub const DENSITIES: [f64; 4] = [1.0, 0.10, 0.30, 0.50];
+pub const TUNE_GRID: [f32; 3] = [0.01, 0.05, 0.1];
+pub const FIXED_GAMMA: f32 = 0.01;
+
+fn spec_for(density: f64) -> AlgorithmSpec {
+    AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: if density >= 1.0 {
+            Box::new(Identity)
+        } else {
+            Box::new(TopK::with_density(density))
+        },
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let trainer = opts.make_trainer(ModelKind::Cnn);
+    println!("\n=== Figure 3: CNN on FedCIFAR10 ===");
+
+    println!("\n-- tuned stepsize (grid {TUNE_GRID:?}) --");
+    let mut tuned_rows = Vec::new();
+    for &density in &DENSITIES {
+        let mut best: Option<(f32, f64, u64)> = None;
+        for &gamma in &TUNE_GRID {
+            let cfg = RunConfig {
+                gamma,
+                ..opts.scale_cfg(RunConfig::default_cifar())
+            };
+            log::info!("fig3 tuned: density {density} gamma {gamma}");
+            let log = fed_run(&cfg, trainer.clone(), &spec_for(density));
+            let acc = log.best_accuracy().unwrap_or(0.0);
+            opts.save("fig3", &log);
+            if best.is_none() || acc > best.unwrap().1 {
+                best = Some((gamma, acc, log.total_uplink_bits()));
+            }
+        }
+        let (gamma, acc, bits) = best.unwrap();
+        println!(
+            "  K={:>4.0}%  best γ={gamma}  acc={acc:.4}  uplink_bits={bits}",
+            density * 100.0
+        );
+        tuned_rows.push((density, acc));
+    }
+
+    println!("\n-- fixed stepsize γ={FIXED_GAMMA} --");
+    for &density in &DENSITIES {
+        let cfg = RunConfig {
+            gamma: FIXED_GAMMA,
+            ..opts.scale_cfg(RunConfig::default_cifar())
+        };
+        log::info!("fig3 fixed: density {density}");
+        let log = fed_run(&cfg, trainer.clone(), &spec_for(density));
+        let acc = log.best_accuracy().unwrap_or(0.0);
+        let loss = log.final_train_loss().unwrap_or(f64::NAN);
+        opts.save("fig3-fixed", &log);
+        println!(
+            "  K={:>4.0}%  acc={acc:.4}  final_loss={loss:.4}",
+            density * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Figure 10 (variant ablation) and Figure 16 (double compression).
+
+use super::ExpOptions;
+use crate::compress::{DoubleCompress, QuantizeR, TopK};
+use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::model::ModelKind;
+
+/// Figure 10: -Com vs -Local vs -Global across densities on FedCIFAR10.
+pub fn run_variants(opts: &ExpOptions) -> anyhow::Result<()> {
+    let trainer = opts.make_trainer(ModelKind::Cnn);
+    println!("\n=== Figure 10: FedComLoc variant ablation (FedCIFAR10) ===");
+    println!(
+        "{:<10}{:>12}{:>12}{:>12}",
+        "K", "Com", "Local", "Global"
+    );
+    for &density in &[0.10f64, 0.30, 0.90] {
+        let mut row = Vec::new();
+        for variant in [Variant::Com, Variant::Local, Variant::Global] {
+            let cfg = opts.scale_cfg(RunConfig::default_cifar());
+            let spec = AlgorithmSpec::FedComLoc {
+                variant,
+                compressor: Box::new(TopK::with_density(density)),
+            };
+            log::info!("fig10: K={density} variant={}", variant.name());
+            let log = fed_run(&cfg, trainer.clone(), &spec);
+            let acc = log.best_accuracy().unwrap_or(0.0);
+            opts.save("fig10", &log);
+            row.push(acc);
+        }
+        println!(
+            "{:<10}{:>12.4}{:>12.4}{:>12.4}",
+            format!("{:.0}%", density * 100.0),
+            row[0],
+            row[1],
+            row[2]
+        );
+    }
+    println!("(paper: -Local tends to win at high sparsity; -Com beats -Global at low sparsity)");
+    Ok(())
+}
+
+/// Figure 16: TopK∘Q_r double compression vs single compression on FedMNIST.
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let trainer = opts.make_trainer(ModelKind::Mlp);
+    println!("\n=== Figure 16: double compression (TopK then Q_r, FedMNIST) ===");
+    let cases: Vec<(String, Box<dyn crate::compress::Compressor>)> = vec![
+        ("K=25% + 4bit".into(), Box::new(DoubleCompress::new(0.25, 4))),
+        ("K=50% + 16bit".into(), Box::new(DoubleCompress::new(0.50, 16))),
+        ("K=25% + 32bit".into(), Box::new(TopK::with_density(0.25))),
+        ("K=100% + 4bit".into(), Box::new(QuantizeR::new(4))),
+        ("K=100% + 32bit".into(), Box::new(crate::compress::Identity)),
+    ];
+    println!(
+        "{:<16}{:>12}{:>16}{:>18}",
+        "config", "best_acc", "uplink_bits", "bits/round/client"
+    );
+    for (label, compressor) in cases {
+        let cfg = opts.scale_cfg(RunConfig::default_mnist());
+        let spec = AlgorithmSpec::FedComLoc {
+            variant: Variant::Com,
+            compressor,
+        };
+        log::info!("fig16: {label}");
+        let log = fed_run(&cfg, trainer.clone(), &spec);
+        let acc = log.best_accuracy().unwrap_or(0.0);
+        let bits = log.total_uplink_bits();
+        let per = log.records.first().map(|r| r.uplink_bits / cfg.clients_per_round as u64).unwrap_or(0);
+        opts.save("fig16", &log);
+        println!("{label:<16}{acc:>12.4}{bits:>16}{per:>18}");
+    }
+    println!("(paper: higher double compression wins per-bit; at matched compression, no clear winner)");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Figures 5/15 (quantization sweep) and 7/14 (quantization × heterogeneity).
+//!
+//! Q_r with r ∈ {4, 8, 16, 32} via FedComLoc-Com on FedMNIST (Fig 5) and
+//! FedCIFAR10 (Fig 15); then r ∈ {8, 16} across Dirichlet α (Figs 7/14).
+
+use super::ExpOptions;
+use crate::compress::QuantizeR;
+use crate::data::DatasetKind;
+use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::model::ModelKind;
+
+pub const BITS: [u32; 4] = [4, 8, 16, 32];
+pub const HET_BITS: [u32; 2] = [8, 16];
+pub const HET_ALPHAS: [f64; 4] = [0.1, 0.3, 0.7, 0.9];
+
+fn spec_for(bits: u32) -> AlgorithmSpec {
+    AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(QuantizeR::new(bits)),
+    }
+}
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    // ---- Figure 5: FedMNIST sweep ----
+    let trainer = opts.make_trainer(ModelKind::Mlp);
+    println!("\n=== Figure 5: quantization Q_r on FedMNIST ===");
+    let mut base_acc = None;
+    for &bits in &BITS {
+        let cfg = opts.scale_cfg(RunConfig::default_mnist());
+        log::info!("fig5: r={bits}");
+        let log = fed_run(&cfg, trainer.clone(), &spec_for(bits));
+        let acc = log.best_accuracy().unwrap_or(0.0);
+        let bits_total = log.total_uplink_bits();
+        opts.save("fig5", &log);
+        if bits == 32 {
+            base_acc = Some(acc);
+        }
+        println!("  r={bits:>2}  acc={acc:.4}  uplink_bits={bits_total}");
+    }
+    if let Some(b) = base_acc {
+        println!("  (decrease vs r=32 shown in EXPERIMENTS.md; baseline {b:.4})");
+    }
+
+    // ---- Figures 7/14: heterogeneity ablation ----
+    println!("\n=== Figures 7/14: Q_r × Dirichlet α (FedMNIST) ===");
+    for &bits in &HET_BITS {
+        for &alpha in &HET_ALPHAS {
+            let cfg = RunConfig {
+                dirichlet_alpha: alpha,
+                ..opts.scale_cfg(RunConfig::default_mnist())
+            };
+            log::info!("fig7: r={bits} alpha={alpha}");
+            let log = fed_run(&cfg, trainer.clone(), &spec_for(bits));
+            let acc = log.best_accuracy().unwrap_or(0.0);
+            opts.save("fig7", &log);
+            println!("  r={bits:>2} α={alpha}  acc={acc:.4}");
+        }
+    }
+
+    // ---- Figure 15: FedCIFAR10 sweep ----
+    println!("\n=== Figure 15: quantization Q_r on FedCIFAR10 ===");
+    let trainer = opts.make_trainer(ModelKind::Cnn);
+    for &bits in &BITS {
+        let cfg = RunConfig {
+            dataset: DatasetKind::Cifar10,
+            ..opts.scale_cfg(RunConfig::default_cifar())
+        };
+        log::info!("fig15: r={bits}");
+        let log = fed_run(&cfg, trainer.clone(), &spec_for(bits));
+        let acc = log.best_accuracy().unwrap_or(0.0);
+        opts.save("fig15", &log);
+        println!("  r={bits:>2}  acc={acc:.4}  uplink_bits={}", log.total_uplink_bits());
+    }
+    Ok(())
+}

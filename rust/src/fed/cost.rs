@@ -1,0 +1,37 @@
+//! Total-cost model (paper §4.5, Figure 8).
+//!
+//! "A communication round has unit cost while a local training round has
+//! cost τ. In a realistic FL system, τ is typically much less than 1, as the
+//! primary bottleneck is often communication" — the paper sets τ = 0.01.
+
+/// total = communication_rounds · 1 + local_iterations · τ
+pub fn total_cost(comm_rounds: u64, local_iterations: u64, tau: f64) -> f64 {
+    comm_rounds as f64 + local_iterations as f64 * tau
+}
+
+/// Expected total cost of T Scaffnew iterations at communication
+/// probability p: T·p communication rounds + T local iterations · τ.
+/// Used by the Fig. 8 bench to cross-check measured against expected cost.
+pub fn expected_scaffnew_cost(iterations: u64, p: f64, tau: f64) -> f64 {
+    iterations as f64 * p + iterations as f64 * tau
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_costs() {
+        assert_eq!(total_cost(10, 100, 0.01), 10.0 + 1.0);
+        assert_eq!(total_cost(0, 0, 0.5), 0.0);
+    }
+
+    #[test]
+    fn smaller_p_trades_comm_for_local() {
+        // Same iteration budget: p=0.05 has half the comm cost of p=0.1.
+        let a = expected_scaffnew_cost(1000, 0.05, 0.01);
+        let b = expected_scaffnew_cost(1000, 0.1, 0.01);
+        assert!(a < b);
+        assert!((b - a - 50.0).abs() < 1e-9);
+    }
+}

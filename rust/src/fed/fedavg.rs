@@ -1,0 +1,81 @@
+//! FedAvg (McMahan et al., 2016/2017) and sparseFedAvg (paper §4.7).
+//!
+//! Round shape: sample S_r; broadcast x; each client runs E local SGD steps
+//! (no control variates — h is ignored by passing zeros); clients upload
+//! their model (TopK-compressed for sparseFedAvg, exactly mirroring
+//! FedComLoc-Com's wire format so the Fig. 9 bits-axis comparison is
+//! apples-to-apples); server averages.
+
+use super::transport::send_through;
+use super::{Federation, RoundLogger, RunConfig};
+use crate::compress::Compressor;
+use crate::metrics::MetricsLog;
+
+pub fn run(cfg: &RunConfig, fed: &mut Federation, compressor: &dyn Compressor) -> MetricsLog {
+    let algo = if compressor.name() == "identity" {
+        "fedavg".to_string()
+    } else {
+        format!("sparsefedavg[{}]", compressor.name())
+    };
+    let name = format!("{algo}-{}-a{}", fed.model.name(), cfg.dirichlet_alpha);
+    let log = MetricsLog::new(&name)
+        .with_meta("algorithm", algo)
+        .with_meta("gamma", cfg.gamma)
+        .with_meta("local_steps", cfg.local_steps)
+        .with_meta("alpha", cfg.dirichlet_alpha);
+    let mut logger = RoundLogger::new(cfg, log);
+    let dim = fed.x.len();
+    let zeros = vec![0.0f32; dim];
+
+    for round in 0..cfg.rounds {
+        logger.begin_round();
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let mut usage = super::transport::WireUsage::default();
+        for _ in &sampled {
+            usage.add_downlink(crate::compress::dense_bits(dim));
+        }
+
+        let x = fed.x.clone();
+        let trainer = &fed.trainer;
+        let clients = &fed.clients;
+        let gamma = cfg.gamma;
+        let local_steps = cfg.local_steps;
+        let zeros_ref = &zeros;
+        let results: Vec<(Vec<f32>, u64, f64)> = fed.pool.map(&sampled, |_, &ci| {
+            let mut state = clients[ci].lock().unwrap();
+            let mut xi = x.clone();
+            let mut loss_sum = 0.0f64;
+            for _ in 0..local_steps {
+                let batch = state.loader.next_batch();
+                let (next, loss) = trainer.train_step(&xi, zeros_ref, &batch, gamma);
+                xi = next;
+                loss_sum += loss as f64;
+            }
+            let (upload, bits) = send_through(compressor, &xi, &mut state.rng);
+            (upload, bits, loss_sum)
+        });
+
+        let rows: Vec<&[f32]> = results.iter().map(|(v, _, _)| v.as_slice()).collect();
+        crate::tensor::mean_into(&rows, &mut fed.x);
+        for (_, bits, _) in &results {
+            usage.add_uplink(*bits);
+        }
+        let train_loss = results.iter().map(|(_, _, l)| l).sum::<f64>()
+            / (results.len() * cfg.local_steps).max(1) as f64;
+
+        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            Some(fed.evaluate())
+        } else {
+            None
+        };
+        logger.end_round(
+            round,
+            cfg.local_steps,
+            train_loss,
+            usage.uplink_bits,
+            usage.downlink_bits,
+            eval,
+        );
+    }
+    logger.finish()
+}

@@ -1,0 +1,101 @@
+//! FedDyn (Acar et al., 2021) — the additional baseline in Figure 9.
+//!
+//! Each client keeps a gradient correction λ_i (stored in `ClientState::h`)
+//! and minimizes the dynamically-regularized local objective
+//!     f_i(x) − ⟨λ_i, x⟩ + (α_dyn/2)·‖x − x_server‖²
+//! by E SGD steps; afterwards λ_i ← λ_i − α_dyn·(x_i − x_server).
+//! The server tracks s ← s − (α_dyn/n)·Σ_{i∈S}(x_i − x_server) and sets
+//!     x_server = mean_{i∈S}(x_i) − s/α_dyn.
+//! Communication is dense both ways (one d-vector each).
+
+use super::{Federation, RoundLogger, RunConfig};
+use crate::metrics::MetricsLog;
+use crate::tensor;
+
+pub fn run(cfg: &RunConfig, fed: &mut Federation, alpha_dyn: f64) -> MetricsLog {
+    let name = format!(
+        "feddyn[a={alpha_dyn}]-{}-a{}",
+        fed.model.name(),
+        cfg.dirichlet_alpha
+    );
+    let log = MetricsLog::new(&name)
+        .with_meta("algorithm", "feddyn")
+        .with_meta("feddyn_alpha", alpha_dyn)
+        .with_meta("gamma", cfg.gamma)
+        .with_meta("local_steps", cfg.local_steps)
+        .with_meta("alpha", cfg.dirichlet_alpha);
+    let mut logger = RoundLogger::new(cfg, log);
+    let dim = fed.x.len();
+    let mut server_state = vec![0.0f32; dim];
+    let a = alpha_dyn as f32;
+
+    for round in 0..cfg.rounds {
+        logger.begin_round();
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let mut usage = super::transport::WireUsage::default();
+        for _ in &sampled {
+            usage.add_downlink(crate::compress::dense_bits(dim));
+        }
+
+        let x = fed.x.clone();
+        let trainer = &fed.trainer;
+        let clients = &fed.clients;
+        let gamma = cfg.gamma;
+        let local_steps = cfg.local_steps;
+        let results: Vec<(Vec<f32>, f64)> = fed.pool.map(&sampled, |_, &ci| {
+            let mut state = clients[ci].lock().unwrap();
+            let mut xi = x.clone();
+            let mut loss_sum = 0.0f64;
+            for _ in 0..local_steps {
+                let batch = state.loader.next_batch();
+                // ∇[f_i(x) − ⟨λ,x⟩ + a/2‖x−x₀‖²] = g − λ + a(x − x₀).
+                // Express as the Scaffnew step form with h = λ − a(x − x₀);
+                // h depends on x, so rebuild it each step.
+                let mut h_eff = vec![0.0f32; xi.len()];
+                for j in 0..xi.len() {
+                    h_eff[j] = state.h[j] - a * (xi[j] - x[j]);
+                }
+                let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
+                xi = next;
+                loss_sum += loss as f64;
+            }
+            // λ_i ← λ_i − a·(x_i − x_server)
+            for j in 0..xi.len() {
+                state.h[j] -= a * (xi[j] - x[j]);
+            }
+            (xi, loss_sum)
+        });
+
+        // Server: s ← s − (a/n)·Σ(x_i − x); x ← mean(x_i) − s/a.
+        let m = results.len().max(1);
+        for (xi, _) in &results {
+            for j in 0..dim {
+                server_state[j] -= a / cfg.n_clients as f32 * (xi[j] - x[j]);
+            }
+        }
+        let rows: Vec<&[f32]> = results.iter().map(|(v, _)| v.as_slice()).collect();
+        crate::tensor::mean_into(&rows, &mut fed.x);
+        tensor::axpy(-1.0 / a, &server_state, &mut fed.x);
+
+        for _ in &results {
+            usage.add_uplink(crate::compress::dense_bits(dim));
+        }
+        let train_loss = results.iter().map(|(_, l)| l).sum::<f64>()
+            / (m * cfg.local_steps).max(1) as f64;
+
+        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            Some(fed.evaluate())
+        } else {
+            None
+        };
+        logger.end_round(
+            round,
+            cfg.local_steps,
+            train_loss,
+            usage.uplink_bits,
+            usage.downlink_bits,
+            eval,
+        );
+    }
+    logger.finish()
+}

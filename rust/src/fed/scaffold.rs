@@ -1,0 +1,102 @@
+//! Scaffold (Karimireddy et al., 2020) — the paper's strongest
+//! non-accelerated baseline (§4.7, Figure 9).
+//!
+//! Client i keeps a control variate c_i (stored in `ClientState::h`);
+//! the server keeps the global variate c. Local step:
+//!     x ← x − γ·(∇f_i(x) − c_i + c)
+//! After E steps (option II of the paper):
+//!     c_i⁺ = c_i − c + (x_server − x_i)/(E·γ)
+//!     uplink Δx = x_i − x_server and Δc = c_i⁺ − c_i
+//!     server: x += mean(Δx);  c += (|S|/n)·mean(Δc)
+//! Communication is uncompressed both ways, and the uplink carries TWO
+//! d-vectors (Δx, Δc) — Scaffold's well-known 2× communication overhead,
+//! which the bits-axis plots make visible.
+
+use super::{Federation, RoundLogger, RunConfig};
+use crate::metrics::MetricsLog;
+use crate::tensor;
+
+pub fn run(cfg: &RunConfig, fed: &mut Federation) -> MetricsLog {
+    let name = format!("scaffold-{}-a{}", fed.model.name(), cfg.dirichlet_alpha);
+    let log = MetricsLog::new(&name)
+        .with_meta("algorithm", "scaffold")
+        .with_meta("gamma", cfg.gamma)
+        .with_meta("local_steps", cfg.local_steps)
+        .with_meta("alpha", cfg.dirichlet_alpha);
+    let mut logger = RoundLogger::new(cfg, log);
+    let dim = fed.x.len();
+    let mut c_global = vec![0.0f32; dim];
+    let inv_e_gamma = 1.0 / (cfg.local_steps as f32 * cfg.gamma);
+
+    for round in 0..cfg.rounds {
+        logger.begin_round();
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let mut usage = super::transport::WireUsage::default();
+        for _ in &sampled {
+            // Downlink: x and c (2 dense vectors).
+            usage.add_downlink(2 * crate::compress::dense_bits(dim));
+        }
+
+        let x = fed.x.clone();
+        let c_ref = &c_global;
+        let trainer = &fed.trainer;
+        let clients = &fed.clients;
+        let gamma = cfg.gamma;
+        let local_steps = cfg.local_steps;
+        // Returns (Δx, Δc, loss_sum); client updates its own c_i in place.
+        let results: Vec<(Vec<f32>, Vec<f32>, f64)> = fed.pool.map(&sampled, |_, &ci| {
+            let mut state = clients[ci].lock().unwrap();
+            let mut xi = x.clone();
+            let mut loss_sum = 0.0f64;
+            // Effective control-variate correction: −c_i + c ⇒ pass
+            // h = c_i − c to the Scaffnew-form step x − γ(g − h).
+            let mut h_eff = vec![0.0f32; xi.len()];
+            tensor::sub(&state.h, c_ref, &mut h_eff);
+            for _ in 0..local_steps {
+                let batch = state.loader.next_batch();
+                let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
+                xi = next;
+                loss_sum += loss as f64;
+            }
+            // Option II variate refresh.
+            let mut c_new = vec![0.0f32; xi.len()];
+            for j in 0..xi.len() {
+                c_new[j] = state.h[j] - c_ref[j] + (x[j] - xi[j]) * inv_e_gamma;
+            }
+            let mut dx = vec![0.0f32; xi.len()];
+            tensor::sub(&xi, &x, &mut dx);
+            let mut dc = vec![0.0f32; xi.len()];
+            tensor::sub(&c_new, &state.h, &mut dc);
+            state.h = c_new;
+            (dx, dc, loss_sum)
+        });
+
+        // Server updates.
+        let m = results.len().max(1) as f32;
+        let scale_c = m / cfg.n_clients as f32 / m; // (|S|/n)·(1/|S|)
+        for (dx, dc, _) in &results {
+            tensor::axpy(1.0 / m, dx, &mut fed.x);
+            tensor::axpy(scale_c, dc, &mut c_global);
+        }
+        for _ in &results {
+            usage.add_uplink(2 * crate::compress::dense_bits(dim));
+        }
+        let train_loss = results.iter().map(|(_, _, l)| l).sum::<f64>()
+            / (results.len() * cfg.local_steps).max(1) as f64;
+
+        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            Some(fed.evaluate())
+        } else {
+            None
+        };
+        logger.end_round(
+            round,
+            cfg.local_steps,
+            train_loss,
+            usage.uplink_bits,
+            usage.downlink_bits,
+            eval,
+        );
+    }
+    logger.finish()
+}

@@ -1,0 +1,84 @@
+//! Transport accounting: every vector that crosses the client/server
+//! boundary goes through here, so communicated-bit metrics are *measured*
+//! (real serialized payloads), never estimated.
+//!
+//! The in-process "network" hands payload bytes from worker threads to the
+//! server; `decompress` on the receiving side reconstructs the dense vector
+//! exactly as a remote peer would, keeping the simulation faithful to a real
+//! deployment's data flow (encode → wire → decode).
+
+use crate::compress::{Compressed, Compressor};
+use crate::util::rng::Rng;
+
+/// Accumulated wire usage for one round.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WireUsage {
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    pub uplink_msgs: u64,
+    pub downlink_msgs: u64,
+}
+
+impl WireUsage {
+    pub fn add_uplink(&mut self, bits: u64) {
+        self.uplink_bits += bits;
+        self.uplink_msgs += 1;
+    }
+
+    pub fn add_downlink(&mut self, bits: u64) {
+        self.downlink_bits += bits;
+        self.downlink_msgs += 1;
+    }
+
+    pub fn merge(&mut self, other: WireUsage) {
+        self.uplink_bits += other.uplink_bits;
+        self.downlink_bits += other.downlink_bits;
+        self.uplink_msgs += other.uplink_msgs;
+        self.downlink_msgs += other.downlink_msgs;
+    }
+}
+
+/// Encode with `comp`, count bits, and return the receiver-side
+/// reconstruction (the decoded dense vector) plus the payload size.
+pub fn send_through(comp: &dyn Compressor, x: &[f32], rng: &mut Rng) -> (Vec<f32>, u64) {
+    let msg: Compressed = comp.compress(x, rng);
+    let bits = msg.wire_bits;
+    (comp.decompress(&msg), bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+
+    #[test]
+    fn identity_roundtrip_counts_dense_bits() {
+        let mut rng = Rng::seed_from_u64(0);
+        let x = vec![1.0f32; 100];
+        let (y, bits) = send_through(&Identity, &x, &mut rng);
+        assert_eq!(y, x);
+        assert_eq!(bits, 3200);
+    }
+
+    #[test]
+    fn topk_roundtrip_counts_sparse_bits() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x: Vec<f32> = (0..1000).map(|i| i as f32 / 100.0).collect();
+        let (y, bits) = send_through(&TopK::with_density(0.1), &x, &mut rng);
+        assert_eq!(y.iter().filter(|&&v| v != 0.0).count(), 100);
+        assert!(bits < 3200 * 10);
+    }
+
+    #[test]
+    fn usage_merges() {
+        let mut a = WireUsage::default();
+        a.add_uplink(10);
+        a.add_downlink(20);
+        let mut b = WireUsage::default();
+        b.add_uplink(5);
+        b.merge(a);
+        assert_eq!(b.uplink_bits, 15);
+        assert_eq!(b.downlink_bits, 20);
+        assert_eq!(b.uplink_msgs, 2);
+    }
+}

@@ -1,0 +1,32 @@
+//! # FedComLoc
+//!
+//! Communication-efficient federated training of sparse and quantized
+//! models — a production-grade reproduction of Yi, Meinhardt, Condat &
+//! Richtárik, *FedComLoc* (2024), as a three-layer Rust + JAX + Pallas
+//! stack (AOT via XLA/PJRT).
+//!
+//! ## Layer map
+//! * **L3 — this crate**: the federated coordinator ([`fed`]): Scaffnew
+//!   scheduling with probabilistic communication skipping, client sampling,
+//!   compressed transport with exact bit accounting ([`compress`]),
+//!   Dirichlet-partitioned data ([`data`]), all baselines, metrics
+//!   ([`metrics`]) and the experiment registry ([`experiments`]).
+//! * **L2 — `python/compile`**: JAX models (MLP/CNN over flat parameter
+//!   vectors) AOT-lowered to HLO text, executed via [`runtime`] (PJRT).
+//! * **L1 — `python/compile/kernels`**: Pallas kernels (fused dense layer,
+//!   Scaffnew update, TopK mask, stochastic quantizer) with jnp oracles.
+//!
+//! Python never runs at training time; see DESIGN.md for the system
+//! inventory and README.md for a quickstart.
+
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod fed;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,296 @@
+//! `fedcomloc` — the Layer-3 leader binary.
+//!
+//! Subcommands:
+//!   train             run one federated algorithm end-to-end
+//!   experiment        regenerate paper tables/figures (see DESIGN.md §6)
+//!   list-experiments  show the registry
+//!   data-stats        Figure 11 class-distribution report
+//!   artifacts         inspect artifacts/manifest.json
+//!
+//! `fedcomloc <subcommand> --help` prints the full option list.
+
+use fedcomloc::cli::Command;
+use fedcomloc::compress::parse_spec;
+use fedcomloc::config::{self, presets};
+use fedcomloc::experiments::{self, ExpOptions};
+use fedcomloc::fed::{run, AlgorithmSpec, Variant};
+use fedcomloc::model::ModelKind;
+use std::path::PathBuf;
+
+fn main() {
+    init_logger();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("experiment") => cmd_experiment(&argv[1..]),
+        Some("list-experiments") => cmd_list(),
+        Some("data-stats") => cmd_data_stats(&argv[1..]),
+        Some("artifacts") => cmd_artifacts(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    }
+    .map_or_else(
+        |e: anyhow::Error| {
+            eprintln!("error: {e}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn init_logger() {
+    struct Stderr;
+    impl log::Log for Stderr {
+        fn enabled(&self, metadata: &log::Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+        fn log(&self, record: &log::Record) {
+            if self.enabled(record.metadata()) {
+                eprintln!("[{:<5}] {}", record.level(), record.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    fn max_level() -> log::Level {
+        match std::env::var("FEDCOMLOC_LOG").as_deref() {
+            Ok("debug") => log::Level::Debug,
+            Ok("trace") => log::Level::Trace,
+            Ok("warn") => log::Level::Warn,
+            Ok("error") => log::Level::Error,
+            _ => log::Level::Info,
+        }
+    }
+    static LOGGER: Stderr = Stderr;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(log::LevelFilter::Trace);
+}
+
+fn print_usage() {
+    println!(
+        "fedcomloc — communication-efficient federated training (FedComLoc reproduction)
+
+USAGE:
+    fedcomloc <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+    train             run one federated algorithm end-to-end
+    experiment        regenerate paper tables/figures
+    list-experiments  show the experiment registry
+    data-stats        Figure 11 class-distribution report
+    artifacts         inspect the AOT artifact manifest
+
+Run 'fedcomloc <SUBCOMMAND> --help' for options."
+    );
+}
+
+fn train_command() -> Command {
+    Command::new("fedcomloc train", "Run one federated training job")
+        .opt_default("algo", "NAME", "fedcomloc|fedavg|sparsefedavg|scaffold|feddyn", "fedcomloc")
+        .opt_default("variant", "V", "FedComLoc variant: com|local|global", "com")
+        .opt_default(
+            "compress",
+            "SPEC",
+            "compressor: none | topk:<density> | q:<bits> | topk:<d>+q:<b>",
+            "topk:0.3",
+        )
+        .opt("preset", "NAME", "config preset (see list below)")
+        .opt("config", "FILE", "TOML config file with a [run] table")
+        .opt_default("trainer", "T", "compute plane: auto|native|pjrt", "auto")
+        .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
+        .opt_default("out", "DIR", "metrics output directory", "results")
+        .opt("dataset", "NAME", "fedmnist|fedcifar10")
+        .opt("rounds", "N", "communication rounds")
+        .opt("clients", "N", "total clients")
+        .opt("sampled", "N", "clients sampled per round")
+        .opt("alpha", "F", "Dirichlet heterogeneity factor")
+        .opt("p", "F", "communication probability (FedComLoc)")
+        .opt("local-steps", "N", "local steps per round (baselines)")
+        .opt("gamma", "F", "learning rate")
+        .opt("train-n", "N", "training examples")
+        .opt("test-n", "N", "test examples")
+        .opt("batch-size", "N", "train batch size")
+        .opt("eval-batch", "N", "eval batch size")
+        .opt("eval-every", "N", "evaluate every N rounds")
+        .opt("seed", "N", "RNG seed")
+        .opt("tau", "F", "local-iteration cost for the total-cost metric")
+        .opt("threads", "N", "worker threads (0 = auto)")
+        .opt("data-dir", "DIR", "real-dataset directory (IDX/CIFAR bins)")
+        .flag("quiet", "suppress per-round logging")
+}
+
+fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = train_command();
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        println!("PRESETS: {}", presets::names().join(", "));
+        return Ok(());
+    }
+    let mut cfg = match args.get("preset") {
+        Some(name) => presets::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown preset '{name}' (have: {})", presets::names().join(", "))
+        })?,
+        None => fedcomloc::fed::RunConfig::default_mnist(),
+    };
+    if let Some(path) = args.get("config") {
+        config::load_file(&mut cfg, std::path::Path::new(path))?;
+    }
+    config::apply_cli(&mut cfg, &args)?;
+
+    let compressor = parse_spec(args.get("compress").unwrap_or("topk:0.3"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let spec = match args.get("algo").unwrap_or("fedcomloc") {
+        "fedcomloc" => AlgorithmSpec::FedComLoc {
+            variant: Variant::parse(args.get("variant").unwrap_or("com"))
+                .ok_or_else(|| anyhow::anyhow!("bad --variant"))?,
+            compressor,
+        },
+        "fedavg" => AlgorithmSpec::FedAvg {
+            compressor: parse_spec("none").unwrap(),
+        },
+        "sparsefedavg" => AlgorithmSpec::FedAvg { compressor },
+        "scaffold" => AlgorithmSpec::Scaffold,
+        "feddyn" => AlgorithmSpec::FedDyn { alpha: 0.01 },
+        other => anyhow::bail!("unknown --algo '{other}'"),
+    };
+
+    let opts = ExpOptions {
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let model = ModelKind::for_dataset(cfg.dataset);
+    let trainer = opts.make_trainer(model);
+
+    println!(
+        "running {} on {:?} ({} clients, {} sampled, {} rounds, α={}, γ={})",
+        spec.name(),
+        cfg.dataset,
+        cfg.n_clients,
+        cfg.clients_per_round,
+        cfg.rounds,
+        cfg.dirichlet_alpha,
+        cfg.gamma
+    );
+    let t0 = std::time::Instant::now();
+    let log = run(&cfg, trainer, &spec);
+    let elapsed = t0.elapsed();
+    opts.save("train", &log);
+    println!(
+        "\ndone in {elapsed:?}: best_acc={:?} final_loss={:?}",
+        log.best_accuracy(),
+        log.final_train_loss()
+    );
+    println!(
+        "uplink total: {} bits ({:.2} MB); downlink total: {} bits",
+        log.total_uplink_bits(),
+        log.total_uplink_bits() as f64 / 8e6,
+        log.records.last().map(|r| r.cum_downlink_bits).unwrap_or(0),
+    );
+    println!("metrics: {}/train/{}.csv", opts.out_dir.display(), log.run_name);
+    Ok(())
+}
+
+fn experiment_command() -> Command {
+    Command::new("fedcomloc experiment", "Regenerate paper tables/figures")
+        .opt("id", "ID", "experiment id (see list-experiments)")
+        .flag("all", "run every experiment in the registry")
+        .opt_default("scale", "F", "scale factor on rounds/sizes", "1.0")
+        .opt_default("trainer", "T", "auto|native|pjrt", "auto")
+        .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
+        .opt_default("out", "DIR", "output directory", "results")
+        .opt_default("seed", "N", "RNG seed", "42")
+}
+
+fn cmd_experiment(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = experiment_command();
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        return Ok(());
+    }
+    let opts = ExpOptions {
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+        scale: args.get_or("scale", 1.0).map_err(|e| anyhow::anyhow!("{e}"))?,
+        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        seed: args.get_or("seed", 42).map_err(|e| anyhow::anyhow!("{e}"))?,
+    };
+    if args.flag("all") {
+        for exp in experiments::registry() {
+            println!("\n################ {} ({}) ################", exp.id, exp.paper_ref);
+            (exp.run)(&opts)?;
+        }
+        return Ok(());
+    }
+    match args.get("id") {
+        Some(id) => {
+            let exp = experiments::by_id(id).ok_or_else(|| {
+                anyhow::anyhow!("unknown experiment '{id}' (try list-experiments)")
+            })?;
+            (exp.run)(&opts)
+        }
+        None => anyhow::bail!("pass --id <experiment> or --all"),
+    }
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("{:<10}{:<28}{}", "id", "paper", "description");
+    for exp in experiments::registry() {
+        println!("{:<10}{:<28}{}", exp.id, exp.paper_ref, exp.description);
+    }
+    Ok(())
+}
+
+fn cmd_data_stats(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("fedcomloc data-stats", "Figure 11 class distribution report")
+        .opt_default("out", "DIR", "output directory", "results")
+        .opt_default("seed", "N", "RNG seed", "42");
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        return Ok(());
+    }
+    let opts = ExpOptions {
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+        seed: args.get_or("seed", 42).map_err(|e| anyhow::anyhow!("{e}"))?,
+        ..Default::default()
+    };
+    experiments::datadist::run(&opts)
+}
+
+fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("fedcomloc artifacts", "Inspect the AOT artifact manifest")
+        .opt_default("dir", "DIR", "artifacts directory", "artifacts");
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        return Ok(());
+    }
+    let dir = PathBuf::from(args.get("dir").unwrap_or("artifacts"));
+    let manifest = fedcomloc::runtime::Manifest::load(&dir)?;
+    println!("artifacts in {}:", dir.display());
+    for (name, spec) in &manifest.artifacts {
+        let ins: Vec<String> = spec.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        let outs: Vec<String> = spec.outputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        println!("  {name:<24} in: {} -> out: {}", ins.join(","), outs.join(","));
+    }
+    println!("\nmodels:");
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name}: dim={} batch={} eval_batch={} input={:?}",
+            m.dim, m.batch, m.eval_batch, m.input_shape
+        );
+    }
+    Ok(())
+}

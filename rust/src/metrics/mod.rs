@@ -1,0 +1,238 @@
+//! Round-level metrics: the data series behind every paper table/figure.
+//!
+//! One [`RoundRecord`] per communication round captures training loss, test
+//! metrics (when evaluated), exact communicated bits in both directions
+//! (from real wire payloads — see `compress`), and the §4.5 total-cost
+//! gauge. [`MetricsLog`] accumulates records and serializes to CSV and JSON
+//! under `results/`.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// Metrics for one communication round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    /// Communication-round index (0-based).
+    pub round: usize,
+    /// Local iterations executed by each participating client this round.
+    pub local_steps: usize,
+    /// Mean training loss over participating clients' local steps.
+    pub train_loss: f64,
+    /// Test metrics (None between evaluation rounds).
+    pub test_loss: Option<f64>,
+    pub test_accuracy: Option<f64>,
+    /// Exact bits put on the wire this round.
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    /// Running totals including this round.
+    pub cum_uplink_bits: u64,
+    pub cum_downlink_bits: u64,
+    /// Total cost (paper Fig. 8): communication rounds so far + τ × local
+    /// iterations so far.
+    pub total_cost: f64,
+    /// Wall-clock spent in this round (seconds).
+    pub wall_secs: f64,
+}
+
+impl RoundRecord {
+    pub fn cum_total_bits(&self) -> u64 {
+        self.cum_uplink_bits + self.cum_downlink_bits
+    }
+}
+
+/// Accumulated per-run metrics plus run metadata.
+#[derive(Debug, Clone)]
+pub struct MetricsLog {
+    pub run_name: String,
+    pub records: Vec<RoundRecord>,
+    pub meta: Vec<(String, String)>,
+}
+
+impl MetricsLog {
+    pub fn new(run_name: &str) -> Self {
+        Self {
+            run_name: run_name.to_string(),
+            records: Vec::new(),
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn with_meta(mut self, key: &str, value: impl ToString) -> Self {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn push(&mut self, record: RoundRecord) {
+        self.records.push(record);
+    }
+
+    /// Best (max) test accuracy seen — the paper's table metric.
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.test_accuracy)
+            .fold(None, |acc, a| Some(acc.map_or(a, |m: f64| m.max(a))))
+    }
+
+    /// Last evaluated accuracy.
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.test_accuracy)
+    }
+
+    pub fn final_train_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.train_loss)
+    }
+
+    /// Total uplink bits across the run.
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.records.last().map_or(0, |r| r.cum_uplink_bits)
+    }
+
+    /// First round index at which evaluated accuracy ≥ target, with the
+    /// cumulative uplink bits spent to get there (the paper's
+    /// "bits-to-accuracy" reading of Figures 1/2/3/5).
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<(usize, u64)> {
+        self.records
+            .iter()
+            .find(|r| r.test_accuracy.is_some_and(|a| a >= target))
+            .map(|r| (r.round, r.cum_uplink_bits))
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,local_steps,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,cum_uplink_bits,cum_downlink_bits,total_cost,wall_secs\n",
+        );
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{:.6},{},{},{},{},{},{},{:.4},{:.4}\n",
+                r.round,
+                r.local_steps,
+                r.train_loss,
+                r.test_loss.map_or(String::new(), |v| format!("{v:.6}")),
+                r.test_accuracy
+                    .map_or(String::new(), |v| format!("{v:.6}")),
+                r.uplink_bits,
+                r.downlink_bits,
+                r.cum_uplink_bits,
+                r.cum_downlink_bits,
+                r.total_cost,
+                r.wall_secs,
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("run", self.run_name.as_str().into());
+        let mut meta = Json::obj();
+        for (k, v) in &self.meta {
+            meta.set(k, v.as_str().into());
+        }
+        root.set("meta", meta);
+        if let Some(best) = self.best_accuracy() {
+            root.set("best_accuracy", best.into());
+        }
+        let rows: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("round", r.round.into());
+                o.set("train_loss", r.train_loss.into());
+                if let Some(l) = r.test_loss {
+                    o.set("test_loss", l.into());
+                }
+                if let Some(a) = r.test_accuracy {
+                    o.set("test_accuracy", a.into());
+                }
+                o.set("uplink_bits", r.uplink_bits.into());
+                o.set("downlink_bits", r.downlink_bits.into());
+                o.set("cum_uplink_bits", r.cum_uplink_bits.into());
+                o.set("total_cost", r.total_cost.into());
+                o
+            })
+            .collect();
+        root.set("rounds", Json::Arr(rows));
+        root
+    }
+
+    /// Write `<dir>/<run_name>.csv` and `.json`.
+    pub fn save(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut csv = std::fs::File::create(dir.join(format!("{}.csv", self.run_name)))?;
+        csv.write_all(self.to_csv().as_bytes())?;
+        let mut json = std::fs::File::create(dir.join(format!("{}.json", self.run_name)))?;
+        json.write_all(self.to_json().to_string_pretty().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            local_steps: 10,
+            train_loss: 1.0 / (round + 1) as f64,
+            test_loss: acc.map(|_| 0.5),
+            test_accuracy: acc,
+            uplink_bits: 1000,
+            downlink_bits: 2000,
+            cum_uplink_bits: 1000 * (round as u64 + 1),
+            cum_downlink_bits: 2000 * (round as u64 + 1),
+            total_cost: (round + 1) as f64 * 1.1,
+            wall_secs: 0.01,
+        }
+    }
+
+    #[test]
+    fn accumulates_and_summarizes() {
+        let mut log = MetricsLog::new("test_run").with_meta("alpha", 0.7);
+        log.push(record(0, None));
+        log.push(record(1, Some(0.5)));
+        log.push(record(2, Some(0.8)));
+        log.push(record(3, Some(0.7)));
+        assert_eq!(log.best_accuracy(), Some(0.8));
+        assert_eq!(log.final_accuracy(), Some(0.7));
+        assert_eq!(log.total_uplink_bits(), 4000);
+        assert_eq!(log.rounds_to_accuracy(0.75), Some((2, 3000)));
+        assert_eq!(log.rounds_to_accuracy(0.95), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricsLog::new("csv_run");
+        log.push(record(0, Some(0.4)));
+        let csv = log.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[1].contains("0.4"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut log = MetricsLog::new("json_run").with_meta("k", "v");
+        log.push(record(0, Some(0.6)));
+        let text = log.to_json().to_string_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("run").unwrap().as_str().unwrap(), "json_run");
+        assert_eq!(parsed.get("best_accuracy").unwrap().as_f64().unwrap(), 0.6);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join(format!("fedcomloc_metrics_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut log = MetricsLog::new("save_run");
+        log.push(record(0, None));
+        log.save(&dir).unwrap();
+        assert!(dir.join("save_run.csv").is_file());
+        assert!(dir.join("save_run.json").is_file());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

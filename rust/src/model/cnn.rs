@@ -1,0 +1,341 @@
+//! CNN for FedCIFAR10 (paper Appendix A.1; the FedLab reference net):
+//! conv5×5(3→32) → ReLU → maxpool2 → conv5×5(32→64) → ReLU → maxpool2 →
+//! fc 1600→384 → ReLU → fc 384→192 → ReLU → fc 192→10; softmax CE loss.
+//!
+//! Flat layout (must match `python/compile/models/cnn.py`):
+//! `[Wc1 32×75 | bc1 32 | Wc2 64×800 | bc2 64 | W3 1600×384 | b3 384 |
+//!   W4 384×192 | b4 192 | W5 192×10 | b5 10]`
+//! — conv weights OIHW flattened to [out_ch × in_ch·k·k], dense weights
+//! row-major [in][out]. Activations are NCHW; the conv output is flattened
+//! channel-major to feed fc1.
+
+use super::ops::{self, ConvShape};
+use crate::util::rng::Rng;
+
+pub const IN_CH: usize = 3;
+pub const SIDE: usize = 32;
+pub const C1: usize = 32;
+pub const C2: usize = 64;
+pub const K: usize = 5;
+pub const FC_IN: usize = C2 * 5 * 5; // 1600 after two conv+pool stages
+pub const F1: usize = 384;
+pub const F2: usize = 192;
+pub const OUT: usize = 10;
+
+pub const DIM: usize = C1 * IN_CH * K * K
+    + C1
+    + C2 * C1 * K * K
+    + C2
+    + FC_IN * F1
+    + F1
+    + F1 * F2
+    + F2
+    + F2 * OUT
+    + OUT;
+
+pub const CONV1: ConvShape = ConvShape {
+    in_ch: IN_CH,
+    out_ch: C1,
+    in_h: SIDE,
+    in_w: SIDE,
+    k: K,
+};
+// After conv1 (28×28) and pool (14×14):
+pub const CONV2: ConvShape = ConvShape {
+    in_ch: C1,
+    out_ch: C2,
+    in_h: 14,
+    in_w: 14,
+    k: K,
+};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Slices {
+    pub wc1: (usize, usize),
+    pub bc1: (usize, usize),
+    pub wc2: (usize, usize),
+    pub bc2: (usize, usize),
+    pub w3: (usize, usize),
+    pub b3: (usize, usize),
+    pub w4: (usize, usize),
+    pub b4: (usize, usize),
+    pub w5: (usize, usize),
+    pub b5: (usize, usize),
+}
+
+pub const fn slices() -> Slices {
+    let wc1 = (0, C1 * IN_CH * K * K);
+    let bc1 = (wc1.1, wc1.1 + C1);
+    let wc2 = (bc1.1, bc1.1 + C2 * C1 * K * K);
+    let bc2 = (wc2.1, wc2.1 + C2);
+    let w3 = (bc2.1, bc2.1 + FC_IN * F1);
+    let b3 = (w3.1, w3.1 + F1);
+    let w4 = (b3.1, b3.1 + F1 * F2);
+    let b4 = (w4.1, w4.1 + F2);
+    let w5 = (b4.1, b4.1 + F2 * OUT);
+    let b5 = (w5.1, w5.1 + OUT);
+    Slices {
+        wc1,
+        bc1,
+        wc2,
+        bc2,
+        w3,
+        b3,
+        w4,
+        b4,
+        w5,
+        b5,
+    }
+}
+
+pub fn init(rng: &mut Rng) -> Vec<f32> {
+    let s = slices();
+    let mut p = vec![0.0f32; DIM];
+    let fan_c1 = (IN_CH * K * K) as f32;
+    let fan_c2 = (C1 * K * K) as f32;
+    rng.fill_normal_f32(&mut p[s.wc1.0..s.wc1.1], 0.0, (2.0 / fan_c1).sqrt());
+    rng.fill_normal_f32(&mut p[s.wc2.0..s.wc2.1], 0.0, (2.0 / fan_c2).sqrt());
+    rng.fill_normal_f32(&mut p[s.w3.0..s.w3.1], 0.0, (2.0f32 / FC_IN as f32).sqrt());
+    rng.fill_normal_f32(&mut p[s.w4.0..s.w4.1], 0.0, (2.0f32 / F1 as f32).sqrt());
+    rng.fill_normal_f32(&mut p[s.w5.0..s.w5.1], 0.0, (2.0f32 / F2 as f32).sqrt());
+    p
+}
+
+/// Forward activations cached for backward.
+pub struct Cache {
+    pub y1: Vec<f32>,     // conv1+relu out  [b, 32, 28, 28]
+    pub p1: Vec<f32>,     // pool1 out       [b, 32, 14, 14]
+    pub arg1: Vec<u32>,   // pool1 argmax
+    pub y2: Vec<f32>,     // conv2+relu out  [b, 64, 10, 10]
+    pub p2: Vec<f32>,     // pool2 out       [b, 64, 5, 5] == fc input
+    pub arg2: Vec<u32>,   // pool2 argmax
+    pub a3: Vec<f32>,     // fc1+relu        [b, 384]
+    pub a4: Vec<f32>,     // fc2+relu        [b, 192]
+    pub logits: Vec<f32>, // [b, 10]
+}
+
+pub fn forward(params: &[f32], x: &[f32], batch: usize) -> Cache {
+    debug_assert_eq!(params.len(), DIM);
+    debug_assert_eq!(x.len(), batch * IN_CH * SIDE * SIDE);
+    let s = slices();
+
+    let mut y1 = vec![0.0f32; batch * C1 * 28 * 28];
+    let mut col1 = vec![0.0f32; CONV1.col_rows() * CONV1.col_cols()];
+    ops::conv2d_forward(
+        x,
+        &params[s.wc1.0..s.wc1.1],
+        &params[s.bc1.0..s.bc1.1],
+        &CONV1,
+        batch,
+        &mut y1,
+        &mut col1,
+    );
+    ops::relu_inplace(&mut y1);
+    let mut p1 = vec![0.0f32; batch * C1 * 14 * 14];
+    let mut arg1 = vec![0u32; p1.len()];
+    ops::maxpool2_forward(&y1, batch * C1, 28, 28, &mut p1, &mut arg1);
+
+    let mut y2 = vec![0.0f32; batch * C2 * 10 * 10];
+    let mut col2 = vec![0.0f32; CONV2.col_rows() * CONV2.col_cols()];
+    ops::conv2d_forward(
+        &p1,
+        &params[s.wc2.0..s.wc2.1],
+        &params[s.bc2.0..s.bc2.1],
+        &CONV2,
+        batch,
+        &mut y2,
+        &mut col2,
+    );
+    ops::relu_inplace(&mut y2);
+    let mut p2 = vec![0.0f32; batch * C2 * 5 * 5];
+    let mut arg2 = vec![0u32; p2.len()];
+    ops::maxpool2_forward(&y2, batch * C2, 10, 10, &mut p2, &mut arg2);
+
+    // p2 viewed as [batch × FC_IN] (channel-major flatten).
+    let mut a3 = vec![0.0f32; batch * F1];
+    ops::matmul(&p2, &params[s.w3.0..s.w3.1], &mut a3, batch, FC_IN, F1);
+    ops::add_bias(&mut a3, &params[s.b3.0..s.b3.1], batch, F1);
+    ops::relu_inplace(&mut a3);
+
+    let mut a4 = vec![0.0f32; batch * F2];
+    ops::matmul(&a3, &params[s.w4.0..s.w4.1], &mut a4, batch, F1, F2);
+    ops::add_bias(&mut a4, &params[s.b4.0..s.b4.1], batch, F2);
+    ops::relu_inplace(&mut a4);
+
+    let mut logits = vec![0.0f32; batch * OUT];
+    ops::matmul(&a4, &params[s.w5.0..s.w5.1], &mut logits, batch, F2, OUT);
+    ops::add_bias(&mut logits, &params[s.b5.0..s.b5.1], batch, OUT);
+
+    Cache {
+        y1,
+        p1,
+        arg1,
+        y2,
+        p2,
+        arg2,
+        a3,
+        a4,
+        logits,
+    }
+}
+
+pub fn grad(params: &[f32], x: &[f32], y: &[i32]) -> (Vec<f32>, f32) {
+    let batch = y.len();
+    let s = slices();
+    let cache = forward(params, x, batch);
+    let (loss, dz5) = ops::softmax_cross_entropy(&cache.logits, y, OUT);
+
+    let mut g = vec![0.0f32; DIM];
+    // fc3
+    ops::matmul_at_b(&cache.a4, &dz5, &mut g[s.w5.0..s.w5.1], F2, batch, OUT);
+    ops::bias_grad(&dz5, &mut g[s.b5.0..s.b5.1], batch, OUT);
+    let mut da4 = vec![0.0f32; batch * F2];
+    ops::matmul_a_bt(&dz5, &params[s.w5.0..s.w5.1], &mut da4, batch, OUT, F2);
+    ops::relu_backward_inplace(&mut da4, &cache.a4);
+
+    // fc2
+    ops::matmul_at_b(&cache.a3, &da4, &mut g[s.w4.0..s.w4.1], F1, batch, F2);
+    ops::bias_grad(&da4, &mut g[s.b4.0..s.b4.1], batch, F2);
+    let mut da3 = vec![0.0f32; batch * F1];
+    ops::matmul_a_bt(&da4, &params[s.w4.0..s.w4.1], &mut da3, batch, F2, F1);
+    ops::relu_backward_inplace(&mut da3, &cache.a3);
+
+    // fc1
+    ops::matmul_at_b(&cache.p2, &da3, &mut g[s.w3.0..s.w3.1], FC_IN, batch, F1);
+    ops::bias_grad(&da3, &mut g[s.b3.0..s.b3.1], batch, F1);
+    let mut dp2 = vec![0.0f32; batch * FC_IN];
+    ops::matmul_a_bt(&da3, &params[s.w3.0..s.w3.1], &mut dp2, batch, F1, FC_IN);
+
+    // pool2 -> conv2
+    let mut dy2 = vec![0.0f32; batch * C2 * 10 * 10];
+    ops::maxpool2_backward(&dp2, &cache.arg2, &mut dy2);
+    ops::relu_backward_inplace(&mut dy2, &cache.y2);
+    let mut dp1 = vec![0.0f32; batch * C1 * 14 * 14];
+    {
+        let mut col = vec![0.0f32; CONV2.col_rows() * CONV2.col_cols()];
+        let mut dcol = vec![0.0f32; col.len()];
+        let (gw, rest) = g[s.wc2.0..s.bc2.1].split_at_mut(s.wc2.1 - s.wc2.0);
+        ops::conv2d_backward(
+            &cache.p1,
+            &params[s.wc2.0..s.wc2.1],
+            &dy2,
+            &CONV2,
+            batch,
+            gw,
+            rest,
+            Some(&mut dp1),
+            &mut col,
+            &mut dcol,
+        );
+    }
+
+    // pool1 -> conv1 (no dx needed at the input)
+    let mut dy1 = vec![0.0f32; batch * C1 * 28 * 28];
+    ops::maxpool2_backward(&dp1, &cache.arg1, &mut dy1);
+    ops::relu_backward_inplace(&mut dy1, &cache.y1);
+    {
+        let mut col = vec![0.0f32; CONV1.col_rows() * CONV1.col_cols()];
+        let mut dcol = vec![0.0f32; col.len()];
+        let (gw, rest) = g[s.wc1.0..s.bc1.1].split_at_mut(s.wc1.1 - s.wc1.0);
+        ops::conv2d_backward(
+            x,
+            &params[s.wc1.0..s.wc1.1],
+            &dy1,
+            &CONV1,
+            batch,
+            gw,
+            rest,
+            None,
+            &mut col,
+            &mut dcol,
+        );
+    }
+
+    (g, loss)
+}
+
+pub fn eval_batch(params: &[f32], x: &[f32], y: &[i32], valid: usize) -> (f64, usize) {
+    let batch = y.len();
+    let cache = forward(params, x, batch);
+    (
+        ops::cross_entropy_sum(&cache.logits, y, OUT, valid),
+        ops::count_correct(&cache.logits, y, OUT, valid),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let x: Vec<f32> = (0..batch * IN_CH * SIDE * SIDE)
+            .map(|_| rng.uniform_f32())
+            .collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::seed_from_u64(1);
+        let p = init(&mut rng);
+        let (x, _) = toy(2, &mut rng);
+        let c = forward(&p, &x, 2);
+        assert_eq!(c.logits.len(), 20);
+        assert_eq!(c.p2.len(), 2 * FC_IN);
+    }
+
+    #[test]
+    fn gradient_matches_numeric_spot_check() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = init(&mut rng);
+        let (x, y) = toy(2, &mut rng);
+        let (g, loss) = grad(&p, &x, &y);
+        assert!(loss > 0.0);
+        let s = slices();
+        let eps = 5e-3f32;
+        let picks = [
+            s.wc1.0 + 11,
+            s.bc1.0 + 3,
+            s.wc2.0 + 101,
+            s.bc2.0 + 5,
+            s.w3.0 + 1234,
+            s.b3.0 + 17,
+            s.w4.0 + 99,
+            s.w5.0 + 42,
+            s.b5.0 + 1,
+        ];
+        for &i in &picks {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let (_, lp) = grad(&pp, &x, &y);
+            let mut pm = p.clone();
+            pm[i] -= eps;
+            let (_, lm) = grad(&pm, &x, &y);
+            let num = (lp - lm) / (2.0 * eps);
+            // Finite differences cross ReLU/maxpool kinks for the early conv
+            // layers, so the tolerance is looser than for the smooth blocks.
+            let tol = 0.15 * num.abs().max(0.05);
+            assert!(
+                (num - g[i]).abs() < tol,
+                "param {i}: numeric {num} analytic {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_fixed_batch() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut p = init(&mut rng);
+        let (x, y) = toy(8, &mut rng);
+        let (_, first) = grad(&p, &x, &y);
+        let mut last = first;
+        for _ in 0..15 {
+            let (g, l) = grad(&p, &x, &y);
+            crate::tensor::axpy(-0.05, &g, &mut p);
+            last = l;
+        }
+        assert!(last < first * 0.7, "loss did not drop: {first} -> {last}");
+    }
+}

@@ -1,0 +1,203 @@
+//! Three-layer MLP for FedMNIST (paper Appendix A.1): 784 → 128 → 64 → 10
+//! with ReLU, softmax cross-entropy loss.
+//!
+//! Flat parameter layout (must match `python/compile/models/mlp.py`):
+//! `[W1 784×128 | b1 128 | W2 128×64 | b2 64 | W3 64×10 | b3 10]`,
+//! weights row-major `[in][out]` so the forward pass is `x @ W + b`.
+
+use super::ops;
+use crate::util::rng::Rng;
+
+pub const IN: usize = 784;
+pub const H1: usize = 128;
+pub const H2: usize = 64;
+pub const OUT: usize = 10;
+
+pub const DIM: usize = IN * H1 + H1 + H1 * H2 + H2 + H2 * OUT + OUT;
+
+/// Offsets of each parameter block in the flat vector.
+#[derive(Debug, Clone, Copy)]
+pub struct Slices {
+    pub w1: (usize, usize),
+    pub b1: (usize, usize),
+    pub w2: (usize, usize),
+    pub b2: (usize, usize),
+    pub w3: (usize, usize),
+    pub b3: (usize, usize),
+}
+
+pub const fn slices() -> Slices {
+    let w1 = (0, IN * H1);
+    let b1 = (w1.1, w1.1 + H1);
+    let w2 = (b1.1, b1.1 + H1 * H2);
+    let b2 = (w2.1, w2.1 + H2);
+    let w3 = (b2.1, b2.1 + H2 * OUT);
+    let b3 = (w3.1, w3.1 + OUT);
+    Slices {
+        w1,
+        b1,
+        w2,
+        b2,
+        w3,
+        b3,
+    }
+}
+
+/// He-normal init (std √(2/fan_in)), zero biases.
+pub fn init(rng: &mut Rng) -> Vec<f32> {
+    let s = slices();
+    let mut p = vec![0.0f32; DIM];
+    rng.fill_normal_f32(&mut p[s.w1.0..s.w1.1], 0.0, (2.0f32 / IN as f32).sqrt());
+    rng.fill_normal_f32(&mut p[s.w2.0..s.w2.1], 0.0, (2.0f32 / H1 as f32).sqrt());
+    rng.fill_normal_f32(&mut p[s.w3.0..s.w3.1], 0.0, (2.0f32 / H2 as f32).sqrt());
+    p
+}
+
+/// Forward pass; returns logits and the hidden activations (for backward).
+pub fn forward(params: &[f32], x: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(params.len(), DIM);
+    debug_assert_eq!(x.len(), batch * IN);
+    let s = slices();
+    let mut a1 = vec![0.0f32; batch * H1];
+    ops::matmul(x, &params[s.w1.0..s.w1.1], &mut a1, batch, IN, H1);
+    ops::add_bias(&mut a1, &params[s.b1.0..s.b1.1], batch, H1);
+    ops::relu_inplace(&mut a1);
+
+    let mut a2 = vec![0.0f32; batch * H2];
+    ops::matmul(&a1, &params[s.w2.0..s.w2.1], &mut a2, batch, H1, H2);
+    ops::add_bias(&mut a2, &params[s.b2.0..s.b2.1], batch, H2);
+    ops::relu_inplace(&mut a2);
+
+    let mut logits = vec![0.0f32; batch * OUT];
+    ops::matmul(&a2, &params[s.w3.0..s.w3.1], &mut logits, batch, H2, OUT);
+    ops::add_bias(&mut logits, &params[s.b3.0..s.b3.1], batch, OUT);
+    (logits, a1, a2)
+}
+
+/// Full gradient of mean softmax-CE loss. Returns (grad, loss).
+pub fn grad(params: &[f32], x: &[f32], y: &[i32]) -> (Vec<f32>, f32) {
+    let batch = y.len();
+    let s = slices();
+    let (logits, a1, a2) = forward(params, x, batch);
+    let (loss, mut dz3) = ops::softmax_cross_entropy(&logits, y, OUT);
+
+    let mut g = vec![0.0f32; DIM];
+    // Layer 3: dW3 = a2ᵀ @ dz3; db3 = Σ dz3; da2 = dz3 @ W3ᵀ
+    ops::matmul_at_b(&a2, &dz3, &mut g[s.w3.0..s.w3.1], H2, batch, OUT);
+    ops::bias_grad(&dz3, &mut g[s.b3.0..s.b3.1], batch, OUT);
+    let mut da2 = vec![0.0f32; batch * H2];
+    // da2 = dz3[batch×OUT] @ W3ᵀ; W3 is stored row-major [H2×OUT], which is
+    // exactly the [n×k] layout matmul_a_bt expects for Bᵀ.
+    ops::matmul_a_bt(&dz3, &params[s.w3.0..s.w3.1], &mut da2, batch, OUT, H2);
+    ops::relu_backward_inplace(&mut da2, &a2);
+    dz3.clear();
+
+    // Layer 2
+    ops::matmul_at_b(&a1, &da2, &mut g[s.w2.0..s.w2.1], H1, batch, H2);
+    ops::bias_grad(&da2, &mut g[s.b2.0..s.b2.1], batch, H2);
+    let mut da1 = vec![0.0f32; batch * H1];
+    ops::matmul_a_bt(&da2, &params[s.w2.0..s.w2.1], &mut da1, batch, H2, H1);
+    ops::relu_backward_inplace(&mut da1, &a1);
+
+    // Layer 1
+    ops::matmul_at_b(x, &da1, &mut g[s.w1.0..s.w1.1], IN, batch, H1);
+    ops::bias_grad(&da1, &mut g[s.b1.0..s.b1.1], batch, H1);
+
+    (g, loss)
+}
+
+/// (loss_sum, correct) over the first `valid` rows of a batch.
+pub fn eval_batch(params: &[f32], x: &[f32], y: &[i32], valid: usize) -> (f64, usize) {
+    let batch = y.len();
+    let (logits, _, _) = forward(params, x, batch);
+    (
+        ops::cross_entropy_sum(&logits, y, OUT, valid),
+        ops::count_correct(&logits, y, OUT, valid),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_batch(batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let x: Vec<f32> = (0..batch * IN).map(|_| rng.uniform_f32()).collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.below(10) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::seed_from_u64(1);
+        let p = init(&mut rng);
+        let (x, _) = toy_batch(5, &mut rng);
+        let (logits, a1, a2) = forward(&p, &x, 5);
+        assert_eq!(logits.len(), 50);
+        assert_eq!(a1.len(), 5 * H1);
+        assert_eq!(a2.len(), 5 * H2);
+        assert!(a1.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn gradient_matches_numeric_spot_check() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = init(&mut rng);
+        let (x, y) = toy_batch(3, &mut rng);
+        let (g, loss) = grad(&p, &x, &y);
+        assert!(loss > 0.0);
+        let s = slices();
+        let eps = 1e-2f32;
+        // One index from each parameter block.
+        let picks = [
+            s.w1.0 + 123,
+            s.b1.0 + 7,
+            s.w2.0 + 99,
+            s.b2.0 + 3,
+            s.w3.0 + 55,
+            s.b3.0 + 2,
+        ];
+        for &i in &picks {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let (_, lp) = grad(&pp, &x, &y);
+            let mut pm = p.clone();
+            pm[i] -= eps;
+            let (_, lm) = grad(&pm, &x, &y);
+            let num = (lp - lm) / (2.0 * eps);
+            let tol = 2e-2 * num.abs().max(0.05);
+            assert!(
+                (num - g[i]).abs() < tol,
+                "param {i}: numeric {num} analytic {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_fixed_batch() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut p = init(&mut rng);
+        let (x, y) = toy_batch(16, &mut rng);
+        let (_, first) = grad(&p, &x, &y);
+        let mut last = first;
+        for _ in 0..30 {
+            let (g, l) = grad(&p, &x, &y);
+            crate::tensor::axpy(-0.1, &g, &mut p);
+            last = l;
+        }
+        assert!(
+            last < first * 0.5,
+            "loss did not drop: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn eval_counts_valid_rows_only() {
+        let mut rng = Rng::seed_from_u64(4);
+        let p = init(&mut rng);
+        let (x, y) = toy_batch(4, &mut rng);
+        let (l4, _) = eval_batch(&p, &x, &y, 4);
+        let (l2, _) = eval_batch(&p, &x, &y, 2);
+        assert!(l2 < l4);
+    }
+}

@@ -1,0 +1,196 @@
+//! Model definitions and the trainer abstraction.
+//!
+//! The paper's two models (Appendix A.1) are expressed over a single flat
+//! f32 parameter vector so the coordinator, compressors and transport treat
+//! model state uniformly:
+//!
+//! * **MLP** for FedMNIST — 784 → 128 → 64 → 10, ReLU (d = 109,386);
+//! * **CNN** for FedCIFAR10 — conv5×5(3→32) → pool → conv5×5(32→64) → pool →
+//!   fc 1600→384 → fc 384→192 → fc 192→10, ReLU (d = 744,330), the FedLab
+//!   reference architecture.
+//!
+//! Two interchangeable [`LocalTrainer`] implementations execute the local
+//! objective: [`native::NativeTrainer`] (pure Rust, in `ops.rs`) and
+//! `runtime::PjrtTrainer` (AOT-compiled HLO from the JAX/Pallas layers).
+//! The parameter memory layout is identical across both — it is pinned down
+//! in `python/compile/models/` and cross-checked by integration tests.
+
+pub mod cnn;
+pub mod mlp;
+pub mod native;
+pub mod ops;
+
+use crate::data::loader::{Batch, EvalBatches};
+use crate::data::DatasetKind;
+use crate::util::rng::Rng;
+
+/// Which architecture a flat parameter vector parameterizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Cnn,
+}
+
+impl ModelKind {
+    /// The paper pairs MLP↔FedMNIST and CNN↔FedCIFAR10.
+    pub fn for_dataset(d: DatasetKind) -> ModelKind {
+        match d {
+            DatasetKind::Mnist => ModelKind::Mlp,
+            DatasetKind::Cifar10 => ModelKind::Cnn,
+        }
+    }
+
+    /// Total parameter count d.
+    pub fn dim(self) -> usize {
+        match self {
+            ModelKind::Mlp => mlp::DIM,
+            ModelKind::Cnn => cnn::DIM,
+        }
+    }
+
+    pub fn input_dim(self) -> usize {
+        match self {
+            ModelKind::Mlp => 784,
+            ModelKind::Cnn => 3 * 32 * 32,
+        }
+    }
+
+    pub fn num_classes(self) -> usize {
+        10
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Cnn => "cnn",
+        }
+    }
+}
+
+/// He-normal weight init, zero biases — shared by both trainers so every
+/// algorithm starts from the identical x₀ given the same seed.
+pub fn init_params(kind: ModelKind, rng: &mut Rng) -> Vec<f32> {
+    match kind {
+        ModelKind::Mlp => mlp::init(rng),
+        ModelKind::Cnn => cnn::init(rng),
+    }
+}
+
+/// Evaluation result over a test set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub mean_loss: f64,
+    pub accuracy: f64,
+    pub examples: usize,
+}
+
+/// Executes the local objective: gradients, fused Scaffnew steps, and
+/// evaluation. Implementations must be deterministic given their inputs.
+pub trait LocalTrainer: Send + Sync {
+    fn model(&self) -> ModelKind;
+
+    fn dim(&self) -> usize {
+        self.model().dim()
+    }
+
+    /// Minibatch gradient of the local empirical loss at `params`.
+    /// Returns (∇f(params), loss).
+    fn grad(&self, params: &[f32], batch: &Batch) -> (Vec<f32>, f32);
+
+    /// Fused Scaffnew local step (Algorithm 1 line 7):
+    /// x̂ = params − γ·(∇f(params) − h). Returns (x̂, loss).
+    fn train_step(&self, params: &[f32], h: &[f32], batch: &Batch, gamma: f32) -> (Vec<f32>, f32) {
+        let (g, loss) = self.grad(params, batch);
+        let mut out = vec![0.0f32; params.len()];
+        crate::tensor::sgd_control_variate_step(params, &g, h, gamma, &mut out);
+        (out, loss)
+    }
+
+    /// FedComLoc-Local step (Algorithm 1 line 6½): the gradient is evaluated
+    /// at the TopK-masked parameters, g = ∇f(TopK_{density}(params)), while
+    /// the update is applied to the *unmasked* params.
+    fn train_step_masked(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        density: f64,
+    ) -> (Vec<f32>, f32) {
+        let mut masked = params.to_vec();
+        let k = ((density * params.len() as f64).ceil() as usize).clamp(1, params.len());
+        crate::compress::topk::apply_topk(&mut masked, k);
+        let (g, loss) = self.grad(&masked, batch);
+        let mut out = vec![0.0f32; params.len()];
+        crate::tensor::sgd_control_variate_step(params, &g, h, gamma, &mut out);
+        (out, loss)
+    }
+
+    /// Mean loss + accuracy over an evaluation set.
+    fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult;
+}
+
+/// Shared eval loop used by trainers that expose per-batch (loss_sum,
+/// correct) primitives.
+pub(crate) fn eval_with<F>(batches: &EvalBatches, mut eval_batch: F) -> EvalResult
+where
+    F: FnMut(&Batch, usize) -> (f64, usize),
+{
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut examples = 0usize;
+    for (batch, &valid) in batches.batches.iter().zip(&batches.valid) {
+        let (l, c) = eval_batch(batch, valid);
+        loss_sum += l;
+        correct += c;
+        examples += valid;
+    }
+    EvalResult {
+        mean_loss: loss_sum / examples.max(1) as f64,
+        accuracy: correct as f64 / examples.max(1) as f64,
+        examples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_paper_appendix_a() {
+        // MLP 784->128->64->10
+        assert_eq!(
+            ModelKind::Mlp.dim(),
+            784 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10
+        );
+        assert_eq!(ModelKind::Mlp.dim(), 109_386);
+        // CNN conv(3->32,5), conv(32->64,5), fc 1600->384->192->10
+        assert_eq!(
+            ModelKind::Cnn.dim(),
+            32 * 3 * 25 + 32 + 64 * 32 * 25 + 64 + 1600 * 384 + 384 + 384 * 192 + 192 + 192 * 10 + 10
+        );
+        assert_eq!(ModelKind::Cnn.dim(), 744_330);
+    }
+
+    #[test]
+    fn init_is_seeded_and_scaled() {
+        let mut r1 = Rng::seed_from_u64(1);
+        let mut r2 = Rng::seed_from_u64(1);
+        let a = init_params(ModelKind::Mlp, &mut r1);
+        let b = init_params(ModelKind::Mlp, &mut r2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), ModelKind::Mlp.dim());
+        // He init: first-layer std ≈ sqrt(2/784) ≈ 0.0505
+        let w1 = &a[..784 * 128];
+        let std = (crate::tensor::norm2_sq(w1) / w1.len() as f64).sqrt();
+        assert!((std - (2.0 / 784.0f64).sqrt()).abs() < 0.005, "std={std}");
+        // biases zero
+        assert!(a[784 * 128..784 * 128 + 128].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn model_for_dataset() {
+        assert_eq!(ModelKind::for_dataset(DatasetKind::Mnist), ModelKind::Mlp);
+        assert_eq!(ModelKind::for_dataset(DatasetKind::Cifar10), ModelKind::Cnn);
+    }
+}

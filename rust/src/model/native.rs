@@ -1,0 +1,120 @@
+//! Pure-Rust [`LocalTrainer`]: the PJRT-free twin of the AOT artifacts.
+//!
+//! Used by unit/property tests and fast CPU benches, and as the numeric
+//! cross-check for the HLO programs (identical parameter layout and loss;
+//! see `rust/tests/integration_fed.rs` and `runtime_artifacts.rs`). The
+//! production path is `runtime::PjrtTrainer`.
+
+use super::{cnn, eval_with, mlp, EvalResult, LocalTrainer, ModelKind};
+use crate::data::loader::{Batch, EvalBatches};
+
+#[derive(Debug, Clone, Copy)]
+pub struct NativeTrainer {
+    kind: ModelKind,
+}
+
+impl NativeTrainer {
+    pub fn new(kind: ModelKind) -> Self {
+        Self { kind }
+    }
+}
+
+impl LocalTrainer for NativeTrainer {
+    fn model(&self) -> ModelKind {
+        self.kind
+    }
+
+    fn grad(&self, params: &[f32], batch: &Batch) -> (Vec<f32>, f32) {
+        assert_eq!(params.len(), self.kind.dim());
+        assert_eq!(batch.feature_dim, self.kind.input_dim());
+        match self.kind {
+            ModelKind::Mlp => mlp::grad(params, &batch.x, &batch.y),
+            ModelKind::Cnn => cnn::grad(params, &batch.x, &batch.y),
+        }
+    }
+
+    fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult {
+        eval_with(batches, |batch, valid| match self.kind {
+            ModelKind::Mlp => mlp::eval_batch(params, &batch.x, &batch.y, valid),
+            ModelKind::Cnn => cnn::eval_batch(params, &batch.x, &batch.y, valid),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::loader::{eval_batches, ClientLoader};
+    use crate::data::{synthetic, DatasetKind};
+    use crate::model::init_params;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn train_step_matches_manual_composition() {
+        let mut rng = Rng::seed_from_u64(1);
+        let tt = synthetic::generate(DatasetKind::Mnist, 64, 16, &mut rng);
+        let data = Arc::new(tt.train);
+        let mut loader =
+            ClientLoader::new(Arc::clone(&data), (0..64).collect(), 8, Rng::seed_from_u64(2));
+        let batch = loader.next_batch();
+        let trainer = NativeTrainer::new(ModelKind::Mlp);
+        let params = init_params(ModelKind::Mlp, &mut rng);
+        let h: Vec<f32> = (0..params.len()).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+        let gamma = 0.1;
+        let (stepped, loss) = trainer.train_step(&params, &h, &batch, gamma);
+        let (g, loss2) = trainer.grad(&params, &batch);
+        assert_eq!(loss, loss2);
+        for i in 0..params.len() {
+            let expect = params[i] - gamma * (g[i] - h[i]);
+            assert!((stepped[i] - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn masked_step_uses_compressed_gradient_point() {
+        let mut rng = Rng::seed_from_u64(3);
+        let tt = synthetic::generate(DatasetKind::Mnist, 32, 8, &mut rng);
+        let data = Arc::new(tt.train);
+        let mut loader =
+            ClientLoader::new(Arc::clone(&data), (0..32).collect(), 8, Rng::seed_from_u64(4));
+        let batch = loader.next_batch();
+        let trainer = NativeTrainer::new(ModelKind::Mlp);
+        let params = init_params(ModelKind::Mlp, &mut rng);
+        let h = vec![0.0f32; params.len()];
+        // density=1.0 must equal the unmasked step exactly.
+        let (full, _) = trainer.train_step(&params, &h, &batch, 0.1);
+        let (masked_full, _) = trainer.train_step_masked(&params, &h, &batch, 0.1, 1.0);
+        assert_eq!(full, masked_full);
+        // A tiny density must differ (gradient at a heavily masked model).
+        let (masked_tiny, _) = trainer.train_step_masked(&params, &h, &batch, 0.1, 0.01);
+        assert_ne!(full, masked_tiny);
+    }
+
+    #[test]
+    fn federated_local_epochs_learn_on_synthetic_mnist() {
+        // Single-client sanity: 60 local SGD steps should beat chance
+        // accuracy clearly (>30% over 10 classes).
+        let mut rng = Rng::seed_from_u64(5);
+        let tt = synthetic::generate(DatasetKind::Mnist, 512, 256, &mut rng);
+        let train = Arc::new(tt.train);
+        let mut loader =
+            ClientLoader::new(Arc::clone(&train), (0..512).collect(), 32, Rng::seed_from_u64(6));
+        let trainer = NativeTrainer::new(ModelKind::Mlp);
+        let mut params = init_params(ModelKind::Mlp, &mut rng);
+        let h = vec![0.0f32; params.len()];
+        for _ in 0..300 {
+            let batch = loader.next_batch();
+            let (next, _) = trainer.train_step(&params, &h, &batch, 0.05);
+            params = next;
+        }
+        let eb = eval_batches(&tt.test, 64);
+        let result = trainer.eval(&params, &eb);
+        assert!(
+            result.accuracy > 0.6,
+            "accuracy too low: {}",
+            result.accuracy
+        );
+        assert_eq!(result.examples, 256);
+    }
+}

@@ -1,0 +1,621 @@
+//! Neural-net primitive ops (forward + backward) for the native trainer.
+//!
+//! These back the pure-Rust [`super::native::NativeTrainer`], the PJRT-free
+//! twin of the AOT-compiled JAX programs. Numerics are cross-checked against
+//! the HLO artifacts in `rust/tests/runtime_artifacts.rs`. The matmul is a
+//! blocked, autovectorizing kernel — enough to keep the CNN usable for
+//! tests/benches; the production hot path runs through XLA.
+
+/// C[m×n] = A[m×k] @ B[k×n]  (row-major, accumulate into zeroed C).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// C += A @ B — ikj loop order so the inner loop streams B and C rows
+/// (unit stride ⇒ autovectorizes).
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    const KB: usize = 64; // K-blocking keeps B panel in L1/L2
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = a_row[kk];
+                if aik == 0.0 {
+                    continue; // sparse activations (post-ReLU) skip cheaply
+                }
+                let b_row = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+/// C[m×n] = A[k×m]ᵀ @ B[k×n]  (used for weight gradients: dW = Xᵀ @ dY).
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for kk in 0..k {
+        let a_row = &a[kk * m..(kk + 1) * m];
+        let b_row = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aik = a_row[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// C[m×n] = A[m×k] @ B[n×k]ᵀ  (used for input gradients: dX = dY @ Wᵀ).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let b_row = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in a_row.iter().zip(b_row) {
+                acc += av * bv;
+            }
+            c_row[j] = acc;
+        }
+    }
+}
+
+/// y = relu(x) in place; returns nothing (mask recoverable from y > 0).
+#[inline]
+pub fn relu_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// dx = dy ⊙ 1[y > 0] in place on dy (y is the *post*-ReLU activation).
+#[inline]
+pub fn relu_backward_inplace(dy: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(dy.len(), y.len());
+    for (d, &a) in dy.iter_mut().zip(y) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Add bias row-wise: X[m×n] += b[n].
+#[inline]
+pub fn add_bias(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * n);
+    debug_assert_eq!(bias.len(), n);
+    for row in x.chunks_exact_mut(n) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// db[n] = Σ_rows dY[m×n].
+#[inline]
+pub fn bias_grad(dy: &[f32], db: &mut [f32], m: usize, n: usize) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(db.len(), n);
+    db.fill(0.0);
+    for row in dy.chunks_exact(n) {
+        for (g, &v) in db.iter_mut().zip(row) {
+            *g += v;
+        }
+    }
+}
+
+/// Softmax cross-entropy over logits[m×n] with integer labels.
+/// Returns (mean loss, dlogits[m×n] already scaled by 1/m).
+pub fn softmax_cross_entropy(logits: &[f32], labels: &[i32], n: usize) -> (f32, Vec<f32>) {
+    let m = labels.len();
+    debug_assert_eq!(logits.len(), m * n);
+    let mut dlogits = vec![0.0f32; m * n];
+    let mut loss_acc = 0.0f64;
+    for (row, &label) in labels.iter().enumerate() {
+        let lo = row * n;
+        let z = &logits[lo..lo + n];
+        let zmax = z.iter().cloned().fold(f32::MIN, f32::max);
+        let mut denom = 0.0f64;
+        for &v in z {
+            denom += ((v - zmax) as f64).exp();
+        }
+        let log_denom = denom.ln() as f32 + zmax;
+        let label = label as usize;
+        debug_assert!(label < n);
+        loss_acc += (log_denom - z[label]) as f64;
+        let dl = &mut dlogits[lo..lo + n];
+        for (j, dv) in dl.iter_mut().enumerate() {
+            let p = (((z[j] - zmax) as f64).exp() / denom) as f32;
+            *dv = (p - if j == label { 1.0 } else { 0.0 }) / m as f32;
+        }
+    }
+    ((loss_acc / m as f64) as f32, dlogits)
+}
+
+/// Count of argmax(logits_row) == label.
+pub fn count_correct(logits: &[f32], labels: &[i32], n: usize, valid: usize) -> usize {
+    labels
+        .iter()
+        .take(valid)
+        .enumerate()
+        .filter(|&(row, &label)| {
+            let z = &logits[row * n..(row + 1) * n];
+            let mut best = 0usize;
+            for j in 1..n {
+                if z[j] > z[best] {
+                    best = j;
+                }
+            }
+            best == label as usize
+        })
+        .count()
+}
+
+/// Sum of per-row CE losses for the first `valid` rows (no gradient).
+pub fn cross_entropy_sum(logits: &[f32], labels: &[i32], n: usize, valid: usize) -> f64 {
+    let mut acc = 0.0f64;
+    for (row, &label) in labels.iter().take(valid).enumerate() {
+        let z = &logits[row * n..(row + 1) * n];
+        let zmax = z.iter().cloned().fold(f32::MIN, f32::max);
+        let denom: f64 = z.iter().map(|&v| ((v - zmax) as f64).exp()).sum();
+        acc += denom.ln() + zmax as f64 - z[label as usize] as f64;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// Convolution via im2col (NCHW activations, OIHW weights, valid padding,
+// stride 1 — the FedLab CIFAR CNN uses exactly this shape).
+// ---------------------------------------------------------------------------
+
+/// Geometry of one conv layer.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvShape {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub k: usize, // square kernel
+}
+
+impl ConvShape {
+    pub fn out_h(&self) -> usize {
+        self.in_h - self.k + 1
+    }
+    pub fn out_w(&self) -> usize {
+        self.in_w - self.k + 1
+    }
+    pub fn col_rows(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+    pub fn col_cols(&self) -> usize {
+        self.in_ch * self.k * self.k
+    }
+}
+
+/// im2col for one image: col[(oh·ow) × (in_ch·k·k)].
+pub fn im2col(x: &[f32], s: &ConvShape, col: &mut [f32]) {
+    let (oh, ow, k) = (s.out_h(), s.out_w(), s.k);
+    debug_assert_eq!(x.len(), s.in_ch * s.in_h * s.in_w);
+    debug_assert_eq!(col.len(), s.col_rows() * s.col_cols());
+    let cc = s.col_cols();
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * cc;
+            let mut c = row;
+            for ch in 0..s.in_ch {
+                let plane = ch * s.in_h * s.in_w;
+                for ky in 0..k {
+                    let src = plane + (oy + ky) * s.in_w + ox;
+                    col[c..c + k].copy_from_slice(&x[src..src + k]);
+                    c += k;
+                }
+            }
+        }
+    }
+}
+
+/// col2im accumulate (transpose of im2col) for input gradients.
+pub fn col2im_acc(col: &[f32], s: &ConvShape, dx: &mut [f32]) {
+    let (oh, ow, k) = (s.out_h(), s.out_w(), s.k);
+    debug_assert_eq!(dx.len(), s.in_ch * s.in_h * s.in_w);
+    let cc = s.col_cols();
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * cc;
+            let mut c = row;
+            for ch in 0..s.in_ch {
+                let plane = ch * s.in_h * s.in_w;
+                for ky in 0..k {
+                    let dst = plane + (oy + ky) * s.in_w + ox;
+                    for kx in 0..k {
+                        dx[dst + kx] += col[c + kx];
+                    }
+                    c += k;
+                }
+            }
+        }
+    }
+}
+
+/// Forward conv for a batch.
+/// x:[b, in_ch, h, w], w:[out_ch, in_ch·k·k] (OIHW flattened), bias:[out_ch]
+/// → y:[b, out_ch, oh, ow]. `col_buf` is scratch of size col_rows·col_cols.
+pub fn conv2d_forward(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    s: &ConvShape,
+    batch: usize,
+    y: &mut [f32],
+    col_buf: &mut [f32],
+) {
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let ysz = s.out_ch * oh * ow;
+    let xsz = s.in_ch * s.in_h * s.in_w;
+    debug_assert_eq!(x.len(), batch * xsz);
+    debug_assert_eq!(y.len(), batch * ysz);
+    debug_assert_eq!(w.len(), s.out_ch * s.col_cols());
+    for b in 0..batch {
+        im2col(&x[b * xsz..(b + 1) * xsz], s, col_buf);
+        // y_b[out_ch × (oh·ow)] = W[out_ch × cc] @ colᵀ[(cc) × (oh·ow)]
+        // computed as (col @ Wᵀ)ᵀ; we directly fill channel-major:
+        let yb = &mut y[b * ysz..(b + 1) * ysz];
+        matmul_a_bt(w, col_buf, yb, s.out_ch, s.col_cols(), s.col_rows());
+        for oc in 0..s.out_ch {
+            let row = &mut yb[oc * oh * ow..(oc + 1) * oh * ow];
+            for v in row.iter_mut() {
+                *v += bias[oc];
+            }
+        }
+    }
+}
+
+/// Backward conv: given dy, produce dW, db, and (optionally) dx.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    s: &ConvShape,
+    batch: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+    col_buf: &mut [f32],
+    dcol_buf: &mut [f32],
+) {
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let ysz = s.out_ch * oh * ow;
+    let xsz = s.in_ch * s.in_h * s.in_w;
+    let cc = s.col_cols();
+    let cr = s.col_rows();
+    dw.fill(0.0);
+    db.fill(0.0);
+    let mut dx = dx;
+    if let Some(dx) = dx.as_deref_mut() {
+        dx.fill(0.0);
+    }
+    for b in 0..batch {
+        let dyb = &dy[b * ysz..(b + 1) * ysz]; // [out_ch × cr]
+        im2col(&x[b * xsz..(b + 1) * xsz], s, col_buf); // [cr × cc]
+        // dW[oc × cc] += dyb[oc × cr] @ col[cr × cc]
+        matmul_acc(dyb, col_buf, dw, s.out_ch, cr, cc);
+        for oc in 0..s.out_ch {
+            db[oc] += dyb[oc * cr..(oc + 1) * cr].iter().sum::<f32>();
+        }
+        if let Some(dx) = dx.as_deref_mut() {
+            // dcol[cr × cc] = dybᵀ[cr × oc] @ W[oc × cc]
+            matmul_at_b(dyb, w, dcol_buf, cr, s.out_ch, cc);
+            col2im_acc(dcol_buf, s, &mut dx[b * xsz..(b + 1) * xsz]);
+        }
+    }
+}
+
+/// 2×2 max-pool forward (stride 2) on [b, ch, h, w] with argmax bookkeeping.
+pub fn maxpool2_forward(
+    x: &[f32],
+    batch_ch: usize, // batch · channels (pooling is per-plane)
+    h: usize,
+    w: usize,
+    y: &mut [f32],
+    argmax: &mut [u32],
+) {
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(x.len(), batch_ch * h * w);
+    debug_assert_eq!(y.len(), batch_ch * oh * ow);
+    debug_assert_eq!(argmax.len(), y.len());
+    for p in 0..batch_ch {
+        let xp = &x[p * h * w..(p + 1) * h * w];
+        let yo = p * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base = (2 * oy) * w + 2 * ox;
+                let cands = [base, base + 1, base + w, base + w + 1];
+                let mut best = cands[0];
+                for &c in &cands[1..] {
+                    if xp[c] > xp[best] {
+                        best = c;
+                    }
+                }
+                y[yo + oy * ow + ox] = xp[best];
+                argmax[yo + oy * ow + ox] = (p * h * w + best) as u32;
+            }
+        }
+    }
+}
+
+/// Max-pool backward: scatter dy into dx at the recorded argmax positions.
+pub fn maxpool2_backward(dy: &[f32], argmax: &[u32], dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), argmax.len());
+    dx.fill(0.0);
+    for (&g, &pos) in dy.iter().zip(argmax) {
+        dx[pos as usize] += g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 1.0, 1.0, 1.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(1);
+        let (m, k, n) = (7, 13, 5);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, &mut c, m, k, n);
+        // aᵀ stored: build A' = aᵀ [k×m], use matmul_at_b
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        matmul_at_b(&at, &b, &mut c2, m, k, n);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // bᵀ stored: B' = bᵀ [n×k], use matmul_a_bt
+        let mut bt = vec![0.0; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut c3 = vec![0.0; m * n];
+        matmul_a_bt(&a, &bt, &mut c3, m, k, n);
+        for (x, y) in c.iter().zip(&c3) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_ce_gradient_numerically() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(2);
+        let (m, n) = (4, 6);
+        let logits: Vec<f32> = (0..m * n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let labels: Vec<i32> = (0..m).map(|_| rng.below(n as u64) as i32).collect();
+        let (loss, grad) = softmax_cross_entropy(&logits, &labels, n);
+        assert!(loss > 0.0);
+        let eps = 1e-3f32;
+        for idx in 0..m * n {
+            let mut lp = logits.clone();
+            lp[idx] += eps;
+            let (loss_p, _) = softmax_cross_entropy(&lp, &labels, n);
+            let mut lm = logits.clone();
+            lm[idx] -= eps;
+            let (loss_m, _) = softmax_cross_entropy(&lm, &labels, n);
+            let num = (loss_p - loss_m) / (2.0 * eps);
+            assert!(
+                (num - grad[idx]).abs() < 1e-2,
+                "idx {idx}: numeric {num} analytic {}",
+                grad[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_zero_grad() {
+        let logits = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let labels = vec![0, 2];
+        let (_, grad) = softmax_cross_entropy(&logits, &labels, 3);
+        for row in grad.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn relu_and_backward() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu_inplace(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        let mut dy = vec![5.0, 5.0, 5.0];
+        relu_backward_inplace(&mut dy, &x);
+        assert_eq!(dy, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), c> == <x, col2im(c)> — the two must be adjoint maps.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(3);
+        let s = ConvShape {
+            in_ch: 2,
+            out_ch: 1,
+            in_h: 6,
+            in_w: 5,
+            k: 3,
+        };
+        let x: Vec<f32> = (0..s.in_ch * s.in_h * s.in_w)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        let mut col = vec![0.0; s.col_rows() * s.col_cols()];
+        im2col(&x, &s, &mut col);
+        let c: Vec<f32> = (0..col.len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let lhs: f64 = col.iter().zip(&c).map(|(&a, &b)| (a * b) as f64).sum();
+        let mut back = vec![0.0; x.len()];
+        col2im_acc(&c, &s, &mut back);
+        let rhs: f64 = x.iter().zip(&back).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn conv_forward_known_value() {
+        // 1 channel 3x3 input, 2x2 kernel of ones, no bias:
+        // each output = sum of 2x2 patch.
+        let s = ConvShape {
+            in_ch: 1,
+            out_ch: 1,
+            in_h: 3,
+            in_w: 3,
+            k: 2,
+        };
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let w = [1.0, 1.0, 1.0, 1.0];
+        let bias = [0.5];
+        let mut y = vec![0.0; 4];
+        let mut col = vec![0.0; s.col_rows() * s.col_cols()];
+        conv2d_forward(&x, &w, &bias, &s, 1, &mut y, &mut col);
+        assert_eq!(y, vec![12.5, 16.5, 24.5, 28.5]);
+    }
+
+    #[test]
+    fn conv_backward_matches_numeric() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(4);
+        let s = ConvShape {
+            in_ch: 2,
+            out_ch: 3,
+            in_h: 5,
+            in_w: 5,
+            k: 3,
+        };
+        let batch = 2;
+        let xsz = s.in_ch * s.in_h * s.in_w;
+        let ysz = s.out_ch * s.out_h() * s.out_w();
+        let x: Vec<f32> = (0..batch * xsz).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let w: Vec<f32> = (0..s.out_ch * s.col_cols())
+            .map(|_| rng.normal_f32(0.0, 0.5))
+            .collect();
+        let bias: Vec<f32> = (0..s.out_ch).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        // Loss = sum(y * t) for random t -> dy = t.
+        let t: Vec<f32> = (0..batch * ysz).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut col = vec![0.0; s.col_rows() * s.col_cols()];
+        let mut dcol = vec![0.0; col.len()];
+        let fwd_loss = |w: &[f32], bias: &[f32], x: &[f32]| -> f64 {
+            let mut y = vec![0.0; batch * ysz];
+            let mut colb = vec![0.0; s.col_rows() * s.col_cols()];
+            conv2d_forward(x, w, bias, &s, batch, &mut y, &mut colb);
+            y.iter().zip(&t).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let mut dw = vec![0.0; w.len()];
+        let mut db = vec![0.0; bias.len()];
+        let mut dx = vec![0.0; x.len()];
+        conv2d_backward(&x, &w, &t, &s, batch, &mut dw, &mut db, Some(&mut dx), &mut col, &mut dcol);
+        let eps = 1e-2f32;
+        // Spot-check a handful of coordinates of each gradient.
+        for &i in &[0usize, 7, w.len() / 2, w.len() - 1] {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let num = (fwd_loss(&wp, &bias, &x) - fwd_loss(&wm, &bias, &x)) / (2.0 * eps as f64);
+            assert!(
+                (num - dw[i] as f64).abs() < 0.05 * (num.abs().max(1.0)),
+                "dw[{i}]: numeric {num} analytic {}",
+                dw[i]
+            );
+        }
+        for &i in &[0usize, x.len() / 3, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (fwd_loss(&w, &bias, &xp) - fwd_loss(&w, &bias, &xm)) / (2.0 * eps as f64);
+            assert!(
+                (num - dx[i] as f64).abs() < 0.05 * (num.abs().max(1.0)),
+                "dx[{i}]: numeric {num} analytic {}",
+                dx[i]
+            );
+        }
+        for i in 0..bias.len() {
+            let mut bp = bias.clone();
+            bp[i] += eps;
+            let mut bm = bias.clone();
+            bm[i] -= eps;
+            let num = (fwd_loss(&w, &bp, &x) - fwd_loss(&w, &bm, &x)) / (2.0 * eps as f64);
+            assert!((num - db[i] as f64).abs() < 0.05 * num.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        // One 4x4 plane.
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 2.0,   5.0, 6.0,
+            3.0, 4.0,   8.0, 7.0,
+            0.0, 0.5,   1.0, 1.5,
+            0.2, 0.1,   2.0, 1.0,
+        ];
+        let mut y = vec![0.0; 4];
+        let mut arg = vec![0u32; 4];
+        maxpool2_forward(&x, 1, 4, 4, &mut y, &mut arg);
+        assert_eq!(y, vec![4.0, 8.0, 0.5, 2.0]);
+        let dy = vec![1.0, 2.0, 3.0, 4.0];
+        let mut dx = vec![0.0; 16];
+        maxpool2_backward(&dy, &arg, &mut dx);
+        assert_eq!(dx[5], 1.0); // position of 4.0
+        assert_eq!(dx[6], 2.0); // position of 8.0
+        assert_eq!(dx[9], 3.0); // position of 0.5
+        assert_eq!(dx[14], 4.0); // position of 2.0
+        assert_eq!(dx.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn count_correct_and_ce_sum() {
+        let logits = vec![1.0, 5.0, 0.0, 9.0, 0.0, 0.0];
+        let labels = vec![1, 0];
+        assert_eq!(count_correct(&logits, &labels, 3, 2), 2);
+        assert_eq!(count_correct(&logits, &labels, 3, 1), 1);
+        let ce = cross_entropy_sum(&logits, &labels, 3, 2);
+        assert!(ce > 0.0 && ce < 0.1); // confident correct predictions
+    }
+}

@@ -1,0 +1,242 @@
+//! `artifacts/manifest.json` schema: what the AOT step produced.
+//!
+//! The manifest is the single source of truth for executable shapes; the
+//! runtime validates every call against it, so a Rust/Python layout drift
+//! fails loudly at load time instead of producing garbage numerics.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub dim: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl ModelSpec {
+    pub fn input_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("manifest missing field {0}")]
+    Missing(String),
+    #[error("artifact file missing: {0}")]
+    FileMissing(PathBuf),
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
+            path: path.clone(),
+            source,
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
+        let root = json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let artifacts_obj = root
+            .get("artifacts")
+            .and_then(Json::members)
+            .ok_or_else(|| ManifestError::Missing("artifacts".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in artifacts_obj {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ManifestError::Missing(format!("artifacts.{name}.file")))?;
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>, ManifestError> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ManifestError::Missing(format!("artifacts.{name}.{key}")))?
+                    .iter()
+                    .map(|t| {
+                        let shape = t
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| ManifestError::Missing("shape".into()))?
+                            .iter()
+                            .map(|v| v.as_usize().ok_or_else(|| ManifestError::Parse("bad dim".into())))
+                            .collect::<Result<Vec<_>, _>>()?;
+                        let dtype = t
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| ManifestError::Missing("dtype".into()))?
+                            .to_string();
+                        Ok(TensorSpec { shape, dtype })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_tensors("inputs")?,
+                    outputs: parse_tensors("outputs")?,
+                },
+            );
+        }
+
+        let models_obj = root
+            .get("models")
+            .and_then(Json::members)
+            .ok_or_else(|| ManifestError::Missing("models".into()))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in models_obj {
+            let get = |key: &str| -> Result<usize, ManifestError> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| ManifestError::Missing(format!("models.{name}.{key}")))
+            };
+            let input_shape = entry
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ManifestError::Missing(format!("models.{name}.input_shape")))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    dim: get("dim")?,
+                    batch: get("batch")?,
+                    eval_batch: get("eval_batch")?,
+                    input_shape,
+                    num_classes: get("num_classes")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            models,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, ManifestError> {
+        let spec = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| ManifestError::Missing(format!("artifact '{name}'")))?;
+        if !spec.file.is_file() {
+            return Err(ManifestError::FileMissing(spec.file.clone()));
+        }
+        Ok(spec)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec, ManifestError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| ManifestError::Missing(format!("model '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1,
+        "hlo": "text",
+        "artifacts": {
+            "mlp_train_step": {
+                "file": "mlp_train_step.hlo.txt",
+                "inputs": [
+                    {"shape": [109386], "dtype": "float32"},
+                    {"shape": [109386], "dtype": "float32"},
+                    {"shape": [64, 784], "dtype": "float32"},
+                    {"shape": [64], "dtype": "int32"},
+                    {"shape": [], "dtype": "float32"}
+                ],
+                "outputs": [
+                    {"shape": [109386], "dtype": "float32"},
+                    {"shape": [], "dtype": "float32"}
+                ]
+            }
+        },
+        "models": {
+            "mlp": {"dim": 109386, "batch": 64, "eval_batch": 256,
+                     "input_shape": [784], "num_classes": 10}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        let a = &m.artifacts["mlp_train_step"];
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[0].elements(), 109_386);
+        assert_eq!(a.inputs[2].shape, vec![64, 784]);
+        assert_eq!(a.inputs[4].shape, Vec::<usize>::new()); // scalar
+        assert_eq!(a.outputs[1].dtype, "float32");
+        let model = m.model("mlp").unwrap();
+        assert_eq!(model.dim, 109_386);
+        assert_eq!(model.input_dim(), 784);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"artifacts":{}}"#).is_err());
+        let bad = r#"{"artifacts": {"x": {"inputs": [], "outputs": []}}, "models": {}}"#;
+        assert!(matches!(
+            Manifest::parse(Path::new("/tmp"), bad),
+            Err(ManifestError::Missing(_))
+        ));
+    }
+
+    #[test]
+    fn artifact_checks_file_presence() {
+        let m = Manifest::parse(Path::new("/definitely/missing"), SAMPLE).unwrap();
+        assert!(matches!(
+            m.artifact("mlp_train_step"),
+            Err(ManifestError::FileMissing(_))
+        ));
+        assert!(matches!(m.artifact("nope"), Err(ManifestError::Missing(_))));
+    }
+}

@@ -1,0 +1,199 @@
+//! PJRT engine: owns the client and the compiled executables.
+//!
+//! ## Thread-safety
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), and
+//! `execute` clones the client into every output buffer, so concurrent calls
+//! from multiple coordinator workers would race on the `Rc` refcount. All
+//! engine state therefore lives behind one `Mutex`, and `unsafe impl
+//! Send/Sync` is justified by the invariant that *every* touch of an xla
+//! type goes through that lock. Serializing calls costs little here: the
+//! XLA-CPU executable parallelizes internally (Eigen thread pool), so the
+//! device is already saturated by one call at a time.
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("manifest: {0}")]
+    Manifest(#[from] super::artifacts::ManifestError),
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("artifact '{name}' input {index}: expected {expected} elements, got {got}")]
+    BadInput {
+        name: String,
+        index: usize,
+        expected: usize,
+        got: usize,
+    },
+    #[error("artifact '{name}': expected {expected} inputs, got {got}")]
+    BadArity {
+        name: String,
+        expected: usize,
+        got: usize,
+    },
+}
+
+fn xla_err(e: xla::Error) -> RuntimeError {
+    RuntimeError::Xla(e.to_string())
+}
+
+/// A host-side input value for an executable call.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+}
+
+impl Input<'_> {
+    fn elements(&self) -> usize {
+        match self {
+            Input::F32(v) => v.len(),
+            Input::I32(v) => v.len(),
+            Input::ScalarF32(_) => 1,
+        }
+    }
+}
+
+/// A host-side output value from an executable call.
+#[derive(Debug, Clone)]
+pub enum Output {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Output {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Output::F32(v) => v,
+            Output::I32(_) => panic!("output is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Output::I32(v) => v,
+            Output::F32(_) => panic!("output is f32, expected i32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        let v = self.as_f32();
+        assert_eq!(v.len(), 1, "expected scalar output");
+        v[0]
+    }
+}
+
+struct Inner {
+    /// Kept alive for the executables' lifetime (they borrow the client
+    /// through internal refcounts).
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, (xla::PjRtLoadedExecutable, ArtifactSpec)>,
+}
+
+// SAFETY: all xla values (client, executables, literals, buffers) are only
+// created/used/dropped inside `Engine` methods while holding `self.inner`'s
+// mutex, so the non-atomic Rc refcounts inside them are never touched from
+// two threads at once. See module docs.
+unsafe impl Send for Inner {}
+
+/// Compiled-artifact registry + PJRT client (see module docs for locking).
+pub struct Engine {
+    inner: Mutex<Inner>,
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and eagerly compile the named artifacts
+    /// (compile once, execute many — the coordinator's hot path never
+    /// compiles).
+    pub fn load(dir: &Path, names: &[&str]) -> Result<Engine, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut executables = BTreeMap::new();
+        for &name in names {
+            let spec = manifest.artifact(name)?.clone();
+            let t0 = std::time::Instant::now();
+            let proto =
+                xla::HloModuleProto::from_text_file(&spec.file).map_err(xla_err)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xla_err)?;
+            log::info!("compiled {name} in {:?}", t0.elapsed());
+            executables.insert(name.to_string(), (exe, spec));
+        }
+        Ok(Engine {
+            inner: Mutex::new(Inner {
+                client,
+                executables,
+            }),
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact with host inputs, returning host outputs.
+    /// Shapes are validated against the manifest before the PJRT call.
+    pub fn call(&self, name: &str, inputs: &[Input<'_>]) -> Result<Vec<Output>, RuntimeError> {
+        let inner = self.inner.lock().expect("engine poisoned");
+        let (exe, spec) = inner
+            .executables
+            .get(name)
+            .unwrap_or_else(|| panic!("artifact '{name}' not loaded"));
+        if inputs.len() != spec.inputs.len() {
+            return Err(RuntimeError::BadArity {
+                name: name.into(),
+                expected: spec.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (index, (input, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if input.elements() != ispec.elements().max(1) {
+                return Err(RuntimeError::BadInput {
+                    name: name.into(),
+                    index,
+                    expected: ispec.elements(),
+                    got: input.elements(),
+                });
+            }
+            let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match input {
+                Input::F32(v) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err)?,
+                Input::I32(v) => xla::Literal::vec1(v).reshape(&dims).map_err(xla_err)?,
+                Input::ScalarF32(v) => xla::Literal::scalar(*v),
+            };
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xla_err)?;
+        let tuple = result[0][0].to_literal_sync().map_err(xla_err)?;
+        // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
+        let parts = tuple.to_tuple().map_err(xla_err)?;
+        let mut outputs = Vec::with_capacity(parts.len());
+        for (part, ospec) in parts.into_iter().zip(&spec.outputs) {
+            let out = match ospec.dtype.as_str() {
+                "int32" => Output::I32(part.to_vec::<i32>().map_err(xla_err)?),
+                _ => Output::F32(part.to_vec::<f32>().map_err(xla_err)?),
+            };
+            outputs.push(out);
+        }
+        Ok(outputs)
+    }
+}
+
+// SAFETY: see Inner — the Mutex is the sole access path.
+unsafe impl Sync for Engine {}
+
+/// Convenience alias kept public for doc examples.
+pub type Executable = ();

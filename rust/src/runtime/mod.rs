@@ -1,0 +1,50 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! coordinator's hot path.
+//!
+//! `python -m compile.aot` (Layer 2) lowers the JAX/Pallas programs to HLO
+//! **text** plus a `manifest.json` describing shapes. This module wraps the
+//! `xla` crate (xla_extension 0.5.1, PJRT C API, CPU plugin):
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   -> HloModuleProto::from_text_file(artifacts/<name>.hlo.txt)
+//!   -> XlaComputation::from_proto -> client.compile
+//!   -> Executable::call(&[inputs]) per local step
+//! ```
+//!
+//! Python is never on this path — the Rust binary is self-contained once
+//! `artifacts/` exists. [`PjrtTrainer`] adapts the compiled programs to the
+//! [`crate::model::LocalTrainer`] trait so every federated algorithm runs
+//! identically on the native and AOT compute planes.
+
+pub mod artifacts;
+pub mod engine;
+pub mod trainer;
+
+pub use artifacts::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+pub use engine::{Engine, Executable};
+pub use trainer::PjrtTrainer;
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory, overridable via FEDCOMLOC_ARTIFACTS.
+/// Searches the working directory and then up to two parents (cargo runs
+/// tests/benches from the package dir, one level below the workspace root).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Some(dir) = std::env::var_os("FEDCOMLOC_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    for prefix in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(prefix);
+        if p.join("manifest.json").is_file() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True when a usable manifest exists (used by tests/benches to decide
+/// whether the PJRT path can run or the native trainer must stand in).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").is_file()
+}

@@ -1,0 +1,187 @@
+//! [`PjrtTrainer`]: the AOT compute plane behind [`LocalTrainer`].
+//!
+//! One compiled executable per program (train_step, train_step_local, grad,
+//! evaluate); each local iteration is exactly one PJRT call. Numerics match
+//! `model::native` (same parameter layout, same loss) up to f32 reduction
+//! order — asserted by `rust/tests/runtime_artifacts.rs`.
+
+use super::engine::{Engine, Input, RuntimeError};
+use crate::data::loader::{Batch, EvalBatches};
+use crate::model::{eval_with, EvalResult, LocalTrainer, ModelKind};
+use std::path::Path;
+use std::sync::Arc;
+
+pub struct PjrtTrainer {
+    engine: Arc<Engine>,
+    kind: ModelKind,
+    name: &'static str,
+    dim: usize,
+    batch: usize,
+    eval_batch: usize,
+}
+
+impl PjrtTrainer {
+    /// Load and compile this model family's artifacts from `dir`.
+    pub fn load(dir: &Path, kind: ModelKind) -> Result<PjrtTrainer, RuntimeError> {
+        let name = kind.name();
+        let names: Vec<String> = ["train_step", "train_step_local", "grad", "evaluate"]
+            .iter()
+            .map(|p| format!("{name}_{p}"))
+            .collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let engine = Engine::load(dir, &name_refs)?;
+        let spec = engine.manifest().model(name)?.clone();
+        assert_eq!(
+            spec.dim,
+            kind.dim(),
+            "manifest dim disagrees with rust model layout — rebuild artifacts"
+        );
+        Ok(PjrtTrainer {
+            engine: Arc::new(engine),
+            kind,
+            name,
+            dim: spec.dim,
+            batch: spec.batch,
+            eval_batch: spec.eval_batch,
+        })
+    }
+
+    /// Share an existing engine (used by tests that also call the
+    /// standalone `quantize` artifact).
+    pub fn from_engine(engine: Arc<Engine>, kind: ModelKind) -> Result<PjrtTrainer, RuntimeError> {
+        let spec = engine.manifest().model(kind.name())?.clone();
+        Ok(PjrtTrainer {
+            engine,
+            kind,
+            name: kind.name(),
+            dim: spec.dim,
+            batch: spec.batch,
+            eval_batch: spec.eval_batch,
+        })
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Static train-batch size of the compiled executables.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Static eval-batch size of the compiled executables.
+    pub fn eval_batch_size(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn check_batch(&self, batch: &Batch) {
+        assert_eq!(
+            batch.batch_size, self.batch,
+            "batch size must match compiled executable ({})",
+            self.batch
+        );
+        assert_eq!(batch.feature_dim, self.kind.input_dim());
+    }
+
+    fn unwrap(err: RuntimeError) -> ! {
+        panic!("PJRT execution failed: {err}");
+    }
+}
+
+impl LocalTrainer for PjrtTrainer {
+    fn model(&self) -> ModelKind {
+        self.kind
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn grad(&self, params: &[f32], batch: &Batch) -> (Vec<f32>, f32) {
+        self.check_batch(batch);
+        let outs = self
+            .engine
+            .call(
+                &format!("{}_grad", self.name),
+                &[
+                    Input::F32(params),
+                    Input::F32(&batch.x),
+                    Input::I32(&batch.y),
+                ],
+            )
+            .unwrap_or_else(|e| Self::unwrap(e));
+        let g = outs[0].as_f32().to_vec();
+        let loss = outs[1].scalar_f32();
+        (g, loss)
+    }
+
+    fn train_step(&self, params: &[f32], h: &[f32], batch: &Batch, gamma: f32) -> (Vec<f32>, f32) {
+        self.check_batch(batch);
+        let outs = self
+            .engine
+            .call(
+                &format!("{}_train_step", self.name),
+                &[
+                    Input::F32(params),
+                    Input::F32(h),
+                    Input::F32(&batch.x),
+                    Input::I32(&batch.y),
+                    Input::ScalarF32(gamma),
+                ],
+            )
+            .unwrap_or_else(|e| Self::unwrap(e));
+        (outs[0].as_f32().to_vec(), outs[1].scalar_f32())
+    }
+
+    fn train_step_masked(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        density: f64,
+    ) -> (Vec<f32>, f32) {
+        self.check_batch(batch);
+        let outs = self
+            .engine
+            .call(
+                &format!("{}_train_step_local", self.name),
+                &[
+                    Input::F32(params),
+                    Input::F32(h),
+                    Input::F32(&batch.x),
+                    Input::I32(&batch.y),
+                    Input::ScalarF32(gamma),
+                    Input::ScalarF32(density as f32),
+                ],
+            )
+            .unwrap_or_else(|e| Self::unwrap(e));
+        (outs[0].as_f32().to_vec(), outs[1].scalar_f32())
+    }
+
+    fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult {
+        eval_with(batches, |batch, valid| {
+            assert_eq!(
+                batch.batch_size, self.eval_batch,
+                "eval batch size must match compiled executable ({})",
+                self.eval_batch
+            );
+            let outs = self
+                .engine
+                .call(
+                    &format!("{}_evaluate", self.name),
+                    &[
+                        Input::F32(params),
+                        Input::F32(&batch.x),
+                        Input::I32(&batch.y),
+                    ],
+                )
+                .unwrap_or_else(|e| Self::unwrap(e));
+            let losses = outs[0].as_f32();
+            let correct = outs[1].as_i32();
+            let loss_sum: f64 = losses.iter().take(valid).map(|&l| l as f64).sum();
+            let n_correct: usize = correct.iter().take(valid).map(|&c| c as usize).sum();
+            (loss_sum, n_correct)
+        })
+    }
+}

@@ -1,0 +1,215 @@
+//! Flat f32 vector math for the coordinator's host-side hot path.
+//!
+//! All model state crosses the L3/L2 boundary as a single flat parameter
+//! vector (see DESIGN.md §3), so server aggregation, control-variate
+//! updates, and baseline optimizers are expressed over `&[f32]` slices.
+//! The kernels here are written to autovectorize; `bench_micro_train_step`
+//! tracks them.
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// y = x (copy)
+#[inline]
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// out = a - b
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, &ai), &bi) in out.iter_mut().zip(a).zip(b) {
+        *o = ai - bi;
+    }
+}
+
+/// Scaffnew local step: out = x − γ·(g − h). The fused form the paper's
+/// Algorithm 1 line 7 needs; mirrored by the L1 Pallas kernel `sgd_cv`.
+#[inline]
+pub fn sgd_control_variate_step(x: &[f32], g: &[f32], h: &[f32], gamma: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), h.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - gamma * (g[i] - h[i]);
+    }
+}
+
+/// Control-variate refresh: h ← h + (p/γ)·(x_new − x_hat) (Algorithm 1 l.16).
+#[inline]
+pub fn control_variate_update(h: &mut [f32], x_new: &[f32], x_hat: &[f32], p_over_gamma: f32) {
+    debug_assert_eq!(h.len(), x_new.len());
+    debug_assert_eq!(h.len(), x_hat.len());
+    for i in 0..h.len() {
+        h[i] += p_over_gamma * (x_new[i] - x_hat[i]);
+    }
+}
+
+/// out = mean of rows (server aggregation). `rows` must be non-empty and
+/// same-length.
+pub fn mean_into(rows: &[&[f32]], out: &mut [f32]) {
+    assert!(!rows.is_empty(), "mean of zero vectors");
+    let d = rows[0].len();
+    debug_assert!(rows.iter().all(|r| r.len() == d));
+    debug_assert_eq!(out.len(), d);
+    out.fill(0.0);
+    for row in rows {
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / rows.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Weighted mean of rows with weights summing to anything positive.
+pub fn weighted_mean_into(rows: &[&[f32]], weights: &[f64], out: &mut [f32]) {
+    assert_eq!(rows.len(), weights.len());
+    assert!(!rows.is_empty());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weights must sum positive");
+    out.fill(0.0);
+    for (row, &w) in rows.iter().zip(weights) {
+        let w = (w / total) as f32;
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += w * v;
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    // Accumulate in f64 for stability on large d.
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32
+}
+
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+}
+
+/// Count of non-zero entries (||x||_0 in Definition 3.1).
+#[inline]
+pub fn nnz(x: &[f32]) -> usize {
+    x.iter().filter(|&&v| v != 0.0).count()
+}
+
+/// Max |x_i|.
+#[inline]
+pub fn max_abs(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// ||a − b||₂ (convergence diagnostics).
+pub fn l2_distance(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn scaffnew_step_matches_formula() {
+        let x = vec![1.0, -2.0, 0.5];
+        let g = vec![0.1, 0.2, -0.3];
+        let h = vec![0.05, -0.1, 0.0];
+        let mut out = vec![0.0; 3];
+        sgd_control_variate_step(&x, &g, &h, 0.5, &mut out);
+        for i in 0..3 {
+            assert!((out[i] - (x[i] - 0.5 * (g[i] - h[i]))).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn control_variate_refresh() {
+        let mut h = vec![0.0, 1.0];
+        control_variate_update(&mut h, &[2.0, 2.0], &[1.0, 4.0], 0.2);
+        assert!((h[0] - 0.2).abs() < 1e-7);
+        assert!((h[1] - (1.0 + 0.2 * (2.0 - 4.0))).abs() < 1e-7);
+    }
+
+    #[test]
+    fn mean_of_rows() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 6.0];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        let mut out = vec![0.0; 2];
+        mean_into(&rows, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_mean_normalizes() {
+        let a = vec![0.0];
+        let b = vec![10.0];
+        let rows: Vec<&[f32]> = vec![&a, &b];
+        let mut out = vec![0.0; 1];
+        weighted_mean_into(&rows, &[1.0, 3.0], &mut out);
+        assert!((out[0] - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn norms_and_counts() {
+        let x = vec![3.0, 0.0, -4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-6);
+        assert_eq!(nnz(&x), 2);
+        assert_eq!(max_abs(&x), 4.0);
+        assert!((dot(&x, &x) - 25.0).abs() < 1e-6);
+        assert!((l2_distance(&x, &[0.0, 0.0, 0.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mean of zero vectors")]
+    fn mean_empty_panics() {
+        let rows: Vec<&[f32]> = vec![];
+        let mut out = vec![0.0; 1];
+        mean_into(&rows, &mut out);
+    }
+}

@@ -1,0 +1,227 @@
+//! In-tree benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries that drive this
+//! module: warmup, calibrated batching so each measurement batch is long
+//! enough to swamp timer noise, repeated sampling, and a report with
+//! mean ± std and quantiles. Results are also appended as JSON lines to
+//! `target/benchkit/<bench>.jsonl` so perf regressions can be diffed across
+//! runs (see EXPERIMENTS.md §Perf).
+
+use crate::util::stats::{format_duration_ns, Summary};
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+/// Harness configuration (tunable per bench binary or via env).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub samples: usize,
+    /// Target wall time per measured sample (iterations are batched to hit
+    /// this, so very fast functions still measure accurately).
+    pub sample_target: Duration,
+    /// Hard cap on total time per benchmark.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // FEDCOMLOC_BENCH_FAST=1 trims everything for CI smoke runs.
+        let fast = std::env::var("FEDCOMLOC_BENCH_FAST").ok().as_deref() == Some("1");
+        if fast {
+            Self {
+                warmup: Duration::from_millis(50),
+                samples: 10,
+                sample_target: Duration::from_millis(10),
+                max_total: Duration::from_secs(5),
+            }
+        } else {
+            Self {
+                warmup: Duration::from_millis(300),
+                samples: 30,
+                sample_target: Duration::from_millis(30),
+                max_total: Duration::from_secs(60),
+            }
+        }
+    }
+}
+
+/// One benchmark group ≈ one paper table/figure or one hot path.
+pub struct Bench {
+    name: String,
+    config: BenchConfig,
+    results: Vec<(String, Summary, f64)>, // (case, per-iter summary ns, iters/sample)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("\n== bench: {name} ==");
+        Self {
+            name: name.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure `f` under the case label. `f` should perform ONE logical
+    /// iteration; batching is handled here.
+    pub fn case<F: FnMut()>(&mut self, label: &str, mut f: F) {
+        let cfg = &self.config;
+        // Warmup + batch calibration.
+        let mut iters_per_sample: u64 = 1;
+        let warmup_start = Instant::now();
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let dt = t.elapsed();
+            if dt >= cfg.sample_target {
+                break;
+            }
+            if warmup_start.elapsed() > cfg.warmup && dt > Duration::ZERO {
+                // Scale batch to hit the target sample duration.
+                let scale = (cfg.sample_target.as_secs_f64() / dt.as_secs_f64()).ceil();
+                iters_per_sample = (iters_per_sample as f64 * scale.max(2.0)) as u64;
+                break;
+            }
+            iters_per_sample = iters_per_sample.saturating_mul(2);
+        }
+
+        // Measurement.
+        let total_start = Instant::now();
+        let mut per_iter_ns: Vec<f64> = Vec::with_capacity(cfg.samples);
+        for _ in 0..cfg.samples {
+            if total_start.elapsed() > cfg.max_total {
+                break;
+            }
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            per_iter_ns.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        if per_iter_ns.is_empty() {
+            per_iter_ns.push(f64::NAN);
+        }
+        let summary = Summary::of(&per_iter_ns);
+        println!(
+            "  {label:<44} {:>12} ± {:>10}  (p95 {:>12}, n={} × {} iters)",
+            format_duration_ns(summary.mean),
+            format_duration_ns(summary.std),
+            format_duration_ns(summary.p95),
+            summary.count,
+            iters_per_sample,
+        );
+        self.results
+            .push((label.to_string(), summary, iters_per_sample as f64));
+    }
+
+    /// Measure a function returning a value (kept alive via black_box).
+    pub fn case_with_output<R, F: FnMut() -> R>(&mut self, label: &str, mut f: F) {
+        self.case(label, || {
+            black_box(f());
+        });
+    }
+
+    /// Record an externally-measured scalar series (used by experiment
+    /// benches that report accuracy/bits rather than wall time).
+    pub fn record_metric(&mut self, label: &str, value: f64, unit: &str) {
+        println!("  {label:<44} {value:>14.6} {unit}");
+    }
+
+    /// Write the JSONL report. Called on drop as well.
+    pub fn finish(&mut self) {
+        if self.results.is_empty() {
+            return;
+        }
+        let dir = std::path::Path::new("target/benchkit");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.jsonl", self.name));
+        let mut lines = String::new();
+        let stamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        for (label, s, iters) in &self.results {
+            use crate::util::json::Json;
+            let mut o = Json::obj();
+            o.set("bench", self.name.as_str().into());
+            o.set("case", label.as_str().into());
+            o.set("mean_ns", s.mean.into());
+            o.set("std_ns", s.std.into());
+            o.set("p95_ns", s.p95.into());
+            o.set("iters_per_sample", (*iters).into());
+            o.set("unix_time", (stamp as f64).into());
+            lines.push_str(&o.to_string_compact());
+            lines.push('\n');
+        }
+        use std::io::Write;
+        if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            let _ = fh.write_all(lines.as_bytes());
+        }
+        self.results.clear();
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            sample_target: Duration::from_micros(200),
+            max_total: Duration::from_millis(500),
+        }
+    }
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::new("benchkit_selftest").with_config(tiny_config());
+        b.case("noop-ish", || {
+            black_box(1 + 1);
+        });
+        b.case_with_output("sum", || (0..100u64).sum::<u64>());
+        b.finish();
+        assert!(std::path::Path::new("target/benchkit/benchkit_selftest.jsonl").exists());
+    }
+
+    #[test]
+    fn timing_orders_are_sane() {
+        // A function that sleeps must measure slower than a no-op.
+        let mut b = Bench::new("benchkit_order").with_config(tiny_config());
+        let mut slow_mean = 0.0;
+        let mut fast_mean = 0.0;
+        {
+            let t = Instant::now();
+            std::hint::black_box(&t);
+        }
+        // Use case() output indirectly: measure manually with same batching.
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            black_box(0u64);
+        }
+        fast_mean += t0.elapsed().as_nanos() as f64;
+        let t1 = Instant::now();
+        for _ in 0..10 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        slow_mean += t1.elapsed().as_nanos() as f64;
+        assert!(slow_mean > fast_mean);
+        b.finish();
+    }
+}

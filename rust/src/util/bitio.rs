@@ -1,0 +1,280 @@
+//! Bit-level serialization.
+//!
+//! Exact wire formats are a first-class concern in this repo: the paper's
+//! headline metric is *communicated bits*, so compressors serialize through
+//! [`BitWriter`]/[`BitReader`] and the transport layer counts real payload
+//! sizes, not nominal estimates.
+//!
+//! Layout: little-endian within a `u64` accumulator, flushed to bytes LSB
+//! first. Fields wider than 57 bits are split.
+
+/// Append-only bit sink.
+#[derive(Default, Debug, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(bytes),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Write the low `width` bits of `value` (0 <= width <= 64).
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || value < (1u64 << width), "value {value} wider than {width} bits");
+        if width == 0 {
+            return;
+        }
+        let mut value = value;
+        let mut width = width;
+        // Fill accumulator; flush full bytes.
+        while width > 0 {
+            let take = (64 - self.nbits).min(width);
+            self.acc |= (value & mask(take)) << self.nbits;
+            self.nbits += take;
+            value = value.checked_shr(take).unwrap_or(0);
+            width -= take;
+            while self.nbits >= 8 {
+                self.buf.push((self.acc & 0xFF) as u8);
+                self.acc >>= 8;
+                self.nbits -= 8;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_bits(v as u64, 32);
+    }
+
+    /// Pad with zero bits to the next byte boundary (no-op when aligned).
+    /// Aligned sections let fixed-width payloads (f32 values) be written
+    /// and read via memcpy-speed paths — see `write_f32_aligned`.
+    pub fn align_to_byte(&mut self) {
+        let rem = (8 - (self.bit_len() % 8) as u32) % 8;
+        self.write_bits(0, rem);
+    }
+
+    /// Fast path for f32 after `align_to_byte`: appends 4 LE bytes.
+    #[inline]
+    pub fn write_f32_aligned(&mut self, v: f32) {
+        debug_assert_eq!(self.nbits, 0, "writer not byte-aligned");
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_f32(&mut self, v: f32) {
+        self.write_bits(v.to_bits() as u64, 32);
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 + self.nbits as u64
+    }
+
+    /// Flush to a byte vector (pads the final partial byte with zeros).
+    pub fn finish(mut self) -> Vec<u8> {
+        while self.nbits > 0 {
+            self.buf.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits = self.nbits.saturating_sub(8);
+        }
+        self.buf
+    }
+}
+
+#[inline(always)]
+fn mask(width: u32) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Sequential bit source over a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self {
+            buf,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Read `width` bits; panics past end-of-buffer (wire corruption is a
+    /// programming error in this in-process transport).
+    #[inline]
+    pub fn read_bits(&mut self, width: u32) -> u64 {
+        debug_assert!(width <= 64);
+        if width == 0 {
+            return 0;
+        }
+        let mut out: u64 = 0;
+        let mut got: u32 = 0;
+        while got < width {
+            if self.nbits == 0 {
+                assert!(self.pos < self.buf.len(), "BitReader: out of data");
+                self.acc = self.buf[self.pos] as u64;
+                self.pos += 1;
+                self.nbits = 8;
+            }
+            let take = self.nbits.min(width - got);
+            out |= (self.acc & mask(take)) << got;
+            self.acc >>= take;
+            self.nbits -= take;
+            got += take;
+        }
+        out
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        self.read_bits(1) != 0
+    }
+
+    #[inline]
+    pub fn read_u32(&mut self) -> u32 {
+        self.read_bits(32) as u32
+    }
+
+    /// Skip to the next byte boundary (mirror of `align_to_byte`).
+    pub fn align_to_byte(&mut self) {
+        self.nbits = 0;
+        self.acc = 0;
+    }
+
+    /// Fast path for f32 after `align_to_byte`: reads 4 LE bytes.
+    #[inline]
+    pub fn read_f32_aligned(&mut self) -> f32 {
+        debug_assert_eq!(self.nbits, 0, "reader not byte-aligned");
+        assert!(self.pos + 4 <= self.buf.len(), "BitReader: out of data");
+        let b = &self.buf[self.pos..self.pos + 4];
+        self.pos += 4;
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    #[inline]
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    /// Bits remaining (counting buffered ones).
+    pub fn remaining_bits(&self) -> u64 {
+        (self.buf.len() - self.pos) as u64 * 8 + self.nbits as u64
+    }
+}
+
+/// Minimal bit width needed to store values in [0, n) (at least 1).
+pub fn bits_for(n: u64) -> u32 {
+    if n <= 1 {
+        1
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_u32(0xDEADBEEF);
+        w.write_bit(true);
+        w.write_bits(0x3FF, 10);
+        w.write_f32(-1.5);
+        w.write_bits(u64::MAX, 64);
+        let nbits = w.bit_len();
+        assert_eq!(nbits, 3 + 32 + 1 + 10 + 32 + 64);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_u32(), 0xDEADBEEF);
+        assert!(r.read_bit());
+        assert_eq!(r.read_bits(10), 0x3FF);
+        assert_eq!(r.read_f32(), -1.5);
+        assert_eq!(r.read_bits(64), u64::MAX);
+    }
+
+    #[test]
+    fn roundtrip_many_random_fields() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(101);
+        for _ in 0..50 {
+            let fields: Vec<(u64, u32)> = (0..200)
+                .map(|_| {
+                    let width = 1 + rng.below(64) as u32;
+                    let value = rng.next_u64() & if width == 64 { u64::MAX } else { (1 << width) - 1 };
+                    (value, width)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, wd) in &fields {
+                w.write_bits(v, wd);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(v, wd) in &fields {
+                assert_eq!(r.read_bits(wd), v, "width {wd}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_len_tracks_padding() {
+        let mut w = BitWriter::new();
+        w.write_bits(1, 3);
+        assert_eq!(w.bit_len(), 3);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), 1); // padded to one byte
+    }
+
+    #[test]
+    fn bits_for_boundaries() {
+        assert_eq!(bits_for(0), 1);
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(256), 8);
+        assert_eq!(bits_for(257), 9);
+        assert_eq!(bits_for(1 << 20), 20);
+        assert_eq!(bits_for((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of data")]
+    fn read_past_end_panics() {
+        let bytes = vec![0u8; 1];
+        let mut r = BitReader::new(&bytes);
+        r.read_bits(9);
+    }
+}

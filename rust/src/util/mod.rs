@@ -1,0 +1,13 @@
+//! Infrastructure substrates built in-tree (the offline vendor set ships no
+//! rand/serde/tokio/clap/criterion/proptest): PRNG and distributions,
+//! bit-exact wire I/O, JSON/TOML, summary statistics, a worker pool, a
+//! bench harness, and a property-testing mini-framework.
+
+pub mod benchkit;
+pub mod bitio;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod toml;

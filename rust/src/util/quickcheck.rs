@@ -1,0 +1,163 @@
+//! Property-testing mini-framework (proptest is not vendored offline).
+//!
+//! Provides seeded generators and a [`check`] driver that runs a property
+//! over many random cases and, on failure, greedily shrinks the input before
+//! reporting. Coordinator invariants (control-variate sums, routing,
+//! compression round-trips) are verified with this in `rust/tests/`.
+//!
+//! ```
+//! use fedcomloc::util::quickcheck::{check, Gen};
+//! check("reverse twice is identity", 200, |g| {
+//!     let xs = g.vec_f32(0..=64, -10.0, 10.0);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if ys == xs { Ok(()) } else { Err(format!("{xs:?}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::RangeInclusive;
+
+/// Per-case generator handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Shrink pass index: 0 = full-size cases; higher = smaller cases.
+    size_scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size_scale: f64) -> Self {
+        Self {
+            rng: Rng::seed_from_u64(seed),
+            size_scale,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer uniformly from an inclusive range, biased smaller when
+    /// shrinking.
+    pub fn usize_in(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        if lo == hi {
+            return lo;
+        }
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size_scale).ceil() as usize;
+        lo + self.rng.below_usize(scaled.max(1).min(span) + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.uniform_f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Vector of f32 with length drawn from `len`, values in [lo, hi),
+    /// with occasional special values (0, ±extremes) mixed in.
+    pub fn vec_f32(&mut self, len: RangeInclusive<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| match self.rng.below(16) {
+                0 => 0.0,
+                1 => lo,
+                2 => hi,
+                _ => self.f32_in(lo, hi),
+            })
+            .collect()
+    }
+
+    pub fn vec_usize(&mut self, len: RangeInclusive<usize>, below: usize) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.below_usize(below)).collect()
+    }
+
+    /// One of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` random inputs. On failure, retries with smaller
+/// generated sizes (a light-weight shrink) and panics with the smallest
+/// failing case's message and the reproducing seed.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = env_seed().unwrap_or(0xFED_C0410C);
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: re-run same seed with progressively smaller sizes and
+            // report the smallest case that still fails.
+            let mut smallest = msg;
+            for scale in [0.5, 0.25, 0.1, 0.02] {
+                let mut g = Gen::new(seed, scale);
+                if let Err(m) = prop(&mut g) {
+                    smallest = m;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, rerun with FEDCOMLOC_QC_SEED={base_seed}):\n  {smallest}"
+            );
+        }
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("FEDCOMLOC_QC_SEED").ok()?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 100, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_name() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generated_vectors_respect_bounds() {
+        check("vec bounds", 100, |g| {
+            let xs = g.vec_f32(0..=32, -2.0, 3.0);
+            if xs.len() <= 32 && xs.iter().all(|&x| (-2.0..=3.0).contains(&x)) {
+                Ok(())
+            } else {
+                Err(format!("{xs:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn usize_in_respects_range() {
+        check("usize_in", 200, |g| {
+            let x = g.usize_in(3..=17);
+            if (3..=17).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+}

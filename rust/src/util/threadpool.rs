@@ -1,0 +1,173 @@
+//! Fixed-size worker pool over std threads + channels.
+//!
+//! tokio is not in the offline vendor set; the coordinator's parallelism
+//! needs are simple and fork-join shaped (run the sampled clients' local
+//! epochs concurrently each round), so a small dedicated pool is the right
+//! tool anyway: no async runtime on the hot path, no per-round thread spawn
+//! cost, deterministic shutdown.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing boxed jobs.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (at least 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("fed-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("worker rx poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            size,
+        }
+    }
+
+    /// Pool sized to available parallelism (capped).
+    pub fn with_default_size(cap: usize) -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::new(n.min(cap.max(1)))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Fork-join map: run `f(i, &items[i])` for every item on the pool and
+    /// collect results in input order. This is the coordinator's per-round
+    /// primitive ("run all sampled clients' local updates").
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send + 'static,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Scoped execution: borrow items/f from the caller without 'static.
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let out_slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+        std::thread::scope(|scope| {
+            let (next, out_slots, f) = (&next, &out_slots, &f);
+            let nworkers = self.size.min(n);
+            for _ in 0..nworkers {
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    **out_slots[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("job not run")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel -> workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<usize> = (0..57).collect();
+        let out = pool.map(&items, |_, &x| x * x);
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map(&Vec::<usize>::new(), |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_runs_concurrently() {
+        // With 4 workers, 8 sleeps of 30ms should take well under 8*30ms.
+        let pool = ThreadPool::new(4);
+        let items = vec![(); 8];
+        let t0 = std::time::Instant::now();
+        pool.map(&items, |_, _| std::thread::sleep(std::time::Duration::from_millis(30)));
+        assert!(t0.elapsed() < std::time::Duration::from_millis(200));
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,288 @@
+//! Minimal TOML parser for experiment config files.
+//!
+//! Supports the subset the config system uses: `[table]` headers (one level,
+//! dotted keys inside a table are not needed), `key = value` pairs with
+//! strings, integers, floats, booleans, and flat arrays of scalars, plus
+//! `#` comments. Values are surfaced as [`TomlValue`]; the typed config
+//! layer (`config/`) does schema validation and defaulting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: top-level keys live in table "" (empty string).
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("TOML parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError {
+            line: lineno + 1,
+            msg: msg.to_string(),
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated table header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err("empty table name"));
+            }
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+        doc.tables
+            .get_mut(&current)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(inner)?;
+        let mut out = Vec::with_capacity(items.len());
+        for item in items {
+            out.push(parse_value(&item)?);
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    // Number: int unless it contains '.', 'e', or 'E'.
+    let numeric = s.replace('_', "");
+    if numeric.contains('.') || numeric.contains('e') || numeric.contains('E') {
+        numeric
+            .parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| format!("invalid float '{s}'"))
+    } else {
+        numeric
+            .parse::<i64>()
+            .map(TomlValue::Int)
+            .map_err(|_| format!("invalid value '{s}'"))
+    }
+}
+
+fn split_top_level(s: &str) -> Result<Vec<String>, String> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1).ok_or("unbalanced ']'")?,
+            ',' if !in_str && depth == 0 => {
+                items.push(s[start..i].trim().to_string());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = s[start..].trim();
+    if !last.is_empty() {
+        items.push(last.to_string());
+    }
+    Ok(items)
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape '\\{:?}'", other)),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+# experiment config
+name = "table1"   # inline comment
+seed = 42
+lr = 0.05
+
+[data]
+dataset = "fedmnist"
+alpha = 0.7
+clients = 100
+
+[compress]
+kind = "topk"
+densities = [0.1, 0.3, 0.5, 0.7, 0.9, 1.0]
+enabled = true
+"#;
+        let doc = parse(text).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "table1");
+        assert_eq!(doc.get("", "seed").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(doc.get("", "lr").unwrap().as_f64().unwrap(), 0.05);
+        assert_eq!(doc.get("data", "clients").unwrap().as_usize().unwrap(), 100);
+        assert!(doc.get("compress", "enabled").unwrap().as_bool().unwrap());
+        let arr = doc.get("compress", "densities").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 6);
+        assert_eq!(arr[0].as_f64().unwrap(), 0.1);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let doc = parse("s = \"a#b\\nc\"").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str().unwrap(), "a#b\nc");
+    }
+
+    #[test]
+    fn int_underscores_and_negatives() {
+        let doc = parse("a = 1_000_000\nb = -3\nc = -2.5e-1").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64().unwrap(), 1_000_000);
+        assert_eq!(doc.get("", "b").unwrap().as_i64().unwrap(), -3);
+        assert_eq!(doc.get("", "c").unwrap().as_f64().unwrap(), -0.25);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[table\nx = 1").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn empty_and_nested_arrays() {
+        let doc = parse("a = []\nb = [[1, 2], [3]]").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_arr().unwrap().len(), 0);
+        let b = doc.get("", "b").unwrap().as_arr().unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].as_arr().unwrap()[1].as_i64().unwrap(), 2);
+    }
+}

@@ -1,0 +1,217 @@
+//! Integration tests: the federated algorithms end-to-end on the native
+//! compute plane (synthetic FedMNIST, scaled-down configs).
+
+use fedcomloc::compress::{parse_spec, Identity, TopK};
+use fedcomloc::data::DatasetKind;
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::ModelKind;
+use std::sync::Arc;
+
+fn quick_cfg() -> RunConfig {
+    RunConfig {
+        train_n: 2_000,
+        test_n: 500,
+        n_clients: 20,
+        clients_per_round: 5,
+        rounds: 25,
+        eval_every: 5,
+        gamma: 0.05,
+        ..RunConfig::default_mnist()
+    }
+}
+
+fn native() -> Arc<NativeTrainer> {
+    Arc::new(NativeTrainer::new(ModelKind::Mlp))
+}
+
+#[test]
+fn fedcomloc_com_learns_and_counts_bits() {
+    let cfg = quick_cfg();
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(TopK::with_density(0.3)),
+    };
+    let log = run(&cfg, native(), &spec);
+    assert_eq!(log.records.len(), 25);
+    let acc = log.best_accuracy().unwrap();
+    assert!(acc > 0.45, "accuracy {acc}");
+    // Compressed uplink must be well below dense uplink.
+    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    let r0 = &log.records[0];
+    assert!(r0.uplink_bits < dense_bits / 2, "uplink {}", r0.uplink_bits);
+    assert_eq!(r0.downlink_bits, dense_bits);
+    // Cumulative counters are monotone.
+    for w in log.records.windows(2) {
+        assert!(w[1].cum_uplink_bits > w[0].cum_uplink_bits);
+        assert!(w[1].total_cost > w[0].total_cost);
+    }
+}
+
+#[test]
+fn fedcomloc_uncompressed_beats_chance_quickly() {
+    let cfg = quick_cfg();
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(Identity),
+    };
+    let log = run(&cfg, native(), &spec);
+    assert!(log.best_accuracy().unwrap() > 0.5);
+    // Identity uplink counts full dense bits.
+    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    assert_eq!(log.records[0].uplink_bits, dense_bits);
+}
+
+#[test]
+fn variants_all_run_and_learn() {
+    for variant in [Variant::Com, Variant::Local, Variant::Global] {
+        let cfg = quick_cfg();
+        let spec = AlgorithmSpec::FedComLoc {
+            variant,
+            compressor: Box::new(TopK::with_density(0.5)),
+        };
+        let log = run(&cfg, native(), &spec);
+        let acc = log.best_accuracy().unwrap();
+        assert!(acc > 0.35, "variant {variant:?} acc {acc}");
+        if variant == Variant::Global {
+            // Downlink compressed after the first aggregation.
+            let later = &log.records[3];
+            let dense =
+                32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+            assert!(later.downlink_bits < dense, "downlink {}", later.downlink_bits);
+        }
+    }
+}
+
+#[test]
+fn quantized_fedcomloc_learns() {
+    let cfg = quick_cfg();
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: parse_spec("q:8").unwrap(),
+    };
+    let log = run(&cfg, native(), &spec);
+    assert!(log.best_accuracy().unwrap() > 0.45);
+    // 8-bit quantization: ~10 bits/coord on our wire vs 32 dense.
+    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    assert!(log.records[0].uplink_bits < dense_bits / 3 + 64_000);
+}
+
+#[test]
+fn baselines_run_and_learn() {
+    let cfg = quick_cfg();
+    for spec in [
+        AlgorithmSpec::FedAvg {
+            compressor: Box::new(Identity),
+        },
+        AlgorithmSpec::FedAvg {
+            compressor: Box::new(TopK::with_density(0.3)),
+        },
+        AlgorithmSpec::Scaffold,
+        AlgorithmSpec::FedDyn { alpha: 0.01 },
+    ] {
+        let name = spec.name();
+        let log = run(&cfg, native(), &spec);
+        let acc = log.best_accuracy().unwrap();
+        assert!(acc > 0.3, "{name} acc {acc}");
+        assert_eq!(log.records.len(), cfg.rounds);
+    }
+}
+
+#[test]
+fn scaffold_uplink_is_double() {
+    let cfg = quick_cfg();
+    let log = run(&cfg, native(), &AlgorithmSpec::Scaffold);
+    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    assert_eq!(log.records[0].uplink_bits, 2 * dense_bits);
+    assert_eq!(log.records[0].downlink_bits, 2 * dense_bits);
+}
+
+#[test]
+fn control_variate_sum_stays_zero_for_com() {
+    // Σ h_i = 0 is Algorithm 1's invariant under -Com (exact averaging).
+    use fedcomloc::fed::Federation;
+    let cfg = quick_cfg();
+    let mut fed = Federation::new(&cfg, native());
+    let comp = TopK::with_density(0.3);
+    let log = fedcomloc::fed::scaffnew::run(&cfg, &mut fed, Variant::Com, &comp);
+    assert!(log.best_accuracy().is_some());
+    let h_sum = fed.control_variate_sum();
+    let norm = fedcomloc::tensor::norm2(&h_sum);
+    // f32 accumulation over 25 rounds: tolerance scales with dim.
+    assert!(norm < 0.05, "sum of control variates drifted: {norm}");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let cfg = quick_cfg();
+    let mk = || AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(TopK::with_density(0.3)),
+    };
+    let a = run(&cfg, native(), &mk());
+    let b = run(&cfg, native(), &mk());
+    let accs_a: Vec<_> = a.records.iter().map(|r| r.test_accuracy).collect();
+    let accs_b: Vec<_> = b.records.iter().map(|r| r.test_accuracy).collect();
+    assert_eq!(accs_a, accs_b);
+    assert_eq!(
+        a.records.last().unwrap().cum_uplink_bits,
+        b.records.last().unwrap().cum_uplink_bits
+    );
+}
+
+#[test]
+fn smaller_p_means_fewer_comm_rounds_per_iteration() {
+    // With p = 0.5 vs p = 0.05 the same number of communication rounds
+    // consumes ~10x fewer local iterations.
+    let mut cfg = quick_cfg();
+    cfg.rounds = 20;
+    cfg.p = 0.5;
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(Identity),
+    };
+    let log_hi = run(&cfg, native(), &spec);
+    cfg.p = 0.05;
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(Identity),
+    };
+    let log_lo = run(&cfg, native(), &spec);
+    let iters_hi: usize = log_hi.records.iter().map(|r| r.local_steps).sum();
+    let iters_lo: usize = log_lo.records.iter().map(|r| r.local_steps).sum();
+    assert!(
+        iters_lo > 4 * iters_hi,
+        "p=0.05 iters {iters_lo} vs p=0.5 iters {iters_hi}"
+    );
+    // And total cost reflects the τ-weighted tradeoff.
+    let cost_hi = log_hi.records.last().unwrap().total_cost;
+    let cost_lo = log_lo.records.last().unwrap().total_cost;
+    assert!(cost_lo > cost_hi);
+}
+
+#[test]
+fn dataset_kind_cifar_runs_with_native_cnn() {
+    // Tiny CNN smoke (native conv is slow; keep rounds minimal).
+    let cfg = RunConfig {
+        dataset: DatasetKind::Cifar10,
+        train_n: 320,
+        test_n: 64,
+        n_clients: 4,
+        clients_per_round: 2,
+        rounds: 2,
+        p: 0.5,
+        batch_size: 16,
+        eval_batch: 32,
+        eval_every: 2,
+        ..RunConfig::default_cifar()
+    };
+    let trainer = Arc::new(NativeTrainer::new(ModelKind::Cnn));
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(TopK::with_density(0.3)),
+    };
+    let log = run(&cfg, trainer, &spec);
+    assert_eq!(log.records.len(), 2);
+    assert!(log.best_accuracy().is_some());
+}

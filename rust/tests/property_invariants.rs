@@ -1,0 +1,235 @@
+//! Property-based invariant tests (in-tree quickcheck substrate).
+//!
+//! Coordinator- and compressor-level invariants the paper's correctness
+//! rests on, checked over randomized inputs with shrink-on-failure.
+
+use fedcomloc::compress::{topk, Compressor, DoubleCompress, Identity, QuantizeR, TopK};
+use fedcomloc::tensor;
+use fedcomloc::util::bitio::{BitReader, BitWriter};
+use fedcomloc::util::quickcheck::{check, Gen};
+use fedcomloc::util::rng::Rng;
+
+fn any_vec(g: &mut Gen) -> Vec<f32> {
+    g.vec_f32(1..=2048, -10.0, 10.0)
+}
+
+#[test]
+fn prop_topk_roundtrip_is_apply() {
+    check("topk wire == apply", 150, |g| {
+        let x = any_vec(g);
+        let density = *g.choose(&[0.01, 0.1, 0.3, 0.5, 0.9, 1.0]);
+        let c = TopK::with_density(density);
+        let mut rng = Rng::seed_from_u64(1);
+        let wire = c.decompress(&c.compress(&x, &mut rng));
+        let mut applied = x.clone();
+        c.apply(&mut applied, &mut rng);
+        if wire == applied {
+            Ok(())
+        } else {
+            Err(format!("mismatch d={} density={density}", x.len()))
+        }
+    });
+}
+
+#[test]
+fn prop_topk_is_l2_projection() {
+    // TopK(x) minimizes ||y − x|| over ||y||₀ ≤ K (Definition 3.1): any
+    // other support of size K has ≥ error.
+    check("topk optimality", 100, |g| {
+        let x = any_vec(g);
+        let d = x.len();
+        let k = 1 + g.usize_in(0..=(d - 1).min(64));
+        let c = TopK::with_k(k);
+        let mut rng = Rng::seed_from_u64(2);
+        let y = c.decompress(&c.compress(&x, &mut rng));
+        let err_topk = tensor::l2_distance(&x, &y) as f64;
+        // Random alternative support of the same size.
+        let mut alt = vec![0.0f32; d];
+        let idx = rng.sample_without_replacement(d, k.min(d));
+        for i in idx {
+            alt[i] = x[i];
+        }
+        let err_alt = tensor::l2_distance(&x, &alt) as f64;
+        if err_topk <= err_alt + 1e-4 {
+            Ok(())
+        } else {
+            Err(format!("topk err {err_topk} > alt err {err_alt} (d={d}, k={k})"))
+        }
+    });
+}
+
+#[test]
+fn prop_quantizer_error_bounded() {
+    // Per-bucket: |Q(x)_i − x_i| ≤ bucket_norm / 2^r.
+    check("quantizer grid bound", 120, |g| {
+        let x = any_vec(g);
+        let bits = *g.choose(&[1u32, 2, 4, 8, 12]);
+        let bucket = *g.choose(&[64usize, 256, 1024]);
+        let q = QuantizeR::with_bucket(bits, bucket);
+        let mut rng = Rng::seed_from_u64(g.rng().next_u64());
+        let y = q.decompress(&q.compress(&x, &mut rng));
+        for (chunk_i, chunk) in x.chunks(bucket).enumerate() {
+            let norm = tensor::norm2(chunk);
+            let bound = norm / (1u64 << bits) as f32 + 1e-5 + norm * 1e-6;
+            for (j, (&xi, &yi)) in chunk
+                .iter()
+                .zip(&y[chunk_i * bucket..chunk_i * bucket + chunk.len()])
+                .enumerate()
+            {
+                if (xi - yi).abs() > bound {
+                    return Err(format!(
+                        "bucket {chunk_i} coord {j}: |{xi} - {yi}| > {bound} (r={bits})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_bits_never_exceed_payload() {
+    check("wire_bits <= 8*payload < wire_bits+8", 150, |g| {
+        let x = any_vec(g);
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(TopK::with_density(0.2)),
+            Box::new(QuantizeR::new(6)),
+            Box::new(DoubleCompress::new(0.3, 5)),
+        ];
+        let mut rng = Rng::seed_from_u64(g.rng().next_u64());
+        for c in comps {
+            let enc = c.compress(&x, &mut rng);
+            let payload_bits = enc.payload.len() as u64 * 8;
+            if enc.wire_bits > payload_bits || payload_bits >= enc.wire_bits + 8 {
+                return Err(format!(
+                    "{}: wire {} payload {payload_bits}",
+                    c.name(),
+                    enc.wire_bits
+                ));
+            }
+            // Decode must give the declared dimension.
+            if c.decompress(&enc).len() != x.len() {
+                return Err(format!("{}: bad dim", c.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitio_roundtrip() {
+    check("bitio roundtrip arbitrary widths", 200, |g| {
+        let n = g.usize_in(1..=300);
+        let fields: Vec<(u64, u32)> = (0..n)
+            .map(|_| {
+                let w = 1 + g.rng().below(64) as u32;
+                let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+                (g.rng().next_u64() & mask, w)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, width) in &fields {
+            w.write_bits(v, width);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, width) in &fields {
+            if r.read_bits(width) != v {
+                return Err(format!("field width {width}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_select_topk_sorted_and_within_range() {
+    check("select_topk_indices well-formed", 200, |g| {
+        let x = any_vec(g);
+        let k = g.usize_in(0..=x.len());
+        let idx = topk::select_topk_indices(&x, k);
+        if idx.len() != k.min(x.len()) {
+            return Err(format!("len {} != k {}", idx.len(), k));
+        }
+        if !idx.windows(2).all(|w| w[0] < w[1]) {
+            return Err("indices not strictly ascending".into());
+        }
+        if idx.iter().any(|&i| i >= x.len()) {
+            return Err("index out of range".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mean_into_is_affine() {
+    // mean(a+c, b+c) == mean(a,b) + c — aggregation must be exact averaging.
+    check("server mean affine", 100, |g| {
+        let a = any_vec(g);
+        let b: Vec<f32> = a.iter().map(|v| v * 0.5 + 1.0).collect();
+        let shift = g.f32_in(-2.0, 2.0);
+        let a2: Vec<f32> = a.iter().map(|v| v + shift).collect();
+        let b2: Vec<f32> = b.iter().map(|v| v + shift).collect();
+        let mut m1 = vec![0.0f32; a.len()];
+        tensor::mean_into(&[&a, &b], &mut m1);
+        let mut m2 = vec![0.0f32; a.len()];
+        tensor::mean_into(&[&a2, &b2], &mut m2);
+        for i in 0..a.len() {
+            if (m2[i] - (m1[i] + shift)).abs() > 1e-4 {
+                return Err(format!("coord {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scaffnew_step_linear_in_h() {
+    // x̂(h1) − x̂(h2) == γ(h1 − h2): the control variate enters linearly.
+    check("local step linear in h", 100, |g| {
+        let x = any_vec(g);
+        let d = x.len();
+        let mut rng = Rng::seed_from_u64(g.rng().next_u64());
+        let gvec: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let h1: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let h2: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let gamma = 0.3f32;
+        let mut s1 = vec![0.0f32; d];
+        let mut s2 = vec![0.0f32; d];
+        tensor::sgd_control_variate_step(&x, &gvec, &h1, gamma, &mut s1);
+        tensor::sgd_control_variate_step(&x, &gvec, &h2, gamma, &mut s2);
+        for i in 0..d {
+            let want = gamma * (h1[i] - h2[i]);
+            if ((s1[i] - s2[i]) - want).abs() > 1e-4 {
+                return Err(format!("coord {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dirichlet_partition_total_and_disjoint() {
+    use fedcomloc::data::dirichlet::partition;
+    use fedcomloc::data::{synthetic, DatasetKind};
+    check("partition covers exactly once", 12, |g| {
+        let n = 300 + g.usize_in(0..=500);
+        let clients = 2 + g.usize_in(0..=30);
+        let alpha = *g.choose(&[0.1, 0.5, 1.0, 10.0]);
+        let mut rng = Rng::seed_from_u64(g.rng().next_u64());
+        let data = synthetic::generate(DatasetKind::Mnist, n, 10, &mut rng).train;
+        let p = partition(&data, clients, alpha, 1, &mut rng);
+        let mut seen = vec![0u8; n];
+        for shard in &p.client_indices {
+            for &i in shard {
+                seen[i] += 1;
+            }
+        }
+        if seen.iter().all(|&c| c == 1) {
+            Ok(())
+        } else {
+            Err(format!("n={n} clients={clients} alpha={alpha}"))
+        }
+    });
+}

@@ -1,0 +1,183 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-check numerics against the native Rust compute plane.
+//!
+//! These tests require `make artifacts` to have run; they are skipped (with
+//! a note) when `artifacts/manifest.json` is absent so `cargo test` works on
+//! a fresh checkout.
+
+use fedcomloc::data::loader::{eval_batches, ClientLoader};
+use fedcomloc::data::{synthetic, DatasetKind};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::{init_params, LocalTrainer, ModelKind};
+use fedcomloc::runtime::engine::Input;
+use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, Engine, PjrtTrainer};
+use fedcomloc::util::rng::Rng;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    if artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn mnist_batch(batch: usize, seed: u64) -> fedcomloc::data::loader::Batch {
+    let mut rng = Rng::seed_from_u64(seed);
+    let tt = synthetic::generate(DatasetKind::Mnist, 256, 64, &mut rng);
+    let data = Arc::new(tt.train);
+    let mut loader = ClientLoader::new(
+        Arc::clone(&data),
+        (0..256).collect(),
+        batch,
+        Rng::seed_from_u64(seed + 1),
+    );
+    loader.next_batch()
+}
+
+#[test]
+fn pjrt_grad_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
+    let native = NativeTrainer::new(ModelKind::Mlp);
+    let mut rng = Rng::seed_from_u64(7);
+    let params = init_params(ModelKind::Mlp, &mut rng);
+    let batch = mnist_batch(pjrt.batch_size(), 11);
+
+    let (g_pjrt, loss_pjrt) = pjrt.grad(&params, &batch);
+    let (g_native, loss_native) = native.grad(&params, &batch);
+    assert!(
+        (loss_pjrt - loss_native).abs() < 1e-3,
+        "loss: pjrt {loss_pjrt} native {loss_native}"
+    );
+    assert_eq!(g_pjrt.len(), g_native.len());
+    let dot = fedcomloc::tensor::dot(&g_pjrt, &g_native);
+    let cos = dot
+        / (fedcomloc::tensor::norm2(&g_pjrt) * fedcomloc::tensor::norm2(&g_native)).max(1e-12);
+    assert!(cos > 0.9999, "gradient cosine {cos}");
+    let max_err = g_pjrt
+        .iter()
+        .zip(&g_native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "max |Δg| {max_err}");
+}
+
+#[test]
+fn pjrt_train_step_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
+    let native = NativeTrainer::new(ModelKind::Mlp);
+    let mut rng = Rng::seed_from_u64(9);
+    let params = init_params(ModelKind::Mlp, &mut rng);
+    let mut h = vec![0.0f32; params.len()];
+    rng.fill_normal_f32(&mut h, 0.0, 0.01);
+    let batch = mnist_batch(pjrt.batch_size(), 13);
+
+    let (x_pjrt, _) = pjrt.train_step(&params, &h, &batch, 0.05);
+    let (x_native, _) = native.train_step(&params, &h, &batch, 0.05);
+    let dist = fedcomloc::tensor::l2_distance(&x_pjrt, &x_native);
+    let scale = fedcomloc::tensor::norm2(&x_native);
+    assert!(dist / scale < 1e-5, "relative step distance {}", dist / scale);
+}
+
+#[test]
+fn pjrt_masked_step_density_one_matches_plain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
+    let mut rng = Rng::seed_from_u64(15);
+    let params = init_params(ModelKind::Mlp, &mut rng);
+    let h = vec![0.0f32; params.len()];
+    let batch = mnist_batch(pjrt.batch_size(), 17);
+    let (plain, _) = pjrt.train_step(&params, &h, &batch, 0.05);
+    let (masked, _) = pjrt.train_step_masked(&params, &h, &batch, 0.05, 1.0);
+    let dist = fedcomloc::tensor::l2_distance(&plain, &masked);
+    assert!(dist < 1e-4, "density=1 masked step differs: {dist}");
+    // Low density must actually change the gradient point.
+    let (masked_low, _) = pjrt.train_step_masked(&params, &h, &batch, 0.05, 0.05);
+    assert!(fedcomloc::tensor::l2_distance(&plain, &masked_low) > 1e-4);
+}
+
+#[test]
+fn pjrt_eval_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
+    let native = NativeTrainer::new(ModelKind::Mlp);
+    let mut rng = Rng::seed_from_u64(21);
+    let params = init_params(ModelKind::Mlp, &mut rng);
+    let tt = synthetic::generate(DatasetKind::Mnist, 64, 300, &mut rng);
+    let eb = eval_batches(&tt.test, pjrt.eval_batch_size());
+    let r_pjrt = pjrt.eval(&params, &eb);
+    let r_native = native.eval(&params, &eb);
+    assert_eq!(r_pjrt.examples, r_native.examples);
+    assert_eq!(r_pjrt.accuracy, r_native.accuracy, "accuracy must match exactly");
+    assert!((r_pjrt.mean_loss - r_native.mean_loss).abs() < 1e-4);
+}
+
+#[test]
+fn quantize_artifact_matches_rust_wire_codec() {
+    // The standalone Pallas quantizer and the Rust QSGD codec implement the
+    // same Definition 3.2 — drive both with the same uniforms and compare.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir, &["quantize"]).expect("load quantize");
+    let spec = engine.manifest().artifact("quantize").unwrap().clone();
+    let d = spec.inputs[0].elements();
+    let mut rng = Rng::seed_from_u64(31);
+    let mut x = vec![0.0f32; d];
+    rng.fill_normal_f32(&mut x, 0.0, 1.0);
+    let mut u = vec![0.0f32; d];
+    rng.fill_uniform_f32(&mut u);
+    let bits = 6u32;
+
+    let outs = engine
+        .call(
+            "quantize",
+            &[Input::F32(&x), Input::F32(&u), Input::ScalarF32(bits as f32)],
+        )
+        .expect("execute quantize");
+    let q_pallas = outs[0].as_f32();
+
+    // Reference computation with the same uniforms (single global bucket,
+    // deterministic rounding: up iff u < frac).
+    let norm = fedcomloc::tensor::norm2(&x);
+    let s = (1u64 << bits) as f64;
+    let mut max_err = 0.0f32;
+    for i in 0..d {
+        let y = (x[i].abs() / norm) as f64;
+        let scaled = y * s;
+        let lo = scaled.floor();
+        let level = if (u[i] as f64) < scaled - lo { lo + 1.0 } else { lo };
+        let want = (norm as f64 * x[i].signum() as f64 * level / s) as f32;
+        max_err = max_err.max((want - q_pallas[i]).abs());
+    }
+    assert!(max_err < 1e-4 * norm, "pallas-vs-rust max err {max_err}");
+}
+
+#[test]
+fn pjrt_federated_smoke() {
+    // Whole-stack: FedComLoc-Com on the AOT plane for a few rounds.
+    let Some(dir) = artifacts_dir() else { return };
+    use fedcomloc::compress::TopK;
+    use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+    let cfg = RunConfig {
+        train_n: 1_000,
+        test_n: 256,
+        n_clients: 10,
+        clients_per_round: 3,
+        rounds: 4,
+        eval_every: 2,
+        eval_batch: 256,
+        ..RunConfig::default_mnist()
+    };
+    let trainer = Arc::new(PjrtTrainer::load(&dir, ModelKind::Mlp).unwrap());
+    let spec = AlgorithmSpec::FedComLoc {
+        variant: Variant::Com,
+        compressor: Box::new(TopK::with_density(0.3)),
+    };
+    let log = run(&cfg, trainer, &spec);
+    assert_eq!(log.records.len(), 4);
+    assert!(log.best_accuracy().is_some());
+    assert!(log.records[0].uplink_bits > 0);
+}

@@ -4,8 +4,7 @@
 //!
 //!     cargo run --release --example baselines_compare
 
-use fedcomloc::compress::{Identity, TopK};
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 use fedcomloc::model::{native::NativeTrainer, ModelKind};
 use std::sync::Arc;
 
@@ -19,28 +18,13 @@ fn main() {
     };
     let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
 
+    let algo = |spec: &str| AlgorithmSpec::parse(spec).unwrap();
     let runs: Vec<(&str, AlgorithmSpec)> = vec![
-        (
-            "FedAvg",
-            AlgorithmSpec::FedAvg {
-                compressor: Box::new(Identity),
-            },
-        ),
-        (
-            "sparseFedAvg 30%",
-            AlgorithmSpec::FedAvg {
-                compressor: Box::new(TopK::with_density(0.3)),
-            },
-        ),
-        ("Scaffold", AlgorithmSpec::Scaffold),
-        ("FedDyn", AlgorithmSpec::FedDyn { alpha: 0.01 }),
-        (
-            "FedComLoc 30%",
-            AlgorithmSpec::FedComLoc {
-                variant: Variant::Com,
-                compressor: Box::new(TopK::with_density(0.3)),
-            },
-        ),
+        ("FedAvg", algo("fedavg")),
+        ("sparseFedAvg 30%", algo("sparsefedavg:topk:0.3")),
+        ("Scaffold", algo("scaffold")),
+        ("FedDyn", algo("feddyn:0.01")),
+        ("FedComLoc 30%", algo("fedcomloc-com:topk:0.3")),
     ];
 
     println!(

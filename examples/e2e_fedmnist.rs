@@ -14,8 +14,7 @@
 //!
 //! Flags: --rounds N (default 200), --native (skip PJRT), --dense.
 
-use fedcomloc::compress::{Identity, TopK};
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 use fedcomloc::model::{native::NativeTrainer, LocalTrainer, ModelKind};
 use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, PjrtTrainer};
 use std::sync::Arc;
@@ -51,14 +50,12 @@ fn main() {
         Arc::new(NativeTrainer::new(ModelKind::Mlp))
     };
 
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: if dense {
-            Box::new(Identity)
-        } else {
-            Box::new(TopK::with_density(0.3))
-        },
-    };
+    let spec = AlgorithmSpec::parse(if dense {
+        "fedcomloc-com:none"
+    } else {
+        "fedcomloc-com:topk:0.3"
+    })
+    .unwrap();
     println!(
         "e2e: {} | {} clients ({} sampled) | {} rounds | p={} γ={} α={}",
         spec.name(),

@@ -6,8 +6,7 @@
 //! and reports the Figure 3 reading: sparsified models converge faster per
 //! communicated bit.
 
-use fedcomloc::compress::{Identity, TopK};
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 use fedcomloc::model::{native::NativeTrainer, LocalTrainer, ModelKind};
 use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, PjrtTrainer};
 use std::sync::Arc;
@@ -36,13 +35,10 @@ fn main() {
             rounds,
             ..RunConfig::default_cifar()
         };
-        let spec = AlgorithmSpec::FedComLoc {
-            variant: Variant::Com,
-            compressor: if density >= 1.0 {
-                Box::new(Identity)
-            } else {
-                Box::new(TopK::with_density(density))
-            },
+        let spec = if density >= 1.0 {
+            AlgorithmSpec::parse("fedcomloc-com:none").unwrap()
+        } else {
+            AlgorithmSpec::parse(&format!("fedcomloc-com:topk:{density}")).unwrap()
         };
         let log = run(&cfg, trainer.clone(), &spec);
         println!(

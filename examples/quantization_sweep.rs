@@ -3,8 +3,8 @@
 //!
 //!     cargo run --release --example quantization_sweep
 
-use fedcomloc::compress::{Compressor, DoubleCompress, Identity, QuantizeR};
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::compress::parse_spec;
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 use fedcomloc::model::{native::NativeTrainer, ModelKind};
 use std::sync::Arc;
 
@@ -18,25 +18,23 @@ fn main() {
     };
     let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
 
-    let cases: Vec<(&str, Box<dyn Compressor>)> = vec![
-        ("fp32 baseline", Box::new(Identity)),
-        ("Q_16", Box::new(QuantizeR::new(16))),
-        ("Q_8", Box::new(QuantizeR::new(8))),
-        ("Q_4", Box::new(QuantizeR::new(4))),
-        ("TopK25% + Q_8", Box::new(DoubleCompress::new(0.25, 8))),
+    let cases: Vec<(&str, &str)> = vec![
+        ("fp32 baseline", "none"),
+        ("Q_16", "q:16"),
+        ("Q_8", "q:8"),
+        ("Q_4", "q:4"),
+        ("TopK25% + Q_8", "topk:0.25+q:8"),
     ];
 
     println!(
         "{:<16}{:>10}{:>14}{:>14}{:>18}",
         "compressor", "best_acc", "final_loss", "uplink_MB", "bits/coord (wire)"
     );
-    for (label, compressor) in cases {
+    for (label, comp_spec) in cases {
+        let compressor = parse_spec(comp_spec).unwrap();
         let bits_per_coord =
             compressor.nominal_bits(ModelKind::Mlp.dim()) as f64 / ModelKind::Mlp.dim() as f64;
-        let spec = AlgorithmSpec::FedComLoc {
-            variant: Variant::Com,
-            compressor,
-        };
+        let spec = AlgorithmSpec::parse(&format!("fedcomloc-com:{comp_spec}")).unwrap();
         let log = run(&cfg, trainer.clone(), &spec);
         println!(
             "{label:<16}{:>10.4}{:>14.4}{:>14.2}{:>18.2}",

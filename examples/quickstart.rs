@@ -5,8 +5,7 @@
 //! Uses the native compute plane so it works before `make artifacts`; see
 //! `e2e_fedmnist` for the full AOT/PJRT pipeline.
 
-use fedcomloc::compress::TopK;
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 use fedcomloc::model::{native::NativeTrainer, ModelKind};
 use std::sync::Arc;
 
@@ -19,10 +18,8 @@ fn main() {
         eval_every: 5,
         ..RunConfig::default_mnist()
     };
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,                         // uplink compression
-        compressor: Box::new(TopK::with_density(0.3)), // keep 30% of weights
-    };
+    // Uplink compression, keeping 30% of weights (see `list-algorithms`).
+    let spec = AlgorithmSpec::parse("fedcomloc-com:topk:0.3").unwrap();
     let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
 
     let log = run(&cfg, trainer, &spec);

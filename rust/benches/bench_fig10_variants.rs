@@ -2,8 +2,7 @@
 
 mod common;
 
-use fedcomloc::compress::TopK;
-use fedcomloc::fed::{run, AlgorithmSpec, Variant};
+use fedcomloc::fed::run;
 
 fn main() {
     println!("== Figure 10: variant ablation (bench scale, FedCIFAR10) ==");
@@ -11,12 +10,9 @@ fn main() {
     println!("  {:<8}{:>12}{:>12}{:>12}", "K", "Com", "Local", "Global");
     for &density in &[0.10f64, 0.90] {
         print!("  {:<8}", format!("{:.0}%", density * 100.0));
-        for variant in [Variant::Com, Variant::Local, Variant::Global] {
+        for variant in ["com", "local", "global"] {
             let cfg = common::cifar_cfg();
-            let spec = AlgorithmSpec::FedComLoc {
-                variant,
-                compressor: Box::new(TopK::with_density(density)),
-            };
+            let spec = common::algo(&format!("fedcomloc-{variant}:topk:{density}"));
             let acc = run(&cfg, trainer.clone(), &spec)
                 .best_accuracy()
                 .unwrap_or(0.0);

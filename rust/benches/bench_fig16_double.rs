@@ -2,25 +2,21 @@
 
 mod common;
 
-use fedcomloc::compress::{Compressor, DoubleCompress, Identity, QuantizeR, TopK};
-use fedcomloc::fed::{run, AlgorithmSpec, Variant};
+use fedcomloc::fed::run;
 
 fn main() {
     println!("== Figure 16: double compression (bench scale) ==");
     let trainer = common::mlp_trainer();
-    let cases: Vec<(&str, Box<dyn Compressor>)> = vec![
-        ("K=25% + 4bit", Box::new(DoubleCompress::new(0.25, 4))),
-        ("K=50% + 16bit", Box::new(DoubleCompress::new(0.50, 16))),
-        ("K=25% + 32bit", Box::new(TopK::with_density(0.25))),
-        ("K=100% + 4bit", Box::new(QuantizeR::new(4))),
-        ("K=100% + 32bit", Box::new(Identity)),
+    let cases: Vec<(&str, &str)> = vec![
+        ("K=25% + 4bit", "fedcomloc-com:topk:0.25+q:4"),
+        ("K=50% + 16bit", "fedcomloc-com:topk:0.5+q:16"),
+        ("K=25% + 32bit", "fedcomloc-com:topk:0.25"),
+        ("K=100% + 4bit", "fedcomloc-com:q:4"),
+        ("K=100% + 32bit", "fedcomloc-com:none"),
     ];
-    for (label, compressor) in cases {
+    for (label, spec_str) in cases {
         let cfg = common::mnist_cfg();
-        let spec = AlgorithmSpec::FedComLoc {
-            variant: Variant::Com,
-            compressor,
-        };
+        let spec = common::algo(spec_str);
         let log = run(&cfg, trainer.clone(), &spec);
         common::row(
             label,

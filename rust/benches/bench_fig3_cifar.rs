@@ -2,18 +2,10 @@
 
 mod common;
 
-use fedcomloc::compress::{Identity, TopK};
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 
 fn spec(density: f64) -> AlgorithmSpec {
-    AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: if density >= 1.0 {
-            Box::new(Identity)
-        } else {
-            Box::new(TopK::with_density(density))
-        },
-    }
+    common::fedcomloc_topk(density)
 }
 
 fn main() {

@@ -2,14 +2,10 @@
 
 mod common;
 
-use fedcomloc::compress::QuantizeR;
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 
 fn spec(bits: u32) -> AlgorithmSpec {
-    AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(QuantizeR::new(bits)),
-    }
+    common::algo(&format!("fedcomloc-com:q:{bits}"))
 }
 
 fn main() {

@@ -2,9 +2,8 @@
 
 mod common;
 
-use fedcomloc::compress::TopK;
 use fedcomloc::fed::cost::expected_scaffnew_cost;
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, RunConfig};
 
 fn main() {
     println!("== Figure 8: p sweep, K=30%, τ=0.01 (bench scale) ==");
@@ -18,10 +17,7 @@ fn main() {
             p,
             ..common::mnist_cfg()
         };
-        let spec = AlgorithmSpec::FedComLoc {
-            variant: Variant::Com,
-            compressor: Box::new(TopK::with_density(0.3)),
-        };
+        let spec = common::algo("fedcomloc-com:topk:0.3");
         let log = run(&cfg, trainer.clone(), &spec);
         let iters: usize = log.records.iter().map(|r| r.local_steps).sum();
         let cost = log.records.last().map(|r| r.total_cost).unwrap_or(0.0);

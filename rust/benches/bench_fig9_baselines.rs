@@ -2,28 +2,18 @@
 
 mod common;
 
-use fedcomloc::compress::{Identity, TopK};
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
 
 fn main() {
     println!("== Figure 9: baselines (bench scale) ==");
     let trainer = common::mlp_trainer();
     println!("-- left panel: compressed (sparseFedAvg γ=0.1 vs FedComLoc γ=0.05) --");
     let left: Vec<(&str, f32, AlgorithmSpec)> = vec![
-        (
-            "sparseFedAvg K=30%",
-            0.1,
-            AlgorithmSpec::FedAvg {
-                compressor: Box::new(TopK::with_density(0.3)),
-            },
-        ),
+        ("sparseFedAvg K=30%", 0.1, common::algo("sparsefedavg:topk:0.3")),
         (
             "FedComLoc-Com K=30%",
             0.05,
-            AlgorithmSpec::FedComLoc {
-                variant: Variant::Com,
-                compressor: Box::new(TopK::with_density(0.3)),
-            },
+            common::algo("fedcomloc-com:topk:0.3"),
         ),
     ];
     for (label, gamma, spec) in left {
@@ -41,21 +31,10 @@ fn main() {
     }
     println!("-- right panel: uncompressed, shared γ --");
     let right: Vec<(&str, AlgorithmSpec)> = vec![
-        (
-            "FedAvg",
-            AlgorithmSpec::FedAvg {
-                compressor: Box::new(Identity),
-            },
-        ),
-        ("Scaffold", AlgorithmSpec::Scaffold),
-        ("FedDyn", AlgorithmSpec::FedDyn { alpha: 0.01 }),
-        (
-            "FedComLoc (dense)",
-            AlgorithmSpec::FedComLoc {
-                variant: Variant::Com,
-                compressor: Box::new(Identity),
-            },
-        ),
+        ("FedAvg", common::algo("fedavg")),
+        ("Scaffold", common::algo("scaffold")),
+        ("FedDyn", common::algo("feddyn:0.01")),
+        ("FedComLoc (dense)", common::algo("fedcomloc-com:none")),
     ];
     for (label, spec) in right {
         let cfg = common::mnist_cfg();

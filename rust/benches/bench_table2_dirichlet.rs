@@ -2,8 +2,7 @@
 
 mod common;
 
-use fedcomloc::compress::{Identity, TopK};
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::{run, RunConfig};
 
 fn main() {
     println!("== Table 2: α × K accuracy grid (bench scale) ==");
@@ -24,14 +23,7 @@ fn main() {
                 dirichlet_alpha: alpha,
                 ..common::mnist_cfg()
             };
-            let spec = AlgorithmSpec::FedComLoc {
-                variant: Variant::Com,
-                compressor: if density >= 1.0 {
-                    Box::new(Identity)
-                } else {
-                    Box::new(TopK::with_density(density))
-                },
-            };
+            let spec = common::fedcomloc_topk(density);
             let acc = run(&cfg, trainer.clone(), &spec)
                 .best_accuracy()
                 .unwrap_or(0.0);

@@ -42,6 +42,19 @@ pub fn cifar_cfg() -> RunConfig {
     }
 }
 
+/// Resolve a registry spec string, panicking on typos (benches use static
+/// specs).
+pub fn algo(spec: &str) -> fedcomloc::fed::AlgorithmSpec {
+    fedcomloc::fed::AlgorithmSpec::parse(spec)
+        .unwrap_or_else(|e| panic!("bad bench spec '{spec}': {e}"))
+}
+
+/// FedComLoc-Com at a TopK density (identity at K=100%) — the sweep axis
+/// the table/figure benches share (mirrors `experiments::fedcomloc_topk_spec`).
+pub fn fedcomloc_topk(density: f64) -> fedcomloc::fed::AlgorithmSpec {
+    algo(&fedcomloc::experiments::fedcomloc_topk_spec(density))
+}
+
 pub fn mlp_trainer() -> Arc<NativeTrainer> {
     Arc::new(NativeTrainer::new(ModelKind::Mlp))
 }

@@ -26,21 +26,34 @@ pub struct Args {
     about: String,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option '--{0}' (try --help)")]
     UnknownOption(String),
-    #[error("option '--{0}' requires a value")]
     MissingValue(String),
-    #[error("invalid value for '--{key}': '{value}' ({reason})")]
     InvalidValue {
         key: String,
         value: String,
         reason: String,
     },
-    #[error("{0}")]
     Other(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(name) => {
+                write!(f, "unknown option '--{name}' (try --help)")
+            }
+            CliError::MissingValue(name) => write!(f, "option '--{name}' requires a value"),
+            CliError::InvalidValue { key, value, reason } => {
+                write!(f, "invalid value for '--{key}': '{value}' ({reason})")
+            }
+            CliError::Other(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Builder for a command's interface.
 pub struct Command {

@@ -26,11 +26,7 @@ impl Compressor for Identity {
 
     fn decompress(&self, c: &Compressed) -> Vec<f32> {
         assert_eq!(c.codec, Codec::Dense);
-        assert_eq!(c.payload.len(), c.dim * 4);
-        c.payload
-            .chunks_exact(4)
-            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-            .collect()
+        super::decode_payload(c.codec, c.dim, &c.payload)
     }
 
     fn apply(&self, _x: &mut [f32], _rng: &mut Rng) {}
@@ -38,6 +34,15 @@ impl Compressor for Identity {
     fn nominal_bits(&self, d: usize) -> u64 {
         32 * d as u64
     }
+}
+
+/// Dense payload decoder: raw little-endian f32s (see [`super::decode_payload`]).
+pub(super) fn decode_dense(dim: usize, payload: &[u8]) -> Vec<f32> {
+    assert_eq!(payload.len(), dim * 4, "dense payload length mismatch");
+    payload
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
 }
 
 #[cfg(test)]

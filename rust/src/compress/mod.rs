@@ -38,14 +38,41 @@ pub struct Compressed {
 }
 
 /// Encoding identifier carried in the message header.
+///
+/// A `Codec` value plus the vector dimension is *sufficient to decode a
+/// payload*: every parameter the decoder needs (quantizer bit width and
+/// normalization bucket size) is part of the tag, so the receiving side of a
+/// wire [`crate::fed::message::Message`] never needs the sender's compressor
+/// instance — see [`decode_payload`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Codec {
     Dense,
     SparseIdx,
     SparseBitmap,
-    Quantized { bits: u32 },
+    Quantized { bits: u32, bucket: u32 },
     /// TopK-then-quantize: sparse index block + quantized value block.
-    SparseQuantized { bits: u32 },
+    SparseQuantized { bits: u32, bucket: u32 },
+}
+
+/// Decode a serialized payload into a dense `dim`-vector from the wire
+/// metadata alone. This is the single decode path for every codec: the
+/// `Compressor::decompress` impls and the transport layer both dispatch
+/// here, so an encoder/decoder mismatch is impossible by construction.
+///
+/// Panics on corrupt payloads (wire corruption is a programming error in
+/// the in-process transports; a remote transport would validate framing in
+/// [`crate::fed::message::Message::decode`] first).
+pub fn decode_payload(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32> {
+    match codec {
+        Codec::Dense => identity::decode_dense(dim, payload),
+        Codec::SparseIdx | Codec::SparseBitmap => topk::decode_sparse(codec, dim, payload),
+        Codec::Quantized { bits, bucket } => {
+            quantize::decode_quantized(dim, payload, bits, bucket as usize)
+        }
+        Codec::SparseQuantized { bits, bucket } => {
+            quantize::decode_sparse_quantized(dim, payload, bits, bucket as usize)
+        }
+    }
 }
 
 /// A compression operator C(·) applied to a d-dimensional f32 vector.
@@ -110,20 +137,24 @@ impl Compressor for DoubleCompress {
         let k = self.topk.k_for(d);
         let idx = topk::select_topk_indices(x, k);
         let vals: Vec<f32> = idx.iter().map(|&i| x[i]).collect();
-        let enc = quantize::encode_sparse_quantized(d, &idx, &vals, self.quant.bits, rng);
-        enc
+        let (bits, bucket) = (self.quant.bits, self.quant.bucket_size);
+        quantize::encode_sparse_quantized(d, &idx, &vals, bits, bucket, rng)
     }
 
     fn decompress(&self, c: &Compressed) -> Vec<f32> {
-        quantize::decode_sparse_quantized(c)
+        decode_payload(c.codec, c.dim, &c.payload)
     }
 
     fn nominal_bits(&self, d: usize) -> u64 {
-        let k = self.topk.k_for(d) as u64;
-        let idx_bits = crate::util::bitio::bits_for(d as u64) as u64;
-        let buckets = (k as usize).div_ceil(self.quant.bucket_size) as u64;
-        // header + per-bucket norm + K·(index + sign + level(r+1))
-        32 + 32 * buckets + k * (idx_bits + 1 + self.quant.bits as u64 + 1)
+        // The encoder's maximal layout (every bucket norm nonzero), computed
+        // by the same function the encoder sizes its buffer with so the two
+        // cannot drift — see `sparse_quantized_wire_bits`.
+        quantize::sparse_quantized_wire_bits(
+            d,
+            self.topk.k_for(d),
+            self.quant.bits,
+            self.quant.bucket_size,
+        )
     }
 }
 
@@ -206,6 +237,51 @@ mod tests {
             if *yi != 0.0 {
                 assert!((yi - xi).abs() < 0.02 * norm, "{yi} vs {xi}");
             }
+        }
+    }
+
+    #[test]
+    fn nominal_bits_bound_actual_wire_for_all_codecs() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(9);
+        for d in [1usize, 17, 255, 1024, 5000] {
+            let gaussian: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let zeros = vec![0.0f32; d];
+            for x in [&gaussian, &zeros] {
+                let comps: Vec<Box<dyn Compressor>> = vec![
+                    Box::new(Identity),
+                    Box::new(TopK::with_density(0.07)),
+                    Box::new(TopK::with_density(0.6)),
+                    Box::new(QuantizeR::new(4)),
+                    Box::new(QuantizeR::with_bucket(3, 100)),
+                    Box::new(DoubleCompress::new(0.25, 4)),
+                    Box::new(DoubleCompress::new(0.5, 9)),
+                ];
+                for c in comps {
+                    let enc = c.compress(x, &mut rng);
+                    assert!(
+                        c.nominal_bits(d) >= enc.wire_bits,
+                        "{} d={d}: nominal {} < wire {}",
+                        c.name(),
+                        c.nominal_bits(d),
+                        enc.wire_bits
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn double_compression_nominal_is_exact_on_nonzero_input() {
+        // For inputs whose survivor buckets all have nonzero norm, the
+        // encoder emits exactly the maximal layout the formula counts.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(10);
+        for d in [64usize, 1000, 4096] {
+            let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin() + 1.5).collect();
+            let dc = DoubleCompress::new(0.3, 6);
+            let enc = dc.compress(&x, &mut rng);
+            assert_eq!(dc.nominal_bits(d), enc.wire_bits, "d={d}");
         }
     }
 

@@ -90,41 +90,47 @@ impl Compressor for QuantizeR {
             payload: w.finish(),
             wire_bits,
             dim: d,
-            codec: Codec::Quantized { bits: self.bits },
+            codec: Codec::Quantized {
+                bits: self.bits,
+                bucket: self.bucket_size as u32,
+            },
         }
     }
 
     fn decompress(&self, c: &Compressed) -> Vec<f32> {
-        let bits = match c.codec {
-            Codec::Quantized { bits } => bits,
-            other => panic!("QuantizeR::decompress on {other:?}"),
-        };
-        let mut r = BitReader::new(&c.payload);
-        let s = (1u64 << bits) as f32;
-        let level_bits = bits + 1;
-        let mut out = Vec::with_capacity(c.dim);
-        let mut remaining = c.dim;
-        while remaining > 0 {
-            let take = remaining.min(self.bucket_size);
-            let norm = r.read_f32();
-            if norm <= 0.0 {
-                out.extend(std::iter::repeat(0.0f32).take(take));
-            } else {
-                for _ in 0..take {
-                    let neg = r.read_bit();
-                    let level = r.read_bits(level_bits) as f32;
-                    let mag = norm * level / s;
-                    out.push(if neg { -mag } else { mag });
-                }
-            }
-            remaining -= take;
-        }
-        out
+        // The bucket size travels in the codec tag, so decoding never
+        // consults this instance's configuration.
+        super::decode_payload(c.codec, c.dim, &c.payload)
     }
 
     fn nominal_bits(&self, d: usize) -> u64 {
         32 * d.div_ceil(self.bucket_size) as u64 + d as u64 * (self.bits as u64 + 2)
     }
+}
+
+/// Decoder for [`Codec::Quantized`] payloads (see [`super::decode_payload`]).
+pub(super) fn decode_quantized(dim: usize, payload: &[u8], bits: u32, bucket: usize) -> Vec<f32> {
+    let mut r = BitReader::new(payload);
+    let s = (1u64 << bits) as f32;
+    let level_bits = bits + 1;
+    let mut out = Vec::with_capacity(dim);
+    let mut remaining = dim;
+    while remaining > 0 {
+        let take = remaining.min(bucket);
+        let norm = r.read_f32();
+        if norm <= 0.0 {
+            out.extend(std::iter::repeat(0.0f32).take(take));
+        } else {
+            for _ in 0..take {
+                let neg = r.read_bit();
+                let level = r.read_bits(level_bits) as f32;
+                let mag = norm * level / s;
+                out.push(if neg { -mag } else { mag });
+            }
+        }
+        remaining -= take;
+    }
+    out
 }
 
 /// Encoder for the double-compression codec (TopK then quantize survivors):
@@ -138,15 +144,15 @@ pub(super) fn encode_sparse_quantized(
     idx: &[usize],
     vals: &[f32],
     bits: u32,
+    bucket: usize,
     rng: &mut Rng,
 ) -> Compressed {
     assert_eq!(idx.len(), vals.len());
-    let q = QuantizeR::new(bits);
-    let bucket = q.bucket_size;
+    let q = QuantizeR::with_bucket(bits, bucket);
     let idx_bits = bits_for(d as u64);
     let level_bits = bits + 1;
     let mut w = BitWriter::with_capacity(
-        8 + (idx.len() * (idx_bits as usize + 1 + level_bits as usize)).div_ceil(8),
+        (sparse_quantized_wire_bits(d, idx.len(), bits, bucket) / 8 + 2) as usize,
     );
     w.write_u32(idx.len() as u32);
     for (ichunk, vchunk) in idx.chunks(bucket).zip(vals.chunks(bucket)) {
@@ -167,20 +173,24 @@ pub(super) fn encode_sparse_quantized(
         payload: w.finish(),
         wire_bits,
         dim: d,
-        codec: Codec::SparseQuantized { bits },
+        codec: Codec::SparseQuantized {
+            bits,
+            bucket: bucket as u32,
+        },
     }
 }
 
-pub(super) fn decode_sparse_quantized(c: &Compressed) -> Vec<f32> {
-    let bits = match c.codec {
-        Codec::SparseQuantized { bits } => bits,
-        other => panic!("decode_sparse_quantized on {other:?}"),
-    };
-    let bucket = QuantizeR::new(bits).bucket_size;
-    let mut out = vec![0.0f32; c.dim];
-    let mut r = BitReader::new(&c.payload);
+/// Decoder for [`Codec::SparseQuantized`] payloads (see [`super::decode_payload`]).
+pub(super) fn decode_sparse_quantized(
+    dim: usize,
+    payload: &[u8],
+    bits: u32,
+    bucket: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; dim];
+    let mut r = BitReader::new(payload);
     let k = r.read_u32() as usize;
-    let idx_bits = bits_for(c.dim as u64);
+    let idx_bits = bits_for(dim as u64);
     let s = (1u64 << bits) as f32;
     let level_bits = bits + 1;
     let mut remaining = k;
@@ -199,6 +209,17 @@ pub(super) fn decode_sparse_quantized(c: &Compressed) -> Vec<f32> {
         remaining -= take;
     }
     out
+}
+
+/// Exact bit length of the sparse-quantized layout for `k` survivors when
+/// every survivor bucket has a nonzero norm (the maximal case the encoder
+/// can emit): 32-bit K header, a 32-bit norm per ⌈k/bucket⌉ survivor
+/// bucket, and per survivor an index, a sign bit, and a (bits+1)-bit level.
+/// Shared between `encode_sparse_quantized`'s buffer sizing and
+/// `DoubleCompress::nominal_bits` so formula and encoder cannot drift.
+pub(super) fn sparse_quantized_wire_bits(d: usize, k: usize, bits: u32, bucket: usize) -> u64 {
+    let buckets = k.div_ceil(bucket) as u64;
+    32 + 32 * buckets + k as u64 * (bits_for(d as u64) as u64 + 1 + (bits as u64 + 1))
 }
 
 #[cfg(test)]
@@ -335,8 +356,8 @@ mod tests {
         let d = 500;
         let idx = vec![3usize, 77, 178, 400, 499];
         let vals = vec![1.0f32, -2.0, 0.5, -0.25, 3.0];
-        let c = encode_sparse_quantized(d, &idx, &vals, 8, &mut rng);
-        let y = decode_sparse_quantized(&c);
+        let c = encode_sparse_quantized(d, &idx, &vals, 8, DEFAULT_BUCKET, &mut rng);
+        let y = super::decode_payload(c.codec, c.dim, &c.payload);
         assert_eq!(y.len(), d);
         let norm = norm2(&vals);
         for (j, &i) in idx.iter().enumerate() {

@@ -111,7 +111,7 @@ impl Compressor for TopK {
     }
 
     fn decompress(&self, c: &Compressed) -> Vec<f32> {
-        decode_sparse(c)
+        super::decode_payload(c.codec, c.dim, &c.payload)
     }
 
     fn apply(&self, x: &mut [f32], _rng: &mut Rng) {
@@ -180,13 +180,13 @@ pub(super) fn encode_sparse(d: usize, idx: &[usize], x: &[f32]) -> Compressed {
     }
 }
 
-pub(super) fn decode_sparse(c: &Compressed) -> Vec<f32> {
-    let mut out = vec![0.0f32; c.dim];
-    let mut r = BitReader::new(&c.payload);
+pub(super) fn decode_sparse(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; dim];
+    let mut r = BitReader::new(payload);
     let k = r.read_u32() as usize;
-    match c.codec {
+    match codec {
         Codec::SparseIdx => {
-            let idx_bits = bits_for(c.dim as u64);
+            let idx_bits = bits_for(dim as u64);
             let hits: Vec<usize> = (0..k).map(|_| r.read_bits(idx_bits) as usize).collect();
             r.align_to_byte();
             for i in hits {
@@ -195,7 +195,7 @@ pub(super) fn decode_sparse(c: &Compressed) -> Vec<f32> {
         }
         Codec::SparseBitmap => {
             let mut hits = Vec::with_capacity(k);
-            for i in 0..c.dim {
+            for i in 0..dim {
                 if r.read_bit() {
                     hits.push(i);
                 }

@@ -20,14 +20,29 @@ use crate::fed::RunConfig;
 use crate::util::toml::{self, TomlValue};
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("cannot read {0}: {1}")]
     Io(std::path::PathBuf, std::io::Error),
-    #[error("{0}")]
-    Toml(#[from] toml::TomlError),
-    #[error("config key '{key}': {reason}")]
+    Toml(toml::TomlError),
     Invalid { key: String, reason: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(path, err) => write!(f, "cannot read {}: {err}", path.display()),
+            ConfigError::Toml(err) => err.fmt(f),
+            ConfigError::Invalid { key, reason } => write!(f, "config key '{key}': {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<toml::TomlError> for ConfigError {
+    fn from(e: toml::TomlError) -> ConfigError {
+        ConfigError::Toml(e)
+    }
 }
 
 /// Apply `[run]` table keys from a TOML document onto a RunConfig.

@@ -5,8 +5,7 @@
 //! vs FedDyn vs FedComLoc at a shared γ.
 
 use super::ExpOptions;
-use crate::compress::{Identity, TopK};
-use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig};
 use crate::model::ModelKind;
 
 pub const DENSITY: f64 = 0.30;
@@ -16,37 +15,23 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
 
     println!("\n=== Figure 9 (left): compressed methods ===");
     // sparseFedAvg at γ=0.1; FedComLoc variants at γ=0.05 (paper §4.7).
+    let topk = format!("topk:{DENSITY}");
     let runs: Vec<(&str, f32, AlgorithmSpec)> = vec![
-        (
-            "sparseFedAvg",
-            0.1,
-            AlgorithmSpec::FedAvg {
-                compressor: Box::new(TopK::with_density(DENSITY)),
-            },
-        ),
+        ("sparseFedAvg", 0.1, super::algo(&format!("sparsefedavg:{topk}"))?),
         (
             "FedComLoc-Com",
             0.05,
-            AlgorithmSpec::FedComLoc {
-                variant: Variant::Com,
-                compressor: Box::new(TopK::with_density(DENSITY)),
-            },
+            super::algo(&format!("fedcomloc-com:{topk}"))?,
         ),
         (
             "FedComLoc-Local",
             0.05,
-            AlgorithmSpec::FedComLoc {
-                variant: Variant::Local,
-                compressor: Box::new(TopK::with_density(DENSITY)),
-            },
+            super::algo(&format!("fedcomloc-local:{topk}"))?,
         ),
         (
             "FedComLoc-Global",
             0.05,
-            AlgorithmSpec::FedComLoc {
-                variant: Variant::Global,
-                compressor: Box::new(TopK::with_density(DENSITY)),
-            },
+            super::algo(&format!("fedcomloc-global:{topk}"))?,
         ),
     ];
     report(opts, &trainer, runs, "fig9-left")?;
@@ -54,23 +39,10 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
     println!("\n=== Figure 9 (right): uncompressed methods, shared γ ===");
     let gamma = 0.05; // paper uses a uniform small rate for this panel
     let runs: Vec<(&str, f32, AlgorithmSpec)> = vec![
-        (
-            "FedAvg",
-            gamma,
-            AlgorithmSpec::FedAvg {
-                compressor: Box::new(Identity),
-            },
-        ),
-        ("Scaffold", gamma, AlgorithmSpec::Scaffold),
-        ("FedDyn", gamma, AlgorithmSpec::FedDyn { alpha: 0.01 }),
-        (
-            "FedComLoc",
-            gamma,
-            AlgorithmSpec::FedComLoc {
-                variant: Variant::Com,
-                compressor: Box::new(Identity),
-            },
-        ),
+        ("FedAvg", gamma, super::algo("fedavg")?),
+        ("Scaffold", gamma, super::algo("scaffold")?),
+        ("FedDyn", gamma, super::algo("feddyn:0.01")?),
+        ("FedComLoc", gamma, super::algo("fedcomloc-com:none")?),
     ];
     report(opts, &trainer, runs, "fig9-right")?;
     Ok(())

@@ -5,9 +5,8 @@
 //! every configuration). The tuned sweep here uses a reduced grid to stay
 //! inside the testbed budget; `--scale`/presets widen it.
 
-use super::ExpOptions;
-use crate::compress::{Identity, TopK};
-use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use super::{fedcomloc_topk_spec, ExpOptions};
+use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig};
 use crate::model::ModelKind;
 
 pub const DENSITIES: [f64; 4] = [1.0, 0.10, 0.30, 0.50];
@@ -15,14 +14,7 @@ pub const TUNE_GRID: [f32; 3] = [0.01, 0.05, 0.1];
 pub const FIXED_GAMMA: f32 = 0.01;
 
 fn spec_for(density: f64) -> AlgorithmSpec {
-    AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: if density >= 1.0 {
-            Box::new(Identity)
-        } else {
-            Box::new(TopK::with_density(density))
-        },
-    }
+    AlgorithmSpec::parse(&fedcomloc_topk_spec(density)).expect("static spec")
 }
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {

@@ -1,8 +1,7 @@
 //! Figure 10 (variant ablation) and Figure 16 (double compression).
 
 use super::ExpOptions;
-use crate::compress::{DoubleCompress, QuantizeR, TopK};
-use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::fed::{run as fed_run, RunConfig};
 use crate::model::ModelKind;
 
 /// Figure 10: -Com vs -Local vs -Global across densities on FedCIFAR10.
@@ -15,13 +14,10 @@ pub fn run_variants(opts: &ExpOptions) -> anyhow::Result<()> {
     );
     for &density in &[0.10f64, 0.30, 0.90] {
         let mut row = Vec::new();
-        for variant in [Variant::Com, Variant::Local, Variant::Global] {
+        for variant in ["com", "local", "global"] {
             let cfg = opts.scale_cfg(RunConfig::default_cifar());
-            let spec = AlgorithmSpec::FedComLoc {
-                variant,
-                compressor: Box::new(TopK::with_density(density)),
-            };
-            log::info!("fig10: K={density} variant={}", variant.name());
+            let spec = super::algo(&format!("fedcomloc-{variant}:topk:{density}"))?;
+            log::info!("fig10: K={density} variant={variant}");
             let log = fed_run(&cfg, trainer.clone(), &spec);
             let acc = log.best_accuracy().unwrap_or(0.0);
             opts.save("fig10", &log);
@@ -43,23 +39,20 @@ pub fn run_variants(opts: &ExpOptions) -> anyhow::Result<()> {
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
     let trainer = opts.make_trainer(ModelKind::Mlp);
     println!("\n=== Figure 16: double compression (TopK then Q_r, FedMNIST) ===");
-    let cases: Vec<(String, Box<dyn crate::compress::Compressor>)> = vec![
-        ("K=25% + 4bit".into(), Box::new(DoubleCompress::new(0.25, 4))),
-        ("K=50% + 16bit".into(), Box::new(DoubleCompress::new(0.50, 16))),
-        ("K=25% + 32bit".into(), Box::new(TopK::with_density(0.25))),
-        ("K=100% + 4bit".into(), Box::new(QuantizeR::new(4))),
-        ("K=100% + 32bit".into(), Box::new(crate::compress::Identity)),
+    let cases: Vec<(&str, &str)> = vec![
+        ("K=25% + 4bit", "fedcomloc-com:topk:0.25+q:4"),
+        ("K=50% + 16bit", "fedcomloc-com:topk:0.5+q:16"),
+        ("K=25% + 32bit", "fedcomloc-com:topk:0.25"),
+        ("K=100% + 4bit", "fedcomloc-com:q:4"),
+        ("K=100% + 32bit", "fedcomloc-com:none"),
     ];
     println!(
         "{:<16}{:>12}{:>16}{:>18}",
         "config", "best_acc", "uplink_bits", "bits/round/client"
     );
-    for (label, compressor) in cases {
+    for (label, spec_str) in cases {
         let cfg = opts.scale_cfg(RunConfig::default_mnist());
-        let spec = AlgorithmSpec::FedComLoc {
-            variant: Variant::Com,
-            compressor,
-        };
+        let spec = super::algo(spec_str)?;
         log::info!("fig16: {label}");
         let log = fed_run(&cfg, trainer.clone(), &spec);
         let acc = log.best_accuracy().unwrap_or(0.0);

@@ -4,9 +4,8 @@
 //! with FedComLoc-Com; prints the paper's accuracy grid and the per-α drop
 //! from unsparsified to K=10% (observation (a) of §4.2).
 
-use super::ExpOptions;
-use crate::compress::{Identity, TopK};
-use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use super::{fedcomloc_topk_spec, ExpOptions};
+use crate::fed::{run as fed_run, RunConfig};
 use crate::model::ModelKind;
 
 pub const ALPHAS: [f64; 6] = [0.1, 0.3, 0.5, 0.7, 0.9, 1.0];
@@ -24,14 +23,7 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
                 dirichlet_alpha: alpha,
                 ..opts.scale_cfg(RunConfig::default_mnist())
             };
-            let spec = AlgorithmSpec::FedComLoc {
-                variant: Variant::Com,
-                compressor: if density >= 1.0 {
-                    Box::new(Identity)
-                } else {
-                    Box::new(TopK::with_density(density))
-                },
-            };
+            let spec = super::algo(&fedcomloc_topk_spec(density))?;
             log::info!("table2: alpha {alpha} density {density}");
             let log = fed_run(&cfg, trainer.clone(), &spec);
             let acc = log.best_accuracy().unwrap_or(0.0);

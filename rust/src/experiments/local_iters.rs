@@ -5,8 +5,7 @@
 //! metric (communication round = 1, local iteration = τ = 0.01).
 
 use super::ExpOptions;
-use crate::compress::TopK;
-use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::fed::{run as fed_run, RunConfig};
 use crate::model::ModelKind;
 
 pub const PS: [f64; 5] = [0.05, 0.1, 0.2, 0.3, 0.5];
@@ -24,10 +23,7 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
             p,
             ..opts.scale_cfg(RunConfig::default_mnist())
         };
-        let spec = AlgorithmSpec::FedComLoc {
-            variant: Variant::Com,
-            compressor: Box::new(TopK::with_density(DENSITY)),
-        };
+        let spec = super::algo(&format!("fedcomloc-com:topk:{DENSITY}"))?;
         log::info!("fig8: p={p}");
         let log = fed_run(&cfg, trainer.clone(), &spec);
         let acc = log.best_accuracy().unwrap_or(0.0);

@@ -19,11 +19,27 @@ pub mod local_iters;
 pub mod quantization;
 pub mod sparsity;
 
-use crate::fed::RunConfig;
+use crate::fed::{AlgorithmSpec, RunConfig};
 use crate::metrics::MetricsLog;
 use crate::model::{LocalTrainer, ModelKind};
 use std::path::PathBuf;
 use std::sync::Arc;
+
+/// Resolve a registry spec string (see `fed::algorithm_registry`),
+/// converting the error for the anyhow-based experiment API.
+pub fn algo(spec: &str) -> anyhow::Result<AlgorithmSpec> {
+    AlgorithmSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Registry spec for FedComLoc-Com with a TopK density (identity at K=100%),
+/// the sweep axis most experiments share.
+pub fn fedcomloc_topk_spec(density: f64) -> String {
+    if density >= 1.0 {
+        "fedcomloc-com:none".to_string()
+    } else {
+        format!("fedcomloc-com:topk:{density}")
+    }
+}
 
 /// Options shared by all experiments.
 pub struct ExpOptions {

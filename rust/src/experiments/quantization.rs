@@ -4,9 +4,8 @@
 //! FedCIFAR10 (Fig 15); then r ∈ {8, 16} across Dirichlet α (Figs 7/14).
 
 use super::ExpOptions;
-use crate::compress::QuantizeR;
 use crate::data::DatasetKind;
-use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig};
 use crate::model::ModelKind;
 
 pub const BITS: [u32; 4] = [4, 8, 16, 32];
@@ -14,10 +13,7 @@ pub const HET_BITS: [u32; 2] = [8, 16];
 pub const HET_ALPHAS: [f64; 4] = [0.1, 0.3, 0.7, 0.9];
 
 fn spec_for(bits: u32) -> AlgorithmSpec {
-    AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(QuantizeR::new(bits)),
-    }
+    AlgorithmSpec::parse(&format!("fedcomloc-com:q:{bits}")).expect("static spec")
 }
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {

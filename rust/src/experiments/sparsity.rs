@@ -4,9 +4,8 @@
 //! the paper's two table rows (best accuracy, decrease vs the unsparsified
 //! baseline) plus the bits-to-target-accuracy reading of Figure 1.
 
-use super::ExpOptions;
-use crate::compress::{Identity, TopK};
-use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig, Variant};
+use super::{fedcomloc_topk_spec, ExpOptions};
+use crate::fed::{run as fed_run, RunConfig};
 use crate::model::ModelKind;
 use crate::util::stats::format_bytes;
 
@@ -16,14 +15,7 @@ pub fn run_with_cfg(opts: &ExpOptions, cfg: &RunConfig) -> anyhow::Result<Vec<(f
     let trainer = opts.make_trainer(ModelKind::Mlp);
     let mut results = Vec::new();
     for &density in &DENSITIES {
-        let spec = AlgorithmSpec::FedComLoc {
-            variant: Variant::Com,
-            compressor: if density >= 1.0 {
-                Box::new(Identity)
-            } else {
-                Box::new(TopK::with_density(density))
-            },
-        };
+        let spec = super::algo(&fedcomloc_topk_spec(density))?;
         log::info!("table1: density {density}");
         let log = fed_run(cfg, trainer.clone(), &spec);
         let acc = log.best_accuracy().unwrap_or(0.0);

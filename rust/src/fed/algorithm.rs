@@ -1,0 +1,155 @@
+//! The federated algorithm API: one trait, one generic drive loop.
+//!
+//! A [`FedAlgorithm`] implements exactly the algorithm-specific part of a
+//! communication round — local objectives, what goes on the wire, how the
+//! server folds updates back in — while [`drive`] owns everything every
+//! algorithm used to copy-paste: federation construction, client sampling,
+//! the evaluation cadence, per-round [`crate::fed::RoundLogger`]
+//! bookkeeping, and the worker pool (via [`RoundCtx::map_clients`]).
+//!
+//! Communication goes through the [`Transport`] in the [`RoundCtx`]:
+//! algorithms build [`Message`]s, `broadcast` them down and `uplink` them
+//! back, and never touch bit accounting — the transport measures real
+//! payloads, and a [`crate::fed::transport::SimNet`] can inject latency,
+//! bandwidth limits, and client dropout under any algorithm unchanged.
+//!
+//! ```text
+//! drive ──► sample S_r ──► algo.round(ctx) ──► transport.end_round()
+//!                │                 │
+//!                │          broadcast(model) ─► map_clients(train)
+//!                │                 ▲                   │
+//!                └─────────────────┴── uplink(update) ◄┘
+//! ```
+
+use super::transport::Transport;
+use super::{ClientState, Federation, RoundLogger, RunConfig};
+use crate::metrics::MetricsLog;
+use crate::model::LocalTrainer;
+use std::sync::Arc;
+
+/// What one communication round reports back to the drive loop. Wire usage
+/// is *not* part of this: the transport measures it.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundOutcome {
+    /// Local iterations each participating client executed this round.
+    pub local_steps: usize,
+    /// Mean training loss over participants' local steps.
+    pub train_loss: f64,
+}
+
+/// Per-round context handed to [`FedAlgorithm::round`].
+pub struct RoundCtx<'a> {
+    pub cfg: &'a RunConfig,
+    pub fed: &'a mut Federation,
+    pub transport: &'a mut dyn Transport,
+    /// Communication-round index (0-based).
+    pub round: usize,
+    /// The sampled participant set S_r for this round (drawn by [`drive`];
+    /// the transport may still drop members at broadcast time).
+    pub sampled: Vec<usize>,
+}
+
+impl RoundCtx<'_> {
+    /// Fork-join over `clients` on the federation's worker pool, with each
+    /// client's persistent state locked for the duration of the closure.
+    /// Results come back in input order.
+    pub fn map_clients<R, F>(&self, clients: &[usize], f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut ClientState) -> R + Sync,
+    {
+        let states = &self.fed.clients;
+        self.fed.pool.map(clients, |_, &ci| {
+            let mut state = states[ci].lock().unwrap();
+            f(ci, &mut state)
+        })
+    }
+}
+
+/// A federated algorithm, drivable by [`drive`]. Implementations hold all
+/// algorithm-local server state (control variates, regularizer state, coin
+/// streams) and initialize it in [`FedAlgorithm::setup`].
+pub trait FedAlgorithm: Send {
+    /// Display name, e.g. `fedcomloc-com[topk(0.30)]`.
+    fn name(&self) -> String;
+
+    /// Run name for the [`MetricsLog`] (kept format-stable across the API
+    /// migration so downstream tooling sees identical logs).
+    fn log_name(&self, fed: &Federation, cfg: &RunConfig) -> String;
+
+    /// Metadata key/value pairs recorded on the [`MetricsLog`].
+    fn log_meta(&self, cfg: &RunConfig) -> Vec<(String, String)>;
+
+    /// One-time initialization after [`Federation`] construction.
+    fn setup(&mut self, _fed: &mut Federation, _cfg: &RunConfig) {}
+
+    /// Execute one communication round.
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome;
+
+    /// One-time teardown after the last round.
+    fn finalize(&mut self, _fed: &mut Federation, _cfg: &RunConfig) {}
+}
+
+/// Run `algo` to completion on a fresh [`Federation`].
+pub fn drive(
+    cfg: &RunConfig,
+    trainer: Arc<dyn LocalTrainer>,
+    algo: &mut dyn FedAlgorithm,
+    transport: &mut dyn Transport,
+) -> MetricsLog {
+    let mut fed = Federation::new(cfg, trainer);
+    drive_federation(cfg, &mut fed, algo, transport)
+}
+
+/// Run `algo` to completion on an existing [`Federation`] (useful for tests
+/// that inspect federation state afterwards).
+///
+/// This is the single round loop all algorithms share: sample S_r, run the
+/// algorithm's round, drain the transport's accounting, evaluate on the
+/// configured cadence, and record one [`crate::metrics::RoundRecord`].
+pub fn drive_federation(
+    cfg: &RunConfig,
+    fed: &mut Federation,
+    algo: &mut dyn FedAlgorithm,
+    transport: &mut dyn Transport,
+) -> MetricsLog {
+    let name = algo.log_name(fed, cfg);
+    let mut log = MetricsLog::new(&name);
+    for (key, value) in algo.log_meta(cfg) {
+        log = log.with_meta(&key, value);
+    }
+    algo.setup(fed, cfg);
+    let mut logger = RoundLogger::new(cfg, log);
+    for round in 0..cfg.rounds {
+        logger.begin_round();
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let outcome = {
+            // Explicit reborrows: the ctx borrows end with this block.
+            let mut ctx = RoundCtx {
+                cfg,
+                fed: &mut *fed,
+                transport: &mut *transport,
+                round,
+                sampled,
+            };
+            algo.round(&mut ctx)
+        };
+        let report = transport.end_round();
+        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            Some(fed.evaluate())
+        } else {
+            None
+        };
+        if let Some(e) = &eval {
+            log::info!(
+                "[{name}] round {round}: loss {:.4} acc {:.4} up {} bits",
+                outcome.train_loss,
+                e.accuracy,
+                report.usage.uplink_bits
+            );
+        }
+        logger.end_round(round, outcome.local_steps, outcome.train_loss, &report, eval);
+    }
+    algo.finalize(fed, cfg);
+    logger.finish()
+}

@@ -1,81 +1,105 @@
-//! FedAvg (McMahan et al., 2016/2017) and sparseFedAvg (paper §4.7).
+//! FedAvg (McMahan et al., 2016/2017) and sparseFedAvg (paper §4.7) as a
+//! [`FedAlgorithm`].
 //!
-//! Round shape: sample S_r; broadcast x; each client runs E local SGD steps
-//! (no control variates — h is ignored by passing zeros); clients upload
-//! their model (TopK-compressed for sparseFedAvg, exactly mirroring
-//! FedComLoc-Com's wire format so the Fig. 9 bits-axis comparison is
-//! apples-to-apples); server averages.
+//! Round shape: the drive loop samples S_r; the server broadcasts x over
+//! the transport; each participant runs E local SGD steps (no control
+//! variates — h is ignored by passing zeros); clients upload their model
+//! (TopK-compressed for sparseFedAvg, exactly mirroring FedComLoc-Com's
+//! wire format so the Fig. 9 bits-axis comparison is apples-to-apples);
+//! the server averages the delivered updates.
 
-use super::transport::send_through;
-use super::{Federation, RoundLogger, RunConfig};
+use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::message::{Message, SERVER};
+use super::{Federation, RunConfig};
 use crate::compress::Compressor;
-use crate::metrics::MetricsLog;
 
-pub fn run(cfg: &RunConfig, fed: &mut Federation, compressor: &dyn Compressor) -> MetricsLog {
-    let algo = if compressor.name() == "identity" {
-        "fedavg".to_string()
-    } else {
-        format!("sparsefedavg[{}]", compressor.name())
-    };
-    let name = format!("{algo}-{}-a{}", fed.model.name(), cfg.dirichlet_alpha);
-    let log = MetricsLog::new(&name)
-        .with_meta("algorithm", algo)
-        .with_meta("gamma", cfg.gamma)
-        .with_meta("local_steps", cfg.local_steps)
-        .with_meta("alpha", cfg.dirichlet_alpha);
-    let mut logger = RoundLogger::new(cfg, log);
-    let dim = fed.x.len();
-    let zeros = vec![0.0f32; dim];
+/// FedAvg; an `identity` compressor gives vanilla FedAvg, TopK gives the
+/// paper's sparseFedAvg.
+pub struct FedAvg {
+    compressor: Box<dyn Compressor>,
+    zeros: Vec<f32>,
+}
 
-    for round in 0..cfg.rounds {
-        logger.begin_round();
-        let sampled = fed.sample_clients(cfg.clients_per_round);
-        let mut usage = super::transport::WireUsage::default();
-        for _ in &sampled {
-            usage.add_downlink(crate::compress::dense_bits(dim));
+impl FedAvg {
+    pub fn new(compressor: Box<dyn Compressor>) -> FedAvg {
+        FedAvg {
+            compressor,
+            zeros: Vec::new(),
         }
+    }
 
-        let x = fed.x.clone();
-        let trainer = &fed.trainer;
-        let clients = &fed.clients;
+    fn algo_name(&self) -> String {
+        if self.compressor.name() == "identity" {
+            "fedavg".to_string()
+        } else {
+            format!("sparsefedavg[{}]", self.compressor.name())
+        }
+    }
+}
+
+impl FedAlgorithm for FedAvg {
+    fn name(&self) -> String {
+        self.algo_name()
+    }
+
+    fn log_name(&self, fed: &Federation, cfg: &RunConfig) -> String {
+        format!("{}-{}-a{}", self.algo_name(), fed.model.name(), cfg.dirichlet_alpha)
+    }
+
+    fn log_meta(&self, cfg: &RunConfig) -> Vec<(String, String)> {
+        vec![
+            ("algorithm".into(), self.algo_name()),
+            ("gamma".into(), cfg.gamma.to_string()),
+            ("local_steps".into(), cfg.local_steps.to_string()),
+            ("alpha".into(), cfg.dirichlet_alpha.to_string()),
+        ]
+    }
+
+    fn setup(&mut self, fed: &mut Federation, _cfg: &RunConfig) {
+        self.zeros = vec![0.0f32; fed.x.len()];
+    }
+
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome {
+        let cfg = ctx.cfg;
+        let round = ctx.round;
+        let msg = Message::dense(round, SERVER, &ctx.fed.x);
+        let participants = ctx.transport.broadcast(&ctx.sampled, &msg);
+        let x = msg.to_dense();
+
+        let trainer = ctx.fed.trainer.clone();
         let gamma = cfg.gamma;
         let local_steps = cfg.local_steps;
-        let zeros_ref = &zeros;
-        let results: Vec<(Vec<f32>, u64, f64)> = fed.pool.map(&sampled, |_, &ci| {
-            let mut state = clients[ci].lock().unwrap();
+        let zeros = &self.zeros;
+        let compressor = self.compressor.as_ref();
+        let results: Vec<(Message, f64)> = ctx.map_clients(&participants, |ci, state| {
             let mut xi = x.clone();
             let mut loss_sum = 0.0f64;
             for _ in 0..local_steps {
                 let batch = state.loader.next_batch();
-                let (next, loss) = trainer.train_step(&xi, zeros_ref, &batch, gamma);
+                let (next, loss) = trainer.train_step(&xi, zeros, &batch, gamma);
                 xi = next;
                 loss_sum += loss as f64;
             }
-            let (upload, bits) = send_through(compressor, &xi, &mut state.rng);
-            (upload, bits, loss_sum)
+            let compressed = compressor.compress(&xi, &mut state.rng);
+            (Message::from_compressed(round, ci as u32, compressed), loss_sum)
         });
 
-        let rows: Vec<&[f32]> = results.iter().map(|(v, _, _)| v.as_slice()).collect();
-        crate::tensor::mean_into(&rows, &mut fed.x);
-        for (_, bits, _) in &results {
-            usage.add_uplink(*bits);
+        let loss_sum: f64 = results.iter().map(|(_, l)| l).sum();
+        let n_trained = results.len();
+        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n_trained);
+        for ((upload, _), &ci) in results.into_iter().zip(&participants) {
+            if let Some(received) = ctx.transport.uplink(ci, upload) {
+                uploads.push(received.to_dense());
+            }
         }
-        let train_loss = results.iter().map(|(_, _, l)| l).sum::<f64>()
-            / (results.len() * cfg.local_steps).max(1) as f64;
+        if !uploads.is_empty() {
+            let rows: Vec<&[f32]> = uploads.iter().map(|v| v.as_slice()).collect();
+            crate::tensor::mean_into(&rows, &mut ctx.fed.x);
+        }
 
-        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(fed.evaluate())
-        } else {
-            None
-        };
-        logger.end_round(
-            round,
-            cfg.local_steps,
-            train_loss,
-            usage.uplink_bits,
-            usage.downlink_bits,
-            eval,
-        );
+        RoundOutcome {
+            local_steps: cfg.local_steps,
+            train_loss: loss_sum / (n_trained * cfg.local_steps).max(1) as f64,
+        }
     }
-    logger.finish()
 }

@@ -1,4 +1,5 @@
-//! FedDyn (Acar et al., 2021) — the additional baseline in Figure 9.
+//! FedDyn (Acar et al., 2021) — the additional baseline in Figure 9 — as a
+//! [`FedAlgorithm`].
 //!
 //! Each client keeps a gradient correction λ_i (stored in `ClientState::h`)
 //! and minimizes the dynamically-regularized local objective
@@ -6,44 +7,68 @@
 //! by E SGD steps; afterwards λ_i ← λ_i − α_dyn·(x_i − x_server).
 //! The server tracks s ← s − (α_dyn/n)·Σ_{i∈S}(x_i − x_server) and sets
 //!     x_server = mean_{i∈S}(x_i) − s/α_dyn.
-//! Communication is dense both ways (one d-vector each).
+//! Communication is dense both ways (one d-vector [`Message`] each).
 
-use super::{Federation, RoundLogger, RunConfig};
-use crate::metrics::MetricsLog;
+use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::message::{Message, SERVER};
+use super::{Federation, RunConfig};
 use crate::tensor;
 
-pub fn run(cfg: &RunConfig, fed: &mut Federation, alpha_dyn: f64) -> MetricsLog {
-    let name = format!(
-        "feddyn[a={alpha_dyn}]-{}-a{}",
-        fed.model.name(),
-        cfg.dirichlet_alpha
-    );
-    let log = MetricsLog::new(&name)
-        .with_meta("algorithm", "feddyn")
-        .with_meta("feddyn_alpha", alpha_dyn)
-        .with_meta("gamma", cfg.gamma)
-        .with_meta("local_steps", cfg.local_steps)
-        .with_meta("alpha", cfg.dirichlet_alpha);
-    let mut logger = RoundLogger::new(cfg, log);
-    let dim = fed.x.len();
-    let mut server_state = vec![0.0f32; dim];
-    let a = alpha_dyn as f32;
+pub struct FedDyn {
+    alpha_dyn: f64,
+    server_state: Vec<f32>,
+}
 
-    for round in 0..cfg.rounds {
-        logger.begin_round();
-        let sampled = fed.sample_clients(cfg.clients_per_round);
-        let mut usage = super::transport::WireUsage::default();
-        for _ in &sampled {
-            usage.add_downlink(crate::compress::dense_bits(dim));
+impl FedDyn {
+    pub fn new(alpha_dyn: f64) -> FedDyn {
+        FedDyn {
+            alpha_dyn,
+            server_state: Vec::new(),
         }
+    }
+}
 
-        let x = fed.x.clone();
-        let trainer = &fed.trainer;
-        let clients = &fed.clients;
+impl FedAlgorithm for FedDyn {
+    fn name(&self) -> String {
+        format!("feddyn[a={}]", self.alpha_dyn)
+    }
+
+    fn log_name(&self, fed: &Federation, cfg: &RunConfig) -> String {
+        format!(
+            "feddyn[a={}]-{}-a{}",
+            self.alpha_dyn,
+            fed.model.name(),
+            cfg.dirichlet_alpha
+        )
+    }
+
+    fn log_meta(&self, cfg: &RunConfig) -> Vec<(String, String)> {
+        vec![
+            ("algorithm".into(), "feddyn".into()),
+            ("feddyn_alpha".into(), self.alpha_dyn.to_string()),
+            ("gamma".into(), cfg.gamma.to_string()),
+            ("local_steps".into(), cfg.local_steps.to_string()),
+            ("alpha".into(), cfg.dirichlet_alpha.to_string()),
+        ]
+    }
+
+    fn setup(&mut self, fed: &mut Federation, _cfg: &RunConfig) {
+        self.server_state = vec![0.0f32; fed.x.len()];
+    }
+
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome {
+        let cfg = ctx.cfg;
+        let round = ctx.round;
+        let a = self.alpha_dyn as f32;
+
+        let msg = Message::dense(round, SERVER, &ctx.fed.x);
+        let participants = ctx.transport.broadcast(&ctx.sampled, &msg);
+        let x = msg.to_dense();
+
+        let trainer = ctx.fed.trainer.clone();
         let gamma = cfg.gamma;
         let local_steps = cfg.local_steps;
-        let results: Vec<(Vec<f32>, f64)> = fed.pool.map(&sampled, |_, &ci| {
-            let mut state = clients[ci].lock().unwrap();
+        let results: Vec<(Message, f64)> = ctx.map_clients(&participants, |ci, state| {
             let mut xi = x.clone();
             let mut loss_sum = 0.0f64;
             for _ in 0..local_steps {
@@ -59,43 +84,44 @@ pub fn run(cfg: &RunConfig, fed: &mut Federation, alpha_dyn: f64) -> MetricsLog 
                 xi = next;
                 loss_sum += loss as f64;
             }
-            // λ_i ← λ_i − a·(x_i − x_server)
-            for j in 0..xi.len() {
-                state.h[j] -= a * (xi[j] - x[j]);
-            }
-            (xi, loss_sum)
+            (Message::dense(round, ci as u32, &xi), loss_sum)
         });
 
-        // Server: s ← s − (a/n)·Σ(x_i − x); x ← mean(x_i) − s/a.
-        let m = results.len().max(1);
-        for (xi, _) in &results {
-            for j in 0..dim {
-                server_state[j] -= a / cfg.n_clients as f32 * (xi[j] - x[j]);
+        let loss_sum: f64 = results.iter().map(|(_, l)| l).sum();
+        let n_trained = results.len();
+        let mut models: Vec<Vec<f32>> = Vec::with_capacity(n_trained);
+        for ((upload, _), &ci) in results.into_iter().zip(&participants) {
+            if let Some(received) = ctx.transport.uplink(ci, upload) {
+                let xi = received.to_dense();
+                // λ_i ← λ_i − a·(x_i − x_server), committed only once the
+                // uplink is known delivered so a lossy transport cannot
+                // advance a correction the server never saw.
+                {
+                    let mut state = ctx.fed.clients[ci].lock().unwrap();
+                    for j in 0..xi.len() {
+                        state.h[j] -= a * (xi[j] - x[j]);
+                    }
+                }
+                models.push(xi);
             }
         }
-        let rows: Vec<&[f32]> = results.iter().map(|(v, _)| v.as_slice()).collect();
-        crate::tensor::mean_into(&rows, &mut fed.x);
-        tensor::axpy(-1.0 / a, &server_state, &mut fed.x);
 
-        for _ in &results {
-            usage.add_uplink(crate::compress::dense_bits(dim));
+        if !models.is_empty() {
+            // Server: s ← s − (a/n)·Σ(x_i − x); x ← mean(x_i) − s/a.
+            let dim = ctx.fed.x.len();
+            for xi in &models {
+                for j in 0..dim {
+                    self.server_state[j] -= a / cfg.n_clients as f32 * (xi[j] - x[j]);
+                }
+            }
+            let rows: Vec<&[f32]> = models.iter().map(|v| v.as_slice()).collect();
+            crate::tensor::mean_into(&rows, &mut ctx.fed.x);
+            tensor::axpy(-1.0 / a, &self.server_state, &mut ctx.fed.x);
         }
-        let train_loss = results.iter().map(|(_, l)| l).sum::<f64>()
-            / (m * cfg.local_steps).max(1) as f64;
 
-        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(fed.evaluate())
-        } else {
-            None
-        };
-        logger.end_round(
-            round,
-            cfg.local_steps,
-            train_loss,
-            usage.uplink_bits,
-            usage.downlink_bits,
-            eval,
-        );
+        RoundOutcome {
+            local_steps: cfg.local_steps,
+            train_loss: loss_sum / (n_trained * cfg.local_steps).max(1) as f64,
+        }
     }
-    logger.finish()
 }

@@ -1,29 +1,42 @@
-//! The federated coordinator (Layer 3): FedComLoc and every baseline.
+//! The federated runtime (Layer 3): FedComLoc and every baseline, behind
+//! three public APIs.
 //!
-//! This module is the paper's *system* contribution. [`Federation`] owns the
-//! process topology — partitioned client shards, per-client persistent state
-//! (loaders, control variates), the worker pool, transport accounting, and
-//! the metric sinks — and each algorithm drives it:
+//! * [`algorithm`] — the [`FedAlgorithm`] trait plus the single generic
+//!   [`algorithm::drive`] loop that owns client sampling, the evaluation
+//!   cadence, [`RoundLogger`] bookkeeping, and the worker pool. The four
+//!   shipped algorithms (FedComLoc, FedAvg/sparseFedAvg, Scaffold, FedDyn)
+//!   are ordinary implementations; adding a LoCoDL- or SoteriaFL-style
+//!   variant is one new file, no coordinator changes.
+//! * [`message`] — the self-describing wire format: a [`message::Message`]
+//!   carries a codec tag with every decode parameter, so the receiving side
+//!   reconstructs vectors from the serialized bytes alone (no compressor
+//!   instance), exactly as a remote peer would.
+//! * [`transport`] — the pluggable [`transport::Transport`] channel:
+//!   [`transport::InProc`] reproduces the seed's in-process semantics bit
+//!   for bit, [`transport::SimNet`] simulates per-link bandwidth, latency,
+//!   and client dropout for straggler scenarios.
 //!
-//! * [`scaffnew`] — **FedComLoc** (Algorithm 1): ProxSkip/Scaffnew local
-//!   training with probabilistic communication skipping, in three variants
-//!   (-Com uplink, -Global downlink, -Local in-graph compression);
-//! * [`fedavg`] — FedAvg and its TopK-compressed counterpart sparseFedAvg;
-//! * [`scaffold`] — Scaffold (Karimireddy et al., 2020) with client/server
-//!   control variates;
-//! * [`feddyn`] — FedDyn (Acar et al., 2021), the extra baseline of Fig. 9.
+//! [`Federation`] owns the process topology — partitioned client shards,
+//! per-client persistent state (loaders, control variates), the worker
+//! pool, and the model — and [`AlgorithmSpec`] is the string-keyed registry
+//! (`"fedcomloc-com:topk:0.3"`, `"fedavg"`, `"feddyn:0.01"`, …) the CLI,
+//! experiments, and benches all resolve algorithms through.
 //!
 //! All algorithms are generic over [`LocalTrainer`], so they run identically
 //! on the native Rust compute plane and the AOT-compiled PJRT plane.
 
+pub mod algorithm;
 pub mod cost;
 pub mod fedavg;
 pub mod feddyn;
+pub mod message;
 pub mod scaffold;
 pub mod scaffnew;
 pub mod transport;
 
-use crate::compress::Compressor;
+pub use algorithm::{drive, drive_federation, FedAlgorithm, RoundCtx, RoundOutcome};
+
+use crate::compress::parse_spec;
 use crate::data::dirichlet::{partition, Partition};
 use crate::data::loader::{eval_batches, ClientLoader, EvalBatches};
 use crate::data::{load_or_synthesize, DatasetKind, TrainTest};
@@ -63,33 +76,175 @@ impl Variant {
     }
 }
 
-/// Which algorithm to run (paper §4 baselines + FedComLoc).
-pub enum AlgorithmSpec {
-    FedComLoc {
-        variant: Variant,
-        compressor: Box<dyn Compressor>,
+/// One entry in the string-keyed algorithm registry.
+pub struct AlgorithmFamily {
+    /// Registry key, e.g. `fedcomloc-com`.
+    pub key: &'static str,
+    /// Help text for the argument after the key, if any.
+    pub arg_help: &'static str,
+    pub summary: &'static str,
+    build: fn(&str) -> Result<Box<dyn FedAlgorithm>, String>,
+}
+
+fn arg_compressor(arg: &str) -> Result<Box<dyn crate::compress::Compressor>, String> {
+    parse_spec(if arg.is_empty() { "none" } else { arg })
+}
+
+fn build_fedcomloc_com(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    Ok(Box::new(scaffnew::FedComLoc::new(Variant::Com, arg_compressor(arg)?)))
+}
+
+fn build_fedcomloc_local(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    Ok(Box::new(scaffnew::FedComLoc::new(Variant::Local, arg_compressor(arg)?)))
+}
+
+fn build_fedcomloc_global(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    Ok(Box::new(scaffnew::FedComLoc::new(Variant::Global, arg_compressor(arg)?)))
+}
+
+fn build_fedavg(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    Ok(Box::new(fedavg::FedAvg::new(arg_compressor(arg)?)))
+}
+
+fn build_sparsefedavg(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    let spec = if arg.is_empty() { "topk:0.3" } else { arg };
+    Ok(Box::new(fedavg::FedAvg::new(parse_spec(spec)?)))
+}
+
+fn build_scaffold(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    if !arg.is_empty() {
+        return Err(format!("scaffold takes no argument, got '{arg}'"));
+    }
+    Ok(Box::new(scaffold::Scaffold::new()))
+}
+
+fn build_feddyn(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    let alpha = if arg.is_empty() {
+        0.01
+    } else {
+        arg.parse::<f64>().map_err(|_| format!("bad feddyn alpha '{arg}'"))?
+    };
+    if !alpha.is_finite() || alpha <= 0.0 {
+        return Err(format!("feddyn alpha must be positive, got {alpha}"));
+    }
+    Ok(Box::new(feddyn::FedDyn::new(alpha)))
+}
+
+static ALGORITHM_REGISTRY: [AlgorithmFamily; 8] = [
+    AlgorithmFamily {
+        key: "fedcomloc-com",
+        arg_help: "compressor spec (default: none)",
+        summary: "FedComLoc, client->server uplink compression (paper default)",
+        build: build_fedcomloc_com,
     },
-    /// FedAvg; `compressor` = Identity gives vanilla FedAvg, TopK gives the
-    /// paper's sparseFedAvg.
-    FedAvg { compressor: Box<dyn Compressor> },
-    Scaffold,
-    FedDyn { alpha: f64 },
+    AlgorithmFamily {
+        key: "fedcomloc-local",
+        arg_help: "compressor spec (default: none)",
+        summary: "FedComLoc, in-graph model compression during local steps",
+        build: build_fedcomloc_local,
+    },
+    AlgorithmFamily {
+        key: "fedcomloc-global",
+        arg_help: "compressor spec (default: none)",
+        summary: "FedComLoc, server->client downlink compression",
+        build: build_fedcomloc_global,
+    },
+    AlgorithmFamily {
+        key: "fedcomloc",
+        arg_help: "compressor spec (default: none)",
+        summary: "alias for fedcomloc-com",
+        build: build_fedcomloc_com,
+    },
+    AlgorithmFamily {
+        key: "fedavg",
+        arg_help: "optional compressor spec (identity = vanilla FedAvg)",
+        summary: "FedAvg (McMahan et al.); with a compressor it becomes sparseFedAvg",
+        build: build_fedavg,
+    },
+    AlgorithmFamily {
+        key: "sparsefedavg",
+        arg_help: "compressor spec (default: topk:0.3)",
+        summary: "sparseFedAvg (paper §4.7): FedAvg with compressed uplink",
+        build: build_sparsefedavg,
+    },
+    AlgorithmFamily {
+        key: "scaffold",
+        arg_help: "",
+        summary: "Scaffold (Karimireddy et al.): control variates, 2x dense traffic",
+        build: build_scaffold,
+    },
+    AlgorithmFamily {
+        key: "feddyn",
+        arg_help: "regularizer alpha (default: 0.01)",
+        summary: "FedDyn (Acar et al.): dynamic regularization baseline",
+        build: build_feddyn,
+    },
+];
+
+/// The algorithm registry: every runnable algorithm family, keyed by the
+/// spec prefix consumed uniformly by the CLI, experiments, and benches.
+pub fn algorithm_registry() -> &'static [AlgorithmFamily] {
+    &ALGORITHM_REGISTRY
+}
+
+/// Resolve a spec string (`<family>[:<arg>]`) against the registry.
+pub fn build_algorithm(spec: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    let spec = spec.trim();
+    let (family, arg) = match spec.split_once(':') {
+        Some((f, a)) => (f, a),
+        None => (spec, ""),
+    };
+    let family = family.to_ascii_lowercase();
+    for fam in algorithm_registry() {
+        if fam.key == family {
+            return (fam.build)(arg);
+        }
+    }
+    let keys: Vec<&str> = algorithm_registry().iter().map(|f| f.key).collect();
+    Err(format!("unknown algorithm '{family}' (have: {})", keys.join(", ")))
+}
+
+/// A validated, string-keyed algorithm selector — the registry handle the
+/// CLI, all experiments, and the benches construct algorithms through.
+///
+/// Replaces the seed's closed enum: `AlgorithmSpec::parse("fedcomloc-com:topk:0.1")`
+/// both validates the spec and remembers it, and [`AlgorithmSpec::build`]
+/// instantiates a fresh [`FedAlgorithm`] per run.
+pub struct AlgorithmSpec {
+    spec: String,
+    display: String,
 }
 
 impl AlgorithmSpec {
+    pub fn parse(spec: &str) -> Result<AlgorithmSpec, String> {
+        let algo = build_algorithm(spec)?;
+        Ok(AlgorithmSpec {
+            spec: spec.trim().to_string(),
+            display: algo.name(),
+        })
+    }
+
+    /// Display name, e.g. `fedcomloc-com[topk(0.30)]`.
     pub fn name(&self) -> String {
-        match self {
-            AlgorithmSpec::FedComLoc {
-                variant,
-                compressor,
-            } => format!("fedcomloc-{}[{}]", variant.name(), compressor.name()),
-            AlgorithmSpec::FedAvg { compressor } => match compressor.name().as_str() {
-                "identity" => "fedavg".to_string(),
-                other => format!("sparsefedavg[{other}]"),
-            },
-            AlgorithmSpec::Scaffold => "scaffold".to_string(),
-            AlgorithmSpec::FedDyn { alpha } => format!("feddyn[a={alpha}]"),
-        }
+        self.display.clone()
+    }
+
+    /// The spec string this was parsed from.
+    pub fn key(&self) -> &str {
+        &self.spec
+    }
+
+    /// Instantiate a fresh algorithm (algorithms are stateful; one per run).
+    pub fn build(&self) -> Box<dyn FedAlgorithm> {
+        build_algorithm(&self.spec).expect("spec validated at parse time")
+    }
+}
+
+impl std::str::FromStr for AlgorithmSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        AlgorithmSpec::parse(s)
     }
 }
 
@@ -149,18 +304,31 @@ impl RunConfig {
         }
     }
 
+    /// The CIFAR testbed preset (paper §4.3 topology: 10 clients, full
+    /// participation). Every field is explicit — this preset used to
+    /// inherit MNIST's client-count-dependent fields via struct-update,
+    /// which silently kept `clients_per_round = 10` only because MNIST's
+    /// sampled count happened to equal CIFAR's client count.
     pub fn default_cifar() -> RunConfig {
         RunConfig {
             dataset: DatasetKind::Cifar10,
             train_n: 4_000,
             test_n: 1_000,
             n_clients: 10,
+            // Full participation: all 10 clients every round (paper §4.3).
             clients_per_round: 10,
+            dirichlet_alpha: 0.7,
             rounds: 40,
+            p: 0.1,
+            local_steps: 10,
+            gamma: 0.05,
             batch_size: 32,
             eval_batch: 128,
-            gamma: 0.05,
-            ..RunConfig::default_mnist()
+            eval_every: 5,
+            seed: 42,
+            tau: 0.01,
+            threads: 0,
+            data_dir: std::path::PathBuf::from("data"),
         }
     }
 }
@@ -193,6 +361,12 @@ impl Federation {
     /// Partition data, build per-client loaders, initialize x₀ and h_i = 0
     /// (satisfying Algorithm 1's Σ h_{i,0} = 0).
     pub fn new(cfg: &RunConfig, trainer: Arc<dyn LocalTrainer>) -> Federation {
+        assert!(
+            cfg.clients_per_round <= cfg.n_clients,
+            "clients_per_round ({}) must not exceed n_clients ({})",
+            cfg.clients_per_round,
+            cfg.n_clients
+        );
         let model = ModelKind::for_dataset(cfg.dataset);
         assert_eq!(trainer.model(), model, "trainer/model mismatch");
         let data = load_or_synthesize(cfg.dataset, &cfg.data_dir, cfg.train_n, cfg.test_n, cfg.seed);
@@ -267,13 +441,14 @@ impl Federation {
     }
 }
 
-/// Shared bookkeeping for the per-round records all drivers emit.
+/// Shared bookkeeping for the per-round records the drive loop emits.
 pub struct RoundLogger<'a> {
     pub cfg: &'a RunConfig,
     pub log: MetricsLog,
     cum_up: u64,
     cum_down: u64,
     cum_local_iters: u64,
+    cum_sim_secs: f64,
     round_start: std::time::Instant,
 }
 
@@ -285,6 +460,7 @@ impl<'a> RoundLogger<'a> {
             cum_up: 0,
             cum_down: 0,
             cum_local_iters: 0,
+            cum_sim_secs: 0.0,
             round_start: std::time::Instant::now(),
         }
     }
@@ -293,19 +469,18 @@ impl<'a> RoundLogger<'a> {
         self.round_start = std::time::Instant::now();
     }
 
-    #[allow(clippy::too_many_arguments)]
     pub fn end_round(
         &mut self,
         round: usize,
         local_steps: usize,
         train_loss: f64,
-        uplink_bits: u64,
-        downlink_bits: u64,
+        report: &transport::LinkReport,
         eval: Option<crate::model::EvalResult>,
     ) {
-        self.cum_up += uplink_bits;
-        self.cum_down += downlink_bits;
+        self.cum_up += report.usage.uplink_bits;
+        self.cum_down += report.usage.downlink_bits;
         self.cum_local_iters += local_steps as u64;
+        self.cum_sim_secs += report.sim_secs;
         let total_cost =
             cost::total_cost(round as u64 + 1, self.cum_local_iters, self.cfg.tau);
         self.log.push(RoundRecord {
@@ -314,12 +489,15 @@ impl<'a> RoundLogger<'a> {
             train_loss,
             test_loss: eval.as_ref().map(|e| e.mean_loss),
             test_accuracy: eval.as_ref().map(|e| e.accuracy),
-            uplink_bits,
-            downlink_bits,
+            uplink_bits: report.usage.uplink_bits,
+            downlink_bits: report.usage.downlink_bits,
             cum_uplink_bits: self.cum_up,
             cum_downlink_bits: self.cum_down,
             total_cost,
             wall_secs: self.round_start.elapsed().as_secs_f64(),
+            sim_secs: report.sim_secs,
+            cum_sim_secs: self.cum_sim_secs,
+            dropped_clients: report.dropped_clients,
         });
     }
 
@@ -328,16 +506,102 @@ impl<'a> RoundLogger<'a> {
     }
 }
 
-/// Run any algorithm to completion.
+/// Run an algorithm to completion over the in-process transport (the seed's
+/// semantics, byte-exact).
 pub fn run(cfg: &RunConfig, trainer: Arc<dyn LocalTrainer>, spec: &AlgorithmSpec) -> MetricsLog {
-    let mut fed = Federation::new(cfg, trainer);
-    match spec {
-        AlgorithmSpec::FedComLoc {
-            variant,
-            compressor,
-        } => scaffnew::run(cfg, &mut fed, *variant, compressor.as_ref()),
-        AlgorithmSpec::FedAvg { compressor } => fedavg::run(cfg, &mut fed, compressor.as_ref()),
-        AlgorithmSpec::Scaffold => scaffold::run(cfg, &mut fed),
-        AlgorithmSpec::FedDyn { alpha } => feddyn::run(cfg, &mut fed, *alpha),
+    let mut transport = transport::InProc::default();
+    run_with_transport(cfg, trainer, spec, &mut transport)
+}
+
+/// Run an algorithm to completion over an arbitrary transport.
+pub fn run_with_transport(
+    cfg: &RunConfig,
+    trainer: Arc<dyn LocalTrainer>,
+    spec: &AlgorithmSpec,
+    transport: &mut dyn transport::Transport,
+) -> MetricsLog {
+    let mut algo = spec.build();
+    algorithm::drive(cfg, trainer, algo.as_mut(), transport)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_keys_unique_and_resolvable() {
+        let reg = algorithm_registry();
+        let mut keys: Vec<_> = reg.iter().map(|f| f.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), reg.len(), "duplicate registry keys");
+        for fam in reg {
+            // Every family must build with its default argument.
+            assert!(build_algorithm(fam.key).is_ok(), "{}", fam.key);
+        }
+    }
+
+    #[test]
+    fn spec_strings_resolve_to_expected_names() {
+        let cases = [
+            ("fedcomloc-com:topk:0.1", "fedcomloc-com[topk(0.10)]"),
+            ("fedcomloc-com", "fedcomloc-com[identity]"),
+            ("fedcomloc:topk:0.3", "fedcomloc-com[topk(0.30)]"),
+            ("fedcomloc-local:topk:0.5", "fedcomloc-local[topk(0.50)]"),
+            ("fedcomloc-global:q:8", "fedcomloc-global[q8]"),
+            ("fedcomloc-com:topk:0.25+q:4", "fedcomloc-com[topk(0.25)+q4]"),
+            ("fedavg", "fedavg"),
+            ("fedavg:topk:0.3", "sparsefedavg[topk(0.30)]"),
+            ("sparsefedavg", "sparsefedavg[topk(0.30)]"),
+            ("scaffold", "scaffold"),
+            ("feddyn", "feddyn[a=0.01]"),
+            ("feddyn:0.1", "feddyn[a=0.1]"),
+            ("FEDAVG", "fedavg"),
+        ];
+        for (spec, want) in cases {
+            let parsed = AlgorithmSpec::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(parsed.name(), want, "{spec}");
+        }
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "nope",
+            "fedcomloc-com:wat",
+            "scaffold:7",
+            "feddyn:zero",
+            "feddyn:-1",
+            "sparsefedavg:topk:0",
+        ] {
+            assert!(AlgorithmSpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn cifar_preset_is_full_participation() {
+        let cfg = RunConfig::default_cifar();
+        assert_eq!(cfg.n_clients, 10);
+        assert_eq!(cfg.clients_per_round, 10);
+        assert!(cfg.clients_per_round <= cfg.n_clients);
+        // The fields that used to leak in from the MNIST preset.
+        assert_eq!(cfg.dataset, DatasetKind::Cifar10);
+        assert_eq!(cfg.p, 0.1);
+        assert_eq!(cfg.local_steps, 10);
+        assert_eq!(cfg.eval_every, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "clients_per_round")]
+    fn oversampled_federation_rejected() {
+        let cfg = RunConfig {
+            n_clients: 4,
+            clients_per_round: 5,
+            train_n: 200,
+            test_n: 50,
+            ..RunConfig::default_mnist()
+        };
+        let trainer = Arc::new(crate::model::native::NativeTrainer::new(ModelKind::Mlp));
+        let _ = Federation::new(&cfg, trainer);
     }
 }

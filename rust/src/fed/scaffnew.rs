@@ -1,5 +1,5 @@
 //! FedComLoc (paper Algorithm 1): Scaffnew/ProxSkip local training with
-//! compression, in the three variants of §3.2.
+//! compression, in the three variants of §3.2 — as a [`FedAlgorithm`].
 //!
 //! Iteration structure. The server pre-commits to the Bernoulli(p) coin
 //! sequence θ_0..θ_{T−1} (Algorithm 1 line 2); a *communication round* is a
@@ -7,10 +7,11 @@
 //! triggers aggregation, so segment lengths are Geometric(p) with mean 1/p
 //! — the paper's "average of 10 local iterations per round" at p = 0.1.
 //!
-//! Client sampling (paper §4: 10 of 100 per round) follows the standard
-//! FL deployment shape: the sampled set receives the current global model,
-//! runs the whole segment locally, and participates in the aggregation;
-//! control variates h_i of unsampled clients stay frozen.
+//! Client sampling (paper §4: 10 of 100 per round) is owned by the drive
+//! loop; the sampled set receives the current global model over the
+//! transport, runs the whole segment locally, and participates in the
+//! aggregation; control variates h_i of unsampled (or dropped) clients stay
+//! frozen.
 //!
 //! Compression points (and one deliberate reading choice): Algorithm 1's
 //! line 8 notationally applies C(x̂) every iteration, but between
@@ -21,20 +22,22 @@
 //! server-side (lines 11–12), and the h-refresh (line 16) uses the
 //! *compressed* x_{t+1}, faithful to the pseudocode.
 //!
+//! Wire shape per round: one downlink broadcast (dense, or the retained
+//! compressed model under -Global) and one uplink [`Message`] per
+//! participant (compressed under -Com).
+//!
 //! Invariant (tested): with -Com/-Local, Σ_i h_i stays 0 — each round's
 //! updates sum to (p/γ)·(m·mean(ε) − Σ ε) = 0.
 
-use super::transport::send_through;
-use super::{Federation, RoundLogger, RunConfig, Variant};
+use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::message::{Message, SERVER};
+use super::{Federation, RunConfig, Variant};
 use crate::compress::Compressor;
-use crate::metrics::MetricsLog;
 use crate::util::rng::Rng;
 
-/// One client's segment result.
-struct SegmentResult {
-    /// Receiver-side reconstruction of the uplinked model ε_i.
-    epsilon: Vec<f32>,
-    uplink_bits: u64,
+/// One client's segment result (the uplink message plus local stats).
+struct Segment {
+    upload: Message,
     loss_sum: f64,
     steps: usize,
 }
@@ -49,58 +52,97 @@ pub fn next_segment_len(coin_rng: &mut Rng, p: f64) -> usize {
     len
 }
 
-pub fn run(
-    cfg: &RunConfig,
-    fed: &mut Federation,
+/// FedComLoc in its -Com / -Local / -Global variants.
+pub struct FedComLoc {
     variant: Variant,
-    compressor: &dyn Compressor,
-) -> MetricsLog {
-    let name = format!(
-        "fedcomloc-{}[{}]-{}-a{}",
-        variant.name(),
-        compressor.name(),
-        fed.model.name(),
-        cfg.dirichlet_alpha
-    );
-    let log = MetricsLog::new(&name)
-        .with_meta("algorithm", format!("fedcomloc-{}", variant.name()))
-        .with_meta("compressor", compressor.name())
-        .with_meta("p", cfg.p)
-        .with_meta("gamma", cfg.gamma)
-        .with_meta("alpha", cfg.dirichlet_alpha)
-        .with_meta("clients", cfg.n_clients)
-        .with_meta("sampled", cfg.clients_per_round);
-    let mut logger = RoundLogger::new(cfg, log);
-    let mut coin_rng = fed.rng.derive(0x5EED_C019);
-    let mut server_rng = fed.rng.derive(0x5E2E_5EED);
-    let dim = fed.x.len();
-    let p_over_gamma = (cfg.p / cfg.gamma as f64) as f32;
-    // Wire size of the current global model as the sampled clients will
-    // receive it (Global keeps a compressed model; others send dense).
-    let mut downlink_bits_per_client: u64 = crate::compress::dense_bits(dim);
+    compressor: Box<dyn Compressor>,
+    /// Density for the -Local in-graph masked step (TopK only).
+    local_density: Option<f64>,
+    /// Algorithm 1's server coin stream (derived in `setup`).
+    coin_rng: Rng,
+    /// Server-side compression randomness for -Global.
+    server_rng: Rng,
+    /// (p/γ) for the control-variate refresh.
+    p_over_gamma: f32,
+    /// -Global retains the compressed model message between rounds so
+    /// subsequent downlinks ship (and are billed at) the compressed form.
+    downlink_msg: Option<Message>,
+}
 
-    // Extract density for the -Local in-graph masked step (TopK only; the
-    // -Local variant is defined for sparsity in the paper's experiments).
-    let local_density = compressor_density(compressor);
+impl FedComLoc {
+    pub fn new(variant: Variant, compressor: Box<dyn Compressor>) -> FedComLoc {
+        let local_density = compressor_density(compressor.as_ref());
+        FedComLoc {
+            variant,
+            compressor,
+            local_density,
+            coin_rng: Rng::seed_from_u64(0),
+            server_rng: Rng::seed_from_u64(0),
+            p_over_gamma: 0.0,
+            downlink_msg: None,
+        }
+    }
+}
 
-    for round in 0..cfg.rounds {
-        logger.begin_round();
-        let seg_len = next_segment_len(&mut coin_rng, cfg.p);
-        let sampled = fed.sample_clients(cfg.clients_per_round);
+impl FedAlgorithm for FedComLoc {
+    fn name(&self) -> String {
+        format!("fedcomloc-{}[{}]", self.variant.name(), self.compressor.name())
+    }
+
+    fn log_name(&self, fed: &Federation, cfg: &RunConfig) -> String {
+        format!(
+            "fedcomloc-{}[{}]-{}-a{}",
+            self.variant.name(),
+            self.compressor.name(),
+            fed.model.name(),
+            cfg.dirichlet_alpha
+        )
+    }
+
+    fn log_meta(&self, cfg: &RunConfig) -> Vec<(String, String)> {
+        vec![
+            ("algorithm".into(), format!("fedcomloc-{}", self.variant.name())),
+            ("compressor".into(), self.compressor.name()),
+            ("p".into(), cfg.p.to_string()),
+            ("gamma".into(), cfg.gamma.to_string()),
+            ("alpha".into(), cfg.dirichlet_alpha.to_string()),
+            ("clients".into(), cfg.n_clients.to_string()),
+            ("sampled".into(), cfg.clients_per_round.to_string()),
+        ]
+    }
+
+    fn setup(&mut self, fed: &mut Federation, cfg: &RunConfig) {
+        self.coin_rng = fed.rng.derive(0x5EED_C019);
+        self.server_rng = fed.rng.derive(0x5E2E_5EED);
+        self.p_over_gamma = (cfg.p / cfg.gamma as f64) as f32;
+        self.downlink_msg = None;
+    }
+
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome {
+        let cfg = ctx.cfg;
+        let seg_len = next_segment_len(&mut self.coin_rng, cfg.p);
 
         // ---- downlink: broadcast current model to the sampled set ----
-        let mut usage = super::transport::WireUsage::default();
-        for _ in &sampled {
-            usage.add_downlink(downlink_bits_per_client);
-        }
+        let msg = match &self.downlink_msg {
+            Some(m) => {
+                // The retained -Global payload is rebroadcast as this
+                // round's message, so re-stamp the header.
+                let mut m = m.clone();
+                m.header.round = ctx.round as u32;
+                m
+            }
+            None => Message::dense(ctx.round, SERVER, &ctx.fed.x),
+        };
+        let participants = ctx.transport.broadcast(&ctx.sampled, &msg);
+        let x = msg.to_dense();
 
         // ---- local segments in parallel ----
-        let x = fed.x.clone();
-        let trainer = &fed.trainer;
-        let clients = &fed.clients;
+        let trainer = ctx.fed.trainer.clone();
         let gamma = cfg.gamma;
-        let results: Vec<SegmentResult> = fed.pool.map(&sampled, |_, &ci| {
-            let mut state = clients[ci].lock().unwrap();
+        let round = ctx.round;
+        let (variant, local_density) = (self.variant, self.local_density);
+        let compressor = self.compressor.as_ref();
+        let results: Vec<Segment> = ctx.map_clients(&participants, |ci, state| {
             let mut xi = x.clone();
             let mut loss_sum = 0.0f64;
             for _ in 0..seg_len {
@@ -115,64 +157,63 @@ pub fn run(
                 loss_sum += loss as f64;
             }
             // ---- uplink: transmit x̂ (compressed for -Com) ----
-            let (epsilon, bits) = match variant {
-                Variant::Com => send_through(compressor, &xi, &mut state.rng),
-                _ => (xi, crate::compress::dense_bits(dim)),
+            let upload = match variant {
+                Variant::Com => Message::from_compressed(
+                    round,
+                    ci as u32,
+                    compressor.compress(&xi, &mut state.rng),
+                ),
+                _ => Message::dense(round, ci as u32, &xi),
             };
-            SegmentResult {
-                epsilon,
-                uplink_bits: bits,
+            Segment {
+                upload,
                 loss_sum,
                 steps: seg_len,
             }
         });
 
-        // ---- aggregate (Algorithm 1 line 10) ----
-        let rows: Vec<&[f32]> = results.iter().map(|r| r.epsilon.as_slice()).collect();
-        crate::tensor::mean_into(&rows, &mut fed.x);
-        // -Global: compress the aggregated model server-side (lines 11–12);
-        // subsequent downlinks ship the compressed form.
-        if variant == Variant::Global {
-            let (compressed, bits) = send_through(compressor, &fed.x, &mut server_rng);
-            fed.x = compressed;
-            downlink_bits_per_client = bits;
-        }
-
-        // ---- control-variate refresh (line 16) for participants ----
-        for (r, &ci) in results.iter().zip(&sampled) {
-            let mut state = fed.clients[ci].lock().unwrap();
-            crate::tensor::control_variate_update(&mut state.h, &fed.x, &r.epsilon, p_over_gamma);
-        }
-
-        for r in &results {
-            usage.add_uplink(r.uplink_bits);
-        }
+        // ---- uplink delivery on the coordinator thread ----
         let total_steps: usize = results.iter().map(|r| r.steps).sum();
         let loss_sum: f64 = results.iter().map(|r| r.loss_sum).sum();
-        let train_loss = loss_sum / total_steps.max(1) as f64;
-
-        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(fed.evaluate())
-        } else {
-            None
-        };
-        if let Some(e) = &eval {
-            log::info!(
-                "[{name}] round {round}: loss {train_loss:.4} acc {:.4} up {} bits",
-                e.accuracy,
-                usage.uplink_bits
-            );
+        let mut delivered: Vec<(usize, Vec<f32>)> = Vec::with_capacity(results.len());
+        for (seg, &ci) in results.into_iter().zip(&participants) {
+            if let Some(received) = ctx.transport.uplink(ci, seg.upload) {
+                // The server-side reconstruction ε_i, decoded from the wire
+                // format alone (no compressor instance needed).
+                delivered.push((ci, received.to_dense()));
+            }
         }
-        logger.end_round(
-            round,
-            seg_len,
-            train_loss,
-            usage.uplink_bits,
-            usage.downlink_bits,
-            eval,
-        );
+
+        if !delivered.is_empty() {
+            // ---- aggregate (Algorithm 1 line 10) ----
+            let rows: Vec<&[f32]> = delivered.iter().map(|(_, e)| e.as_slice()).collect();
+            crate::tensor::mean_into(&rows, &mut ctx.fed.x);
+            // -Global: compress the aggregated model server-side (lines
+            // 11–12); subsequent downlinks ship the compressed form.
+            if self.variant == Variant::Global {
+                let enc = self.compressor.compress(&ctx.fed.x, &mut self.server_rng);
+                let global = Message::from_compressed(round, SERVER, enc);
+                ctx.fed.x = global.to_dense();
+                self.downlink_msg = Some(global);
+            }
+
+            // ---- control-variate refresh (line 16) for participants ----
+            for (ci, epsilon) in &delivered {
+                let mut state = ctx.fed.clients[*ci].lock().unwrap();
+                crate::tensor::control_variate_update(
+                    &mut state.h,
+                    &ctx.fed.x,
+                    epsilon,
+                    self.p_over_gamma,
+                );
+            }
+        }
+
+        RoundOutcome {
+            local_steps: seg_len,
+            train_loss: loss_sum / total_steps.max(1) as f64,
+        }
     }
-    logger.finish()
 }
 
 /// Density of a TopK(-like) compressor for the -Local masked step; None for

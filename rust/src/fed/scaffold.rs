@@ -1,5 +1,5 @@
 //! Scaffold (Karimireddy et al., 2020) — the paper's strongest
-//! non-accelerated baseline (§4.7, Figure 9).
+//! non-accelerated baseline (§4.7, Figure 9) — as a [`FedAlgorithm`].
 //!
 //! Client i keeps a control variate c_i (stored in `ClientState::h`);
 //! the server keeps the global variate c. Local step:
@@ -8,95 +8,130 @@
 //!     c_i⁺ = c_i − c + (x_server − x_i)/(E·γ)
 //!     uplink Δx = x_i − x_server and Δc = c_i⁺ − c_i
 //!     server: x += mean(Δx);  c += (|S|/n)·mean(Δc)
-//! Communication is uncompressed both ways, and the uplink carries TWO
-//! d-vectors (Δx, Δc) — Scaffold's well-known 2× communication overhead,
-//! which the bits-axis plots make visible.
+//! Communication is uncompressed both ways, and each direction carries TWO
+//! d-vector [`Message`]s per client — Scaffold's well-known 2× communication
+//! overhead, which the bits-axis plots make visible.
 
-use super::{Federation, RoundLogger, RunConfig};
-use crate::metrics::MetricsLog;
+use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::message::{Message, SERVER};
+use super::{Federation, RunConfig};
 use crate::tensor;
 
-pub fn run(cfg: &RunConfig, fed: &mut Federation) -> MetricsLog {
-    let name = format!("scaffold-{}-a{}", fed.model.name(), cfg.dirichlet_alpha);
-    let log = MetricsLog::new(&name)
-        .with_meta("algorithm", "scaffold")
-        .with_meta("gamma", cfg.gamma)
-        .with_meta("local_steps", cfg.local_steps)
-        .with_meta("alpha", cfg.dirichlet_alpha);
-    let mut logger = RoundLogger::new(cfg, log);
-    let dim = fed.x.len();
-    let mut c_global = vec![0.0f32; dim];
-    let inv_e_gamma = 1.0 / (cfg.local_steps as f32 * cfg.gamma);
+pub struct Scaffold {
+    c_global: Vec<f32>,
+}
 
-    for round in 0..cfg.rounds {
-        logger.begin_round();
-        let sampled = fed.sample_clients(cfg.clients_per_round);
-        let mut usage = super::transport::WireUsage::default();
-        for _ in &sampled {
-            // Downlink: x and c (2 dense vectors).
-            usage.add_downlink(2 * crate::compress::dense_bits(dim));
-        }
+impl Scaffold {
+    pub fn new() -> Scaffold {
+        Scaffold { c_global: Vec::new() }
+    }
+}
 
-        let x = fed.x.clone();
-        let c_ref = &c_global;
-        let trainer = &fed.trainer;
-        let clients = &fed.clients;
+impl Default for Scaffold {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FedAlgorithm for Scaffold {
+    fn name(&self) -> String {
+        "scaffold".to_string()
+    }
+
+    fn log_name(&self, fed: &Federation, cfg: &RunConfig) -> String {
+        format!("scaffold-{}-a{}", fed.model.name(), cfg.dirichlet_alpha)
+    }
+
+    fn log_meta(&self, cfg: &RunConfig) -> Vec<(String, String)> {
+        vec![
+            ("algorithm".into(), "scaffold".into()),
+            ("gamma".into(), cfg.gamma.to_string()),
+            ("local_steps".into(), cfg.local_steps.to_string()),
+            ("alpha".into(), cfg.dirichlet_alpha.to_string()),
+        ]
+    }
+
+    fn setup(&mut self, fed: &mut Federation, _cfg: &RunConfig) {
+        self.c_global = vec![0.0f32; fed.x.len()];
+    }
+
+    fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome {
+        let cfg = ctx.cfg;
+        let round = ctx.round;
+        let inv_e_gamma = 1.0 / (cfg.local_steps as f32 * cfg.gamma);
+
+        // Downlink: x and c (2 dense vectors). The transport pins one
+        // availability decision per client per round, so both broadcasts
+        // see the same participant set; both target the full sampled set so
+        // server egress is charged 2x per sampled client even for clients
+        // that turn out to be unreachable.
+        let x_msg = Message::dense(round, SERVER, &ctx.fed.x);
+        let participants = ctx.transport.broadcast(&ctx.sampled, &x_msg);
+        let c_msg = Message::dense(round, SERVER, &self.c_global);
+        ctx.transport.broadcast(&ctx.sampled, &c_msg);
+        let x = x_msg.to_dense();
+        let c_ref = c_msg.to_dense();
+
+        let trainer = ctx.fed.trainer.clone();
         let gamma = cfg.gamma;
         let local_steps = cfg.local_steps;
-        // Returns (Δx, Δc, loss_sum); client updates its own c_i in place.
-        let results: Vec<(Vec<f32>, Vec<f32>, f64)> = fed.pool.map(&sampled, |_, &ci| {
-            let mut state = clients[ci].lock().unwrap();
-            let mut xi = x.clone();
-            let mut loss_sum = 0.0f64;
-            // Effective control-variate correction: −c_i + c ⇒ pass
-            // h = c_i − c to the Scaffnew-form step x − γ(g − h).
-            let mut h_eff = vec![0.0f32; xi.len()];
-            tensor::sub(&state.h, c_ref, &mut h_eff);
-            for _ in 0..local_steps {
-                let batch = state.loader.next_batch();
-                let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
-                xi = next;
-                loss_sum += loss as f64;
+        // Returns (Δx, Δc, c_i⁺, loss_sum); the c_i refresh is committed
+        // only once the uplink is known delivered, so a lossy transport
+        // cannot advance a client variate the server never saw.
+        let results: Vec<(Message, Message, Vec<f32>, f64)> =
+            ctx.map_clients(&participants, |ci, state| {
+                let mut xi = x.clone();
+                let mut loss_sum = 0.0f64;
+                // Effective control-variate correction: −c_i + c ⇒ pass
+                // h = c_i − c to the Scaffnew-form step x − γ(g − h).
+                let mut h_eff = vec![0.0f32; xi.len()];
+                tensor::sub(&state.h, &c_ref, &mut h_eff);
+                for _ in 0..local_steps {
+                    let batch = state.loader.next_batch();
+                    let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
+                    xi = next;
+                    loss_sum += loss as f64;
+                }
+                // Option II variate refresh.
+                let mut c_new = vec![0.0f32; xi.len()];
+                for j in 0..xi.len() {
+                    c_new[j] = state.h[j] - c_ref[j] + (x[j] - xi[j]) * inv_e_gamma;
+                }
+                let mut dx = vec![0.0f32; xi.len()];
+                tensor::sub(&xi, &x, &mut dx);
+                let mut dc = vec![0.0f32; xi.len()];
+                tensor::sub(&c_new, &state.h, &mut dc);
+                (
+                    Message::dense(round, ci as u32, &dx),
+                    Message::dense(round, ci as u32, &dc),
+                    c_new,
+                    loss_sum,
+                )
+            });
+
+        let loss_sum: f64 = results.iter().map(|(_, _, _, l)| l).sum();
+        let n_trained = results.len();
+        let mut deltas: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_trained);
+        for ((dx_msg, dc_msg, c_new, _), &ci) in results.into_iter().zip(&participants) {
+            let dx = ctx.transport.uplink(ci, dx_msg);
+            let dc = ctx.transport.uplink(ci, dc_msg);
+            if let (Some(dx), Some(dc)) = (dx, dc) {
+                ctx.fed.clients[ci].lock().unwrap().h = c_new;
+                deltas.push((dx.to_dense(), dc.to_dense()));
             }
-            // Option II variate refresh.
-            let mut c_new = vec![0.0f32; xi.len()];
-            for j in 0..xi.len() {
-                c_new[j] = state.h[j] - c_ref[j] + (x[j] - xi[j]) * inv_e_gamma;
-            }
-            let mut dx = vec![0.0f32; xi.len()];
-            tensor::sub(&xi, &x, &mut dx);
-            let mut dc = vec![0.0f32; xi.len()];
-            tensor::sub(&c_new, &state.h, &mut dc);
-            state.h = c_new;
-            (dx, dc, loss_sum)
-        });
+        }
 
         // Server updates.
-        let m = results.len().max(1) as f32;
+        let m = deltas.len().max(1) as f32;
         let scale_c = m / cfg.n_clients as f32 / m; // (|S|/n)·(1/|S|)
-        for (dx, dc, _) in &results {
-            tensor::axpy(1.0 / m, dx, &mut fed.x);
-            tensor::axpy(scale_c, dc, &mut c_global);
+        for (dx, dc) in &deltas {
+            tensor::axpy(1.0 / m, dx, &mut ctx.fed.x);
+            tensor::axpy(scale_c, dc, &mut self.c_global);
         }
-        for _ in &results {
-            usage.add_uplink(2 * crate::compress::dense_bits(dim));
-        }
-        let train_loss = results.iter().map(|(_, _, l)| l).sum::<f64>()
-            / (results.len() * cfg.local_steps).max(1) as f64;
 
-        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
-            Some(fed.evaluate())
-        } else {
-            None
-        };
-        logger.end_round(
-            round,
-            cfg.local_steps,
-            train_loss,
-            usage.uplink_bits,
-            usage.downlink_bits,
-            eval,
-        );
+        RoundOutcome {
+            local_steps: cfg.local_steps,
+            train_loss: loss_sum / (n_trained * cfg.local_steps).max(1) as f64,
+        }
     }
-    logger.finish()
 }

@@ -1,14 +1,27 @@
-//! Transport accounting: every vector that crosses the client/server
-//! boundary goes through here, so communicated-bit metrics are *measured*
-//! (real serialized payloads), never estimated.
+//! Pluggable transports: every [`Message`] crossing the client/server
+//! boundary goes through a [`Transport`], so communicated-bit metrics are
+//! *measured* (real serialized payloads), never estimated.
 //!
-//! The in-process "network" hands payload bytes from worker threads to the
-//! server; `decompress` on the receiving side reconstructs the dense vector
-//! exactly as a remote peer would, keeping the simulation faithful to a real
-//! deployment's data flow (encode → wire → decode).
+//! Two implementations ship:
+//!
+//! * [`InProc`] — the in-process "network" of the seed: zero latency, no
+//!   loss, byte-exact delivery. Accounting matches the pre-trait drivers
+//!   bit for bit (the regression test in `tests/api_regression.rs` pins
+//!   this).
+//! * [`SimNet`] — a simulated network with configurable per-link bandwidth
+//!   (with deterministic per-client heterogeneity), per-message latency,
+//!   and per-client round dropout. It feeds a simulated wall-clock and a
+//!   drop count into each [`crate::metrics::RoundRecord`], enabling the
+//!   straggler/dropout scenarios the paper's heterogeneity experiments
+//!   gesture at without changing any algorithm code.
+//!
+//! Delivery happens on the coordinator thread (workers hand finished
+//! messages back from the fork-join), keeping per-link accounting off the
+//! training hot path and transports free of internal locking.
 
-use crate::compress::{Compressed, Compressor};
+use super::message::Message;
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 
 /// Accumulated wire usage for one round.
 #[derive(Debug, Default, Clone, Copy)]
@@ -38,35 +51,349 @@ impl WireUsage {
     }
 }
 
-/// Encode with `comp`, count bits, and return the receiver-side
-/// reconstruction (the decoded dense vector) plus the payload size.
-pub fn send_through(comp: &dyn Compressor, x: &[f32], rng: &mut Rng) -> (Vec<f32>, u64) {
-    let msg: Compressed = comp.compress(x, rng);
-    let bits = msg.wire_bits;
-    (comp.decompress(&msg), bits)
+/// Per-round roll-up a transport hands back to the drive loop.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LinkReport {
+    pub usage: WireUsage,
+    /// Simulated wall-clock for the round: the slowest participating
+    /// client's total link time (0 for [`InProc`]).
+    pub sim_secs: f64,
+    /// Sampled clients that were unreachable this round (0 for [`InProc`]).
+    pub dropped_clients: u64,
+}
+
+/// A bidirectional client/server message channel with per-round accounting.
+///
+/// Contract: within one round, [`Transport::broadcast`] decides each
+/// client's availability exactly once (repeated broadcasts to the same
+/// client reuse the decision, so multi-vector downlinks like Scaffold's
+/// `(x, c)` see one coherent participant set); [`Transport::end_round`]
+/// drains the accounting and resets per-round state.
+pub trait Transport: Send {
+    fn name(&self) -> &'static str;
+
+    /// Server → clients. Encodes once, accounts per recipient, and returns
+    /// the subset of `clients` that actually received the message (a
+    /// dropped client is unreachable for the whole round).
+    fn broadcast(&mut self, clients: &[usize], msg: &Message) -> Vec<usize>;
+
+    /// Client → server. Accounts the link and returns the message as the
+    /// server receives it, or `None` if the link lost it.
+    fn uplink(&mut self, client: usize, msg: Message) -> Option<Message>;
+
+    /// Drain this round's accounting.
+    fn end_round(&mut self) -> LinkReport;
+}
+
+/// The in-process transport: today's semantics, byte-exact, zero loss.
+#[derive(Debug, Default)]
+pub struct InProc {
+    usage: WireUsage,
+}
+
+impl Transport for InProc {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn broadcast(&mut self, clients: &[usize], msg: &Message) -> Vec<usize> {
+        for _ in clients {
+            self.usage.add_downlink(msg.wire_bits());
+        }
+        clients.to_vec()
+    }
+
+    fn uplink(&mut self, _client: usize, msg: Message) -> Option<Message> {
+        self.usage.add_uplink(msg.wire_bits());
+        Some(msg)
+    }
+
+    fn end_round(&mut self) -> LinkReport {
+        LinkReport {
+            usage: std::mem::take(&mut self.usage),
+            sim_secs: 0.0,
+            dropped_clients: 0,
+        }
+    }
+}
+
+/// Parameters for the simulated network.
+#[derive(Debug, Clone, Copy)]
+pub struct SimNetCfg {
+    /// Mean per-link bandwidth in bits/second.
+    pub bandwidth_bps: f64,
+    /// One-way per-message latency in seconds.
+    pub latency_secs: f64,
+    /// Probability a sampled client is unreachable for a round.
+    pub drop_prob: f64,
+    /// Per-client bandwidth heterogeneity factor `h ≥ 1`: client bandwidth
+    /// is drawn log-uniformly from `[bandwidth/h, bandwidth]` at
+    /// construction (h = 1 ⇒ homogeneous links).
+    pub heterogeneity: f64,
+}
+
+impl Default for SimNetCfg {
+    fn default() -> Self {
+        // 10 Mbit/s links, 50 ms latency, no dropout, 4× straggler spread —
+        // a plausible cross-device FL profile.
+        SimNetCfg {
+            bandwidth_bps: 10e6,
+            latency_secs: 0.05,
+            drop_prob: 0.0,
+            heterogeneity: 4.0,
+        }
+    }
+}
+
+/// Simulated network with per-link bandwidth/latency and client dropout.
+pub struct SimNet {
+    cfg: SimNetCfg,
+    rng: Rng,
+    /// Fixed per-client bandwidth (bits/sec), drawn at construction.
+    client_bw: Vec<f64>,
+    usage: WireUsage,
+    /// Accumulated link seconds per participating client this round.
+    round_secs: HashMap<usize, f64>,
+    /// Availability decision per sampled client this round.
+    round_avail: HashMap<usize, bool>,
+}
+
+impl SimNet {
+    pub fn new(cfg: SimNetCfg, n_clients: usize, seed: u64) -> SimNet {
+        assert!(cfg.bandwidth_bps > 0.0, "bandwidth must be positive");
+        assert!((0.0..=1.0).contains(&cfg.drop_prob), "drop_prob in [0,1]");
+        assert!(cfg.heterogeneity >= 1.0, "heterogeneity factor >= 1");
+        let mut rng = Rng::seed_from_u64(seed ^ 0x51A1_4E7);
+        let log_h = cfg.heterogeneity.ln();
+        let client_bw = (0..n_clients)
+            .map(|_| cfg.bandwidth_bps * (-rng.uniform() * log_h).exp())
+            .collect();
+        SimNet {
+            cfg,
+            rng,
+            client_bw,
+            usage: WireUsage::default(),
+            round_secs: HashMap::new(),
+            round_avail: HashMap::new(),
+        }
+    }
+
+    fn link_secs(&self, client: usize, bits: u64) -> f64 {
+        self.cfg.latency_secs + bits as f64 / self.client_bw[client]
+    }
+}
+
+impl Transport for SimNet {
+    fn name(&self) -> &'static str {
+        "simnet"
+    }
+
+    fn broadcast(&mut self, clients: &[usize], msg: &Message) -> Vec<usize> {
+        let mut delivered = Vec::with_capacity(clients.len());
+        for &c in clients {
+            let drop_prob = self.cfg.drop_prob;
+            let rng = &mut self.rng;
+            let available = *self
+                .round_avail
+                .entry(c)
+                .or_insert_with(|| !rng.bernoulli(drop_prob));
+            // Server egress is spent whether or not the client is up.
+            self.usage.add_downlink(msg.wire_bits());
+            if available {
+                let secs = self.link_secs(c, msg.wire_bits());
+                *self.round_secs.entry(c).or_insert(0.0) += secs;
+                delivered.push(c);
+            }
+        }
+        delivered
+    }
+
+    fn uplink(&mut self, client: usize, msg: Message) -> Option<Message> {
+        let available = *self.round_avail.entry(client).or_insert(true);
+        self.usage.add_uplink(msg.wire_bits());
+        if !available {
+            return None;
+        }
+        let secs = self.link_secs(client, msg.wire_bits());
+        *self.round_secs.entry(client).or_insert(0.0) += secs;
+        Some(msg)
+    }
+
+    fn end_round(&mut self) -> LinkReport {
+        let sim_secs = self
+            .round_secs
+            .values()
+            .fold(0.0f64, |acc, &s| acc.max(s));
+        let dropped = self.round_avail.values().filter(|&&a| !a).count() as u64;
+        self.round_secs.clear();
+        self.round_avail.clear();
+        LinkReport {
+            usage: std::mem::take(&mut self.usage),
+            sim_secs,
+            dropped_clients: dropped,
+        }
+    }
+}
+
+/// Parse a transport spec string: `inproc` (default) or
+/// `simnet[:BW_MBPS[:LATENCY_MS[:DROP_PROB[:HETEROGENEITY]]]]`, e.g.
+/// `simnet:10:50:0.1:4`.
+pub fn parse_transport(
+    spec: &str,
+    n_clients: usize,
+    seed: u64,
+) -> Result<Box<dyn Transport>, String> {
+    let spec = spec.trim();
+    let (kind, rest) = match spec.split_once(':') {
+        Some((k, r)) => (k, Some(r)),
+        None => (spec, None),
+    };
+    match kind.to_ascii_lowercase().as_str() {
+        "" | "inproc" => {
+            if rest.is_some() {
+                return Err("inproc takes no parameters".into());
+            }
+            Ok(Box::new(InProc::default()))
+        }
+        "simnet" => {
+            let mut cfg = SimNetCfg::default();
+            if let Some(rest) = rest {
+                let parts: Vec<&str> = rest.split(':').collect();
+                if parts.len() > 4 {
+                    return Err(format!("too many simnet parameters in '{spec}'"));
+                }
+                let parse = |s: &str, what: &str| {
+                    s.parse::<f64>().map_err(|_| format!("bad simnet {what} '{s}'"))
+                };
+                if let Some(s) = parts.first() {
+                    cfg.bandwidth_bps = parse(s, "bandwidth (Mbit/s)")? * 1e6;
+                }
+                if let Some(s) = parts.get(1) {
+                    cfg.latency_secs = parse(s, "latency (ms)")? / 1e3;
+                }
+                if let Some(s) = parts.get(2) {
+                    cfg.drop_prob = parse(s, "drop probability")?;
+                }
+                if let Some(s) = parts.get(3) {
+                    cfg.heterogeneity = parse(s, "heterogeneity factor")?;
+                }
+            }
+            if cfg.bandwidth_bps <= 0.0 {
+                return Err("simnet bandwidth must be positive".into());
+            }
+            if !(0.0..=1.0).contains(&cfg.drop_prob) {
+                return Err("simnet drop probability must be in [0,1]".into());
+            }
+            if cfg.heterogeneity < 1.0 {
+                return Err("simnet heterogeneity factor must be >= 1".into());
+            }
+            Ok(Box::new(SimNet::new(cfg, n_clients, seed)))
+        }
+        other => Err(format!("unknown transport '{other}' (have: inproc, simnet)")),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{Identity, TopK};
+    use crate::fed::message::SERVER;
 
-    #[test]
-    fn identity_roundtrip_counts_dense_bits() {
-        let mut rng = Rng::seed_from_u64(0);
-        let x = vec![1.0f32; 100];
-        let (y, bits) = send_through(&Identity, &x, &mut rng);
-        assert_eq!(y, x);
-        assert_eq!(bits, 3200);
+    fn dense_msg(d: usize) -> Message {
+        Message::dense(0, SERVER, &vec![1.0f32; d])
     }
 
     #[test]
-    fn topk_roundtrip_counts_sparse_bits() {
-        let mut rng = Rng::seed_from_u64(1);
-        let x: Vec<f32> = (0..1000).map(|i| i as f32 / 100.0).collect();
-        let (y, bits) = send_through(&TopK::with_density(0.1), &x, &mut rng);
-        assert_eq!(y.iter().filter(|&&v| v != 0.0).count(), 100);
-        assert!(bits < 3200 * 10);
+    fn inproc_accounts_and_delivers_everything() {
+        let mut t = InProc::default();
+        let msg = dense_msg(100);
+        let delivered = t.broadcast(&[3, 5, 9], &msg);
+        assert_eq!(delivered, vec![3, 5, 9]);
+        let up = t.uplink(5, dense_msg(100)).expect("inproc never drops");
+        assert_eq!(up.to_dense(), vec![1.0f32; 100]);
+        let report = t.end_round();
+        assert_eq!(report.usage.downlink_bits, 3 * 3200);
+        assert_eq!(report.usage.uplink_bits, 3200);
+        assert_eq!(report.usage.downlink_msgs, 3);
+        assert_eq!(report.sim_secs, 0.0);
+        assert_eq!(report.dropped_clients, 0);
+        // Accounting was drained.
+        assert_eq!(t.end_round().usage.uplink_bits, 0);
+    }
+
+    #[test]
+    fn simnet_latency_and_bandwidth_accumulate() {
+        let cfg = SimNetCfg {
+            bandwidth_bps: 1e6,
+            latency_secs: 0.1,
+            drop_prob: 0.0,
+            heterogeneity: 1.0,
+        };
+        let mut t = SimNet::new(cfg, 4, 7);
+        let msg = dense_msg(1000); // 32_000 bits -> 0.032 s at 1 Mbit/s
+        let delivered = t.broadcast(&[0, 1], &msg);
+        assert_eq!(delivered, vec![0, 1]);
+        for c in delivered {
+            assert!(t.uplink(c, dense_msg(1000)).is_some());
+        }
+        let report = t.end_round();
+        // Each client: 2 messages x (0.1 latency + 0.032 transfer).
+        assert!((report.sim_secs - 0.264).abs() < 1e-9, "{}", report.sim_secs);
+        assert_eq!(report.usage.uplink_bits, 64_000);
+        assert_eq!(report.dropped_clients, 0);
+    }
+
+    #[test]
+    fn simnet_drops_are_deterministic_and_sticky() {
+        let cfg = SimNetCfg {
+            drop_prob: 0.5,
+            heterogeneity: 1.0,
+            ..SimNetCfg::default()
+        };
+        let clients: Vec<usize> = (0..64).collect();
+        let run = |seed: u64| {
+            let mut t = SimNet::new(cfg, 64, seed);
+            let msg = dense_msg(10);
+            let first = t.broadcast(&clients, &msg);
+            // Second broadcast in the same round sees the same availability.
+            let second = t.broadcast(&clients, &msg);
+            assert_eq!(first, second);
+            let report = t.end_round();
+            assert_eq!(report.dropped_clients as usize, 64 - first.len());
+            first
+        };
+        assert_eq!(run(11), run(11), "same seed, same drops");
+        let a = run(11);
+        assert!(!a.is_empty() && a.len() < 64, "p=0.5 over 64 clients");
+    }
+
+    #[test]
+    fn simnet_heterogeneity_spreads_bandwidth() {
+        let cfg = SimNetCfg {
+            heterogeneity: 8.0,
+            ..SimNetCfg::default()
+        };
+        let t = SimNet::new(cfg, 200, 3);
+        let min = t.client_bw.iter().cloned().fold(f64::MAX, f64::min);
+        let max = t.client_bw.iter().cloned().fold(0.0, f64::max);
+        assert!(max <= cfg.bandwidth_bps + 1e-6);
+        assert!(min >= cfg.bandwidth_bps / 8.0 - 1e-6);
+        assert!(max / min > 2.0, "spread {}", max / min);
+    }
+
+    #[test]
+    fn transport_spec_parsing() {
+        assert_eq!(parse_transport("inproc", 4, 0).unwrap().name(), "inproc");
+        assert_eq!(parse_transport("", 4, 0).unwrap().name(), "inproc");
+        assert_eq!(parse_transport("simnet", 4, 0).unwrap().name(), "simnet");
+        assert_eq!(
+            parse_transport("simnet:10:50:0.1:4", 4, 0).unwrap().name(),
+            "simnet"
+        );
+        assert!(parse_transport("simnet:0", 4, 0).is_err());
+        assert!(parse_transport("simnet:10:50:1.5", 4, 0).is_err());
+        assert!(parse_transport("simnet:1:1:0:0.5", 4, 0).is_err());
+        assert!(parse_transport("carrier-pigeon", 4, 0).is_err());
+        assert!(parse_transport("inproc:fast", 4, 0).is_err());
     }
 
     #[test]

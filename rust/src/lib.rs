@@ -6,11 +6,13 @@
 //! stack (AOT via XLA/PJRT).
 //!
 //! ## Layer map
-//! * **L3 — this crate**: the federated coordinator ([`fed`]): Scaffnew
-//!   scheduling with probabilistic communication skipping, client sampling,
-//!   compressed transport with exact bit accounting ([`compress`]),
-//!   Dirichlet-partitioned data ([`data`]), all baselines, metrics
+//! * **L3 — this crate**: the federated runtime ([`fed`]): the
+//!   [`fed::FedAlgorithm`] trait with Scaffnew/FedComLoc and all baselines,
+//!   self-describing wire messages ([`fed::message`]) over pluggable
+//!   transports ([`fed::transport`]) with exact bit accounting
+//!   ([`compress`]), Dirichlet-partitioned data ([`data`]), metrics
 //!   ([`metrics`]) and the experiment registry ([`experiments`]).
+//!   ARCHITECTURE.md documents the three fed-layer APIs.
 //! * **L2 — `python/compile`**: JAX models (MLP/CNN over flat parameter
 //!   vectors) AOT-lowered to HLO text, executed via [`runtime`] (PJRT).
 //! * **L1 — `python/compile/kernels`**: Pallas kernels (fused dense layer,

@@ -3,17 +3,18 @@
 //! Subcommands:
 //!   train             run one federated algorithm end-to-end
 //!   experiment        regenerate paper tables/figures (see DESIGN.md §6)
-//!   list-experiments  show the registry
+//!   list-experiments  show the experiment registry
+//!   list-algorithms   show the algorithm registry (spec strings for --algo)
 //!   data-stats        Figure 11 class-distribution report
 //!   artifacts         inspect artifacts/manifest.json
 //!
 //! `fedcomloc <subcommand> --help` prints the full option list.
 
 use fedcomloc::cli::Command;
-use fedcomloc::compress::parse_spec;
 use fedcomloc::config::{self, presets};
 use fedcomloc::experiments::{self, ExpOptions};
-use fedcomloc::fed::{run, AlgorithmSpec, Variant};
+use fedcomloc::fed::transport::parse_transport;
+use fedcomloc::fed::{algorithm_registry, run_with_transport, AlgorithmSpec, Variant};
 use fedcomloc::model::ModelKind;
 use std::path::PathBuf;
 
@@ -24,6 +25,7 @@ fn main() {
         Some("train") => cmd_train(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("list-experiments") => cmd_list(),
+        Some("list-algorithms") => cmd_list_algorithms(),
         Some("data-stats") => cmd_data_stats(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
         Some("--help") | Some("-h") | None => {
@@ -84,6 +86,7 @@ SUBCOMMANDS:
     train             run one federated algorithm end-to-end
     experiment        regenerate paper tables/figures
     list-experiments  show the experiment registry
+    list-algorithms   show the algorithm registry (spec strings for --algo)
     data-stats        Figure 11 class-distribution report
     artifacts         inspect the AOT artifact manifest
 
@@ -93,13 +96,24 @@ Run 'fedcomloc <SUBCOMMAND> --help' for options."
 
 fn train_command() -> Command {
     Command::new("fedcomloc train", "Run one federated training job")
-        .opt_default("algo", "NAME", "fedcomloc|fedavg|sparsefedavg|scaffold|feddyn", "fedcomloc")
+        .opt_default(
+            "algo",
+            "SPEC",
+            "algorithm spec, e.g. fedcomloc-com:topk:0.1 (see list-algorithms)",
+            "fedcomloc",
+        )
         .opt_default("variant", "V", "FedComLoc variant: com|local|global", "com")
         .opt_default(
             "compress",
             "SPEC",
             "compressor: none | topk:<density> | q:<bits> | topk:<d>+q:<b>",
             "topk:0.3",
+        )
+        .opt_default(
+            "transport",
+            "SPEC",
+            "transport: inproc | simnet[:MBPS[:LAT_MS[:DROP[:HET]]]]",
+            "inproc",
         )
         .opt("preset", "NAME", "config preset (see list below)")
         .opt("config", "FILE", "TOML config file with a [run] table")
@@ -145,22 +159,39 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     }
     config::apply_cli(&mut cfg, &args)?;
 
-    let compressor = parse_spec(args.get("compress").unwrap_or("topk:0.3"))
-        .map_err(|e| anyhow::anyhow!(e))?;
-    let spec = match args.get("algo").unwrap_or("fedcomloc") {
-        "fedcomloc" => AlgorithmSpec::FedComLoc {
-            variant: Variant::parse(args.get("variant").unwrap_or("com"))
-                .ok_or_else(|| anyhow::anyhow!("bad --variant"))?,
-            compressor,
+    // Resolve the algorithm through the string-keyed registry. The bare
+    // `fedcomloc` / `sparsefedavg` families keep the old CLI sugar of
+    // combining with --variant / --compress; a bare `fedcomloc-*` family
+    // still accepts an explicit --compress, and any other registry spec
+    // must carry its compressor inline (an explicit --compress alongside
+    // one is an error rather than silently ignored).
+    let explicit_compress = args.get("compress");
+    let compress = explicit_compress.unwrap_or("topk:0.3");
+    let spec_str = match args.get("algo").unwrap_or("fedcomloc") {
+        "fedcomloc" => {
+            let variant = Variant::parse(args.get("variant").unwrap_or("com"))
+                .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
+            format!("fedcomloc-{}:{compress}", variant.name())
+        }
+        "sparsefedavg" => format!("sparsefedavg:{compress}"),
+        other => match explicit_compress {
+            Some(c) if other.starts_with("fedcomloc") && !other.contains(':') => {
+                format!("{other}:{c}")
+            }
+            Some(c) => anyhow::bail!(
+                "--compress {c} cannot be combined with --algo '{other}'; \
+                 embed the compressor in the spec (see list-algorithms)"
+            ),
+            None => other.to_string(),
         },
-        "fedavg" => AlgorithmSpec::FedAvg {
-            compressor: parse_spec("none").unwrap(),
-        },
-        "sparsefedavg" => AlgorithmSpec::FedAvg { compressor },
-        "scaffold" => AlgorithmSpec::Scaffold,
-        "feddyn" => AlgorithmSpec::FedDyn { alpha: 0.01 },
-        other => anyhow::bail!("unknown --algo '{other}'"),
     };
+    let spec = AlgorithmSpec::parse(&spec_str).map_err(|e| anyhow::anyhow!(e))?;
+    let mut transport = parse_transport(
+        args.get("transport").unwrap_or("inproc"),
+        cfg.n_clients,
+        cfg.seed,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
 
     let opts = ExpOptions {
         out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
@@ -183,7 +214,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         cfg.gamma
     );
     let t0 = std::time::Instant::now();
-    let log = run(&cfg, trainer, &spec);
+    let log = run_with_transport(&cfg, trainer, &spec, transport.as_mut());
     let elapsed = t0.elapsed();
     opts.save("train", &log);
     println!(
@@ -197,6 +228,15 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         log.total_uplink_bits() as f64 / 8e6,
         log.records.last().map(|r| r.cum_downlink_bits).unwrap_or(0),
     );
+    if let Some(last) = log.records.last() {
+        if last.cum_sim_secs > 0.0 {
+            let dropped: u64 = log.records.iter().map(|r| r.dropped_clients).sum();
+            println!(
+                "simulated network: {:.2} s total, {dropped} dropped client-rounds",
+                last.cum_sim_secs
+            );
+        }
+    }
     println!("metrics: {}/train/{}.csv", opts.out_dir.display(), log.run_name);
     Ok(())
 }
@@ -249,6 +289,16 @@ fn cmd_list() -> anyhow::Result<()> {
     for exp in experiments::registry() {
         println!("{:<10}{:<28}{}", exp.id, exp.paper_ref, exp.description);
     }
+    Ok(())
+}
+
+fn cmd_list_algorithms() -> anyhow::Result<()> {
+    println!("{:<18}{:<46}{}", "key", "argument", "description");
+    for fam in algorithm_registry() {
+        let arg = if fam.arg_help.is_empty() { "-" } else { fam.arg_help };
+        println!("{:<18}{:<46}{}", fam.key, arg, fam.summary);
+    }
+    println!("\nSpec grammar: <key>[:<argument>], e.g. fedcomloc-com:topk:0.25+q:4");
     Ok(())
 }
 

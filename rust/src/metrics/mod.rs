@@ -33,6 +33,15 @@ pub struct RoundRecord {
     pub total_cost: f64,
     /// Wall-clock spent in this round (seconds).
     pub wall_secs: f64,
+    /// Simulated network time for this round (seconds): the slowest
+    /// participating client's link time under the run's transport. 0 under
+    /// the in-process transport.
+    pub sim_secs: f64,
+    /// Running total of `sim_secs` including this round.
+    pub cum_sim_secs: f64,
+    /// Sampled clients the transport dropped this round (straggler /
+    /// unavailability simulation). 0 under the in-process transport.
+    pub dropped_clients: u64,
 }
 
 impl RoundRecord {
@@ -101,11 +110,11 @@ impl MetricsLog {
 
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,local_steps,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,cum_uplink_bits,cum_downlink_bits,total_cost,wall_secs\n",
+            "round,local_steps,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,cum_uplink_bits,cum_downlink_bits,total_cost,wall_secs,sim_secs,cum_sim_secs,dropped_clients\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.6},{},{},{},{},{},{},{:.4},{:.4}\n",
+                "{},{},{:.6},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{}\n",
                 r.round,
                 r.local_steps,
                 r.train_loss,
@@ -118,6 +127,9 @@ impl MetricsLog {
                 r.cum_downlink_bits,
                 r.total_cost,
                 r.wall_secs,
+                r.sim_secs,
+                r.cum_sim_secs,
+                r.dropped_clients,
             ));
         }
         out
@@ -151,6 +163,11 @@ impl MetricsLog {
                 o.set("downlink_bits", r.downlink_bits.into());
                 o.set("cum_uplink_bits", r.cum_uplink_bits.into());
                 o.set("total_cost", r.total_cost.into());
+                if r.sim_secs > 0.0 || r.dropped_clients > 0 {
+                    o.set("sim_secs", r.sim_secs.into());
+                    o.set("cum_sim_secs", r.cum_sim_secs.into());
+                    o.set("dropped_clients", r.dropped_clients.into());
+                }
                 o
             })
             .collect();
@@ -186,6 +203,9 @@ mod tests {
             cum_downlink_bits: 2000 * (round as u64 + 1),
             total_cost: (round + 1) as f64 * 1.1,
             wall_secs: 0.01,
+            sim_secs: 0.0,
+            cum_sim_secs: 0.0,
+            dropped_clients: 0,
         }
     }
 

@@ -50,20 +50,33 @@ pub struct Manifest {
     pub models: BTreeMap<String, ModelSpec>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {path}: {source}")]
     Io {
         path: PathBuf,
         source: std::io::Error,
     },
-    #[error("manifest parse error: {0}")]
     Parse(String),
-    #[error("manifest missing field {0}")]
     Missing(String),
-    #[error("artifact file missing: {0}")]
     FileMissing(PathBuf),
 }
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io { path, source } => {
+                write!(f, "cannot read {}: {source}", path.display())
+            }
+            ManifestError::Parse(msg) => write!(f, "manifest parse error: {msg}"),
+            ManifestError::Missing(field) => write!(f, "manifest missing field {field}"),
+            ManifestError::FileMissing(path) => {
+                write!(f, "artifact file missing: {}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
 
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {

@@ -16,25 +16,52 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("manifest: {0}")]
-    Manifest(#[from] super::artifacts::ManifestError),
-    #[error("xla: {0}")]
+    Manifest(super::artifacts::ManifestError),
     Xla(String),
-    #[error("artifact '{name}' input {index}: expected {expected} elements, got {got}")]
     BadInput {
         name: String,
         index: usize,
         expected: usize,
         got: usize,
     },
-    #[error("artifact '{name}': expected {expected} inputs, got {got}")]
     BadArity {
         name: String,
         expected: usize,
         got: usize,
     },
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Manifest(err) => write!(f, "manifest: {err}"),
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::BadInput {
+                name,
+                index,
+                expected,
+                got,
+            } => write!(
+                f,
+                "artifact '{name}' input {index}: expected {expected} elements, got {got}"
+            ),
+            RuntimeError::BadArity {
+                name,
+                expected,
+                got,
+            } => write!(f, "artifact '{name}': expected {expected} inputs, got {got}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<super::artifacts::ManifestError> for RuntimeError {
+    fn from(e: super::artifacts::ManifestError) -> RuntimeError {
+        RuntimeError::Manifest(e)
+    }
 }
 
 fn xla_err(e: xla::Error) -> RuntimeError {

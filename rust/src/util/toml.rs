@@ -71,12 +71,19 @@ impl TomlDoc {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("TOML parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TOML parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
     let mut doc = TomlDoc::default();

@@ -1,0 +1,427 @@
+//! API-migration regression: the `FedAlgorithm` + `Transport` runtime must
+//! produce **bit-identical** `MetricsLog` output to the seed's free-function
+//! drivers under the in-process transport at a fixed seed.
+//!
+//! The old drivers were deleted in the migration, so faithful copies of
+//! their round loops (same RNG streams, same float summation order, same
+//! accounting) are embedded here as references. Every deterministic
+//! `RoundRecord` field is compared with exact (bit-level for floats)
+//! equality; only `wall_secs` (real time) is exempt.
+
+use fedcomloc::compress::{dense_bits, parse_spec, Compressor};
+use fedcomloc::fed::scaffnew::next_segment_len;
+use fedcomloc::fed::{run, AlgorithmSpec, Federation, RunConfig};
+use fedcomloc::metrics::MetricsLog;
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::ModelKind;
+use fedcomloc::tensor;
+use std::sync::Arc;
+
+fn tiny_cfg() -> RunConfig {
+    RunConfig {
+        train_n: 1_200,
+        test_n: 300,
+        n_clients: 12,
+        clients_per_round: 4,
+        rounds: 8,
+        eval_every: 3,
+        gamma: 0.05,
+        ..RunConfig::default_mnist()
+    }
+}
+
+fn native() -> Arc<NativeTrainer> {
+    Arc::new(NativeTrainer::new(ModelKind::Mlp))
+}
+
+/// The deterministic slice of one round the references reproduce.
+#[derive(Debug, Clone, PartialEq)]
+struct RefRecord {
+    round: usize,
+    local_steps: usize,
+    train_loss_bits: u64,
+    test_loss_bits: Option<u64>,
+    test_accuracy_bits: Option<u64>,
+    uplink_bits: u64,
+    downlink_bits: u64,
+    cum_uplink_bits: u64,
+    cum_downlink_bits: u64,
+    total_cost_bits: u64,
+}
+
+fn assert_log_matches(reference: &[RefRecord], log: &MetricsLog, what: &str) {
+    assert_eq!(reference.len(), log.records.len(), "{what}: round count");
+    for (want, got) in reference.iter().zip(&log.records) {
+        let got_ref = RefRecord {
+            round: got.round,
+            local_steps: got.local_steps,
+            train_loss_bits: got.train_loss.to_bits(),
+            test_loss_bits: got.test_loss.map(f64::to_bits),
+            test_accuracy_bits: got.test_accuracy.map(f64::to_bits),
+            uplink_bits: got.uplink_bits,
+            downlink_bits: got.downlink_bits,
+            cum_uplink_bits: got.cum_uplink_bits,
+            cum_downlink_bits: got.cum_downlink_bits,
+            total_cost_bits: got.total_cost.to_bits(),
+        };
+        assert_eq!(want, &got_ref, "{what}: round {}", got.round);
+    }
+}
+
+/// Round-end bookkeeping shared by all references (mirrors the seed's
+/// `RoundLogger` arithmetic exactly).
+struct RefLogger {
+    cfg_tau: f64,
+    cum_up: u64,
+    cum_down: u64,
+    cum_iters: u64,
+    records: Vec<RefRecord>,
+}
+
+impl RefLogger {
+    fn new(tau: f64) -> Self {
+        Self {
+            cfg_tau: tau,
+            cum_up: 0,
+            cum_down: 0,
+            cum_iters: 0,
+            records: Vec::new(),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        round: usize,
+        local_steps: usize,
+        train_loss: f64,
+        up: u64,
+        down: u64,
+        eval: Option<&fedcomloc::model::EvalResult>,
+    ) {
+        self.cum_up += up;
+        self.cum_down += down;
+        self.cum_iters += local_steps as u64;
+        let total_cost = (round as u64 + 1) as f64 + self.cum_iters as f64 * self.cfg_tau;
+        self.records.push(RefRecord {
+            round,
+            local_steps,
+            train_loss_bits: train_loss.to_bits(),
+            test_loss_bits: eval.map(|e| e.mean_loss.to_bits()),
+            test_accuracy_bits: eval.map(|e| e.accuracy.to_bits()),
+            uplink_bits: up,
+            downlink_bits: down,
+            cum_uplink_bits: self.cum_up,
+            cum_downlink_bits: self.cum_down,
+            total_cost_bits: total_cost.to_bits(),
+        });
+    }
+}
+
+fn eval_if_due(
+    fed: &Federation,
+    cfg: &RunConfig,
+    round: usize,
+) -> Option<fedcomloc::model::EvalResult> {
+    if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+        Some(fed.evaluate())
+    } else {
+        None
+    }
+}
+
+/// Faithful copy of the seed's `scaffnew::run` (-Com and -Global paths).
+fn reference_fedcomloc(cfg: &RunConfig, comp_spec: &str, global: bool) -> Vec<RefRecord> {
+    let compressor: Box<dyn Compressor> = parse_spec(comp_spec).unwrap();
+    let mut fed = Federation::new(cfg, native());
+    let mut logger = RefLogger::new(cfg.tau);
+    let mut coin_rng = fed.rng.derive(0x5EED_C019);
+    let mut server_rng = fed.rng.derive(0x5E2E_5EED);
+    let dim = fed.x.len();
+    let p_over_gamma = (cfg.p / cfg.gamma as f64) as f32;
+    let mut downlink_bits_per_client: u64 = dense_bits(dim);
+
+    for round in 0..cfg.rounds {
+        let seg_len = next_segment_len(&mut coin_rng, cfg.p);
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let down = sampled.len() as u64 * downlink_bits_per_client;
+
+        let x = fed.x.clone();
+        let clients = &fed.clients;
+        let trainer = &fed.trainer;
+        let gamma = cfg.gamma;
+        let comp = compressor.as_ref();
+        let results: Vec<(Vec<f32>, u64, f64)> = fed.pool.map(&sampled, |_, &ci| {
+            let mut state = clients[ci].lock().unwrap();
+            let mut xi = x.clone();
+            let mut loss_sum = 0.0f64;
+            for _ in 0..seg_len {
+                let batch = state.loader.next_batch();
+                let (next, loss) = trainer.train_step(&xi, &state.h, &batch, gamma);
+                xi = next;
+                loss_sum += loss as f64;
+            }
+            if global {
+                (xi, dense_bits(dim), loss_sum)
+            } else {
+                let c = comp.compress(&xi, &mut state.rng);
+                let bits = c.wire_bits;
+                (comp.decompress(&c), bits, loss_sum)
+            }
+        });
+
+        let rows: Vec<&[f32]> = results.iter().map(|(e, _, _)| e.as_slice()).collect();
+        tensor::mean_into(&rows, &mut fed.x);
+        if global {
+            let c = compressor.compress(&fed.x, &mut server_rng);
+            downlink_bits_per_client = c.wire_bits;
+            fed.x = compressor.decompress(&c);
+        }
+        for ((epsilon, _, _), &ci) in results.iter().zip(&sampled) {
+            let mut state = fed.clients[ci].lock().unwrap();
+            tensor::control_variate_update(&mut state.h, &fed.x, epsilon, p_over_gamma);
+        }
+
+        let up: u64 = results.iter().map(|(_, bits, _)| *bits).sum();
+        let total_steps: usize = results.len() * seg_len;
+        let loss_sum: f64 = results.iter().map(|(_, _, l)| *l).sum();
+        let train_loss = loss_sum / total_steps.max(1) as f64;
+        let eval = eval_if_due(&fed, cfg, round);
+        logger.push(round, seg_len, train_loss, up, down, eval.as_ref());
+    }
+    logger.records
+}
+
+/// Faithful copy of the seed's `fedavg::run`.
+fn reference_fedavg(cfg: &RunConfig, comp_spec: &str) -> Vec<RefRecord> {
+    let compressor: Box<dyn Compressor> = parse_spec(comp_spec).unwrap();
+    let mut fed = Federation::new(cfg, native());
+    let mut logger = RefLogger::new(cfg.tau);
+    let dim = fed.x.len();
+    let zeros = vec![0.0f32; dim];
+
+    for round in 0..cfg.rounds {
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let down = sampled.len() as u64 * dense_bits(dim);
+        let x = fed.x.clone();
+        let clients = &fed.clients;
+        let trainer = &fed.trainer;
+        let gamma = cfg.gamma;
+        let local_steps = cfg.local_steps;
+        let zeros_ref = &zeros;
+        let comp = compressor.as_ref();
+        let results: Vec<(Vec<f32>, u64, f64)> = fed.pool.map(&sampled, |_, &ci| {
+            let mut state = clients[ci].lock().unwrap();
+            let mut xi = x.clone();
+            let mut loss_sum = 0.0f64;
+            for _ in 0..local_steps {
+                let batch = state.loader.next_batch();
+                let (next, loss) = trainer.train_step(&xi, zeros_ref, &batch, gamma);
+                xi = next;
+                loss_sum += loss as f64;
+            }
+            let c = comp.compress(&xi, &mut state.rng);
+            let bits = c.wire_bits;
+            (comp.decompress(&c), bits, loss_sum)
+        });
+
+        let rows: Vec<&[f32]> = results.iter().map(|(v, _, _)| v.as_slice()).collect();
+        tensor::mean_into(&rows, &mut fed.x);
+        let up: u64 = results.iter().map(|(_, bits, _)| *bits).sum();
+        let train_loss = results.iter().map(|(_, _, l)| l).sum::<f64>()
+            / (results.len() * cfg.local_steps).max(1) as f64;
+        let eval = eval_if_due(&fed, cfg, round);
+        logger.push(round, cfg.local_steps, train_loss, up, down, eval.as_ref());
+    }
+    logger.records
+}
+
+/// Faithful copy of the seed's `scaffold::run`.
+fn reference_scaffold(cfg: &RunConfig) -> Vec<RefRecord> {
+    let mut fed = Federation::new(cfg, native());
+    let mut logger = RefLogger::new(cfg.tau);
+    let dim = fed.x.len();
+    let mut c_global = vec![0.0f32; dim];
+    let inv_e_gamma = 1.0 / (cfg.local_steps as f32 * cfg.gamma);
+
+    for round in 0..cfg.rounds {
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let down = sampled.len() as u64 * 2 * dense_bits(dim);
+        let x = fed.x.clone();
+        let c_ref = &c_global;
+        let clients = &fed.clients;
+        let trainer = &fed.trainer;
+        let gamma = cfg.gamma;
+        let local_steps = cfg.local_steps;
+        let results: Vec<(Vec<f32>, Vec<f32>, f64)> = fed.pool.map(&sampled, |_, &ci| {
+            let mut state = clients[ci].lock().unwrap();
+            let mut xi = x.clone();
+            let mut loss_sum = 0.0f64;
+            let mut h_eff = vec![0.0f32; xi.len()];
+            tensor::sub(&state.h, c_ref, &mut h_eff);
+            for _ in 0..local_steps {
+                let batch = state.loader.next_batch();
+                let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
+                xi = next;
+                loss_sum += loss as f64;
+            }
+            let mut c_new = vec![0.0f32; xi.len()];
+            for j in 0..xi.len() {
+                c_new[j] = state.h[j] - c_ref[j] + (x[j] - xi[j]) * inv_e_gamma;
+            }
+            let mut dx = vec![0.0f32; xi.len()];
+            tensor::sub(&xi, &x, &mut dx);
+            let mut dc = vec![0.0f32; xi.len()];
+            tensor::sub(&c_new, &state.h, &mut dc);
+            state.h = c_new;
+            (dx, dc, loss_sum)
+        });
+
+        let m = results.len().max(1) as f32;
+        let scale_c = m / cfg.n_clients as f32 / m;
+        for (dx, dc, _) in &results {
+            tensor::axpy(1.0 / m, dx, &mut fed.x);
+            tensor::axpy(scale_c, dc, &mut c_global);
+        }
+        let up = results.len() as u64 * 2 * dense_bits(dim);
+        let train_loss = results.iter().map(|(_, _, l)| l).sum::<f64>()
+            / (results.len() * cfg.local_steps).max(1) as f64;
+        let eval = eval_if_due(&fed, cfg, round);
+        logger.push(round, cfg.local_steps, train_loss, up, down, eval.as_ref());
+    }
+    logger.records
+}
+
+/// Faithful copy of the seed's `feddyn::run`.
+fn reference_feddyn(cfg: &RunConfig, alpha_dyn: f64) -> Vec<RefRecord> {
+    let mut fed = Federation::new(cfg, native());
+    let mut logger = RefLogger::new(cfg.tau);
+    let dim = fed.x.len();
+    let mut server_state = vec![0.0f32; dim];
+    let a = alpha_dyn as f32;
+
+    for round in 0..cfg.rounds {
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        let down = sampled.len() as u64 * dense_bits(dim);
+        let x = fed.x.clone();
+        let clients = &fed.clients;
+        let trainer = &fed.trainer;
+        let gamma = cfg.gamma;
+        let local_steps = cfg.local_steps;
+        let results: Vec<(Vec<f32>, f64)> = fed.pool.map(&sampled, |_, &ci| {
+            let mut state = clients[ci].lock().unwrap();
+            let mut xi = x.clone();
+            let mut loss_sum = 0.0f64;
+            for _ in 0..local_steps {
+                let batch = state.loader.next_batch();
+                let mut h_eff = vec![0.0f32; xi.len()];
+                for j in 0..xi.len() {
+                    h_eff[j] = state.h[j] - a * (xi[j] - x[j]);
+                }
+                let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
+                xi = next;
+                loss_sum += loss as f64;
+            }
+            for j in 0..xi.len() {
+                state.h[j] -= a * (xi[j] - x[j]);
+            }
+            (xi, loss_sum)
+        });
+
+        let m = results.len().max(1);
+        for (xi, _) in &results {
+            for j in 0..dim {
+                server_state[j] -= a / cfg.n_clients as f32 * (xi[j] - x[j]);
+            }
+        }
+        let rows: Vec<&[f32]> = results.iter().map(|(v, _)| v.as_slice()).collect();
+        tensor::mean_into(&rows, &mut fed.x);
+        tensor::axpy(-1.0 / a, &server_state, &mut fed.x);
+
+        let up = results.len() as u64 * dense_bits(dim);
+        let train_loss =
+            results.iter().map(|(_, l)| l).sum::<f64>() / (m * cfg.local_steps).max(1) as f64;
+        let eval = eval_if_due(&fed, cfg, round);
+        logger.push(round, cfg.local_steps, train_loss, up, down, eval.as_ref());
+    }
+    logger.records
+}
+
+fn new_api(cfg: &RunConfig, spec: &str) -> MetricsLog {
+    run(cfg, native(), &AlgorithmSpec::parse(spec).unwrap())
+}
+
+#[test]
+fn fedcomloc_com_topk_bit_identical() {
+    let cfg = tiny_cfg();
+    let reference = reference_fedcomloc(&cfg, "topk:0.3", false);
+    let log = new_api(&cfg, "fedcomloc-com:topk:0.3");
+    assert_eq!(log.run_name, format!("fedcomloc-com[topk(0.30)]-mlp-a{}", cfg.dirichlet_alpha));
+    assert_log_matches(&reference, &log, "fedcomloc-com topk");
+}
+
+#[test]
+fn fedcomloc_com_quantized_bit_identical() {
+    // Exercises the stochastic quantizer's per-client RNG stream across the
+    // wire refactor.
+    let cfg = tiny_cfg();
+    let reference = reference_fedcomloc(&cfg, "q:6", false);
+    let log = new_api(&cfg, "fedcomloc-com:q:6");
+    assert_log_matches(&reference, &log, "fedcomloc-com q6");
+}
+
+#[test]
+fn fedcomloc_com_double_compression_bit_identical() {
+    let cfg = tiny_cfg();
+    let reference = reference_fedcomloc(&cfg, "topk:0.25+q:4", false);
+    let log = new_api(&cfg, "fedcomloc-com:topk:0.25+q:4");
+    assert_log_matches(&reference, &log, "fedcomloc-com double");
+}
+
+#[test]
+fn fedcomloc_global_bit_identical() {
+    // -Global exercises the retained compressed downlink path.
+    let cfg = tiny_cfg();
+    let reference = reference_fedcomloc(&cfg, "topk:0.5", true);
+    let log = new_api(&cfg, "fedcomloc-global:topk:0.5");
+    assert_log_matches(&reference, &log, "fedcomloc-global");
+}
+
+#[test]
+fn fedavg_bit_identical() {
+    let cfg = tiny_cfg();
+    let reference = reference_fedavg(&cfg, "none");
+    let log = new_api(&cfg, "fedavg");
+    assert_eq!(log.run_name, format!("fedavg-mlp-a{}", cfg.dirichlet_alpha));
+    assert_log_matches(&reference, &log, "fedavg");
+}
+
+#[test]
+fn sparse_fedavg_bit_identical() {
+    let cfg = tiny_cfg();
+    let reference = reference_fedavg(&cfg, "topk:0.3");
+    let log = new_api(&cfg, "sparsefedavg:topk:0.3");
+    assert_eq!(
+        log.run_name,
+        format!("sparsefedavg[topk(0.30)]-mlp-a{}", cfg.dirichlet_alpha)
+    );
+    assert_log_matches(&reference, &log, "sparsefedavg");
+}
+
+#[test]
+fn scaffold_bit_identical() {
+    let cfg = tiny_cfg();
+    let reference = reference_scaffold(&cfg);
+    let log = new_api(&cfg, "scaffold");
+    assert_eq!(log.run_name, format!("scaffold-mlp-a{}", cfg.dirichlet_alpha));
+    assert_log_matches(&reference, &log, "scaffold");
+}
+
+#[test]
+fn feddyn_bit_identical() {
+    let cfg = tiny_cfg();
+    let reference = reference_feddyn(&cfg, 0.01);
+    let log = new_api(&cfg, "feddyn:0.01");
+    assert_eq!(log.run_name, format!("feddyn[a=0.01]-mlp-a{}", cfg.dirichlet_alpha));
+    assert_log_matches(&reference, &log, "feddyn");
+}

@@ -1,9 +1,10 @@
 //! Integration tests: the federated algorithms end-to-end on the native
-//! compute plane (synthetic FedMNIST, scaled-down configs).
+//! compute plane (synthetic FedMNIST, scaled-down configs), through the
+//! `FedAlgorithm` + `Transport` API.
 
-use fedcomloc::compress::{parse_spec, Identity, TopK};
 use fedcomloc::data::DatasetKind;
-use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+use fedcomloc::fed::transport::{InProc, SimNet, SimNetCfg};
+use fedcomloc::fed::{run, run_with_transport, AlgorithmSpec, RunConfig};
 use fedcomloc::model::native::NativeTrainer;
 use fedcomloc::model::ModelKind;
 use std::sync::Arc;
@@ -25,14 +26,14 @@ fn native() -> Arc<NativeTrainer> {
     Arc::new(NativeTrainer::new(ModelKind::Mlp))
 }
 
+fn algo(spec: &str) -> AlgorithmSpec {
+    AlgorithmSpec::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"))
+}
+
 #[test]
 fn fedcomloc_com_learns_and_counts_bits() {
     let cfg = quick_cfg();
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(TopK::with_density(0.3)),
-    };
-    let log = run(&cfg, native(), &spec);
+    let log = run(&cfg, native(), &algo("fedcomloc-com:topk:0.3"));
     assert_eq!(log.records.len(), 25);
     let acc = log.best_accuracy().unwrap();
     assert!(acc > 0.45, "accuracy {acc}");
@@ -41,21 +42,19 @@ fn fedcomloc_com_learns_and_counts_bits() {
     let r0 = &log.records[0];
     assert!(r0.uplink_bits < dense_bits / 2, "uplink {}", r0.uplink_bits);
     assert_eq!(r0.downlink_bits, dense_bits);
-    // Cumulative counters are monotone.
+    // Cumulative counters are monotone; in-process transport simulates no
+    // network time and drops nobody.
     for w in log.records.windows(2) {
         assert!(w[1].cum_uplink_bits > w[0].cum_uplink_bits);
         assert!(w[1].total_cost > w[0].total_cost);
     }
+    assert!(log.records.iter().all(|r| r.sim_secs == 0.0 && r.dropped_clients == 0));
 }
 
 #[test]
 fn fedcomloc_uncompressed_beats_chance_quickly() {
     let cfg = quick_cfg();
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(Identity),
-    };
-    let log = run(&cfg, native(), &spec);
+    let log = run(&cfg, native(), &algo("fedcomloc-com:none"));
     assert!(log.best_accuracy().unwrap() > 0.5);
     // Identity uplink counts full dense bits.
     let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
@@ -64,16 +63,16 @@ fn fedcomloc_uncompressed_beats_chance_quickly() {
 
 #[test]
 fn variants_all_run_and_learn() {
-    for variant in [Variant::Com, Variant::Local, Variant::Global] {
+    for variant in ["com", "local", "global"] {
         let cfg = quick_cfg();
-        let spec = AlgorithmSpec::FedComLoc {
-            variant,
-            compressor: Box::new(TopK::with_density(0.5)),
-        };
-        let log = run(&cfg, native(), &spec);
+        let log = run(
+            &cfg,
+            native(),
+            &algo(&format!("fedcomloc-{variant}:topk:0.5")),
+        );
         let acc = log.best_accuracy().unwrap();
-        assert!(acc > 0.35, "variant {variant:?} acc {acc}");
-        if variant == Variant::Global {
+        assert!(acc > 0.35, "variant {variant} acc {acc}");
+        if variant == "global" {
             // Downlink compressed after the first aggregation.
             let later = &log.records[3];
             let dense =
@@ -86,11 +85,7 @@ fn variants_all_run_and_learn() {
 #[test]
 fn quantized_fedcomloc_learns() {
     let cfg = quick_cfg();
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: parse_spec("q:8").unwrap(),
-    };
-    let log = run(&cfg, native(), &spec);
+    let log = run(&cfg, native(), &algo("fedcomloc-com:q:8"));
     assert!(log.best_accuracy().unwrap() > 0.45);
     // 8-bit quantization: ~10 bits/coord on our wire vs 32 dense.
     let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
@@ -100,16 +95,8 @@ fn quantized_fedcomloc_learns() {
 #[test]
 fn baselines_run_and_learn() {
     let cfg = quick_cfg();
-    for spec in [
-        AlgorithmSpec::FedAvg {
-            compressor: Box::new(Identity),
-        },
-        AlgorithmSpec::FedAvg {
-            compressor: Box::new(TopK::with_density(0.3)),
-        },
-        AlgorithmSpec::Scaffold,
-        AlgorithmSpec::FedDyn { alpha: 0.01 },
-    ] {
+    for spec in ["fedavg", "sparsefedavg:topk:0.3", "scaffold", "feddyn:0.01"] {
+        let spec = algo(spec);
         let name = spec.name();
         let log = run(&cfg, native(), &spec);
         let acc = log.best_accuracy().unwrap();
@@ -121,7 +108,7 @@ fn baselines_run_and_learn() {
 #[test]
 fn scaffold_uplink_is_double() {
     let cfg = quick_cfg();
-    let log = run(&cfg, native(), &AlgorithmSpec::Scaffold);
+    let log = run(&cfg, native(), &algo("scaffold"));
     let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
     assert_eq!(log.records[0].uplink_bits, 2 * dense_bits);
     assert_eq!(log.records[0].downlink_bits, 2 * dense_bits);
@@ -130,11 +117,12 @@ fn scaffold_uplink_is_double() {
 #[test]
 fn control_variate_sum_stays_zero_for_com() {
     // Σ h_i = 0 is Algorithm 1's invariant under -Com (exact averaging).
-    use fedcomloc::fed::Federation;
+    use fedcomloc::fed::{drive_federation, Federation};
     let cfg = quick_cfg();
     let mut fed = Federation::new(&cfg, native());
-    let comp = TopK::with_density(0.3);
-    let log = fedcomloc::fed::scaffnew::run(&cfg, &mut fed, Variant::Com, &comp);
+    let mut algorithm = algo("fedcomloc-com:topk:0.3").build();
+    let mut transport = InProc::default();
+    let log = drive_federation(&cfg, &mut fed, algorithm.as_mut(), &mut transport);
     assert!(log.best_accuracy().is_some());
     let h_sum = fed.control_variate_sum();
     let norm = fedcomloc::tensor::norm2(&h_sum);
@@ -145,12 +133,8 @@ fn control_variate_sum_stays_zero_for_com() {
 #[test]
 fn deterministic_given_seed() {
     let cfg = quick_cfg();
-    let mk = || AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(TopK::with_density(0.3)),
-    };
-    let a = run(&cfg, native(), &mk());
-    let b = run(&cfg, native(), &mk());
+    let a = run(&cfg, native(), &algo("fedcomloc-com:topk:0.3"));
+    let b = run(&cfg, native(), &algo("fedcomloc-com:topk:0.3"));
     let accs_a: Vec<_> = a.records.iter().map(|r| r.test_accuracy).collect();
     let accs_b: Vec<_> = b.records.iter().map(|r| r.test_accuracy).collect();
     assert_eq!(accs_a, accs_b);
@@ -167,17 +151,9 @@ fn smaller_p_means_fewer_comm_rounds_per_iteration() {
     let mut cfg = quick_cfg();
     cfg.rounds = 20;
     cfg.p = 0.5;
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(Identity),
-    };
-    let log_hi = run(&cfg, native(), &spec);
+    let log_hi = run(&cfg, native(), &algo("fedcomloc-com:none"));
     cfg.p = 0.05;
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(Identity),
-    };
-    let log_lo = run(&cfg, native(), &spec);
+    let log_lo = run(&cfg, native(), &algo("fedcomloc-com:none"));
     let iters_hi: usize = log_hi.records.iter().map(|r| r.local_steps).sum();
     let iters_lo: usize = log_lo.records.iter().map(|r| r.local_steps).sum();
     assert!(
@@ -207,11 +183,77 @@ fn dataset_kind_cifar_runs_with_native_cnn() {
         ..RunConfig::default_cifar()
     };
     let trainer = Arc::new(NativeTrainer::new(ModelKind::Cnn));
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(TopK::with_density(0.3)),
-    };
-    let log = run(&cfg, trainer, &spec);
+    let log = run(&cfg, trainer, &algo("fedcomloc-com:topk:0.3"));
     assert_eq!(log.records.len(), 2);
     assert!(log.best_accuracy().is_some());
+}
+
+#[test]
+fn simnet_smoke_accounts_latency_and_drops() {
+    // The SimNet transport must feed nonzero simulated wall-clock and drop
+    // accounting into RoundRecord without changing algorithm code.
+    let cfg = RunConfig {
+        rounds: 10,
+        ..quick_cfg()
+    };
+    let sim = SimNetCfg {
+        bandwidth_bps: 5e6,
+        latency_secs: 0.05,
+        drop_prob: 0.3,
+        heterogeneity: 4.0,
+    };
+    let mut transport = SimNet::new(sim, cfg.n_clients, cfg.seed);
+    let log = run_with_transport(
+        &cfg,
+        native(),
+        &algo("fedcomloc-com:topk:0.3"),
+        &mut transport,
+    );
+    assert_eq!(log.records.len(), cfg.rounds);
+    // Every round with at least one participant has >= latency of sim time.
+    assert!(log.records.iter().all(|r| r.sim_secs > 0.0 || r.dropped_clients == 5));
+    let total_sim = log.records.last().unwrap().cum_sim_secs;
+    assert!(total_sim > 0.0, "no simulated time accumulated");
+    let total_drops: u64 = log.records.iter().map(|r| r.dropped_clients).sum();
+    assert!(
+        total_drops > 0,
+        "p=0.3 over {} client-rounds produced no drops",
+        cfg.rounds * cfg.clients_per_round
+    );
+    // Cumulative sim clock is monotone.
+    for w in log.records.windows(2) {
+        assert!(w[1].cum_sim_secs >= w[0].cum_sim_secs);
+    }
+    // Dropped clients don't train: with drops the run still completes and
+    // still learns something.
+    assert!(log.best_accuracy().unwrap() > 0.3);
+}
+
+#[test]
+fn simnet_is_deterministic_given_seed() {
+    let cfg = RunConfig {
+        rounds: 6,
+        ..quick_cfg()
+    };
+    let sim = SimNetCfg {
+        drop_prob: 0.2,
+        ..SimNetCfg::default()
+    };
+    let run_once = || {
+        let mut transport = SimNet::new(sim, cfg.n_clients, cfg.seed);
+        run_with_transport(&cfg, native(), &algo("fedcomloc-com:topk:0.3"), &mut transport)
+    };
+    let a = run_once();
+    let b = run_once();
+    let key = |log: &fedcomloc::metrics::MetricsLog| -> Vec<(u64, u64, u64)> {
+        log.records
+            .iter()
+            .map(|r| (r.uplink_bits, r.downlink_bits, r.dropped_clients))
+            .collect()
+    };
+    assert_eq!(key(&a), key(&b));
+    assert_eq!(
+        a.records.last().unwrap().cum_sim_secs,
+        b.records.last().unwrap().cum_sim_secs
+    );
 }

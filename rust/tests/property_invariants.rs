@@ -4,6 +4,7 @@
 //! rests on, checked over randomized inputs with shrink-on-failure.
 
 use fedcomloc::compress::{topk, Compressor, DoubleCompress, Identity, QuantizeR, TopK};
+use fedcomloc::fed::message::Message;
 use fedcomloc::tensor;
 use fedcomloc::util::bitio::{BitReader, BitWriter};
 use fedcomloc::util::quickcheck::{check, Gen};
@@ -11,6 +12,19 @@ use fedcomloc::util::rng::Rng;
 
 fn any_vec(g: &mut Gen) -> Vec<f32> {
     g.vec_f32(1..=2048, -10.0, 10.0)
+}
+
+/// One randomly-parameterized compressor per codec family.
+fn any_compressors(g: &mut Gen) -> Vec<Box<dyn Compressor>> {
+    let density = *g.choose(&[0.01, 0.1, 0.3, 0.5, 0.9, 1.0]);
+    let bits = *g.choose(&[1u32, 2, 4, 7, 8, 12, 16]);
+    let bucket = *g.choose(&[32usize, 100, 512, 1024]);
+    vec![
+        Box::new(Identity),
+        Box::new(TopK::with_density(density)),
+        Box::new(QuantizeR::with_bucket(bits, bucket)),
+        Box::new(DoubleCompress::new(density, bits)),
+    ]
 }
 
 #[test]
@@ -111,6 +125,62 @@ fn prop_wire_bits_never_exceed_payload() {
             // Decode must give the declared dimension.
             if c.decompress(&enc).len() != x.len() {
                 return Err(format!("{}: bad dim", c.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_message_frame_roundtrips_byte_exactly() {
+    // Message::encode → decode must be lossless for every codec under
+    // random dims/densities/bit-widths: header fields, payload bytes, and
+    // the decoded dense vector all survive framing.
+    check("message frame roundtrip", 120, |g| {
+        let x = any_vec(g);
+        let round = g.usize_in(0..=10_000);
+        let sender = g.usize_in(0..=1_000) as u32;
+        let mut rng = Rng::seed_from_u64(g.rng().next_u64());
+        for c in any_compressors(g) {
+            let enc = c.compress(&x, &mut rng);
+            let reference = c.decompress(&enc);
+            let msg = Message::from_compressed(round, sender, enc);
+            let back = match Message::decode(&msg.encode()) {
+                Ok(m) => m,
+                Err(e) => return Err(format!("{}: decode failed: {e}", c.name())),
+            };
+            if back != msg {
+                return Err(format!("{}: frame not byte-exact", c.name()));
+            }
+            // Decoding from the wire header alone must agree with the
+            // sender's compressor instance.
+            if back.to_dense() != reference {
+                return Err(format!("{}: codec-driven decode mismatch", c.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_message_wire_bits_bounded_by_payload() {
+    // wire_bits ≤ 8·payload.len() always holds, and the payload never pads
+    // by a full byte or more.
+    check("message wire_bits bounds", 120, |g| {
+        let x = any_vec(g);
+        let mut rng = Rng::seed_from_u64(g.rng().next_u64());
+        for c in any_compressors(g) {
+            let msg = Message::from_compressed(0, 0, c.compress(&x, &mut rng));
+            let payload_bits = 8 * msg.payload.len() as u64;
+            if msg.wire_bits() > payload_bits {
+                return Err(format!(
+                    "{}: wire_bits {} > payload bits {payload_bits}",
+                    c.name(),
+                    msg.wire_bits()
+                ));
+            }
+            if payload_bits >= msg.wire_bits() + 8 {
+                return Err(format!("{}: over-padded payload", c.name()));
             }
         }
         Ok(())

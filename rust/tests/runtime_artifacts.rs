@@ -1,9 +1,10 @@
 //! PJRT runtime integration: load the AOT artifacts, execute them, and
 //! cross-check numerics against the native Rust compute plane.
 //!
-//! These tests require `make artifacts` to have run; they are skipped (with
-//! a note) when `artifacts/manifest.json` is absent so `cargo test` works on
-//! a fresh checkout.
+//! These tests require `make artifacts` (external data: HLO/PJRT artifacts)
+//! and are `#[ignore]`d so tier-1 `cargo test` runs clean on a fresh
+//! checkout; run them with `cargo test -- --ignored` after building the
+//! artifacts. Each also self-skips with a note if the manifest is absent.
 
 use fedcomloc::data::loader::{eval_batches, ClientLoader};
 use fedcomloc::data::{synthetic, DatasetKind};
@@ -38,6 +39,7 @@ fn mnist_batch(batch: usize, seed: u64) -> fedcomloc::data::loader::Batch {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_grad_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
     let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
@@ -66,6 +68,7 @@ fn pjrt_grad_matches_native() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_train_step_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
     let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
@@ -84,6 +87,7 @@ fn pjrt_train_step_matches_native() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_masked_step_density_one_matches_plain() {
     let Some(dir) = artifacts_dir() else { return };
     let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
@@ -101,6 +105,7 @@ fn pjrt_masked_step_density_one_matches_plain() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_eval_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
     let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
@@ -117,6 +122,7 @@ fn pjrt_eval_matches_native() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn quantize_artifact_matches_rust_wire_codec() {
     // The standalone Pallas quantizer and the Rust QSGD codec implement the
     // same Definition 3.2 — drive both with the same uniforms and compare.
@@ -156,11 +162,11 @@ fn quantize_artifact_matches_rust_wire_codec() {
 }
 
 #[test]
+#[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_federated_smoke() {
     // Whole-stack: FedComLoc-Com on the AOT plane for a few rounds.
     let Some(dir) = artifacts_dir() else { return };
-    use fedcomloc::compress::TopK;
-    use fedcomloc::fed::{run, AlgorithmSpec, RunConfig, Variant};
+    use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
     let cfg = RunConfig {
         train_n: 1_000,
         test_n: 256,
@@ -172,10 +178,7 @@ fn pjrt_federated_smoke() {
         ..RunConfig::default_mnist()
     };
     let trainer = Arc::new(PjrtTrainer::load(&dir, ModelKind::Mlp).unwrap());
-    let spec = AlgorithmSpec::FedComLoc {
-        variant: Variant::Com,
-        compressor: Box::new(TopK::with_density(0.3)),
-    };
+    let spec = AlgorithmSpec::parse("fedcomloc-com:topk:0.3").unwrap();
     let log = run(&cfg, trainer, &spec);
     assert_eq!(log.records.len(), 4);
     assert!(log.best_accuracy().is_some());

@@ -1,0 +1,106 @@
+//! Minimal offline error facade.
+//!
+//! API-compatible with the subset of `anyhow` this repository uses: the
+//! [`Error`] type-erased error, [`Result`] alias, and the [`anyhow!`]/
+//! [`bail!`] macros. Like the real crate, [`Error`] deliberately does *not*
+//! implement `std::error::Error`, which is what lets the blanket
+//! `From<E: Error>` conversion (powering `?`) coexist with coherence.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message (all call sites in this
+/// repository either format a message or convert a typed error once at the
+/// boundary, so no downcasting machinery is needed).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulted to [`Error`], as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let what = "thing";
+        let b = anyhow!("missing {} ({what})", 3);
+        assert_eq!(b.to_string(), "missing 3 (thing)");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            let _ = std::str::from_utf8(&[0xFF])?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn inner(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        assert_eq!(inner(true).unwrap_err().to_string(), "flag was true");
+    }
+}

@@ -5,7 +5,7 @@
 //!     cargo run --release --example baselines_compare
 
 use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
-use fedcomloc::model::{native::NativeTrainer, ModelKind};
+use fedcomloc::model::native::NativeTrainer;
 use std::sync::Arc;
 
 fn main() {
@@ -16,7 +16,7 @@ fn main() {
         eval_every: 5,
         ..RunConfig::default_mnist()
     };
-    let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
+    let trainer = Arc::new(NativeTrainer::from_spec("mlp").unwrap());
 
     let algo = |spec: &str| AlgorithmSpec::parse(spec).unwrap();
     let runs: Vec<(&str, AlgorithmSpec)> = vec![

@@ -15,7 +15,7 @@
 //! Flags: --rounds N (default 200), --native (skip PJRT), --dense.
 
 use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
-use fedcomloc::model::{native::NativeTrainer, LocalTrainer, ModelKind};
+use fedcomloc::model::{build_model, native::NativeTrainer, LocalTrainer};
 use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, PjrtTrainer};
 use std::sync::Arc;
 
@@ -42,12 +42,14 @@ fn main() {
 
     // Compute plane: AOT artifacts through PJRT when available.
     let dir = default_artifacts_dir();
+    let model = build_model("mlp").unwrap();
+    let dim = model.dim();
     let trainer: Arc<dyn LocalTrainer> = if !force_native && artifacts_available(&dir) {
         println!("compute plane: PJRT (AOT artifacts from {})", dir.display());
-        Arc::new(PjrtTrainer::load(&dir, ModelKind::Mlp).expect("artifacts load"))
+        Arc::new(PjrtTrainer::load(&dir, &model).expect("artifacts load"))
     } else {
         println!("compute plane: native Rust (run `make artifacts` for the AOT plane)");
-        Arc::new(NativeTrainer::new(ModelKind::Mlp))
+        Arc::new(NativeTrainer::new(model.clone()))
     };
 
     let spec = AlgorithmSpec::parse(if dense {
@@ -98,7 +100,7 @@ fn main() {
     println!(
         "uplink total:         {:.2} MB (dense equivalent {:.2} MB)",
         log.total_uplink_bits() as f64 / 8e6,
-        (32 * ModelKind::Mlp.dim() * cfg.clients_per_round * rounds) as f64 / 8e6
+        (32 * dim * cfg.clients_per_round * rounds) as f64 / 8e6
     );
     let _ = log.save(std::path::Path::new("results/e2e"));
     println!("metrics saved under results/e2e/");

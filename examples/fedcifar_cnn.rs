@@ -7,7 +7,7 @@
 //! communicated bit.
 
 use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
-use fedcomloc::model::{native::NativeTrainer, LocalTrainer, ModelKind};
+use fedcomloc::model::{build_model, native::NativeTrainer, LocalTrainer};
 use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, PjrtTrainer};
 use std::sync::Arc;
 
@@ -21,12 +21,13 @@ fn main() {
         .unwrap_or(20);
 
     let dir = default_artifacts_dir();
+    let model = build_model("cnn").unwrap();
     let trainer: Arc<dyn LocalTrainer> = if artifacts_available(&dir) {
         println!("compute plane: PJRT/XLA (artifacts: {})", dir.display());
-        Arc::new(PjrtTrainer::load(&dir, ModelKind::Cnn).expect("artifacts load"))
+        Arc::new(PjrtTrainer::load(&dir, &model).expect("artifacts load"))
     } else {
         println!("compute plane: native Rust (naive conv — run `make artifacts` for XLA)");
-        Arc::new(NativeTrainer::new(ModelKind::Cnn))
+        Arc::new(NativeTrainer::new(model))
     };
 
     println!("{:<22}{:>10}{:>14}{:>16}", "config", "best_acc", "final_loss", "uplink_MB");

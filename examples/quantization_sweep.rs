@@ -5,7 +5,8 @@
 
 use fedcomloc::compress::parse_spec;
 use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
-use fedcomloc::model::{native::NativeTrainer, ModelKind};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::LocalTrainer;
 use std::sync::Arc;
 
 fn main() {
@@ -16,7 +17,8 @@ fn main() {
         eval_every: 5,
         ..RunConfig::default_mnist()
     };
-    let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
+    let trainer = Arc::new(NativeTrainer::from_spec("mlp").unwrap());
+    let dim = trainer.dim();
 
     let cases: Vec<(&str, &str)> = vec![
         ("fp32 baseline", "none"),
@@ -32,8 +34,7 @@ fn main() {
     );
     for (label, comp_spec) in cases {
         let compressor = parse_spec(comp_spec).unwrap();
-        let bits_per_coord =
-            compressor.nominal_bits(ModelKind::Mlp.dim()) as f64 / ModelKind::Mlp.dim() as f64;
+        let bits_per_coord = compressor.nominal_bits(dim) as f64 / dim as f64;
         let spec = AlgorithmSpec::parse(&format!("fedcomloc-com:{comp_spec}")).unwrap();
         let log = run(&cfg, trainer.clone(), &spec);
         println!(

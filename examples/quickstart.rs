@@ -6,7 +6,8 @@
 //! `e2e_fedmnist` for the full AOT/PJRT pipeline.
 
 use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
-use fedcomloc::model::{native::NativeTrainer, ModelKind};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::LocalTrainer;
 use std::sync::Arc;
 
 fn main() {
@@ -20,7 +21,8 @@ fn main() {
     };
     // Uplink compression, keeping 30% of weights (see `list-algorithms`).
     let spec = AlgorithmSpec::parse("fedcomloc-com:topk:0.3").unwrap();
-    let trainer = Arc::new(NativeTrainer::new(ModelKind::Mlp));
+    let trainer = Arc::new(NativeTrainer::from_spec("mlp").unwrap());
+    let dim = trainer.dim();
 
     let log = run(&cfg, trainer, &spec);
 
@@ -40,6 +42,6 @@ fn main() {
         "\nbest accuracy: {:.4} with {:.1} MB total uplink (dense would be {:.1} MB)",
         log.best_accuracy().unwrap(),
         log.total_uplink_bits() as f64 / 8e6,
-        (32 * ModelKind::Mlp.dim() * cfg.clients_per_round * cfg.rounds) as f64 / 8e6,
+        (32 * dim * cfg.clients_per_round * cfg.rounds) as f64 / 8e6,
     );
 }

@@ -5,9 +5,9 @@
 //! so the auto trainer policy in experiments::ExpOptions stays justified.
 
 use fedcomloc::data::loader::{eval_batches, ClientLoader};
-use fedcomloc::data::{synthetic, DatasetKind};
+use fedcomloc::data::{synthetic, DatasetSpec};
 use fedcomloc::model::native::NativeTrainer;
-use fedcomloc::model::{init_params, LocalTrainer, ModelKind};
+use fedcomloc::model::{build_model, init_params, LocalTrainer};
 use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, PjrtTrainer};
 use fedcomloc::util::benchkit::{bb, Bench};
 use fedcomloc::util::rng::Rng;
@@ -19,21 +19,18 @@ fn main() {
         println!("bench_micro_runtime: artifacts not built (run `make artifacts`); skipping");
         return;
     }
-    for kind in [ModelKind::Mlp, ModelKind::Cnn] {
-        let pjrt = match PjrtTrainer::load(&dir, kind) {
+    for (model_spec, dataset) in [("mlp", DatasetSpec::mnist()), ("cnn", DatasetSpec::cifar10())] {
+        let model = build_model(model_spec).unwrap();
+        let pjrt = match PjrtTrainer::load(&dir, &model) {
             Ok(t) => t,
             Err(e) => {
-                println!("skip {kind:?}: {e}");
+                println!("skip {model_spec}: {e}");
                 continue;
             }
         };
-        let native = NativeTrainer::new(kind);
+        let native = NativeTrainer::new(model.clone());
         let mut rng = Rng::seed_from_u64(5);
-        let dataset_kind = match kind {
-            ModelKind::Mlp => DatasetKind::Mnist,
-            ModelKind::Cnn => DatasetKind::Cifar10,
-        };
-        let tt = synthetic::generate(dataset_kind, 512, 256, &mut rng);
+        let tt = synthetic::generate(&dataset, 512, 256, &mut rng);
         let data = Arc::new(tt.train);
         let mut loader = ClientLoader::new(
             Arc::clone(&data),
@@ -42,11 +39,11 @@ fn main() {
             Rng::seed_from_u64(6),
         );
         let batch = loader.next_batch();
-        let params = init_params(kind, &mut rng);
+        let params = init_params(&model, &mut rng);
         let h = vec![0.0f32; params.len()];
         let eb = eval_batches(&tt.test, pjrt.eval_batch_size());
 
-        let mut b = Bench::new(&format!("runtime_{}", kind.name()));
+        let mut b = Bench::new(&format!("runtime_{}", model.name()));
         b.case("pjrt train_step", || {
             bb(pjrt.train_step(bb(&params), bb(&h), bb(&batch), 0.05));
         });

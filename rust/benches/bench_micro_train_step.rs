@@ -2,9 +2,9 @@
 //! fused control-variate update, aggregation, and the full step.
 
 use fedcomloc::data::loader::ClientLoader;
-use fedcomloc::data::{synthetic, DatasetKind};
+use fedcomloc::data::{synthetic, DatasetSpec};
 use fedcomloc::model::native::NativeTrainer;
-use fedcomloc::model::{init_params, LocalTrainer, ModelKind};
+use fedcomloc::model::{init_params, LocalTrainer};
 use fedcomloc::tensor;
 use fedcomloc::util::benchkit::{bb, Bench};
 use fedcomloc::util::rng::Rng;
@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 fn main() {
     let mut rng = Rng::seed_from_u64(1);
-    let tt = synthetic::generate(DatasetKind::Mnist, 512, 64, &mut rng);
+    let tt = synthetic::generate(&DatasetSpec::mnist(), 512, 64, &mut rng);
     let data = Arc::new(tt.train);
     let mut loader = ClientLoader::new(
         Arc::clone(&data),
@@ -21,8 +21,8 @@ fn main() {
         Rng::seed_from_u64(2),
     );
     let batch = loader.next_batch();
-    let trainer = NativeTrainer::new(ModelKind::Mlp);
-    let params = init_params(ModelKind::Mlp, &mut rng);
+    let trainer = NativeTrainer::from_spec("mlp").unwrap();
+    let params = init_params(trainer.model(), &mut rng);
     let mut h = vec![0.0f32; params.len()];
     rng.fill_normal_f32(&mut h, 0.0, 0.01);
 
@@ -59,7 +59,7 @@ fn main() {
 
     // CNN single step (heavier; fewer samples by config).
     let mut rng = Rng::seed_from_u64(3);
-    let tt = synthetic::generate(DatasetKind::Cifar10, 128, 32, &mut rng);
+    let tt = synthetic::generate(&DatasetSpec::cifar10(), 128, 32, &mut rng);
     let data = Arc::new(tt.train);
     let mut loader = ClientLoader::new(
         Arc::clone(&data),
@@ -68,8 +68,8 @@ fn main() {
         Rng::seed_from_u64(4),
     );
     let batch = loader.next_batch();
-    let trainer = NativeTrainer::new(ModelKind::Cnn);
-    let params = init_params(ModelKind::Cnn, &mut rng);
+    let trainer = NativeTrainer::from_spec("cnn").unwrap();
+    let params = init_params(trainer.model(), &mut rng);
     let h = vec![0.0f32; params.len()];
     let mut b = Bench::new("train_step_native_cnn");
     b.case("cnn grad (batch 32)", || {

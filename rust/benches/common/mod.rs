@@ -8,7 +8,6 @@
 
 use fedcomloc::fed::RunConfig;
 use fedcomloc::model::native::NativeTrainer;
-use fedcomloc::model::ModelKind;
 use std::sync::Arc;
 
 pub fn bench_rounds() -> usize {
@@ -56,11 +55,11 @@ pub fn fedcomloc_topk(density: f64) -> fedcomloc::fed::AlgorithmSpec {
 }
 
 pub fn mlp_trainer() -> Arc<NativeTrainer> {
-    Arc::new(NativeTrainer::new(ModelKind::Mlp))
+    Arc::new(NativeTrainer::from_spec("mlp").unwrap())
 }
 
 pub fn cnn_trainer() -> Arc<NativeTrainer> {
-    Arc::new(NativeTrainer::new(ModelKind::Cnn))
+    Arc::new(NativeTrainer::from_spec("cnn").unwrap())
 }
 
 /// Print one experiment data row in a uniform format.

@@ -15,8 +15,9 @@
 
 pub mod presets;
 
-use crate::data::DatasetKind;
+use crate::data::DatasetSpec;
 use crate::fed::RunConfig;
+use crate::model::ModelSpec;
 use crate::util::toml::{self, TomlValue};
 use std::path::Path;
 
@@ -73,8 +74,11 @@ fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(), Str
     match key {
         "dataset" => {
             let s = value.as_str().ok_or("expected string")?;
-            cfg.dataset =
-                DatasetKind::parse(s).ok_or_else(|| format!("unknown dataset '{s}'"))?;
+            cfg.dataset = DatasetSpec::parse(s)?;
+        }
+        "model" => {
+            let s = value.as_str().ok_or("expected string")?;
+            cfg.model = Some(ModelSpec::parse(s)?);
         }
         "train_n" => cfg.train_n = as_usize()?,
         "test_n" => cfg.test_n = as_usize()?,
@@ -103,6 +107,7 @@ fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(), Str
 pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), ConfigError> {
     let pairs: &[(&str, &str)] = &[
         ("dataset", "dataset"),
+        ("model", "model"),
         ("train-n", "train_n"),
         ("test-n", "test_n"),
         ("clients", "clients"),
@@ -122,27 +127,32 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
     ];
     for (flag, key) in pairs {
         if let Some(raw) = args.get(flag) {
-            let value = parse_flag_value(key, raw);
-            apply_kv(cfg, key, &value).map_err(|reason| ConfigError::Invalid {
+            let invalid = |reason: String| ConfigError::Invalid {
                 key: (*flag).to_string(),
                 reason,
-            })?;
+            };
+            let value = parse_flag_value(key, raw).map_err(invalid)?;
+            apply_kv(cfg, key, &value).map_err(invalid)?;
         }
     }
     Ok(())
 }
 
-fn parse_flag_value(key: &str, raw: &str) -> TomlValue {
+/// Typed parse of one CLI flag value. Numeric flags that fail to parse are
+/// an error *here*, naming the raw value — they used to fall back to
+/// `TomlValue::Str`, which turned typos like `--rounds 1O0` into a bare
+/// "expected integer" from `apply_kv`, far from the cause.
+fn parse_flag_value(key: &str, raw: &str) -> Result<TomlValue, String> {
     match key {
-        "dataset" | "data_dir" => TomlValue::Str(raw.to_string()),
+        "dataset" | "data_dir" | "model" => Ok(TomlValue::Str(raw.to_string())),
         "alpha" | "p" | "gamma" | "tau" => raw
             .parse::<f64>()
             .map(TomlValue::Float)
-            .unwrap_or_else(|_| TomlValue::Str(raw.to_string())),
+            .map_err(|_| format!("expected a number, got '{raw}'")),
         _ => raw
             .parse::<i64>()
             .map(TomlValue::Int)
-            .unwrap_or_else(|_| TomlValue::Str(raw.to_string())),
+            .map_err(|_| format!("expected an integer, got '{raw}'")),
     }
 }
 
@@ -165,7 +175,7 @@ clients = 50
         )
         .unwrap();
         apply_toml(&mut cfg, &doc).unwrap();
-        assert_eq!(cfg.dataset, DatasetKind::Cifar10);
+        assert_eq!(cfg.dataset, DatasetSpec::cifar10());
         assert_eq!(cfg.rounds, 123);
         assert_eq!(cfg.dirichlet_alpha, 0.3);
         assert_eq!(cfg.gamma, 0.01);
@@ -209,6 +219,39 @@ clients = 50
         apply_cli(&mut cfg, &args).unwrap();
         assert_eq!(cfg.rounds, 77);
         assert_eq!(cfg.dirichlet_alpha, 0.1);
-        assert_eq!(cfg.dataset, DatasetKind::Cifar10);
+        assert_eq!(cfg.dataset, DatasetSpec::cifar10());
+    }
+
+    #[test]
+    fn model_key_applies_and_canonicalizes() {
+        let mut cfg = RunConfig::default_mnist();
+        assert_eq!(cfg.model_spec().key(), "mlp");
+        let doc = toml::parse("[run]\nmodel = \"mlp:784x128x64x10\"").unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.model_spec().key(), "mlp");
+        let doc = toml::parse("[run]\nmodel = \"linear:784\"").unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.model_spec().key(), "linear:784");
+        let doc = toml::parse("[run]\nmodel = \"nope\"").unwrap();
+        let err = apply_toml(&mut cfg, &doc).unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn numeric_flag_typo_names_flag_and_raw_value() {
+        // `--rounds 1O0` (letter O) must produce an error that names the
+        // flag and the bad value, not a silent string fallback.
+        let mut cfg = RunConfig::default_mnist();
+        let cmd = crate::cli::Command::new("train", "t")
+            .opt("rounds", "N", "")
+            .opt("gamma", "F", "");
+        let args = cmd.parse(&["--rounds".into(), "1O0".into()]).unwrap();
+        let err = apply_cli(&mut cfg, &args).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("rounds") && msg.contains("1O0"), "{msg}");
+        let args = cmd.parse(&["--gamma".into(), "0.0five".into()]).unwrap();
+        let err = apply_cli(&mut cfg, &args).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("gamma") && msg.contains("0.0five"), "{msg}");
     }
 }

@@ -4,7 +4,7 @@
 //! 500/2500 rounds); `scaled-*` are the defaults sized for this CPU testbed
 //! (DESIGN.md §5 records the substitution). Select with `--preset`.
 
-use crate::data::DatasetKind;
+use crate::data::DatasetSpec;
 use crate::fed::RunConfig;
 
 pub fn by_name(name: &str) -> Option<RunConfig> {
@@ -12,7 +12,8 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
         "scaled-mnist" => Some(RunConfig::default_mnist()),
         "scaled-cifar" => Some(RunConfig::default_cifar()),
         "paper-mnist" => Some(RunConfig {
-            dataset: DatasetKind::Mnist,
+            dataset: DatasetSpec::mnist(),
+            model: None,
             train_n: 60_000,
             test_n: 10_000,
             n_clients: 100,
@@ -31,7 +32,8 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
             data_dir: std::path::PathBuf::from("data"),
         }),
         "paper-cifar" => Some(RunConfig {
-            dataset: DatasetKind::Cifar10,
+            dataset: DatasetSpec::cifar10(),
+            model: None,
             train_n: 50_000,
             test_n: 10_000,
             n_clients: 10,

@@ -182,11 +182,11 @@ pub fn render_histogram(partition: &Partition, data: &Dataset, max_clients: usiz
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{synthetic, DatasetKind};
+    use crate::data::{synthetic, DatasetSpec};
 
     fn dataset(n: usize) -> Dataset {
         let mut rng = Rng::seed_from_u64(9);
-        synthetic::generate(DatasetKind::Mnist, n, 10, &mut rng).train
+        synthetic::generate(&DatasetSpec::mnist(), n, 10, &mut rng).train
     }
 
     #[test]

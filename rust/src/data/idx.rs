@@ -10,19 +10,20 @@
 //! When the files are absent, [`try_load`] returns `None` and the caller
 //! falls back to the synthetic generators.
 
-use super::{Dataset, DatasetKind, TrainTest};
+use super::{DataSource, Dataset, DatasetSpec, TrainTest};
 use std::io::Read;
 use std::path::Path;
 
-/// Attempt to load real data; `None` when files are missing/corrupt.
+/// Attempt to load real data; `None` when files are missing/corrupt, or
+/// when the spec has no real-file backing (pure-synthetic specs).
 pub fn try_load(
-    kind: DatasetKind,
+    spec: &DatasetSpec,
     dir: &Path,
     train_n: usize,
     test_n: usize,
 ) -> Option<TrainTest> {
-    match kind {
-        DatasetKind::Mnist => {
+    match spec.source() {
+        DataSource::MnistIdx => {
             let train = load_mnist_pair(
                 &dir.join("train-images-idx3-ubyte"),
                 &dir.join("train-labels-idx1-ubyte"),
@@ -35,7 +36,7 @@ pub fn try_load(
             )?;
             Some(TrainTest { train, test })
         }
-        DatasetKind::Cifar10 => {
+        DataSource::CifarBin => {
             let train_files: Vec<_> = (1..=5)
                 .map(|i| dir.join(format!("data_batch_{i}.bin")))
                 .collect();
@@ -43,6 +44,7 @@ pub fn try_load(
             let test = load_cifar_batches(&[dir.join("test_batch.bin")], test_n)?;
             Some(TrainTest { train, test })
         }
+        DataSource::Synthetic => None,
     }
 }
 
@@ -90,7 +92,7 @@ fn load_mnist_pair(images: &Path, labels: &Path, limit: usize) -> Option<Dataset
         return None;
     }
     Some(Dataset {
-        kind: DatasetKind::Mnist,
+        spec: DatasetSpec::mnist(),
         features,
         labels: labels_v,
         feature_dim: dim,
@@ -124,7 +126,7 @@ fn load_cifar_batches(paths: &[std::path::PathBuf], limit: usize) -> Option<Data
         return None;
     }
     Some(Dataset {
-        kind: DatasetKind::Cifar10,
+        spec: DatasetSpec::cifar10(),
         features,
         labels,
         feature_dim: 3072,
@@ -174,7 +176,7 @@ mod tests {
         let dir = tmpdir("mnist");
         write_idx_pair(&dir, "train", 50);
         write_idx_pair(&dir, "t10k", 20);
-        let tt = try_load(DatasetKind::Mnist, &dir, 40, 20).unwrap();
+        let tt = try_load(&DatasetSpec::mnist(), &dir, 40, 20).unwrap();
         assert_eq!(tt.train.len(), 40); // truncated to limit
         assert_eq!(tt.test.len(), 20);
         assert_eq!(tt.train.labels[3], 3);
@@ -184,8 +186,11 @@ mod tests {
 
     #[test]
     fn missing_files_return_none() {
-        assert!(try_load(DatasetKind::Mnist, Path::new("/nonexistent"), 10, 10).is_none());
-        assert!(try_load(DatasetKind::Cifar10, Path::new("/nonexistent"), 10, 10).is_none());
+        assert!(try_load(&DatasetSpec::mnist(), Path::new("/nonexistent"), 10, 10).is_none());
+        assert!(try_load(&DatasetSpec::cifar10(), Path::new("/nonexistent"), 10, 10).is_none());
+        // Pure-synthetic specs never load from disk.
+        let synth = DatasetSpec::parse("synthetic:64").unwrap();
+        assert!(try_load(&synth, Path::new("/nonexistent"), 10, 10).is_none());
     }
 
     #[test]
@@ -193,7 +198,7 @@ mod tests {
         let dir = tmpdir("badmagic");
         std::fs::write(dir.join("train-images-idx3-ubyte"), [0u8; 32]).unwrap();
         std::fs::write(dir.join("train-labels-idx1-ubyte"), [0u8; 16]).unwrap();
-        assert!(try_load(DatasetKind::Mnist, &dir, 10, 10).is_none());
+        assert!(try_load(&DatasetSpec::mnist(), &dir, 10, 10).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -214,7 +219,7 @@ mod tests {
             buf.extend(std::iter::repeat(64u8).take(3072));
         }
         std::fs::write(dir.join("test_batch.bin"), &buf).unwrap();
-        let tt = try_load(DatasetKind::Cifar10, &dir, 30, 10).unwrap();
+        let tt = try_load(&DatasetSpec::cifar10(), &dir, 30, 10).unwrap();
         assert_eq!(tt.train.len(), 30);
         assert_eq!(tt.test.len(), 10);
         assert_eq!(tt.train.feature_dim, 3072);

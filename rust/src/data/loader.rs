@@ -119,11 +119,11 @@ pub fn eval_batches(data: &Dataset, batch_size: usize) -> EvalBatches {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::{synthetic, DatasetKind};
+    use crate::data::{synthetic, DatasetSpec};
 
     fn dataset(n: usize) -> Arc<Dataset> {
         let mut rng = Rng::seed_from_u64(10);
-        Arc::new(synthetic::generate(DatasetKind::Mnist, n, 10, &mut rng).train)
+        Arc::new(synthetic::generate(&DatasetSpec::mnist(), n, 10, &mut rng).train)
     }
 
     #[test]

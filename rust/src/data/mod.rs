@@ -1,13 +1,24 @@
 //! Dataset substrate: in-memory classification datasets, federated
 //! Dirichlet partitioning, and per-client batch loading.
 //!
+//! Datasets are selected through the string-keyed, open [`DatasetSpec`]
+//! registry (mirroring `fed::AlgorithmSpec` and `model::ModelSpec`):
+//!
+//! * `mnist` (alias `fedmnist`) — 1×28×28 grayscale, 10 classes; loads
+//!   real MNIST IDX files from `data/` when present ([`idx`]), otherwise a
+//!   deterministic synthetic equivalent ([`synthetic`]).
+//! * `cifar10` (aliases `cifar`, `fedcifar10`) — 3×32×32 color, 10
+//!   classes; real CIFAR-10 binary batches or synthetic.
+//! * `synthetic:<ch>x<side>x<side>[-c<classes>]` — synthetic image data of
+//!   any square shape (the generator behind the MNIST/CIFAR stand-ins).
+//! * `synthetic:<d>[-c<classes>]` — flat Gaussian-mixture features of
+//!   dimension `d`: a linearly separable-ish convex workload for the
+//!   `linear:<d>` / `softmax:<d>x<c>` models.
+//!
 //! The paper evaluates on FedMNIST (MLP) and FedCIFAR10 (CNN) distributed
-//! over 100 clients by a Dirichlet label-skew model (§4, Appendix A/B.1).
-//! This environment has no network access, so the default datasets are
-//! deterministic *synthetic* equivalents with identical shapes and class
-//! structure (see [`synthetic`] and DESIGN.md §5); when real MNIST IDX /
-//! CIFAR-10 binary files are present under `data/`, [`idx`] loads those
-//! instead ([`load_or_synthesize`]).
+//! over 100 clients by a Dirichlet label-skew model (§4, Appendix A/B.1);
+//! this environment has no network access, so synthetic is the default
+//! (see DESIGN.md §5).
 
 pub mod dirichlet;
 pub mod idx;
@@ -16,40 +27,254 @@ pub mod synthetic;
 
 use crate::util::rng::Rng;
 
-/// Which benchmark family a dataset mimics (decides shapes and the model).
+/// Feature geometry of a dataset.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DatasetKind {
-    /// 1×28×28 grayscale, 10 classes (MNIST-shaped; MLP model).
-    Mnist,
-    /// 3×32×32 color, 10 classes (CIFAR10-shaped; CNN model).
-    Cifar10,
+pub enum DataShape {
+    /// NCHW image planes, square side.
+    Image { channels: usize, side: usize },
+    /// Flat feature vectors.
+    Flat { dim: usize },
 }
 
-impl DatasetKind {
-    pub fn feature_dim(self) -> usize {
-        match self {
-            DatasetKind::Mnist => 28 * 28,
-            DatasetKind::Cifar10 => 3 * 32 * 32,
+/// Where examples come from when the spec is materialized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum DataSource {
+    /// Real MNIST IDX files if present, else synthetic images.
+    MnistIdx,
+    /// Real CIFAR-10 binary batches if present, else synthetic images.
+    CifarBin,
+    /// Always synthetic.
+    Synthetic,
+}
+
+/// A validated, string-keyed dataset selector (see module docs for the
+/// grammar). Replaces the closed `DatasetKind` enum: new shapes are a
+/// parse call, not a core-enum edit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DatasetSpec {
+    key: String,
+    shape: DataShape,
+    classes: usize,
+    source: DataSource,
+}
+
+/// One entry in the dataset registry: listing metadata plus the parser the
+/// spec string resolves through — `DatasetSpec::parse` dispatches over this
+/// table, so `list-datasets` and `--dataset` cannot drift apart.
+pub struct DatasetFamily {
+    pub key: &'static str,
+    /// Accepted alternate spellings (the paper's names).
+    pub aliases: &'static [&'static str],
+    pub arg_help: &'static str,
+    pub summary: &'static str,
+    pub example: &'static str,
+    parse: fn(&str) -> Result<DatasetSpec, String>,
+}
+
+fn no_arg(name: &str, arg: &str) -> Result<(), String> {
+    if arg.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("dataset '{name}' takes no argument, got '{arg}'"))
+    }
+}
+
+fn parse_mnist(arg: &str) -> Result<DatasetSpec, String> {
+    no_arg("mnist", arg)?;
+    Ok(DatasetSpec::mnist())
+}
+
+fn parse_cifar10(arg: &str) -> Result<DatasetSpec, String> {
+    no_arg("cifar10", arg)?;
+    Ok(DatasetSpec::cifar10())
+}
+
+static DATASET_REGISTRY: [DatasetFamily; 3] = [
+    DatasetFamily {
+        key: "mnist",
+        aliases: &["fedmnist"],
+        arg_help: "-",
+        summary: "FedMNIST: 1x28x28, 10 classes (real IDX files under data/, else synthetic)",
+        example: "mnist",
+        parse: parse_mnist,
+    },
+    DatasetFamily {
+        key: "cifar10",
+        aliases: &["cifar", "fedcifar10"],
+        arg_help: "-",
+        summary: "FedCIFAR10: 3x32x32, 10 classes (real binary batches under data/, else synthetic)",
+        example: "cifar10",
+        parse: parse_cifar10,
+    },
+    DatasetFamily {
+        key: "synthetic",
+        aliases: &[],
+        arg_help: "<ch>x<side>x<side>[-c<classes>] images, or <d>[-c<classes>] flat features",
+        summary: "deterministic synthetic data of any shape (flat = convex-workload features)",
+        example: "synthetic:3x16x16",
+        parse: parse_synthetic,
+    },
+];
+
+/// The dataset registry: every loadable family, keyed by the spec prefix.
+pub fn dataset_registry() -> &'static [DatasetFamily] {
+    &DATASET_REGISTRY
+}
+
+impl DatasetSpec {
+    /// The MNIST-shaped preset (`mnist`).
+    pub fn mnist() -> DatasetSpec {
+        DatasetSpec {
+            key: "mnist".to_string(),
+            shape: DataShape::Image {
+                channels: 1,
+                side: 28,
+            },
+            classes: 10,
+            source: DataSource::MnistIdx,
         }
     }
 
-    pub fn num_classes(self) -> usize {
-        10
+    /// The CIFAR10-shaped preset (`cifar10`).
+    pub fn cifar10() -> DatasetSpec {
+        DatasetSpec {
+            key: "cifar10".to_string(),
+            shape: DataShape::Image {
+                channels: 3,
+                side: 32,
+            },
+            classes: 10,
+            source: DataSource::CifarBin,
+        }
     }
 
-    pub fn parse(s: &str) -> Option<DatasetKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "mnist" | "fedmnist" => Some(DatasetKind::Mnist),
-            "cifar" | "cifar10" | "fedcifar10" => Some(DatasetKind::Cifar10),
-            _ => None,
+    /// Parse a spec string (`<family>[:<argument>]`) against the registry.
+    pub fn parse(spec: &str) -> Result<DatasetSpec, String> {
+        let spec = spec.trim();
+        let (family, arg) = match spec.split_once(':') {
+            Some((f, a)) => (f, a.trim()),
+            None => (spec, ""),
+        };
+        let family = family.trim().to_ascii_lowercase();
+        for fam in dataset_registry() {
+            if fam.key == family || fam.aliases.contains(&family.as_str()) {
+                return (fam.parse)(arg);
+            }
         }
+        let keys: Vec<&str> = dataset_registry().iter().map(|f| f.key).collect();
+        Err(format!(
+            "unknown dataset '{family}' (have: {})",
+            keys.join(", ")
+        ))
+    }
+
+    /// Canonical spec string, e.g. `mnist` or `synthetic:3x16x16-c5`.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Display name (same as the canonical key).
+    pub fn name(&self) -> &str {
+        &self.key
+    }
+
+    pub fn shape(&self) -> DataShape {
+        self.shape
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        match self.shape {
+            DataShape::Image { channels, side } => channels * side * side,
+            DataShape::Flat { dim } => dim,
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    pub(crate) fn source(&self) -> DataSource {
+        self.source
+    }
+
+    /// The default model spec for this dataset (the paper's MLP↔FedMNIST
+    /// and CNN↔FedCIFAR10 pairing, extended to the open registries).
+    pub fn default_model_spec(&self) -> String {
+        match self.source {
+            DataSource::MnistIdx => "mlp".to_string(),
+            DataSource::CifarBin => "cnn".to_string(),
+            DataSource::Synthetic => match self.shape {
+                DataShape::Flat { dim } => format!("softmax:{dim}x{}", self.classes),
+                DataShape::Image { .. } => {
+                    format!("mlp:{}x128x64x{}", self.feature_dim(), self.classes)
+                }
+            },
+        }
+    }
+}
+
+fn parse_synthetic(arg: &str) -> Result<DatasetSpec, String> {
+    if arg.is_empty() {
+        return Err("synthetic needs a shape: <ch>x<side>x<side> or <d> (e.g. synthetic:1x28x28, synthetic:3072)".to_string());
+    }
+    let (dims_str, classes) = match arg.split_once("-c") {
+        Some((d, c)) => (
+            d.trim(),
+            c.trim()
+                .parse::<usize>()
+                .ok()
+                // Labels are stored as u8, so at most 256 classes.
+                .filter(|&c| (2..=256).contains(&c))
+                .ok_or_else(|| format!("bad class count '-c{c}' (want an integer in 2..=256)"))?,
+        ),
+        None => (arg, 10usize),
+    };
+    let dims = crate::util::parse_dims(dims_str, "synthetic shape dimension")?;
+    let (shape, canonical) = match dims.as_slice() {
+        [dim] => (DataShape::Flat { dim: *dim }, format!("{dim}")),
+        [ch, h, w] if h == w => (
+            DataShape::Image {
+                channels: *ch,
+                side: *h,
+            },
+            format!("{ch}x{h}x{w}"),
+        ),
+        [_, h, w] => {
+            return Err(format!(
+                "synthetic images must be square, got {h}x{w}"
+            ))
+        }
+        _ => {
+            return Err(format!(
+                "synthetic shape '{dims_str}' must be <d> or <ch>x<side>x<side>"
+            ))
+        }
+    };
+    let key = if classes == 10 {
+        format!("synthetic:{canonical}")
+    } else {
+        format!("synthetic:{canonical}-c{classes}")
+    };
+    Ok(DatasetSpec {
+        key,
+        shape,
+        classes,
+        source: DataSource::Synthetic,
+    })
+}
+
+impl std::str::FromStr for DatasetSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        DatasetSpec::parse(s)
     }
 }
 
 /// A dense in-memory labelled dataset (row-major features).
 #[derive(Debug, Clone)]
 pub struct Dataset {
-    pub kind: DatasetKind,
+    pub spec: DatasetSpec,
     pub features: Vec<f32>,
     pub labels: Vec<u8>,
     pub feature_dim: usize,
@@ -92,18 +317,18 @@ pub struct TrainTest {
 /// bound the sizes (real data is truncated; synthetic is generated at
 /// exactly these sizes).
 pub fn load_or_synthesize(
-    kind: DatasetKind,
+    spec: &DatasetSpec,
     data_dir: &std::path::Path,
     train_n: usize,
     test_n: usize,
     seed: u64,
 ) -> TrainTest {
-    if let Some(real) = idx::try_load(kind, data_dir, train_n, test_n) {
-        log::info!("loaded real {kind:?} from {}", data_dir.display());
+    if let Some(real) = idx::try_load(spec, data_dir, train_n, test_n) {
+        log::info!("loaded real {} from {}", spec.key(), data_dir.display());
         return real;
     }
     let mut rng = Rng::seed_from_u64(seed);
-    synthetic::generate(kind, train_n, test_n, &mut rng)
+    synthetic::generate(spec, train_n, test_n, &mut rng)
 }
 
 #[cfg(test)]
@@ -111,18 +336,71 @@ mod tests {
     use super::*;
 
     #[test]
-    fn kind_shapes() {
-        assert_eq!(DatasetKind::Mnist.feature_dim(), 784);
-        assert_eq!(DatasetKind::Cifar10.feature_dim(), 3072);
-        assert_eq!(DatasetKind::parse("FedMNIST"), Some(DatasetKind::Mnist));
-        assert_eq!(DatasetKind::parse("cifar10"), Some(DatasetKind::Cifar10));
-        assert_eq!(DatasetKind::parse("imagenet"), None);
+    fn preset_shapes() {
+        assert_eq!(DatasetSpec::mnist().feature_dim(), 784);
+        assert_eq!(DatasetSpec::cifar10().feature_dim(), 3072);
+        assert_eq!(DatasetSpec::parse("FedMNIST").unwrap(), DatasetSpec::mnist());
+        assert_eq!(DatasetSpec::parse("cifar10").unwrap(), DatasetSpec::cifar10());
+        assert_eq!(DatasetSpec::parse("cifar").unwrap().key(), "cifar10");
+        assert!(DatasetSpec::parse("imagenet").is_err());
+    }
+
+    #[test]
+    fn synthetic_specs_parse_and_canonicalize() {
+        let s = DatasetSpec::parse("synthetic:3x16x16").unwrap();
+        assert_eq!(s.key(), "synthetic:3x16x16");
+        assert_eq!(s.feature_dim(), 768);
+        assert_eq!(s.num_classes(), 10);
+        let s = DatasetSpec::parse("synthetic:64-c5").unwrap();
+        assert_eq!(s.key(), "synthetic:64-c5");
+        assert_eq!(s.feature_dim(), 64);
+        assert_eq!(s.num_classes(), 5);
+        assert_eq!(s.shape(), DataShape::Flat { dim: 64 });
+        // Default class count folds out of the canonical key.
+        assert_eq!(
+            DatasetSpec::parse("synthetic:100-c10").unwrap().key(),
+            "synthetic:100"
+        );
+        for bad in [
+            "synthetic",
+            "synthetic:3x16x8",  // non-square
+            "synthetic:3x16",    // 2-D shape
+            "synthetic:0",
+            "synthetic:64-c1",
+            "synthetic:64-c300", // labels are u8: at most 256 classes
+            "synthetic:axb",
+            "mnist:28",          // preset takes no argument
+        ] {
+            assert!(DatasetSpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn registry_examples_parse_and_aliases_resolve() {
+        for fam in dataset_registry() {
+            let spec = DatasetSpec::parse(fam.example)
+                .unwrap_or_else(|e| panic!("{}: {e}", fam.example));
+            assert!(spec.key().starts_with(fam.key), "{}", fam.key);
+            for alias in fam.aliases {
+                assert_eq!(DatasetSpec::parse(alias).unwrap().key(), fam.key, "{alias}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_model_pairing() {
+        assert_eq!(DatasetSpec::mnist().default_model_spec(), "mlp");
+        assert_eq!(DatasetSpec::cifar10().default_model_spec(), "cnn");
+        assert_eq!(
+            DatasetSpec::parse("synthetic:64-c5").unwrap().default_model_spec(),
+            "softmax:64x5"
+        );
     }
 
     #[test]
     fn load_or_synthesize_falls_back() {
         let tt = load_or_synthesize(
-            DatasetKind::Mnist,
+            &DatasetSpec::mnist(),
             std::path::Path::new("/nonexistent"),
             200,
             50,

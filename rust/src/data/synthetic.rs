@@ -13,10 +13,13 @@
 //!   small random translation (±2 px), and adds pixel noise;
 //! * CIFAR-like data correlates the three channels through a class hue.
 //!
-//! Pixel range is [0, 1] after the same normalization the real loaders use,
-//! so model code is agnostic to which source produced the data.
+//! For image shapes the pixel range is [0, 1] after the same normalization
+//! the real loaders use, so model code is agnostic to which source produced
+//! the data. Flat `synthetic:<d>` datasets (Gaussian mixtures for the
+//! convex `linear`/`softmax` workloads) are **unbounded and signed** — do
+//! not assume the [0, 1] invariant for them.
 
-use super::{Dataset, DatasetKind, TrainTest};
+use super::{DataShape, Dataset, DatasetSpec, TrainTest};
 use crate::util::rng::Rng;
 
 const MODES: usize = 3;
@@ -73,13 +76,17 @@ impl Prototype {
     }
 }
 
-/// Generate a train/test pair. Labels are balanced (round-robin) before
-/// shuffling so Dirichlet partitions see the full class palette.
-pub fn generate(kind: DatasetKind, train_n: usize, test_n: usize, rng: &mut Rng) -> TrainTest {
-    let classes = kind.num_classes();
-    let (side, channels) = match kind {
-        DatasetKind::Mnist => (28usize, 1usize),
-        DatasetKind::Cifar10 => (32usize, 3usize),
+/// Generate a train/test pair for any [`DatasetSpec`] shape. Labels are
+/// balanced (round-robin) before shuffling so Dirichlet partitions see the
+/// full class palette. Image shapes use the class-conditional field
+/// generator above; flat shapes use a Gaussian-mixture generator (one
+/// random centroid per class) whose classification objective is convex
+/// under the `linear`/`softmax` models.
+pub fn generate(spec: &DatasetSpec, train_n: usize, test_n: usize, rng: &mut Rng) -> TrainTest {
+    let classes = spec.num_classes();
+    let (side, channels) = match spec.shape() {
+        DataShape::Image { channels, side } => (side, channels),
+        DataShape::Flat { dim } => return generate_flat(spec, dim, train_n, test_n, rng),
     };
     // Build the generator bank once from a derived stream so train and test
     // come from the *same* distribution.
@@ -100,7 +107,7 @@ pub fn generate(kind: DatasetKind, train_n: usize, test_n: usize, rng: &mut Rng)
         .collect();
 
     let make_split = |n: usize, rng: &mut Rng| -> Dataset {
-        let dim = kind.feature_dim();
+        let dim = spec.feature_dim();
         let mut features = vec![0.0f32; n * dim];
         let mut labels = vec![0u8; n];
         // Balanced labels, then shuffle example order.
@@ -118,7 +125,10 @@ pub fn generate(kind: DatasetKind, train_n: usize, test_n: usize, rng: &mut Rng)
             let noise_std = 0.12f32;
             let base = i * dim;
             for ch in 0..channels {
-                let gain = if channels == 1 { 1.0 } else { hues[class][ch] };
+                // Hue triplets cycle for exotic channel counts (the spec
+                // grammar allows any `synthetic:<ch>x<s>x<s>`); 1-channel
+                // data stays unscaled and 3-channel data is unaffected.
+                let gain = if channels == 1 { 1.0 } else { hues[class][ch % 3] };
                 for y in 0..side {
                     for x in 0..side {
                         let v = proto.at(x as i32 + dx, y as i32 + dy) * amp * gain
@@ -129,7 +139,59 @@ pub fn generate(kind: DatasetKind, train_n: usize, test_n: usize, rng: &mut Rng)
             }
         }
         Dataset {
-            kind,
+            spec: spec.clone(),
+            features,
+            labels,
+            feature_dim: dim,
+            num_classes: classes,
+        }
+    };
+
+    let mut train_rng = rng.derive(0x7124);
+    let mut test_rng = rng.derive(0x7E57);
+    TrainTest {
+        train: make_split(train_n, &mut train_rng),
+        test: make_split(test_n, &mut test_rng),
+    }
+}
+
+/// Flat Gaussian-mixture features: one N(0,1) centroid per class, samples
+/// are amplitude-jittered centroids plus isotropic noise. Same derived-RNG
+/// structure as the image path so train and test share the distribution.
+fn generate_flat(
+    spec: &DatasetSpec,
+    dim: usize,
+    train_n: usize,
+    test_n: usize,
+    rng: &mut Rng,
+) -> TrainTest {
+    let classes = spec.num_classes();
+    let mut proto_rng = rng.derive(0xB10B);
+    let means: Vec<Vec<f32>> = (0..classes)
+        .map(|_| {
+            let mut m = vec![0.0f32; dim];
+            proto_rng.fill_normal_f32(&mut m, 0.0, 1.0);
+            m
+        })
+        .collect();
+
+    let make_split = |n: usize, rng: &mut Rng| -> Dataset {
+        let mut features = vec![0.0f32; n * dim];
+        let mut labels = vec![0u8; n];
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for (slot, &i) in order.iter().enumerate() {
+            let class = slot % classes;
+            labels[i] = class as u8;
+            let amp = rng.uniform_range(0.7, 1.3) as f32;
+            let mean = &means[class];
+            let row = &mut features[i * dim..(i + 1) * dim];
+            for (v, &m) in row.iter_mut().zip(mean) {
+                *v = m * amp + rng.normal_f32(0.0, 0.8);
+            }
+        }
+        Dataset {
+            spec: spec.clone(),
             features,
             labels,
             feature_dim: dim,
@@ -149,14 +211,14 @@ pub fn generate(kind: DatasetKind, train_n: usize, test_n: usize, rng: &mut Rng)
 mod tests {
     use super::*;
 
-    fn gen(kind: DatasetKind, n: usize) -> TrainTest {
+    fn gen(spec: &DatasetSpec, n: usize) -> TrainTest {
         let mut rng = Rng::seed_from_u64(42);
-        generate(kind, n, n / 4, &mut rng)
+        generate(spec, n, n / 4, &mut rng)
     }
 
     #[test]
     fn shapes_and_ranges() {
-        let tt = gen(DatasetKind::Mnist, 400);
+        let tt = gen(&DatasetSpec::mnist(), 400);
         assert_eq!(tt.train.len(), 400);
         assert_eq!(tt.train.features.len(), 400 * 784);
         assert!(tt.train.features.iter().all(|&v| (0.0..=1.0).contains(&v)));
@@ -165,15 +227,15 @@ mod tests {
 
     #[test]
     fn labels_balanced() {
-        let tt = gen(DatasetKind::Mnist, 1000);
+        let tt = gen(&DatasetSpec::mnist(), 1000);
         let counts = tt.train.class_counts();
         assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
     }
 
     #[test]
     fn deterministic_given_seed() {
-        let a = gen(DatasetKind::Mnist, 100);
-        let b = gen(DatasetKind::Mnist, 100);
+        let a = gen(&DatasetSpec::mnist(), 100);
+        let b = gen(&DatasetSpec::mnist(), 100);
         assert_eq!(a.train.features, b.train.features);
         assert_eq!(a.train.labels, b.train.labels);
     }
@@ -182,7 +244,7 @@ mod tests {
     fn classes_are_separable_by_centroid() {
         // A nearest-class-centroid classifier on train centroids must beat
         // chance by a wide margin on test — i.e. the task is learnable.
-        let tt = gen(DatasetKind::Mnist, 2000);
+        let tt = gen(&DatasetSpec::mnist(), 2000);
         let d = tt.train.feature_dim;
         let mut centroids = vec![vec![0.0f64; d]; 10];
         let mut counts = [0usize; 10];
@@ -226,7 +288,7 @@ mod tests {
     fn not_trivially_constant_within_class() {
         // Within-class variance must be non-negligible (modes + noise),
         // otherwise the FL dynamics would be unrealistically easy.
-        let tt = gen(DatasetKind::Mnist, 500);
+        let tt = gen(&DatasetSpec::mnist(), 500);
         let (x0, y0) = tt.train.example(0);
         let mut max_dist = 0.0f32;
         for i in 1..tt.train.len() {
@@ -241,13 +303,73 @@ mod tests {
 
     #[test]
     fn cifar_has_three_correlated_channels() {
-        let tt = gen(DatasetKind::Cifar10, 100);
+        let tt = gen(&DatasetSpec::cifar10(), 100);
         assert_eq!(tt.train.feature_dim, 3072);
         let (x, _) = tt.train.example(0);
         let (r, g) = (&x[0..1024], &x[1024..2048]);
         // channels share the spatial field -> strongly correlated
         let corr = correlation(r, g);
         assert!(corr > 0.3, "channel correlation {corr}");
+    }
+
+    #[test]
+    fn exotic_channel_counts_generate_without_panic() {
+        // The spec grammar allows any channel count; hue triplets cycle.
+        let spec = DatasetSpec::parse("synthetic:4x8x8").unwrap();
+        let tt = gen(&spec, 40);
+        assert_eq!(tt.train.feature_dim, 4 * 64);
+        assert!(tt.train.features.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn flat_mixture_is_deterministic_and_centroid_separable() {
+        let spec = DatasetSpec::parse("synthetic:64-c5").unwrap();
+        let a = gen(&spec, 500);
+        let b = gen(&spec, 500);
+        assert_eq!(a.train.features, b.train.features);
+        assert_eq!(a.train.feature_dim, 64);
+        assert_eq!(a.train.num_classes, 5);
+        let counts = a.train.class_counts();
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+        // Nearest-train-centroid classification on test must beat chance
+        // by a wide margin (the mixture is meant to be separable).
+        let d = a.train.feature_dim;
+        let mut centroids = vec![vec![0.0f64; d]; 5];
+        let mut n_per = [0usize; 5];
+        for i in 0..a.train.len() {
+            let (x, y) = a.train.example(i);
+            n_per[y as usize] += 1;
+            for (c, &v) in centroids[y as usize].iter_mut().zip(x) {
+                *c += v as f64;
+            }
+        }
+        for (c, n) in centroids.iter_mut().zip(n_per) {
+            c.iter_mut().for_each(|v| *v /= n as f64);
+        }
+        let mut correct = 0;
+        for i in 0..a.test.len() {
+            let (x, y) = a.test.example(i);
+            let pred = (0..5)
+                .min_by(|&p, &q| {
+                    let dp: f64 = centroids[p]
+                        .iter()
+                        .zip(x)
+                        .map(|(c, &v)| (c - v as f64).powi(2))
+                        .sum();
+                    let dq: f64 = centroids[q]
+                        .iter()
+                        .zip(x)
+                        .map(|(c, &v)| (c - v as f64).powi(2))
+                        .sum();
+                    dp.partial_cmp(&dq).unwrap()
+                })
+                .unwrap();
+            if pred == y as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / a.test.len() as f64;
+        assert!(acc > 0.6, "centroid accuracy too low: {acc}");
     }
 
     fn correlation(a: &[f32], b: &[f32]) -> f64 {

@@ -6,12 +6,11 @@
 
 use super::ExpOptions;
 use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig};
-use crate::model::ModelKind;
 
 pub const DENSITY: f64 = 0.30;
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
-    let trainer = opts.make_trainer(ModelKind::Mlp);
+    let trainer = opts.trainer_for(&RunConfig::default_mnist());
 
     println!("\n=== Figure 9 (left): compressed methods ===");
     // sparseFedAvg at γ=0.1; FedComLoc variants at γ=0.05 (paper §4.7).

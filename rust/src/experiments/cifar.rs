@@ -7,7 +7,6 @@
 
 use super::{fedcomloc_topk_spec, ExpOptions};
 use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig};
-use crate::model::ModelKind;
 
 pub const DENSITIES: [f64; 4] = [1.0, 0.10, 0.30, 0.50];
 pub const TUNE_GRID: [f32; 3] = [0.01, 0.05, 0.1];
@@ -18,7 +17,7 @@ fn spec_for(density: f64) -> AlgorithmSpec {
 }
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
-    let trainer = opts.make_trainer(ModelKind::Cnn);
+    let trainer = opts.trainer_for(&RunConfig::default_cifar());
     println!("\n=== Figure 3: CNN on FedCIFAR10 ===");
 
     println!("\n-- tuned stepsize (grid {TUNE_GRID:?}) --");

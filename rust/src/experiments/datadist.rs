@@ -2,7 +2,7 @@
 
 use super::ExpOptions;
 use crate::data::dirichlet::{partition, render_histogram};
-use crate::data::{synthetic, DatasetKind};
+use crate::data::{synthetic, DatasetSpec};
 use crate::util::rng::Rng;
 
 pub const ALPHAS: [f64; 4] = [0.1, 0.5, 1.0, 1000.0];
@@ -10,7 +10,7 @@ pub const ALPHAS: [f64; 4] = [0.1, 0.5, 1.0, 1000.0];
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
     println!("\n=== Figure 11: class distribution across clients (FedCIFAR10 shapes) ===");
     let mut rng = Rng::seed_from_u64(opts.seed);
-    let data = synthetic::generate(DatasetKind::Cifar10, 5_000, 100, &mut rng).train;
+    let data = synthetic::generate(&DatasetSpec::cifar10(), 5_000, 100, &mut rng).train;
     let mut report = String::new();
     for &alpha in &ALPHAS {
         let mut prng = Rng::seed_from_u64(opts.seed ^ 0xA1FA);

@@ -2,11 +2,10 @@
 
 use super::ExpOptions;
 use crate::fed::{run as fed_run, RunConfig};
-use crate::model::ModelKind;
 
 /// Figure 10: -Com vs -Local vs -Global across densities on FedCIFAR10.
 pub fn run_variants(opts: &ExpOptions) -> anyhow::Result<()> {
-    let trainer = opts.make_trainer(ModelKind::Cnn);
+    let trainer = opts.trainer_for(&RunConfig::default_cifar());
     println!("\n=== Figure 10: FedComLoc variant ablation (FedCIFAR10) ===");
     println!(
         "{:<10}{:>12}{:>12}{:>12}",
@@ -37,7 +36,7 @@ pub fn run_variants(opts: &ExpOptions) -> anyhow::Result<()> {
 
 /// Figure 16: TopK∘Q_r double compression vs single compression on FedMNIST.
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
-    let trainer = opts.make_trainer(ModelKind::Mlp);
+    let trainer = opts.trainer_for(&RunConfig::default_mnist());
     println!("\n=== Figure 16: double compression (TopK then Q_r, FedMNIST) ===");
     let cases: Vec<(&str, &str)> = vec![
         ("K=25% + 4bit", "fedcomloc-com:topk:0.25+q:4"),

@@ -6,14 +6,13 @@
 
 use super::{fedcomloc_topk_spec, ExpOptions};
 use crate::fed::{run as fed_run, RunConfig};
-use crate::model::ModelKind;
 
 pub const ALPHAS: [f64; 6] = [0.1, 0.3, 0.5, 0.7, 0.9, 1.0];
 pub const DENSITIES: [f64; 3] = [1.0, 0.10, 0.50];
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
-    let trainer = opts.make_trainer(ModelKind::Mlp);
     let base = opts.scale_cfg(RunConfig::default_mnist());
+    let trainer = opts.trainer_for(&base);
     let mut grid: Vec<(f64, Vec<Option<f64>>)> = Vec::new();
 
     for &density in &DENSITIES {

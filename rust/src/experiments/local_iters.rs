@@ -6,13 +6,12 @@
 
 use super::ExpOptions;
 use crate::fed::{run as fed_run, RunConfig};
-use crate::model::ModelKind;
 
 pub const PS: [f64; 5] = [0.05, 0.1, 0.2, 0.3, 0.5];
 pub const DENSITY: f64 = 0.30;
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
-    let trainer = opts.make_trainer(ModelKind::Mlp);
+    let trainer = opts.trainer_for(&RunConfig::default_mnist());
     println!("\n=== Figure 8: local-iteration budget (K=30%, τ=0.01) ===");
     println!(
         "{:<8}{:>10}{:>12}{:>14}{:>14}{:>12}",

@@ -21,7 +21,7 @@ pub mod sparsity;
 
 use crate::fed::{AlgorithmSpec, RunConfig};
 use crate::metrics::MetricsLog;
-use crate::model::{LocalTrainer, ModelKind};
+use crate::model::{LocalTrainer, ModelSpec};
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -67,22 +67,25 @@ impl Default for ExpOptions {
 }
 
 impl ExpOptions {
-    /// Build the compute plane for a model family.
+    /// Build the compute plane for a model spec.
     ///
     /// Default policy (measured in EXPERIMENTS.md §Perf): the native plane
     /// wins for the MLP (parallel clients, no engine lock), the XLA plane
-    /// wins for the CNN (optimized convolutions).
-    pub fn make_trainer(&self, model: ModelKind) -> Arc<dyn LocalTrainer> {
+    /// wins for the CNN (optimized convolutions). Parameterized specs have
+    /// no prebuilt artifacts and always run native unless `--trainer pjrt`
+    /// is forced (which then falls back with a warning).
+    pub fn make_trainer(&self, spec: &ModelSpec) -> Arc<dyn LocalTrainer> {
+        let model = spec.build();
         let want_pjrt = match self.trainer.as_str() {
             "native" => false,
             "pjrt" => true,
             _ => {
-                model == ModelKind::Cnn
+                model.artifact_name() == "cnn"
                     && crate::runtime::artifacts_available(&self.artifacts_dir)
             }
         };
         if want_pjrt {
-            match crate::runtime::PjrtTrainer::load(&self.artifacts_dir, model) {
+            match crate::runtime::PjrtTrainer::load(&self.artifacts_dir, &model) {
                 Ok(t) => return Arc::new(t),
                 Err(e) => {
                     log::warn!("PJRT trainer unavailable ({e}); falling back to native");
@@ -90,6 +93,12 @@ impl ExpOptions {
             }
         }
         Arc::new(crate::model::native::NativeTrainer::new(model))
+    }
+
+    /// The compute plane for a run config (its explicit model, or the
+    /// dataset's default pairing).
+    pub fn trainer_for(&self, cfg: &RunConfig) -> Arc<dyn LocalTrainer> {
+        self.make_trainer(&cfg.model_spec())
     }
 
     pub fn scale_cfg(&self, mut cfg: RunConfig) -> RunConfig {
@@ -232,7 +241,17 @@ mod tests {
     #[test]
     fn trainer_policy_native_for_mlp_auto() {
         let opts = ExpOptions::default();
-        let t = opts.make_trainer(ModelKind::Mlp);
-        assert_eq!(t.model(), ModelKind::Mlp);
+        let t = opts.make_trainer(&ModelSpec::parse("mlp").unwrap());
+        assert_eq!(t.model().name(), "mlp");
+    }
+
+    #[test]
+    fn trainer_for_uses_config_model_override() {
+        let opts = ExpOptions::default();
+        let mut cfg = RunConfig::default_mnist();
+        cfg.model = Some(ModelSpec::parse("linear:784").unwrap());
+        let t = opts.trainer_for(&cfg);
+        assert_eq!(t.model().name(), "linear:784");
+        assert_eq!(t.dim(), 784 * 10 + 10);
     }
 }

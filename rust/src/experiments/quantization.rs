@@ -4,9 +4,7 @@
 //! FedCIFAR10 (Fig 15); then r ∈ {8, 16} across Dirichlet α (Figs 7/14).
 
 use super::ExpOptions;
-use crate::data::DatasetKind;
 use crate::fed::{run as fed_run, AlgorithmSpec, RunConfig};
-use crate::model::ModelKind;
 
 pub const BITS: [u32; 4] = [4, 8, 16, 32];
 pub const HET_BITS: [u32; 2] = [8, 16];
@@ -18,7 +16,7 @@ fn spec_for(bits: u32) -> AlgorithmSpec {
 
 pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
     // ---- Figure 5: FedMNIST sweep ----
-    let trainer = opts.make_trainer(ModelKind::Mlp);
+    let trainer = opts.trainer_for(&RunConfig::default_mnist());
     println!("\n=== Figure 5: quantization Q_r on FedMNIST ===");
     let mut base_acc = None;
     for &bits in &BITS {
@@ -55,12 +53,9 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
 
     // ---- Figure 15: FedCIFAR10 sweep ----
     println!("\n=== Figure 15: quantization Q_r on FedCIFAR10 ===");
-    let trainer = opts.make_trainer(ModelKind::Cnn);
+    let trainer = opts.trainer_for(&RunConfig::default_cifar());
     for &bits in &BITS {
-        let cfg = RunConfig {
-            dataset: DatasetKind::Cifar10,
-            ..opts.scale_cfg(RunConfig::default_cifar())
-        };
+        let cfg = opts.scale_cfg(RunConfig::default_cifar());
         log::info!("fig15: r={bits}");
         let log = fed_run(&cfg, trainer.clone(), &spec_for(bits));
         let acc = log.best_accuracy().unwrap_or(0.0);

@@ -6,13 +6,12 @@
 
 use super::{fedcomloc_topk_spec, ExpOptions};
 use crate::fed::{run as fed_run, RunConfig};
-use crate::model::ModelKind;
 use crate::util::stats::format_bytes;
 
 pub const DENSITIES: [f64; 6] = [1.0, 0.10, 0.30, 0.50, 0.70, 0.90];
 
 pub fn run_with_cfg(opts: &ExpOptions, cfg: &RunConfig) -> anyhow::Result<Vec<(f64, f64, u64)>> {
-    let trainer = opts.make_trainer(ModelKind::Mlp);
+    let trainer = opts.trainer_for(cfg);
     let mut results = Vec::new();
     for &density in &DENSITIES {
         let spec = super::algo(&fedcomloc_topk_spec(density))?;

@@ -39,9 +39,9 @@ pub use algorithm::{drive, drive_federation, FedAlgorithm, RoundCtx, RoundOutcom
 use crate::compress::parse_spec;
 use crate::data::dirichlet::{partition, Partition};
 use crate::data::loader::{eval_batches, ClientLoader, EvalBatches};
-use crate::data::{load_or_synthesize, DatasetKind, TrainTest};
+use crate::data::{load_or_synthesize, DatasetSpec, TrainTest};
 use crate::metrics::{MetricsLog, RoundRecord};
-use crate::model::{init_params, LocalTrainer, ModelKind};
+use crate::model::{LocalTrainer, Model, ModelSpec};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use std::sync::{Arc, Mutex};
@@ -249,8 +249,14 @@ impl std::str::FromStr for AlgorithmSpec {
 }
 
 /// Everything a federated run needs (see module docs).
+#[derive(Clone)]
 pub struct RunConfig {
-    pub dataset: DatasetKind,
+    pub dataset: DatasetSpec,
+    /// Model architecture override; `None` pairs the dataset's default
+    /// (the paper's MLP↔FedMNIST / CNN↔FedCIFAR10) via
+    /// [`ModelSpec::for_dataset`]. Keeping this an `Option` makes
+    /// `--dataset`/`--model` overrides order-independent.
+    pub model: Option<ModelSpec>,
     pub train_n: usize,
     pub test_n: usize,
     pub n_clients: usize,
@@ -280,11 +286,20 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// The effective model spec: the explicit override, or the dataset's
+    /// default pairing.
+    pub fn model_spec(&self) -> ModelSpec {
+        self.model
+            .clone()
+            .unwrap_or_else(|| ModelSpec::for_dataset(&self.dataset))
+    }
+
     /// The paper's §4 "Default Configuration", scaled for this testbed (the
     /// full 60k-sample / 500-round setting is reachable via CLI flags).
     pub fn default_mnist() -> RunConfig {
         RunConfig {
-            dataset: DatasetKind::Mnist,
+            dataset: DatasetSpec::mnist(),
+            model: None,
             train_n: 12_000,
             test_n: 2_000,
             n_clients: 100,
@@ -311,7 +326,8 @@ impl RunConfig {
     /// sampled count happened to equal CIFAR's client count.
     pub fn default_cifar() -> RunConfig {
         RunConfig {
-            dataset: DatasetKind::Cifar10,
+            dataset: DatasetSpec::cifar10(),
+            model: None,
             train_n: 4_000,
             test_n: 1_000,
             n_clients: 10,
@@ -346,7 +362,7 @@ pub struct ClientState {
 
 /// Shared run state: data, clients, pool, model params.
 pub struct Federation {
-    pub model: ModelKind,
+    pub model: Model,
     pub trainer: Arc<dyn LocalTrainer>,
     pub clients: Vec<Mutex<ClientState>>,
     pub partition: Partition,
@@ -367,9 +383,35 @@ impl Federation {
             cfg.clients_per_round,
             cfg.n_clients
         );
-        let model = ModelKind::for_dataset(cfg.dataset);
-        assert_eq!(trainer.model(), model, "trainer/model mismatch");
-        let data = load_or_synthesize(cfg.dataset, &cfg.data_dir, cfg.train_n, cfg.test_n, cfg.seed);
+        let want = cfg.model_spec();
+        let model = trainer.model().clone();
+        assert_eq!(
+            model.name(),
+            want.key(),
+            "trainer/model mismatch: config selects '{}' but the trainer computes '{}'",
+            want.key(),
+            model.name()
+        );
+        assert_eq!(
+            model.input_dim(),
+            cfg.dataset.feature_dim(),
+            "model '{}' expects input dim {} but dataset '{}' provides {}",
+            model.name(),
+            model.input_dim(),
+            cfg.dataset.key(),
+            cfg.dataset.feature_dim()
+        );
+        assert_eq!(
+            model.num_classes(),
+            cfg.dataset.num_classes(),
+            "model '{}' emits {} classes but dataset '{}' has {}",
+            model.name(),
+            model.num_classes(),
+            cfg.dataset.key(),
+            cfg.dataset.num_classes()
+        );
+        let data =
+            load_or_synthesize(&cfg.dataset, &cfg.data_dir, cfg.train_n, cfg.test_n, cfg.seed);
         let mut rng = Rng::seed_from_u64(cfg.seed);
         let part = partition(
             &data.train,
@@ -403,7 +445,7 @@ impl Federation {
         } else {
             cfg.threads
         };
-        let x = init_params(model, &mut rng.derive(0x1217));
+        let x = model.init(&mut rng.derive(0x1217));
         Federation {
             model,
             trainer,
@@ -585,7 +627,8 @@ mod tests {
         assert_eq!(cfg.clients_per_round, 10);
         assert!(cfg.clients_per_round <= cfg.n_clients);
         // The fields that used to leak in from the MNIST preset.
-        assert_eq!(cfg.dataset, DatasetKind::Cifar10);
+        assert_eq!(cfg.dataset, DatasetSpec::cifar10());
+        assert_eq!(cfg.model_spec().key(), "cnn");
         assert_eq!(cfg.p, 0.1);
         assert_eq!(cfg.local_steps, 10);
         assert_eq!(cfg.eval_every, 5);
@@ -601,7 +644,8 @@ mod tests {
             test_n: 50,
             ..RunConfig::default_mnist()
         };
-        let trainer = Arc::new(crate::model::native::NativeTrainer::new(ModelKind::Mlp));
+        let trainer =
+            Arc::new(crate::model::native::NativeTrainer::from_spec("mlp").unwrap());
         let _ = Federation::new(&cfg, trainer);
     }
 }

@@ -12,7 +12,10 @@
 //!   transports ([`fed::transport`]) with exact bit accounting
 //!   ([`compress`]), Dirichlet-partitioned data ([`data`]), metrics
 //!   ([`metrics`]) and the experiment registry ([`experiments`]).
-//!   ARCHITECTURE.md documents the three fed-layer APIs.
+//!   Algorithms ([`fed::AlgorithmSpec`]), models ([`model::ModelSpec`]
+//!   over the composable [`model::Layer`] API), and datasets
+//!   ([`data::DatasetSpec`]) are all string-keyed open registries.
+//!   ARCHITECTURE.md documents the fed-layer APIs and both substrates.
 //! * **L2 — `python/compile`**: JAX models (MLP/CNN over flat parameter
 //!   vectors) AOT-lowered to HLO text, executed via [`runtime`] (PJRT).
 //! * **L1 — `python/compile/kernels`**: Pallas kernels (fused dense layer,

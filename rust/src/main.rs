@@ -5,6 +5,8 @@
 //!   experiment        regenerate paper tables/figures (see DESIGN.md §6)
 //!   list-experiments  show the experiment registry
 //!   list-algorithms   show the algorithm registry (spec strings for --algo)
+//!   list-models       show the model registry (spec strings for --model)
+//!   list-datasets     show the dataset registry (spec strings for --dataset)
 //!   data-stats        Figure 11 class-distribution report
 //!   artifacts         inspect artifacts/manifest.json
 //!
@@ -12,10 +14,11 @@
 
 use fedcomloc::cli::Command;
 use fedcomloc::config::{self, presets};
+use fedcomloc::data::dataset_registry;
 use fedcomloc::experiments::{self, ExpOptions};
 use fedcomloc::fed::transport::parse_transport;
 use fedcomloc::fed::{algorithm_registry, run_with_transport, AlgorithmSpec, Variant};
-use fedcomloc::model::ModelKind;
+use fedcomloc::model::model_registry;
 use std::path::PathBuf;
 
 fn main() {
@@ -26,6 +29,8 @@ fn main() {
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("list-experiments") => cmd_list(),
         Some("list-algorithms") => cmd_list_algorithms(),
+        Some("list-models") => cmd_list_models(&argv[1..]),
+        Some("list-datasets") => cmd_list_datasets(&argv[1..]),
         Some("data-stats") => cmd_data_stats(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
         Some("--help") | Some("-h") | None => {
@@ -87,6 +92,8 @@ SUBCOMMANDS:
     experiment        regenerate paper tables/figures
     list-experiments  show the experiment registry
     list-algorithms   show the algorithm registry (spec strings for --algo)
+    list-models       show the model registry (spec strings for --model)
+    list-datasets     show the dataset registry (spec strings for --dataset)
     data-stats        Figure 11 class-distribution report
     artifacts         inspect the AOT artifact manifest
 
@@ -120,7 +127,8 @@ fn train_command() -> Command {
         .opt_default("trainer", "T", "compute plane: auto|native|pjrt", "auto")
         .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
         .opt_default("out", "DIR", "metrics output directory", "results")
-        .opt("dataset", "NAME", "fedmnist|fedcifar10")
+        .opt("dataset", "SPEC", "dataset spec, e.g. mnist | synthetic:3x16x16 (see list-datasets)")
+        .opt("model", "SPEC", "model spec, e.g. mlp:784x512x10 | linear:784 (see list-models; default pairs the dataset)")
         .opt("rounds", "N", "communication rounds")
         .opt("clients", "N", "total clients")
         .opt("sampled", "N", "clients sampled per round")
@@ -200,13 +208,15 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         seed: cfg.seed,
         ..Default::default()
     };
-    let model = ModelKind::for_dataset(cfg.dataset);
-    let trainer = opts.make_trainer(model);
+    let model = cfg.model_spec();
+    let trainer = opts.make_trainer(&model);
 
     println!(
-        "running {} on {:?} ({} clients, {} sampled, {} rounds, α={}, γ={})",
+        "running {} on {} with model {} (d={}; {} clients, {} sampled, {} rounds, α={}, γ={})",
         spec.name(),
-        cfg.dataset,
+        cfg.dataset.key(),
+        model.key(),
+        model.dim(),
         cfg.n_clients,
         cfg.clients_per_round,
         cfg.rounds,
@@ -299,6 +309,49 @@ fn cmd_list_algorithms() -> anyhow::Result<()> {
         println!("{:<18}{:<46}{}", fam.key, arg, fam.summary);
     }
     println!("\nSpec grammar: <key>[:<argument>], e.g. fedcomloc-com:topk:0.25+q:4");
+    Ok(())
+}
+
+fn cmd_list_models(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("fedcomloc list-models", "Show the model registry").flag(
+        "specs",
+        "machine-readable output: one '<model-spec> <dataset-spec>' smoke pair per family",
+    );
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        return Ok(());
+    }
+    if args.flag("specs") {
+        // Consumed by the CI smoke job: every registered family must train.
+        for fam in model_registry() {
+            println!("{} {}", fam.example, fam.example_dataset);
+        }
+        return Ok(());
+    }
+    println!("{:<10}{:<66}{}", "key", "argument", "description");
+    for fam in model_registry() {
+        println!("{:<10}{:<66}{}", fam.key, fam.arg_help, fam.summary);
+    }
+    println!(
+        "\nSpec grammar: <key>[:<argument>], e.g. mlp:784x512x256x10 — pass via --model \
+         (default pairs the dataset: mnist->mlp, cifar10->cnn, flat synthetic->softmax)"
+    );
+    Ok(())
+}
+
+fn cmd_list_datasets(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = Command::new("fedcomloc list-datasets", "Show the dataset registry");
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        return Ok(());
+    }
+    println!("{:<12}{:<70}{}", "key", "argument", "description");
+    for fam in dataset_registry() {
+        println!("{:<12}{:<70}{}", fam.key, fam.arg_help, fam.summary);
+    }
+    println!("\nSpec grammar: <key>[:<argument>], e.g. synthetic:3x16x16-c5 — pass via --dataset");
     Ok(())
 }
 

@@ -1,0 +1,676 @@
+//! The composable layer API: a [`Model`] is a sequence of typed [`Layer`]
+//! descriptors over a single flat f32 parameter vector.
+//!
+//! One [`ParamLayout`] (per-layer weight/bias offsets into the flat vector)
+//! is shared by initialization, the native forward/backward in `ops.rs`,
+//! the masked FedComLoc-Local step, and the PJRT artifact path — there is
+//! no per-model hand-written init or gradient dispatch anymore.
+//!
+//! Numerical contract: for the seed architectures (`mlp`, `cnn` in
+//! `spec.rs`) the generic forward/backward below executes *exactly* the op
+//! sequence of the former hand-written `mlp.rs`/`cnn.rs`, in the same
+//! order, on the same buffers — so initialization is byte-identical and
+//! training metrics are bit-identical across the enum→spec migration
+//! (pinned by `tests/model_layout_golden.rs` and `tests/api_regression.rs`).
+//! The flat layouts also still match `python/compile/models/*.py`.
+
+use super::ops::{self, ConvShape};
+use crate::util::rng::Rng;
+
+/// One stage of a model, described over the flat parameter vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    /// Fully connected `in_dim → out_dim`, weights row-major `[in][out]`
+    /// (forward is `x @ W + b`), optionally followed by ReLU.
+    Dense {
+        in_dim: usize,
+        out_dim: usize,
+        relu: bool,
+    },
+    /// Valid 2-D convolution, stride 1, square kernel, weights OIHW
+    /// flattened to `[out_ch × in_ch·k·k]`, optionally followed by ReLU.
+    /// Activations are NCHW; the output flattens channel-major, so a
+    /// following `Dense` consumes it without an explicit flatten stage.
+    Conv {
+        in_ch: usize,
+        out_ch: usize,
+        in_h: usize,
+        in_w: usize,
+        k: usize,
+        relu: bool,
+    },
+    /// 2×2 max-pool, stride 2, per-plane (no parameters).
+    MaxPool2 {
+        channels: usize,
+        in_h: usize,
+        in_w: usize,
+    },
+}
+
+impl Layer {
+    /// Per-example input length.
+    pub fn in_len(&self) -> usize {
+        match *self {
+            Layer::Dense { in_dim, .. } => in_dim,
+            Layer::Conv {
+                in_ch, in_h, in_w, ..
+            } => in_ch * in_h * in_w,
+            Layer::MaxPool2 {
+                channels,
+                in_h,
+                in_w,
+            } => channels * in_h * in_w,
+        }
+    }
+
+    /// Per-example output length.
+    pub fn out_len(&self) -> usize {
+        match *self {
+            Layer::Dense { out_dim, .. } => out_dim,
+            Layer::Conv {
+                out_ch,
+                in_h,
+                in_w,
+                k,
+                ..
+            } => out_ch * (in_h - k + 1) * (in_w - k + 1),
+            Layer::MaxPool2 {
+                channels,
+                in_h,
+                in_w,
+            } => channels * (in_h / 2) * (in_w / 2),
+        }
+    }
+
+    pub fn weight_count(&self) -> usize {
+        match *self {
+            Layer::Dense {
+                in_dim, out_dim, ..
+            } => in_dim * out_dim,
+            Layer::Conv {
+                in_ch, out_ch, k, ..
+            } => out_ch * in_ch * k * k,
+            Layer::MaxPool2 { .. } => 0,
+        }
+    }
+
+    pub fn bias_count(&self) -> usize {
+        match *self {
+            Layer::Dense { out_dim, .. } => out_dim,
+            Layer::Conv { out_ch, .. } => out_ch,
+            Layer::MaxPool2 { .. } => 0,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.weight_count() + self.bias_count()
+    }
+
+    /// Fan-in for He-normal initialization.
+    pub fn fan_in(&self) -> usize {
+        match *self {
+            Layer::Dense { in_dim, .. } => in_dim,
+            Layer::Conv { in_ch, k, .. } => in_ch * k * k,
+            Layer::MaxPool2 { .. } => 0,
+        }
+    }
+
+    /// Whether a ReLU follows this layer's affine map.
+    pub fn has_relu(&self) -> bool {
+        match *self {
+            Layer::Dense { relu, .. } | Layer::Conv { relu, .. } => relu,
+            Layer::MaxPool2 { .. } => false,
+        }
+    }
+
+    fn conv_shape(&self) -> Option<ConvShape> {
+        match *self {
+            Layer::Conv {
+                in_ch,
+                out_ch,
+                in_h,
+                in_w,
+                k,
+                ..
+            } => Some(ConvShape {
+                in_ch,
+                out_ch,
+                in_h,
+                in_w,
+                k,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Offsets of one layer's parameter blocks in the flat vector. Bias always
+/// directly follows the weight block; parameterless layers get empty spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamSlice {
+    pub weight: (usize, usize),
+    pub bias: (usize, usize),
+}
+
+/// The flat-vector layout of a whole model: one [`ParamSlice`] per layer,
+/// in layer order, densely packed from offset 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamLayout {
+    pub slices: Vec<ParamSlice>,
+    pub dim: usize,
+}
+
+impl ParamLayout {
+    fn for_layers(layers: &[Layer]) -> ParamLayout {
+        let mut slices = Vec::with_capacity(layers.len());
+        let mut off = 0usize;
+        for layer in layers {
+            let wc = layer.weight_count();
+            let bc = layer.bias_count();
+            slices.push(ParamSlice {
+                weight: (off, off + wc),
+                bias: (off + wc, off + wc + bc),
+            });
+            off += wc + bc;
+        }
+        ParamLayout { slices, dim: off }
+    }
+}
+
+/// A validated architecture: named layer sequence + flat parameter layout.
+///
+/// Built from spec strings via [`super::spec::build_model`] /
+/// [`super::spec::ModelSpec`]; cheap to clone (no parameters inside).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    name: String,
+    artifact: String,
+    layers: Vec<Layer>,
+    layout: ParamLayout,
+    input_dim: usize,
+    num_classes: usize,
+}
+
+impl Model {
+    /// Validate layer chaining and build the layout. `name` is the
+    /// canonical spec string; `artifact` is the AOT-manifest family this
+    /// model's compiled programs would be registered under.
+    pub fn new(name: &str, artifact: &str, layers: Vec<Layer>) -> Result<Model, String> {
+        if layers.is_empty() {
+            return Err(format!("model '{name}': needs at least one layer"));
+        }
+        for (i, layer) in layers.iter().enumerate() {
+            // Structural guards first: Conv::out_len subtracts the kernel,
+            // so an oversized kernel must be rejected before out_len runs
+            // (debug builds would otherwise panic on usize underflow).
+            if let Layer::Conv { in_h, in_w, k, .. } = *layer {
+                if k == 0 || k > in_h || k > in_w {
+                    return Err(format!(
+                        "model '{name}': layer {i} kernel {k} exceeds input {in_h}x{in_w}"
+                    ));
+                }
+            }
+            if let Layer::MaxPool2 { in_h, in_w, .. } = *layer {
+                if in_h % 2 != 0 || in_w % 2 != 0 {
+                    return Err(format!(
+                        "model '{name}': layer {i} pools an odd plane ({in_h}x{in_w})"
+                    ));
+                }
+            }
+            if layer.in_len() == 0 || layer.out_len() == 0 {
+                return Err(format!("model '{name}': layer {i} has a zero dimension"));
+            }
+            if i > 0 {
+                let prev = layers[i - 1].out_len();
+                if layer.in_len() != prev {
+                    return Err(format!(
+                        "model '{name}': layer {i} expects input {} but layer {} outputs {prev}",
+                        layer.in_len(),
+                        i - 1
+                    ));
+                }
+            }
+        }
+        let last = layers[layers.len() - 1];
+        let num_classes = match last {
+            Layer::Dense { out_dim, relu: false, .. } => out_dim,
+            _ => {
+                return Err(format!(
+                    "model '{name}': must end in a linear (no-ReLU) dense layer producing logits"
+                ))
+            }
+        };
+        let layout = ParamLayout::for_layers(&layers);
+        Ok(Model {
+            name: name.to_string(),
+            artifact: artifact.to_string(),
+            input_dim: layers[0].in_len(),
+            num_classes,
+            layers,
+            layout,
+        })
+    }
+
+    /// Canonical spec string, e.g. `mlp` or `mlp:784x512x256x10`.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// AOT-manifest family name for the PJRT plane (`mlp`/`cnn` for the
+    /// seed layouts; parameterized specs have no prebuilt artifacts and
+    /// fall back to the native plane).
+    pub fn artifact_name(&self) -> &str {
+        &self.artifact
+    }
+
+    /// Total parameter count d.
+    pub fn dim(&self) -> usize {
+        self.layout.dim
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    /// He-normal weight init (std √(2/fan_in)), zero biases — weight blocks
+    /// are filled in layer order so the RNG stream (and therefore x₀) is
+    /// byte-identical to the seed's per-model init functions.
+    pub fn init(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.dim()];
+        for (layer, slice) in self.layers.iter().zip(&self.layout.slices) {
+            let (w0, w1) = slice.weight;
+            if w1 > w0 {
+                let std = (2.0f32 / layer.fan_in() as f32).sqrt();
+                rng.fill_normal_f32(&mut p[w0..w1], 0.0, std);
+            }
+        }
+        p
+    }
+
+    /// Forward pass for a batch; returns per-layer post-activation buffers
+    /// plus pool argmax bookkeeping (for backward). The last activation
+    /// holds the logits.
+    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> (Vec<Vec<f32>>, Vec<Vec<u32>>) {
+        debug_assert_eq!(params.len(), self.dim());
+        debug_assert_eq!(x.len(), batch * self.input_dim);
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len());
+        let mut args: Vec<Vec<u32>> = Vec::with_capacity(self.layers.len());
+        for (i, (layer, slice)) in self.layers.iter().zip(&self.layout.slices).enumerate() {
+            let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
+            let mut argmax = Vec::new();
+            let mut out = vec![0.0f32; batch * layer.out_len()];
+            match *layer {
+                Layer::Dense {
+                    in_dim,
+                    out_dim,
+                    relu,
+                } => {
+                    let (w0, w1) = slice.weight;
+                    let (b0, b1) = slice.bias;
+                    ops::matmul(input, &params[w0..w1], &mut out, batch, in_dim, out_dim);
+                    ops::add_bias(&mut out, &params[b0..b1], batch, out_dim);
+                    if relu {
+                        ops::relu_inplace(&mut out);
+                    }
+                }
+                Layer::Conv { relu, .. } => {
+                    let s = layer.conv_shape().expect("conv layer");
+                    let (w0, w1) = slice.weight;
+                    let (b0, b1) = slice.bias;
+                    let mut col = vec![0.0f32; s.col_rows() * s.col_cols()];
+                    ops::conv2d_forward(
+                        input,
+                        &params[w0..w1],
+                        &params[b0..b1],
+                        &s,
+                        batch,
+                        &mut out,
+                        &mut col,
+                    );
+                    if relu {
+                        ops::relu_inplace(&mut out);
+                    }
+                }
+                Layer::MaxPool2 {
+                    channels,
+                    in_h,
+                    in_w,
+                } => {
+                    argmax = vec![0u32; out.len()];
+                    ops::maxpool2_forward(input, batch * channels, in_h, in_w, &mut out, &mut argmax);
+                }
+            }
+            acts.push(out);
+            args.push(argmax);
+        }
+        (acts, args)
+    }
+
+    /// Full gradient of the mean softmax-CE loss. Returns (∇f, loss).
+    pub fn grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> (Vec<f32>, f32) {
+        let batch = y.len();
+        let (acts, args) = self.forward(params, x, batch);
+        let logits = &acts[acts.len() - 1];
+        let (loss, mut dz) = ops::softmax_cross_entropy(logits, y, self.num_classes);
+
+        let mut g = vec![0.0f32; self.dim()];
+        for i in (0..self.layers.len()).rev() {
+            let layer = self.layers[i];
+            let slice = self.layout.slices[i];
+            let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
+            let need_dx = i > 0;
+            let mut dx: Option<Vec<f32>> = None;
+            match layer {
+                Layer::Dense {
+                    in_dim, out_dim, ..
+                } => {
+                    let (w0, w1) = slice.weight;
+                    let (b0, b1) = slice.bias;
+                    ops::matmul_at_b(input, &dz, &mut g[w0..w1], in_dim, batch, out_dim);
+                    ops::bias_grad(&dz, &mut g[b0..b1], batch, out_dim);
+                    if need_dx {
+                        let mut d = vec![0.0f32; batch * in_dim];
+                        ops::matmul_a_bt(&dz, &params[w0..w1], &mut d, batch, out_dim, in_dim);
+                        dx = Some(d);
+                    }
+                }
+                Layer::Conv { .. } => {
+                    let s = layer.conv_shape().expect("conv layer");
+                    let (w0, w1) = slice.weight;
+                    let (_, b1) = slice.bias;
+                    let mut col = vec![0.0f32; s.col_rows() * s.col_cols()];
+                    let mut dcol = vec![0.0f32; col.len()];
+                    let mut d = if need_dx {
+                        Some(vec![0.0f32; batch * layer.in_len()])
+                    } else {
+                        None
+                    };
+                    // Weight and bias blocks are adjacent in the layout, so
+                    // one split yields the two disjoint gradient views.
+                    let (gw, gb) = g[w0..b1].split_at_mut(w1 - w0);
+                    ops::conv2d_backward(
+                        input,
+                        &params[w0..w1],
+                        &dz,
+                        &s,
+                        batch,
+                        gw,
+                        gb,
+                        d.as_deref_mut(),
+                        &mut col,
+                        &mut dcol,
+                    );
+                    dx = d;
+                }
+                Layer::MaxPool2 { .. } => {
+                    let mut d = vec![0.0f32; batch * layer.in_len()];
+                    ops::maxpool2_backward(&dz, &args[i], &mut d);
+                    dx = Some(d);
+                }
+            }
+            if let Some(mut d) = dx {
+                // Crossing into layer i−1's output: undo its ReLU (the
+                // stored activation is post-ReLU, so the mask is d > 0).
+                if i > 0 && self.layers[i - 1].has_relu() {
+                    ops::relu_backward_inplace(&mut d, &acts[i - 1]);
+                }
+                dz = d;
+            }
+        }
+        (g, loss)
+    }
+
+    /// (loss_sum, correct) over the first `valid` rows of a batch.
+    pub fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], valid: usize) -> (f64, usize) {
+        let batch = y.len();
+        let (acts, _) = self.forward(params, x, batch);
+        let logits = &acts[acts.len() - 1];
+        (
+            ops::cross_entropy_sum(logits, y, self.num_classes, valid),
+            ops::count_correct(logits, y, self.num_classes, valid),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::build_model;
+
+    fn tiny_mlp() -> Model {
+        build_model("mlp:12x8x5").unwrap()
+    }
+
+    fn toy(model: &Model, batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+        let x: Vec<f32> = (0..batch * model.input_dim())
+            .map(|_| rng.uniform_f32())
+            .collect();
+        let y: Vec<i32> = (0..batch)
+            .map(|_| rng.below(model.num_classes() as u64) as i32)
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn layout_is_dense_and_ordered() {
+        let m = tiny_mlp();
+        assert_eq!(m.dim(), 12 * 8 + 8 + 8 * 5 + 5);
+        let l = m.layout();
+        assert_eq!(l.slices[0].weight, (0, 96));
+        assert_eq!(l.slices[0].bias, (96, 104));
+        assert_eq!(l.slices[1].weight, (104, 144));
+        assert_eq!(l.slices[1].bias, (144, 149));
+        assert_eq!(l.dim, m.dim());
+    }
+
+    #[test]
+    fn invalid_chains_rejected() {
+        // Mismatched chaining.
+        let bad = Model::new(
+            "t",
+            "t",
+            vec![
+                Layer::Dense {
+                    in_dim: 4,
+                    out_dim: 3,
+                    relu: true,
+                },
+                Layer::Dense {
+                    in_dim: 5,
+                    out_dim: 2,
+                    relu: false,
+                },
+            ],
+        );
+        assert!(bad.is_err());
+        // Must end in linear logits.
+        let bad = Model::new(
+            "t",
+            "t",
+            vec![Layer::Dense {
+                in_dim: 4,
+                out_dim: 3,
+                relu: true,
+            }],
+        );
+        assert!(bad.is_err());
+        // Kernel larger than the plane must be an Err, not an underflow
+        // panic (out_len subtracts k).
+        let bad = Model::new(
+            "t",
+            "t",
+            vec![
+                Layer::Conv {
+                    in_ch: 1,
+                    out_ch: 1,
+                    in_h: 3,
+                    in_w: 3,
+                    k: 5,
+                    relu: true,
+                },
+                Layer::Dense {
+                    in_dim: 1,
+                    out_dim: 2,
+                    relu: false,
+                },
+            ],
+        );
+        assert!(bad.is_err());
+        // Odd pooling plane.
+        let bad = Model::new(
+            "t",
+            "t",
+            vec![
+                Layer::MaxPool2 {
+                    channels: 1,
+                    in_h: 5,
+                    in_w: 4,
+                },
+                Layer::Dense {
+                    in_dim: 4,
+                    out_dim: 2,
+                    relu: false,
+                },
+            ],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn init_is_seeded_he_scaled() {
+        let m = tiny_mlp();
+        let a = m.init(&mut Rng::seed_from_u64(1));
+        let b = m.init(&mut Rng::seed_from_u64(1));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), m.dim());
+        // Biases zero.
+        let s = m.layout().slices[0];
+        assert!(a[s.bias.0..s.bias.1].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mlp_gradient_matches_numeric_spot_check() {
+        let m = tiny_mlp();
+        let mut rng = Rng::seed_from_u64(2);
+        let p = m.init(&mut rng);
+        let (x, y) = toy(&m, 3, &mut rng);
+        let (g, loss) = m.grad(&p, &x, &y);
+        assert!(loss > 0.0);
+        let eps = 1e-2f32;
+        for &i in &[0usize, 50, 97, 110, 145] {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let (_, lp) = m.grad(&pp, &x, &y);
+            let mut pm = p.clone();
+            pm[i] -= eps;
+            let (_, lm) = m.grad(&pm, &x, &y);
+            let num = (lp - lm) / (2.0 * eps);
+            let tol = 2e-2 * num.abs().max(0.05);
+            assert!(
+                (num - g[i]).abs() < tol,
+                "param {i}: numeric {num} analytic {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn conv_model_gradient_matches_numeric_spot_check() {
+        // Two conv stages so the Conv backward's *input-gradient* path (dx
+        // through pool into the previous conv's ReLU mask) is numerically
+        // checked — a single-conv chain never exercises it (need_dx is
+        // false at layer 0). 1x16x16 → c4 (12², pool 6²) → c6 (2², pool 1²)
+        // → f16 → 10.
+        let m = build_model("cnn:c4-c6-f16@1x16").unwrap();
+        let mut rng = Rng::seed_from_u64(3);
+        let p = m.init(&mut rng);
+        let (x, y) = toy(&m, 2, &mut rng);
+        let (g, loss) = m.grad(&p, &x, &y);
+        assert!(loss > 0.0);
+        let s = m.layout();
+        let eps = 5e-3f32;
+        let picks = [
+            s.slices[0].weight.0 + 3,  // conv1 weight (reached only via conv2's dx)
+            s.slices[0].bias.0 + 1,    // conv1 bias
+            s.slices[2].weight.0 + 50, // conv2 weight
+            s.slices[2].bias.0 + 2,    // conv2 bias
+            s.slices[4].weight.0 + 20, // fc1 weight
+            s.slices[5].weight.0 + 5,  // logits weight
+            s.slices[5].bias.0 + 2,    // logits bias
+        ];
+        for &i in &picks {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let (_, lp) = m.grad(&pp, &x, &y);
+            let mut pm = p.clone();
+            pm[i] -= eps;
+            let (_, lm) = m.grad(&pm, &x, &y);
+            let num = (lp - lm) / (2.0 * eps);
+            // Finite differences cross ReLU/maxpool kinks.
+            let tol = 0.15 * num.abs().max(0.05);
+            assert!(
+                (num - g[i]).abs() < tol,
+                "param {i}: numeric {num} analytic {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_fixed_batch() {
+        let m = tiny_mlp();
+        let mut rng = Rng::seed_from_u64(4);
+        let mut p = m.init(&mut rng);
+        let (x, y) = toy(&m, 16, &mut rng);
+        let (_, first) = m.grad(&p, &x, &y);
+        let mut last = first;
+        for _ in 0..40 {
+            let (g, l) = m.grad(&p, &x, &y);
+            crate::tensor::axpy(-0.1, &g, &mut p);
+            last = l;
+        }
+        assert!(last < first * 0.5, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn eval_counts_valid_rows_only() {
+        let m = tiny_mlp();
+        let mut rng = Rng::seed_from_u64(5);
+        let p = m.init(&mut rng);
+        let (x, y) = toy(&m, 4, &mut rng);
+        let (l4, _) = m.eval_batch(&p, &x, &y, 4);
+        let (l2, _) = m.eval_batch(&p, &x, &y, 2);
+        assert!(l2 < l4);
+    }
+
+    #[test]
+    fn linear_model_is_a_single_affine_map() {
+        let m = build_model("softmax:6x3").unwrap();
+        assert_eq!(m.layers().len(), 1);
+        assert_eq!(m.dim(), 6 * 3 + 3);
+        let p = m.init(&mut Rng::seed_from_u64(6));
+        // Logits are x @ W + b exactly.
+        let x = vec![1.0f32, 0.0, -1.0, 0.5, 2.0, 0.25];
+        let (acts, _) = m.forward(&p, &x, 1);
+        let logits = &acts[0];
+        for j in 0..3 {
+            let mut want = p[6 * 3 + j];
+            for (i, &xv) in x.iter().enumerate() {
+                want += xv * p[i * 3 + j];
+            }
+            assert!((logits[j] - want).abs() < 1e-5);
+        }
+    }
+}

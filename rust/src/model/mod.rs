@@ -1,79 +1,43 @@
-//! Model definitions and the trainer abstraction.
+//! Model substrate: the composable layer API and the trainer abstraction.
 //!
-//! The paper's two models (Appendix A.1) are expressed over a single flat
-//! f32 parameter vector so the coordinator, compressors and transport treat
-//! model state uniformly:
+//! Architectures are selected through the string-keyed, open
+//! [`spec::ModelSpec`] registry (mirroring `fed::AlgorithmSpec`) and built
+//! as [`layers::Model`] values: typed [`layers::Layer`] descriptors over a
+//! single flat f32 parameter vector with one shared
+//! [`layers::ParamLayout`], so the coordinator, compressors and transport
+//! treat model state uniformly. The paper's two nets (Appendix A.1) are
+//! the registry defaults:
 //!
-//! * **MLP** for FedMNIST — 784 → 128 → 64 → 10, ReLU (d = 109,386);
-//! * **CNN** for FedCIFAR10 — conv5×5(3→32) → pool → conv5×5(32→64) → pool →
-//!   fc 1600→384 → fc 384→192 → fc 192→10, ReLU (d = 744,330), the FedLab
-//!   reference architecture.
+//! * **`mlp`** for FedMNIST — 784 → 128 → 64 → 10, ReLU (d = 109,386);
+//! * **`cnn`** for FedCIFAR10 — conv5×5(3→32) → pool → conv5×5(32→64) →
+//!   pool → fc 1600→384 → fc 384→192 → fc 192→10, ReLU (d = 744,330), the
+//!   FedLab reference architecture;
+//!
+//! and parameterized specs (`mlp:784x512x256x10`, `cnn:c8-f32@3x16`,
+//! `linear:<d>`, `softmax:<d>x<c>`) are first-class — see `spec.rs`.
 //!
 //! Two interchangeable [`LocalTrainer`] implementations execute the local
-//! objective: [`native::NativeTrainer`] (pure Rust, in `ops.rs`) and
-//! `runtime::PjrtTrainer` (AOT-compiled HLO from the JAX/Pallas layers).
+//! objective: [`native::NativeTrainer`] (pure Rust, generic over the layer
+//! sequence via `ops.rs`) and `runtime::PjrtTrainer` (AOT-compiled HLO from
+//! the JAX/Pallas layers, available for the artifact-backed seed layouts).
 //! The parameter memory layout is identical across both — it is pinned down
 //! in `python/compile/models/` and cross-checked by integration tests.
 
-pub mod cnn;
-pub mod mlp;
+pub mod layers;
 pub mod native;
 pub mod ops;
+pub mod spec;
+
+pub use layers::{Layer, Model, ParamLayout, ParamSlice};
+pub use spec::{build_model, model_registry, ModelFamily, ModelSpec};
 
 use crate::data::loader::{Batch, EvalBatches};
-use crate::data::DatasetKind;
 use crate::util::rng::Rng;
-
-/// Which architecture a flat parameter vector parameterizes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ModelKind {
-    Mlp,
-    Cnn,
-}
-
-impl ModelKind {
-    /// The paper pairs MLP↔FedMNIST and CNN↔FedCIFAR10.
-    pub fn for_dataset(d: DatasetKind) -> ModelKind {
-        match d {
-            DatasetKind::Mnist => ModelKind::Mlp,
-            DatasetKind::Cifar10 => ModelKind::Cnn,
-        }
-    }
-
-    /// Total parameter count d.
-    pub fn dim(self) -> usize {
-        match self {
-            ModelKind::Mlp => mlp::DIM,
-            ModelKind::Cnn => cnn::DIM,
-        }
-    }
-
-    pub fn input_dim(self) -> usize {
-        match self {
-            ModelKind::Mlp => 784,
-            ModelKind::Cnn => 3 * 32 * 32,
-        }
-    }
-
-    pub fn num_classes(self) -> usize {
-        10
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            ModelKind::Mlp => "mlp",
-            ModelKind::Cnn => "cnn",
-        }
-    }
-}
 
 /// He-normal weight init, zero biases — shared by both trainers so every
 /// algorithm starts from the identical x₀ given the same seed.
-pub fn init_params(kind: ModelKind, rng: &mut Rng) -> Vec<f32> {
-    match kind {
-        ModelKind::Mlp => mlp::init(rng),
-        ModelKind::Cnn => cnn::init(rng),
-    }
+pub fn init_params(model: &Model, rng: &mut Rng) -> Vec<f32> {
+    model.init(rng)
 }
 
 /// Evaluation result over a test set.
@@ -87,7 +51,8 @@ pub struct EvalResult {
 /// Executes the local objective: gradients, fused Scaffnew steps, and
 /// evaluation. Implementations must be deterministic given their inputs.
 pub trait LocalTrainer: Send + Sync {
-    fn model(&self) -> ModelKind;
+    /// The architecture this trainer computes over.
+    fn model(&self) -> &Model;
 
     fn dim(&self) -> usize {
         self.model().dim()
@@ -155,31 +120,32 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::DatasetSpec;
 
     #[test]
     fn dims_match_paper_appendix_a() {
         // MLP 784->128->64->10
-        assert_eq!(
-            ModelKind::Mlp.dim(),
-            784 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10
-        );
-        assert_eq!(ModelKind::Mlp.dim(), 109_386);
+        let mlp = build_model("mlp").unwrap();
+        assert_eq!(mlp.dim(), 784 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10);
+        assert_eq!(mlp.dim(), 109_386);
         // CNN conv(3->32,5), conv(32->64,5), fc 1600->384->192->10
+        let cnn = build_model("cnn").unwrap();
         assert_eq!(
-            ModelKind::Cnn.dim(),
+            cnn.dim(),
             32 * 3 * 25 + 32 + 64 * 32 * 25 + 64 + 1600 * 384 + 384 + 384 * 192 + 192 + 192 * 10 + 10
         );
-        assert_eq!(ModelKind::Cnn.dim(), 744_330);
+        assert_eq!(cnn.dim(), 744_330);
     }
 
     #[test]
     fn init_is_seeded_and_scaled() {
+        let mlp = build_model("mlp").unwrap();
         let mut r1 = Rng::seed_from_u64(1);
         let mut r2 = Rng::seed_from_u64(1);
-        let a = init_params(ModelKind::Mlp, &mut r1);
-        let b = init_params(ModelKind::Mlp, &mut r2);
+        let a = init_params(&mlp, &mut r1);
+        let b = init_params(&mlp, &mut r2);
         assert_eq!(a, b);
-        assert_eq!(a.len(), ModelKind::Mlp.dim());
+        assert_eq!(a.len(), mlp.dim());
         // He init: first-layer std ≈ sqrt(2/784) ≈ 0.0505
         let w1 = &a[..784 * 128];
         let std = (crate::tensor::norm2_sq(w1) / w1.len() as f64).sqrt();
@@ -190,7 +156,9 @@ mod tests {
 
     #[test]
     fn model_for_dataset() {
-        assert_eq!(ModelKind::for_dataset(DatasetKind::Mnist), ModelKind::Mlp);
-        assert_eq!(ModelKind::for_dataset(DatasetKind::Cifar10), ModelKind::Cnn);
+        let mnist = DatasetSpec::mnist();
+        let cifar = DatasetSpec::cifar10();
+        assert_eq!(ModelSpec::for_dataset(&mnist).key(), "mlp");
+        assert_eq!(ModelSpec::for_dataset(&cifar).key(), "cnn");
     }
 }

@@ -1,42 +1,46 @@
 //! Pure-Rust [`LocalTrainer`]: the PJRT-free twin of the AOT artifacts.
 //!
-//! Used by unit/property tests and fast CPU benches, and as the numeric
+//! Generic over the composable layer API — any registry [`Model`] runs
+//! here, including parameterized specs with no prebuilt artifacts. Used by
+//! unit/property tests and fast CPU benches, and as the numeric
 //! cross-check for the HLO programs (identical parameter layout and loss;
 //! see `rust/tests/integration_fed.rs` and `runtime_artifacts.rs`). The
-//! production path is `runtime::PjrtTrainer`.
+//! production path for the artifact-backed seed layouts is
+//! `runtime::PjrtTrainer`.
 
-use super::{cnn, eval_with, mlp, EvalResult, LocalTrainer, ModelKind};
+use super::{eval_with, EvalResult, LocalTrainer, Model};
 use crate::data::loader::{Batch, EvalBatches};
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct NativeTrainer {
-    kind: ModelKind,
+    model: Model,
 }
 
 impl NativeTrainer {
-    pub fn new(kind: ModelKind) -> Self {
-        Self { kind }
+    pub fn new(model: Model) -> Self {
+        Self { model }
+    }
+
+    /// Build straight from a registry spec string (`"mlp"`, `"linear:784"`, …).
+    pub fn from_spec(spec: &str) -> Result<Self, String> {
+        Ok(Self::new(super::build_model(spec)?))
     }
 }
 
 impl LocalTrainer for NativeTrainer {
-    fn model(&self) -> ModelKind {
-        self.kind
+    fn model(&self) -> &Model {
+        &self.model
     }
 
     fn grad(&self, params: &[f32], batch: &Batch) -> (Vec<f32>, f32) {
-        assert_eq!(params.len(), self.kind.dim());
-        assert_eq!(batch.feature_dim, self.kind.input_dim());
-        match self.kind {
-            ModelKind::Mlp => mlp::grad(params, &batch.x, &batch.y),
-            ModelKind::Cnn => cnn::grad(params, &batch.x, &batch.y),
-        }
+        assert_eq!(params.len(), self.model.dim());
+        assert_eq!(batch.feature_dim, self.model.input_dim());
+        self.model.grad(params, &batch.x, &batch.y)
     }
 
     fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult {
-        eval_with(batches, |batch, valid| match self.kind {
-            ModelKind::Mlp => mlp::eval_batch(params, &batch.x, &batch.y, valid),
-            ModelKind::Cnn => cnn::eval_batch(params, &batch.x, &batch.y, valid),
+        eval_with(batches, |batch, valid| {
+            self.model.eval_batch(params, &batch.x, &batch.y, valid)
         })
     }
 }
@@ -45,7 +49,7 @@ impl LocalTrainer for NativeTrainer {
 mod tests {
     use super::*;
     use crate::data::loader::{eval_batches, ClientLoader};
-    use crate::data::{synthetic, DatasetKind};
+    use crate::data::{synthetic, DatasetSpec};
     use crate::model::init_params;
     use crate::util::rng::Rng;
     use std::sync::Arc;
@@ -53,13 +57,13 @@ mod tests {
     #[test]
     fn train_step_matches_manual_composition() {
         let mut rng = Rng::seed_from_u64(1);
-        let tt = synthetic::generate(DatasetKind::Mnist, 64, 16, &mut rng);
+        let tt = synthetic::generate(&DatasetSpec::mnist(), 64, 16, &mut rng);
         let data = Arc::new(tt.train);
         let mut loader =
             ClientLoader::new(Arc::clone(&data), (0..64).collect(), 8, Rng::seed_from_u64(2));
         let batch = loader.next_batch();
-        let trainer = NativeTrainer::new(ModelKind::Mlp);
-        let params = init_params(ModelKind::Mlp, &mut rng);
+        let trainer = NativeTrainer::from_spec("mlp").unwrap();
+        let params = init_params(trainer.model(), &mut rng);
         let h: Vec<f32> = (0..params.len()).map(|_| rng.normal_f32(0.0, 0.01)).collect();
         let gamma = 0.1;
         let (stepped, loss) = trainer.train_step(&params, &h, &batch, gamma);
@@ -74,13 +78,13 @@ mod tests {
     #[test]
     fn masked_step_uses_compressed_gradient_point() {
         let mut rng = Rng::seed_from_u64(3);
-        let tt = synthetic::generate(DatasetKind::Mnist, 32, 8, &mut rng);
+        let tt = synthetic::generate(&DatasetSpec::mnist(), 32, 8, &mut rng);
         let data = Arc::new(tt.train);
         let mut loader =
             ClientLoader::new(Arc::clone(&data), (0..32).collect(), 8, Rng::seed_from_u64(4));
         let batch = loader.next_batch();
-        let trainer = NativeTrainer::new(ModelKind::Mlp);
-        let params = init_params(ModelKind::Mlp, &mut rng);
+        let trainer = NativeTrainer::from_spec("mlp").unwrap();
+        let params = init_params(trainer.model(), &mut rng);
         let h = vec![0.0f32; params.len()];
         // density=1.0 must equal the unmasked step exactly.
         let (full, _) = trainer.train_step(&params, &h, &batch, 0.1);
@@ -93,15 +97,15 @@ mod tests {
 
     #[test]
     fn federated_local_epochs_learn_on_synthetic_mnist() {
-        // Single-client sanity: 60 local SGD steps should beat chance
-        // accuracy clearly (>30% over 10 classes).
+        // Single-client sanity: 300 local SGD steps should beat chance
+        // accuracy clearly over 10 classes.
         let mut rng = Rng::seed_from_u64(5);
-        let tt = synthetic::generate(DatasetKind::Mnist, 512, 256, &mut rng);
+        let tt = synthetic::generate(&DatasetSpec::mnist(), 512, 256, &mut rng);
         let train = Arc::new(tt.train);
         let mut loader =
             ClientLoader::new(Arc::clone(&train), (0..512).collect(), 32, Rng::seed_from_u64(6));
-        let trainer = NativeTrainer::new(ModelKind::Mlp);
-        let mut params = init_params(ModelKind::Mlp, &mut rng);
+        let trainer = NativeTrainer::from_spec("mlp").unwrap();
+        let mut params = init_params(trainer.model(), &mut rng);
         let h = vec![0.0f32; params.len()];
         for _ in 0..300 {
             let batch = loader.next_batch();
@@ -116,5 +120,32 @@ mod tests {
             result.accuracy
         );
         assert_eq!(result.examples, 256);
+    }
+
+    #[test]
+    fn softmax_regression_learns_on_flat_mixture() {
+        // The convex workload end-to-end on the native plane: softmax
+        // regression over the flat Gaussian mixture.
+        let spec = DatasetSpec::parse("synthetic:64-c5").unwrap();
+        let mut rng = Rng::seed_from_u64(7);
+        let tt = synthetic::generate(&spec, 512, 256, &mut rng);
+        let train = Arc::new(tt.train);
+        let mut loader =
+            ClientLoader::new(Arc::clone(&train), (0..512).collect(), 32, Rng::seed_from_u64(8));
+        let trainer = NativeTrainer::from_spec("softmax:64x5").unwrap();
+        let mut params = init_params(trainer.model(), &mut rng);
+        let h = vec![0.0f32; params.len()];
+        for _ in 0..200 {
+            let batch = loader.next_batch();
+            let (next, _) = trainer.train_step(&params, &h, &batch, 0.1);
+            params = next;
+        }
+        let eb = eval_batches(&tt.test, 64);
+        let result = trainer.eval(&params, &eb);
+        assert!(
+            result.accuracy > 0.7,
+            "accuracy too low: {}",
+            result.accuracy
+        );
     }
 }

@@ -1,0 +1,439 @@
+//! The string-keyed, open model registry (mirrors `fed::AlgorithmSpec`).
+//!
+//! Spec grammar — `<family>[:<argument>]`:
+//!
+//! * `mlp[:<in>x<h1>x…x<out>]` — ReLU MLP over the width chain; bare `mlp`
+//!   is the paper's FedMNIST net `784x128x64x10` (d = 109,386).
+//! * `cnn[:<stages>[@<ch>x<side>[x<classes>]]]` — 5×5-conv stages
+//!   (`c<out_ch>`, each followed by a 2×2 max-pool) then fully connected
+//!   stages (`f<width>`), closed by a linear logits layer; bare `cnn` is
+//!   the FedLab CIFAR net `c32-c64-f384-f192` on 3×32×32 (d = 744,330).
+//! * `linear:<d>` — softmax regression over `d` features, 10 classes: a
+//!   convex objective for exact-rate checks.
+//! * `softmax:<d>x<classes>` — softmax regression with an explicit class
+//!   count.
+//!
+//! Specs canonicalize (`mlp:784x128x64x10` ≡ `mlp`), so registry lookups,
+//! run names, and the AOT artifact mapping stay stable across spellings.
+
+use super::layers::{Layer, Model};
+use crate::data::DatasetSpec;
+
+/// One entry in the string-keyed model registry.
+pub struct ModelFamily {
+    /// Registry key, e.g. `mlp`.
+    pub key: &'static str,
+    /// Help text for the argument after the key, if any.
+    pub arg_help: &'static str,
+    pub summary: &'static str,
+    /// A small runnable spec (used by the CI smoke job).
+    pub example: &'static str,
+    /// A dataset spec the example trains on.
+    pub example_dataset: &'static str,
+    build: fn(&str) -> Result<Model, String>,
+}
+
+/// The seed MLP width chain (paper Appendix A.1; layout pinned by
+/// `python/compile/models/mlp.py`).
+pub const MLP_DEFAULT_WIDTHS: [usize; 4] = [784, 128, 64, 10];
+/// The seed CNN stage chain (FedLab reference net; layout pinned by
+/// `python/compile/models/cnn.py`).
+pub const CNN_DEFAULT_STAGES: &str = "c32-c64-f384-f192";
+/// Convolution kernel side used by every `cnn` spec (the paper's 5×5).
+pub const CNN_KERNEL: usize = 5;
+
+fn parse_widths(arg: &str) -> Result<Vec<usize>, String> {
+    let widths = crate::util::parse_dims(arg, "width")?;
+    if widths.len() < 2 {
+        return Err(format!("need at least input and output widths, got '{arg}'"));
+    }
+    Ok(widths)
+}
+
+fn mlp_from_widths(widths: &[usize]) -> Result<Model, String> {
+    let canonical: Vec<String> = widths.iter().map(|w| w.to_string()).collect();
+    let name = if widths == &MLP_DEFAULT_WIDTHS[..] {
+        "mlp".to_string()
+    } else {
+        format!("mlp:{}", canonical.join("x"))
+    };
+    let mut layers = Vec::with_capacity(widths.len() - 1);
+    for i in 0..widths.len() - 1 {
+        layers.push(Layer::Dense {
+            in_dim: widths[i],
+            out_dim: widths[i + 1],
+            relu: i + 2 < widths.len(),
+        });
+    }
+    Model::new(&name, &name, layers)
+}
+
+fn build_mlp(arg: &str) -> Result<Model, String> {
+    if arg.is_empty() {
+        return mlp_from_widths(&MLP_DEFAULT_WIDTHS);
+    }
+    mlp_from_widths(&parse_widths(arg)?)
+}
+
+fn build_cnn(arg: &str) -> Result<Model, String> {
+    let (stages_str, input_str) = match arg.split_once('@') {
+        Some((s, i)) => (s.trim(), Some(i.trim())),
+        None => (arg.trim(), None),
+    };
+    let stages_str = if stages_str.is_empty() {
+        CNN_DEFAULT_STAGES
+    } else {
+        stages_str
+    };
+    let (in_ch, in_side, classes) = match input_str {
+        None | Some("") => (3usize, 32usize, 10usize),
+        Some(s) => {
+            let dims = crate::util::parse_dims(s, "input dim")?;
+            match dims.as_slice() {
+                [ch, side] => (*ch, *side, 10),
+                [ch, side, classes] if *classes >= 2 => (*ch, *side, *classes),
+                _ => {
+                    return Err(format!(
+                        "bad input spec '{s}' (want <ch>x<side> or <ch>x<side>x<classes>)"
+                    ))
+                }
+            }
+        }
+    };
+
+    let mut conv_chs: Vec<usize> = Vec::new();
+    let mut fc_widths: Vec<usize> = Vec::new();
+    let mut canonical_stages: Vec<String> = Vec::new();
+    for stage in stages_str.split('-') {
+        let stage = stage.trim();
+        if !stage.is_ascii() {
+            return Err(format!("bad stage '{stage}' (want c<channels> or f<width>)"));
+        }
+        let (tag, num) = stage.split_at(stage.len().min(1));
+        let n = num
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| format!("bad stage '{stage}' (want c<channels> or f<width>)"))?;
+        match tag {
+            "c" if fc_widths.is_empty() => conv_chs.push(n),
+            "c" => return Err("conv stages must precede fc stages".to_string()),
+            "f" => fc_widths.push(n),
+            _ => return Err(format!("bad stage '{stage}' (want c<channels> or f<width>)")),
+        }
+        canonical_stages.push(format!("{tag}{n}"));
+    }
+    if canonical_stages.is_empty() {
+        return Err("cnn spec needs at least one stage".to_string());
+    }
+
+    let canonical_stages = canonical_stages.join("-");
+    let is_default_input = in_ch == 3 && in_side == 32 && classes == 10;
+    let name = if canonical_stages == CNN_DEFAULT_STAGES && is_default_input {
+        "cnn".to_string()
+    } else if is_default_input {
+        format!("cnn:{canonical_stages}")
+    } else if classes == 10 {
+        format!("cnn:{canonical_stages}@{in_ch}x{in_side}")
+    } else {
+        format!("cnn:{canonical_stages}@{in_ch}x{in_side}x{classes}")
+    };
+
+    let mut layers = Vec::new();
+    let (mut ch, mut side) = (in_ch, in_side);
+    for &out_ch in &conv_chs {
+        if side < CNN_KERNEL {
+            return Err(format!(
+                "model '{name}': plane shrank to {side}x{side}, below the {CNN_KERNEL}x{CNN_KERNEL} kernel"
+            ));
+        }
+        layers.push(Layer::Conv {
+            in_ch: ch,
+            out_ch,
+            in_h: side,
+            in_w: side,
+            k: CNN_KERNEL,
+            relu: true,
+        });
+        side -= CNN_KERNEL - 1;
+        if side % 2 != 0 || side == 0 {
+            return Err(format!(
+                "model '{name}': conv output plane {side}x{side} is not 2x2-poolable \
+                 (pick a side so that (side - {}) is even)",
+                CNN_KERNEL - 1
+            ));
+        }
+        layers.push(Layer::MaxPool2 {
+            channels: out_ch,
+            in_h: side,
+            in_w: side,
+        });
+        side /= 2;
+        ch = out_ch;
+    }
+    let mut flat = ch * side * side;
+    for &w in &fc_widths {
+        layers.push(Layer::Dense {
+            in_dim: flat,
+            out_dim: w,
+            relu: true,
+        });
+        flat = w;
+    }
+    layers.push(Layer::Dense {
+        in_dim: flat,
+        out_dim: classes,
+        relu: false,
+    });
+    Model::new(&name, &name, layers)
+}
+
+fn build_linear(arg: &str) -> Result<Model, String> {
+    let d = arg
+        .parse::<usize>()
+        .ok()
+        .filter(|&d| d > 0)
+        .ok_or_else(|| format!("linear needs a positive feature dim, got '{arg}'"))?;
+    let name = format!("linear:{d}");
+    Model::new(
+        &name,
+        &name,
+        vec![Layer::Dense {
+            in_dim: d,
+            out_dim: 10,
+            relu: false,
+        }],
+    )
+}
+
+fn build_softmax(arg: &str) -> Result<Model, String> {
+    let err = || format!("softmax needs <d>x<classes>, got '{arg}'");
+    let (d, c) = arg.split_once('x').ok_or_else(err)?;
+    let d = d.parse::<usize>().ok().filter(|&d| d > 0).ok_or_else(err)?;
+    let c = c.parse::<usize>().ok().filter(|&c| c >= 2).ok_or_else(err)?;
+    let name = format!("softmax:{d}x{c}");
+    Model::new(
+        &name,
+        &name,
+        vec![Layer::Dense {
+            in_dim: d,
+            out_dim: c,
+            relu: false,
+        }],
+    )
+}
+
+static MODEL_REGISTRY: [ModelFamily; 4] = [
+    ModelFamily {
+        key: "mlp",
+        arg_help: "<in>x<h1>x...x<out> widths (default: 784x128x64x10)",
+        summary: "ReLU MLP over a width chain (bare 'mlp' = paper FedMNIST net, d=109,386)",
+        example: "mlp:784x64x10",
+        example_dataset: "mnist",
+        build: build_mlp,
+    },
+    ModelFamily {
+        key: "cnn",
+        arg_help: "c<ch>-..-f<w>-..[@<ch>x<side>[x<classes>]] (default: c32-c64-f384-f192)",
+        summary: "5x5-conv+pool stages then fc stages (bare 'cnn' = FedLab CIFAR net, d=744,330)",
+        example: "cnn:c8-f32@3x16",
+        example_dataset: "synthetic:3x16x16",
+        build: build_cnn,
+    },
+    ModelFamily {
+        key: "linear",
+        arg_help: "<d> feature dim (10 classes)",
+        summary: "softmax regression over d features — convex workload for exact-rate checks",
+        example: "linear:784",
+        example_dataset: "mnist",
+        build: build_linear,
+    },
+    ModelFamily {
+        key: "softmax",
+        arg_help: "<d>x<classes>",
+        summary: "softmax regression with an explicit class count (convex)",
+        example: "softmax:64x5",
+        example_dataset: "synthetic:64-c5",
+        build: build_softmax,
+    },
+];
+
+/// The model registry: every buildable architecture family, keyed by the
+/// spec prefix consumed uniformly by the CLI, config, experiments, benches.
+pub fn model_registry() -> &'static [ModelFamily] {
+    &MODEL_REGISTRY
+}
+
+/// Resolve a spec string (`<family>[:<arg>]`) against the registry.
+pub fn build_model(spec: &str) -> Result<Model, String> {
+    let spec = spec.trim();
+    let (family, arg) = match spec.split_once(':') {
+        Some((f, a)) => (f, a.trim()),
+        None => (spec, ""),
+    };
+    let family = family.trim().to_ascii_lowercase();
+    for fam in model_registry() {
+        if fam.key == family {
+            return (fam.build)(arg);
+        }
+    }
+    let keys: Vec<&str> = model_registry().iter().map(|f| f.key).collect();
+    Err(format!("unknown model '{family}' (have: {})", keys.join(", ")))
+}
+
+/// A validated, string-keyed model selector — the registry handle the CLI,
+/// config, experiments, and benches construct models through. Parsing both
+/// validates the spec and canonicalizes it; [`ModelSpec::build`] hands out
+/// the architecture.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    model: Model,
+}
+
+impl ModelSpec {
+    pub fn parse(spec: &str) -> Result<ModelSpec, String> {
+        Ok(ModelSpec {
+            model: build_model(spec)?,
+        })
+    }
+
+    /// Canonical spec string, e.g. `mlp` or `linear:3072`.
+    pub fn key(&self) -> &str {
+        self.model.name()
+    }
+
+    /// Display name (same as the canonical key).
+    pub fn name(&self) -> &str {
+        self.model.name()
+    }
+
+    /// Total parameter count d.
+    pub fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    /// Instantiate the architecture (models are stateless descriptors).
+    pub fn build(&self) -> Model {
+        self.model.clone()
+    }
+
+    /// The paper's pairing, extended to the open registries: MNIST-shaped →
+    /// `mlp`, CIFAR-shaped → `cnn`, flat synthetic → `softmax:<d>x<c>`,
+    /// image synthetic → an MLP sized to the dataset.
+    pub fn for_dataset(ds: &DatasetSpec) -> ModelSpec {
+        let spec = ds.default_model_spec();
+        ModelSpec::parse(&spec)
+            .unwrap_or_else(|e| panic!("default model '{spec}' for dataset '{}': {e}", ds.key()))
+    }
+}
+
+impl PartialEq for ModelSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for ModelSpec {}
+
+impl std::str::FromStr for ModelSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ModelSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_keys_unique_and_examples_build() {
+        let reg = model_registry();
+        let mut keys: Vec<_> = reg.iter().map(|f| f.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), reg.len(), "duplicate registry keys");
+        for fam in reg {
+            let m = build_model(fam.example).unwrap_or_else(|e| panic!("{}: {e}", fam.example));
+            let ds = DatasetSpec::parse(fam.example_dataset)
+                .unwrap_or_else(|e| panic!("{}: {e}", fam.example_dataset));
+            assert_eq!(m.input_dim(), ds.feature_dim(), "{}", fam.key);
+            assert_eq!(m.num_classes(), ds.num_classes(), "{}", fam.key);
+        }
+    }
+
+    #[test]
+    fn seed_specs_canonicalize() {
+        assert_eq!(build_model("mlp").unwrap().name(), "mlp");
+        assert_eq!(build_model("mlp:784x128x64x10").unwrap().name(), "mlp");
+        assert_eq!(build_model("MLP").unwrap().name(), "mlp");
+        assert_eq!(build_model("cnn").unwrap().name(), "cnn");
+        assert_eq!(build_model("cnn:c32-c64-f384-f192").unwrap().name(), "cnn");
+        assert_eq!(build_model("cnn:c32-c64-f384-f192@3x32").unwrap().name(), "cnn");
+        assert_eq!(
+            build_model("mlp:784x512x256x10").unwrap().name(),
+            "mlp:784x512x256x10"
+        );
+        assert_eq!(
+            ModelSpec::parse("mlp:784x128x64x10").unwrap(),
+            ModelSpec::parse("mlp").unwrap()
+        );
+    }
+
+    #[test]
+    fn seed_dims_match_paper_appendix_a() {
+        assert_eq!(build_model("mlp").unwrap().dim(), 109_386);
+        assert_eq!(build_model("cnn").unwrap().dim(), 744_330);
+    }
+
+    #[test]
+    fn parameterized_dims() {
+        assert_eq!(
+            build_model("mlp:784x512x256x10").unwrap().dim(),
+            784 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10
+        );
+        assert_eq!(build_model("linear:3072").unwrap().dim(), 3072 * 10 + 10);
+        assert_eq!(build_model("softmax:100x5").unwrap().dim(), 100 * 5 + 5);
+        // cnn:c8-f32@3x16 — conv 3->8 (16->12), pool (->6), fc 8*36->32->10.
+        let m = build_model("cnn:c8-f32@3x16").unwrap();
+        assert_eq!(
+            m.dim(),
+            8 * 3 * 25 + 8 + (8 * 6 * 6) * 32 + 32 + 32 * 10 + 10
+        );
+        assert_eq!(m.input_dim(), 3 * 16 * 16);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "nope",
+            "mlp:784",
+            "mlp:784x0x10",
+            "mlp:784xabcx10",
+            "linear:0",
+            "linear:abc",
+            "softmax:100",
+            "softmax:100x1",
+            "cnn:x32",
+            "cnn:f32-c8",        // conv after fc
+            "cnn:c8@3x7",        // 7-4=3, odd pre-pool plane
+            "cnn:c8-c8-c8@1x12", // plane shrinks below the kernel
+        ] {
+            assert!(build_model(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn for_dataset_pairs_like_the_paper() {
+        let mnist = DatasetSpec::parse("mnist").unwrap();
+        let cifar = DatasetSpec::parse("cifar10").unwrap();
+        assert_eq!(ModelSpec::for_dataset(&mnist).key(), "mlp");
+        assert_eq!(ModelSpec::for_dataset(&cifar).key(), "cnn");
+        let flat = DatasetSpec::parse("synthetic:64-c5").unwrap();
+        assert_eq!(ModelSpec::for_dataset(&flat).key(), "softmax:64x5");
+        let img = DatasetSpec::parse("synthetic:1x16x16").unwrap();
+        let m = ModelSpec::for_dataset(&img);
+        assert_eq!(m.key(), "mlp:256x128x64x10");
+    }
+}

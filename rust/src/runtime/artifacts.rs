@@ -29,7 +29,7 @@ pub struct ArtifactSpec {
 }
 
 #[derive(Debug, Clone)]
-pub struct ModelSpec {
+pub struct ModelArtifact {
     pub dim: usize,
     pub batch: usize,
     pub eval_batch: usize,
@@ -37,7 +37,7 @@ pub struct ModelSpec {
     pub num_classes: usize,
 }
 
-impl ModelSpec {
+impl ModelArtifact {
     pub fn input_dim(&self) -> usize {
         self.input_shape.iter().product()
     }
@@ -47,7 +47,7 @@ impl ModelSpec {
 pub struct Manifest {
     pub dir: PathBuf,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
-    pub models: BTreeMap<String, ModelSpec>,
+    pub models: BTreeMap<String, ModelArtifact>,
 }
 
 #[derive(Debug)]
@@ -155,7 +155,7 @@ impl Manifest {
                 .collect();
             models.insert(
                 name.clone(),
-                ModelSpec {
+                ModelArtifact {
                     dim: get("dim")?,
                     batch: get("batch")?,
                     eval_batch: get("eval_batch")?,
@@ -182,7 +182,7 @@ impl Manifest {
         Ok(spec)
     }
 
-    pub fn model(&self, name: &str) -> Result<&ModelSpec, ManifestError> {
+    pub fn model(&self, name: &str) -> Result<&ModelArtifact, ManifestError> {
         self.models
             .get(name)
             .ok_or_else(|| ManifestError::Missing(format!("model '{name}'")))

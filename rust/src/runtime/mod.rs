@@ -21,7 +21,7 @@ pub mod artifacts;
 pub mod engine;
 pub mod trainer;
 
-pub use artifacts::{ArtifactSpec, Manifest, ModelSpec, TensorSpec};
+pub use artifacts::{ArtifactSpec, Manifest, ModelArtifact, TensorSpec};
 pub use engine::{Engine, Executable};
 pub use trainer::PjrtTrainer;
 

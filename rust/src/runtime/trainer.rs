@@ -4,56 +4,68 @@
 //! evaluate); each local iteration is exactly one PJRT call. Numerics match
 //! `model::native` (same parameter layout, same loss) up to f32 reduction
 //! order — asserted by `rust/tests/runtime_artifacts.rs`.
+//!
+//! Artifacts are keyed by [`Model::artifact_name`] in the manifest; the
+//! prebuilt set covers the seed `mlp`/`cnn` layouts. Loading any other
+//! registry spec fails with a clear error and callers (e.g.
+//! `experiments::ExpOptions::make_trainer`) fall back to the native plane.
 
 use super::engine::{Engine, Input, RuntimeError};
 use crate::data::loader::{Batch, EvalBatches};
-use crate::model::{eval_with, EvalResult, LocalTrainer, ModelKind};
+use crate::model::{eval_with, EvalResult, LocalTrainer, Model};
 use std::path::Path;
 use std::sync::Arc;
 
 pub struct PjrtTrainer {
     engine: Arc<Engine>,
-    kind: ModelKind,
-    name: &'static str,
+    model: Model,
+    name: String,
     dim: usize,
     batch: usize,
     eval_batch: usize,
 }
 
 impl PjrtTrainer {
-    /// Load and compile this model family's artifacts from `dir`.
-    pub fn load(dir: &Path, kind: ModelKind) -> Result<PjrtTrainer, RuntimeError> {
-        let name = kind.name();
+    /// Load and compile this model's artifacts from `dir`.
+    pub fn load(dir: &Path, model: &Model) -> Result<PjrtTrainer, RuntimeError> {
+        let name = model.artifact_name().to_string();
         let names: Vec<String> = ["train_step", "train_step_local", "grad", "evaluate"]
             .iter()
             .map(|p| format!("{name}_{p}"))
             .collect();
         let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
         let engine = Engine::load(dir, &name_refs)?;
-        let spec = engine.manifest().model(name)?.clone();
-        assert_eq!(
-            spec.dim,
-            kind.dim(),
-            "manifest dim disagrees with rust model layout — rebuild artifacts"
-        );
-        Ok(PjrtTrainer {
-            engine: Arc::new(engine),
-            kind,
-            name,
-            dim: spec.dim,
-            batch: spec.batch,
-            eval_batch: spec.eval_batch,
-        })
+        let spec = engine.manifest().model(&name)?.clone();
+        Self::from_parts(Arc::new(engine), model.clone(), name, spec)
     }
 
     /// Share an existing engine (used by tests that also call the
     /// standalone `quantize` artifact).
-    pub fn from_engine(engine: Arc<Engine>, kind: ModelKind) -> Result<PjrtTrainer, RuntimeError> {
-        let spec = engine.manifest().model(kind.name())?.clone();
+    pub fn from_engine(engine: Arc<Engine>, model: &Model) -> Result<PjrtTrainer, RuntimeError> {
+        let name = model.artifact_name().to_string();
+        let spec = engine.manifest().model(&name)?.clone();
+        Self::from_parts(engine, model.clone(), name, spec)
+    }
+
+    fn from_parts(
+        engine: Arc<Engine>,
+        model: Model,
+        name: String,
+        spec: super::artifacts::ModelArtifact,
+    ) -> Result<PjrtTrainer, RuntimeError> {
+        if spec.dim != model.dim() {
+            return Err(RuntimeError::Xla(format!(
+                "manifest model '{name}' has dim {} but spec '{}' builds dim {} — \
+                 rebuild artifacts for this layout or use the native trainer",
+                spec.dim,
+                model.name(),
+                model.dim()
+            )));
+        }
         Ok(PjrtTrainer {
             engine,
-            kind,
-            name: kind.name(),
+            model,
+            name,
             dim: spec.dim,
             batch: spec.batch,
             eval_batch: spec.eval_batch,
@@ -80,7 +92,7 @@ impl PjrtTrainer {
             "batch size must match compiled executable ({})",
             self.batch
         );
-        assert_eq!(batch.feature_dim, self.kind.input_dim());
+        assert_eq!(batch.feature_dim, self.model.input_dim());
     }
 
     fn unwrap(err: RuntimeError) -> ! {
@@ -89,8 +101,8 @@ impl PjrtTrainer {
 }
 
 impl LocalTrainer for PjrtTrainer {
-    fn model(&self) -> ModelKind {
-        self.kind
+    fn model(&self) -> &Model {
+        &self.model
     }
 
     fn dim(&self) -> usize {

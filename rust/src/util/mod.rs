@@ -11,3 +11,32 @@ pub mod rng;
 pub mod stats;
 pub mod threadpool;
 pub mod toml;
+
+/// Parse an `x`-separated list of positive integers (`"3x16x16"`) — the
+/// shared dimension grammar of the model and dataset spec registries.
+/// `what` names the quantity in error messages.
+pub fn parse_dims(s: &str, what: &str) -> Result<Vec<usize>, String> {
+    s.split('x')
+        .map(|d| {
+            d.trim()
+                .parse::<usize>()
+                .ok()
+                .filter(|&d| d > 0)
+                .ok_or_else(|| format!("bad {what} '{}' in '{s}' (want positive integers)", d.trim()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn parse_dims_accepts_and_rejects() {
+        assert_eq!(super::parse_dims("3x16x16", "dim").unwrap(), vec![3, 16, 16]);
+        assert_eq!(super::parse_dims(" 784 x 10 ", "dim").unwrap(), vec![784, 10]);
+        for bad in ["", "3x0x16", "3xax16", "x", "3x"] {
+            let err = super::parse_dims(bad, "dim");
+            assert!(err.is_err(), "{bad}");
+        }
+        assert!(super::parse_dims("axb", "width").unwrap_err().contains("width"));
+    }
+}

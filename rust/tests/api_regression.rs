@@ -13,7 +13,6 @@ use fedcomloc::fed::scaffnew::next_segment_len;
 use fedcomloc::fed::{run, AlgorithmSpec, Federation, RunConfig};
 use fedcomloc::metrics::MetricsLog;
 use fedcomloc::model::native::NativeTrainer;
-use fedcomloc::model::ModelKind;
 use fedcomloc::tensor;
 use std::sync::Arc;
 
@@ -31,7 +30,7 @@ fn tiny_cfg() -> RunConfig {
 }
 
 fn native() -> Arc<NativeTrainer> {
-    Arc::new(NativeTrainer::new(ModelKind::Mlp))
+    Arc::new(NativeTrainer::from_spec("mlp").unwrap())
 }
 
 /// The deterministic slice of one round the references reproduce.

@@ -2,12 +2,17 @@
 //! compute plane (synthetic FedMNIST, scaled-down configs), through the
 //! `FedAlgorithm` + `Transport` API.
 
-use fedcomloc::data::DatasetKind;
+use fedcomloc::data::DatasetSpec;
 use fedcomloc::fed::transport::{InProc, SimNet, SimNetCfg};
 use fedcomloc::fed::{run, run_with_transport, AlgorithmSpec, RunConfig};
 use fedcomloc::model::native::NativeTrainer;
-use fedcomloc::model::ModelKind;
+use fedcomloc::model::ModelSpec;
 use std::sync::Arc;
+
+/// d of the seed MLP (the registry's `mlp` spec).
+fn mlp_dim() -> usize {
+    ModelSpec::parse("mlp").unwrap().dim()
+}
 
 fn quick_cfg() -> RunConfig {
     RunConfig {
@@ -23,7 +28,7 @@ fn quick_cfg() -> RunConfig {
 }
 
 fn native() -> Arc<NativeTrainer> {
-    Arc::new(NativeTrainer::new(ModelKind::Mlp))
+    Arc::new(NativeTrainer::from_spec("mlp").unwrap())
 }
 
 fn algo(spec: &str) -> AlgorithmSpec {
@@ -38,7 +43,7 @@ fn fedcomloc_com_learns_and_counts_bits() {
     let acc = log.best_accuracy().unwrap();
     assert!(acc > 0.45, "accuracy {acc}");
     // Compressed uplink must be well below dense uplink.
-    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    let dense_bits = 32 * mlp_dim() as u64 * cfg.clients_per_round as u64;
     let r0 = &log.records[0];
     assert!(r0.uplink_bits < dense_bits / 2, "uplink {}", r0.uplink_bits);
     assert_eq!(r0.downlink_bits, dense_bits);
@@ -57,7 +62,7 @@ fn fedcomloc_uncompressed_beats_chance_quickly() {
     let log = run(&cfg, native(), &algo("fedcomloc-com:none"));
     assert!(log.best_accuracy().unwrap() > 0.5);
     // Identity uplink counts full dense bits.
-    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    let dense_bits = 32 * mlp_dim() as u64 * cfg.clients_per_round as u64;
     assert_eq!(log.records[0].uplink_bits, dense_bits);
 }
 
@@ -76,7 +81,7 @@ fn variants_all_run_and_learn() {
             // Downlink compressed after the first aggregation.
             let later = &log.records[3];
             let dense =
-                32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+                32 * mlp_dim() as u64 * cfg.clients_per_round as u64;
             assert!(later.downlink_bits < dense, "downlink {}", later.downlink_bits);
         }
     }
@@ -88,7 +93,7 @@ fn quantized_fedcomloc_learns() {
     let log = run(&cfg, native(), &algo("fedcomloc-com:q:8"));
     assert!(log.best_accuracy().unwrap() > 0.45);
     // 8-bit quantization: ~10 bits/coord on our wire vs 32 dense.
-    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    let dense_bits = 32 * mlp_dim() as u64 * cfg.clients_per_round as u64;
     assert!(log.records[0].uplink_bits < dense_bits / 3 + 64_000);
 }
 
@@ -109,7 +114,7 @@ fn baselines_run_and_learn() {
 fn scaffold_uplink_is_double() {
     let cfg = quick_cfg();
     let log = run(&cfg, native(), &algo("scaffold"));
-    let dense_bits = 32 * ModelKind::Mlp.dim() as u64 * cfg.clients_per_round as u64;
+    let dense_bits = 32 * mlp_dim() as u64 * cfg.clients_per_round as u64;
     assert_eq!(log.records[0].uplink_bits, 2 * dense_bits);
     assert_eq!(log.records[0].downlink_bits, 2 * dense_bits);
 }
@@ -170,7 +175,7 @@ fn smaller_p_means_fewer_comm_rounds_per_iteration() {
 fn dataset_kind_cifar_runs_with_native_cnn() {
     // Tiny CNN smoke (native conv is slow; keep rounds minimal).
     let cfg = RunConfig {
-        dataset: DatasetKind::Cifar10,
+        dataset: DatasetSpec::cifar10(),
         train_n: 320,
         test_n: 64,
         n_clients: 4,
@@ -182,7 +187,7 @@ fn dataset_kind_cifar_runs_with_native_cnn() {
         eval_every: 2,
         ..RunConfig::default_cifar()
     };
-    let trainer = Arc::new(NativeTrainer::new(ModelKind::Cnn));
+    let trainer = Arc::new(NativeTrainer::from_spec("cnn").unwrap());
     let log = run(&cfg, trainer, &algo("fedcomloc-com:topk:0.3"));
     assert_eq!(log.records.len(), 2);
     assert!(log.best_accuracy().is_some());

@@ -1,0 +1,145 @@
+//! Layout-fidelity goldens for the enum→spec migration: the spec-built
+//! `mlp`/`cnn` must reproduce the seed's exact dimensions (d = 109,386 and
+//! 744,330) and **byte-identical** `init_params` output.
+//!
+//! The seed's hand-written per-model init functions were deleted in the
+//! migration, so faithful copies (same constants, same offsets, same RNG
+//! call sequence) are embedded here as references — the same technique
+//! `api_regression.rs` uses for the round-loop drivers. Metric-level bit
+//! identity through the full training loop is pinned separately by
+//! `tests/api_regression.rs`.
+
+use fedcomloc::model::{build_model, init_params, Layer};
+use fedcomloc::util::rng::Rng;
+
+/// Faithful copy of the seed's `model::mlp::init` (784→128→64→10).
+fn reference_mlp_init(rng: &mut Rng) -> Vec<f32> {
+    const IN: usize = 784;
+    const H1: usize = 128;
+    const H2: usize = 64;
+    const OUT: usize = 10;
+    const DIM: usize = IN * H1 + H1 + H1 * H2 + H2 + H2 * OUT + OUT;
+    let w1 = (0, IN * H1);
+    let b1 = (w1.1, w1.1 + H1);
+    let w2 = (b1.1, b1.1 + H1 * H2);
+    let b2 = (w2.1, w2.1 + H2);
+    let w3 = (b2.1, b2.1 + H2 * OUT);
+    let mut p = vec![0.0f32; DIM];
+    rng.fill_normal_f32(&mut p[w1.0..w1.1], 0.0, (2.0f32 / IN as f32).sqrt());
+    rng.fill_normal_f32(&mut p[w2.0..w2.1], 0.0, (2.0f32 / H1 as f32).sqrt());
+    rng.fill_normal_f32(&mut p[w3.0..w3.1], 0.0, (2.0f32 / H2 as f32).sqrt());
+    p
+}
+
+/// Faithful copy of the seed's `model::cnn::init` (FedLab CIFAR net).
+fn reference_cnn_init(rng: &mut Rng) -> Vec<f32> {
+    const IN_CH: usize = 3;
+    const C1: usize = 32;
+    const C2: usize = 64;
+    const K: usize = 5;
+    const FC_IN: usize = C2 * 5 * 5;
+    const F1: usize = 384;
+    const F2: usize = 192;
+    const OUT: usize = 10;
+    const DIM: usize = C1 * IN_CH * K * K
+        + C1
+        + C2 * C1 * K * K
+        + C2
+        + FC_IN * F1
+        + F1
+        + F1 * F2
+        + F2
+        + F2 * OUT
+        + OUT;
+    let wc1 = (0, C1 * IN_CH * K * K);
+    let bc1 = (wc1.1, wc1.1 + C1);
+    let wc2 = (bc1.1, bc1.1 + C2 * C1 * K * K);
+    let bc2 = (wc2.1, wc2.1 + C2);
+    let w3 = (bc2.1, bc2.1 + FC_IN * F1);
+    let b3 = (w3.1, w3.1 + F1);
+    let w4 = (b3.1, b3.1 + F1 * F2);
+    let b4 = (w4.1, w4.1 + F2);
+    let w5 = (b4.1, b4.1 + F2 * OUT);
+    let mut p = vec![0.0f32; DIM];
+    let fan_c1 = (IN_CH * K * K) as f32;
+    let fan_c2 = (C1 * K * K) as f32;
+    rng.fill_normal_f32(&mut p[wc1.0..wc1.1], 0.0, (2.0 / fan_c1).sqrt());
+    rng.fill_normal_f32(&mut p[wc2.0..wc2.1], 0.0, (2.0 / fan_c2).sqrt());
+    rng.fill_normal_f32(&mut p[w3.0..w3.1], 0.0, (2.0f32 / FC_IN as f32).sqrt());
+    rng.fill_normal_f32(&mut p[w4.0..w4.1], 0.0, (2.0f32 / F1 as f32).sqrt());
+    rng.fill_normal_f32(&mut p[w5.0..w5.1], 0.0, (2.0f32 / F2 as f32).sqrt());
+    p
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn spec_mlp_reproduces_seed_dim_and_init_bytes() {
+    let model = build_model("mlp").unwrap();
+    assert_eq!(model.dim(), 109_386);
+    for seed in [1u64, 42, 0xDEAD_BEEF] {
+        let got = init_params(&model, &mut Rng::seed_from_u64(seed));
+        let want = reference_mlp_init(&mut Rng::seed_from_u64(seed));
+        assert_eq!(bits(&got), bits(&want), "mlp init diverged at seed {seed}");
+    }
+    // The explicit spelling of the same layout is the same model.
+    let explicit = build_model("mlp:784x128x64x10").unwrap();
+    assert_eq!(explicit, model);
+}
+
+#[test]
+fn spec_cnn_reproduces_seed_dim_and_init_bytes() {
+    let model = build_model("cnn").unwrap();
+    assert_eq!(model.dim(), 744_330);
+    for seed in [1u64, 42] {
+        let got = init_params(&model, &mut Rng::seed_from_u64(seed));
+        let want = reference_cnn_init(&mut Rng::seed_from_u64(seed));
+        assert_eq!(bits(&got), bits(&want), "cnn init diverged at seed {seed}");
+    }
+    assert_eq!(build_model("cnn:c32-c64-f384-f192").unwrap(), model);
+}
+
+#[test]
+fn seed_layouts_have_the_seed_block_structure() {
+    // The flat layout (offsets of every weight/bias block) must match the
+    // seed's `slices()` constants — this is what `python/compile/models/`
+    // and the AOT manifest pin down.
+    let mlp = build_model("mlp").unwrap();
+    let s = mlp.layout();
+    assert_eq!(s.slices.len(), 3);
+    assert_eq!(s.slices[0].weight, (0, 784 * 128));
+    assert_eq!(s.slices[0].bias, (100_352, 100_480));
+    assert_eq!(s.slices[1].weight, (100_480, 108_672));
+    assert_eq!(s.slices[1].bias, (108_672, 108_736));
+    assert_eq!(s.slices[2].weight, (108_736, 109_376));
+    assert_eq!(s.slices[2].bias, (109_376, 109_386));
+
+    let cnn = build_model("cnn").unwrap();
+    let s = cnn.layout();
+    // conv1, pool, conv2, pool, fc1, fc2, logits = 7 layers (pools empty).
+    assert_eq!(s.slices.len(), 7);
+    assert_eq!(s.slices[0].weight, (0, 2_400)); // 32×3×25
+    assert_eq!(s.slices[0].bias, (2_400, 2_432));
+    assert_eq!(s.slices[1].weight, (2_432, 2_432)); // pool: empty
+    assert_eq!(s.slices[2].weight, (2_432, 53_632)); // 64×32×25
+    assert_eq!(s.slices[2].bias, (53_632, 53_696));
+    assert_eq!(s.slices[4].weight, (53_696, 668_096)); // 1600×384
+    assert_eq!(s.slices[6].bias, (744_320, 744_330));
+    // And the layer chain flattens 64×5×5 = 1600 into fc1.
+    match cnn.layers()[4] {
+        Layer::Dense { in_dim, .. } => assert_eq!(in_dim, 1_600),
+        ref other => panic!("expected dense fc1, got {other:?}"),
+    }
+}
+
+#[test]
+fn parameterized_specs_have_predictable_dims() {
+    assert_eq!(
+        build_model("mlp:784x512x256x10").unwrap().dim(),
+        784 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10
+    );
+    assert_eq!(build_model("linear:3072").unwrap().dim(), 3072 * 10 + 10);
+    assert_eq!(build_model("softmax:100x5").unwrap().dim(), 505);
+}

@@ -282,13 +282,13 @@ fn prop_scaffnew_step_linear_in_h() {
 #[test]
 fn prop_dirichlet_partition_total_and_disjoint() {
     use fedcomloc::data::dirichlet::partition;
-    use fedcomloc::data::{synthetic, DatasetKind};
+    use fedcomloc::data::{synthetic, DatasetSpec};
     check("partition covers exactly once", 12, |g| {
         let n = 300 + g.usize_in(0..=500);
         let clients = 2 + g.usize_in(0..=30);
         let alpha = *g.choose(&[0.1, 0.5, 1.0, 10.0]);
         let mut rng = Rng::seed_from_u64(g.rng().next_u64());
-        let data = synthetic::generate(DatasetKind::Mnist, n, 10, &mut rng).train;
+        let data = synthetic::generate(&DatasetSpec::mnist(), n, 10, &mut rng).train;
         let p = partition(&data, clients, alpha, 1, &mut rng);
         let mut seen = vec![0u8; n];
         for shard in &p.client_indices {

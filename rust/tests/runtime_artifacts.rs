@@ -7,9 +7,13 @@
 //! artifacts. Each also self-skips with a note if the manifest is absent.
 
 use fedcomloc::data::loader::{eval_batches, ClientLoader};
-use fedcomloc::data::{synthetic, DatasetKind};
+use fedcomloc::data::{synthetic, DatasetSpec};
 use fedcomloc::model::native::NativeTrainer;
-use fedcomloc::model::{init_params, LocalTrainer, ModelKind};
+use fedcomloc::model::{build_model, init_params, LocalTrainer, Model};
+
+fn mlp() -> Model {
+    build_model("mlp").unwrap()
+}
 use fedcomloc::runtime::engine::Input;
 use fedcomloc::runtime::{artifacts_available, default_artifacts_dir, Engine, PjrtTrainer};
 use fedcomloc::util::rng::Rng;
@@ -27,7 +31,7 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
 
 fn mnist_batch(batch: usize, seed: u64) -> fedcomloc::data::loader::Batch {
     let mut rng = Rng::seed_from_u64(seed);
-    let tt = synthetic::generate(DatasetKind::Mnist, 256, 64, &mut rng);
+    let tt = synthetic::generate(&DatasetSpec::mnist(), 256, 64, &mut rng);
     let data = Arc::new(tt.train);
     let mut loader = ClientLoader::new(
         Arc::clone(&data),
@@ -42,10 +46,10 @@ fn mnist_batch(batch: usize, seed: u64) -> fedcomloc::data::loader::Batch {
 #[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_grad_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
-    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
-    let native = NativeTrainer::new(ModelKind::Mlp);
+    let pjrt = PjrtTrainer::load(&dir, &mlp()).expect("load artifacts");
+    let native = NativeTrainer::new(mlp());
     let mut rng = Rng::seed_from_u64(7);
-    let params = init_params(ModelKind::Mlp, &mut rng);
+    let params = init_params(&mlp(), &mut rng);
     let batch = mnist_batch(pjrt.batch_size(), 11);
 
     let (g_pjrt, loss_pjrt) = pjrt.grad(&params, &batch);
@@ -71,10 +75,10 @@ fn pjrt_grad_matches_native() {
 #[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_train_step_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
-    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
-    let native = NativeTrainer::new(ModelKind::Mlp);
+    let pjrt = PjrtTrainer::load(&dir, &mlp()).expect("load artifacts");
+    let native = NativeTrainer::new(mlp());
     let mut rng = Rng::seed_from_u64(9);
-    let params = init_params(ModelKind::Mlp, &mut rng);
+    let params = init_params(&mlp(), &mut rng);
     let mut h = vec![0.0f32; params.len()];
     rng.fill_normal_f32(&mut h, 0.0, 0.01);
     let batch = mnist_batch(pjrt.batch_size(), 13);
@@ -90,9 +94,9 @@ fn pjrt_train_step_matches_native() {
 #[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_masked_step_density_one_matches_plain() {
     let Some(dir) = artifacts_dir() else { return };
-    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
+    let pjrt = PjrtTrainer::load(&dir, &mlp()).expect("load artifacts");
     let mut rng = Rng::seed_from_u64(15);
-    let params = init_params(ModelKind::Mlp, &mut rng);
+    let params = init_params(&mlp(), &mut rng);
     let h = vec![0.0f32; params.len()];
     let batch = mnist_batch(pjrt.batch_size(), 17);
     let (plain, _) = pjrt.train_step(&params, &h, &batch, 0.05);
@@ -108,11 +112,11 @@ fn pjrt_masked_step_density_one_matches_plain() {
 #[ignore = "requires AOT artifacts (make artifacts): PJRT plane not built in tier-1 CI"]
 fn pjrt_eval_matches_native() {
     let Some(dir) = artifacts_dir() else { return };
-    let pjrt = PjrtTrainer::load(&dir, ModelKind::Mlp).expect("load artifacts");
-    let native = NativeTrainer::new(ModelKind::Mlp);
+    let pjrt = PjrtTrainer::load(&dir, &mlp()).expect("load artifacts");
+    let native = NativeTrainer::new(mlp());
     let mut rng = Rng::seed_from_u64(21);
-    let params = init_params(ModelKind::Mlp, &mut rng);
-    let tt = synthetic::generate(DatasetKind::Mnist, 64, 300, &mut rng);
+    let params = init_params(&mlp(), &mut rng);
+    let tt = synthetic::generate(&DatasetSpec::mnist(), 64, 300, &mut rng);
     let eb = eval_batches(&tt.test, pjrt.eval_batch_size());
     let r_pjrt = pjrt.eval(&params, &eb);
     let r_native = native.eval(&params, &eb);
@@ -177,7 +181,7 @@ fn pjrt_federated_smoke() {
         eval_batch: 256,
         ..RunConfig::default_mnist()
     };
-    let trainer = Arc::new(PjrtTrainer::load(&dir, ModelKind::Mlp).unwrap());
+    let trainer = Arc::new(PjrtTrainer::load(&dir, &mlp()).unwrap());
     let spec = AlgorithmSpec::parse("fedcomloc-com:topk:0.3").unwrap();
     let log = run(&cfg, trainer, &spec);
     assert_eq!(log.records.len(), 4);

@@ -1,0 +1,70 @@
+//! Registry smoke: every registered model family's example spec must train
+//! end-to-end (2 rounds, tiny config) against its example dataset — a
+//! registry entry that panics at runtime fails here (and in the CI smoke
+//! job, which drives the same pairs through the `fedcomloc train` CLI via
+//! `list-models --specs`).
+
+use fedcomloc::data::DatasetSpec;
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
+use fedcomloc::model::{model_registry, native::NativeTrainer, ModelSpec};
+use std::sync::Arc;
+
+fn tiny_cfg(dataset: DatasetSpec, model: ModelSpec) -> RunConfig {
+    RunConfig {
+        dataset,
+        model: Some(model),
+        train_n: 240,
+        test_n: 60,
+        n_clients: 4,
+        clients_per_round: 2,
+        rounds: 2,
+        p: 0.5,
+        local_steps: 2,
+        batch_size: 16,
+        eval_batch: 32,
+        eval_every: 2,
+        ..RunConfig::default_mnist()
+    }
+}
+
+#[test]
+fn every_registered_model_family_trains_end_to_end() {
+    let algo = AlgorithmSpec::parse("fedcomloc-com:topk:0.3").unwrap();
+    for fam in model_registry() {
+        let model = ModelSpec::parse(fam.example)
+            .unwrap_or_else(|e| panic!("{}: bad example '{}': {e}", fam.key, fam.example));
+        let dataset = DatasetSpec::parse(fam.example_dataset).unwrap_or_else(|e| {
+            panic!("{}: bad example dataset '{}': {e}", fam.key, fam.example_dataset)
+        });
+        let cfg = tiny_cfg(dataset, model.clone());
+        let trainer = Arc::new(NativeTrainer::new(model.build()));
+        let log = run(&cfg, trainer, &algo);
+        assert_eq!(log.records.len(), 2, "{}", fam.key);
+        assert!(log.best_accuracy().is_some(), "{}", fam.key);
+        assert!(
+            log.run_name.contains(model.key()),
+            "{}: run name '{}' should embed the model key",
+            fam.key,
+            log.run_name
+        );
+    }
+}
+
+#[test]
+fn convex_workload_trains_from_specs_alone() {
+    // The ISSUE's acceptance scenario: linear/softmax convex workloads wired
+    // purely through spec strings (no concrete model/dataset types named).
+    for (model, dataset) in [
+        ("linear:784", "mnist"),
+        ("softmax:64x5", "synthetic:64-c5"),
+        ("mlp:784x32x10", "mnist"),
+    ] {
+        let cfg = tiny_cfg(
+            dataset.parse().unwrap(),
+            model.parse().unwrap(),
+        );
+        let trainer = Arc::new(NativeTrainer::from_spec(model).unwrap());
+        let log = run(&cfg, trainer, &AlgorithmSpec::parse("fedavg").unwrap());
+        assert_eq!(log.records.len(), 2, "{model} on {dataset}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Sweep-engine overhead: what the declarative layer costs on top of the
+//! federated runs themselves.
+//!
+//! Reports (a) expansion throughput for every shipped preset, (b) wall
+//! clock for a micro-sweep at 1 vs N workers (the parallel speedup the
+//! one-run-per-worker scheduler buys), and (c) the engine's fixed per-run
+//! overhead versus calling `fed::run_with_transport` directly.
+
+use fedcomloc::fed::transport::parse_transport;
+use fedcomloc::fed::{run_with_transport, AlgorithmSpec};
+use fedcomloc::sweep::{self, SweepOptions, SweepSpec};
+use std::time::Instant;
+
+const MICRO: &str = r#"
+schema = 1
+name = "benchsweep"
+title = "sweep-engine bench"
+
+[base]
+preset = "smoke"
+dataset = "synthetic:32-c4"
+train_n = 400
+test_n = 100
+clients = 6
+sampled = 3
+rounds = 4
+eval_every = 4
+batch_size = 16
+eval_batch = 32
+
+[[grid]]
+algos = ["fedcomloc-com:topk:0.5", "fedcomloc-com:q:8", "fedavg", "scaffold"]
+alphas = [0.3, 0.8]
+"#;
+
+fn out_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedcomloc_bench_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn main() {
+    println!("== Sweep engine: expansion + scheduling overhead ==\n");
+
+    // (a) expansion cost per shipped preset.
+    for preset in sweep::sweep_presets() {
+        let spec = sweep::preset_by_name(preset.name).unwrap().unwrap();
+        let t0 = Instant::now();
+        let units = spec.expand(1.0, None).unwrap();
+        println!(
+            "  expand {:<16} {:>4} runs in {:>10.2?}",
+            preset.name,
+            units.len(),
+            t0.elapsed()
+        );
+    }
+
+    // (b) micro-sweep wall clock at 1 vs auto workers.
+    let spec = SweepSpec::parse_str(MICRO).unwrap();
+    let mut timings = Vec::new();
+    for threads in [1usize, 0] {
+        let out = out_dir(&format!("t{threads}"));
+        let opts = SweepOptions {
+            out_dir: out.clone(),
+            threads,
+            trainer: "native".into(),
+            ..SweepOptions::default()
+        };
+        let t0 = Instant::now();
+        let outcome = sweep::run_sweep(&spec, &opts).unwrap();
+        let wall = t0.elapsed();
+        println!(
+            "\n  sweep x{} runs, threads={threads:<2} {wall:>10.2?}",
+            outcome.executed
+        );
+        timings.push(wall);
+        let _ = std::fs::remove_dir_all(&out);
+    }
+    if timings[1] < timings[0] {
+        println!(
+            "  parallel speedup: {:.2}x",
+            timings[0].as_secs_f64() / timings[1].as_secs_f64()
+        );
+    }
+
+    // (c) engine overhead vs direct runs (single-threaded, same units).
+    let units = spec.expand(1.0, None).unwrap();
+    let t0 = Instant::now();
+    for unit in &units {
+        let algo = AlgorithmSpec::parse(&unit.algo).unwrap();
+        let trainer = fedcomloc::runtime::build_trainer(
+            "native",
+            std::path::Path::new("artifacts"),
+            &unit.cfg.model_spec(),
+        );
+        let mut transport =
+            parse_transport(&unit.transport, unit.cfg.n_clients, unit.cfg.seed).unwrap();
+        let _ = run_with_transport(&unit.cfg, trainer, &algo, transport.as_mut());
+    }
+    let direct = t0.elapsed();
+    println!(
+        "\n  direct fed runs (no sink, no scheduler): {direct:>10.2?}\n  \
+         sweep@1-thread minus direct = sink + scheduling overhead: {:.2?}",
+        timings[0].checked_sub(direct).unwrap_or_default()
+    );
+}

@@ -46,12 +46,26 @@ pub struct Compressed {
 /// instance — see [`decode_payload`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Codec {
+    /// Raw little-endian f32s (32·d bits).
     Dense,
+    /// TopK survivors as ⌈log₂ d⌉-bit indices + 32-bit values.
     SparseIdx,
+    /// TopK survivors as a d-bit occupancy bitmap + 32-bit values.
     SparseBitmap,
-    Quantized { bits: u32, bucket: u32 },
+    /// Bucketed stochastic quantization: per-bucket norm + sign/level bits.
+    Quantized {
+        /// Quantizer bit width r.
+        bits: u32,
+        /// Coordinates per normalization bucket.
+        bucket: u32,
+    },
     /// TopK-then-quantize: sparse index block + quantized value block.
-    SparseQuantized { bits: u32, bucket: u32 },
+    SparseQuantized {
+        /// Quantizer bit width r.
+        bits: u32,
+        /// Survivors per normalization bucket.
+        bucket: u32,
+    },
 }
 
 /// Decode a serialized payload into a dense `dim`-vector from the wire
@@ -112,11 +126,14 @@ pub fn dense_bits(d: usize) -> u64 {
 /// compression": TopK first, then quantize the surviving values.
 #[derive(Debug, Clone)]
 pub struct DoubleCompress {
+    /// The sparsifier applied first.
     pub topk: TopK,
+    /// The quantizer applied to the surviving values.
     pub quant: QuantizeR,
 }
 
 impl DoubleCompress {
+    /// TopK at `density` followed by Q_r at `bits`.
     pub fn new(density: f64, bits: u32) -> Self {
         Self {
             topk: TopK::with_density(density),

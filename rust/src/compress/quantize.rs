@@ -23,8 +23,10 @@ use super::{Codec, Compressed, Compressor};
 use crate::util::bitio::{bits_for, BitReader, BitWriter};
 use crate::util::rng::Rng;
 
+/// Default normalization-bucket size (coordinates per bucket norm).
 pub const DEFAULT_BUCKET: usize = 1024;
 
+/// The unbiased stochastic quantizer Q_r (Definition 3.2).
 #[derive(Debug, Clone, Copy)]
 pub struct QuantizeR {
     /// Number of quantization bits r (levels = 2^r), 1..=32.
@@ -34,10 +36,12 @@ pub struct QuantizeR {
 }
 
 impl QuantizeR {
+    /// Q_r at the default bucket size.
     pub fn new(bits: u32) -> Self {
         Self::with_bucket(bits, DEFAULT_BUCKET)
     }
 
+    /// Q_r with an explicit normalization-bucket size.
     pub fn with_bucket(bits: u32, bucket_size: usize) -> Self {
         assert!((1..=32).contains(&bits), "bits in 1..=32");
         assert!(bucket_size > 0);

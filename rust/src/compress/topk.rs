@@ -17,6 +17,7 @@ use super::{Codec, Compressed, Compressor};
 use crate::util::bitio::{bits_for, BitReader, BitWriter};
 use crate::util::rng::Rng;
 
+/// The biased TopK sparsifier (Definition 3.1).
 #[derive(Debug, Clone, Copy)]
 pub struct TopK {
     /// Density ratio in (0, 1]: the paper specifies K as "the enforced
@@ -29,6 +30,7 @@ pub struct TopK {
 }
 
 impl TopK {
+    /// TopK keeping `density · d` coordinates (density in (0, 1]).
     pub fn with_density(density: f64) -> Self {
         assert!(density > 0.0 && density <= 1.0, "density in (0,1]");
         Self {
@@ -37,6 +39,7 @@ impl TopK {
         }
     }
 
+    /// TopK keeping exactly `k` coordinates regardless of dimension.
     pub fn with_k(k: usize) -> Self {
         assert!(k > 0);
         Self {

@@ -21,11 +21,20 @@ use crate::model::ModelSpec;
 use crate::util::toml::{self, TomlValue};
 use std::path::Path;
 
+/// Failure loading or applying a configuration source.
 #[derive(Debug)]
 pub enum ConfigError {
+    /// The config file could not be read.
     Io(std::path::PathBuf, std::io::Error),
+    /// The config file is not valid TOML.
     Toml(toml::TomlError),
-    Invalid { key: String, reason: String },
+    /// A key exists but its value was rejected.
+    Invalid {
+        /// The offending key (or CLI flag).
+        key: String,
+        /// Why the value was rejected.
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -61,6 +70,7 @@ pub fn apply_toml(cfg: &mut RunConfig, doc: &toml::TomlDoc) -> Result<(), Config
     Ok(())
 }
 
+/// Load a TOML file and apply its `[run]` table onto `cfg`.
 pub fn load_file(cfg: &mut RunConfig, path: &Path) -> Result<(), ConfigError> {
     let text =
         std::fs::read_to_string(path).map_err(|e| ConfigError::Io(path.to_path_buf(), e))?;
@@ -68,7 +78,11 @@ pub fn load_file(cfg: &mut RunConfig, path: &Path) -> Result<(), ConfigError> {
     apply_toml(cfg, &doc)
 }
 
-fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(), String> {
+/// Apply one `[run]`-table key onto a [`RunConfig`]. This is the single
+/// schema point for run-level settings: the TOML loader, the CLI override
+/// layer, and the sweep engine's fixed/axis values all dispatch here, so a
+/// key accepted in one place is accepted everywhere.
+pub fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(), String> {
     let as_usize = || value.as_usize().ok_or_else(|| "expected integer".to_string());
     let as_f64 = || value.as_f64().ok_or_else(|| "expected number".to_string());
     match key {
@@ -101,6 +115,19 @@ fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(), Str
         other => return Err(format!("unknown key '{other}'")),
     }
     Ok(())
+}
+
+/// Apply the `--scale` factor shared by `fedcomloc experiment` and
+/// `fedcomloc sweep run`: multiply rounds and dataset sizes toward the
+/// paper's full configuration, with floors keeping tiny factors runnable.
+/// One definition so the experiment alias layer and the sweep engine can
+/// never drift apart.
+pub fn apply_scale(cfg: &mut RunConfig, scale: f64) {
+    if (scale - 1.0).abs() > 1e-9 {
+        cfg.rounds = ((cfg.rounds as f64 * scale).round() as usize).max(2);
+        cfg.train_n = ((cfg.train_n as f64 * scale).round() as usize).max(500);
+        cfg.test_n = ((cfg.test_n as f64 * scale).round() as usize).max(100);
+    }
 }
 
 /// Apply `--key value` style CLI overrides (see `fedcomloc train --help`).

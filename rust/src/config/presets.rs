@@ -7,6 +7,7 @@
 use crate::data::DatasetSpec;
 use crate::fed::RunConfig;
 
+/// Resolve a preset name to its full [`RunConfig`] (None if unknown).
 pub fn by_name(name: &str) -> Option<RunConfig> {
     match name {
         "scaled-mnist" => Some(RunConfig::default_mnist()),
@@ -64,6 +65,7 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
     }
 }
 
+/// Every preset name, in help-text order.
 pub fn names() -> &'static [&'static str] {
     &["scaled-mnist", "scaled-cifar", "paper-mnist", "paper-cifar", "smoke"]
 }

@@ -12,11 +12,14 @@ use crate::util::rng::Rng;
 /// Partition result: per-client example indices into the source dataset.
 #[derive(Debug, Clone)]
 pub struct Partition {
+    /// Example indices per client, in client order.
     pub client_indices: Vec<Vec<usize>>,
+    /// The Dirichlet concentration this partition was drawn with.
     pub alpha: f64,
 }
 
 impl Partition {
+    /// Number of clients the data was split over.
     pub fn num_clients(&self) -> usize {
         self.client_indices.len()
     }

@@ -13,9 +13,13 @@ use std::sync::Arc;
 /// i32 labels (the HLO programs take i32 label inputs).
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Row-major features, `batch_size × feature_dim`.
     pub x: Vec<f32>,
+    /// One i32 label per row.
     pub y: Vec<i32>,
+    /// Rows in this batch (always the configured size).
     pub batch_size: usize,
+    /// Features per row.
     pub feature_dim: usize,
 }
 
@@ -30,6 +34,7 @@ pub struct ClientLoader {
 }
 
 impl ClientLoader {
+    /// A loader over `indices` into `data`, with its own shuffle stream.
     pub fn new(data: Arc<Dataset>, indices: Vec<usize>, batch_size: usize, rng: Rng) -> Self {
         assert!(batch_size > 0);
         assert!(!indices.is_empty(), "client shard must be non-empty");
@@ -44,6 +49,7 @@ impl ClientLoader {
         loader
     }
 
+    /// Number of examples in this client's shard.
     pub fn shard_len(&self) -> usize {
         self.indices.len()
     }
@@ -82,11 +88,13 @@ impl ClientLoader {
 /// repeating the final example; `valid` reports how many rows of the last
 /// chunk are real so accuracy aggregation can ignore the padding.
 pub struct EvalBatches {
+    /// The fixed-size chunks, padded at the tail.
     pub batches: Vec<Batch>,
     /// Valid row count per batch (== batch_size except possibly the last).
     pub valid: Vec<usize>,
 }
 
+/// Pre-batch an evaluation set (see [`EvalBatches`] for the padding rule).
 pub fn eval_batches(data: &Dataset, batch_size: usize) -> EvalBatches {
     assert!(batch_size > 0);
     assert!(!data.is_empty());

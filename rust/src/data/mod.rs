@@ -31,9 +31,17 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DataShape {
     /// NCHW image planes, square side.
-    Image { channels: usize, side: usize },
+    Image {
+        /// Channel count.
+        channels: usize,
+        /// Plane side length.
+        side: usize,
+    },
     /// Flat feature vectors.
-    Flat { dim: usize },
+    Flat {
+        /// Feature dimension.
+        dim: usize,
+    },
 }
 
 /// Where examples come from when the spec is materialized.
@@ -62,11 +70,15 @@ pub struct DatasetSpec {
 /// spec string resolves through — `DatasetSpec::parse` dispatches over this
 /// table, so `list-datasets` and `--dataset` cannot drift apart.
 pub struct DatasetFamily {
+    /// Registry key, e.g. `mnist`.
     pub key: &'static str,
     /// Accepted alternate spellings (the paper's names).
     pub aliases: &'static [&'static str],
+    /// Help text for the argument after the key, if any.
     pub arg_help: &'static str,
+    /// One-line description shown by `list-datasets`.
     pub summary: &'static str,
+    /// A small loadable spec (smoke tests, docs).
     pub example: &'static str,
     parse: fn(&str) -> Result<DatasetSpec, String>,
 }
@@ -178,10 +190,12 @@ impl DatasetSpec {
         &self.key
     }
 
+    /// Feature geometry (image planes or flat vectors).
     pub fn shape(&self) -> DataShape {
         self.shape
     }
 
+    /// Flattened per-example feature count.
     pub fn feature_dim(&self) -> usize {
         match self.shape {
             DataShape::Image { channels, side } => channels * side * side,
@@ -189,6 +203,7 @@ impl DatasetSpec {
         }
     }
 
+    /// Label classes.
     pub fn num_classes(&self) -> usize {
         self.classes
     }
@@ -274,22 +289,30 @@ impl std::str::FromStr for DatasetSpec {
 /// A dense in-memory labelled dataset (row-major features).
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// The spec this data materializes.
     pub spec: DatasetSpec,
+    /// Row-major example features, `len() × feature_dim`.
     pub features: Vec<f32>,
+    /// One label per example.
     pub labels: Vec<u8>,
+    /// Per-example feature count.
     pub feature_dim: usize,
+    /// Label classes.
     pub num_classes: usize,
 }
 
 impl Dataset {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset holds no examples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Features and label of example `i`.
     pub fn example(&self, i: usize) -> (&[f32], u8) {
         let lo = i * self.feature_dim;
         (&self.features[lo..lo + self.feature_dim], self.labels[i])
@@ -308,7 +331,9 @@ impl Dataset {
 /// Train/test pair.
 #[derive(Debug, Clone)]
 pub struct TrainTest {
+    /// Training split.
     pub train: Dataset,
+    /// Held-out test split.
     pub test: Dataset,
 }
 

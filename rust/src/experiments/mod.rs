@@ -1,38 +1,34 @@
-//! Experiment registry: one entry per paper table/figure (DESIGN.md §6).
+//! Experiment registry: one entry per paper table/figure, each a **named
+//! sweep preset** (see [`crate::sweep`]) rather than a hand-written module.
 //!
-//! Each experiment regenerates its table's rows / figure's data series,
-//! prints them in the paper's format, and saves the full per-round metrics
-//! (CSV + JSON) under `results/<experiment>/`. Absolute numbers differ from
-//! the paper (synthetic data, scaled rounds — DESIGN.md §5); the *shape* —
-//! orderings, rough factors, crossovers — is the reproduction target and is
-//! what EXPERIMENTS.md records.
+//! The eight bespoke experiment modules the reproduction started with are
+//! retired: every training experiment is now a shipped TOML under
+//! `experiments/` at the repository root, expanded and executed by the
+//! declarative sweep engine. `fedcomloc experiment --id <id>` is a thin
+//! alias for `fedcomloc sweep run --preset <name>`; EXPERIMENTS.md maps
+//! every paper figure to its TOML, exact CLI invocation, output files, and
+//! the summary column that reproduces the figure's y-axis.
 //!
-//! Scaling: `--scale f` multiplies rounds/dataset sizes toward the paper's
-//! full configuration (`--preset paper-mnist` restores it exactly).
+//! Absolute numbers differ from the paper (synthetic data, scaled rounds —
+//! DESIGN.md §5); the *shape* — orderings, rough factors, crossovers — is
+//! the reproduction target. `--scale f` multiplies rounds/dataset sizes
+//! toward the paper's full configuration.
+//!
+//! The one non-sweep entry is Figure 11 ([`data_stats`]): a class-histogram
+//! report over Dirichlet partitions, not a training run.
 
-pub mod baselines;
-pub mod cifar;
-pub mod datadist;
-pub mod double;
-pub mod heterogeneity;
-pub mod local_iters;
-pub mod quantization;
-pub mod sparsity;
-
-use crate::fed::{AlgorithmSpec, RunConfig};
+use crate::data::dirichlet::{partition, render_histogram};
+use crate::data::{synthetic, DatasetSpec};
+use crate::fed::RunConfig;
 use crate::metrics::MetricsLog;
 use crate::model::{LocalTrainer, ModelSpec};
+use crate::sweep;
+use crate::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-/// Resolve a registry spec string (see `fed::algorithm_registry`),
-/// converting the error for the anyhow-based experiment API.
-pub fn algo(spec: &str) -> anyhow::Result<AlgorithmSpec> {
-    AlgorithmSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))
-}
-
-/// Registry spec for FedComLoc-Com with a TopK density (identity at K=100%),
-/// the sweep axis most experiments share.
+/// Registry spec for FedComLoc-Com with a TopK density (identity at
+/// K=100%) — the sweep axis the paper-figure benches share.
 pub fn fedcomloc_topk_spec(density: f64) -> String {
     if density >= 1.0 {
         "fedcomloc-com:none".to_string()
@@ -41,7 +37,7 @@ pub fn fedcomloc_topk_spec(density: f64) -> String {
     }
 }
 
-/// Options shared by all experiments.
+/// Options shared by all experiments (and the `train` subcommand).
 pub struct ExpOptions {
     /// Output directory (results/ by default).
     pub out_dir: PathBuf,
@@ -51,6 +47,7 @@ pub struct ExpOptions {
     pub trainer: String,
     /// Artifacts directory for the PJRT plane.
     pub artifacts_dir: PathBuf,
+    /// RNG seed every run starts from (sweep `seeds` axes still win).
     pub seed: u64,
 }
 
@@ -67,32 +64,10 @@ impl Default for ExpOptions {
 }
 
 impl ExpOptions {
-    /// Build the compute plane for a model spec.
-    ///
-    /// Default policy (measured in EXPERIMENTS.md §Perf): the native plane
-    /// wins for the MLP (parallel clients, no engine lock), the XLA plane
-    /// wins for the CNN (optimized convolutions). Parameterized specs have
-    /// no prebuilt artifacts and always run native unless `--trainer pjrt`
-    /// is forced (which then falls back with a warning).
+    /// Build the compute plane for a model spec (the shared
+    /// [`crate::runtime::build_trainer`] policy).
     pub fn make_trainer(&self, spec: &ModelSpec) -> Arc<dyn LocalTrainer> {
-        let model = spec.build();
-        let want_pjrt = match self.trainer.as_str() {
-            "native" => false,
-            "pjrt" => true,
-            _ => {
-                model.artifact_name() == "cnn"
-                    && crate::runtime::artifacts_available(&self.artifacts_dir)
-            }
-        };
-        if want_pjrt {
-            match crate::runtime::PjrtTrainer::load(&self.artifacts_dir, &model) {
-                Ok(t) => return Arc::new(t),
-                Err(e) => {
-                    log::warn!("PJRT trainer unavailable ({e}); falling back to native");
-                }
-            }
-        }
-        Arc::new(crate::model::native::NativeTrainer::new(model))
+        crate::runtime::build_trainer(&self.trainer, &self.artifacts_dir, spec)
     }
 
     /// The compute plane for a run config (its explicit model, or the
@@ -101,30 +76,46 @@ impl ExpOptions {
         self.make_trainer(&cfg.model_spec())
     }
 
+    /// Apply `--scale` and the seed to a run config (the literally shared
+    /// [`crate::config::apply_scale`] transform the sweep engine uses).
     pub fn scale_cfg(&self, mut cfg: RunConfig) -> RunConfig {
-        if (self.scale - 1.0).abs() > 1e-9 {
-            cfg.rounds = ((cfg.rounds as f64 * self.scale).round() as usize).max(2);
-            cfg.train_n = ((cfg.train_n as f64 * self.scale).round() as usize).max(500);
-            cfg.test_n = ((cfg.test_n as f64 * self.scale).round() as usize).max(100);
-        }
+        crate::config::apply_scale(&mut cfg, self.scale);
         cfg.seed = self.seed;
         cfg
     }
 
+    /// Save a metrics log under `<out_dir>/<sub>/` (the `train` path; sweep
+    /// runs go through the sweep sink instead).
     pub fn save(&self, sub: &str, log: &MetricsLog) {
         let dir = self.out_dir.join(sub);
         if let Err(e) = log.save(&dir) {
             log::warn!("cannot save metrics to {}: {e}", dir.display());
         }
     }
+
+    /// The equivalent sweep-engine options.
+    pub fn sweep_options(&self) -> sweep::SweepOptions {
+        sweep::SweepOptions {
+            out_dir: self.out_dir.clone(),
+            scale: self.scale,
+            seed: Some(self.seed),
+            trainer: self.trainer.clone(),
+            artifacts_dir: self.artifacts_dir.clone(),
+            ..sweep::SweepOptions::default()
+        }
+    }
 }
 
-/// Registry entry.
+/// Registry entry: a paper table/figure and the sweep preset producing it.
 pub struct Experiment {
+    /// Stable id consumed by `experiment --id`.
     pub id: &'static str,
+    /// The paper table/figure(s) this entry reproduces.
     pub paper_ref: &'static str,
+    /// One-line description shown by `list-experiments`.
     pub description: &'static str,
-    pub run: fn(&ExpOptions) -> anyhow::Result<()>,
+    /// The sweep preset implementing it (`None` = a report, not a sweep).
+    pub sweep: Option<&'static str>,
 }
 
 /// Every reproducible table/figure, in paper order.
@@ -134,81 +125,110 @@ pub fn registry() -> Vec<Experiment> {
             id: "table1",
             paper_ref: "Table 1 + Figure 1",
             description: "TopK sparsity ratios on FedMNIST (accuracy, loss/acc vs rounds and bits)",
-            run: sparsity::run,
+            sweep: Some("sparsity"),
         },
         Experiment {
             id: "table2",
             paper_ref: "Table 2 + Figures 2, 12",
             description: "Dirichlet heterogeneity α × sparsity K grid on FedMNIST",
-            run: heterogeneity::run,
+            sweep: Some("heterogeneity"),
         },
         Experiment {
             id: "fig3",
             paper_ref: "Figure 3",
             description: "CNN on FedCIFAR10: density sweep, tuned vs fixed stepsize",
-            run: cifar::run,
+            sweep: Some("cifar"),
         },
         Experiment {
             id: "fig5",
             paper_ref: "Figures 5, 7, 14, 15",
             description: "Quantization Q_r sweep (r ∈ {4,8,16,32}) + heterogeneity ablation",
-            run: quantization::run,
+            sweep: Some("quantization"),
         },
         Experiment {
             id: "fig8",
             paper_ref: "Figure 8",
             description: "Expected local iterations 1/p sweep with total-cost metric (τ=0.01)",
-            run: local_iters::run,
+            sweep: Some("local_iters"),
         },
         Experiment {
             id: "fig9",
             paper_ref: "Figure 9",
             description: "FedComLoc vs FedAvg / sparseFedAvg / Scaffold / FedDyn",
-            run: baselines::run,
+            sweep: Some("baselines"),
         },
         Experiment {
             id: "fig10",
             paper_ref: "Figure 10",
             description: "Variant ablation: -Com vs -Local vs -Global across densities",
-            run: double::run_variants,
+            sweep: Some("variants"),
         },
         Experiment {
             id: "fig11",
             paper_ref: "Figure 11",
             description: "Client class distributions under different Dirichlet α",
-            run: datadist::run,
+            sweep: None,
         },
         Experiment {
             id: "fig16",
             paper_ref: "Figure 16 (Appendix B.3)",
             description: "Double compression: TopK followed by quantization",
-            run: double::run,
+            sweep: Some("double"),
         },
     ]
 }
 
+/// Look up a registry entry by id.
 pub fn by_id(id: &str) -> Option<Experiment> {
     registry().into_iter().find(|e| e.id == id)
 }
 
-/// Render an accuracy table in the paper's Table 1/2 style.
-pub fn print_accuracy_table(title: &str, header: &[String], rows: &[(String, Vec<Option<f64>>)]) {
-    println!("\n=== {title} ===");
-    print!("{:<14}", "");
-    for h in header {
-        print!("{h:>10}");
+/// Run one registry entry: resolve its sweep preset and execute it (or the
+/// Figure 11 report), printing the resulting summary rows.
+pub fn run(exp: &Experiment, opts: &ExpOptions) -> anyhow::Result<()> {
+    let Some(preset) = exp.sweep else {
+        return data_stats(opts);
+    };
+    let spec = sweep::preset_by_name(preset)
+        .ok_or_else(|| anyhow::anyhow!("experiment '{}' names unknown sweep '{preset}'", exp.id))?
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let outcome = sweep::run_sweep(&spec, &opts.sweep_options()).map_err(|e| anyhow::anyhow!(e))?;
+    println!("\n=== {} ({}) — {} runs ===", exp.id, exp.paper_ref, outcome.units.len());
+    println!("{}", crate::sweep::sink::SUMMARY_HEADER);
+    for row in &outcome.rows {
+        println!("{row}");
     }
-    println!();
-    for (label, values) in rows {
-        print!("{label:<14}");
-        for v in values {
-            match v {
-                Some(v) => print!("{v:>10.4}"),
-                None => print!("{:>10}", "-"),
-            }
-        }
-        println!();
+    println!(
+        "\nsummary: {}/summary.csv   per-round series: {}/rounds/*.jsonl",
+        outcome.dir.display(),
+        outcome.dir.display()
+    );
+    Ok(())
+}
+
+/// Dirichlet α values rendered by the Figure 11 report.
+pub const DATADIST_ALPHAS: [f64; 4] = [0.1, 0.5, 1.0, 1000.0];
+
+/// Figure 11: visualization of client class distributions vs Dirichlet α
+/// (a report over the partitioner, not a training sweep).
+pub fn data_stats(opts: &ExpOptions) -> anyhow::Result<()> {
+    println!("\n=== Figure 11: class distribution across clients (FedCIFAR10 shapes) ===");
+    let mut rng = Rng::seed_from_u64(opts.seed);
+    let data = synthetic::generate(&DatasetSpec::cifar10(), 5_000, 100, &mut rng).train;
+    let mut report = String::new();
+    for &alpha in &DATADIST_ALPHAS {
+        let mut prng = Rng::seed_from_u64(opts.seed ^ 0xA1FA);
+        let p = partition(&data, 100, alpha, 1, &mut prng);
+        let text = render_histogram(&p, &data, 10);
+        let tv = p.heterogeneity_tv(&data);
+        println!("{text}mean TV distance to global distribution: {tv:.4}\n");
+        report.push_str(&text);
+        report.push_str(&format!("mean TV distance: {tv:.4}\n\n"));
     }
+    let dir = opts.out_dir.join("fig11");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("class_distributions.txt"), report)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -216,7 +236,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_is_complete_and_unique() {
+    fn registry_is_complete_unique_and_resolves_sweeps() {
         let reg = registry();
         assert_eq!(reg.len(), 9);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
@@ -225,6 +245,16 @@ mod tests {
         assert_eq!(ids.len(), 9, "duplicate experiment ids");
         assert!(by_id("table1").is_some());
         assert!(by_id("nope").is_none());
+        // Every sweep-backed entry must name a parseable shipped preset.
+        for exp in &reg {
+            if let Some(name) = exp.sweep {
+                let spec = sweep::preset_by_name(name)
+                    .unwrap_or_else(|| panic!("{}: unknown preset '{name}'", exp.id))
+                    .unwrap_or_else(|e| panic!("{e}"));
+                assert!(spec.num_runs() > 0, "{name}");
+            }
+        }
+        assert!(by_id("fig11").unwrap().sweep.is_none());
     }
 
     #[test]
@@ -253,5 +283,20 @@ mod tests {
         let t = opts.trainer_for(&cfg);
         assert_eq!(t.model().name(), "linear:784");
         assert_eq!(t.dim(), 784 * 10 + 10);
+    }
+
+    #[test]
+    fn sweep_options_carry_the_experiment_settings() {
+        let opts = ExpOptions {
+            scale: 0.5,
+            seed: 7,
+            trainer: "native".into(),
+            ..Default::default()
+        };
+        let so = opts.sweep_options();
+        assert_eq!(so.scale, 0.5);
+        assert_eq!(so.seed, Some(7));
+        assert_eq!(so.trainer, "native");
+        assert!(!so.dry_run && !so.resume);
     }
 }

@@ -39,8 +39,11 @@ pub struct RoundOutcome {
 
 /// Per-round context handed to [`FedAlgorithm::round`].
 pub struct RoundCtx<'a> {
+    /// The run's configuration.
     pub cfg: &'a RunConfig,
+    /// Shared run state (model params, clients, worker pool).
     pub fed: &'a mut Federation,
+    /// The channel every client/server message must cross.
     pub transport: &'a mut dyn Transport,
     /// Communication-round index (0-based).
     pub round: usize,

@@ -21,6 +21,7 @@ pub struct FedAvg {
 }
 
 impl FedAvg {
+    /// FedAvg whose uplinks cross the wire through `compressor`.
     pub fn new(compressor: Box<dyn Compressor>) -> FedAvg {
         FedAvg {
             compressor,

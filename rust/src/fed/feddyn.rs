@@ -14,12 +14,14 @@ use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::tensor;
 
+/// FedDyn with regularizer strength `alpha_dyn` (see module docs).
 pub struct FedDyn {
     alpha_dyn: f64,
     server_state: Vec<f32>,
 }
 
 impl FedDyn {
+    /// A fresh FedDyn with regularizer α_dyn (the registry default: 0.01).
     pub fn new(alpha_dyn: f64) -> FedDyn {
         FedDyn {
             alpha_dyn,

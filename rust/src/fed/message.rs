@@ -52,7 +52,9 @@ pub struct MsgHeader {
 /// One wire message: header + serialized payload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Message {
+    /// Decode/routing metadata.
     pub header: MsgHeader,
+    /// Serialized payload bytes (the codec's exact wire format).
     pub payload: Vec<u8>,
     /// Meaningful payload bits (≤ `8·payload.len()`; the final byte may pad).
     wire_bits: u64,
@@ -61,12 +63,28 @@ pub struct Message {
 /// Framing/validation failure in [`Message::decode`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WireError {
-    Truncated { need: usize, have: usize },
+    /// Fewer bytes than the frame declares.
+    Truncated {
+        /// Bytes the frame requires.
+        need: usize,
+        /// Bytes actually available.
+        have: usize,
+    },
+    /// The frame does not start with the `FM` magic.
     BadMagic([u8; 2]),
+    /// Unsupported framing version.
     BadVersion(u8),
+    /// Unknown codec tag byte.
     BadCodecTag(u8),
+    /// A codec parameter is out of range (named in the payload).
     BadParam(&'static str),
-    LengthMismatch { declared: usize, actual: usize },
+    /// Declared and actual payload lengths disagree.
+    LengthMismatch {
+        /// Length the header declares.
+        declared: usize,
+        /// Length of the bytes present.
+        actual: usize,
+    },
     /// Header and payload disagree (e.g. a dense payload whose length does
     /// not match `dim`, or a sparse survivor count exceeding `dim`).
     Inconsistent(&'static str),
@@ -167,6 +185,7 @@ impl Message {
         }
     }
 
+    /// Uncompressed vector dimension this message reconstructs to.
     pub fn dim(&self) -> usize {
         self.header.dim as usize
     }

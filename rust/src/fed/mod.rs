@@ -58,6 +58,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Canonical lowercase name (`com` / `local` / `global`).
     pub fn name(self) -> &'static str {
         match self {
             Variant::Com => "com",
@@ -66,6 +67,8 @@ impl Variant {
         }
     }
 
+    /// Parse a variant name (case-insensitive; `uplink`/`downlink` are
+    /// accepted aliases for `com`/`global`).
     pub fn parse(s: &str) -> Option<Variant> {
         match s.to_ascii_lowercase().as_str() {
             "com" | "uplink" => Some(Variant::Com),
@@ -82,6 +85,7 @@ pub struct AlgorithmFamily {
     pub key: &'static str,
     /// Help text for the argument after the key, if any.
     pub arg_help: &'static str,
+    /// One-line description shown by `list-algorithms`.
     pub summary: &'static str,
     build: fn(&str) -> Result<Box<dyn FedAlgorithm>, String>,
 }
@@ -216,6 +220,8 @@ pub struct AlgorithmSpec {
 }
 
 impl AlgorithmSpec {
+    /// Validate a registry spec string and remember it (see
+    /// [`build_algorithm`] for the grammar).
     pub fn parse(spec: &str) -> Result<AlgorithmSpec, String> {
         let algo = build_algorithm(spec)?;
         Ok(AlgorithmSpec {
@@ -251,15 +257,20 @@ impl std::str::FromStr for AlgorithmSpec {
 /// Everything a federated run needs (see module docs).
 #[derive(Clone)]
 pub struct RunConfig {
+    /// The dataset to train on (string-keyed registry).
     pub dataset: DatasetSpec,
     /// Model architecture override; `None` pairs the dataset's default
     /// (the paper's MLP↔FedMNIST / CNN↔FedCIFAR10) via
     /// [`ModelSpec::for_dataset`]. Keeping this an `Option` makes
     /// `--dataset`/`--model` overrides order-independent.
     pub model: Option<ModelSpec>,
+    /// Training examples to load/synthesize.
     pub train_n: usize,
+    /// Test examples to load/synthesize.
     pub test_n: usize,
+    /// Total federated clients n.
     pub n_clients: usize,
+    /// Clients sampled per communication round (paper §4: 10 of 100).
     pub clients_per_round: usize,
     /// Dirichlet heterogeneity factor α (paper §4).
     pub dirichlet_alpha: f64,
@@ -272,10 +283,13 @@ pub struct RunConfig {
     pub local_steps: usize,
     /// Learning rate γ.
     pub gamma: f32,
+    /// Local-step minibatch size.
     pub batch_size: usize,
+    /// Evaluation minibatch size.
     pub eval_batch: usize,
     /// Evaluate test metrics every this many communication rounds.
     pub eval_every: usize,
+    /// Root RNG seed every run-local stream derives from.
     pub seed: u64,
     /// Per-local-iteration cost τ for the total-cost metric (paper Fig. 8).
     pub tau: f64,
@@ -351,6 +365,7 @@ impl RunConfig {
 
 /// Per-client persistent state across rounds.
 pub struct ClientState {
+    /// The client's shard-local minibatch stream.
     pub loader: ClientLoader,
     /// Scaffnew control variate h_i (also reused as c_i by Scaffold and as
     /// the FedDyn gradient correction λ_i — exactly one algorithm runs per
@@ -362,14 +377,23 @@ pub struct ClientState {
 
 /// Shared run state: data, clients, pool, model params.
 pub struct Federation {
+    /// The architecture every party trains (validated against the config).
     pub model: Model,
+    /// The compute plane executing local objectives.
     pub trainer: Arc<dyn LocalTrainer>,
+    /// Per-client persistent state, lockable per worker.
     pub clients: Vec<Mutex<ClientState>>,
+    /// The Dirichlet label-skew partition behind the client shards.
     pub partition: Partition,
+    /// Pre-batched test set for the evaluation cadence.
     pub eval_set: EvalBatches,
+    /// Fork-join worker pool for per-round client parallelism.
     pub pool: ThreadPool,
+    /// The global model parameters x.
     pub x: Vec<f32>,
+    /// The run's root RNG (client sampling; streams derive from it).
     pub rng: Rng,
+    /// The materialized train/test data.
     pub data: TrainTest,
 }
 
@@ -485,7 +509,9 @@ impl Federation {
 
 /// Shared bookkeeping for the per-round records the drive loop emits.
 pub struct RoundLogger<'a> {
+    /// The run's configuration (for τ and cadence-derived fields).
     pub cfg: &'a RunConfig,
+    /// The log under construction.
     pub log: MetricsLog,
     cum_up: u64,
     cum_down: u64,
@@ -495,6 +521,7 @@ pub struct RoundLogger<'a> {
 }
 
 impl<'a> RoundLogger<'a> {
+    /// Start bookkeeping for a run whose records land in `log`.
     pub fn new(cfg: &'a RunConfig, log: MetricsLog) -> Self {
         Self {
             cfg,
@@ -507,10 +534,13 @@ impl<'a> RoundLogger<'a> {
         }
     }
 
+    /// Mark the start of a round (for the wall-clock column).
     pub fn begin_round(&mut self) {
         self.round_start = std::time::Instant::now();
     }
 
+    /// Fold one finished round into the log: cumulative bit/iteration
+    /// totals, the §4.5 total-cost gauge, and the optional eval result.
     pub fn end_round(
         &mut self,
         round: usize,
@@ -543,6 +573,7 @@ impl<'a> RoundLogger<'a> {
         });
     }
 
+    /// Hand back the completed log.
     pub fn finish(self) -> MetricsLog {
         self.log
     }

@@ -70,6 +70,8 @@ pub struct FedComLoc {
 }
 
 impl FedComLoc {
+    /// FedComLoc in `variant`, compressing through `compressor` (for
+    /// -Local, a TopK compressor also supplies the in-graph mask density).
     pub fn new(variant: Variant, compressor: Box<dyn Compressor>) -> FedComLoc {
         let local_density = compressor_density(compressor.as_ref());
         FedComLoc {

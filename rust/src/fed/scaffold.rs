@@ -17,11 +17,13 @@ use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::tensor;
 
+/// Scaffold with option-II control-variate updates (see module docs).
 pub struct Scaffold {
     c_global: Vec<f32>,
 }
 
 impl Scaffold {
+    /// A fresh Scaffold (c and every c_i start at zero in `setup`).
     pub fn new() -> Scaffold {
         Scaffold { c_global: Vec::new() }
     }

@@ -26,23 +26,30 @@ use std::collections::HashMap;
 /// Accumulated wire usage for one round.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct WireUsage {
+    /// Client→server bits put on the wire this round.
     pub uplink_bits: u64,
+    /// Server→client bits put on the wire this round.
     pub downlink_bits: u64,
+    /// Client→server messages this round.
     pub uplink_msgs: u64,
+    /// Server→client messages this round.
     pub downlink_msgs: u64,
 }
 
 impl WireUsage {
+    /// Account one uplink message of `bits` meaningful payload bits.
     pub fn add_uplink(&mut self, bits: u64) {
         self.uplink_bits += bits;
         self.uplink_msgs += 1;
     }
 
+    /// Account one downlink message of `bits` meaningful payload bits.
     pub fn add_downlink(&mut self, bits: u64) {
         self.downlink_bits += bits;
         self.downlink_msgs += 1;
     }
 
+    /// Fold another usage tally into this one.
     pub fn merge(&mut self, other: WireUsage) {
         self.uplink_bits += other.uplink_bits;
         self.downlink_bits += other.downlink_bits;
@@ -54,6 +61,7 @@ impl WireUsage {
 /// Per-round roll-up a transport hands back to the drive loop.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct LinkReport {
+    /// Bits/messages in both directions this round.
     pub usage: WireUsage,
     /// Simulated wall-clock for the round: the slowest participating
     /// client's total link time (0 for [`InProc`]).
@@ -70,6 +78,7 @@ pub struct LinkReport {
 /// `(x, c)` see one coherent participant set); [`Transport::end_round`]
 /// drains the accounting and resets per-round state.
 pub trait Transport: Send {
+    /// Short channel name for logs/CLI (`inproc`, `simnet`).
     fn name(&self) -> &'static str;
 
     /// Server → clients. Encodes once, accounts per recipient, and returns
@@ -159,6 +168,8 @@ pub struct SimNet {
 }
 
 impl SimNet {
+    /// Build a simulated network for `n_clients`, drawing the fixed
+    /// per-client bandwidths from `seed` (deterministic per run).
     pub fn new(cfg: SimNetCfg, n_clients: usize, seed: u64) -> SimNet {
         assert!(cfg.bandwidth_bps > 0.0, "bandwidth must be positive");
         assert!((0.0..=1.0).contains(&cfg.drop_prob), "drop_prob in [0,1]");

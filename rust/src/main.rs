@@ -1,8 +1,9 @@
 //! `fedcomloc` — the Layer-3 leader binary.
 //!
 //! Subcommands:
+//!   sweep             declarative scenario sweeps (run | list, EXPERIMENTS.md)
 //!   train             run one federated algorithm end-to-end
-//!   experiment        regenerate paper tables/figures (see DESIGN.md §6)
+//!   experiment        regenerate paper tables/figures (sweep-preset aliases)
 //!   list-experiments  show the experiment registry
 //!   list-algorithms   show the algorithm registry (spec strings for --algo)
 //!   list-models       show the model registry (spec strings for --model)
@@ -19,12 +20,14 @@ use fedcomloc::experiments::{self, ExpOptions};
 use fedcomloc::fed::transport::parse_transport;
 use fedcomloc::fed::{algorithm_registry, run_with_transport, AlgorithmSpec, Variant};
 use fedcomloc::model::model_registry;
+use fedcomloc::sweep;
 use std::path::PathBuf;
 
 fn main() {
     init_logger();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
+        Some("sweep") => cmd_sweep(&argv[1..]),
         Some("train") => cmd_train(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("list-experiments") => cmd_list(),
@@ -88,8 +91,9 @@ USAGE:
     fedcomloc <SUBCOMMAND> [OPTIONS]
 
 SUBCOMMANDS:
+    sweep             declarative scenario sweeps: sweep run | sweep list
     train             run one federated algorithm end-to-end
-    experiment        regenerate paper tables/figures
+    experiment        regenerate paper tables/figures (sweep-preset aliases)
     list-experiments  show the experiment registry
     list-algorithms   show the algorithm registry (spec strings for --algo)
     list-models       show the model registry (spec strings for --model)
@@ -279,7 +283,7 @@ fn cmd_experiment(argv: &[String]) -> anyhow::Result<()> {
     if args.flag("all") {
         for exp in experiments::registry() {
             println!("\n################ {} ({}) ################", exp.id, exp.paper_ref);
-            (exp.run)(&opts)?;
+            experiments::run(&exp, &opts)?;
         }
         return Ok(());
     }
@@ -288,17 +292,131 @@ fn cmd_experiment(argv: &[String]) -> anyhow::Result<()> {
             let exp = experiments::by_id(id).ok_or_else(|| {
                 anyhow::anyhow!("unknown experiment '{id}' (try list-experiments)")
             })?;
-            (exp.run)(&opts)
+            experiments::run(&exp, &opts)
         }
         None => anyhow::bail!("pass --id <experiment> or --all"),
     }
 }
 
-fn cmd_list() -> anyhow::Result<()> {
-    println!("{:<10}{:<28}{}", "id", "paper", "description");
-    for exp in experiments::registry() {
-        println!("{:<10}{:<28}{}", exp.id, exp.paper_ref, exp.description);
+fn sweep_run_command() -> Command {
+    Command::new("fedcomloc sweep run", "Expand and execute a declarative sweep")
+        .opt("preset", "NAME", "shipped sweep (see 'sweep list')")
+        .opt("config", "FILE", "sweep TOML file (see EXPERIMENTS.md for the schema)")
+        .opt_default("out", "DIR", "output root (results land in <out>/<name>/)", "results")
+        .opt_default("threads", "N", "parallel runs (0 = auto; inner pools drop to 1)", "0")
+        .opt_default("scale", "F", "scale factor on rounds/dataset sizes", "1.0")
+        .opt("seed", "N", "base-seed override (an explicit 'seeds' axis wins)")
+        .opt_default("trainer", "T", "compute plane: auto|native|pjrt", "auto")
+        .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
+        .flag("dry-run", "print the expanded run matrix and exit")
+        .flag("resume", "skip runs whose summary row exists with a matching config")
+}
+
+fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
+    match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_sweep_run(&argv[1..]),
+        Some("list") => cmd_sweep_list(),
+        Some("--help") | Some("-h") | None => {
+            println!(
+                "fedcomloc sweep — declarative scenario sweeps over the registries\n\n\
+                 USAGE:\n    fedcomloc sweep run  [OPTIONS]   expand + execute a sweep\n    \
+                 fedcomloc sweep list             show the shipped sweeps\n\n\
+                 Run 'fedcomloc sweep run --help' for options; EXPERIMENTS.md maps every\n\
+                 paper figure to its sweep TOML and exact invocation."
+            );
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown sweep subcommand '{other}' (try run | list)"),
     }
+}
+
+fn cmd_sweep_list() -> anyhow::Result<()> {
+    println!("{:<16}{:<28}{:>6}  {}", "name", "paper", "runs", "title");
+    for preset in sweep::sweep_presets() {
+        let spec = sweep::preset_by_name(preset.name)
+            .expect("listed preset resolves")
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let paper = if preset.paper.is_empty() { "-" } else { preset.paper };
+        println!("{:<16}{:<28}{:>6}  {}", preset.name, paper, spec.num_runs(), spec.title);
+    }
+    println!(
+        "\nRun with: fedcomloc sweep run --preset <name>   (or --config <file.toml>)\n\
+         The shipped TOMLs live under experiments/; EXPERIMENTS.md maps them to paper figures."
+    );
+    Ok(())
+}
+
+fn cmd_sweep_run(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = sweep_run_command();
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        let names: Vec<&str> = sweep::sweep_presets().iter().map(|p| p.name).collect();
+        println!("PRESETS: {}", names.join(", "));
+        return Ok(());
+    }
+    let spec = match (args.get("preset"), args.get("config")) {
+        (Some(name), None) => sweep::preset_by_name(name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = sweep::sweep_presets().iter().map(|p| p.name).collect();
+                anyhow::anyhow!("unknown sweep preset '{name}' (have: {})", names.join(", "))
+            })?
+            .map_err(|e| anyhow::anyhow!(e))?,
+        (None, Some(path)) => sweep::SweepSpec::load(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!(e))?,
+        (Some(_), Some(_)) => anyhow::bail!("pass --preset or --config, not both"),
+        (None, None) => anyhow::bail!("pass --preset <name> or --config <file> (see 'sweep list')"),
+    };
+    let opts = sweep::SweepOptions {
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+        threads: args.get_or("threads", 0).map_err(|e| anyhow::anyhow!("{e}"))?,
+        dry_run: args.flag("dry-run"),
+        resume: args.flag("resume"),
+        scale: args.get_or("scale", 1.0).map_err(|e| anyhow::anyhow!("{e}"))?,
+        seed: args.get_parsed("seed").map_err(|e| anyhow::anyhow!("{e}"))?,
+        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+    };
+    println!("sweep '{}' — {}", spec.name, spec.title);
+    if !spec.paper.is_empty() {
+        println!("reproduces: {}", spec.paper);
+    }
+    let t0 = std::time::Instant::now();
+    let outcome = sweep::run_sweep(&spec, &opts).map_err(|e| anyhow::anyhow!(e))?;
+    if opts.dry_run {
+        println!("\n{} runs would execute:\n", outcome.units.len());
+        print!("{}", sweep::format_matrix(&outcome.units));
+        return Ok(());
+    }
+    println!(
+        "\ndone in {:?}: {} runs executed, {} resumed",
+        t0.elapsed(),
+        outcome.executed,
+        outcome.skipped
+    );
+    println!(
+        "summary: {}/summary.csv   per-round series: {}/rounds/*.jsonl",
+        outcome.dir.display(),
+        outcome.dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    println!("{:<10}{:<28}{:<16}{}", "id", "paper", "sweep preset", "description");
+    for exp in experiments::registry() {
+        println!(
+            "{:<10}{:<28}{:<16}{}",
+            exp.id,
+            exp.paper_ref,
+            exp.sweep.unwrap_or("- (report)"),
+            exp.description
+        );
+    }
+    println!(
+        "\n'experiment --id <id>' is an alias for 'sweep run --preset <sweep preset>'\n\
+         (fig11 is a data report, not a sweep). See EXPERIMENTS.md for the figure map."
+    );
     Ok(())
 }
 
@@ -369,7 +487,7 @@ fn cmd_data_stats(argv: &[String]) -> anyhow::Result<()> {
         seed: args.get_or("seed", 42).map_err(|e| anyhow::anyhow!("{e}"))?,
         ..Default::default()
     };
-    experiments::datadist::run(&opts)
+    experiments::data_stats(&opts)
 }
 
 fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {

@@ -5,6 +5,24 @@
 //! (from real wire payloads — see `compress`), and the §4.5 total-cost
 //! gauge. [`MetricsLog`] accumulates records and serializes to CSV and JSON
 //! under `results/`.
+//!
+//! # Result schemas
+//!
+//! Two serialization families exist, both derived from [`RoundRecord`]:
+//!
+//! * **Per-run CSV + JSON** ([`MetricsLog::to_csv`] / [`MetricsLog::to_json`],
+//!   written by `fedcomloc train`): one CSV row / JSON object per round with
+//!   the columns below, plus run metadata in the JSON header.
+//!   CSV columns: `round, local_steps, train_loss, test_loss,
+//!   test_accuracy, uplink_bits, downlink_bits, cum_uplink_bits,
+//!   cum_downlink_bits, total_cost, wall_secs, sim_secs, cum_sim_secs,
+//!   dropped_clients` (test columns empty between evaluations).
+//! * **Sweep sink, schema v1** (`sweep::sink`, written by `fedcomloc sweep
+//!   run`): one summary-CSV row per *run* plus one JSONL object per round,
+//!   both versioned with an explicit `schema` field and deliberately
+//!   excluding wall-clock so files are byte-reproducible; the exact field
+//!   lists are documented in `sweep::sink` and EXPERIMENTS.md and pinned by
+//!   `tests/sweep_engine.rs`.
 
 use crate::util::json::Json;
 use std::io::Write;
@@ -19,14 +37,17 @@ pub struct RoundRecord {
     pub local_steps: usize,
     /// Mean training loss over participating clients' local steps.
     pub train_loss: f64,
-    /// Test metrics (None between evaluation rounds).
+    /// Test loss (None between evaluation rounds).
     pub test_loss: Option<f64>,
+    /// Test accuracy (None between evaluation rounds).
     pub test_accuracy: Option<f64>,
-    /// Exact bits put on the wire this round.
+    /// Exact client→server bits put on the wire this round.
     pub uplink_bits: u64,
+    /// Exact server→client bits put on the wire this round.
     pub downlink_bits: u64,
-    /// Running totals including this round.
+    /// Running uplink total including this round.
     pub cum_uplink_bits: u64,
+    /// Running downlink total including this round.
     pub cum_downlink_bits: u64,
     /// Total cost (paper Fig. 8): communication rounds so far + τ × local
     /// iterations so far.
@@ -45,6 +66,7 @@ pub struct RoundRecord {
 }
 
 impl RoundRecord {
+    /// Cumulative bits in both directions including this round.
     pub fn cum_total_bits(&self) -> u64 {
         self.cum_uplink_bits + self.cum_downlink_bits
     }
@@ -53,12 +75,16 @@ impl RoundRecord {
 /// Accumulated per-run metrics plus run metadata.
 #[derive(Debug, Clone)]
 pub struct MetricsLog {
+    /// Run name (also the output file stem).
     pub run_name: String,
+    /// One record per communication round, in round order.
     pub records: Vec<RoundRecord>,
+    /// Free-form run metadata key/value pairs.
     pub meta: Vec<(String, String)>,
 }
 
 impl MetricsLog {
+    /// An empty log for a run named `run_name`.
     pub fn new(run_name: &str) -> Self {
         Self {
             run_name: run_name.to_string(),
@@ -67,11 +93,13 @@ impl MetricsLog {
         }
     }
 
+    /// Attach a metadata key/value pair (builder style).
     pub fn with_meta(mut self, key: &str, value: impl ToString) -> Self {
         self.meta.push((key.to_string(), value.to_string()));
         self
     }
 
+    /// Append one round's record.
     pub fn push(&mut self, record: RoundRecord) {
         self.records.push(record);
     }
@@ -89,6 +117,7 @@ impl MetricsLog {
         self.records.iter().rev().find_map(|r| r.test_accuracy)
     }
 
+    /// Training loss of the last round.
     pub fn final_train_loss(&self) -> Option<f64> {
         self.records.last().map(|r| r.train_loss)
     }
@@ -108,6 +137,7 @@ impl MetricsLog {
             .map(|r| (r.round, r.cum_uplink_bits))
     }
 
+    /// Per-round CSV (column list in the module docs).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,local_steps,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,cum_uplink_bits,cum_downlink_bits,total_cost,wall_secs,sim_secs,cum_sim_secs,dropped_clients\n",
@@ -135,6 +165,7 @@ impl MetricsLog {
         out
     }
 
+    /// JSON document: run metadata, best accuracy, per-round objects.
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
         root.set("run", self.run_name.as_str().into());

@@ -23,8 +23,11 @@ pub enum Layer {
     /// Fully connected `in_dim → out_dim`, weights row-major `[in][out]`
     /// (forward is `x @ W + b`), optionally followed by ReLU.
     Dense {
+        /// Input feature count.
         in_dim: usize,
+        /// Output feature count.
         out_dim: usize,
+        /// Apply ReLU after the affine map.
         relu: bool,
     },
     /// Valid 2-D convolution, stride 1, square kernel, weights OIHW
@@ -32,17 +35,26 @@ pub enum Layer {
     /// Activations are NCHW; the output flattens channel-major, so a
     /// following `Dense` consumes it without an explicit flatten stage.
     Conv {
+        /// Input channels.
         in_ch: usize,
+        /// Output channels.
         out_ch: usize,
+        /// Input plane height.
         in_h: usize,
+        /// Input plane width.
         in_w: usize,
+        /// Square kernel side.
         k: usize,
+        /// Apply ReLU after the convolution.
         relu: bool,
     },
     /// 2×2 max-pool, stride 2, per-plane (no parameters).
     MaxPool2 {
+        /// Plane count (passes through unchanged).
         channels: usize,
+        /// Input plane height.
         in_h: usize,
+        /// Input plane width.
         in_w: usize,
     },
 }
@@ -82,6 +94,7 @@ impl Layer {
         }
     }
 
+    /// Number of weight parameters this layer owns.
     pub fn weight_count(&self) -> usize {
         match *self {
             Layer::Dense {
@@ -94,6 +107,7 @@ impl Layer {
         }
     }
 
+    /// Number of bias parameters this layer owns.
     pub fn bias_count(&self) -> usize {
         match *self {
             Layer::Dense { out_dim, .. } => out_dim,
@@ -102,6 +116,7 @@ impl Layer {
         }
     }
 
+    /// Total parameters (weights + biases) this layer owns.
     pub fn param_count(&self) -> usize {
         self.weight_count() + self.bias_count()
     }
@@ -148,7 +163,9 @@ impl Layer {
 /// directly follows the weight block; parameterless layers get empty spans.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ParamSlice {
+    /// Weight block as a half-open `(start, end)` range.
     pub weight: (usize, usize),
+    /// Bias block as a half-open `(start, end)` range.
     pub bias: (usize, usize),
 }
 
@@ -156,7 +173,9 @@ pub struct ParamSlice {
 /// in layer order, densely packed from offset 0.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParamLayout {
+    /// Per-layer parameter spans, in layer order.
     pub slices: Vec<ParamSlice>,
+    /// Total parameter count d.
     pub dim: usize,
 }
 
@@ -268,18 +287,22 @@ impl Model {
         self.layout.dim
     }
 
+    /// Per-example input feature count.
     pub fn input_dim(&self) -> usize {
         self.input_dim
     }
 
+    /// Logit count of the final layer.
     pub fn num_classes(&self) -> usize {
         self.num_classes
     }
 
+    /// The layer sequence.
     pub fn layers(&self) -> &[Layer] {
         &self.layers
     }
 
+    /// The flat-vector parameter layout.
     pub fn layout(&self) -> &ParamLayout {
         &self.layout
     }

@@ -43,8 +43,11 @@ pub fn init_params(model: &Model, rng: &mut Rng) -> Vec<f32> {
 /// Evaluation result over a test set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EvalResult {
+    /// Mean cross-entropy over the evaluated examples.
     pub mean_loss: f64,
+    /// Top-1 accuracy over the evaluated examples.
     pub accuracy: f64,
+    /// Number of examples evaluated.
     pub examples: usize,
 }
 
@@ -54,6 +57,7 @@ pub trait LocalTrainer: Send + Sync {
     /// The architecture this trainer computes over.
     fn model(&self) -> &Model;
 
+    /// Total parameter count d of [`LocalTrainer::model`].
     fn dim(&self) -> usize {
         self.model().dim()
     }

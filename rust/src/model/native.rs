@@ -11,12 +11,14 @@
 use super::{eval_with, EvalResult, LocalTrainer, Model};
 use crate::data::loader::{Batch, EvalBatches};
 
+/// The pure-Rust compute plane for any registry [`Model`].
 #[derive(Debug, Clone)]
 pub struct NativeTrainer {
     model: Model,
 }
 
 impl NativeTrainer {
+    /// A trainer computing over `model` (stateless besides the descriptor).
     pub fn new(model: Model) -> Self {
         Self { model }
     }

@@ -192,23 +192,32 @@ pub fn cross_entropy_sum(logits: &[f32], labels: &[i32], n: usize, valid: usize)
 /// Geometry of one conv layer.
 #[derive(Debug, Clone, Copy)]
 pub struct ConvShape {
+    /// Input channels.
     pub in_ch: usize,
+    /// Output channels.
     pub out_ch: usize,
+    /// Input plane height.
     pub in_h: usize,
+    /// Input plane width.
     pub in_w: usize,
-    pub k: usize, // square kernel
+    /// Square kernel side.
+    pub k: usize,
 }
 
 impl ConvShape {
+    /// Output plane height (valid padding, stride 1).
     pub fn out_h(&self) -> usize {
         self.in_h - self.k + 1
     }
+    /// Output plane width (valid padding, stride 1).
     pub fn out_w(&self) -> usize {
         self.in_w - self.k + 1
     }
+    /// Rows of the im2col matrix (output positions).
     pub fn col_rows(&self) -> usize {
         self.out_h() * self.out_w()
     }
+    /// Columns of the im2col matrix (receptive-field size).
     pub fn col_cols(&self) -> usize {
         self.in_ch * self.k * self.k
     }

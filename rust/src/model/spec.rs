@@ -25,6 +25,7 @@ pub struct ModelFamily {
     pub key: &'static str,
     /// Help text for the argument after the key, if any.
     pub arg_help: &'static str,
+    /// One-line description shown by `list-models`.
     pub summary: &'static str,
     /// A small runnable spec (used by the CI smoke job).
     pub example: &'static str,
@@ -291,6 +292,8 @@ pub struct ModelSpec {
 }
 
 impl ModelSpec {
+    /// Validate a registry spec string and canonicalize it (see
+    /// [`build_model`] for the grammar).
     pub fn parse(spec: &str) -> Result<ModelSpec, String> {
         Ok(ModelSpec {
             model: build_model(spec)?,

@@ -48,3 +48,34 @@ pub fn default_artifacts_dir() -> PathBuf {
 pub fn artifacts_available(dir: &Path) -> bool {
     dir.join("manifest.json").is_file()
 }
+
+/// Build the compute plane for a model spec under the shared trainer
+/// policy — the one place `--trainer auto|native|pjrt` is interpreted, used
+/// by `fedcomloc train`, the experiment presets, and the sweep engine.
+///
+/// Default (`auto`) policy, measured in EXPERIMENTS.md §Perf: the native
+/// plane wins for the MLP (parallel clients, no engine lock), the XLA plane
+/// wins for the CNN (optimized convolutions). Parameterized specs have no
+/// prebuilt artifacts and always run native unless `pjrt` is forced, which
+/// then falls back to native with a warning.
+pub fn build_trainer(
+    mode: &str,
+    artifacts_dir: &Path,
+    spec: &crate::model::ModelSpec,
+) -> std::sync::Arc<dyn crate::model::LocalTrainer> {
+    let model = spec.build();
+    let want_pjrt = match mode {
+        "native" => false,
+        "pjrt" => true,
+        _ => model.artifact_name() == "cnn" && artifacts_available(artifacts_dir),
+    };
+    if want_pjrt {
+        match PjrtTrainer::load(artifacts_dir, &model) {
+            Ok(t) => return std::sync::Arc::new(t),
+            Err(e) => {
+                log::warn!("PJRT trainer unavailable ({e}); falling back to native");
+            }
+        }
+    }
+    std::sync::Arc::new(crate::model::native::NativeTrainer::new(model))
+}

@@ -1,0 +1,36 @@
+//! The declarative sweep engine: the paper's entire empirical section as
+//! data, not code.
+//!
+//! A sweep is a TOML file ([`SweepSpec`]) that lists values over the three
+//! string-keyed registries (`--algo`, `--model`, `--dataset`), the
+//! transport, and scalar grids (rounds, local iterations, Dirichlet α,
+//! stepsize, communication probability, seeds). The engine expands the
+//! cross-product into validated [`RunUnit`]s ([`spec`]), executes them in
+//! parallel on the shared worker pool — one run per worker, each run
+//! seeding its own RNG streams so results are order-independent and
+//! bit-reproducible ([`runner`]) — and streams results to a
+//! schema-versioned sink: one JSONL file of per-round records per run plus
+//! one summary CSV row per run ([`sink`]).
+//!
+//! ```text
+//! experiments/<name>.toml ──► SweepSpec::expand ──► [RunUnit; N]
+//!                                                       │  ThreadPool (one run/worker)
+//!                                                       ▼
+//!                              results/<name>/rounds/<run_id>.jsonl   (per round)
+//!                              results/<name>/summary.csv             (per run)
+//! ```
+//!
+//! The eight hand-written experiment modules of the original reproduction
+//! are retired: every paper figure/table is now a shipped TOML under
+//! `experiments/` ([`presets`]), runnable as
+//! `fedcomloc sweep run --preset <name>` and mapped figure-by-figure in
+//! EXPERIMENTS.md. Adding a scenario is editing a TOML — no Rust involved.
+
+pub mod presets;
+pub mod runner;
+pub mod sink;
+pub mod spec;
+
+pub use presets::{preset_by_name, sweep_presets, SweepPreset};
+pub use runner::{format_matrix, run_sweep, SweepOptions, SweepOutcome};
+pub use spec::{GridBlock, RunUnit, SweepSpec, SCHEMA_VERSION};

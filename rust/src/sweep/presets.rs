@@ -1,0 +1,124 @@
+//! Named sweep presets: the shipped TOMLs under `experiments/` embedded at
+//! compile time, so `fedcomloc sweep run --preset <name>` works from any
+//! working directory and the binary can never drift from the files it
+//! ships. `experiments/<name>.toml` is the source of truth — edit the file,
+//! rebuild, done.
+
+use super::spec::SweepSpec;
+
+/// One shipped sweep: its registry name and the embedded TOML text.
+pub struct SweepPreset {
+    /// Preset name (also the TOML's `name` and file stem).
+    pub name: &'static str,
+    /// Paper figures/tables this sweep reproduces.
+    pub paper: &'static str,
+    /// The embedded `experiments/<name>.toml` source.
+    pub toml: &'static str,
+}
+
+static SWEEP_PRESETS: [SweepPreset; 9] = [
+    SweepPreset {
+        name: "sparsity",
+        paper: "Table 1, Figure 1",
+        toml: include_str!("../../../experiments/sparsity.toml"),
+    },
+    SweepPreset {
+        name: "heterogeneity",
+        paper: "Table 2, Figures 2, 12",
+        toml: include_str!("../../../experiments/heterogeneity.toml"),
+    },
+    SweepPreset {
+        name: "cifar",
+        paper: "Figure 3",
+        toml: include_str!("../../../experiments/cifar.toml"),
+    },
+    SweepPreset {
+        name: "quantization",
+        paper: "Figures 5, 7, 14, 15",
+        toml: include_str!("../../../experiments/quantization.toml"),
+    },
+    SweepPreset {
+        name: "local_iters",
+        paper: "Figure 8",
+        toml: include_str!("../../../experiments/local_iters.toml"),
+    },
+    SweepPreset {
+        name: "baselines",
+        paper: "Figure 9",
+        toml: include_str!("../../../experiments/baselines.toml"),
+    },
+    SweepPreset {
+        name: "variants",
+        paper: "Figure 10",
+        toml: include_str!("../../../experiments/variants.toml"),
+    },
+    SweepPreset {
+        name: "double",
+        paper: "Figure 16",
+        toml: include_str!("../../../experiments/double.toml"),
+    },
+    SweepPreset {
+        name: "smoke",
+        paper: "",
+        toml: include_str!("../../../experiments/smoke.toml"),
+    },
+];
+
+/// Every shipped sweep, in paper order.
+pub fn sweep_presets() -> &'static [SweepPreset] {
+    &SWEEP_PRESETS
+}
+
+/// Parse the shipped sweep named `name` (None if unknown).
+pub fn preset_by_name(name: &str) -> Option<Result<SweepSpec, String>> {
+    sweep_presets()
+        .iter()
+        .find(|p| p.name == name)
+        .map(|p| SweepSpec::parse_str(p.toml).map_err(|e| format!("preset '{name}': {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_parses_expands_and_matches_its_name() {
+        for preset in sweep_presets() {
+            let spec = preset_by_name(preset.name)
+                .unwrap()
+                .unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(spec.name, preset.name, "file name vs TOML name");
+            let units = spec
+                .expand(1.0, None)
+                .unwrap_or_else(|e| panic!("{}: {e}", preset.name));
+            assert!(!units.is_empty(), "{}", preset.name);
+            // Run ids must be unique (they key resume and JSONL files).
+            let mut ids: Vec<_> = units.iter().map(|u| u.id.clone()).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), units.len(), "{}", preset.name);
+        }
+        assert!(preset_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn shipped_matrix_sizes_match_the_legacy_experiment_grids() {
+        let runs = |name: &str| {
+            preset_by_name(name)
+                .unwrap()
+                .unwrap()
+                .expand(1.0, None)
+                .unwrap()
+                .len()
+        };
+        assert_eq!(runs("sparsity"), 6, "K in {{100,10,30,50,70,90}}%");
+        assert_eq!(runs("heterogeneity"), 18, "3 densities x 6 alphas");
+        assert_eq!(runs("cifar"), 12, "4 densities x 3 stepsizes");
+        assert_eq!(runs("quantization"), 4 + 8 + 4, "fig5 + fig7/14 + fig15");
+        assert_eq!(runs("local_iters"), 5, "p grid");
+        assert_eq!(runs("baselines"), 1 + 3 + 4, "fig9 panels");
+        assert_eq!(runs("variants"), 9, "3 densities x 3 variants");
+        assert_eq!(runs("double"), 5, "fig16 cases");
+        assert_eq!(runs("smoke"), 2);
+    }
+}

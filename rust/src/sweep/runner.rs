@@ -1,0 +1,311 @@
+//! The sweep executor: expand a [`SweepSpec`], run every [`RunUnit`] in
+//! parallel on the shared [`crate::util::threadpool::ThreadPool`] (one run
+//! per worker), and stream results through the [`super::sink`].
+//!
+//! # Determinism
+//!
+//! Each run derives every RNG stream (partitioning, client loaders,
+//! compression stochasticity, transport dropout) from its own `cfg.seed`,
+//! and the sink excludes wall-clock time, so a sweep's `summary.csv` and
+//! `rounds/*.jsonl` are **byte-identical** for any `--threads` value and
+//! any completion order (pinned by `tests/sweep_engine.rs`).
+//!
+//! # Resume
+//!
+//! `resume: true` reads the existing `summary.csv` and skips every run
+//! whose row is already present **with a matching configuration prefix**
+//! (schema, run id, algo, dataset, model, transport, trainer policy, and
+//! every scalar setting — see [`sink::summary_key`]) **and** whose
+//! per-round JSONL file is still on disk; a row left over from an edited
+//! sweep file or different CLI options mismatches and is re-executed, so
+//! stale results are never silently reused, and JSONL files from runs no
+//! longer in the expansion are deleted. Rows are appended in
+//! completion order while running, so a killed sweep loses at most the
+//! in-flight runs; on completion the file is rewritten in canonical
+//! expansion order.
+
+use super::sink;
+use super::spec::{RunUnit, SweepSpec};
+use crate::fed::transport::parse_transport;
+use crate::fed::{run_with_transport, AlgorithmSpec};
+use crate::model::LocalTrainer;
+use crate::util::threadpool::ThreadPool;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// One compute plane per distinct model key, shared by every run in the
+/// sweep (a PJRT engine load is expensive; units overwhelmingly share one
+/// model). Building happens under the lock so a cold engine is loaded
+/// exactly once even when many workers race on the same key.
+type TrainerCache = Mutex<BTreeMap<String, Arc<dyn LocalTrainer>>>;
+
+/// Execution options for [`run_sweep`] (the CLI's `sweep run` flags).
+pub struct SweepOptions {
+    /// Root output directory; results land in `<out_dir>/<sweep-name>/`.
+    pub out_dir: PathBuf,
+    /// Sweep-level worker count (runs in flight at once; 0 = auto). Each
+    /// run's *inner* client pool is forced to 1 thread while the sweep
+    /// itself is parallel, unless the run config pins `threads` explicitly.
+    pub threads: usize,
+    /// Print the expanded matrix and exit without running anything.
+    pub dry_run: bool,
+    /// Skip runs whose summary row already exists with a matching
+    /// configuration prefix (see module docs).
+    pub resume: bool,
+    /// Multiplier on rounds/dataset sizes (the experiment `--scale`).
+    pub scale: f64,
+    /// Base-seed override (an explicit `seeds` axis still wins).
+    pub seed: Option<u64>,
+    /// Compute plane policy: `auto` | `native` | `pjrt`.
+    pub trainer: String,
+    /// AOT artifacts directory for the PJRT plane.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            out_dir: PathBuf::from("results"),
+            threads: 0,
+            dry_run: false,
+            resume: false,
+            scale: 1.0,
+            seed: None,
+            trainer: "auto".to_string(),
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+/// What [`run_sweep`] hands back.
+pub struct SweepOutcome {
+    /// The sweep's name (output subdirectory under `out_dir`).
+    pub name: String,
+    /// `<out_dir>/<name>` (unset for dry runs).
+    pub dir: PathBuf,
+    /// The expanded matrix, in canonical order.
+    pub units: Vec<RunUnit>,
+    /// Runs executed this invocation.
+    pub executed: usize,
+    /// Runs skipped because `--resume` found their summary row.
+    pub skipped: usize,
+    /// Canonical summary rows (empty for dry runs).
+    pub rows: Vec<String>,
+}
+
+/// Render the expanded matrix as the `--dry-run` table.
+pub fn format_matrix(units: &[RunUnit]) -> String {
+    let mut out = format!(
+        "{:<28}{:<34}{:<18}{:<22}{:<10}{:>7}{:>7}{:>7}{:>8}{:>8}{:>7}\n",
+        "run_id", "algo", "dataset", "model", "transport", "rounds", "local", "p", "alpha", "gamma", "seed"
+    );
+    for u in units {
+        out.push_str(&format!(
+            "{:<28}{:<34}{:<18}{:<22}{:<10}{:>7}{:>7}{:>7}{:>8}{:>8}{:>7}\n",
+            u.id,
+            u.algo,
+            u.cfg.dataset.key(),
+            u.model_key(),
+            u.transport,
+            u.cfg.rounds,
+            u.cfg.local_steps,
+            u.cfg.p,
+            u.cfg.dirichlet_alpha,
+            u.cfg.gamma,
+            u.cfg.seed,
+        ));
+    }
+    out
+}
+
+fn run_unit(
+    sweep_name: &str,
+    sweep_dir: &Path,
+    unit: &RunUnit,
+    opts: &SweepOptions,
+    sweep_workers: usize,
+    trainers: &TrainerCache,
+) -> Result<String, String> {
+    let mut cfg = unit.cfg.clone();
+    if cfg.threads == 0 && sweep_workers > 1 {
+        // The sweep already saturates the cores one-run-per-worker; a
+        // per-run auto-sized client pool would oversubscribe. Results are
+        // invariant to this (see module docs).
+        cfg.threads = 1;
+    }
+    let model = cfg.model_spec();
+    let trainer = {
+        let mut cache = trainers.lock().unwrap();
+        match cache.get(model.key()) {
+            Some(t) => Arc::clone(t),
+            None => {
+                let t = crate::runtime::build_trainer(&opts.trainer, &opts.artifacts_dir, &model);
+                cache.insert(model.key().to_string(), Arc::clone(&t));
+                t
+            }
+        }
+    };
+    let algo = AlgorithmSpec::parse(&unit.algo)?;
+    let mut transport = parse_transport(&unit.transport, cfg.n_clients, cfg.seed)?;
+    let t0 = std::time::Instant::now();
+    let log = run_with_transport(&cfg, trainer, &algo, transport.as_mut());
+    log::info!(
+        "[sweep {sweep_name}] {} done in {:.2?}: best_acc={:?}",
+        unit.id,
+        t0.elapsed(),
+        log.best_accuracy()
+    );
+    sink::write_rounds_jsonl(sweep_dir, &unit.id, &log)
+        .map_err(|e| format!("{}: writing rounds jsonl: {e}", unit.id))?;
+    Ok(sink::summary_row(sweep_name, &opts.trainer, unit, &log))
+}
+
+/// Expand and execute a sweep (see module docs). Returns an error if the
+/// spec fails validation, output files cannot be written, or any run fails;
+/// completed runs keep their appended summary rows either way.
+pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, String> {
+    let units = spec.expand(opts.scale, opts.seed)?;
+    if opts.dry_run {
+        return Ok(SweepOutcome {
+            name: spec.name.clone(),
+            dir: PathBuf::new(),
+            units,
+            executed: 0,
+            skipped: 0,
+            rows: Vec::new(),
+        });
+    }
+    let dir = opts.out_dir.join(&spec.name);
+    if !opts.resume {
+        // A fresh run replaces the whole result set: clear any per-round
+        // files from a previous (possibly differently-shaped) expansion so
+        // the documented `rounds/*.jsonl` glob never mixes in dead runs.
+        let _ = std::fs::remove_dir_all(dir.join("rounds"));
+    }
+    std::fs::create_dir_all(dir.join("rounds"))
+        .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+    let spath = sink::summary_path(&dir);
+    // A resumed row counts only if its full configuration prefix (algo,
+    // dataset, model, transport, rounds, …, seed) matches the freshly
+    // expanded unit — an edited sweep file or different CLI options must
+    // re-execute the run, never silently reuse a stale result.
+    let existing: BTreeMap<String, String> = if opts.resume {
+        let rows = sink::read_summary_rows(&spath);
+        units
+            .iter()
+            .filter_map(|u| {
+                // Resumable = summary row with a matching config prefix AND
+                // the per-round file still on disk (both outputs must be
+                // complete for the run to count as done).
+                let row = rows.get(&u.id)?;
+                let key = sink::summary_key(&spec.name, &opts.trainer, u);
+                (row.starts_with(&format!("{key},"))
+                    && sink::rounds_path(&dir, &u.id).is_file())
+                .then(|| (u.id.clone(), row.clone()))
+            })
+            .collect()
+    } else {
+        BTreeMap::new()
+    };
+    // Reconcile rounds/: drop JSONL files whose run id is not in the
+    // current expansion, so the documented `rounds/*.jsonl` glob never
+    // mixes in runs from a previous, differently-shaped sweep file.
+    if opts.resume {
+        let current: std::collections::BTreeSet<&str> =
+            units.iter().map(|u| u.id.as_str()).collect();
+        if let Ok(entries) = std::fs::read_dir(dir.join("rounds")) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let stale = name
+                    .to_str()
+                    .and_then(|n| n.strip_suffix(".jsonl"))
+                    .is_some_and(|stem| !current.contains(stem));
+                if stale {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+    let todo: Vec<RunUnit> = units
+        .iter()
+        .filter(|u| !existing.contains_key(&u.id))
+        .cloned()
+        .collect();
+    let skipped = units.len() - todo.len();
+
+    // Fresh header (non-resume truncates any stale file); progress rows are
+    // appended in completion order and canonicalized at the end.
+    if !opts.resume || !spath.is_file() {
+        sink::write_summary(&spath, &[]).map_err(|e| format!("cannot write summary: {e}"))?;
+    }
+    let progress = Mutex::new(
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&spath)
+            .map_err(|e| format!("cannot open summary for append: {e}"))?,
+    );
+
+    // Known trade-off: `ThreadPool::map` runs on scoped threads (the
+    // pool's persistent workers serve `execute`), so the pool here mainly
+    // provides the shared sizing policy and the fork-join primitive — its
+    // parked workers cost a few stacks for the sweep's duration, the same
+    // profile as the per-run Federation pools.
+    let pool = if opts.threads == 0 {
+        ThreadPool::with_default_size(todo.len().max(1))
+    } else {
+        ThreadPool::new(opts.threads.clamp(1, todo.len().max(1)))
+    };
+    let workers = pool.size();
+    log::info!(
+        "[sweep {}] {} runs ({} resumed), {} workers -> {}",
+        spec.name,
+        todo.len(),
+        skipped,
+        workers,
+        dir.display()
+    );
+
+    let trainers: TrainerCache = Mutex::new(BTreeMap::new());
+    let results: Vec<Result<String, String>> = pool.map(&todo, |_, unit| {
+        let row = run_unit(&spec.name, &dir, unit, opts, workers, &trainers)?;
+        if let Ok(mut f) = progress.lock() {
+            let _ = writeln!(f, "{row}");
+        }
+        Ok(row)
+    });
+
+    let mut by_id: BTreeMap<String, String> = existing;
+    let mut failures = Vec::new();
+    for (unit, result) in todo.iter().zip(results) {
+        match result {
+            Ok(row) => {
+                by_id.insert(unit.id.clone(), row);
+            }
+            Err(e) => failures.push(e),
+        }
+    }
+    if !failures.is_empty() {
+        return Err(format!(
+            "{} of {} runs failed; first error: {}",
+            failures.len(),
+            todo.len(),
+            failures[0]
+        ));
+    }
+    let rows: Vec<String> = units
+        .iter()
+        .map(|u| by_id.get(&u.id).cloned().expect("every run accounted for"))
+        .collect();
+    sink::write_summary(&spath, &rows).map_err(|e| format!("cannot write summary: {e}"))?;
+    Ok(SweepOutcome {
+        name: spec.name.clone(),
+        dir,
+        executed: todo.len(),
+        skipped,
+        units,
+        rows,
+    })
+}

@@ -1,0 +1,264 @@
+//! Structured result sink for sweeps: per-round JSONL and a per-run
+//! summary CSV, both schema-versioned and **bit-deterministic** — the same
+//! sweep produces byte-identical files at any `--threads` setting.
+//!
+//! # Layout
+//!
+//! ```text
+//! <out>/<sweep-name>/
+//!   summary.csv              one row per run (header below), canonical order
+//!   rounds/<run_id>.jsonl    one JSON object per communication round
+//! ```
+//!
+//! # Summary CSV schema (v1)
+//!
+//! ```text
+//! schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,
+//! local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,
+//! batch_size,eval_batch,eval_every,tau,data_dir,best_accuracy,
+//! final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,
+//! total_cost,total_sim_secs,dropped_clients
+//! ```
+//!
+//! The columns through `data_dir` are the run's complete *result-affecting*
+//! configuration — every `RunConfig` field except `threads` (results are
+//! bit-invariant to worker counts), plus the algorithm/transport specs and
+//! the compute-plane policy (`--trainer`) — and form the `--resume` match
+//! key (see [`summary_key`]); the rest are the run's result metrics. Fields
+//! never contain commas except possibly a pathological `data_dir` path —
+//! avoid commas in data directories.
+//!
+//! `best_accuracy`/`final_accuracy` are empty when the run never evaluated.
+//! Floats use Rust's shortest-roundtrip formatting (lossless). During a
+//! sweep, rows are appended in completion order (crash-resumable); on
+//! completion the file is rewritten in canonical expansion order.
+//!
+//! # Round JSONL schema (v1)
+//!
+//! One compact JSON object per round with keys `schema`, `run`, `round`,
+//! `local_steps`, `train_loss`, `test_loss`/`test_accuracy` (present only
+//! on evaluation rounds), `uplink_bits`, `downlink_bits`,
+//! `cum_uplink_bits`, `cum_downlink_bits`, `total_cost`, `sim_secs`,
+//! `cum_sim_secs`, `dropped_clients` (the last three only when a simulated
+//! transport produced them). Keys serialize in lexicographic order.
+//!
+//! Wall-clock time is deliberately **excluded** from both formats (it would
+//! break bit-reproducibility); per-run wall time goes to the log output.
+//! `tests/sweep_engine.rs` pins both schemas golden.
+
+use super::spec::{RunUnit, SCHEMA_VERSION};
+use crate::metrics::{MetricsLog, RoundRecord};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// The pinned v1 summary header (also the golden-test reference).
+pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients";
+
+/// `<out>/<sweep>/summary.csv`.
+pub fn summary_path(sweep_dir: &Path) -> PathBuf {
+    sweep_dir.join("summary.csv")
+}
+
+/// `<out>/<sweep>/rounds/<run_id>.jsonl`.
+pub fn rounds_path(sweep_dir: &Path, run_id: &str) -> PathBuf {
+    sweep_dir.join("rounds").join(format!("{run_id}.jsonl"))
+}
+
+fn opt_f64(v: Option<f64>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_default()
+}
+
+/// The configuration prefix of a summary row (everything before the metric
+/// columns: `schema` through `data_dir` — every result-affecting field of
+/// the run's [`crate::fed::RunConfig`] plus the algorithm/transport specs
+/// and the compute-plane policy; `threads` is deliberately excluded since
+/// results are bit-invariant to it). This is the key `--resume` matches
+/// existing rows against, so a resumed sweep can never silently reuse a
+/// result produced under different settings, including a different
+/// `--trainer`.
+pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
+    let cfg = &unit.cfg;
+    format!(
+        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir}",
+        schema = SCHEMA_VERSION,
+        id = unit.id,
+        algo = unit.algo,
+        dataset = cfg.dataset.key(),
+        model = unit.model_key(),
+        transport = unit.transport,
+        rounds = cfg.rounds,
+        local_steps = cfg.local_steps,
+        p = cfg.p,
+        alpha = cfg.dirichlet_alpha,
+        gamma = cfg.gamma,
+        seed = cfg.seed,
+        train_n = cfg.train_n,
+        test_n = cfg.test_n,
+        clients = cfg.n_clients,
+        sampled = cfg.clients_per_round,
+        batch_size = cfg.batch_size,
+        eval_batch = cfg.eval_batch,
+        eval_every = cfg.eval_every,
+        tau = cfg.tau,
+        data_dir = cfg.data_dir.display(),
+    )
+}
+
+/// Render one summary row for a finished run (no trailing newline).
+pub fn summary_row(sweep: &str, trainer: &str, unit: &RunUnit, log: &MetricsLog) -> String {
+    let last = log.records.last();
+    let dropped: u64 = log.records.iter().map(|r| r.dropped_clients).sum();
+    format!(
+        "{key},{best},{fin},{loss},{up},{down},{cost},{sim},{dropped}",
+        key = summary_key(sweep, trainer, unit),
+        best = opt_f64(log.best_accuracy()),
+        fin = opt_f64(log.final_accuracy()),
+        loss = opt_f64(log.final_train_loss()),
+        up = log.total_uplink_bits(),
+        down = last.map_or(0, |r| r.cum_downlink_bits),
+        cost = opt_f64(last.map(|r| r.total_cost)),
+        sim = opt_f64(last.map(|r| r.cum_sim_secs)),
+    )
+}
+
+/// Render one round as a compact JSONL line (no trailing newline).
+pub fn round_line(run_id: &str, r: &RoundRecord) -> String {
+    let mut o = Json::obj();
+    o.set("schema", (SCHEMA_VERSION as u64).into());
+    o.set("run", run_id.into());
+    o.set("round", r.round.into());
+    o.set("local_steps", r.local_steps.into());
+    o.set("train_loss", r.train_loss.into());
+    if let Some(l) = r.test_loss {
+        o.set("test_loss", l.into());
+    }
+    if let Some(a) = r.test_accuracy {
+        o.set("test_accuracy", a.into());
+    }
+    o.set("uplink_bits", r.uplink_bits.into());
+    o.set("downlink_bits", r.downlink_bits.into());
+    o.set("cum_uplink_bits", r.cum_uplink_bits.into());
+    o.set("cum_downlink_bits", r.cum_downlink_bits.into());
+    o.set("total_cost", r.total_cost.into());
+    if r.sim_secs > 0.0 || r.cum_sim_secs > 0.0 || r.dropped_clients > 0 {
+        o.set("sim_secs", r.sim_secs.into());
+        o.set("cum_sim_secs", r.cum_sim_secs.into());
+        o.set("dropped_clients", r.dropped_clients.into());
+    }
+    o.to_string_compact()
+}
+
+/// Write the full per-round JSONL file for one run.
+pub fn write_rounds_jsonl(
+    sweep_dir: &Path,
+    run_id: &str,
+    log: &MetricsLog,
+) -> std::io::Result<()> {
+    let path = rounds_path(sweep_dir, run_id);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    for r in &log.records {
+        out.push_str(&round_line(run_id, r));
+        out.push('\n');
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+/// Read an existing summary file into `run_id -> row` (resume support).
+/// A missing file is an empty map; rows with an unknown schema version are
+/// ignored so `--resume` never trusts stale-format results.
+pub fn read_summary_rows(path: &Path) -> BTreeMap<String, String> {
+    let mut rows = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return rows;
+    };
+    let want_schema = SCHEMA_VERSION.to_string();
+    for line in text.lines().skip(1) {
+        let mut fields = line.split(',');
+        let schema_ok = fields.next() == Some(want_schema.as_str());
+        if let (true, Some(id)) = (schema_ok, fields.next()) {
+            rows.insert(id.to_string(), line.to_string());
+        }
+    }
+    rows
+}
+
+/// Rewrite the summary file with `rows` in canonical (expansion) order.
+pub fn write_summary(path: &Path, rows: &[String]) -> std::io::Result<()> {
+    let mut out = String::with_capacity(SUMMARY_HEADER.len() + 1 + rows.len() * 128);
+    out.push_str(SUMMARY_HEADER);
+    out.push('\n');
+    for row in rows {
+        out.push_str(row);
+        out.push('\n');
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            local_steps: 7,
+            train_loss: 0.5,
+            test_loss: (round == 1).then_some(0.25),
+            test_accuracy: (round == 1).then_some(0.75),
+            uplink_bits: 100,
+            downlink_bits: 200,
+            cum_uplink_bits: 100 * (round as u64 + 1),
+            cum_downlink_bits: 200 * (round as u64 + 1),
+            total_cost: 1.07 * (round + 1) as f64,
+            wall_secs: 123.0, // must not leak into the sink
+            sim_secs: 0.0,
+            cum_sim_secs: 0.0,
+            dropped_clients: 0,
+        }
+    }
+
+    #[test]
+    fn round_line_is_pinned_and_excludes_wall_clock() {
+        let line = round_line("r000-x", &record(0));
+        assert_eq!(
+            line,
+            "{\"cum_downlink_bits\":200,\"cum_uplink_bits\":100,\"downlink_bits\":200,\
+             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":1,\
+             \"total_cost\":1.07,\"train_loss\":0.5,\"uplink_bits\":100}"
+        );
+        let eval = round_line("r000-x", &record(1));
+        assert!(eval.contains("\"test_accuracy\":0.75"));
+        assert!(eval.contains("\"test_loss\":0.25"));
+        assert!(!eval.contains("wall"), "{eval}");
+    }
+
+    #[test]
+    fn summary_roundtrips_through_reader() {
+        let dir = std::env::temp_dir().join(format!("fedcomloc_sink_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = summary_path(&dir);
+        let rows = vec![
+            format!("{SCHEMA_VERSION},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,0.8,0.7,0.3,1,2,3,0,0"),
+            format!("{SCHEMA_VERSION},r001-b,s,scaffold,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,,,,1,2,3,0,0"),
+        ];
+        write_summary(&path, &rows).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with(SUMMARY_HEADER));
+        let back = read_summary_rows(&path);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("r000-a"), Some(&rows[0]));
+        // Foreign-schema rows are ignored.
+        write_summary(&path, &["9,r009-z,s,x,m,m,t,native,1,1,0,0,0,0,1,1,1,1,1,1,1,0,d,,,,0,0,0,0,0".to_string()])
+            .unwrap();
+        assert!(read_summary_rows(&path).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

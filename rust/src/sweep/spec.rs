@@ -1,0 +1,676 @@
+//! The declarative sweep schema: [`SweepSpec`] (parsed from TOML) and its
+//! expansion into a flat, validated list of [`RunUnit`]s.
+//!
+//! A sweep file is one document:
+//!
+//! ```toml
+//! schema = 1
+//! name  = "sparsity"                      # output dir + run-id prefix
+//! title = "TopK sparsity ratios on FedMNIST"
+//! paper = "Table 1, Figure 1"
+//!
+//! [base]                                  # fixed run settings
+//! preset = "scaled-mnist"                 # config::presets starting point
+//! rounds = 60                             # any [run]-table key (config::apply_kv)
+//!
+//! [[grid]]                                # one cross-product block
+//! algos  = ["fedcomloc-com:none", "fedcomloc-com:topk:0.1"]
+//! alphas = [0.1, 0.7]                     # scalar grids multiply out
+//!
+//! [[grid]]                                # further blocks append their
+//! preset = "scaled-cifar"                 # own cross-products (with an
+//! algos  = ["fedcomloc-com:q:8"]          # optional per-block preset)
+//! ```
+//!
+//! Axis keys (each accepts a scalar or a list; a missing axis inherits the
+//! base value): `algos`, `models`, `datasets`, `transports` over the
+//! string-keyed registries, plus scalar grids `rounds`, `local_iters`,
+//! `alphas`, `gammas`, `ps`, `seeds`. Any *other* key inside a `[[grid]]`
+//! block is a fixed per-block override routed through
+//! [`crate::config::apply_kv`], exactly like a `[run]`-table key.
+//!
+//! Expansion order is canonical and documented: grid blocks in file order;
+//! within a block, nested loops over dataset → model → transport → algo →
+//! rounds → local_iters → alpha → gamma → p → seed. Every expanded unit is
+//! fully validated (registry specs resolve, model/dataset dims agree)
+//! before anything runs, so a typo fails the whole sweep up front instead
+//! of panicking inside a worker thread.
+
+use crate::config::{self, presets};
+use crate::data::DatasetSpec;
+use crate::fed::transport::parse_transport;
+use crate::fed::{AlgorithmSpec, RunConfig};
+use crate::model::ModelSpec;
+use crate::util::toml::{self, TomlTable, TomlValue};
+
+/// Version of the sweep-file schema this crate reads and of the result
+/// schema it writes (stamped into every summary row and JSONL line).
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// One `[[grid]]` block: registry axes plus scalar grids, with optional
+/// per-block preset and fixed overrides. Empty axes inherit the base value.
+#[derive(Debug, Clone, Default)]
+pub struct GridBlock {
+    /// Per-block `config::presets` starting point (overrides the sweep's).
+    pub preset: Option<String>,
+    /// Fixed per-block `[run]`-table overrides, applied in key order (the
+    /// TOML table is sorted — don't set one setting through two alias
+    /// keys like `gamma`/`lr`).
+    pub fixed: Vec<(String, TomlValue)>,
+    /// Algorithm registry specs (required, at least one).
+    pub algos: Vec<String>,
+    /// Model registry specs (`"default"` = the dataset's pairing).
+    pub models: Vec<String>,
+    /// Dataset registry specs.
+    pub datasets: Vec<String>,
+    /// Transport specs (`inproc`, `simnet[:...]`).
+    pub transports: Vec<String>,
+    /// Communication-round counts.
+    pub rounds: Vec<usize>,
+    /// Local iterations per round (baseline algorithms' `local_steps`).
+    pub local_iters: Vec<usize>,
+    /// Dirichlet heterogeneity factors α.
+    pub alphas: Vec<f64>,
+    /// Learning rates γ.
+    pub gammas: Vec<f64>,
+    /// Scaffnew communication probabilities p.
+    pub ps: Vec<f64>,
+    /// RNG seeds.
+    pub seeds: Vec<u64>,
+}
+
+/// A parsed, not-yet-expanded sweep file.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Sweep name: the output subdirectory and run-id prefix.
+    pub name: String,
+    /// Human-readable one-liner shown by `sweep list` / `sweep run`.
+    pub title: String,
+    /// Paper figure/table this sweep reproduces (empty if none).
+    pub paper: String,
+    /// `config::presets` starting point (default `scaled-mnist`).
+    pub preset: String,
+    /// Fixed `[base]` overrides applied after the preset, in key order
+    /// (the TOML table is sorted — don't set one setting through two
+    /// alias keys like `gamma`/`lr`).
+    pub base: Vec<(String, TomlValue)>,
+    /// Cross-product blocks, expanded in file order.
+    pub grids: Vec<GridBlock>,
+}
+
+/// One fully-resolved run of an expanded sweep: the algorithm + transport
+/// registry specs and the complete [`RunConfig`]. Units are independent —
+/// each seeds its own RNG streams from `cfg.seed`, so sweep results do not
+/// depend on execution order or worker count.
+#[derive(Debug, Clone)]
+pub struct RunUnit {
+    /// Position in the canonical expansion order (also the resume key).
+    pub index: usize,
+    /// Stable, filesystem-safe id: `r<index>-<algo slug>`.
+    pub id: String,
+    /// Algorithm registry spec, e.g. `fedcomloc-com:topk:0.1`.
+    pub algo: String,
+    /// Transport spec, e.g. `inproc` or `simnet:10:50:0.1:4`.
+    pub transport: String,
+    /// The run's complete configuration.
+    pub cfg: RunConfig,
+}
+
+impl RunUnit {
+    /// The effective model key (explicit override or dataset pairing).
+    pub fn model_key(&self) -> String {
+        self.cfg.model_spec().key().to_string()
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '.' || c == '-' {
+                c.to_ascii_lowercase()
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+fn list_of_strings(key: &str, v: &TomlValue) -> Result<Vec<String>, String> {
+    let one = |x: &TomlValue| {
+        x.as_str()
+            .map(str::to_string)
+            .ok_or_else(|| format!("sweep axis '{key}': expected string entries"))
+    };
+    match v {
+        TomlValue::Arr(items) => items.iter().map(one).collect(),
+        other => Ok(vec![one(other)?]),
+    }
+}
+
+fn list_of_f64(key: &str, v: &TomlValue) -> Result<Vec<f64>, String> {
+    let one = |x: &TomlValue| {
+        x.as_f64()
+            .ok_or_else(|| format!("sweep axis '{key}': expected numeric entries"))
+    };
+    match v {
+        TomlValue::Arr(items) => items.iter().map(one).collect(),
+        other => Ok(vec![one(other)?]),
+    }
+}
+
+fn list_of_usize(key: &str, v: &TomlValue) -> Result<Vec<usize>, String> {
+    let one = |x: &TomlValue| {
+        x.as_usize()
+            .ok_or_else(|| format!("sweep axis '{key}': expected non-negative integers"))
+    };
+    match v {
+        TomlValue::Arr(items) => items.iter().map(one).collect(),
+        other => Ok(vec![one(other)?]),
+    }
+}
+
+impl GridBlock {
+    fn from_table(table: &TomlTable) -> Result<GridBlock, String> {
+        let mut block = GridBlock::default();
+        for (key, value) in table {
+            match key.as_str() {
+                "preset" => {
+                    let name = value
+                        .as_str()
+                        .ok_or_else(|| "grid 'preset' must be a string".to_string())?;
+                    presets::by_name(name).ok_or_else(|| {
+                        format!(
+                            "unknown preset '{name}' (have: {})",
+                            presets::names().join(", ")
+                        )
+                    })?;
+                    block.preset = Some(name.to_string());
+                }
+                "algos" => block.algos = list_of_strings(key, value)?,
+                "models" => block.models = list_of_strings(key, value)?,
+                "datasets" => block.datasets = list_of_strings(key, value)?,
+                "transports" => block.transports = list_of_strings(key, value)?,
+                "rounds" => block.rounds = list_of_usize(key, value)?,
+                "local_iters" => block.local_iters = list_of_usize(key, value)?,
+                "alphas" => block.alphas = list_of_f64(key, value)?,
+                "gammas" => block.gammas = list_of_f64(key, value)?,
+                "ps" => block.ps = list_of_f64(key, value)?,
+                "seeds" => {
+                    block.seeds = list_of_usize(key, value)?.into_iter().map(|s| s as u64).collect()
+                }
+                // Anything else is a fixed per-block run-config override;
+                // config::apply_kv validates it at expansion time.
+                _ => block.fixed.push((key.clone(), value.clone())),
+            }
+        }
+        if block.algos.is_empty() {
+            return Err("every [[grid]] block needs an 'algos' axis".to_string());
+        }
+        Ok(block)
+    }
+
+    /// Number of runs this block expands to.
+    pub fn len(&self) -> usize {
+        let axis = |n: usize| n.max(1);
+        axis(self.datasets.len())
+            * axis(self.models.len())
+            * axis(self.transports.len())
+            * self.algos.len()
+            * axis(self.rounds.len())
+            * axis(self.local_iters.len())
+            * axis(self.alphas.len())
+            * axis(self.gammas.len())
+            * axis(self.ps.len())
+            * axis(self.seeds.len())
+    }
+
+    /// True when the block expands to no runs (never, post-validation).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl SweepSpec {
+    /// Parse a sweep document from TOML text.
+    pub fn parse_str(text: &str) -> Result<SweepSpec, String> {
+        let doc = toml::parse(text).map_err(|e| e.to_string())?;
+        let name = doc
+            .get("", "name")
+            .and_then(TomlValue::as_str)
+            .ok_or_else(|| "sweep file needs a top-level string 'name'".to_string())?
+            .to_string();
+        if name.is_empty() || name != sanitize(&name) {
+            return Err(format!(
+                "sweep name '{name}' must be non-empty lowercase [a-z0-9.-_] (it names files)"
+            ));
+        }
+        if let Some(v) = doc.get("", "schema") {
+            match v.as_i64() {
+                Some(SCHEMA_VERSION) => {}
+                _ => {
+                    return Err(format!(
+                        "unsupported sweep schema {v:?} (this build reads schema = {SCHEMA_VERSION})"
+                    ))
+                }
+            }
+        }
+        let title = doc
+            .get("", "title")
+            .and_then(TomlValue::as_str)
+            .unwrap_or(&name)
+            .to_string();
+        let paper = doc
+            .get("", "paper")
+            .and_then(TomlValue::as_str)
+            .unwrap_or("")
+            .to_string();
+
+        let mut preset = "scaled-mnist".to_string();
+        let mut base = Vec::new();
+        if let Some(table) = doc.tables.get("base") {
+            for (key, value) in table {
+                if key == "preset" {
+                    let p = value
+                        .as_str()
+                        .ok_or_else(|| "base 'preset' must be a string".to_string())?;
+                    presets::by_name(p).ok_or_else(|| {
+                        format!("unknown preset '{p}' (have: {})", presets::names().join(", "))
+                    })?;
+                    preset = p.to_string();
+                } else {
+                    base.push((key.clone(), value.clone()));
+                }
+            }
+        }
+
+        // Strict schema: a stray key, table, or array (e.g. `alphas = […]`
+        // at the top level instead of inside a [[grid]] block, or a
+        // misspelled `[[gird]]`) must fail loudly, not silently shrink the
+        // matrix the user believes they are sweeping.
+        for key in doc.tables.get("").map(|t| t.keys()).into_iter().flatten() {
+            if !matches!(key.as_str(), "name" | "title" | "paper" | "schema") {
+                return Err(format!(
+                    "unknown top-level key '{key}' (axes like '{key}' belong inside a [[grid]] block; \
+                     top level takes name/title/paper/schema)"
+                ));
+            }
+        }
+        for table in doc.tables.keys() {
+            if !matches!(table.as_str(), "" | "base") {
+                return Err(format!("unknown table [{table}] (have: [base])"));
+            }
+        }
+        for array in doc.arrays.keys() {
+            if array != "grid" {
+                return Err(format!("unknown array-of-tables [[{array}]] (have: [[grid]])"));
+            }
+        }
+
+        let grid_tables = doc.array_of("grid");
+        if grid_tables.is_empty() {
+            return Err("sweep file needs at least one [[grid]] block".to_string());
+        }
+        let grids = grid_tables
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                GridBlock::from_table(t).map_err(|e| format!("[[grid]] block {}: {e}", i + 1))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        Ok(SweepSpec {
+            name,
+            title,
+            paper,
+            preset,
+            base,
+            grids,
+        })
+    }
+
+    /// Load a sweep document from a file.
+    pub fn load(path: &std::path::Path) -> Result<SweepSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        SweepSpec::parse_str(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Total number of runs across all grid blocks.
+    pub fn num_runs(&self) -> usize {
+        self.grids.iter().map(GridBlock::len).sum()
+    }
+
+    /// Expand every grid block into validated [`RunUnit`]s, in canonical
+    /// order. `scale` multiplies rounds/dataset sizes exactly like the
+    /// experiment presets' `--scale`; `seed_override` (the CLI `--seed`)
+    /// replaces the base seed but loses to an explicit `seeds` axis.
+    pub fn expand(&self, scale: f64, seed_override: Option<u64>) -> Result<Vec<RunUnit>, String> {
+        let mut units = Vec::with_capacity(self.num_runs());
+        for (bi, block) in self.grids.iter().enumerate() {
+            self.expand_block(block, scale, seed_override, &mut units)
+                .map_err(|e| format!("sweep '{}', [[grid]] block {}: {e}", self.name, bi + 1))?;
+        }
+        Ok(units)
+    }
+
+    fn base_cfg(&self, block: &GridBlock, scale: f64, seed_override: Option<u64>) -> Result<RunConfig, String> {
+        let preset = block.preset.as_deref().unwrap_or(&self.preset);
+        let mut cfg = presets::by_name(preset)
+            .ok_or_else(|| format!("unknown preset '{preset}'"))?;
+        for (key, value) in self.base.iter().chain(&block.fixed) {
+            config::apply_kv(&mut cfg, key, value).map_err(|e| format!("key '{key}': {e}"))?;
+        }
+        if let Some(seed) = seed_override {
+            cfg.seed = seed;
+        }
+        config::apply_scale(&mut cfg, scale);
+        Ok(cfg)
+    }
+
+    fn expand_block(
+        &self,
+        block: &GridBlock,
+        scale: f64,
+        seed_override: Option<u64>,
+        units: &mut Vec<RunUnit>,
+    ) -> Result<(), String> {
+        let base = self.base_cfg(block, scale, seed_override)?;
+
+        // Pre-resolve the registry axes once per block.
+        let datasets: Vec<Option<DatasetSpec>> = if block.datasets.is_empty() {
+            vec![None]
+        } else {
+            block
+                .datasets
+                .iter()
+                .map(|s| DatasetSpec::parse(s).map(Some))
+                .collect::<Result<_, _>>()?
+        };
+        let models: Vec<Option<Option<ModelSpec>>> = if block.models.is_empty() {
+            vec![None]
+        } else {
+            block
+                .models
+                .iter()
+                .map(|s| {
+                    if s == "default" {
+                        Ok(Some(None))
+                    } else {
+                        ModelSpec::parse(s).map(|m| Some(Some(m)))
+                    }
+                })
+                .collect::<Result<_, _>>()?
+        };
+        for algo in &block.algos {
+            AlgorithmSpec::parse(algo)?;
+        }
+        let transports: Vec<Option<String>> = if block.transports.is_empty() {
+            vec![None]
+        } else {
+            block.transports.iter().map(|t| Some(t.clone())).collect()
+        };
+
+        let opt =
+            |xs: &[usize]| -> Vec<Option<usize>> {
+                if xs.is_empty() {
+                    vec![None]
+                } else {
+                    xs.iter().map(|&x| Some(x)).collect()
+                }
+            };
+        let optf = |xs: &[f64]| -> Vec<Option<f64>> {
+            if xs.is_empty() {
+                vec![None]
+            } else {
+                xs.iter().map(|&x| Some(x)).collect()
+            }
+        };
+        let seeds: Vec<Option<u64>> = if block.seeds.is_empty() {
+            vec![None]
+        } else {
+            block.seeds.iter().map(|&s| Some(s)).collect()
+        };
+        let (rounds, local_iters) = (opt(&block.rounds), opt(&block.local_iters));
+        let (alphas, gammas, ps) = (optf(&block.alphas), optf(&block.gammas), optf(&block.ps));
+
+        for dataset in &datasets {
+            for model in &models {
+                for transport in &transports {
+                    for algo in &block.algos {
+                        for &r in &rounds {
+                            for &li in &local_iters {
+                                for &alpha in &alphas {
+                                    for &gamma in &gammas {
+                                        for &p in &ps {
+                                            for &seed in &seeds {
+                                                let mut cfg = base.clone();
+                                                if let Some(ds) = dataset {
+                                                    cfg.dataset = ds.clone();
+                                                }
+                                                if let Some(m) = model {
+                                                    cfg.model = m.clone();
+                                                }
+                                                if let Some(r) = r {
+                                                    cfg.rounds = r;
+                                                }
+                                                if let Some(li) = li {
+                                                    cfg.local_steps = li;
+                                                }
+                                                if let Some(a) = alpha {
+                                                    cfg.dirichlet_alpha = a;
+                                                }
+                                                if let Some(g) = gamma {
+                                                    cfg.gamma = g as f32;
+                                                }
+                                                if let Some(p) = p {
+                                                    cfg.p = p;
+                                                }
+                                                if let Some(s) = seed {
+                                                    cfg.seed = s;
+                                                }
+                                                let transport_spec = transport
+                                                    .clone()
+                                                    .unwrap_or_else(|| "inproc".to_string());
+                                                validate_unit(&cfg, &transport_spec)?;
+                                                let index = units.len();
+                                                units.push(RunUnit {
+                                                    index,
+                                                    id: format!("r{index:03}-{}", sanitize(algo)),
+                                                    algo: algo.clone(),
+                                                    transport: transport_spec,
+                                                    cfg,
+                                                });
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The model/dataset/topology agreement checks `Federation::new` asserts,
+/// surfaced as errors at expansion time so a bad combination fails the
+/// sweep up front instead of panicking in a worker thread.
+fn validate_unit(cfg: &RunConfig, transport: &str) -> Result<(), String> {
+    parse_transport(transport, cfg.n_clients, cfg.seed)?;
+    if cfg.clients_per_round > cfg.n_clients {
+        return Err(format!(
+            "clients_per_round ({}) exceeds n_clients ({})",
+            cfg.clients_per_round, cfg.n_clients
+        ));
+    }
+    if cfg.rounds == 0 {
+        return Err("rounds must be at least 1".to_string());
+    }
+    let model = cfg.model_spec();
+    let built = model.build();
+    if built.input_dim() != cfg.dataset.feature_dim() {
+        return Err(format!(
+            "model '{}' expects input dim {} but dataset '{}' provides {}",
+            model.key(),
+            built.input_dim(),
+            cfg.dataset.key(),
+            cfg.dataset.feature_dim()
+        ));
+    }
+    if built.num_classes() != cfg.dataset.num_classes() {
+        return Err(format!(
+            "model '{}' emits {} classes but dataset '{}' has {}",
+            model.key(),
+            built.num_classes(),
+            cfg.dataset.key(),
+            cfg.dataset.num_classes()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = r#"
+schema = 1
+name = "tiny"
+title = "tiny test sweep"
+
+[base]
+preset = "smoke"
+train_n = 600
+test_n = 150
+
+[[grid]]
+algos = ["fedavg", "scaffold"]
+alphas = [0.1, 0.7]
+
+[[grid]]
+algos = ["fedcomloc-com:topk:0.5"]
+rounds = 3
+"#;
+
+    #[test]
+    fn parses_and_counts() {
+        let spec = SweepSpec::parse_str(TINY).unwrap();
+        assert_eq!(spec.name, "tiny");
+        assert_eq!(spec.preset, "smoke");
+        assert_eq!(spec.grids.len(), 2);
+        assert_eq!(spec.grids[0].len(), 4);
+        assert_eq!(spec.grids[1].len(), 1);
+        assert_eq!(spec.num_runs(), 5);
+    }
+
+    #[test]
+    fn expansion_is_canonical_and_validated() {
+        let spec = SweepSpec::parse_str(TINY).unwrap();
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 5);
+        // Canonical nesting: algo outside alpha.
+        let got: Vec<(String, f64, usize)> = units
+            .iter()
+            .map(|u| (u.algo.clone(), u.cfg.dirichlet_alpha, u.cfg.rounds))
+            .collect();
+        assert_eq!(got[0], ("fedavg".to_string(), 0.1, 5));
+        assert_eq!(got[1], ("fedavg".to_string(), 0.7, 5));
+        assert_eq!(got[2], ("scaffold".to_string(), 0.1, 5));
+        assert_eq!(got[3], ("scaffold".to_string(), 0.7, 5));
+        assert_eq!(got[4], ("fedcomloc-com:topk:0.5".to_string(), 0.7, 3));
+        // Base overrides land everywhere; ids are stable.
+        assert!(units.iter().all(|u| u.cfg.train_n == 600));
+        assert_eq!(units[0].id, "r000-fedavg");
+        assert_eq!(units[4].id, "r004-fedcomloc-com_topk_0.5");
+        // Index is the resume key: re-expansion reproduces it.
+        let again = spec.expand(1.0, None).unwrap();
+        assert!(units.iter().zip(&again).all(|(a, b)| a.id == b.id));
+    }
+
+    #[test]
+    fn seed_override_loses_to_seed_axis() {
+        let spec = SweepSpec::parse_str(
+            "name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nseeds = [7, 9]\n",
+        )
+        .unwrap();
+        let units = spec.expand(1.0, Some(5)).unwrap();
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[0].cfg.seed, 7);
+        assert_eq!(units[1].cfg.seed, 9);
+        let spec2 =
+            SweepSpec::parse_str("name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\n").unwrap();
+        assert_eq!(spec2.expand(1.0, Some(5)).unwrap()[0].cfg.seed, 5);
+    }
+
+    #[test]
+    fn scale_matches_experiment_semantics() {
+        let spec =
+            SweepSpec::parse_str("name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\n").unwrap();
+        let units = spec.expand(0.5, None).unwrap();
+        // scaled-mnist default: rounds 60 -> 30, train 12000 -> 6000.
+        assert_eq!(units[0].cfg.rounds, 30);
+        assert_eq!(units[0].cfg.train_n, 6_000);
+    }
+
+    #[test]
+    fn explicit_axis_wins_over_scale() {
+        let spec = SweepSpec::parse_str(
+            "name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nrounds = [4]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.expand(0.5, None).unwrap()[0].cfg.rounds, 4);
+    }
+
+    #[test]
+    fn bad_specs_fail_up_front() {
+        for (toml, needle) in [
+            ("[[grid]]\nalgos = [\"fedavg\"]\n", "name"),
+            ("name = \"s\"\n", "[[grid]]"),
+            ("name = \"s\"\nschema = 2\n[[grid]]\nalgos = [\"fedavg\"]\n", "schema"),
+            ("name = \"s\"\n[[grid]]\nalphas = [0.1]\n", "algos"),
+            ("name = \"s\"\n[[grid]]\nalgos = [\"wat\"]\n", "unknown algorithm"),
+            ("name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\ndatasets = [\"imagenet\"]\n", "unknown dataset"),
+            ("name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nmodels = [\"nope\"]\n", "unknown model"),
+            ("name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\ntransports = [\"pigeon\"]\n", "unknown transport"),
+            ("name = \"s\"\n[base]\npreset = \"nope\"\n[[grid]]\nalgos = [\"fedavg\"]\n", "preset"),
+            ("name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nwat = 1\n", "unknown key"),
+            ("name = \"UPPER\"\n[[grid]]\nalgos = [\"fedavg\"]\n", "lowercase"),
+            // Strays outside [base]/[[grid]] must fail loudly, not shrink
+            // the matrix (top-level axis, misspelled table/array names).
+            ("name = \"s\"\nseeds = [1, 2]\n[[grid]]\nalgos = [\"fedavg\"]\n", "top-level"),
+            ("name = \"s\"\n[bass]\nrounds = 2\n[[grid]]\nalgos = [\"fedavg\"]\n", "unknown table"),
+            ("name = \"s\"\n[[gird]]\nalgos = [\"x\"]\n[[grid]]\nalgos = [\"fedavg\"]\n", "unknown array"),
+        ] {
+            let err = SweepSpec::parse_str(toml)
+                .and_then(|s| s.expand(1.0, None).map(|_| s))
+                .map(|_| ())
+                .unwrap_err();
+            assert!(err.contains(needle), "toml: {toml}\nerr: {err}");
+        }
+    }
+
+    #[test]
+    fn model_dataset_mismatch_rejected_at_expansion() {
+        let spec = SweepSpec::parse_str(
+            "name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nmodels = [\"linear:64\"]\n",
+        )
+        .unwrap();
+        let err = spec.expand(1.0, None).unwrap_err();
+        assert!(err.contains("input dim"), "{err}");
+    }
+
+    #[test]
+    fn models_default_keyword_restores_pairing() {
+        let spec = SweepSpec::parse_str(
+            "name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nmodels = [\"default\", \"linear:784\"]\n",
+        )
+        .unwrap();
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[0].model_key(), "mlp");
+        assert_eq!(units[1].model_key(), "linear:784");
+    }
+}

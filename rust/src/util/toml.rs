@@ -1,10 +1,12 @@
-//! Minimal TOML parser for experiment config files.
+//! Minimal TOML parser for experiment and sweep config files.
 //!
-//! Supports the subset the config system uses: `[table]` headers (one level,
-//! dotted keys inside a table are not needed), `key = value` pairs with
-//! strings, integers, floats, booleans, and flat arrays of scalars, plus
-//! `#` comments. Values are surfaced as [`TomlValue`]; the typed config
-//! layer (`config/`) does schema validation and defaulting.
+//! Supports the subset the config and sweep systems use: `[table]` headers
+//! (one level, dotted keys inside a table are not needed), `[[array]]`
+//! array-of-tables headers (one level — the `[[grid]]` blocks of sweep
+//! specs), `key = value` pairs with strings, integers, floats, booleans,
+//! and flat arrays of scalars, plus `#` comments. Values are surfaced as
+//! [`TomlValue`]; the typed layers above (`config/`, `sweep/`) do schema
+//! validation and defaulting.
 
 use std::collections::BTreeMap;
 
@@ -59,15 +61,29 @@ impl TomlValue {
     }
 }
 
-/// A parsed document: top-level keys live in table "" (empty string).
+/// One `key = value` table (used both for `[name]` tables and for each
+/// element of a `[[name]]` array of tables).
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed document: top-level keys live in table "" (empty string);
+/// `[[name]]` blocks accumulate, in file order, under `arrays`.
 #[derive(Debug, Default, Clone)]
 pub struct TomlDoc {
-    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+    /// `[name]` tables (and the implicit top-level table "").
+    pub tables: BTreeMap<String, TomlTable>,
+    /// `[[name]]` arrays of tables, in file order.
+    pub arrays: BTreeMap<String, Vec<TomlTable>>,
 }
 
 impl TomlDoc {
+    /// Look up `key` in `[table]` ("" = top level).
     pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
         self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    /// All `[[name]]` blocks, in file order (empty slice if none).
+    pub fn array_of(&self, name: &str) -> &[TomlTable] {
+        self.arrays.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 }
 
@@ -85,10 +101,19 @@ impl std::fmt::Display for TomlError {
 
 impl std::error::Error for TomlError {}
 
+/// Where subsequent `key = value` lines land.
+enum Target {
+    /// A `[name]` table ("" = top level).
+    Table(String),
+    /// The latest element of a `[[name]]` array of tables.
+    Array(String),
+}
+
+/// Parse a TOML document (see module docs for the supported subset).
 pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
     let mut doc = TomlDoc::default();
-    let mut current = String::new();
-    doc.tables.entry(current.clone()).or_default();
+    let mut current = Target::Table(String::new());
+    doc.tables.entry(String::new()).or_default();
 
     for (lineno, raw) in input.lines().enumerate() {
         let line = strip_comment(raw).trim();
@@ -99,6 +124,18 @@ pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
             line: lineno + 1,
             msg: msg.to_string(),
         };
+        if let Some(rest) = line.strip_prefix("[[") {
+            let name = rest
+                .strip_suffix("]]")
+                .ok_or_else(|| err("unterminated array-of-tables header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err("empty array-of-tables name"));
+            }
+            doc.arrays.entry(name.to_string()).or_default().push(TomlTable::new());
+            current = Target::Array(name.to_string());
+            continue;
+        }
         if let Some(rest) = line.strip_prefix('[') {
             let name = rest
                 .strip_suffix(']')
@@ -107,8 +144,8 @@ pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
             if name.is_empty() {
                 return Err(err("empty table name"));
             }
-            current = name.to_string();
-            doc.tables.entry(current.clone()).or_default();
+            doc.tables.entry(name.to_string()).or_default();
+            current = Target::Table(name.to_string());
             continue;
         }
         let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
@@ -117,10 +154,11 @@ pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
             return Err(err("empty key"));
         }
         let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
-        doc.tables
-            .get_mut(&current)
-            .unwrap()
-            .insert(key.to_string(), value);
+        let table = match &current {
+            Target::Table(name) => doc.tables.get_mut(name).unwrap(),
+            Target::Array(name) => doc.arrays.get_mut(name).unwrap().last_mut().unwrap(),
+        };
+        table.insert(key.to_string(), value);
     }
     Ok(doc)
 }
@@ -282,6 +320,44 @@ enabled = true
         assert_eq!(err.line, 2);
         let err = parse("[table\nx = 1").unwrap_err();
         assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn array_of_tables_accumulate_in_order() {
+        let text = r#"
+name = "sweep"
+
+[base]
+rounds = 5
+
+[[grid]]
+algos = ["fedavg"]
+alphas = [0.1, 0.7]
+
+[[grid]]
+algos = ["scaffold"]
+rounds = 9
+"#;
+        let doc = parse(text).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "sweep");
+        assert_eq!(doc.get("base", "rounds").unwrap().as_usize().unwrap(), 5);
+        let grids = doc.array_of("grid");
+        assert_eq!(grids.len(), 2);
+        assert_eq!(
+            grids[0].get("algos").unwrap().as_arr().unwrap()[0]
+                .as_str()
+                .unwrap(),
+            "fedavg"
+        );
+        assert_eq!(grids[0].get("alphas").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(grids[1].get("rounds").unwrap().as_usize().unwrap(), 9);
+        assert!(doc.array_of("nope").is_empty());
+    }
+
+    #[test]
+    fn array_of_tables_header_errors() {
+        assert_eq!(parse("[[grid]\nx = 1").unwrap_err().line, 1);
+        assert_eq!(parse("[[ ]]").unwrap_err().line, 1);
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! End-to-end pins for the declarative sweep engine (ISSUE 3 acceptance):
+//!
+//! * the summary-CSV / round-JSONL schemas are golden;
+//! * a multi-threaded sweep is **byte-identical** to the same sweep at
+//!   `--threads 1` (per-run RNG streams make results order-independent);
+//! * every run a sweep executes is bit-identical to driving the same
+//!   `RunConfig` + algorithm spec through `fed::run_with_transport`
+//!   directly — the successor to the legacy hand-written experiment
+//!   modules' metric equality;
+//! * `--resume` skips exactly the runs whose summary rows exist and
+//!   reproduces the full canonical summary;
+//! * shipped presets expand to the legacy experiment grids.
+
+use fedcomloc::fed::transport::parse_transport;
+use fedcomloc::fed::{run_with_transport, AlgorithmSpec};
+use fedcomloc::sweep::{self, sink, SweepOptions, SweepSpec};
+use std::path::{Path, PathBuf};
+
+/// A fast sweep: convex softmax workload (d = 132), one SimNet block to
+/// exercise the simulated-network columns.
+const TINY_SWEEP: &str = r#"
+schema = 1
+name = "enginetest"
+title = "engine test sweep"
+
+[base]
+preset = "smoke"
+dataset = "synthetic:32-c4"
+train_n = 400
+test_n = 100
+clients = 6
+sampled = 3
+rounds = 3
+eval_every = 2
+batch_size = 16
+eval_batch = 32
+
+[[grid]]
+algos = ["fedcomloc-com:topk:0.5", "fedavg"]
+alphas = [0.3, 0.8]
+
+[[grid]]
+algos = ["fedavg:q:8"]
+transports = ["simnet:10:5:0.2:2"]
+"#;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedcomloc_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn opts(out: &Path, threads: usize) -> SweepOptions {
+    SweepOptions {
+        out_dir: out.to_path_buf(),
+        threads,
+        trainer: "native".to_string(),
+        ..SweepOptions::default()
+    }
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+#[test]
+fn summary_schema_is_golden() {
+    let spec = SweepSpec::parse_str(TINY_SWEEP).unwrap();
+    let out = tmp_dir("schema");
+    let outcome = sweep::run_sweep(&spec, &opts(&out, 1)).unwrap();
+    assert_eq!(outcome.executed, 5);
+    let text = read(&sink::summary_path(&outcome.dir));
+    let mut lines = text.lines();
+    assert_eq!(lines.next(), Some(sink::SUMMARY_HEADER));
+    assert_eq!(
+        sink::SUMMARY_HEADER,
+        "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,\
+         train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,\
+         best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,\
+         total_cost,total_sim_secs,dropped_clients",
+        "summary schema v1 is pinned; bump SCHEMA_VERSION to change it"
+    );
+    let rows: Vec<&str> = lines.collect();
+    assert_eq!(rows.len(), 5);
+    for (row, unit) in rows.iter().zip(&outcome.units) {
+        let fields: Vec<&str> = row.split(',').collect();
+        assert_eq!(fields.len(), 31, "{row}");
+        assert_eq!(fields[0], "1");
+        assert_eq!(fields[1], unit.id);
+        assert_eq!(fields[2], "enginetest");
+        assert_eq!(fields[3], unit.algo);
+        assert_eq!(fields[4], "synthetic:32-c4");
+        assert_eq!(fields[5], "softmax:32x4");
+        assert_eq!(fields[7], "native", "trainer column");
+        assert_eq!(fields[14], "400", "train_n column");
+        assert_eq!(fields[16], "6", "clients column");
+        // Evaluated runs carry a best accuracy in (0, 1].
+        let best: f64 = fields[23].parse().unwrap_or_else(|e| panic!("{row}: {e}"));
+        assert!(best > 0.0 && best <= 1.0, "{row}");
+    }
+    // The SimNet run (last) accumulated simulated seconds; InProc runs did not.
+    assert!(rows[4].split(',').nth(29).unwrap().parse::<f64>().unwrap() > 0.0);
+    assert_eq!(rows[0].split(',').nth(29), Some("0"));
+    // Per-round JSONL exists for every run, with one line per round.
+    for unit in &outcome.units {
+        let jsonl = read(&sink::rounds_path(&outcome.dir, &unit.id));
+        assert_eq!(jsonl.lines().count(), 3, "{}", unit.id);
+        let first = fedcomloc::util::json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("schema").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(first.get("run").unwrap().as_str().unwrap(), unit.id);
+        assert_eq!(first.get("round").unwrap().as_usize().unwrap(), 0);
+        assert!(first.get("wall_secs").is_none(), "wall clock must not leak");
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn multithreaded_sweep_is_bit_identical_to_single_threaded() {
+    let spec = SweepSpec::parse_str(TINY_SWEEP).unwrap();
+    let out1 = tmp_dir("det1");
+    let out4 = tmp_dir("det4");
+    let o1 = sweep::run_sweep(&spec, &opts(&out1, 1)).unwrap();
+    let o4 = sweep::run_sweep(&spec, &opts(&out4, 4)).unwrap();
+    assert_eq!(
+        read(&sink::summary_path(&o1.dir)),
+        read(&sink::summary_path(&o4.dir)),
+        "summary.csv must not depend on --threads"
+    );
+    for unit in &o1.units {
+        assert_eq!(
+            read(&sink::rounds_path(&o1.dir, &unit.id)),
+            read(&sink::rounds_path(&o4.dir, &unit.id)),
+            "{}: rounds jsonl must not depend on --threads",
+            unit.id
+        );
+    }
+    let _ = std::fs::remove_dir_all(&out1);
+    let _ = std::fs::remove_dir_all(&out4);
+}
+
+#[test]
+fn sweep_runs_are_bit_identical_to_direct_fed_runs() {
+    // The successor to the legacy experiment modules' metric equality: the
+    // engine must add nothing and lose nothing relative to calling the
+    // federated runtime directly with the same expanded RunConfig.
+    let spec = SweepSpec::parse_str(TINY_SWEEP).unwrap();
+    let out = tmp_dir("equiv");
+    let outcome = sweep::run_sweep(&spec, &opts(&out, 4)).unwrap();
+    for unit in &outcome.units {
+        let algo = AlgorithmSpec::parse(&unit.algo).unwrap();
+        let trainer = fedcomloc::runtime::build_trainer(
+            "native",
+            Path::new("artifacts"),
+            &unit.cfg.model_spec(),
+        );
+        let mut transport =
+            parse_transport(&unit.transport, unit.cfg.n_clients, unit.cfg.seed).unwrap();
+        let log = run_with_transport(&unit.cfg, trainer, &algo, transport.as_mut());
+        let direct: String = log
+            .records
+            .iter()
+            .map(|r| sink::round_line(&unit.id, r) + "\n")
+            .collect();
+        assert_eq!(
+            direct,
+            read(&sink::rounds_path(&outcome.dir, &unit.id)),
+            "{}: sweep output differs from a direct fed run",
+            unit.id
+        );
+        let row = sink::summary_row("enginetest", "native", unit, &log);
+        assert!(outcome.rows.contains(&row), "{}: summary row differs", unit.id);
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn resume_skips_completed_runs_and_restores_the_canonical_summary() {
+    let spec = SweepSpec::parse_str(TINY_SWEEP).unwrap();
+    let out = tmp_dir("resume");
+    let full = sweep::run_sweep(&spec, &opts(&out, 2)).unwrap();
+    let spath = sink::summary_path(&full.dir);
+    let complete = read(&spath);
+
+    // Drop one run's row; a resumed sweep must re-execute exactly that run.
+    let dropped_id = &full.units[2].id;
+    let pruned: String = complete
+        .lines()
+        .filter(|l| !l.contains(dropped_id.as_str()))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    std::fs::write(&spath, pruned).unwrap();
+    let resumed = sweep::run_sweep(
+        &spec,
+        &SweepOptions {
+            resume: true,
+            ..opts(&out, 2)
+        },
+    )
+    .unwrap();
+    assert_eq!(resumed.executed, 1);
+    assert_eq!(resumed.skipped, 4);
+    assert_eq!(read(&spath), complete, "resume must restore the canonical summary");
+
+    // Resuming an untouched sweep executes nothing.
+    let noop = sweep::run_sweep(
+        &spec,
+        &SweepOptions {
+            resume: true,
+            ..opts(&out, 2)
+        },
+    )
+    .unwrap();
+    assert_eq!(noop.executed, 0);
+    assert_eq!(noop.skipped, 5);
+
+    // A row whose configuration prefix no longer matches the expanded unit
+    // (here: a different seed) must be re-executed, not silently reused.
+    let unit = &full.units[1];
+    let mut stale_unit = unit.clone();
+    stale_unit.cfg.seed = 999;
+    let good_key = sink::summary_key("enginetest", "native", unit);
+    let stale_key = sink::summary_key("enginetest", "native", &stale_unit);
+    let tampered = complete.replace(&good_key, &stale_key);
+    assert_ne!(tampered, complete, "tampering must hit the target row");
+    std::fs::write(&spath, tampered).unwrap();
+    let revalidated = sweep::run_sweep(
+        &spec,
+        &SweepOptions {
+            resume: true,
+            ..opts(&out, 2)
+        },
+    )
+    .unwrap();
+    assert_eq!(revalidated.executed, 1, "config drift must re-run the unit");
+    assert_eq!(read(&spath), complete, "re-run restores the true summary");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn dry_run_writes_nothing_and_prints_the_matrix() {
+    let spec = SweepSpec::parse_str(TINY_SWEEP).unwrap();
+    let out = tmp_dir("dry");
+    let outcome = sweep::run_sweep(
+        &spec,
+        &SweepOptions {
+            dry_run: true,
+            ..opts(&out, 1)
+        },
+    )
+    .unwrap();
+    assert_eq!(outcome.executed, 0);
+    assert!(outcome.rows.is_empty());
+    assert_eq!(outcome.units.len(), 5);
+    assert!(!out.exists(), "dry run must not touch the filesystem");
+    let matrix = sweep::format_matrix(&outcome.units);
+    assert_eq!(matrix.lines().count(), 6, "header + one line per run");
+    assert!(matrix.contains("fedavg:q:8"));
+    assert!(matrix.contains("simnet:10:5:0.2:2"));
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn shipped_sparsity_preset_expands_to_the_legacy_density_grid() {
+    let spec = sweep::preset_by_name("sparsity").unwrap().unwrap();
+    let units = spec.expand(1.0, None).unwrap();
+    let algos: Vec<&str> = units.iter().map(|u| u.algo.as_str()).collect();
+    assert_eq!(
+        algos,
+        [
+            "fedcomloc-com:none",
+            "fedcomloc-com:topk:0.1",
+            "fedcomloc-com:topk:0.3",
+            "fedcomloc-com:topk:0.5",
+            "fedcomloc-com:topk:0.7",
+            "fedcomloc-com:topk:0.9",
+        ],
+        "Table 1 density grid"
+    );
+    // Legacy table1 ran the scaled-mnist defaults.
+    for u in &units {
+        assert_eq!(u.cfg.rounds, 60);
+        assert_eq!(u.cfg.n_clients, 100);
+        assert_eq!(u.cfg.dirichlet_alpha, 0.7);
+        assert_eq!(u.transport, "inproc");
+        assert_eq!(u.model_key(), "mlp");
+    }
+}
+
+#[test]
+fn shipped_heterogeneity_preset_expands_to_the_legacy_alpha_grid() {
+    let spec = sweep::preset_by_name("heterogeneity").unwrap().unwrap();
+    let units = spec.expand(1.0, None).unwrap();
+    assert_eq!(units.len(), 18);
+    // Canonical nesting: density (algo) outer, alpha inner — the legacy
+    // table2 loop order.
+    let alphas: Vec<f64> = units[..6].iter().map(|u| u.cfg.dirichlet_alpha).collect();
+    assert_eq!(alphas, [0.1, 0.3, 0.5, 0.7, 0.9, 1.0]);
+    assert!(units[..6].iter().all(|u| u.algo == "fedcomloc-com:none"));
+    assert!(units[6..12].iter().all(|u| u.algo == "fedcomloc-com:topk:0.1"));
+}

@@ -1,11 +1,16 @@
-//! Micro-bench: the compression hot path (encode + decode) at model sizes.
+//! Micro-bench: the compression hot path (encode + decode) at model sizes,
+//! on both the owned-payload API and the buffer-reusing
+//! `compress_into`/`decode_payload_into` fast path.
 //!
 //! This is the L3 cost FedComLoc adds per communication round; the TopK
 //! selection (select_nth_unstable) and the quantizer bit-packing dominate.
-//! Tracked across commits via target/benchkit/*.jsonl (EXPERIMENTS.md §Perf).
+//! Exports `BENCH_compress.json` (ns/op plus bytes-per-round metrics); CI's
+//! `perf-smoke` job gates it against `benches/baseline/BENCH_compress.json`.
 
-use fedcomloc::compress::{Compressor, DoubleCompress, Identity, QuantizeR, TopK};
-use fedcomloc::util::benchkit::{bb, Bench};
+use fedcomloc::compress::{
+    decode_payload_into, Compressor, DoubleCompress, Identity, QuantizeR, TopK,
+};
+use fedcomloc::util::benchkit::{self, bb, Bench};
 use fedcomloc::util::rng::Rng;
 
 fn main() {
@@ -28,12 +33,31 @@ fn main() {
             b.case(&format!("{label} encode {name}"), || {
                 bb(comp.compress(bb(&x), &mut enc_rng));
             });
+            // Buffer-reusing encode: steady-state zero allocation.
+            let mut enc_rng = Rng::seed_from_u64(7);
+            let mut payload = Vec::new();
+            b.case(&format!("{label} encode_into {name}"), || {
+                bb(comp.compress_into(bb(&x), &mut enc_rng, &mut payload));
+            });
             let mut dec_rng = Rng::seed_from_u64(7);
             let encoded = comp.compress(&x, &mut dec_rng);
             b.case(&format!("{label} decode {name}"), || {
                 bb(comp.decompress(bb(&encoded)));
             });
+            let mut dense = vec![0.0f32; d];
+            b.case(&format!("{label} decode_into {name}"), || {
+                decode_payload_into(encoded.codec, encoded.dim, bb(&encoded.payload), &mut dense);
+                bb(&dense);
+            });
+            // Bytes one uplink of this codec puts on the wire per round.
+            b.record_metric(
+                &format!("{label} wire bytes {name}"),
+                encoded.wire_bits.div_ceil(8) as f64,
+                "bytes/round",
+            );
         }
         b.finish();
     }
+
+    std::process::exit(benchkit::finalize("compress"));
 }

@@ -1,12 +1,17 @@
 //! Micro-bench: the local-step hot path on the native plane — gradient,
-//! fused control-variate update, aggregation, and the full step.
+//! fused control-variate update, aggregation, and the full step — on both
+//! the allocating API and the zero-allocation `Workspace` fast path the
+//! federated drivers run.
+//!
+//! Exports `BENCH_train_step.json` (see `util::benchkit::finalize`); CI's
+//! `perf-smoke` job gates it against `benches/baseline/BENCH_train_step.json`.
 
 use fedcomloc::data::loader::ClientLoader;
 use fedcomloc::data::{synthetic, DatasetSpec};
 use fedcomloc::model::native::NativeTrainer;
-use fedcomloc::model::{init_params, LocalTrainer};
+use fedcomloc::model::{init_params, LocalTrainer, Workspace};
 use fedcomloc::tensor;
-use fedcomloc::util::benchkit::{bb, Bench};
+use fedcomloc::util::benchkit::{self, bb, Bench};
 use fedcomloc::util::rng::Rng;
 use std::sync::Arc;
 
@@ -30,11 +35,21 @@ fn main() {
     b.case("grad (fwd+bwd, batch 64)", || {
         bb(trainer.grad(bb(&params), bb(&batch)));
     });
+    let mut ws = Workspace::for_model(trainer.model(), 64);
+    b.case("grad_into (workspace)", || {
+        bb(trainer.grad_into(bb(&params), bb(&batch), &mut ws));
+    });
     b.case("train_step (fused)", || {
         bb(trainer.train_step(bb(&params), bb(&h), bb(&batch), 0.05));
     });
+    b.case("train_step_into (workspace)", || {
+        bb(trainer.train_step_into(bb(&params), bb(&h), bb(&batch), 0.05, &mut ws));
+    });
     b.case("train_step_masked K=30%", || {
         bb(trainer.train_step_masked(bb(&params), bb(&h), bb(&batch), 0.05, 0.3));
+    });
+    b.case("train_step_masked_into K=30% (workspace)", || {
+        bb(trainer.train_step_masked_into(bb(&params), bb(&h), bb(&batch), 0.05, 0.3, &mut ws));
     });
 
     // Host-side vector ops at model size.
@@ -57,7 +72,13 @@ fn main() {
     });
     b.finish();
 
-    // CNN single step (heavier; fewer samples by config).
+    // CNN single step (heavier; fewer samples by config). The CNN config
+    // is the acceptance gauge: ≥1.5× steps/s over the PR-3 kernel. Note
+    // that `cnn grad` and `cnn grad_into` both run the NEW kernel (grad is
+    // a thin wrapper) — the cross-PR comparison requires running this
+    // bench at the PR-3 commit and diffing the two snapshots' per_sec;
+    // within one build the pair only isolates the workspace's allocation
+    // savings.
     let mut rng = Rng::seed_from_u64(3);
     let tt = synthetic::generate(&DatasetSpec::cifar10(), 128, 32, &mut rng);
     let data = Arc::new(tt.train);
@@ -75,6 +96,14 @@ fn main() {
     b.case("cnn grad (batch 32)", || {
         bb(trainer.grad(bb(&params), bb(&batch)));
     });
-    let _ = h;
+    let mut ws = Workspace::for_model(trainer.model(), 32);
+    b.case("cnn grad_into (workspace)", || {
+        bb(trainer.grad_into(bb(&params), bb(&batch), &mut ws));
+    });
+    b.case("cnn train_step_into (workspace)", || {
+        bb(trainer.train_step_into(bb(&params), bb(&h), bb(&batch), 0.05, &mut ws));
+    });
     b.finish();
+
+    std::process::exit(benchkit::finalize("train_step"));
 }

@@ -1,6 +1,6 @@
 //! Identity "compressor": dense f32 wire format (the K=100% baseline).
 
-use super::{Codec, Compressed, Compressor};
+use super::{Codec, CodecMeta, Compressed, Compressor};
 use crate::util::rng::Rng;
 
 /// The identity operator: dense 32·d-bit payloads, no information loss.
@@ -12,16 +12,16 @@ impl Compressor for Identity {
         "identity".to_string()
     }
 
-    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
-        let mut payload = Vec::with_capacity(x.len() * 4);
+    fn compress_into(&self, x: &[f32], _rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
+        payload.clear();
+        payload.reserve(x.len() * 4);
         for v in x {
             payload.extend_from_slice(&v.to_le_bytes());
         }
-        Compressed {
+        CodecMeta {
             wire_bits: 32 * x.len() as u64,
             dim: x.len(),
             codec: Codec::Dense,
-            payload,
         }
     }
 
@@ -37,13 +37,14 @@ impl Compressor for Identity {
     }
 }
 
-/// Dense payload decoder: raw little-endian f32s (see [`super::decode_payload`]).
-pub(super) fn decode_dense(dim: usize, payload: &[u8]) -> Vec<f32> {
+/// Dense payload decoder into a caller buffer: raw little-endian f32s (see
+/// [`super::decode_payload_into`]).
+pub(super) fn decode_dense_into(dim: usize, payload: &[u8], out: &mut [f32]) {
     assert_eq!(payload.len(), dim * 4, "dense payload length mismatch");
-    payload
-        .chunks_exact(4)
-        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        .collect()
+    debug_assert_eq!(out.len(), dim);
+    for (slot, b) in out.iter_mut().zip(payload.chunks_exact(4)) {
+        *slot = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    }
 }
 
 #[cfg(test)]

@@ -37,6 +37,31 @@ pub struct Compressed {
     pub codec: Codec,
 }
 
+/// Everything [`Compressed`] carries except the bytes themselves — what a
+/// buffer-reusing [`Compressor::compress_into`] call returns alongside the
+/// caller's payload buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CodecMeta {
+    /// Exact number of meaningful bits written to the payload buffer.
+    pub wire_bits: u64,
+    /// Uncompressed dimension (needed by the decoder).
+    pub dim: usize,
+    /// Which encoder produced the payload (decides the decode path).
+    pub codec: Codec,
+}
+
+impl CodecMeta {
+    /// Attach a payload to make an owned [`Compressed`].
+    pub fn with_payload(self, payload: Vec<u8>) -> Compressed {
+        Compressed {
+            payload,
+            wire_bits: self.wire_bits,
+            dim: self.dim,
+            codec: self.codec,
+        }
+    }
+}
+
 /// Encoding identifier carried in the message header.
 ///
 /// A `Codec` value plus the vector dimension is *sufficient to decode a
@@ -77,14 +102,24 @@ pub enum Codec {
 /// the in-process transports; a remote transport would validate framing in
 /// [`crate::fed::message::Message::decode`] first).
 pub fn decode_payload(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; dim];
+    decode_payload_into(codec, dim, payload, &mut out);
+    out
+}
+
+/// [`decode_payload`] into a caller buffer of exactly `dim` elements
+/// (fully overwritten) — the zero-allocation decode path the drivers'
+/// reused delivery buffers go through.
+pub fn decode_payload_into(codec: Codec, dim: usize, payload: &[u8], out: &mut [f32]) {
+    assert_eq!(out.len(), dim, "decode buffer must be exactly dim");
     match codec {
-        Codec::Dense => identity::decode_dense(dim, payload),
-        Codec::SparseIdx | Codec::SparseBitmap => topk::decode_sparse(codec, dim, payload),
+        Codec::Dense => identity::decode_dense_into(dim, payload, out),
+        Codec::SparseIdx | Codec::SparseBitmap => topk::decode_sparse_into(codec, dim, payload, out),
         Codec::Quantized { bits, bucket } => {
-            quantize::decode_quantized(dim, payload, bits, bucket as usize)
+            quantize::decode_quantized_into(dim, payload, bits, bucket as usize, out)
         }
         Codec::SparseQuantized { bits, bucket } => {
-            quantize::decode_sparse_quantized(dim, payload, bits, bucket as usize)
+            quantize::decode_sparse_quantized_into(dim, payload, bits, bucket as usize, out)
         }
     }
 }
@@ -93,12 +128,31 @@ pub fn decode_payload(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32> {
 ///
 /// `compress` may be randomized (Q_r draws stochastic rounding variables
 /// from the provided RNG); TopK and Identity ignore the RNG.
+///
+/// The serializing primitive is [`Compressor::compress_into`], which writes
+/// into a caller byte buffer (cleared, capacity kept), eliminating the
+/// payload allocation; [`Compressor::compress`] is the owned-payload
+/// convenience wrapper. Note the TopK-based compressors still allocate
+/// O(d) *selection* scratch internally (compressors are stateless and
+/// `Sync`, so they cannot hold scratch; callers that need a fully
+/// allocation-free selection use [`topk::select_topk_into`] /
+/// [`topk::apply_topk_with`] with their own buffers, as the masked train
+/// step does).
 pub trait Compressor: Send + Sync {
     /// Human-readable name used in logs/metrics ("topk(0.10)", "q4", ...).
     fn name(&self) -> String;
 
-    /// Encode `x` into a wire payload.
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed;
+    /// Encode `x` into `payload` (cleared first; capacity reused) and
+    /// return the wire metadata. Byte-identical to
+    /// [`Compressor::compress`].
+    fn compress_into(&self, x: &[f32], rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta;
+
+    /// Encode `x` into an owned wire payload.
+    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+        let mut payload = Vec::new();
+        let meta = self.compress_into(x, rng, &mut payload);
+        meta.with_payload(payload)
+    }
 
     /// Decode into a dense vector of length `c.dim`.
     fn decompress(&self, c: &Compressed) -> Vec<f32>;
@@ -147,7 +201,7 @@ impl Compressor for DoubleCompress {
         format!("topk({:.2})+q{}", self.topk.density, self.quant.bits)
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, x: &[f32], rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
         // Select survivors with TopK, then quantize the K values; indices are
         // encoded exactly as in the sparse-index codec.
         let d = x.len();
@@ -155,7 +209,7 @@ impl Compressor for DoubleCompress {
         let idx = topk::select_topk_indices(x, k);
         let vals: Vec<f32> = idx.iter().map(|&i| x[i]).collect();
         let (bits, bucket) = (self.quant.bits, self.quant.bucket_size);
-        quantize::encode_sparse_quantized(d, &idx, &vals, bits, bucket, rng)
+        quantize::encode_sparse_quantized_into(d, &idx, &vals, bits, bucket, rng, payload)
     }
 
     fn decompress(&self, c: &Compressed) -> Vec<f32> {

@@ -19,7 +19,7 @@
 //! costs ≈18 bits/coordinate on our wire, slightly above the paper's
 //! nominal r bits/coordinate (EXPERIMENTS.md notes this).
 
-use super::{Codec, Compressed, Compressor};
+use super::{Codec, CodecMeta, Compressor};
 use crate::util::bitio::{bits_for, BitReader, BitWriter};
 use crate::util::rng::Rng;
 
@@ -71,10 +71,10 @@ impl Compressor for QuantizeR {
         format!("q{}", self.bits)
     }
 
-    fn compress(&self, x: &[f32], rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, x: &[f32], rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
         let d = x.len();
         let level_bits = self.bits + 1;
-        let mut w = BitWriter::with_capacity(8 + (d * (level_bits as usize + 1)).div_ceil(8));
+        let mut w = BitWriter::over(std::mem::take(payload));
         for bucket in x.chunks(self.bucket_size) {
             // Non-finite norms (diverged models) encode as 0 so encoder and
             // decoder agree on the bucket being skipped.
@@ -90,8 +90,8 @@ impl Compressor for QuantizeR {
             }
         }
         let wire_bits = w.bit_len();
-        Compressed {
-            payload: w.finish(),
+        *payload = w.finish();
+        CodecMeta {
             wire_bits,
             dim: d,
             codec: Codec::Quantized {
@@ -101,7 +101,7 @@ impl Compressor for QuantizeR {
         }
     }
 
-    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+    fn decompress(&self, c: &super::Compressed) -> Vec<f32> {
         // The bucket size travels in the codec tag, so decoding never
         // consults this instance's configuration.
         super::decode_payload(c.codec, c.dim, &c.payload)
@@ -112,29 +112,35 @@ impl Compressor for QuantizeR {
     }
 }
 
-/// Decoder for [`Codec::Quantized`] payloads (see [`super::decode_payload`]).
-pub(super) fn decode_quantized(dim: usize, payload: &[u8], bits: u32, bucket: usize) -> Vec<f32> {
+/// Decoder for [`Codec::Quantized`] payloads into a caller buffer (fully
+/// overwritten; see [`super::decode_payload_into`]).
+pub(super) fn decode_quantized_into(
+    dim: usize,
+    payload: &[u8],
+    bits: u32,
+    bucket: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), dim);
     let mut r = BitReader::new(payload);
     let s = (1u64 << bits) as f32;
     let level_bits = bits + 1;
-    let mut out = Vec::with_capacity(dim);
-    let mut remaining = dim;
-    while remaining > 0 {
-        let take = remaining.min(bucket);
+    let mut pos = 0usize;
+    while pos < dim {
+        let take = (dim - pos).min(bucket);
         let norm = r.read_f32();
         if norm <= 0.0 {
-            out.extend(std::iter::repeat(0.0f32).take(take));
+            out[pos..pos + take].fill(0.0);
         } else {
-            for _ in 0..take {
+            for slot in out[pos..pos + take].iter_mut() {
                 let neg = r.read_bit();
                 let level = r.read_bits(level_bits) as f32;
                 let mag = norm * level / s;
-                out.push(if neg { -mag } else { mag });
+                *slot = if neg { -mag } else { mag };
             }
         }
-        remaining -= take;
+        pos += take;
     }
-    out
 }
 
 /// Encoder for the double-compression codec (TopK then quantize survivors):
@@ -143,21 +149,20 @@ pub(super) fn decode_quantized(dim: usize, payload: &[u8], bits: u32, bucket: us
 /// *survivor sequence* matters just as for the dense quantizer: a single
 /// global norm at r=4 destroys the small survivors and destabilizes
 /// training (observed as divergence in the Figure 16 runs).
-pub(super) fn encode_sparse_quantized(
+pub(super) fn encode_sparse_quantized_into(
     d: usize,
     idx: &[usize],
     vals: &[f32],
     bits: u32,
     bucket: usize,
     rng: &mut Rng,
-) -> Compressed {
+    payload: &mut Vec<u8>,
+) -> CodecMeta {
     assert_eq!(idx.len(), vals.len());
     let q = QuantizeR::with_bucket(bits, bucket);
     let idx_bits = bits_for(d as u64);
     let level_bits = bits + 1;
-    let mut w = BitWriter::with_capacity(
-        (sparse_quantized_wire_bits(d, idx.len(), bits, bucket) / 8 + 2) as usize,
-    );
+    let mut w = BitWriter::over(std::mem::take(payload));
     w.write_u32(idx.len() as u32);
     for (ichunk, vchunk) in idx.chunks(bucket).zip(vals.chunks(bucket)) {
         let raw = crate::tensor::norm2(vchunk);
@@ -173,8 +178,8 @@ pub(super) fn encode_sparse_quantized(
         }
     }
     let wire_bits = w.bit_len();
-    Compressed {
-        payload: w.finish(),
+    *payload = w.finish();
+    CodecMeta {
         wire_bits,
         dim: d,
         codec: Codec::SparseQuantized {
@@ -184,14 +189,17 @@ pub(super) fn encode_sparse_quantized(
     }
 }
 
-/// Decoder for [`Codec::SparseQuantized`] payloads (see [`super::decode_payload`]).
-pub(super) fn decode_sparse_quantized(
+/// Decoder for [`Codec::SparseQuantized`] payloads into a caller buffer
+/// (fully overwritten; see [`super::decode_payload_into`]).
+pub(super) fn decode_sparse_quantized_into(
     dim: usize,
     payload: &[u8],
     bits: u32,
     bucket: usize,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; dim];
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), dim);
+    out.fill(0.0);
     let mut r = BitReader::new(payload);
     let k = r.read_u32() as usize;
     let idx_bits = bits_for(dim as u64);
@@ -212,15 +220,14 @@ pub(super) fn decode_sparse_quantized(
         }
         remaining -= take;
     }
-    out
 }
 
 /// Exact bit length of the sparse-quantized layout for `k` survivors when
 /// every survivor bucket has a nonzero norm (the maximal case the encoder
 /// can emit): 32-bit K header, a 32-bit norm per ⌈k/bucket⌉ survivor
 /// bucket, and per survivor an index, a sign bit, and a (bits+1)-bit level.
-/// Shared between `encode_sparse_quantized`'s buffer sizing and
-/// `DoubleCompress::nominal_bits` so formula and encoder cannot drift.
+/// Shared with `DoubleCompress::nominal_bits` so formula and encoder
+/// cannot drift.
 pub(super) fn sparse_quantized_wire_bits(d: usize, k: usize, bits: u32, bucket: usize) -> u64 {
     let buckets = k.div_ceil(bucket) as u64;
     32 + 32 * buckets + k as u64 * (bits_for(d as u64) as u64 + 1 + (bits as u64 + 1))
@@ -360,7 +367,9 @@ mod tests {
         let d = 500;
         let idx = vec![3usize, 77, 178, 400, 499];
         let vals = vec![1.0f32, -2.0, 0.5, -0.25, 3.0];
-        let c = encode_sparse_quantized(d, &idx, &vals, 8, DEFAULT_BUCKET, &mut rng);
+        let mut payload = Vec::new();
+        let meta = encode_sparse_quantized_into(d, &idx, &vals, 8, DEFAULT_BUCKET, &mut rng, &mut payload);
+        let c = meta.with_payload(payload);
         let y = super::decode_payload(c.codec, c.dim, &c.payload);
         assert_eq!(y.len(), d);
         let norm = norm2(&vals);

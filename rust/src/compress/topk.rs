@@ -13,7 +13,7 @@
 //! Ties (equal |x_i|) are broken toward lower index, matching Definition
 //! 3.1's "chosen arbitrarily" clause deterministically.
 
-use super::{Codec, Compressed, Compressor};
+use super::{Codec, CodecMeta, Compressor};
 use crate::util::bitio::{bits_for, BitReader, BitWriter};
 use crate::util::rng::Rng;
 
@@ -60,35 +60,56 @@ impl TopK {
 /// Indices of the K largest-magnitude entries, ascending index order.
 /// Exact selection; deterministic tie-break toward lower index.
 pub fn select_topk_indices(x: &[f32], k: usize) -> Vec<usize> {
+    let mut keys = Vec::new();
+    let mut idx = Vec::new();
+    select_topk_into(x, k, &mut keys, &mut idx);
+    idx
+}
+
+/// [`select_topk_indices`] through caller scratch buffers (`keys` for the
+/// packed selection keys, `out_idx` for the result) — both are cleared and
+/// refilled, keeping their capacity, so a warm caller allocates nothing.
+pub fn select_topk_into(x: &[f32], k: usize, keys: &mut Vec<u64>, out_idx: &mut Vec<usize>) {
     let d = x.len();
     let k = k.min(d);
+    out_idx.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
     if k == d {
-        return (0..d).collect();
+        out_idx.extend(0..d);
+        return;
     }
     // Pack (magnitude, index) into one u64 key: |x| as IEEE-754 bits is
     // monotone for non-negative floats, so integer comparison on
     // (mag << 32 | !index) sorts by descending magnitude with ascending-
     // index tie-break — one integer cmp per comparison instead of an f32
     // partial_cmp chain (≈1.7× faster selection; EXPERIMENTS.md §Perf L3).
-    let mut keys: Vec<u64> = x
-        .iter()
-        .enumerate()
-        .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64)
-        .collect();
+    keys.clear();
+    keys.extend(
+        x.iter()
+            .enumerate()
+            .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64),
+    );
     keys.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
     keys.truncate(k);
-    let mut idx: Vec<usize> = keys.into_iter().map(|key| !(key as u32) as usize).collect();
-    idx.sort_unstable();
-    idx
+    out_idx.extend(keys.iter().map(|&key| !(key as u32) as usize));
+    out_idx.sort_unstable();
 }
 
 /// Semantic TopK: zero out everything but the K largest-|·| entries.
 pub fn apply_topk(x: &mut [f32], k: usize) {
-    let keep = select_topk_indices(x, k);
-    let mut keep_iter = keep.iter().peekable();
+    let mut keys = Vec::new();
+    let mut idx = Vec::new();
+    apply_topk_with(x, k, &mut keys, &mut idx);
+}
+
+/// [`apply_topk`] through caller scratch buffers (see
+/// [`select_topk_into`]) — the zero-allocation path of the
+/// FedComLoc-Local masked train step.
+pub fn apply_topk_with(x: &mut [f32], k: usize, keys: &mut Vec<u64>, idx: &mut Vec<usize>) {
+    select_topk_into(x, k, keys, idx);
+    let mut keep_iter = idx.iter().peekable();
     for (i, v) in x.iter_mut().enumerate() {
         if keep_iter.peek() == Some(&&i) {
             keep_iter.next();
@@ -106,14 +127,14 @@ impl Compressor for TopK {
         }
     }
 
-    fn compress(&self, x: &[f32], _rng: &mut Rng) -> Compressed {
+    fn compress_into(&self, x: &[f32], _rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
         let d = x.len();
         let k = self.k_for(d);
         let idx = select_topk_indices(x, k);
-        encode_sparse(d, &idx, x)
+        encode_sparse_into(d, &idx, x, payload)
     }
 
-    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+    fn decompress(&self, c: &super::Compressed) -> Vec<f32> {
         super::decode_payload(c.codec, c.dim, &c.payload)
     }
 
@@ -132,7 +153,13 @@ impl Compressor for TopK {
 /// Header layout (both sparse codecs): 32-bit K, then mode-specific body.
 /// Dim travels out-of-band in `Compressed::dim` (the transport already knows
 /// the model dimension; we still count a 32-bit K header as wire overhead).
-pub(super) fn encode_sparse(d: usize, idx: &[usize], x: &[f32]) -> Compressed {
+/// Writes into `payload` (cleared; capacity reused).
+pub(super) fn encode_sparse_into(
+    d: usize,
+    idx: &[usize],
+    x: &[f32],
+    payload: &mut Vec<u8>,
+) -> CodecMeta {
     let k = idx.len();
     let idx_bits = bits_for(d as u64);
     let size_idx_mode: u64 = 32 + (k as u64) * (idx_bits as u64 + 32);
@@ -141,8 +168,8 @@ pub(super) fn encode_sparse(d: usize, idx: &[usize], x: &[f32]) -> Compressed {
     // Layout (both modes): header, bit-packed index block, byte-alignment
     // pad (≤7 bits, counted), then values as raw LE f32 — the aligned value
     // block encodes/decodes at memcpy speed (EXPERIMENTS.md §Perf L3).
-    if size_idx_mode <= size_bitmap_mode {
-        let mut w = BitWriter::with_capacity((size_idx_mode / 8 + 2) as usize);
+    let mut w = BitWriter::over(std::mem::take(payload));
+    let codec = if size_idx_mode <= size_bitmap_mode {
         w.write_u32(k as u32);
         for &i in idx {
             w.write_bits(i as u64, idx_bits);
@@ -151,15 +178,8 @@ pub(super) fn encode_sparse(d: usize, idx: &[usize], x: &[f32]) -> Compressed {
         for &i in idx {
             w.write_f32_aligned(x[i]);
         }
-        let wire_bits = w.bit_len();
-        Compressed {
-            payload: w.finish(),
-            wire_bits,
-            dim: d,
-            codec: Codec::SparseIdx,
-        }
+        Codec::SparseIdx
     } else {
-        let mut w = BitWriter::with_capacity((size_bitmap_mode / 8 + 2) as usize);
         w.write_u32(k as u32);
         let mut iter = idx.iter().peekable();
         for i in 0..d {
@@ -173,18 +193,22 @@ pub(super) fn encode_sparse(d: usize, idx: &[usize], x: &[f32]) -> Compressed {
         for &i in idx {
             w.write_f32_aligned(x[i]);
         }
-        let wire_bits = w.bit_len();
-        Compressed {
-            payload: w.finish(),
-            wire_bits,
-            dim: d,
-            codec: Codec::SparseBitmap,
-        }
+        Codec::SparseBitmap
+    };
+    let wire_bits = w.bit_len();
+    *payload = w.finish();
+    CodecMeta {
+        wire_bits,
+        dim: d,
+        codec,
     }
 }
 
-pub(super) fn decode_sparse(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32> {
-    let mut out = vec![0.0f32; dim];
+/// Decoder for the sparse codecs into a caller buffer (fully overwritten;
+/// see [`super::decode_payload_into`]).
+pub(super) fn decode_sparse_into(codec: Codec, dim: usize, payload: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), dim);
+    out.fill(0.0);
     let mut r = BitReader::new(payload);
     let k = r.read_u32() as usize;
     match codec {
@@ -211,7 +235,6 @@ pub(super) fn decode_sparse(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32
         }
         other => panic!("decode_sparse on {other:?}"),
     }
-    out
 }
 
 #[cfg(test)]

@@ -24,7 +24,7 @@
 use super::transport::Transport;
 use super::{ClientState, Federation, RoundLogger, RunConfig};
 use crate::metrics::MetricsLog;
-use crate::model::LocalTrainer;
+use crate::model::{LocalTrainer, Workspace};
 use std::sync::Arc;
 
 /// What one communication round reports back to the drive loop. Wire usage
@@ -65,6 +65,25 @@ impl RoundCtx<'_> {
         self.fed.pool.map(clients, |_, &ci| {
             let mut state = states[ci].lock().unwrap();
             f(ci, &mut state)
+        })
+    }
+
+    /// [`RoundCtx::map_clients`] with the executing worker's private
+    /// [`Workspace`] locked alongside the client state — the hot-path
+    /// variant all shipped algorithms use. Worker slot `w` locks exactly
+    /// `fed.workspaces[w]`, so workspace locks never contend and scratch
+    /// stays warm across rounds (see `model::workspace` ownership rules).
+    pub fn map_clients_ws<R, F>(&self, clients: &[usize], f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut ClientState, &mut Workspace) -> R + Sync,
+    {
+        let states = &self.fed.clients;
+        let workspaces = &self.fed.workspaces;
+        self.fed.pool.map_worker(clients, |w, _, &ci| {
+            let mut state = states[ci].lock().unwrap();
+            let mut ws = workspaces[w].lock().unwrap();
+            f(ci, &mut state, &mut ws)
         })
     }
 }

@@ -18,6 +18,8 @@ use crate::compress::Compressor;
 pub struct FedAvg {
     compressor: Box<dyn Compressor>,
     zeros: Vec<f32>,
+    /// Per-round decoded-uplink buffers, reused across rounds.
+    delivery: Vec<Vec<f32>>,
 }
 
 impl FedAvg {
@@ -26,6 +28,7 @@ impl FedAvg {
         FedAvg {
             compressor,
             zeros: Vec::new(),
+            delivery: Vec::new(),
         }
     }
 
@@ -72,29 +75,35 @@ impl FedAlgorithm for FedAvg {
         let local_steps = cfg.local_steps;
         let zeros = &self.zeros;
         let compressor = self.compressor.as_ref();
-        let results: Vec<(Message, f64)> = ctx.map_clients(&participants, |ci, state| {
-            let mut xi = x.clone();
+        let d = x.len();
+        let results: Vec<(Message, f64)> = ctx.map_clients_ws(&participants, |ci, state, ws| {
+            let mut xi = ws.take_xi_primed(&x);
             let mut loss_sum = 0.0f64;
             for _ in 0..local_steps {
                 let batch = state.loader.next_batch();
-                let (next, loss) = trainer.train_step(&xi, zeros, &batch, gamma);
-                xi = next;
+                let loss = trainer.train_step_into(&xi[..d], zeros, &batch, gamma, ws);
+                std::mem::swap(&mut xi, &mut ws.step);
                 loss_sum += loss as f64;
             }
-            let compressed = compressor.compress(&xi, &mut state.rng);
+            let compressed = compressor.compress(&xi[..d], &mut state.rng);
+            ws.put_xi(xi);
             (Message::from_compressed(round, ci as u32, compressed), loss_sum)
         });
 
         let loss_sum: f64 = results.iter().map(|(_, l)| l).sum();
         let n_trained = results.len();
-        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n_trained);
+        let mut used = 0usize;
         for ((upload, _), &ci) in results.into_iter().zip(&participants) {
             if let Some(received) = ctx.transport.uplink(ci, upload) {
-                uploads.push(received.to_dense());
+                if self.delivery.len() == used {
+                    self.delivery.push(Vec::new());
+                }
+                received.to_dense_into(&mut self.delivery[used]);
+                used += 1;
             }
         }
-        if !uploads.is_empty() {
-            let rows: Vec<&[f32]> = uploads.iter().map(|v| v.as_slice()).collect();
+        if used > 0 {
+            let rows: Vec<&[f32]> = self.delivery[..used].iter().map(|v| v.as_slice()).collect();
             crate::tensor::mean_into(&rows, &mut ctx.fed.x);
         }
 

@@ -70,23 +70,27 @@ impl FedAlgorithm for FedDyn {
         let trainer = ctx.fed.trainer.clone();
         let gamma = cfg.gamma;
         let local_steps = cfg.local_steps;
-        let results: Vec<(Message, f64)> = ctx.map_clients(&participants, |ci, state| {
-            let mut xi = x.clone();
+        let d = x.len();
+        let results: Vec<(Message, f64)> = ctx.map_clients_ws(&participants, |ci, state, ws| {
+            let mut xi = ws.take_xi_primed(&x);
+            // ∇[f_i(x) − ⟨λ,x⟩ + a/2‖x−x₀‖²] = g − λ + a(x − x₀).
+            // Express as the Scaffnew step form with h = λ − a(x − x₀);
+            // h depends on x, so rebuild it each step (into a buffer
+            // reused across the segment).
+            let mut h_eff = vec![0.0f32; d];
             let mut loss_sum = 0.0f64;
             for _ in 0..local_steps {
                 let batch = state.loader.next_batch();
-                // ∇[f_i(x) − ⟨λ,x⟩ + a/2‖x−x₀‖²] = g − λ + a(x − x₀).
-                // Express as the Scaffnew step form with h = λ − a(x − x₀);
-                // h depends on x, so rebuild it each step.
-                let mut h_eff = vec![0.0f32; xi.len()];
-                for j in 0..xi.len() {
+                for j in 0..d {
                     h_eff[j] = state.h[j] - a * (xi[j] - x[j]);
                 }
-                let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
-                xi = next;
+                let loss = trainer.train_step_into(&xi[..d], &h_eff, &batch, gamma, ws);
+                std::mem::swap(&mut xi, &mut ws.step);
                 loss_sum += loss as f64;
             }
-            (Message::dense(round, ci as u32, &xi), loss_sum)
+            let upload = Message::dense(round, ci as u32, &xi[..d]);
+            ws.put_xi(xi);
+            (upload, loss_sum)
         });
 
         let loss_sum: f64 = results.iter().map(|(_, l)| l).sum();

@@ -20,7 +20,7 @@
 //! envelope is bookkeeping, exposed separately via [`Message::frame_bits`]
 //! for transports that want to charge it.
 
-use crate::compress::{decode_payload, Codec, Compressed};
+use crate::compress::{decode_payload, decode_payload_into, Codec, Compressed};
 
 /// `sender` value identifying the server in downlink messages.
 pub const SERVER: u32 = u32::MAX;
@@ -207,10 +207,29 @@ impl Message {
         decode_payload(self.header.codec, self.dim(), &self.payload)
     }
 
+    /// [`Message::to_dense`] into a reused buffer: `out` is resized to the
+    /// message dimension (growing at most once per run) and fully
+    /// overwritten — the zero-steady-state-allocation path the drivers'
+    /// per-round delivery buffers use.
+    pub fn to_dense_into(&self, out: &mut Vec<f32>) {
+        out.resize(self.dim(), 0.0);
+        decode_payload_into(self.header.codec, self.dim(), &self.payload, out);
+    }
+
     /// Serialize the full frame (header + payload).
     pub fn encode(&self) -> Vec<u8> {
-        let (bits, bucket) = codec_params(self.header.codec);
         let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + self.payload.len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// [`Message::encode`] into a reused buffer (cleared first; capacity
+    /// kept). Byte-identical to [`Message::encode`] — pinned by
+    /// `rust/tests/workspace_identity.rs`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let (bits, bucket) = codec_params(self.header.codec);
+        out.clear();
+        out.reserve(FRAME_HEADER_BYTES + self.payload.len());
         out.extend_from_slice(&MAGIC);
         out.push(VERSION);
         out.push(codec_tag(self.header.codec));
@@ -222,7 +241,6 @@ impl Message {
         out.extend_from_slice(&self.wire_bits.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.payload);
-        out
     }
 
     /// Parse and validate a serialized frame.

@@ -41,7 +41,7 @@ use crate::data::dirichlet::{partition, Partition};
 use crate::data::loader::{eval_batches, ClientLoader, EvalBatches};
 use crate::data::{load_or_synthesize, DatasetSpec, TrainTest};
 use crate::metrics::{MetricsLog, RoundRecord};
-use crate::model::{LocalTrainer, Model, ModelSpec};
+use crate::model::{LocalTrainer, Model, ModelSpec, Workspace};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 use std::sync::{Arc, Mutex};
@@ -387,8 +387,14 @@ pub struct Federation {
     pub partition: Partition,
     /// Pre-batched test set for the evaluation cadence.
     pub eval_set: EvalBatches,
-    /// Fork-join worker pool for per-round client parallelism.
+    /// Fork-join worker pool for per-round client parallelism and
+    /// parallel evaluation.
     pub pool: ThreadPool,
+    /// One compute [`Workspace`] per pool worker slot (never shared):
+    /// worker `w` of a [`ThreadPool::map_worker`] call locks exactly
+    /// `workspaces[w]`, so locks never contend and scratch stays warm
+    /// across iterations, rounds, and runs.
+    pub workspaces: Vec<Mutex<Workspace>>,
     /// The global model parameters x.
     pub x: Vec<f32>,
     /// The run's root RNG (client sampling; streams derive from it).
@@ -470,13 +476,25 @@ impl Federation {
             cfg.threads
         };
         let x = model.init(&mut rng.derive(0x1217));
+        // The pool is sized from `threads` alone: capping at
+        // clients_per_round (the old policy) starved evaluation — with 2
+        // sampled clients on a 16-core box, eval_batches ran on 2 workers.
+        // Training fan-out still uses at most |S_r| workers per round
+        // (map_worker caps at the item count), so nothing oversubscribes.
+        let pool = ThreadPool::new(threads);
+        // One workspace per worker slot, initialized empty: a slot's arena
+        // is grown by its first `_into` call (Workspace::ensure), so slots
+        // the run never exercises (pool wider than clients_per_round and
+        // the eval batch count) cost nothing.
+        let workspaces = (0..pool.size()).map(|_| Mutex::new(Workspace::new())).collect();
         Federation {
             model,
             trainer,
             clients,
             partition: part,
             eval_set,
-            pool: ThreadPool::new(threads.min(cfg.clients_per_round.max(1))),
+            pool,
+            workspaces,
             x,
             rng,
             data,
@@ -490,9 +508,37 @@ impl Federation {
             .sample_without_replacement(self.clients.len(), m.min(self.clients.len()))
     }
 
-    /// Evaluate current global model on the test set.
+    /// Evaluate the current global model on the test set, fanning the eval
+    /// batches out across the worker pool (one workspace per worker slot).
+    ///
+    /// Bit-identical to the sequential `trainer.eval`: per-batch
+    /// (loss_sum, correct) pairs are computed independently — each batch's
+    /// arithmetic is self-contained — and folded on the coordinator in
+    /// batch order, exactly the order `model::eval_with` accumulates in.
     pub fn evaluate(&self) -> crate::model::EvalResult {
-        self.trainer.eval(&self.x, &self.eval_set)
+        let idx: Vec<usize> = (0..self.eval_set.batches.len()).collect();
+        let parts: Vec<(f64, usize)> = self.pool.map_worker(&idx, |w, _, &bi| {
+            let mut ws = self.workspaces[w].lock().unwrap();
+            self.trainer.eval_batch(
+                &self.x,
+                &self.eval_set.batches[bi],
+                self.eval_set.valid[bi],
+                &mut ws,
+            )
+        });
+        let mut loss_sum = 0.0;
+        let mut correct = 0usize;
+        let mut examples = 0usize;
+        for ((l, c), &valid) in parts.into_iter().zip(&self.eval_set.valid) {
+            loss_sum += l;
+            correct += c;
+            examples += valid;
+        }
+        crate::model::EvalResult {
+            mean_loss: loss_sum / examples.max(1) as f64,
+            accuracy: correct as f64 / examples.max(1) as f64,
+            examples,
+        }
     }
 
     /// Sum of all control variates (invariant diagnostics; see tests).

@@ -67,6 +67,10 @@ pub struct FedComLoc {
     /// -Global retains the compressed model message between rounds so
     /// subsequent downlinks ship (and are billed at) the compressed form.
     downlink_msg: Option<Message>,
+    /// Per-round decoded-uplink buffers, reused across rounds (grown on
+    /// demand, never shrunk) — the server-side twin of the workers'
+    /// workspaces.
+    delivery: Vec<Vec<f32>>,
 }
 
 impl FedComLoc {
@@ -82,6 +86,7 @@ impl FedComLoc {
             server_rng: Rng::seed_from_u64(0),
             p_over_gamma: 0.0,
             downlink_msg: None,
+            delivery: Vec::new(),
         }
     }
 }
@@ -138,24 +143,34 @@ impl FedAlgorithm for FedComLoc {
         let participants = ctx.transport.broadcast(&ctx.sampled, &msg);
         let x = msg.to_dense();
 
-        // ---- local segments in parallel ----
+        // ---- local segments in parallel (workspace fast path) ----
         let trainer = ctx.fed.trainer.clone();
         let gamma = cfg.gamma;
         let round = ctx.round;
         let (variant, local_density) = (self.variant, self.local_density);
         let compressor = self.compressor.as_ref();
-        let results: Vec<Segment> = ctx.map_clients(&participants, |ci, state| {
-            let mut xi = x.clone();
+        let d = x.len();
+        let results: Vec<Segment> = ctx.map_clients_ws(&participants, |ci, state, ws| {
+            // The local iterate x_i lives in the worker's workspace and
+            // ping-pongs with the fused-step output: moving a Vec out and
+            // swapping are pointer operations, so a warm segment performs
+            // no heap allocation besides the uplink message itself.
+            let mut xi = ws.take_xi_primed(&x);
             let mut loss_sum = 0.0f64;
             for _ in 0..seg_len {
                 let batch = state.loader.next_batch();
-                let (next, loss) = match (variant, local_density) {
-                    (Variant::Local, Some(density)) => {
-                        trainer.train_step_masked(&xi, &state.h, &batch, gamma, density)
-                    }
-                    _ => trainer.train_step(&xi, &state.h, &batch, gamma),
+                let loss = match (variant, local_density) {
+                    (Variant::Local, Some(density)) => trainer.train_step_masked_into(
+                        &xi[..d],
+                        &state.h,
+                        &batch,
+                        gamma,
+                        density,
+                        ws,
+                    ),
+                    _ => trainer.train_step_into(&xi[..d], &state.h, &batch, gamma, ws),
                 };
-                xi = next;
+                std::mem::swap(&mut xi, &mut ws.step);
                 loss_sum += loss as f64;
             }
             // ---- uplink: transmit x̂ (compressed for -Com) ----
@@ -163,10 +178,11 @@ impl FedAlgorithm for FedComLoc {
                 Variant::Com => Message::from_compressed(
                     round,
                     ci as u32,
-                    compressor.compress(&xi, &mut state.rng),
+                    compressor.compress(&xi[..d], &mut state.rng),
                 ),
-                _ => Message::dense(round, ci as u32, &xi),
+                _ => Message::dense(round, ci as u32, &xi[..d]),
             };
+            ws.put_xi(xi);
             Segment {
                 upload,
                 loss_sum,
@@ -177,18 +193,25 @@ impl FedAlgorithm for FedComLoc {
         // ---- uplink delivery on the coordinator thread ----
         let total_steps: usize = results.iter().map(|r| r.steps).sum();
         let loss_sum: f64 = results.iter().map(|r| r.loss_sum).sum();
-        let mut delivered: Vec<(usize, Vec<f32>)> = Vec::with_capacity(results.len());
+        // Decode into the per-round delivery buffers retained on self —
+        // the ε_i reconstructions, decoded from the wire format alone (no
+        // compressor instance needed), with zero steady-state allocation.
+        let mut delivered: Vec<(usize, usize)> = Vec::with_capacity(results.len());
+        let mut used = 0usize;
         for (seg, &ci) in results.into_iter().zip(&participants) {
             if let Some(received) = ctx.transport.uplink(ci, seg.upload) {
-                // The server-side reconstruction ε_i, decoded from the wire
-                // format alone (no compressor instance needed).
-                delivered.push((ci, received.to_dense()));
+                if self.delivery.len() == used {
+                    self.delivery.push(Vec::new());
+                }
+                received.to_dense_into(&mut self.delivery[used]);
+                delivered.push((ci, used));
+                used += 1;
             }
         }
 
-        if !delivered.is_empty() {
+        if used > 0 {
             // ---- aggregate (Algorithm 1 line 10) ----
-            let rows: Vec<&[f32]> = delivered.iter().map(|(_, e)| e.as_slice()).collect();
+            let rows: Vec<&[f32]> = self.delivery[..used].iter().map(|e| e.as_slice()).collect();
             crate::tensor::mean_into(&rows, &mut ctx.fed.x);
             // -Global: compress the aggregated model server-side (lines
             // 11–12); subsequent downlinks ship the compressed form.
@@ -200,12 +223,12 @@ impl FedAlgorithm for FedComLoc {
             }
 
             // ---- control-variate refresh (line 16) for participants ----
-            for (ci, epsilon) in &delivered {
-                let mut state = ctx.fed.clients[*ci].lock().unwrap();
+            for &(ci, slot) in &delivered {
+                let mut state = ctx.fed.clients[ci].lock().unwrap();
                 crate::tensor::control_variate_update(
                     &mut state.h,
                     &ctx.fed.x,
-                    epsilon,
+                    &self.delivery[slot],
                     self.p_over_gamma,
                 );
             }

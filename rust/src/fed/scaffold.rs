@@ -80,29 +80,31 @@ impl FedAlgorithm for Scaffold {
         // Returns (Δx, Δc, c_i⁺, loss_sum); the c_i refresh is committed
         // only once the uplink is known delivered, so a lossy transport
         // cannot advance a client variate the server never saw.
+        let d = x.len();
         let results: Vec<(Message, Message, Vec<f32>, f64)> =
-            ctx.map_clients(&participants, |ci, state| {
-                let mut xi = x.clone();
+            ctx.map_clients_ws(&participants, |ci, state, ws| {
+                let mut xi = ws.take_xi_primed(&x);
                 let mut loss_sum = 0.0f64;
                 // Effective control-variate correction: −c_i + c ⇒ pass
                 // h = c_i − c to the Scaffnew-form step x − γ(g − h).
-                let mut h_eff = vec![0.0f32; xi.len()];
+                let mut h_eff = vec![0.0f32; d];
                 tensor::sub(&state.h, &c_ref, &mut h_eff);
                 for _ in 0..local_steps {
                     let batch = state.loader.next_batch();
-                    let (next, loss) = trainer.train_step(&xi, &h_eff, &batch, gamma);
-                    xi = next;
+                    let loss = trainer.train_step_into(&xi[..d], &h_eff, &batch, gamma, ws);
+                    std::mem::swap(&mut xi, &mut ws.step);
                     loss_sum += loss as f64;
                 }
                 // Option II variate refresh.
-                let mut c_new = vec![0.0f32; xi.len()];
-                for j in 0..xi.len() {
+                let mut c_new = vec![0.0f32; d];
+                for j in 0..d {
                     c_new[j] = state.h[j] - c_ref[j] + (x[j] - xi[j]) * inv_e_gamma;
                 }
-                let mut dx = vec![0.0f32; xi.len()];
-                tensor::sub(&xi, &x, &mut dx);
-                let mut dc = vec![0.0f32; xi.len()];
+                let mut dx = vec![0.0f32; d];
+                tensor::sub(&xi[..d], &x, &mut dx);
+                let mut dc = vec![0.0f32; d];
                 tensor::sub(&c_new, &state.h, &mut dc);
+                ws.put_xi(xi);
                 (
                     Message::dense(round, ci as u32, &dx),
                     Message::dense(round, ci as u32, &dc),

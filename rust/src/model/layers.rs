@@ -15,6 +15,7 @@
 //! The flat layouts also still match `python/compile/models/*.py`.
 
 use super::ops::{self, ConvShape};
+use super::workspace::Workspace;
 use crate::util::rng::Rng;
 
 /// One stage of a model, described over the flat parameter vector.
@@ -322,18 +323,24 @@ impl Model {
         p
     }
 
-    /// Forward pass for a batch; returns per-layer post-activation buffers
-    /// plus pool argmax bookkeeping (for backward). The last activation
-    /// holds the logits.
-    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> (Vec<Vec<f32>>, Vec<Vec<u32>>) {
+    /// Forward pass for a batch through a caller [`Workspace`]: fills the
+    /// per-layer activation tape `ws.acts` (the last entry holds the
+    /// logits, in `ws.acts[last][..batch * num_classes]`) and the pool
+    /// argmax bookkeeping `ws.args`. Bias and ReLU run fused in the matmul
+    /// epilogues; no allocation once the workspace is warm.
+    pub fn forward_into(&self, params: &[f32], x: &[f32], batch: usize, ws: &mut Workspace) {
         debug_assert_eq!(params.len(), self.dim());
         debug_assert_eq!(x.len(), batch * self.input_dim);
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len());
-        let mut args: Vec<Vec<u32>> = Vec::with_capacity(self.layers.len());
+        ws.ensure(self, batch);
+        let Workspace { acts, args, col, .. } = ws;
         for (i, (layer, slice)) in self.layers.iter().zip(&self.layout.slices).enumerate() {
-            let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
-            let mut argmax = Vec::new();
-            let mut out = vec![0.0f32; batch * layer.out_len()];
+            let (prev, rest) = acts.split_at_mut(i);
+            let input: &[f32] = if i == 0 {
+                x
+            } else {
+                &prev[i - 1][..batch * layer.in_len()]
+            };
+            let out = &mut rest[0][..batch * layer.out_len()];
             match *layer {
                 Layer::Dense {
                     in_dim,
@@ -342,128 +349,183 @@ impl Model {
                 } => {
                     let (w0, w1) = slice.weight;
                     let (b0, b1) = slice.bias;
-                    ops::matmul(input, &params[w0..w1], &mut out, batch, in_dim, out_dim);
-                    ops::add_bias(&mut out, &params[b0..b1], batch, out_dim);
-                    if relu {
-                        ops::relu_inplace(&mut out);
-                    }
+                    ops::matmul_bias_act(
+                        input,
+                        &params[w0..w1],
+                        &params[b0..b1],
+                        out,
+                        batch,
+                        in_dim,
+                        out_dim,
+                        relu,
+                    );
                 }
                 Layer::Conv { relu, .. } => {
                     let s = layer.conv_shape().expect("conv layer");
                     let (w0, w1) = slice.weight;
                     let (b0, b1) = slice.bias;
-                    let mut col = vec![0.0f32; s.col_rows() * s.col_cols()];
+                    let panel = s.col_rows() * s.col_cols();
                     ops::conv2d_forward(
                         input,
                         &params[w0..w1],
                         &params[b0..b1],
                         &s,
                         batch,
-                        &mut out,
-                        &mut col,
+                        out,
+                        &mut col[..panel],
+                        relu,
                     );
-                    if relu {
-                        ops::relu_inplace(&mut out);
-                    }
                 }
                 Layer::MaxPool2 {
                     channels,
                     in_h,
                     in_w,
                 } => {
-                    argmax = vec![0u32; out.len()];
-                    ops::maxpool2_forward(input, batch * channels, in_h, in_w, &mut out, &mut argmax);
+                    let argmax = &mut args[i][..out.len()];
+                    ops::maxpool2_forward(input, batch * channels, in_h, in_w, out, argmax);
                 }
             }
-            acts.push(out);
-            args.push(argmax);
         }
-        (acts, args)
     }
 
-    /// Full gradient of the mean softmax-CE loss. Returns (∇f, loss).
-    pub fn grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> (Vec<f32>, f32) {
+    /// Full gradient of the mean softmax-CE loss through a caller
+    /// [`Workspace`]: the gradient lands in `ws.grad[..dim]`, the return
+    /// value is the loss. Bit-identical to [`Model::grad`] (which is a thin
+    /// wrapper over this), regardless of how warm the workspace is — every
+    /// buffer is fully overwritten before it is read.
+    pub fn grad_into(&self, params: &[f32], x: &[f32], y: &[i32], ws: &mut Workspace) -> f32 {
         let batch = y.len();
-        let (acts, args) = self.forward(params, x, batch);
-        let logits = &acts[acts.len() - 1];
-        let (loss, mut dz) = ops::softmax_cross_entropy(logits, y, self.num_classes);
-
-        let mut g = vec![0.0f32; self.dim()];
+        self.forward_into(params, x, batch, ws);
+        let nc = self.num_classes;
+        let Workspace {
+            acts,
+            args,
+            delta_a,
+            delta_b,
+            col,
+            dcol,
+            grad: g,
+            ..
+        } = ws;
+        let logits = &acts[self.layers.len() - 1][..batch * nc];
+        let loss = ops::softmax_cross_entropy_into(logits, y, nc, &mut delta_a[..batch * nc]);
+        // The upstream delta dz lives in `delta_a`; each layer writes its
+        // input gradient into `delta_b`, then the two swap (pointer swap).
+        let mut dz_len = batch * nc;
         for i in (0..self.layers.len()).rev() {
             let layer = self.layers[i];
             let slice = self.layout.slices[i];
-            let input: &[f32] = if i == 0 { x } else { &acts[i - 1] };
+            let input: &[f32] = if i == 0 {
+                x
+            } else {
+                &acts[i - 1][..batch * layer.in_len()]
+            };
             let need_dx = i > 0;
-            let mut dx: Option<Vec<f32>> = None;
+            let mut produced = false;
             match layer {
                 Layer::Dense {
                     in_dim, out_dim, ..
                 } => {
                     let (w0, w1) = slice.weight;
                     let (b0, b1) = slice.bias;
-                    ops::matmul_at_b(input, &dz, &mut g[w0..w1], in_dim, batch, out_dim);
-                    ops::bias_grad(&dz, &mut g[b0..b1], batch, out_dim);
+                    let dz = &delta_a[..dz_len];
+                    ops::matmul_at_b(input, dz, &mut g[w0..w1], in_dim, batch, out_dim);
+                    ops::bias_grad(dz, &mut g[b0..b1], batch, out_dim);
                     if need_dx {
-                        let mut d = vec![0.0f32; batch * in_dim];
-                        ops::matmul_a_bt(&dz, &params[w0..w1], &mut d, batch, out_dim, in_dim);
-                        dx = Some(d);
+                        ops::matmul_a_bt(
+                            dz,
+                            &params[w0..w1],
+                            &mut delta_b[..batch * in_dim],
+                            batch,
+                            out_dim,
+                            in_dim,
+                        );
+                        produced = true;
                     }
                 }
                 Layer::Conv { .. } => {
                     let s = layer.conv_shape().expect("conv layer");
                     let (w0, w1) = slice.weight;
                     let (_, b1) = slice.bias;
-                    let mut col = vec![0.0f32; s.col_rows() * s.col_cols()];
-                    let mut dcol = vec![0.0f32; col.len()];
-                    let mut d = if need_dx {
-                        Some(vec![0.0f32; batch * layer.in_len()])
-                    } else {
-                        None
-                    };
+                    let panel = s.col_rows() * s.col_cols();
                     // Weight and bias blocks are adjacent in the layout, so
                     // one split yields the two disjoint gradient views.
                     let (gw, gb) = g[w0..b1].split_at_mut(w1 - w0);
+                    let dx = if need_dx {
+                        produced = true;
+                        Some(&mut delta_b[..batch * layer.in_len()])
+                    } else {
+                        None
+                    };
                     ops::conv2d_backward(
                         input,
                         &params[w0..w1],
-                        &dz,
+                        &delta_a[..dz_len],
                         &s,
                         batch,
                         gw,
                         gb,
-                        d.as_deref_mut(),
-                        &mut col,
-                        &mut dcol,
+                        dx,
+                        &mut col[..panel],
+                        &mut dcol[..panel],
                     );
-                    dx = d;
                 }
                 Layer::MaxPool2 { .. } => {
-                    let mut d = vec![0.0f32; batch * layer.in_len()];
-                    ops::maxpool2_backward(&dz, &args[i], &mut d);
-                    dx = Some(d);
+                    ops::maxpool2_backward(
+                        &delta_a[..dz_len],
+                        &args[i][..dz_len],
+                        &mut delta_b[..batch * layer.in_len()],
+                    );
+                    produced = true;
                 }
             }
-            if let Some(mut d) = dx {
+            if produced {
+                let new_len = batch * layer.in_len();
                 // Crossing into layer i−1's output: undo its ReLU (the
                 // stored activation is post-ReLU, so the mask is d > 0).
                 if i > 0 && self.layers[i - 1].has_relu() {
-                    ops::relu_backward_inplace(&mut d, &acts[i - 1]);
+                    ops::relu_backward_inplace(&mut delta_b[..new_len], &acts[i - 1][..new_len]);
                 }
-                dz = d;
+                std::mem::swap(delta_a, delta_b);
+                dz_len = new_len;
             }
         }
-        (g, loss)
+        loss
     }
 
-    /// (loss_sum, correct) over the first `valid` rows of a batch.
-    pub fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], valid: usize) -> (f64, usize) {
+    /// Full gradient of the mean softmax-CE loss. Returns (∇f, loss).
+    /// Thin allocating wrapper over [`Model::grad_into`].
+    pub fn grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> (Vec<f32>, f32) {
+        let mut ws = Workspace::for_model(self, y.len());
+        let loss = self.grad_into(params, x, y, &mut ws);
+        debug_assert_eq!(ws.grad.len(), self.dim());
+        (ws.grad, loss)
+    }
+
+    /// (loss_sum, correct) over the first `valid` rows of a batch, through
+    /// a caller [`Workspace`].
+    pub fn eval_batch_into(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        valid: usize,
+        ws: &mut Workspace,
+    ) -> (f64, usize) {
         let batch = y.len();
-        let (acts, _) = self.forward(params, x, batch);
-        let logits = &acts[acts.len() - 1];
+        self.forward_into(params, x, batch, ws);
+        let logits = &ws.acts[self.layers.len() - 1][..batch * self.num_classes];
         (
             ops::cross_entropy_sum(logits, y, self.num_classes, valid),
             ops::count_correct(logits, y, self.num_classes, valid),
         )
+    }
+
+    /// (loss_sum, correct) over the first `valid` rows of a batch. Thin
+    /// allocating wrapper over [`Model::eval_batch_into`].
+    pub fn eval_batch(&self, params: &[f32], x: &[f32], y: &[i32], valid: usize) -> (f64, usize) {
+        let mut ws = Workspace::for_model(self, y.len());
+        self.eval_batch_into(params, x, y, valid, &mut ws)
     }
 }
 
@@ -686,8 +748,9 @@ mod tests {
         let p = m.init(&mut Rng::seed_from_u64(6));
         // Logits are x @ W + b exactly.
         let x = vec![1.0f32, 0.0, -1.0, 0.5, 2.0, 0.25];
-        let (acts, _) = m.forward(&p, &x, 1);
-        let logits = &acts[0];
+        let mut ws = Workspace::for_model(&m, 1);
+        m.forward_into(&p, &x, 1, &mut ws);
+        let logits = &ws.acts[0][..3];
         for j in 0..3 {
             let mut want = p[6 * 3 + j];
             for (i, &xv) in x.iter().enumerate() {

@@ -27,9 +27,11 @@ pub mod layers;
 pub mod native;
 pub mod ops;
 pub mod spec;
+pub mod workspace;
 
 pub use layers::{Layer, Model, ParamLayout, ParamSlice};
 pub use spec::{build_model, model_registry, ModelFamily, ModelSpec};
+pub use workspace::Workspace;
 
 use crate::data::loader::{Batch, EvalBatches};
 use crate::util::rng::Rng;
@@ -53,6 +55,12 @@ pub struct EvalResult {
 
 /// Executes the local objective: gradients, fused Scaffnew steps, and
 /// evaluation. Implementations must be deterministic given their inputs.
+///
+/// Every operation comes in two forms: the original allocating signature
+/// and a workspace-backed `_into` twin that reuses a caller
+/// [`Workspace`] (one per pool worker — see `model::workspace`). The
+/// allocating forms are thin wrappers, so the two are bit-identical by
+/// construction; the federated drivers run the `_into` fast path.
 pub trait LocalTrainer: Send + Sync {
     /// The architecture this trainer computes over.
     fn model(&self) -> &Model;
@@ -66,6 +74,18 @@ pub trait LocalTrainer: Send + Sync {
     /// Returns (∇f(params), loss).
     fn grad(&self, params: &[f32], batch: &Batch) -> (Vec<f32>, f32);
 
+    /// Workspace-backed [`LocalTrainer::grad`]: ∇f lands in
+    /// `ws.grad[..dim]`, the loss is returned. The default copies through
+    /// the allocating path (right for trainers that cannot avoid the
+    /// allocation, e.g. PJRT's device transfers); the native trainer
+    /// overrides it with the zero-allocation compute core.
+    fn grad_into(&self, params: &[f32], batch: &Batch, ws: &mut Workspace) -> f32 {
+        let (g, loss) = self.grad(params, batch);
+        ws.ensure(self.model(), batch.y.len());
+        ws.grad[..g.len()].copy_from_slice(&g);
+        loss
+    }
+
     /// Fused Scaffnew local step (Algorithm 1 line 7):
     /// x̂ = params − γ·(∇f(params) − h). Returns (x̂, loss).
     fn train_step(&self, params: &[f32], h: &[f32], batch: &Batch, gamma: f32) -> (Vec<f32>, f32) {
@@ -73,6 +93,23 @@ pub trait LocalTrainer: Send + Sync {
         let mut out = vec![0.0f32; params.len()];
         crate::tensor::sgd_control_variate_step(params, &g, h, gamma, &mut out);
         (out, loss)
+    }
+
+    /// Workspace-backed [`LocalTrainer::train_step`]: x̂ lands in
+    /// `ws.step[..dim]`, the loss is returned. Zero-allocation once the
+    /// workspace is warm (pinned by `rust/tests/alloc_steady_state.rs`).
+    fn train_step_into(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        ws: &mut Workspace,
+    ) -> f32 {
+        let loss = self.grad_into(params, batch, ws);
+        let (g, out) = ws.grad_and_step(params.len());
+        crate::tensor::sgd_control_variate_step(params, g, h, gamma, out);
+        loss
     }
 
     /// FedComLoc-Local step (Algorithm 1 line 6½): the gradient is evaluated
@@ -95,8 +132,63 @@ pub trait LocalTrainer: Send + Sync {
         (out, loss)
     }
 
-    /// Mean loss + accuracy over an evaluation set.
-    fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult;
+    /// Workspace-backed [`LocalTrainer::train_step_masked`]: x̂ lands in
+    /// `ws.step[..dim]`, the loss is returned. The masked parameter copy
+    /// and the TopK selection scratch both live in the workspace.
+    fn train_step_masked_into(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        density: f64,
+        ws: &mut Workspace,
+    ) -> f32 {
+        let d = params.len();
+        let k = ((density * d as f64).ceil() as usize).clamp(1, d);
+        // Move the masked buffer (and TopK scratch) out of the workspace so
+        // the gradient call below can borrow the workspace mutably; moving
+        // a Vec is a pointer swap, not an allocation.
+        let mut masked = std::mem::take(&mut ws.masked);
+        if masked.len() < d {
+            masked.resize(d, 0.0);
+        }
+        masked[..d].copy_from_slice(params);
+        let mut keys = std::mem::take(&mut ws.topk_keys);
+        let mut idx = std::mem::take(&mut ws.topk_idx);
+        crate::compress::topk::apply_topk_with(&mut masked[..d], k, &mut keys, &mut idx);
+        ws.topk_keys = keys;
+        ws.topk_idx = idx;
+        let loss = self.grad_into(&masked[..d], batch, ws);
+        ws.masked = masked;
+        let (g, out) = ws.grad_and_step(d);
+        crate::tensor::sgd_control_variate_step(params, g, h, gamma, out);
+        loss
+    }
+
+    /// (loss_sum, correct) over the first `valid` rows of one evaluation
+    /// batch, through a caller workspace — the primitive the federation's
+    /// parallel evaluation fans out over.
+    fn eval_batch(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        valid: usize,
+        ws: &mut Workspace,
+    ) -> (f64, usize);
+
+    /// Workspace-backed evaluation over a whole set: sequential fold of
+    /// [`LocalTrainer::eval_batch`] in batch order.
+    fn eval_into(&self, params: &[f32], batches: &EvalBatches, ws: &mut Workspace) -> EvalResult {
+        eval_with(batches, |batch, valid| self.eval_batch(params, batch, valid, ws))
+    }
+
+    /// Mean loss + accuracy over an evaluation set (allocating wrapper
+    /// over [`LocalTrainer::eval_into`] with a throwaway workspace).
+    fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult {
+        let mut ws = Workspace::new();
+        self.eval_into(params, batches, &mut ws)
+    }
 }
 
 /// Shared eval loop used by trainers that expose per-batch (loss_sum,

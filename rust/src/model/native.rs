@@ -8,8 +8,9 @@
 //! production path for the artifact-backed seed layouts is
 //! `runtime::PjrtTrainer`.
 
-use super::{eval_with, EvalResult, LocalTrainer, Model};
-use crate::data::loader::{Batch, EvalBatches};
+use super::workspace::Workspace;
+use super::{LocalTrainer, Model};
+use crate::data::loader::Batch;
 
 /// The pure-Rust compute plane for any registry [`Model`].
 #[derive(Debug, Clone)]
@@ -40,10 +41,20 @@ impl LocalTrainer for NativeTrainer {
         self.model.grad(params, &batch.x, &batch.y)
     }
 
-    fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult {
-        eval_with(batches, |batch, valid| {
-            self.model.eval_batch(params, &batch.x, &batch.y, valid)
-        })
+    fn grad_into(&self, params: &[f32], batch: &Batch, ws: &mut Workspace) -> f32 {
+        assert_eq!(params.len(), self.model.dim());
+        assert_eq!(batch.feature_dim, self.model.input_dim());
+        self.model.grad_into(params, &batch.x, &batch.y, ws)
+    }
+
+    fn eval_batch(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        valid: usize,
+        ws: &mut Workspace,
+    ) -> (f64, usize) {
+        self.model.eval_batch_into(params, &batch.x, &batch.y, valid, ws)
     }
 }
 

@@ -2,11 +2,42 @@
 //!
 //! These back the pure-Rust [`super::native::NativeTrainer`], the PJRT-free
 //! twin of the AOT-compiled JAX programs. Numerics are cross-checked against
-//! the HLO artifacts in `rust/tests/runtime_artifacts.rs`. The matmul is a
-//! blocked, autovectorizing kernel — enough to keep the CNN usable for
-//! tests/benches; the production hot path runs through XLA.
+//! the HLO artifacts in `rust/tests/runtime_artifacts.rs`.
+//!
+//! # The matmul micro-kernel
+//!
+//! All three matmul orientations (`matmul_acc`, `matmul_at_b`,
+//! `matmul_a_bt`) share one register-blocked scheme: 4 output rows at a
+//! time, 16 columns per accumulator tile (two 8-lane f32 vectors once the
+//! autovectorizer lowers the fixed-size-array inner loops), with the whole
+//! K reduction held in registers so the C tile is touched exactly once per
+//! call. Inner loops run over `[f32; 16]` / `[f32; 8]` array references
+//! obtained via `try_into`, which eliminates bounds checks and gives LLVM
+//! exact trip counts to unroll.
+//!
+//! Per-element accumulation order is ascending `k`, matching the previous
+//! scalar kernels, except for the dot-product orientation (`matmul_a_bt`)
+//! which lane-splits the reduction 8 ways and combines with a fixed
+//! deterministic tree — results are deterministic for a given build, which
+//! is the invariant every bit-identity test in this repo relies on.
+//!
+//! Bias and ReLU are fused into the matmul epilogues
+//! ([`matmul_bias_act`], [`matmul_a_bt_bias_act`]) for the Dense/Conv
+//! forward paths: the epilogue applies `+bias` then `max(0, ·)` per element
+//! in the same order the former separate `add_bias`/`relu_inplace` passes
+//! did, so fusion changes no values — it only removes two extra sweeps
+//! over the activation buffer.
+//!
+//! Every op writes into caller-provided buffers and fully overwrites (or
+//! explicitly accumulates into) its output, so the buffers can live in a
+//! reused [`super::workspace::Workspace`] with no cross-call state leakage.
 
-/// C[m×n] = A[m×k] @ B[k×n]  (row-major, accumulate into zeroed C).
+/// Columns per register accumulator tile (two 8-lane f32 vectors).
+const NR: usize = 16;
+/// Lanes for the lane-split dot-product reduction.
+const DL: usize = 8;
+
+/// C[m×n] = A[m×k] @ B[k×n]  (row-major, overwrite).
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
@@ -15,66 +46,400 @@ pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize)
     matmul_acc(a, b, c, m, k, n);
 }
 
-/// C += A @ B — ikj loop order so the inner loop streams B and C rows
-/// (unit stride ⇒ autovectorizes).
+/// C += A @ B — register-blocked 4×16 micro-kernel (see module docs).
 pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    const KB: usize = 64; // K-blocking keeps B panel in L1/L2
-    for k0 in (0..k).step_by(KB) {
-        let k1 = (k0 + KB).min(k);
-        for i in 0..m {
-            let a_row = &a[i * k..(i + 1) * k];
-            let c_row = &mut c[i * n..(i + 1) * n];
-            for kk in k0..k1 {
-                let aik = a_row[kk];
-                if aik == 0.0 {
-                    continue; // sparse activations (post-ReLU) skip cheaply
-                }
-                let b_row = &b[kk * n..(kk + 1) * n];
-                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                    *cv += aik * bv;
-                }
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut i = 0;
+    while i + 4 <= m {
+        let (a0, a1, a2, a3) = (
+            &a[i * k..(i + 1) * k],
+            &a[(i + 1) * k..(i + 2) * k],
+            &a[(i + 2) * k..(i + 3) * k],
+            &a[(i + 3) * k..(i + 4) * k],
+        );
+        let mut rows = c[i * n..(i + 4) * n].chunks_exact_mut(n);
+        let (c0, c1, c2, c3) = (
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+        );
+        acc_rows4(a0, a1, a2, a3, b, c0, c1, c2, c3, k, n);
+        i += 4;
+    }
+    while i < m {
+        acc_row1(&a[i * k..(i + 1) * k], b, &mut c[i * n..(i + 1) * n], k, n);
+        i += 1;
+    }
+}
+
+/// 4-row × 16-col accumulator tiles over the full K reduction.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn acc_rows4(
+    a0: &[f32],
+    a1: &[f32],
+    a2: &[f32],
+    a3: &[f32],
+    b: &[f32],
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    k: usize,
+    n: usize,
+) {
+    let mut j = 0;
+    while j + NR <= n {
+        let mut t0 = [0f32; NR];
+        let mut t1 = [0f32; NR];
+        let mut t2 = [0f32; NR];
+        let mut t3 = [0f32; NR];
+        t0.copy_from_slice(&c0[j..j + NR]);
+        t1.copy_from_slice(&c1[j..j + NR]);
+        t2.copy_from_slice(&c2[j..j + NR]);
+        t3.copy_from_slice(&c3[j..j + NR]);
+        for kk in 0..k {
+            let bw: &[f32; NR] = b[kk * n + j..kk * n + j + NR].try_into().unwrap();
+            let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            for l in 0..NR {
+                t0[l] += x0 * bw[l];
+                t1[l] += x1 * bw[l];
+                t2[l] += x2 * bw[l];
+                t3[l] += x3 * bw[l];
+            }
+        }
+        c0[j..j + NR].copy_from_slice(&t0);
+        c1[j..j + NR].copy_from_slice(&t1);
+        c2[j..j + NR].copy_from_slice(&t2);
+        c3[j..j + NR].copy_from_slice(&t3);
+        j += NR;
+    }
+    if j < n {
+        let w = n - j;
+        let mut t = [[0f32; NR]; 4];
+        t[0][..w].copy_from_slice(&c0[j..]);
+        t[1][..w].copy_from_slice(&c1[j..]);
+        t[2][..w].copy_from_slice(&c2[j..]);
+        t[3][..w].copy_from_slice(&c3[j..]);
+        for kk in 0..k {
+            let bw = &b[kk * n + j..kk * n + n];
+            let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            for l in 0..w {
+                t[0][l] += x0 * bw[l];
+                t[1][l] += x1 * bw[l];
+                t[2][l] += x2 * bw[l];
+                t[3][l] += x3 * bw[l];
+            }
+        }
+        c0[j..].copy_from_slice(&t[0][..w]);
+        c1[j..].copy_from_slice(&t[1][..w]);
+        c2[j..].copy_from_slice(&t[2][..w]);
+        c3[j..].copy_from_slice(&t[3][..w]);
+    }
+}
+
+/// Single-row remainder of [`matmul_acc`] (1×16 tiles).
+#[inline(always)]
+fn acc_row1(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize) {
+    let mut j = 0;
+    while j + NR <= n {
+        let mut t = [0f32; NR];
+        t.copy_from_slice(&c[j..j + NR]);
+        for (kk, &x) in a.iter().enumerate().take(k) {
+            let bw: &[f32; NR] = b[kk * n + j..kk * n + j + NR].try_into().unwrap();
+            for l in 0..NR {
+                t[l] += x * bw[l];
+            }
+        }
+        c[j..j + NR].copy_from_slice(&t);
+        j += NR;
+    }
+    if j < n {
+        let w = n - j;
+        let mut t = [0f32; NR];
+        t[..w].copy_from_slice(&c[j..]);
+        for (kk, &x) in a.iter().enumerate().take(k) {
+            let bw = &b[kk * n + j..kk * n + n];
+            for l in 0..w {
+                t[l] += x * bw[l];
+            }
+        }
+        c[j..].copy_from_slice(&t[..w]);
+    }
+}
+
+/// C[m×n] = A[m×k] @ B[k×n] + bias[n] (row-broadcast), optionally followed
+/// by ReLU — the fused Dense-layer forward. Overwrites C. The epilogue
+/// applies `+bias` then `max(0, ·)` per element, identical to running
+/// [`matmul`], `add_bias`, `relu_inplace` in sequence.
+pub fn matmul_bias_act(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    debug_assert_eq!(bias.len(), n);
+    matmul(a, b, c, m, k, n);
+    for row in c.chunks_exact_mut(n) {
+        if relu {
+            for (v, &bv) in row.iter_mut().zip(bias) {
+                let s = *v + bv;
+                *v = if s < 0.0 { 0.0 } else { s };
+            }
+        } else {
+            for (v, &bv) in row.iter_mut().zip(bias) {
+                *v += bv;
             }
         }
     }
 }
 
 /// C[m×n] = A[k×m]ᵀ @ B[k×n]  (used for weight gradients: dW = Xᵀ @ dY).
+/// Fully overwrites C. Register-blocked like [`matmul_acc`] with strided
+/// (column) A loads.
 pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    for kk in 0..k {
-        let a_row = &a[kk * m..(kk + 1) * m];
-        let b_row = &b[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let aik = a_row[i];
-            if aik == 0.0 {
-                continue;
-            }
-            let c_row = &mut c[i * n..(i + 1) * n];
-            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-                *cv += aik * bv;
-            }
-        }
+    let mut i = 0;
+    while i + 4 <= m {
+        let mut rows = c[i * n..(i + 4) * n].chunks_exact_mut(n);
+        let (c0, c1, c2, c3) = (
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+        );
+        at_b_rows4(a, i, m, b, c0, c1, c2, c3, k, n);
+        i += 4;
+    }
+    while i < m {
+        at_b_row1(a, i, m, b, &mut c[i * n..(i + 1) * n], k, n);
+        i += 1;
     }
 }
 
+/// 4 strided-A rows × 16-col tiles for the Aᵀ orientation.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn at_b_rows4(
+    a: &[f32],
+    i: usize,
+    m: usize,
+    b: &[f32],
+    c0: &mut [f32],
+    c1: &mut [f32],
+    c2: &mut [f32],
+    c3: &mut [f32],
+    k: usize,
+    n: usize,
+) {
+    let mut j = 0;
+    while j + NR <= n {
+        let mut t0 = [0f32; NR];
+        let mut t1 = [0f32; NR];
+        let mut t2 = [0f32; NR];
+        let mut t3 = [0f32; NR];
+        for kk in 0..k {
+            let base = kk * m + i;
+            let (x0, x1, x2, x3) = (a[base], a[base + 1], a[base + 2], a[base + 3]);
+            let bw: &[f32; NR] = b[kk * n + j..kk * n + j + NR].try_into().unwrap();
+            for l in 0..NR {
+                t0[l] += x0 * bw[l];
+                t1[l] += x1 * bw[l];
+                t2[l] += x2 * bw[l];
+                t3[l] += x3 * bw[l];
+            }
+        }
+        c0[j..j + NR].copy_from_slice(&t0);
+        c1[j..j + NR].copy_from_slice(&t1);
+        c2[j..j + NR].copy_from_slice(&t2);
+        c3[j..j + NR].copy_from_slice(&t3);
+        j += NR;
+    }
+    if j < n {
+        let w = n - j;
+        let mut t = [[0f32; NR]; 4];
+        for kk in 0..k {
+            let base = kk * m + i;
+            let (x0, x1, x2, x3) = (a[base], a[base + 1], a[base + 2], a[base + 3]);
+            let bw = &b[kk * n + j..kk * n + n];
+            for l in 0..w {
+                t[0][l] += x0 * bw[l];
+                t[1][l] += x1 * bw[l];
+                t[2][l] += x2 * bw[l];
+                t[3][l] += x3 * bw[l];
+            }
+        }
+        c0[j..].copy_from_slice(&t[0][..w]);
+        c1[j..].copy_from_slice(&t[1][..w]);
+        c2[j..].copy_from_slice(&t[2][..w]);
+        c3[j..].copy_from_slice(&t[3][..w]);
+    }
+}
+
+/// Single-row remainder of [`matmul_at_b`].
+#[inline(always)]
+fn at_b_row1(a: &[f32], i: usize, m: usize, b: &[f32], c: &mut [f32], k: usize, n: usize) {
+    let mut j = 0;
+    while j + NR <= n {
+        let mut t = [0f32; NR];
+        for kk in 0..k {
+            let x = a[kk * m + i];
+            let bw: &[f32; NR] = b[kk * n + j..kk * n + j + NR].try_into().unwrap();
+            for l in 0..NR {
+                t[l] += x * bw[l];
+            }
+        }
+        c[j..j + NR].copy_from_slice(&t);
+        j += NR;
+    }
+    if j < n {
+        let w = n - j;
+        let mut t = [0f32; NR];
+        for kk in 0..k {
+            let x = a[kk * m + i];
+            let bw = &b[kk * n + j..kk * n + n];
+            for l in 0..w {
+                t[l] += x * bw[l];
+            }
+        }
+        c[j..].copy_from_slice(&t[..w]);
+    }
+}
+
+/// Lane-split dot product: 8 parallel accumulators combined with a fixed
+/// deterministic tree, scalar tail appended last.
+#[inline(always)]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; DL];
+    let n8 = a.len() / DL * DL;
+    let mut p = 0;
+    while p < n8 {
+        let av: &[f32; DL] = a[p..p + DL].try_into().unwrap();
+        let bv: &[f32; DL] = b[p..p + DL].try_into().unwrap();
+        for l in 0..DL {
+            acc[l] += av[l] * bv[l];
+        }
+        p += DL;
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+    for q in n8..a.len() {
+        s += a[q] * b[q];
+    }
+    s
+}
+
+/// Four simultaneous lane-split dot products against a shared right-hand
+/// row (streams `br` once for four A rows).
+#[inline(always)]
+#[allow(clippy::type_complexity)]
+fn dot_lanes4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], br: &[f32]) -> (f32, f32, f32, f32) {
+    let k = br.len();
+    let mut acc = [[0f32; DL]; 4];
+    let n8 = k / DL * DL;
+    let mut p = 0;
+    while p < n8 {
+        let bv: &[f32; DL] = br[p..p + DL].try_into().unwrap();
+        let v0: &[f32; DL] = a0[p..p + DL].try_into().unwrap();
+        let v1: &[f32; DL] = a1[p..p + DL].try_into().unwrap();
+        let v2: &[f32; DL] = a2[p..p + DL].try_into().unwrap();
+        let v3: &[f32; DL] = a3[p..p + DL].try_into().unwrap();
+        for l in 0..DL {
+            acc[0][l] += v0[l] * bv[l];
+            acc[1][l] += v1[l] * bv[l];
+            acc[2][l] += v2[l] * bv[l];
+            acc[3][l] += v3[l] * bv[l];
+        }
+        p += DL;
+    }
+    let hsum = |t: &[f32; DL]| ((t[0] + t[4]) + (t[2] + t[6])) + ((t[1] + t[5]) + (t[3] + t[7]));
+    let (mut s0, mut s1, mut s2, mut s3) = (hsum(&acc[0]), hsum(&acc[1]), hsum(&acc[2]), hsum(&acc[3]));
+    for q in n8..k {
+        let bv = br[q];
+        s0 += a0[q] * bv;
+        s1 += a1[q] * bv;
+        s2 += a2[q] * bv;
+        s3 += a3[q] * bv;
+    }
+    (s0, s1, s2, s3)
+}
+
 /// C[m×n] = A[m×k] @ B[n×k]ᵀ  (used for input gradients: dX = dY @ Wᵀ).
+/// Fully overwrites C.
 pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
+    let mut i = 0;
+    while i + 4 <= m {
+        let (a0, a1, a2, a3) = (
+            &a[i * k..(i + 1) * k],
+            &a[(i + 1) * k..(i + 2) * k],
+            &a[(i + 2) * k..(i + 3) * k],
+            &a[(i + 3) * k..(i + 4) * k],
+        );
+        let mut rows = c[i * n..(i + 4) * n].chunks_exact_mut(n);
+        let (c0, c1, c2, c3) = (
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+            rows.next().unwrap(),
+        );
+        for j in 0..n {
+            let br = &b[j * k..(j + 1) * k];
+            let (s0, s1, s2, s3) = dot_lanes4(a0, a1, a2, a3, br);
+            c0[j] = s0;
+            c1[j] = s1;
+            c2[j] = s2;
+            c3[j] = s3;
+        }
+        i += 4;
+    }
+    while i < m {
         let a_row = &a[i * k..(i + 1) * k];
         let c_row = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let b_row = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in a_row.iter().zip(b_row) {
-                acc += av * bv;
+        for (j, cv) in c_row.iter_mut().enumerate() {
+            *cv = dot_lanes(a_row, &b[j * k..(j + 1) * k]);
+        }
+        i += 1;
+    }
+}
+
+/// C[m×n] = A[m×k] @ B[n×k]ᵀ + bias[m] (column-broadcast, i.e. one bias per
+/// *output row*), optionally followed by ReLU — the fused Conv-layer
+/// forward, where rows are output channels. Fully overwrites C.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_a_bt_bias_act(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    debug_assert_eq!(bias.len(), m);
+    matmul_a_bt(a, b, c, m, k, n);
+    for (row, &bv) in c.chunks_exact_mut(n).zip(bias) {
+        if relu {
+            for v in row.iter_mut() {
+                let s = *v + bv;
+                *v = if s < 0.0 { 0.0 } else { s };
             }
-            c_row[j] = acc;
+        } else {
+            for v in row.iter_mut() {
+                *v += bv;
+            }
         }
     }
 }
@@ -128,9 +493,22 @@ pub fn bias_grad(dy: &[f32], db: &mut [f32], m: usize, n: usize) {
 /// Softmax cross-entropy over logits[m×n] with integer labels.
 /// Returns (mean loss, dlogits[m×n] already scaled by 1/m).
 pub fn softmax_cross_entropy(logits: &[f32], labels: &[i32], n: usize) -> (f32, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; labels.len() * n];
+    let loss = softmax_cross_entropy_into(logits, labels, n, &mut dlogits);
+    (loss, dlogits)
+}
+
+/// [`softmax_cross_entropy`] writing the gradient into a caller buffer
+/// (fully overwritten). Returns the mean loss.
+pub fn softmax_cross_entropy_into(
+    logits: &[f32],
+    labels: &[i32],
+    n: usize,
+    dlogits: &mut [f32],
+) -> f32 {
     let m = labels.len();
     debug_assert_eq!(logits.len(), m * n);
-    let mut dlogits = vec![0.0f32; m * n];
+    debug_assert_eq!(dlogits.len(), m * n);
     let mut loss_acc = 0.0f64;
     for (row, &label) in labels.iter().enumerate() {
         let lo = row * n;
@@ -150,7 +528,7 @@ pub fn softmax_cross_entropy(logits: &[f32], labels: &[i32], n: usize) -> (f32, 
             *dv = (p - if j == label { 1.0 } else { 0.0 }) / m as f32;
         }
     }
-    ((loss_acc / m as f64) as f32, dlogits)
+    (loss_acc / m as f64) as f32
 }
 
 /// Count of argmax(logits_row) == label.
@@ -268,9 +646,11 @@ pub fn col2im_acc(col: &[f32], s: &ConvShape, dx: &mut [f32]) {
     }
 }
 
-/// Forward conv for a batch.
+/// Forward conv for a batch with the bias (+ optional ReLU) fused into the
+/// matmul epilogue.
 /// x:[b, in_ch, h, w], w:[out_ch, in_ch·k·k] (OIHW flattened), bias:[out_ch]
 /// → y:[b, out_ch, oh, ow]. `col_buf` is scratch of size col_rows·col_cols.
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_forward(
     x: &[f32],
     w: &[f32],
@@ -279,6 +659,7 @@ pub fn conv2d_forward(
     batch: usize,
     y: &mut [f32],
     col_buf: &mut [f32],
+    relu: bool,
 ) {
     let (oh, ow) = (s.out_h(), s.out_w());
     let ysz = s.out_ch * oh * ow;
@@ -288,16 +669,10 @@ pub fn conv2d_forward(
     debug_assert_eq!(w.len(), s.out_ch * s.col_cols());
     for b in 0..batch {
         im2col(&x[b * xsz..(b + 1) * xsz], s, col_buf);
-        // y_b[out_ch × (oh·ow)] = W[out_ch × cc] @ colᵀ[(cc) × (oh·ow)]
-        // computed as (col @ Wᵀ)ᵀ; we directly fill channel-major:
+        // y_b[out_ch × (oh·ow)] = W[out_ch × cc] @ colᵀ[(cc) × (oh·ow)],
+        // bias per output channel and ReLU applied in the epilogue.
         let yb = &mut y[b * ysz..(b + 1) * ysz];
-        matmul_a_bt(w, col_buf, yb, s.out_ch, s.col_cols(), s.col_rows());
-        for oc in 0..s.out_ch {
-            let row = &mut yb[oc * oh * ow..(oc + 1) * oh * ow];
-            for v in row.iter_mut() {
-                *v += bias[oc];
-            }
-        }
+        matmul_a_bt_bias_act(w, col_buf, bias, yb, s.out_ch, s.col_cols(), s.col_rows(), relu);
     }
 }
 
@@ -433,6 +808,96 @@ mod tests {
         }
     }
 
+    /// Naive triple loop in f64 as the oracle for the blocked kernels.
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += (a[i * k + kk] as f64) * (b[kk * n + j] as f64);
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_kernels_match_naive_across_shapes() {
+        // Exercise every row/column remainder path of the 4×16 tiling:
+        // m ∈ {1..5}, n around the NR=16 boundary, odd k.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(33);
+        for &m in &[1usize, 2, 3, 4, 5, 9] {
+            for &n in &[1usize, 15, 16, 17, 31, 33] {
+                for &k in &[1usize, 7, 8, 9, 40] {
+                    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let want = naive(&a, &b, m, k, n);
+                    let mut c = vec![0.0; m * n];
+                    matmul(&a, &b, &mut c, m, k, n);
+                    for (idx, (x, y)) in c.iter().zip(&want).enumerate() {
+                        assert!(
+                            (x - y).abs() < 1e-3,
+                            "matmul m={m} n={n} k={k} idx={idx}: {x} vs {y}"
+                        );
+                    }
+                    // Accumulate path: C preloaded with ones must add on top.
+                    let mut c_acc = vec![1.0f32; m * n];
+                    matmul_acc(&a, &b, &mut c_acc, m, k, n);
+                    for (x, y) in c_acc.iter().zip(&want) {
+                        assert!((x - (y + 1.0)).abs() < 1e-3, "acc m={m} n={n} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_bias_act_matches_separate_passes() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(34);
+        let (m, k, n) = (6, 11, 19);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut want = vec![0.0; m * n];
+        matmul(&a, &b, &mut want, m, k, n);
+        add_bias(&mut want, &bias, m, n);
+        let mut want_relu = want.clone();
+        relu_inplace(&mut want_relu);
+        let mut fused = vec![f32::NAN; m * n]; // stale garbage must be overwritten
+        matmul_bias_act(&a, &b, &bias, &mut fused, m, k, n, false);
+        assert_eq!(fused, want, "fused no-relu must be bit-identical");
+        let mut fused_relu = vec![f32::NAN; m * n];
+        matmul_bias_act(&a, &b, &bias, &mut fused_relu, m, k, n, true);
+        assert_eq!(fused_relu, want_relu, "fused relu must be bit-identical");
+
+        // Conv orientation: per-row bias.
+        let bt: Vec<f32> = {
+            let mut bt = vec![0.0; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            bt
+        };
+        let row_bias: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut want_rows = vec![0.0; m * n];
+        matmul_a_bt(&a, &bt, &mut want_rows, m, k, n);
+        for (row, &bv) in want_rows.chunks_exact_mut(n).zip(&row_bias) {
+            for v in row.iter_mut() {
+                *v += bv;
+            }
+            relu_inplace(row);
+        }
+        let mut fused_rows = vec![f32::NAN; m * n];
+        matmul_a_bt_bias_act(&a, &bt, &row_bias, &mut fused_rows, m, k, n, true);
+        assert_eq!(fused_rows, want_rows);
+    }
+
     #[test]
     fn softmax_ce_gradient_numerically() {
         use crate::util::rng::Rng;
@@ -457,6 +922,17 @@ mod tests {
                 grad[idx]
             );
         }
+    }
+
+    #[test]
+    fn softmax_into_overwrites_stale_buffer() {
+        let logits = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let labels = vec![0, 2];
+        let (loss, grad) = softmax_cross_entropy(&logits, &labels, 3);
+        let mut stale = vec![f32::NAN; 6];
+        let loss2 = softmax_cross_entropy_into(&logits, &labels, 3, &mut stale);
+        assert_eq!(loss.to_bits(), loss2.to_bits());
+        assert_eq!(grad, stale);
     }
 
     #[test]
@@ -521,7 +997,7 @@ mod tests {
         let bias = [0.5];
         let mut y = vec![0.0; 4];
         let mut col = vec![0.0; s.col_rows() * s.col_cols()];
-        conv2d_forward(&x, &w, &bias, &s, 1, &mut y, &mut col);
+        conv2d_forward(&x, &w, &bias, &s, 1, &mut y, &mut col, false);
         assert_eq!(y, vec![12.5, 16.5, 24.5, 28.5]);
     }
 
@@ -551,7 +1027,7 @@ mod tests {
         let fwd_loss = |w: &[f32], bias: &[f32], x: &[f32]| -> f64 {
             let mut y = vec![0.0; batch * ysz];
             let mut colb = vec![0.0; s.col_rows() * s.col_cols()];
-            conv2d_forward(x, w, bias, &s, batch, &mut y, &mut colb);
+            conv2d_forward(x, w, bias, &s, batch, &mut y, &mut colb, false);
             y.iter().zip(&t).map(|(&a, &b)| (a * b) as f64).sum()
         };
         let mut dw = vec![0.0; w.len()];

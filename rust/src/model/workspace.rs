@@ -1,0 +1,233 @@
+//! [`Workspace`]: the per-worker scratch arena behind the zero-allocation
+//! compute core.
+//!
+//! Every buffer the train/eval compute path used to allocate per call —
+//! the activation tape, pool argmax maps, the backward delta ping-pong
+//! pair, im2col panels, the gradient, the fused-step output, the masked
+//! parameter copy, and TopK selection scratch — lives here instead, sized
+//! once from the model's [`super::ParamLayout`] /
+//! [`crate::model::ops::ConvShape`] geometry and reused across all local
+//! iterations, rounds, and sweep units. (Codec byte buffers are reused
+//! through `Compressor::compress_into` / `Message::encode_into`, whose
+//! caller-owned `Vec`s serve the same role on the wire path; uplink
+//! `Message`s inherently own their payload, so that allocation remains.)
+//!
+//! # Ownership rules
+//!
+//! **One workspace per pool worker, never shared.** A [`Workspace`] is
+//! plain mutable state with no interior synchronization: the federation
+//! owns `pool.size()` of them behind one mutex each, and a worker locks
+//! exactly the workspace at its own worker slot for the duration of a
+//! closure (see `Federation::workspaces` and `RoundCtx::map_clients_ws`).
+//! Two workers never contend on one workspace, and a workspace never
+//! travels between threads mid-round.
+//!
+//! # Numerical contract
+//!
+//! Reuse is invisible: every op in [`crate::model::ops`] fully overwrites
+//! (or explicitly zero-fills) the buffers it touches, so
+//! `Model::grad_into` through a warm workspace is **bit-identical** to the
+//! allocating `Model::grad` — pinned by `rust/tests/workspace_identity.rs`,
+//! and the steady-state allocation count is pinned at zero by
+//! `rust/tests/alloc_steady_state.rs`.
+//!
+//! Buffers only ever grow ([`Workspace::ensure`]): alternating batch sizes
+//! (train 64, eval 256) or models within one sweep never shrink a buffer,
+//! so the steady state performs no allocator traffic at all.
+
+use super::layers::{Layer, Model};
+
+/// Per-worker scratch arena for the native compute plane (see module docs).
+///
+/// Fields are public so drivers can `std::mem::take`/`swap` the parameter
+/// buffers without an extra borrow of the whole workspace; the `_into`
+/// entry points re-validate sizes on entry ([`Workspace::ensure`]), so a
+/// shrunken or stale buffer is healed, never trusted.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Per-layer post-activation tape; entry `i` holds at least
+    /// `batch · out_len(i)` elements (the last entry holds the logits).
+    pub acts: Vec<Vec<f32>>,
+    /// Per-layer max-pool argmax bookkeeping (empty for non-pool layers).
+    pub args: Vec<Vec<u32>>,
+    /// Backward-pass delta buffer A (ping-pongs with `delta_b`).
+    pub delta_a: Vec<f32>,
+    /// Backward-pass delta buffer B (ping-pongs with `delta_a`).
+    pub delta_b: Vec<f32>,
+    /// im2col panel (max `col_rows · col_cols` over the model's conv layers).
+    pub col: Vec<f32>,
+    /// im2col gradient panel (same size as `col`).
+    pub dcol: Vec<f32>,
+    /// The gradient ∇f (model dimension d).
+    pub grad: Vec<f32>,
+    /// Output of the fused local step x̂ (model dimension d).
+    pub step: Vec<f32>,
+    /// Masked parameter copy for the FedComLoc-Local step (dimension d).
+    pub masked: Vec<f32>,
+    /// Local model iterate x_i reused across a client segment (dimension d).
+    pub xi: Vec<f32>,
+    /// TopK selection scratch: packed (magnitude, index) keys.
+    pub topk_keys: Vec<u64>,
+    /// TopK selection scratch: surviving indices.
+    pub topk_idx: Vec<usize>,
+}
+
+impl Workspace {
+    /// An empty workspace; buffers are provisioned on first
+    /// [`Workspace::ensure`] (or lazily by the `_into` entry points).
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A workspace pre-sized for `model` at batch size `batch` (the warm-up
+    /// allocation, done once per pool worker).
+    pub fn for_model(model: &Model, batch: usize) -> Workspace {
+        let mut ws = Workspace::new();
+        ws.ensure(model, batch);
+        ws
+    }
+
+    /// Grow (never shrink) every buffer to fit `model` at `batch`. Warm
+    /// calls only perform O(layers) integer comparisons — no allocation.
+    pub fn ensure(&mut self, model: &Model, batch: usize) {
+        let layers = model.layers();
+        let n_layers = layers.len();
+        if self.acts.len() < n_layers {
+            self.acts.resize_with(n_layers, Vec::new);
+            self.args.resize_with(n_layers, Vec::new);
+        }
+        let mut max_width = model.num_classes();
+        let mut max_panel = 0usize;
+        for (i, layer) in layers.iter().enumerate() {
+            max_width = max_width.max(layer.in_len()).max(layer.out_len());
+            let out = batch * layer.out_len();
+            grow_f32(&mut self.acts[i], out);
+            if matches!(layer, Layer::MaxPool2 { .. }) && self.args[i].len() < out {
+                self.args[i].resize(out, 0);
+            }
+            if let Layer::Conv {
+                in_ch,
+                out_ch,
+                in_h,
+                in_w,
+                k,
+                ..
+            } = *layer
+            {
+                let s = crate::model::ops::ConvShape {
+                    in_ch,
+                    out_ch,
+                    in_h,
+                    in_w,
+                    k,
+                };
+                max_panel = max_panel.max(s.col_rows() * s.col_cols());
+            }
+        }
+        grow_f32(&mut self.delta_a, batch * max_width);
+        grow_f32(&mut self.delta_b, batch * max_width);
+        grow_f32(&mut self.col, max_panel);
+        grow_f32(&mut self.dcol, max_panel);
+        grow_f32(&mut self.grad, model.dim());
+        // `step`, `masked`, `xi`, and the TopK scratch grow lazily at their
+        // use sites (grad_and_step / the masked step / the drivers), so the
+        // allocating `grad`/`eval_batch` wrappers — which build a throwaway
+        // workspace — never pay for train-step-only buffers.
+    }
+
+    /// Disjoint (gradient, step-output) views of length `dim` — the borrow
+    /// split [`crate::model::LocalTrainer::train_step_into`] needs to feed
+    /// the fused SGD update from the workspace gradient. Grows `step` on
+    /// first use.
+    pub fn grad_and_step(&mut self, dim: usize) -> (&[f32], &mut [f32]) {
+        debug_assert!(self.grad.len() >= dim);
+        grow_f32(&mut self.step, dim);
+        (&self.grad[..dim], &mut self.step[..dim])
+    }
+
+    /// Mutable view of the step-output buffer, grown to `dim` on first use
+    /// — for trainers that produce x̂ elsewhere (e.g. a PJRT artifact) and
+    /// copy it into the workspace.
+    pub fn step_mut(&mut self, dim: usize) -> &mut [f32] {
+        grow_f32(&mut self.step, dim);
+        &mut self.step[..dim]
+    }
+
+    /// Move the local-iterate buffer out of the workspace, primed with a
+    /// copy of `x` in its first `x.len()` elements (the rest, if any, is
+    /// stale — always slice by the current dimension). Moving a `Vec` is a
+    /// pointer operation; the only allocation is the first-ever growth.
+    ///
+    /// Pair every call with [`Workspace::put_xi`] after the segment —
+    /// forgetting the restore silently reverts the driver to one fresh
+    /// d-element allocation per segment, which is exactly the regression
+    /// this pair of methods makes structural.
+    pub fn take_xi_primed(&mut self, x: &[f32]) -> Vec<f32> {
+        let mut xi = std::mem::take(&mut self.xi);
+        grow_f32(&mut xi, x.len());
+        xi[..x.len()].copy_from_slice(x);
+        xi
+    }
+
+    /// Return the local-iterate buffer taken by [`Workspace::take_xi_primed`].
+    pub fn put_xi(&mut self, xi: Vec<f32>) {
+        self.xi = xi;
+    }
+}
+
+/// Grow a f32 buffer to at least `len` elements (never shrinks; new space
+/// is zeroed, though every op overwrites before reading).
+fn grow_f32(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::build_model;
+
+    #[test]
+    fn sizes_cover_model_geometry() {
+        let m = build_model("cnn:c4-c6-f16@1x16").unwrap();
+        let mut ws = Workspace::for_model(&m, 8);
+        assert_eq!(ws.acts.len(), m.layers().len());
+        for (i, layer) in m.layers().iter().enumerate() {
+            assert!(ws.acts[i].len() >= 8 * layer.out_len());
+        }
+        assert_eq!(ws.grad.len(), m.dim());
+        assert!(!ws.col.is_empty());
+        assert_eq!(ws.col.len(), ws.dcol.len());
+        // Train-step-only buffers stay empty until first use...
+        assert!(ws.step.is_empty());
+        // ...and grow exactly on demand.
+        let (g, out) = ws.grad_and_step(m.dim());
+        assert_eq!(g.len(), m.dim());
+        assert_eq!(out.len(), m.dim());
+    }
+
+    #[test]
+    fn ensure_grows_monotonically_and_is_idempotent() {
+        let m = build_model("mlp:12x8x5").unwrap();
+        let mut ws = Workspace::for_model(&m, 4);
+        assert_eq!(ws.acts[0].len(), 4 * 8);
+        ws.ensure(&m, 16);
+        assert_eq!(ws.acts[0].len(), 16 * 8); // grew with the batch
+        let grown = ws.acts[0].len();
+        ws.ensure(&m, 8); // smaller batch: no shrink
+        assert_eq!(ws.acts[0].len(), grown);
+        ws.ensure(&m, 16); // same: no change
+        assert_eq!(ws.acts[0].len(), grown);
+    }
+
+    #[test]
+    fn switching_models_resizes() {
+        let small = build_model("mlp:12x8x5").unwrap();
+        let big = build_model("mlp").unwrap();
+        let mut ws = Workspace::for_model(&small, 4);
+        ws.ensure(&big, 4);
+        assert_eq!(ws.grad.len(), big.dim());
+        assert!(ws.acts[0].len() >= 4 * big.layers()[0].out_len());
+    }
+}

@@ -8,56 +8,85 @@ use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+/// Shape + dtype of one executable input or output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Dimension sizes (empty = scalar).
     pub shape: Vec<usize>,
+    /// Element type name as the manifest spells it (`float32`, `int32`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count (1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One compiled program: HLO file plus its call signature.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// Manifest key, e.g. `mlp_train_step`.
     pub name: String,
+    /// Absolute path of the HLO text file.
     pub file: PathBuf,
+    /// Input signature, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output signature, in tuple order.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// Static shapes one model family's executables were compiled for.
 #[derive(Debug, Clone)]
 pub struct ModelArtifact {
+    /// Flat parameter count d.
     pub dim: usize,
+    /// Train-step batch size.
     pub batch: usize,
+    /// Evaluation batch size.
     pub eval_batch: usize,
+    /// Per-example input shape (e.g. `[784]` or `[3, 32, 32]`).
     pub input_shape: Vec<usize>,
+    /// Logit count.
     pub num_classes: usize,
 }
 
 impl ModelArtifact {
+    /// Per-example flat input length.
     pub fn input_dim(&self) -> usize {
         self.input_shape.iter().product()
     }
 }
 
+/// Parsed `artifacts/manifest.json`: every compiled program and model
+/// family the AOT step produced.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from (artifact paths resolve
+    /// relative to it).
     pub dir: PathBuf,
+    /// Programs by manifest key.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Model families by name.
     pub models: BTreeMap<String, ModelArtifact>,
 }
 
+/// Manifest loading/validation failure.
 #[derive(Debug)]
 pub enum ManifestError {
+    /// The manifest file could not be read.
     Io {
+        /// Path that failed to read.
         path: PathBuf,
+        /// Underlying I/O error.
         source: std::io::Error,
     },
+    /// The manifest JSON is malformed.
     Parse(String),
+    /// A required field or entry is absent (named).
     Missing(String),
+    /// An artifact's HLO file is not on disk.
     FileMissing(PathBuf),
 }
 
@@ -79,6 +108,7 @@ impl std::fmt::Display for ManifestError {
 impl std::error::Error for ManifestError {}
 
 impl Manifest {
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
@@ -88,6 +118,7 @@ impl Manifest {
         Self::parse(dir, &text)
     }
 
+    /// Parse manifest JSON text; `dir` anchors the artifact file paths.
     pub fn parse(dir: &Path, text: &str) -> Result<Manifest, ManifestError> {
         let root = json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
         let artifacts_obj = root
@@ -171,6 +202,7 @@ impl Manifest {
         })
     }
 
+    /// Look up an artifact and verify its HLO file exists on disk.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec, ManifestError> {
         let spec = self
             .artifacts
@@ -182,6 +214,7 @@ impl Manifest {
         Ok(spec)
     }
 
+    /// Look up a model family's compiled shapes.
     pub fn model(&self, name: &str) -> Result<&ModelArtifact, ManifestError> {
         self.models
             .get(name)

@@ -16,19 +16,31 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Mutex;
 
+/// PJRT engine failure.
 #[derive(Debug)]
 pub enum RuntimeError {
+    /// The artifact manifest failed to load or validate.
     Manifest(super::artifacts::ManifestError),
+    /// An error surfaced by the underlying `xla` crate.
     Xla(String),
+    /// A host input's element count disagrees with the manifest.
     BadInput {
+        /// Artifact name.
         name: String,
+        /// Zero-based input position.
         index: usize,
+        /// Element count the manifest declares.
         expected: usize,
+        /// Element count the caller supplied.
         got: usize,
     },
+    /// Wrong number of inputs for an artifact call.
     BadArity {
+        /// Artifact name.
         name: String,
+        /// Input count the manifest declares.
         expected: usize,
+        /// Input count the caller supplied.
         got: usize,
     },
 }
@@ -70,8 +82,11 @@ fn xla_err(e: xla::Error) -> RuntimeError {
 
 /// A host-side input value for an executable call.
 pub enum Input<'a> {
+    /// Dense f32 tensor data (row-major).
     F32(&'a [f32]),
+    /// Dense i32 tensor data (row-major).
     I32(&'a [i32]),
+    /// A single f32 scalar.
     ScalarF32(f32),
 }
 
@@ -88,11 +103,14 @@ impl Input<'_> {
 /// A host-side output value from an executable call.
 #[derive(Debug, Clone)]
 pub enum Output {
+    /// Dense f32 tensor data (row-major).
     F32(Vec<f32>),
+    /// Dense i32 tensor data (row-major).
     I32(Vec<i32>),
 }
 
 impl Output {
+    /// The f32 data (panics on dtype mismatch).
     pub fn as_f32(&self) -> &[f32] {
         match self {
             Output::F32(v) => v,
@@ -100,6 +118,7 @@ impl Output {
         }
     }
 
+    /// The i32 data (panics on dtype mismatch).
     pub fn as_i32(&self) -> &[i32] {
         match self {
             Output::I32(v) => v,
@@ -107,6 +126,7 @@ impl Output {
         }
     }
 
+    /// The single f32 value of a scalar output (panics otherwise).
     pub fn scalar_f32(&self) -> f32 {
         let v = self.as_f32();
         assert_eq!(v.len(), 1, "expected scalar output");
@@ -166,6 +186,7 @@ impl Engine {
         })
     }
 
+    /// The manifest the engine's executables were loaded from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

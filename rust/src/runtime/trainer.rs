@@ -11,11 +11,13 @@
 //! `experiments::ExpOptions::make_trainer`) fall back to the native plane.
 
 use super::engine::{Engine, Input, RuntimeError};
-use crate::data::loader::{Batch, EvalBatches};
-use crate::model::{eval_with, EvalResult, LocalTrainer, Model};
+use crate::data::loader::Batch;
+use crate::model::{LocalTrainer, Model, Workspace};
 use std::path::Path;
 use std::sync::Arc;
 
+/// The AOT compute plane: one compiled PJRT executable per program, adapted
+/// to [`LocalTrainer`] (see module docs).
 pub struct PjrtTrainer {
     engine: Arc<Engine>,
     model: Model,
@@ -72,6 +74,7 @@ impl PjrtTrainer {
         })
     }
 
+    /// The shared PJRT engine behind this trainer.
     pub fn engine(&self) -> &Arc<Engine> {
         &self.engine
     }
@@ -171,29 +174,72 @@ impl LocalTrainer for PjrtTrainer {
         (outs[0].as_f32().to_vec(), outs[1].scalar_f32())
     }
 
-    fn eval(&self, params: &[f32], batches: &EvalBatches) -> EvalResult {
-        eval_with(batches, |batch, valid| {
-            assert_eq!(
-                batch.batch_size, self.eval_batch,
-                "eval batch size must match compiled executable ({})",
-                self.eval_batch
-            );
-            let outs = self
-                .engine
-                .call(
-                    &format!("{}_evaluate", self.name),
-                    &[
-                        Input::F32(params),
-                        Input::F32(&batch.x),
-                        Input::I32(&batch.y),
-                    ],
-                )
-                .unwrap_or_else(|e| Self::unwrap(e));
-            let losses = outs[0].as_f32();
-            let correct = outs[1].as_i32();
-            let loss_sum: f64 = losses.iter().take(valid).map(|&l| l as f64).sum();
-            let n_correct: usize = correct.iter().take(valid).map(|&c| c as usize).sum();
-            (loss_sum, n_correct)
-        })
+    // The `_into` fast paths delegate to the compiled artifacts (never the
+    // host-side default compositions, which would bypass the in-graph
+    // kernels): results are copied into the workspace buffers, so drivers
+    // run one code path over both compute planes.
+
+    fn grad_into(&self, params: &[f32], batch: &Batch, ws: &mut Workspace) -> f32 {
+        let (g, loss) = self.grad(params, batch);
+        ws.ensure(self.model(), batch.y.len());
+        ws.grad[..g.len()].copy_from_slice(&g);
+        loss
+    }
+
+    fn train_step_into(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        ws: &mut Workspace,
+    ) -> f32 {
+        let (x, loss) = self.train_step(params, h, batch, gamma);
+        ws.step_mut(x.len()).copy_from_slice(&x);
+        loss
+    }
+
+    fn train_step_masked_into(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        density: f64,
+        ws: &mut Workspace,
+    ) -> f32 {
+        let (x, loss) = self.train_step_masked(params, h, batch, gamma, density);
+        ws.step_mut(x.len()).copy_from_slice(&x);
+        loss
+    }
+
+    fn eval_batch(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        valid: usize,
+        _ws: &mut Workspace,
+    ) -> (f64, usize) {
+        assert_eq!(
+            batch.batch_size, self.eval_batch,
+            "eval batch size must match compiled executable ({})",
+            self.eval_batch
+        );
+        let outs = self
+            .engine
+            .call(
+                &format!("{}_evaluate", self.name),
+                &[
+                    Input::F32(params),
+                    Input::F32(&batch.x),
+                    Input::I32(&batch.y),
+                ],
+            )
+            .unwrap_or_else(|e| Self::unwrap(e));
+        let losses = outs[0].as_f32();
+        let correct = outs[1].as_i32();
+        let loss_sum: f64 = losses.iter().take(valid).map(|&l| l as f64).sum();
+        let n_correct: usize = correct.iter().take(valid).map(|&c| c as usize).sum();
+        (loss_sum, n_correct)
     }
 }

@@ -132,7 +132,11 @@ fn run_unit(
     if cfg.threads == 0 && sweep_workers > 1 {
         // The sweep already saturates the cores one-run-per-worker; a
         // per-run auto-sized client pool would oversubscribe. Results are
-        // invariant to this (see module docs).
+        // invariant to this (see module docs). With one inner thread, each
+        // run's Federation owns exactly one compute `model::Workspace`
+        // that stays warm for the run's whole lifetime — the sweep-level
+        // instantiation of the one-workspace-per-worker rule
+        // (ARCHITECTURE.md "Compute core & workspaces").
         cfg.threads = 1;
     }
     let model = cfg.model_spec();

@@ -3,20 +3,32 @@
 //! `cargo bench` targets are `harness = false` binaries that drive this
 //! module: warmup, calibrated batching so each measurement batch is long
 //! enough to swamp timer noise, repeated sampling, and a report with
-//! mean ± std and quantiles. Results are also appended as JSON lines to
-//! `target/benchkit/<bench>.jsonl` so perf regressions can be diffed across
-//! runs (see EXPERIMENTS.md §Perf).
+//! mean ± std and quantiles. Results are appended as JSON lines to
+//! `target/benchkit/<bench>.jsonl` for cross-run diffing, and the whole
+//! process's measurements can be exported as one machine-readable
+//! snapshot (`BENCH_<suite>.json`, schema [`BENCH_SCHEMA`]) via
+//! [`write_snapshot`] / [`finalize`] — the format the committed perf
+//! baselines under `rust/benches/baseline/` use and the CI `perf-smoke`
+//! job diffs against ([`check_baseline`], default ±20% throughput gate).
 
+use crate::util::json::Json;
 use crate::util::stats::{format_duration_ns, Summary};
 use std::hint::black_box;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 pub use std::hint::black_box as bb;
 
+/// Schema version of the `BENCH_<suite>.json` snapshot/baseline format.
+pub const BENCH_SCHEMA: u64 = 1;
+
 /// Harness configuration (tunable per bench binary or via env).
 #[derive(Clone, Debug)]
 pub struct BenchConfig {
+    /// Calibration warmup budget before measurement begins.
     pub warmup: Duration,
+    /// Number of measured samples per case.
     pub samples: usize,
     /// Target wall time per measured sample (iterations are batched to hit
     /// this, so very fast functions still measure accurately).
@@ -47,6 +59,32 @@ impl Default for BenchConfig {
     }
 }
 
+/// One measured case as exported to the snapshot JSON.
+#[derive(Clone, Debug)]
+struct CaseSnapshot {
+    bench: String,
+    case: String,
+    mean_ns: f64,
+    std_ns: f64,
+    p95_ns: f64,
+    iters_per_sample: f64,
+}
+
+/// One recorded scalar metric (bytes/round, accuracy, ...).
+#[derive(Clone, Debug)]
+struct MetricSnapshot {
+    bench: String,
+    label: String,
+    value: f64,
+    unit: String,
+}
+
+/// Process-wide collector: every [`Bench::finish`] and
+/// [`Bench::record_metric`] lands here so a bench binary with several
+/// groups exports one coherent snapshot at the end of `main`.
+static SNAPSHOT: Mutex<(Vec<CaseSnapshot>, Vec<MetricSnapshot>)> =
+    Mutex::new((Vec::new(), Vec::new()));
+
 /// One benchmark group ≈ one paper table/figure or one hot path.
 pub struct Bench {
     name: String,
@@ -55,6 +93,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Start a new named group (prints a header).
     pub fn new(name: &str) -> Self {
         println!("\n== bench: {name} ==");
         Self {
@@ -64,6 +103,7 @@ impl Bench {
         }
     }
 
+    /// Replace the harness configuration for this group.
     pub fn with_config(mut self, config: BenchConfig) -> Self {
         self.config = config;
         self
@@ -131,12 +171,21 @@ impl Bench {
     }
 
     /// Record an externally-measured scalar series (used by experiment
-    /// benches that report accuracy/bits rather than wall time).
+    /// benches that report accuracy/bits rather than wall time). Also
+    /// lands in the process snapshot for `BENCH_<suite>.json`.
     pub fn record_metric(&mut self, label: &str, value: f64, unit: &str) {
         println!("  {label:<44} {value:>14.6} {unit}");
+        let mut snap = SNAPSHOT.lock().unwrap();
+        snap.1.push(MetricSnapshot {
+            bench: self.name.clone(),
+            label: label.to_string(),
+            value,
+            unit: unit.to_string(),
+        });
     }
 
-    /// Write the JSONL report. Called on drop as well.
+    /// Write the JSONL report and fold results into the process snapshot.
+    /// Called on drop as well.
     pub fn finish(&mut self) {
         if self.results.is_empty() {
             return;
@@ -150,7 +199,6 @@ impl Bench {
             .map(|d| d.as_secs())
             .unwrap_or(0);
         for (label, s, iters) in &self.results {
-            use crate::util::json::Json;
             let mut o = Json::obj();
             o.set("bench", self.name.as_str().into());
             o.set("case", label.as_str().into());
@@ -166,13 +214,212 @@ impl Bench {
         if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
             let _ = fh.write_all(lines.as_bytes());
         }
-        self.results.clear();
+        let mut snap = SNAPSHOT.lock().unwrap();
+        for (label, s, iters) in self.results.drain(..) {
+            snap.0.push(CaseSnapshot {
+                bench: self.name.clone(),
+                case: label,
+                mean_ns: s.mean,
+                std_ns: s.std,
+                p95_ns: s.p95,
+                iters_per_sample: iters,
+            });
+        }
     }
 }
 
 impl Drop for Bench {
     fn drop(&mut self) {
         self.finish();
+    }
+}
+
+/// Serialize the process snapshot for `suite` and return the JSON value.
+fn snapshot_json(suite: &str) -> Json {
+    let snap = SNAPSHOT.lock().unwrap();
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut root = Json::obj();
+    root.set("schema", BENCH_SCHEMA.into());
+    root.set("suite", suite.into());
+    root.set("provisional", false.into());
+    root.set("unix_time", (stamp as f64).into());
+    let cases: Vec<Json> = snap
+        .0
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("bench", c.bench.as_str().into());
+            o.set("case", c.case.as_str().into());
+            o.set("mean_ns", c.mean_ns.into());
+            o.set("std_ns", c.std_ns.into());
+            o.set("p95_ns", c.p95_ns.into());
+            o.set("iters_per_sample", c.iters_per_sample.into());
+            // steps/s (or ops/s) — the headline throughput number.
+            o.set(
+                "per_sec",
+                if c.mean_ns > 0.0 { 1e9 / c.mean_ns } else { 0.0 }.into(),
+            );
+            o
+        })
+        .collect();
+    root.set("cases", Json::Arr(cases));
+    let metrics: Vec<Json> = snap
+        .1
+        .iter()
+        .map(|m| {
+            let mut o = Json::obj();
+            o.set("bench", m.bench.as_str().into());
+            o.set("label", m.label.as_str().into());
+            o.set("value", m.value.into());
+            o.set("unit", m.unit.as_str().into());
+            o
+        })
+        .collect();
+    root.set("metrics", Json::Arr(metrics));
+    root
+}
+
+/// Write the process snapshot to
+/// `<FEDCOMLOC_BENCH_JSON_DIR or target/benchkit>/BENCH_<suite>.json`.
+pub fn write_snapshot(suite: &str) -> std::io::Result<PathBuf> {
+    let dir = std::env::var_os("FEDCOMLOC_BENCH_JSON_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("target/benchkit"));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("BENCH_{suite}.json"));
+    std::fs::write(&path, snapshot_json(suite).to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
+/// Compare the process snapshot against a committed baseline file.
+///
+/// Returns `Ok(summary)` when within bounds (including when the baseline
+/// is marked `"provisional": true` — then nothing is compared, and the
+/// summary says how to freeze a real baseline) and `Err(report)` listing
+/// every case whose mean slowed down by more than `max_regress`
+/// (fractional, e.g. `0.2` = 20%).
+pub fn check_baseline(suite: &str, baseline: &Path, max_regress: f64) -> Result<String, String> {
+    let text = match std::fs::read_to_string(baseline) {
+        Ok(t) => t,
+        Err(e) => return Ok(format!("no baseline at {} ({e}); skipping gate", baseline.display())),
+    };
+    let doc = crate::util::json::parse(&text)
+        .map_err(|e| format!("baseline {} unparsable: {e}", baseline.display()))?;
+    let snap = SNAPSHOT.lock().unwrap();
+    // Presence gate first — it applies even to provisional baselines, so a
+    // renamed or silently-dropped bench case fails CI instead of making
+    // the throughput comparison vacuous. `expected_cases` lists the
+    // (bench, case) pairs that must appear in every run's snapshot.
+    let mut missing = Vec::new();
+    for want in doc.get("expected_cases").and_then(Json::as_arr).unwrap_or(&[]) {
+        let (Some(bench), Some(case)) = (
+            want.get("bench").and_then(Json::as_str),
+            want.get("case").and_then(Json::as_str),
+        ) else {
+            continue;
+        };
+        if !snap.0.iter().any(|c| c.bench == bench && c.case == case) {
+            missing.push(format!("{bench} / {case}"));
+        }
+    }
+    if !missing.is_empty() {
+        return Err(format!(
+            "{} expected case(s) missing from this run (renamed or not measured):\n  {}",
+            missing.len(),
+            missing.join("\n  ")
+        ));
+    }
+    if doc.get("provisional").and_then(Json::as_bool).unwrap_or(false) {
+        return Ok(format!(
+            "baseline {} is provisional — no throughput gate applied; freeze it by copying \
+             target/benchkit/BENCH_{suite}.json over it once measured on the reference machine",
+            baseline.display()
+        ));
+    }
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    let mut skipped = Vec::new();
+    let baseline_cases = doc.get("cases").and_then(Json::as_arr).unwrap_or(&[]);
+    for base in baseline_cases {
+        let (Some(bench), Some(case), Some(base_mean)) = (
+            base.get("bench").and_then(Json::as_str),
+            base.get("case").and_then(Json::as_str),
+            base.get("mean_ns").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        let Some(cur) = snap.0.iter().find(|c| c.bench == bench && c.case == case) else {
+            skipped.push(format!("{bench} / {case}"));
+            continue;
+        };
+        compared += 1;
+        if base_mean > 0.0 && cur.mean_ns > base_mean * (1.0 + max_regress) {
+            regressions.push(format!(
+                "{bench} / {case}: {} -> {} ({:+.1}%)",
+                format_duration_ns(base_mean),
+                format_duration_ns(cur.mean_ns),
+                (cur.mean_ns / base_mean - 1.0) * 100.0
+            ));
+        }
+    }
+    // A frozen baseline that compared nothing is a broken gate, not a pass:
+    // every case having been renamed must fail just like a regression.
+    if compared == 0 && !baseline_cases.is_empty() {
+        return Err(format!(
+            "frozen baseline {} matched 0 of {} case(s) in this run — bench case labels \
+             changed? unmatched: {}",
+            baseline.display(),
+            baseline_cases.len(),
+            skipped.join(", ")
+        ));
+    }
+    for s in &skipped {
+        println!("  baseline case not measured this run (skipped): {s}");
+    }
+    if regressions.is_empty() {
+        Ok(format!(
+            "{compared} case(s) within {:.0}% of baseline {}",
+            max_regress * 100.0,
+            baseline.display()
+        ))
+    } else {
+        Err(format!(
+            "{} case(s) regressed beyond {:.0}%:\n  {}",
+            regressions.len(),
+            max_regress * 100.0,
+            regressions.join("\n  ")
+        ))
+    }
+}
+
+/// End-of-main hook for bench binaries: export `BENCH_<suite>.json` and,
+/// when `FEDCOMLOC_BENCH_BASELINE` names a baseline file, gate against it
+/// (`FEDCOMLOC_BENCH_MAX_REGRESS` overrides the default 0.2 = 20%).
+/// Returns the process exit code (1 on regression).
+pub fn finalize(suite: &str) -> i32 {
+    match write_snapshot(suite) {
+        Ok(path) => println!("\nbench snapshot: {}", path.display()),
+        Err(e) => eprintln!("warning: could not write bench snapshot: {e}"),
+    }
+    let Some(baseline) = std::env::var_os("FEDCOMLOC_BENCH_BASELINE") else {
+        return 0;
+    };
+    let max_regress = std::env::var("FEDCOMLOC_BENCH_MAX_REGRESS")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.2);
+    match check_baseline(suite, Path::new(&baseline), max_regress) {
+        Ok(summary) => {
+            println!("perf gate: {summary}");
+            0
+        }
+        Err(report) => {
+            eprintln!("PERF REGRESSION\n{report}");
+            1
+        }
     }
 }
 
@@ -198,6 +445,109 @@ mod tests {
         b.case_with_output("sum", || (0..100u64).sum::<u64>());
         b.finish();
         assert!(std::path::Path::new("target/benchkit/benchkit_selftest.jsonl").exists());
+        // The case must have landed in the process snapshot.
+        let snap = SNAPSHOT.lock().unwrap();
+        assert!(snap
+            .0
+            .iter()
+            .any(|c| c.bench == "benchkit_selftest" && c.case == "noop-ish"));
+    }
+
+    #[test]
+    fn snapshot_serializes_with_schema() {
+        {
+            let mut b = Bench::new("benchkit_snapshot").with_config(tiny_config());
+            b.case("spin", || {
+                black_box((0..32u64).sum::<u64>());
+            });
+            b.record_metric("wire bytes", 123.0, "bytes");
+            b.finish();
+        }
+        let j = snapshot_json("selftest");
+        assert_eq!(j.get("schema").and_then(Json::as_f64), Some(BENCH_SCHEMA as f64));
+        assert_eq!(j.get("suite").and_then(Json::as_str), Some("selftest"));
+        let cases = j.get("cases").and_then(Json::as_arr).unwrap();
+        assert!(cases.iter().any(|c| {
+            c.get("bench").and_then(Json::as_str) == Some("benchkit_snapshot")
+                && c.get("per_sec").and_then(Json::as_f64).unwrap_or(0.0) > 0.0
+        }));
+        let metrics = j.get("metrics").and_then(Json::as_arr).unwrap();
+        assert!(metrics
+            .iter()
+            .any(|m| m.get("label").and_then(Json::as_str) == Some("wire bytes")));
+    }
+
+    #[test]
+    fn provisional_baseline_passes_gate() {
+        let dir = std::env::temp_dir().join("fedcomloc_benchkit_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_prov.json");
+        std::fs::write(&path, r#"{"schema":1,"suite":"prov","provisional":true,"cases":[]}"#)
+            .unwrap();
+        let r = check_baseline("prov", &path, 0.2).unwrap();
+        assert!(r.contains("provisional"), "{r}");
+        // Missing baseline: gate skipped, not failed.
+        let r = check_baseline("prov", &dir.join("missing.json"), 0.2).unwrap();
+        assert!(r.contains("skipping"), "{r}");
+    }
+
+    #[test]
+    fn gate_fails_on_missing_expected_case_and_on_zero_matches() {
+        let dir = std::env::temp_dir().join("fedcomloc_benchkit_test");
+        let _ = std::fs::create_dir_all(&dir);
+        // An expected case that was never measured fails even while the
+        // baseline is provisional (catches silent case renames).
+        let exp = dir.join("BENCH_exp.json");
+        std::fs::write(
+            &exp,
+            r#"{"schema":1,"suite":"exp","provisional":true,
+                "expected_cases":[{"bench":"ghost_bench","case":"never-measured"}],
+                "cases":[]}"#,
+        )
+        .unwrap();
+        assert!(check_baseline("exp", &exp, 0.2).is_err());
+        // A frozen baseline whose every case fails to match must fail the
+        // gate, not report "0 case(s) within 20%".
+        let ghost = dir.join("BENCH_ghost.json");
+        std::fs::write(
+            &ghost,
+            r#"{"schema":1,"suite":"ghost","provisional":false,
+                "cases":[{"bench":"ghost_bench","case":"gone","mean_ns":5.0}]}"#,
+        )
+        .unwrap();
+        let err = check_baseline("ghost", &ghost, 0.2).unwrap_err();
+        assert!(err.contains("matched 0"), "{err}");
+    }
+
+    #[test]
+    fn regressions_are_detected_against_frozen_baseline() {
+        {
+            let mut b = Bench::new("benchkit_gate").with_config(tiny_config());
+            b.case("work", || {
+                black_box((0..256u64).sum::<u64>());
+            });
+            b.finish();
+        }
+        let dir = std::env::temp_dir().join("fedcomloc_benchkit_test");
+        let _ = std::fs::create_dir_all(&dir);
+        // A frozen baseline claiming the case used to take 0.001 ns must
+        // flag a regression; one claiming 1 hour must pass.
+        let fast = dir.join("BENCH_fast.json");
+        std::fs::write(
+            &fast,
+            r#"{"schema":1,"suite":"gate","provisional":false,
+                "cases":[{"bench":"benchkit_gate","case":"work","mean_ns":0.001}]}"#,
+        )
+        .unwrap();
+        assert!(check_baseline("gate", &fast, 0.2).is_err());
+        let slow = dir.join("BENCH_slow.json");
+        std::fs::write(
+            &slow,
+            r#"{"schema":1,"suite":"gate","provisional":false,
+                "cases":[{"bench":"benchkit_gate","case":"work","mean_ns":3600000000000.0}]}"#,
+        )
+        .unwrap();
+        assert!(check_baseline("gate", &slow, 0.2).is_ok());
     }
 
     #[test]

@@ -17,13 +17,27 @@ pub struct BitWriter {
 }
 
 impl BitWriter {
+    /// An empty writer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// An empty writer with `bytes` of pre-reserved output capacity.
     pub fn with_capacity(bytes: usize) -> Self {
         Self {
             buf: Vec::with_capacity(bytes),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Write over a recycled buffer: clears `buf` but keeps its capacity,
+    /// so steady-state encoders (`compress_into`) allocate nothing. Get the
+    /// buffer back from [`BitWriter::finish`].
+    pub fn over(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self {
+            buf,
             acc: 0,
             nbits: 0,
         }
@@ -54,11 +68,13 @@ impl BitWriter {
         }
     }
 
+    /// Write one bit.
     #[inline]
     pub fn write_bit(&mut self, bit: bool) {
         self.write_bits(bit as u64, 1);
     }
 
+    /// Write a 32-bit little-endian unsigned integer.
     #[inline]
     pub fn write_u32(&mut self, v: u32) {
         self.write_bits(v as u64, 32);
@@ -79,6 +95,7 @@ impl BitWriter {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Write an f32 as its 32 IEEE-754 bits (works at any bit offset).
     #[inline]
     pub fn write_f32(&mut self, v: f32) {
         self.write_bits(v.to_bits() as u64, 32);
@@ -119,6 +136,7 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// A reader over `buf`, positioned at bit 0.
     pub fn new(buf: &'a [u8]) -> Self {
         Self {
             buf,
@@ -154,11 +172,13 @@ impl<'a> BitReader<'a> {
         out
     }
 
+    /// Read one bit.
     #[inline]
     pub fn read_bit(&mut self) -> bool {
         self.read_bits(1) != 0
     }
 
+    /// Read a 32-bit little-endian unsigned integer.
     #[inline]
     pub fn read_u32(&mut self) -> u32 {
         self.read_bits(32) as u32
@@ -180,6 +200,7 @@ impl<'a> BitReader<'a> {
         f32::from_le_bytes([b[0], b[1], b[2], b[3]])
     }
 
+    /// Read an f32 from its 32 IEEE-754 bits (works at any bit offset).
     #[inline]
     pub fn read_f32(&mut self) -> f32 {
         f32::from_bits(self.read_bits(32) as u32)

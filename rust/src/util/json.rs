@@ -11,19 +11,27 @@ use std::fmt::Write as _;
 /// A JSON value. Object keys are ordered (BTreeMap) for deterministic output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object (key-ordered).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Insert `key = value` (panics if `self` is not an object).
     pub fn set(&mut self, key: &str, value: Json) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), value);
@@ -33,6 +41,7 @@ impl Json {
         self
     }
 
+    /// Member lookup; `None` for non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -40,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -47,10 +57,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -58,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -65,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -72,6 +86,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, if this is an object.
     pub fn members(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -230,9 +245,12 @@ pub fn parse(input: &str) -> Result<Json, JsonError> {
     Ok(v)
 }
 
+/// JSON parse failure with byte position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

@@ -34,6 +34,7 @@ impl Gen {
         }
     }
 
+    /// Direct access to the case's RNG stream.
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
@@ -50,10 +51,12 @@ impl Gen {
         lo + self.rng.below_usize(scaled.max(1).min(span) + 1)
     }
 
+    /// Uniform f32 in [lo, hi).
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         lo + (hi - lo) * self.rng.uniform_f32()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.bernoulli(0.5)
     }
@@ -72,6 +75,7 @@ impl Gen {
             .collect()
     }
 
+    /// Vector of indices `< below` with length drawn from `len`.
     pub fn vec_usize(&mut self, len: RangeInclusive<usize>, below: usize) -> Vec<usize> {
         let n = self.usize_in(len);
         (0..n).map(|_| self.rng.below_usize(below)).collect()

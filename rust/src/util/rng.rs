@@ -17,10 +17,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// A generator starting from `seed`.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 raw bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -63,6 +65,7 @@ impl Rng {
         Rng::seed_from_u64(mixed)
     }
 
+    /// Next 64 raw bits (the xoshiro256++ output function).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
@@ -76,6 +79,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 raw bits (upper half of [`Rng::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -117,6 +121,7 @@ impl Rng {
         (m >> 64) as u64
     }
 
+    /// [`Rng::below`] for usize bounds.
     #[inline]
     pub fn below_usize(&mut self, n: usize) -> usize {
         self.below(n as u64) as usize
@@ -146,6 +151,7 @@ impl Rng {
         }
     }
 
+    /// Normal draw as f32 with explicit mean and standard deviation.
     #[inline]
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         (self.normal() as f32) * std + mean

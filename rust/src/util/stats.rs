@@ -9,10 +9,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one observation in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -20,10 +22,12 @@ impl Welford {
         self.m2 += delta * (x - self.mean);
     }
 
+    /// Number of observations so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 before any observation).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -37,6 +41,7 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -54,19 +59,30 @@ impl Welford {
 /// Full-sample summary with quantiles.
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Sample count.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// 25th percentile (linear interpolation).
     pub p25: f64,
+    /// 50th percentile.
     pub median: f64,
+    /// 75th percentile.
     pub p75: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample set.
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "Summary::of empty sample set");
         let mut xs = samples.to_vec();
@@ -105,6 +121,7 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Arithmetic mean (0 for an empty slice).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         0.0

@@ -58,6 +58,8 @@ impl ThreadPool {
         Self::new(n.min(cap.max(1)))
     }
 
+    /// Number of worker threads (and therefore the number of distinct
+    /// worker slots [`ThreadPool::map_worker`] can hand out).
     pub fn size(&self) -> usize {
         self.size
     }
@@ -80,6 +82,20 @@ impl ThreadPool {
         R: Send + 'static,
         F: Fn(usize, &T) -> R + Sync,
     {
+        self.map_worker(items, |_, i, item| f(i, item))
+    }
+
+    /// [`ThreadPool::map`] with a *worker slot*: `f(w, i, &items[i])` where
+    /// `w < self.size()` identifies the executing worker and is held by
+    /// exactly one thread at a time for the whole map call. Callers key
+    /// per-worker mutable state (e.g. one `model::Workspace` each) off `w`
+    /// without any contention.
+    pub fn map_worker<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send + 'static,
+        F: Fn(usize, usize, &T) -> R + Sync,
+    {
         let n = items.len();
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
         if n == 0 {
@@ -91,13 +107,13 @@ impl ThreadPool {
         std::thread::scope(|scope| {
             let (next, out_slots, f) = (&next, &out_slots, &f);
             let nworkers = self.size.min(n);
-            for _ in 0..nworkers {
+            for w in 0..nworkers {
                 scope.spawn(move || loop {
                     let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    let r = f(i, &items[i]);
+                    let r = f(w, i, &items[i]);
                     **out_slots[i].lock().unwrap() = Some(r);
                 });
             }
@@ -162,6 +178,25 @@ mod tests {
         let t0 = std::time::Instant::now();
         pool.map(&items, |_, _| std::thread::sleep(std::time::Duration::from_millis(30)));
         assert!(t0.elapsed() < std::time::Duration::from_millis(200));
+    }
+
+    #[test]
+    fn map_worker_slots_are_exclusive_and_bounded() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<usize> = (0..100).collect();
+        let in_use: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        let out = pool.map_worker(&items, |w, i, &x| {
+            assert!(w < 3, "worker slot out of range: {w}");
+            // A slot must never be held by two threads at once.
+            assert_eq!(in_use[w].fetch_add(1, Ordering::SeqCst), 0, "slot {w} shared");
+            std::thread::sleep(std::time::Duration::from_micros(50));
+            in_use[w].fetch_sub(1, Ordering::SeqCst);
+            (i, x * 2)
+        });
+        for (i, &(ii, doubled)) in out.iter().enumerate() {
+            assert_eq!(ii, i);
+            assert_eq!(doubled, i * 2);
+        }
     }
 
     #[test]

@@ -10,16 +10,23 @@
 
 use std::collections::BTreeMap;
 
+/// A parsed TOML scalar or flat array.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer (no `.`/exponent in the literal).
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An array of values.
     Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// The string slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -27,6 +34,7 @@ impl TomlValue {
         }
     }
 
+    /// Numeric value (floats as-is, integers widened), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(x) => Some(*x),
@@ -35,6 +43,7 @@ impl TomlValue {
         }
     }
 
+    /// The integer, if this is an integer literal.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             TomlValue::Int(x) => Some(*x),
@@ -42,10 +51,12 @@ impl TomlValue {
         }
     }
 
+    /// The integer as usize, if integral and non-negative.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|x| usize::try_from(x).ok())
     }
 
+    /// The boolean, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -53,6 +64,7 @@ impl TomlValue {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[TomlValue]> {
         match self {
             TomlValue::Arr(v) => Some(v),
@@ -87,9 +99,12 @@ impl TomlDoc {
     }
 }
 
+/// TOML parse failure with 1-based line number.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line of the failure.
     pub line: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

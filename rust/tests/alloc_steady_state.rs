@@ -1,0 +1,108 @@
+//! Steady-state allocation pin for the zero-allocation compute core: after
+//! warm-up, a workspace-backed train step (plain and TopK-masked, MLP and
+//! CNN) and the buffer-reusing codec paths must perform **zero** heap
+//! allocations.
+//!
+//! This file deliberately contains a single `#[test]` so the counting
+//! global allocator sees no interference from concurrently running tests.
+
+use fedcomloc::compress::{decode_payload_into, parse_spec};
+use fedcomloc::data::loader::ClientLoader;
+use fedcomloc::data::{synthetic, DatasetSpec};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::{init_params, LocalTrainer, Workspace};
+use fedcomloc::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// System allocator wrapper counting every `alloc`/`realloc`.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_train_step_makes_zero_allocations() {
+    // ---- setup (allocates freely) ----
+    let mut rng = Rng::seed_from_u64(1);
+    let tt = synthetic::generate(&DatasetSpec::mnist(), 128, 16, &mut rng);
+    let data = Arc::new(tt.train);
+    let mut loader =
+        ClientLoader::new(Arc::clone(&data), (0..128).collect(), 16, Rng::seed_from_u64(2));
+    let mlp_batch = loader.next_batch();
+    // Small hidden layers keep the test fast; input/classes match MNIST.
+    let mlp = NativeTrainer::from_spec("mlp:784x32x10").unwrap();
+    let mlp_params = init_params(mlp.model(), &mut rng);
+    let mut h = vec![0.0f32; mlp_params.len()];
+    rng.fill_normal_f32(&mut h, 0.0, 0.01);
+    let mut ws = Workspace::for_model(mlp.model(), 16);
+
+    let spec = DatasetSpec::parse("synthetic:1x16x16").unwrap();
+    let tt_cnn = synthetic::generate(&spec, 64, 8, &mut rng);
+    let cnn_data = Arc::new(tt_cnn.train);
+    let mut cnn_loader =
+        ClientLoader::new(Arc::clone(&cnn_data), (0..64).collect(), 8, Rng::seed_from_u64(3));
+    let cnn_batch = cnn_loader.next_batch();
+    let cnn = NativeTrainer::from_spec("cnn:c4-c6-f16@1x16").unwrap();
+    let cnn_params = init_params(cnn.model(), &mut rng);
+    let cnn_h = vec![0.0f32; cnn_params.len()];
+    let mut cnn_ws = Workspace::for_model(cnn.model(), 8);
+
+    let quant = parse_spec("q:8").unwrap();
+    let mut payload = Vec::new();
+    let mut dense = vec![0.0f32; mlp_params.len()];
+
+    // ---- warm-up: every lazily grown buffer reaches steady state ----
+    for _ in 0..3 {
+        let _ = mlp.train_step_into(&mlp_params, &h, &mlp_batch, 0.05, &mut ws);
+        let _ = mlp.train_step_masked_into(&mlp_params, &h, &mlp_batch, 0.05, 0.3, &mut ws);
+        let _ = cnn.train_step_into(&cnn_params, &cnn_h, &cnn_batch, 0.05, &mut cnn_ws);
+        let meta = quant.compress_into(&mlp_params, &mut rng, &mut payload);
+        decode_payload_into(meta.codec, meta.dim, &payload, &mut dense);
+    }
+
+    // ---- measured steady state: not a single allocation allowed ----
+    let before = allocs();
+    let mut checksum = 0.0f64;
+    for _ in 0..10 {
+        checksum += mlp.train_step_into(&mlp_params, &h, &mlp_batch, 0.05, &mut ws) as f64;
+        checksum +=
+            mlp.train_step_masked_into(&mlp_params, &h, &mlp_batch, 0.05, 0.3, &mut ws) as f64;
+        checksum += cnn.train_step_into(&cnn_params, &cnn_h, &cnn_batch, 0.05, &mut cnn_ws) as f64;
+        let meta = quant.compress_into(&mlp_params, &mut rng, &mut payload);
+        decode_payload_into(meta.codec, meta.dim, &payload, &mut dense);
+        checksum += dense[0] as f64;
+    }
+    let after = allocs();
+    assert!(checksum.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state train steps allocated {} time(s) — the workspace hot \
+         path must be allocation-free after warm-up",
+        after - before
+    );
+}

@@ -1,0 +1,170 @@
+//! Workspace-path bit-identity pins: the zero-allocation `_into` fast
+//! paths must produce **bit-identical** results to the allocating
+//! signatures they shadow — `grad_into` ≡ `grad`, `eval_batch_into` ≡
+//! `eval_batch`, `compress_into` ≡ `compress`, `encode_into` ≡ `encode` —
+//! on every seed architecture and every registered compressor family, and
+//! a *warm* (reused) workspace must behave exactly like a fresh one.
+//! The federation's parallel evaluation is pinned against the sequential
+//! trainer eval at any thread count.
+
+use fedcomloc::compress::parse_spec;
+use fedcomloc::data::loader::ClientLoader;
+use fedcomloc::data::{synthetic, DatasetSpec};
+use fedcomloc::fed::message::Message;
+use fedcomloc::fed::{Federation, RunConfig};
+use fedcomloc::model::native::NativeTrainer;
+use fedcomloc::model::{build_model, init_params, LocalTrainer, Workspace};
+use fedcomloc::util::rng::Rng;
+use std::sync::Arc;
+
+/// Every compressor family the registry can produce, at assorted params.
+const COMPRESSOR_SPECS: &[&str] = &[
+    "none",
+    "topk:0.05",
+    "topk:0.5",
+    "topk:0.95",
+    "q:1",
+    "q:4",
+    "q:8",
+    "topk:0.25+q:4",
+    "topk:0.8+q:6",
+];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn toy(model_spec: &str, batch: usize, seed: u64) -> (NativeTrainer, Vec<f32>, Vec<f32>, Vec<i32>) {
+    let trainer = NativeTrainer::from_spec(model_spec).unwrap();
+    let mut rng = Rng::seed_from_u64(seed);
+    let params = init_params(trainer.model(), &mut rng);
+    let x: Vec<f32> = (0..batch * trainer.model().input_dim())
+        .map(|_| rng.uniform_f32())
+        .collect();
+    let y: Vec<i32> = (0..batch)
+        .map(|_| rng.below(trainer.model().num_classes() as u64) as i32)
+        .collect();
+    (trainer, params, x, y)
+}
+
+#[test]
+fn grad_into_is_bit_identical_to_grad_on_all_architectures() {
+    for (spec, batch) in [
+        ("mlp:12x8x5", 7),
+        ("cnn:c4-c6-f16@1x16", 4),
+        ("softmax:9x4", 5),
+        ("linear:6", 3),
+    ] {
+        let (trainer, params, x, y) = toy(spec, batch, 11);
+        let model = trainer.model();
+        let (g_alloc, loss_alloc) = model.grad(&params, &x, &y);
+        // Fresh workspace.
+        let mut ws = Workspace::new();
+        let loss_fresh = model.grad_into(&params, &x, &y, &mut ws);
+        assert_eq!(loss_alloc.to_bits(), loss_fresh.to_bits(), "{spec}: loss");
+        assert_eq!(bits(&g_alloc), bits(&ws.grad[..model.dim()]), "{spec}: grad");
+        // Warm workspace, different batch first (stale state must not leak).
+        let (_, params2, x2, y2) = toy(spec, batch, 99);
+        let _ = model.grad_into(&params2, &x2, &y2, &mut ws);
+        let loss_warm = model.grad_into(&params, &x, &y, &mut ws);
+        assert_eq!(loss_alloc.to_bits(), loss_warm.to_bits(), "{spec}: warm loss");
+        assert_eq!(bits(&g_alloc), bits(&ws.grad[..model.dim()]), "{spec}: warm grad");
+    }
+}
+
+#[test]
+fn eval_batch_into_matches_allocating_eval_batch() {
+    for (spec, batch) in [("mlp:12x8x5", 9), ("cnn:c4-c6-f16@1x16", 4)] {
+        let (trainer, params, x, y) = toy(spec, batch, 21);
+        let model = trainer.model();
+        for valid in [batch, batch - 2, 1] {
+            let (l_alloc, c_alloc) = model.eval_batch(&params, &x, &y, valid);
+            let mut ws = Workspace::new();
+            let (l_ws, c_ws) = model.eval_batch_into(&params, &x, &y, valid, &mut ws);
+            assert_eq!(l_alloc.to_bits(), l_ws.to_bits(), "{spec} valid={valid}");
+            assert_eq!(c_alloc, c_ws, "{spec} valid={valid}");
+        }
+    }
+}
+
+#[test]
+fn train_steps_through_workspace_are_bit_identical() {
+    let mut rng = Rng::seed_from_u64(5);
+    let tt = synthetic::generate(&DatasetSpec::mnist(), 64, 16, &mut rng);
+    let data = Arc::new(tt.train);
+    let mut loader =
+        ClientLoader::new(Arc::clone(&data), (0..64).collect(), 8, Rng::seed_from_u64(6));
+    let trainer = NativeTrainer::from_spec("mlp").unwrap();
+    let params = init_params(trainer.model(), &mut rng);
+    let mut h = vec![0.0f32; params.len()];
+    rng.fill_normal_f32(&mut h, 0.0, 0.01);
+    let mut ws = Workspace::new();
+    for step in 0..3 {
+        let batch = loader.next_batch();
+        let (x_alloc, l_alloc) = trainer.train_step(&params, &h, &batch, 0.05);
+        let l_ws = trainer.train_step_into(&params, &h, &batch, 0.05, &mut ws);
+        assert_eq!(l_alloc.to_bits(), l_ws.to_bits(), "step {step}");
+        assert_eq!(bits(&x_alloc), bits(&ws.step[..params.len()]), "step {step}");
+        let (xm_alloc, lm_alloc) = trainer.train_step_masked(&params, &h, &batch, 0.05, 0.3);
+        let lm_ws = trainer.train_step_masked_into(&params, &h, &batch, 0.05, 0.3, &mut ws);
+        assert_eq!(lm_alloc.to_bits(), lm_ws.to_bits(), "masked step {step}");
+        assert_eq!(bits(&xm_alloc), bits(&ws.step[..params.len()]), "masked step {step}");
+    }
+}
+
+#[test]
+fn compress_into_and_encode_into_match_owned_forms_for_every_spec() {
+    let mut sample_rng = Rng::seed_from_u64(31);
+    let x: Vec<f32> = (0..3001).map(|_| sample_rng.normal_f32(0.0, 0.3)).collect();
+    // A reused payload buffer, deliberately dirtied across specs.
+    let mut payload = vec![0xAAu8; 64];
+    let mut frame = vec![0x55u8; 64];
+    let mut dense = vec![f32::NAN; x.len()];
+    for spec in COMPRESSOR_SPECS {
+        let comp = parse_spec(spec).unwrap();
+        // Q_r is stochastic: identical RNG streams must give identical bytes.
+        let mut rng_a = Rng::seed_from_u64(7);
+        let mut rng_b = Rng::seed_from_u64(7);
+        let owned = comp.compress(&x, &mut rng_a);
+        let meta = comp.compress_into(&x, &mut rng_b, &mut payload);
+        assert_eq!(owned.payload, payload, "{spec}: payload bytes");
+        assert_eq!(owned.wire_bits, meta.wire_bits, "{spec}: wire bits");
+        assert_eq!(owned.codec, meta.codec, "{spec}: codec");
+        assert_eq!(owned.dim, meta.dim, "{spec}: dim");
+
+        let msg = Message::from_compressed(3, 12, owned);
+        let enc_owned = msg.encode();
+        msg.encode_into(&mut frame);
+        assert_eq!(enc_owned, frame, "{spec}: frame bytes");
+
+        // Decode through a reused (dirty) dense buffer.
+        let want = msg.to_dense();
+        dense.iter_mut().for_each(|v| *v = f32::NAN);
+        msg.to_dense_into(&mut dense);
+        assert_eq!(bits(&want), bits(&dense), "{spec}: decoded values");
+    }
+}
+
+#[test]
+fn parallel_federation_eval_is_bit_identical_to_sequential() {
+    let cfg = RunConfig {
+        train_n: 600,
+        test_n: 230, // not a multiple of eval_batch: exercises the padded tail
+        n_clients: 6,
+        clients_per_round: 2,
+        rounds: 1,
+        eval_batch: 64,
+        threads: 4,
+        ..RunConfig::default_mnist()
+    };
+    let trainer = Arc::new(NativeTrainer::from_spec("mlp").unwrap());
+    let fed = Federation::new(&cfg, trainer.clone());
+    let parallel = fed.evaluate();
+    let sequential = trainer.eval(&fed.x, &fed.eval_set);
+    assert_eq!(parallel.mean_loss.to_bits(), sequential.mean_loss.to_bits());
+    assert_eq!(parallel.accuracy.to_bits(), sequential.accuracy.to_bits());
+    assert_eq!(parallel.examples, sequential.examples);
+    // The pool must no longer be starved down to clients_per_round.
+    assert_eq!(fed.pool.size(), 4);
+    assert_eq!(fed.workspaces.len(), 4);
+}

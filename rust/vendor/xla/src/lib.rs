@@ -1,0 +1,166 @@
+//! Minimal offline facade for the `xla` crate (xla_extension 0.5.1, PJRT
+//! C API).
+//!
+//! The offline vendor set cannot ship the real XLA extension (it links a
+//! multi-hundred-MB native library), but `runtime::engine` is written
+//! against the `xla` crate's API. This facade provides exactly the subset
+//! of that API the engine uses, with every entry point that would touch a
+//! real PJRT client failing cleanly with [`Error::Unavailable`] —
+//! `Engine::load` then surfaces the error and `runtime::build_trainer`
+//! falls back to the native compute plane with a warning, which is the
+//! correct behavior on any machine without compiled artifacts anyway.
+//!
+//! Swapping in the real crate is a one-line `Cargo.toml` change; no source
+//! edits, because the signatures below mirror the real ones for the used
+//! subset.
+
+use std::path::Path;
+
+/// The facade's single error: the PJRT runtime is not present in this
+/// build.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// Raised by every operation that would need the native XLA extension.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: PJRT/XLA extension not available in this offline build \
+                 (vendored `xla` facade; swap in the real crate to enable the AOT plane)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (facade: carries no data; cannot be constructed through a
+/// fallible path, and infallible constructors produce inert values that
+/// are only ever passed to operations that error first).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a host slice (inert in the facade).
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Scalar literal (inert in the facade).
+    pub fn scalar(_value: f32) -> Literal {
+        Literal
+    }
+
+    /// Reshape to `dims` — unavailable offline.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    /// Decompose a tuple literal — unavailable offline.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a host vector — unavailable offline.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (facade).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file — unavailable offline.
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper (facade).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (facade).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Synchronously copy the buffer back to a host literal — unavailable
+    /// offline.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (facade).
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs — unavailable offline.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (facade).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU PJRT client — unavailable offline; this is the first
+    /// call `Engine::load` makes, so the engine fails before anything else
+    /// runs.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name of the backing PJRT plugin.
+    pub fn platform_name(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation — unavailable offline.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nope")).is_err());
+        let lit = Literal::vec1(&[1.0f32]);
+        assert!(lit.reshape(&[1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal::scalar(0.5).to_tuple().is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("offline"), "{msg}");
+    }
+}

@@ -8,7 +8,7 @@
 //! `perf-smoke` job gates it against `benches/baseline/BENCH_compress.json`.
 
 use fedcomloc::compress::{
-    decode_payload_into, Compressor, DoubleCompress, Identity, QuantizeR, TopK,
+    decode_payload_into, parse_spec, Compressor, CompressorSpec, Identity, QuantizeR, RandK, TopK,
 };
 use fedcomloc::util::benchkit::{self, bb, Bench};
 use fedcomloc::util::rng::Rng;
@@ -23,10 +23,14 @@ fn main() {
             ("topk 10%".into(), Box::new(TopK::with_density(0.10))),
             ("topk 30%".into(), Box::new(TopK::with_density(0.30))),
             ("topk 90%".into(), Box::new(TopK::with_density(0.90))),
+            ("randk 10%".into(), Box::new(RandK::with_density(0.10))),
             ("q4".into(), Box::new(QuantizeR::new(4))),
             ("q8".into(), Box::new(QuantizeR::new(8))),
             ("q16".into(), Box::new(QuantizeR::new(16))),
-            ("topk25+q8".into(), Box::new(DoubleCompress::new(0.25, 8))),
+            // The fused sparsifier->quantizer chain (the retired
+            // DoubleCompress layout) and a generic (non-fused) chain.
+            ("topk25+q8".into(), parse_spec("topk:0.25|q8").unwrap()),
+            ("q8|topk10".into(), parse_spec("q8|topk:0.1").unwrap()),
         ];
         for (name, comp) in cases {
             let mut enc_rng = Rng::seed_from_u64(7);
@@ -56,6 +60,32 @@ fn main() {
                 "bytes/round",
             );
         }
+
+        // Stateful error-feedback pipeline: the per-round cost of the
+        // shift + encode + decode-absorb cycle (EF pays one decode per
+        // encode by construction).
+        let ef_spec = CompressorSpec::parse("ef(topk:0.1)").unwrap();
+        let mut ef_owned = ef_spec.build(1000);
+        let mut ef_rng = Rng::seed_from_u64(7);
+        let mut round = 0usize;
+        b.case(&format!("{label} encode ef(topk10)"), || {
+            bb(ef_owned.compress(bb(&x), round, &mut ef_rng));
+            round += 1;
+        });
+        let mut ef_reuse = ef_spec.build(1000);
+        let mut ef_rng = Rng::seed_from_u64(7);
+        let mut payload = Vec::new();
+        let mut round = 0usize;
+        b.case(&format!("{label} encode_into ef(topk10)"), || {
+            bb(ef_reuse.compress_into(bb(&x), round, &mut ef_rng, &mut payload));
+            round += 1;
+        });
+        let enc = ef_spec.build(1000).compress(&x, 0, &mut Rng::seed_from_u64(7));
+        b.record_metric(
+            &format!("{label} wire bytes ef(topk10)"),
+            enc.wire_bits.div_ceil(8) as f64,
+            "bytes/round",
+        );
         b.finish();
     }
 

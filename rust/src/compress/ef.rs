@@ -1,0 +1,126 @@
+//! Error-feedback compressor state (EF14 / SoteriaFL-style shifted
+//! compression): the memory a stateful `ef(...)` pipeline keeps per link.
+//!
+//! EF turns any (possibly biased) compressor C into a contractive update:
+//! each round the link transmits C(x + e), where e is everything previous
+//! rounds failed to deliver, then keeps the fresh residual
+//!
+//! ```text
+//! m_t = x_t + e_{t-1};   wire_t = C(m_t);   e_t = m_t − decode(wire_t)
+//! ```
+//!
+//! so dropped coordinates are retried until they land instead of being
+//! lost forever. The state is **per link** (one instance per client
+//! uplink; the server broadcast keeps its own) and deterministic: its
+//! trajectory depends only on the inputs and the link's RNG stream, never
+//! on worker scheduling — the sweep engine's threads-invariance pin covers
+//! an `ef(...)` run (`tests/compress_pipeline.rs`).
+//!
+//! For a pure support sparsifier (TopK/RandK) the residual identity is
+//! exact in floating point: on the kept support `decode(wire) = m`, so
+//! `e = m − decode(wire)` is zero there and equals `m` off-support —
+//! `decode(wire) + e == m` bitwise (pinned in the tests below).
+
+use super::{decode_payload_into, CodecMeta};
+
+/// Per-link error-feedback memory: the residual plus the scratch the
+/// encode step needs. Buffers grow once to the link's dimension and are
+/// reused for the lifetime of the run.
+#[derive(Debug, Default)]
+pub struct ErrorFeedback {
+    /// The residual e: mass previous compressions failed to deliver.
+    err: Vec<f32>,
+    /// Scratch for the shifted input m = x + e (what the inner codec sees).
+    carry: Vec<f32>,
+    /// Scratch for decoding the freshly-encoded payload.
+    dec: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    /// A fresh state with zero residual (dimension fixed by the first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build m = x + e into the carry buffer and return it for encoding.
+    /// The first call (and a dimension change, which cannot happen within
+    /// a run) starts from a zero residual.
+    pub fn shift<'a>(&'a mut self, x: &[f32]) -> &'a [f32] {
+        let d = x.len();
+        if self.err.len() != d {
+            self.err.clear();
+            self.err.resize(d, 0.0);
+        }
+        self.carry.resize(d, 0.0);
+        for ((c, &xi), &e) in self.carry.iter_mut().zip(x).zip(&self.err) {
+            *c = xi + e;
+        }
+        &self.carry
+    }
+
+    /// Fold the encoded payload back into the residual:
+    /// e ← m − decode(payload). Must be called with the bytes produced by
+    /// encoding the slice [`ErrorFeedback::shift`] returned.
+    pub fn absorb(&mut self, meta: &CodecMeta, payload: &[u8]) {
+        debug_assert_eq!(meta.dim, self.carry.len());
+        self.dec.resize(meta.dim, 0.0);
+        decode_payload_into(meta.codec, meta.dim, payload, &mut self.dec);
+        for ((e, &m), &y) in self.err.iter_mut().zip(&self.carry).zip(&self.dec) {
+            *e = m - y;
+        }
+    }
+
+    /// The current residual (diagnostics/tests).
+    pub fn residual(&self) -> &[f32] {
+        &self.err
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Compressor, TopK};
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn residual_identity_is_exact_for_support_sparsifiers() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x: Vec<f32> = (0..300).map(|i| ((i as f32) * 0.7).sin()).collect();
+        let mut ef = ErrorFeedback::new();
+        let comp = TopK::with_density(0.1);
+        let mut payload = Vec::new();
+        for _round in 0..4 {
+            let m: Vec<f32> = ef.shift(&x).to_vec();
+            let meta = comp.compress_into(ef.shift(&x), &mut rng, &mut payload);
+            ef.absorb(&meta, &payload);
+            // decode + residual == m, bitwise, for a pure support selector.
+            let mut dec = vec![0.0f32; x.len()];
+            decode_payload_into(meta.codec, meta.dim, &payload, &mut dec);
+            for i in 0..x.len() {
+                let sum = dec[i] + ef.residual()[i];
+                assert_eq!(sum.to_bits(), m[i].to_bits(), "i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_accumulates_undelivered_mass() {
+        let mut rng = Rng::seed_from_u64(4);
+        // Constant small coordinates + one large: TopK(k=1) keeps only the
+        // large one, so small coordinates pile up in the residual until
+        // they outgrow it and get flushed.
+        let mut x = vec![0.1f32; 10];
+        x[0] = 5.0;
+        let mut ef = ErrorFeedback::new();
+        let comp = TopK::with_k(1);
+        let mut payload = Vec::new();
+        let meta = comp.compress_into(ef.shift(&x), &mut rng, &mut payload);
+        ef.absorb(&meta, &payload);
+        assert_eq!(ef.residual()[0], 0.0, "delivered coordinate has no residual");
+        assert!(ef.residual()[1..].iter().all(|&e| e == 0.1));
+        // Second round: residual shifts the input, small coords now 0.2.
+        let m2 = ef.shift(&x).to_vec();
+        assert_eq!(m2[1], 0.2);
+        assert_eq!(m2[0], 5.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Natural compression C_nat (Horváth et al., 2022): stochastic rounding
+//! onto signed powers of two.
+//!
+//! Each coordinate x is rounded to sign(x)·2^⌊log₂|x|⌋ or
+//! sign(x)·2^⌈log₂|x|⌉, up with probability (|x| − 2^⌊log₂|x|⌋)/2^⌊log₂|x|⌋
+//! — exactly the IEEE-754 mantissa fraction — which makes C_nat unbiased
+//! (E[C_nat(x)] = x) with variance at most ‖x‖²/8. Because the result is
+//! sign + exponent only, the exact wire cost is **9 bits per coordinate**
+//! (1 sign bit + the 8-bit biased exponent), against 32 for dense f32.
+//!
+//! Wire format: d × (1 sign bit + 8 exponent bits), bit-packed. Exponent
+//! code 0 encodes exact zero (zeros and subnormals map to 0, like the
+//! quantizer's zero-norm buckets); codes 1..=254 are the f32 biased
+//! exponent of a power of two; non-finite inputs encode as 0 and rounding
+//! up clamps at code 254 so the wire never carries an infinity.
+
+use super::{Codec, CodecMeta, Compressed, Compressor};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::rng::Rng;
+
+/// The unbiased natural compressor C_nat (sign + exponent, 9 bits/coord).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Natural;
+
+const MANTISSA_BITS: u32 = 23;
+const MAX_FINITE_EXP: u32 = 0xFE;
+
+/// The stochastically-rounded exponent code for one coordinate — the single
+/// quantization decision both the encoder and the in-place [`Compressor::apply`]
+/// dispatch through (same conditional RNG draw, so the two paths stay in
+/// lockstep). Zeros, subnormals (exp 0), and non-finite values (exp 255)
+/// code to exact zero; normals round the mantissa away, carrying into the
+/// exponent with probability man / 2^23 (no RNG draw when the value is
+/// already a power of two — the rounding is then deterministic).
+#[inline]
+fn exponent_code(v: f32, rng: &mut Rng) -> u32 {
+    let bits = v.to_bits();
+    let exp = (bits >> MANTISSA_BITS) & 0xFF;
+    let man = bits & ((1u32 << MANTISSA_BITS) - 1);
+    if exp == 0 || exp == 0xFF {
+        0
+    } else if man > 0 && rng.uniform() < man as f64 / (1u64 << MANTISSA_BITS) as f64 {
+        (exp + 1).min(MAX_FINITE_EXP)
+    } else {
+        exp
+    }
+}
+
+/// Reconstruct the signed power of two a (sign, code) pair denotes.
+#[inline]
+fn decode_code(neg: bool, code: u32) -> f32 {
+    if code == 0 {
+        0.0
+    } else {
+        f32::from_bits(((neg as u32) << 31) | (code << MANTISSA_BITS))
+    }
+}
+
+impl Compressor for Natural {
+    fn name(&self) -> String {
+        "natural".to_string()
+    }
+
+    fn compress_into(&self, x: &[f32], rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
+        let mut w = BitWriter::over(std::mem::take(payload));
+        for &v in x {
+            let code = exponent_code(v, rng);
+            w.write_bit(v.is_sign_negative());
+            w.write_bits(code as u64, 8);
+        }
+        let wire_bits = w.bit_len();
+        *payload = w.finish();
+        CodecMeta {
+            wire_bits,
+            dim: x.len(),
+            codec: Codec::Natural,
+        }
+    }
+
+    fn apply(&self, x: &mut [f32], rng: &mut Rng) {
+        // In-place twin of encode→decode through the shared code selection
+        // and reconstruction — bit-identical, no serialization.
+        for v in x.iter_mut() {
+            let code = exponent_code(*v, rng);
+            *v = decode_code(v.is_sign_negative(), code);
+        }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+        super::decode_payload(c.codec, c.dim, &c.payload)
+    }
+
+    fn nominal_bits(&self, d: usize) -> u64 {
+        9 * d as u64
+    }
+}
+
+/// Decoder for [`Codec::Natural`] payloads into a caller buffer (fully
+/// overwritten; see [`super::decode_payload_into`]).
+pub(super) fn decode_natural_into(dim: usize, payload: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), dim);
+    let mut r = BitReader::new(payload);
+    for slot in out.iter_mut() {
+        let neg = r.read_bit();
+        let code = r.read_bits(8) as u32;
+        *slot = decode_code(neg, code);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_signed_powers_of_two() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x = vec![0.3f32, -1.7, 0.0, 4.0, -0.001, 1e30, -1e-30];
+        let c = Natural.compress(&x, &mut rng);
+        assert_eq!(c.wire_bits, 9 * x.len() as u64);
+        assert_eq!(c.wire_bits, Natural.nominal_bits(x.len()));
+        let y = Natural.decompress(&c);
+        for (xi, yi) in x.iter().zip(&y) {
+            if *xi == 0.0 {
+                assert_eq!(*yi, 0.0);
+            } else {
+                assert_eq!(xi.signum(), yi.signum(), "{xi} -> {yi}");
+                // |y| is a power of two bracketing |x| (within one step).
+                let e = yi.abs().log2();
+                assert_eq!(e, e.round(), "{yi} not a power of two");
+                let lo = 2f32.powf(xi.abs().log2().floor());
+                assert!(yi.abs() == lo || yi.abs() == 2.0 * lo, "{xi} -> {yi}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_powers_of_two_are_lossless_and_deterministic() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x = vec![1.0f32, -2.0, 0.25, 1024.0, -0.5];
+        let c = Natural.compress(&x, &mut rng);
+        assert_eq!(Natural.decompress(&c), x);
+        // No RNG draws were needed: a second encode is byte-identical.
+        let mut rng2 = Rng::seed_from_u64(99);
+        let c2 = Natural.compress(&x, &mut rng2);
+        assert_eq!(c.payload, c2.payload);
+    }
+
+    #[test]
+    fn unbiasedness() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = vec![0.3f32, -0.7, 1.3, -2.9, 0.011];
+        let trials = 40_000;
+        let mut acc = vec![0.0f64; x.len()];
+        for _ in 0..trials {
+            let c = Natural.compress(&x, &mut rng);
+            for (a, v) in acc.iter_mut().zip(Natural.decompress(&c)) {
+                *a += v as f64;
+            }
+        }
+        for (a, &xi) in acc.iter().zip(&x) {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - xi as f64).abs() < 0.02 * xi.abs().max(0.01) as f64,
+                "mean={mean} expected={xi}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_is_bit_identical_to_codec_roundtrip() {
+        let mut sample = Rng::seed_from_u64(9);
+        let mut x: Vec<f32> = (0..800).map(|_| sample.normal_f32(0.0, 2.0)).collect();
+        x.extend([0.0, -0.0, 1.0, -4.0, f32::NAN, f32::INFINITY, -1e-40]);
+        let mut rng_a = Rng::seed_from_u64(6);
+        let mut rng_b = Rng::seed_from_u64(6);
+        let via_wire = Natural.decompress(&Natural.compress(&x, &mut rng_a));
+        let mut via_apply = x.clone();
+        Natural.apply(&mut via_apply, &mut rng_b);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&via_wire), bits(&via_apply));
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams in lockstep");
+    }
+
+    #[test]
+    fn non_finite_inputs_encode_as_zero() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x = vec![f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1.5];
+        let c = Natural.compress(&x, &mut rng);
+        let y = Natural.decompress(&c);
+        assert_eq!(&y[..3], &[0.0, 0.0, 0.0]);
+        assert!(y[3].is_finite() && y[3] != 0.0);
+    }
+
+    #[test]
+    fn max_exponent_clamps_instead_of_overflowing_to_inf() {
+        let mut rng = Rng::seed_from_u64(5);
+        // Just below f32::MAX: rounding up must clamp at 2^127, not inf.
+        let x = vec![3.0e38f32; 64];
+        let c = Natural.compress(&x, &mut rng);
+        for v in Natural.decompress(&c) {
+            assert!(v.is_finite(), "{v}");
+        }
+    }
+}

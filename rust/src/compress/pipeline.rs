@@ -1,0 +1,381 @@
+//! Composable compression pipelines: the stateless [`Chain`] combinator
+//! and the stateful per-link [`Pipeline`] instance.
+//!
+//! [`Chain`] is the generic composition Cₙ∘…∘C₁ behind `|`-joined specs
+//! (`topk:0.1|q8`). It retires the seed's hard-coded `DoubleCompress`: a
+//! two-stage chain of a support sparsifier (TopK/RandK) followed by a
+//! quantizer emits the **fused** [`super::Codec::SparseQuantized`] wire
+//! layout — survivor indices + per-survivor-bucket quantized values —
+//! through exactly the canonical `encode_sparse_quantized_into` encoder the
+//! seed used, so `topk:<d>|q<b>` wire bytes are byte-identical to the
+//! retired `DoubleCompress` (pinned below and by `tests/api_regression.rs`
+//! through the legacy `topk:<d>+q:<b>` spelling). Any other composition
+//! falls back to applying the leading stages semantically and serializing
+//! with the final stage's codec, which keeps every chain self-describing
+//! on the wire.
+//!
+//! [`Pipeline`] is what a *link* owns — per (client, direction), built from
+//! a [`super::CompressorSpec`] by `Federation`. Plain chains delegate
+//! straight to the stateless [`Compressor`] impls (bit-identical by
+//! construction); `ef(...)` adds per-link [`ErrorFeedback`] memory and
+//! `sched:...` re-parameterizes its family from the communication-round
+//! index. Stochastic draws come from the caller's RNG stream (the client's
+//! persistent stream for uplinks, the server's for broadcasts), so
+//! pipelines never hold RNG state of their own.
+
+use super::ef::ErrorFeedback;
+use super::schedule::Schedule;
+use super::{quantize, CodecMeta, Compressed, Compressor};
+use crate::util::rng::Rng;
+
+/// Generic composition C₂∘C₁ (or longer), the `|` combinator.
+pub struct Chain {
+    stages: Vec<Box<dyn Compressor>>,
+}
+
+impl Chain {
+    /// Compose `stages` left-to-right (at least two).
+    pub fn new(stages: Vec<Box<dyn Compressor>>) -> Chain {
+        assert!(stages.len() >= 2, "a chain needs at least two stages");
+        Chain { stages }
+    }
+
+    /// The fused sparsifier→quantizer parameters, when this chain is
+    /// exactly that shape: (survivor count for dim d, quantizer bits,
+    /// quantizer bucket).
+    fn fused_params(&self, d: usize) -> Option<(usize, u32, usize)> {
+        if self.stages.len() != 2 {
+            return None;
+        }
+        let k = self.stages[0].support_size(d)?;
+        let (bits, bucket) = self.stages[1].quantizer_params()?;
+        Some((k, bits, bucket))
+    }
+}
+
+impl Compressor for Chain {
+    fn name(&self) -> String {
+        let names: Vec<String> = self.stages.iter().map(|s| s.name()).collect();
+        names.join("+")
+    }
+
+    fn compress_into(&self, x: &[f32], rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
+        let d = x.len();
+        if let Some((_, bits, bucket)) = self.fused_params(d) {
+            // Sparsifier→quantizer: the seed's double-compression layout.
+            // Select the support, then quantize the survivor sequence in
+            // its own buckets — the canonical encoder, not a copy of it.
+            let idx = self.stages[0]
+                .select_support(x, rng)
+                .expect("support_size implies select_support");
+            let vals: Vec<f32> = idx.iter().map(|&i| x[i]).collect();
+            return quantize::encode_sparse_quantized_into(d, &idx, &vals, bits, bucket, rng, payload);
+        }
+        // Generic composition: apply the leading stages semantically, then
+        // serialize with the final stage's codec (self-describing wire).
+        let mut y = x.to_vec();
+        let (last, leading) = self.stages.split_last().expect("chain is non-empty");
+        for stage in leading {
+            stage.apply(&mut y, rng);
+        }
+        last.compress_into(&y, rng, payload)
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+        super::decode_payload(c.codec, c.dim, &c.payload)
+    }
+
+    fn nominal_bits(&self, d: usize) -> u64 {
+        match self.fused_params(d) {
+            // The encoder's maximal layout, via the same formula it sizes
+            // buffers with (shared with the seed's DoubleCompress bound).
+            Some((k, bits, bucket)) => quantize::sparse_quantized_wire_bits(d, k, bits, bucket),
+            None => self.stages.last().expect("non-empty").nominal_bits(d),
+        }
+    }
+}
+
+/// The compiled form of one pipeline node.
+enum Node {
+    /// A stateless compressor (atom or [`Chain`]) — the canonical impls.
+    Plain(Box<dyn Compressor>),
+    /// Error feedback around an inner pipeline.
+    Ef {
+        /// Per-link residual memory.
+        fb: ErrorFeedback,
+        /// The wrapped pipeline whose codec goes on the wire.
+        inner: Box<Node>,
+    },
+    /// A round-indexed schedule over one compressor family.
+    Sched {
+        /// The parsed schedule.
+        sched: Schedule,
+        /// The run length the schedule interpolates over.
+        total_rounds: usize,
+    },
+}
+
+impl Node {
+    fn compress_into(
+        &mut self,
+        x: &[f32],
+        round: usize,
+        rng: &mut Rng,
+        payload: &mut Vec<u8>,
+    ) -> CodecMeta {
+        match self {
+            Node::Plain(c) => c.compress_into(x, rng, payload),
+            Node::Ef { fb, inner } => {
+                let m = fb.shift(x);
+                let meta = inner.compress_into(m, round, rng, payload);
+                fb.absorb(&meta, payload);
+                meta
+            }
+            Node::Sched {
+                sched,
+                total_rounds,
+            } => sched.compress_into(round, *total_rounds, x, rng, payload),
+        }
+    }
+
+    fn nominal_bits(&self, d: usize, round: usize) -> u64 {
+        match self {
+            Node::Plain(c) => c.nominal_bits(d),
+            Node::Ef { inner, .. } => inner.nominal_bits(d, round),
+            Node::Sched {
+                sched,
+                total_rounds,
+            } => sched.nominal_bits(round, *total_rounds, d),
+        }
+    }
+
+    fn display(&self) -> String {
+        match self {
+            Node::Plain(c) => c.name(),
+            Node::Ef { inner, .. } => format!("ef({})", inner.display()),
+            Node::Sched { sched, .. } => sched.key(),
+        }
+    }
+
+    fn has_state(&self) -> bool {
+        // Schedules are pure functions of the round index; only error
+        // feedback carries memory between calls.
+        matches!(self, Node::Ef { .. })
+    }
+}
+
+/// One link's compression pipeline instance: the compiled spec plus any
+/// per-link state (`ef` residuals). Built by
+/// [`super::CompressorSpec::build`]; owned per (client, direction) — by
+/// `ClientState` for uplinks and by `Federation` for the server broadcast.
+pub struct Pipeline {
+    node: Node,
+    display: String,
+    identity: bool,
+}
+
+impl Pipeline {
+    pub(super) fn from_node(node: Node) -> Pipeline {
+        let display = node.display();
+        let identity = matches!(&node, Node::Plain(c) if c.name() == "identity");
+        Pipeline {
+            node,
+            display,
+            identity,
+        }
+    }
+
+    pub(super) fn plain(c: Box<dyn Compressor>) -> Pipeline {
+        Pipeline::from_node(Node::Plain(c))
+    }
+
+    pub(super) fn ef(inner: Pipeline) -> Pipeline {
+        Pipeline::from_node(Node::Ef {
+            fb: ErrorFeedback::new(),
+            inner: Box::new(inner.node),
+        })
+    }
+
+    pub(super) fn sched(sched: Schedule, total_rounds: usize) -> Pipeline {
+        Pipeline::from_node(Node::Sched {
+            sched,
+            total_rounds,
+        })
+    }
+
+    /// Human-readable name, e.g. `topk(0.10)+q8` or `ef(topk(0.10))`.
+    pub fn name(&self) -> String {
+        self.display.clone()
+    }
+
+    /// True for the identity pipeline (dense wire format): callers may
+    /// skip the codec and ship `Message::dense`, which is byte-identical.
+    pub fn is_identity(&self) -> bool {
+        self.identity
+    }
+
+    /// True when the pipeline carries memory between calls (`ef(...)`).
+    /// Stateful pipelines assume **one logical vector stream per
+    /// instance** — a driver that multiplexes several streams over one
+    /// link (Scaffold's x/c, Δx/Δc pairs) must reject them.
+    pub fn has_state(&self) -> bool {
+        self.node.has_state()
+    }
+
+    /// Encode `x` for communication round `round` into `payload` (cleared
+    /// first; capacity reused), updating any per-link state. Byte-identical
+    /// to [`Pipeline::compress`].
+    pub fn compress_into(
+        &mut self,
+        x: &[f32],
+        round: usize,
+        rng: &mut Rng,
+        payload: &mut Vec<u8>,
+    ) -> CodecMeta {
+        self.node.compress_into(x, round, rng, payload)
+    }
+
+    /// Encode `x` for communication round `round` into an owned payload.
+    pub fn compress(&mut self, x: &[f32], round: usize, rng: &mut Rng) -> Compressed {
+        let mut payload = Vec::new();
+        let meta = self.compress_into(x, round, rng, &mut payload);
+        meta.with_payload(payload)
+    }
+
+    /// Worst-case wire bits at round `round` for dimension `d`.
+    pub fn nominal_bits(&self, d: usize, round: usize) -> u64 {
+        self.node.nominal_bits(d, round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::topk::select_topk_indices;
+    use super::super::{parse_spec, CompressorSpec, QuantizeR, TopK};
+    use super::*;
+
+    /// The retired seed encoder, reproduced verbatim: TopK selection, then
+    /// the fused sparse-quantized layout over the survivors.
+    fn seed_double_compress(
+        x: &[f32],
+        density: f64,
+        bits: u32,
+        rng: &mut Rng,
+    ) -> (Vec<u8>, CodecMeta) {
+        let d = x.len();
+        let topk = TopK::with_density(density);
+        let quant = QuantizeR::new(bits);
+        let idx = select_topk_indices(x, topk.k_for(d));
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i]).collect();
+        let mut payload = Vec::new();
+        let meta = quantize::encode_sparse_quantized_into(
+            d,
+            &idx,
+            &vals,
+            quant.bits,
+            quant.bucket_size,
+            rng,
+            &mut payload,
+        );
+        (payload, meta)
+    }
+
+    #[test]
+    fn chained_topk_q_is_byte_identical_to_the_seed_double_compress() {
+        let mut sample = Rng::seed_from_u64(12);
+        for d in [64usize, 1000, 4096] {
+            let x: Vec<f32> = (0..d).map(|_| sample.normal_f32(0.0, 0.4)).collect();
+            for (spec, density, bits) in [
+                ("topk:0.25|q4", 0.25, 4u32),
+                ("topk:0.25+q:4", 0.25, 4),
+                ("topk:0.5|q9", 0.5, 9),
+            ] {
+                let chain = parse_spec(spec).unwrap();
+                let mut rng_a = Rng::seed_from_u64(7);
+                let mut rng_b = Rng::seed_from_u64(7);
+                let got = chain.compress(&x, &mut rng_a);
+                let (want_payload, want_meta) = seed_double_compress(&x, density, bits, &mut rng_b);
+                assert_eq!(got.payload, want_payload, "{spec} d={d}: wire bytes");
+                assert_eq!(got.wire_bits, want_meta.wire_bits, "{spec} d={d}");
+                assert_eq!(got.codec, want_meta.codec, "{spec} d={d}");
+                // nominal_bits pins the seed DoubleCompress formula.
+                let topk = TopK::with_density(density);
+                let quant = QuantizeR::new(bits);
+                assert_eq!(
+                    chain.nominal_bits(d),
+                    quantize::sparse_quantized_wire_bits(
+                        d,
+                        topk.k_for(d),
+                        quant.bits,
+                        quant.bucket_size
+                    ),
+                    "{spec} d={d}: nominal"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generic_chain_serializes_with_the_final_stage_codec() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x: Vec<f32> = (0..600).map(|i| ((i as f32) * 0.13).cos()).collect();
+        // Quantize first, sparsify second: no fused layout exists, so the
+        // wire is the final stage's sparse codec over C1-transformed values.
+        let chain = parse_spec("q8|topk:0.1").unwrap();
+        let enc = chain.compress(&x, &mut rng);
+        let y = chain.decompress(&enc);
+        let nnz = y.iter().filter(|&&v| v != 0.0).count();
+        assert!(nnz <= 60, "nnz={nnz}");
+        assert!(enc.wire_bits <= chain.nominal_bits(x.len()));
+        // Three-stage chains compose too.
+        let triple = parse_spec("topk:0.5|q8|topk:0.05").unwrap();
+        let enc3 = triple.compress(&x, &mut rng);
+        let y3 = triple.decompress(&enc3);
+        assert!(y3.iter().filter(|&&v| v != 0.0).count() <= 30);
+    }
+
+    #[test]
+    fn ef_pipeline_state_persists_across_rounds() {
+        let x: Vec<f32> = (0..200).map(|i| ((i as f32) * 0.31).sin()).collect();
+        let spec = CompressorSpec::parse("ef(topk:0.1)").unwrap();
+        let mut pipe = spec.build(10);
+        let mut fresh = spec.build(10);
+        let mut rng = Rng::seed_from_u64(5);
+        let r0 = pipe.compress(&x, 0, &mut rng);
+        // Round 1 on the stateful pipeline differs from a fresh instance:
+        // the residual shifts the input.
+        let mut rng_a = Rng::seed_from_u64(6);
+        let mut rng_b = Rng::seed_from_u64(6);
+        let r1_warm = pipe.compress(&x, 1, &mut rng_a);
+        let r1_fresh = fresh.compress(&x, 1, &mut rng_b);
+        assert_ne!(r1_warm.payload, r1_fresh.payload, "residual must matter");
+        assert_eq!(r0.dim, x.len());
+        // Determinism: replaying the same inputs and RNG seeds reproduces
+        // the same byte trajectory.
+        let mut replay = spec.build(10);
+        let mut rng0 = Rng::seed_from_u64(5);
+        let mut rng1 = Rng::seed_from_u64(6);
+        assert_eq!(replay.compress(&x, 0, &mut rng0).payload, r0.payload);
+        assert_eq!(replay.compress(&x, 1, &mut rng1).payload, r1_warm.payload);
+    }
+
+    #[test]
+    fn plain_pipeline_wraps_the_stateless_compressor_bit_for_bit() {
+        let x: Vec<f32> = (0..700).map(|i| (i as f32 - 350.0) / 41.0).collect();
+        for spec in ["none", "topk:0.2", "q:6", "randk:0.3", "natural", "topk:0.1|q8"] {
+            let parsed = CompressorSpec::parse(spec).unwrap();
+            let mut pipe = parsed.build(7);
+            let stateless = parse_spec(spec).unwrap();
+            let mut rng_a = Rng::seed_from_u64(11);
+            let mut rng_b = Rng::seed_from_u64(11);
+            let via_pipe = pipe.compress(&x, 3, &mut rng_a);
+            let direct = stateless.compress(&x, &mut rng_b);
+            assert_eq!(via_pipe.payload, direct.payload, "{spec}");
+            assert_eq!(via_pipe.wire_bits, direct.wire_bits, "{spec}");
+            assert_eq!(via_pipe.codec, direct.codec, "{spec}");
+            assert_eq!(pipe.name(), stateless.name(), "{spec}");
+        }
+        assert!(CompressorSpec::parse("none").unwrap().build(1).is_identity());
+        assert!(!CompressorSpec::parse("q8").unwrap().build(1).is_identity());
+    }
+}

@@ -110,6 +110,35 @@ impl Compressor for QuantizeR {
     fn nominal_bits(&self, d: usize) -> u64 {
         32 * d.div_ceil(self.bucket_size) as u64 + d as u64 * (self.bits as u64 + 2)
     }
+
+    fn quantizer_params(&self) -> Option<(u32, usize)> {
+        Some((self.bits, self.bucket_size))
+    }
+
+    fn apply(&self, x: &mut [f32], rng: &mut Rng) {
+        // In-place semantic twin of encode→decode, mirroring both loops
+        // exactly — same per-bucket norm handling, same per-coordinate RNG
+        // draw order, same `norm · level / 2^r` float arithmetic — so the
+        // result is bit-identical to the codec round-trip (pinned below)
+        // without serializing. This is the path generic chains take for
+        // their leading stages.
+        let s = self.levels() as f32;
+        for bucket in x.chunks_mut(self.bucket_size) {
+            let raw = crate::tensor::norm2(bucket);
+            let norm = if raw.is_finite() { raw } else { 0.0 };
+            if norm > 0.0 {
+                for v in bucket.iter_mut() {
+                    let neg = v.is_sign_negative();
+                    let y = (v.abs() / norm).min(1.0);
+                    let level = self.quantize_level(y, rng) as f32;
+                    let mag = norm * level / s;
+                    *v = if neg { -mag } else { mag };
+                }
+            } else {
+                bucket.fill(0.0);
+            }
+        }
+    }
 }
 
 /// Decoder for [`Codec::Quantized`] payloads into a caller buffer (fully
@@ -143,11 +172,12 @@ pub(super) fn decode_quantized_into(
     }
 }
 
-/// Encoder for the double-compression codec (TopK then quantize survivors):
-/// 32-bit K, then per survivor-bucket (DEFAULT_BUCKET survivors) a 32-bit
-/// norm followed by (index, sign, level) triples. Bucketing over the
-/// *survivor sequence* matters just as for the dense quantizer: a single
-/// global norm at r=4 destroys the small survivors and destabilizes
+/// Encoder for the fused sparsify-then-quantize codec (the wire format of
+/// a sparsifier→quantizer [`super::Chain`], Appendix B.3 double
+/// compression): 32-bit K, then per survivor-bucket (`bucket` survivors) a
+/// 32-bit norm followed by (index, sign, level) triples. Bucketing over
+/// the *survivor sequence* matters just as for the dense quantizer: a
+/// single global norm at r=4 destroys the small survivors and destabilizes
 /// training (observed as divergence in the Figure 16 runs).
 pub(super) fn encode_sparse_quantized_into(
     d: usize,
@@ -226,7 +256,7 @@ pub(super) fn decode_sparse_quantized_into(
 /// every survivor bucket has a nonzero norm (the maximal case the encoder
 /// can emit): 32-bit K header, a 32-bit norm per ⌈k/bucket⌉ survivor
 /// bucket, and per survivor an index, a sign bit, and a (bits+1)-bit level.
-/// Shared with `DoubleCompress::nominal_bits` so formula and encoder
+/// Shared with the fused chain's `nominal_bits` so formula and encoder
 /// cannot drift.
 pub(super) fn sparse_quantized_wire_bits(d: usize, k: usize, bits: u32, bucket: usize) -> u64 {
     let buckets = k.div_ceil(bucket) as u64;
@@ -359,6 +389,25 @@ mod tests {
         let c4 = QuantizeR::new(4).compress(&x, &mut rng);
         assert!(c16.wire_bits < super::super::dense_bits(d));
         assert!(c4.wire_bits < c16.wire_bits / 2);
+    }
+
+    #[test]
+    fn apply_is_bit_identical_to_codec_roundtrip() {
+        let mut sample = Rng::seed_from_u64(13);
+        for d in [1usize, 63, 1000, 2500] {
+            let x: Vec<f32> = (0..d).map(|_| sample.normal_f32(0.0, 0.7)).collect();
+            for q in [QuantizeR::new(4), QuantizeR::with_bucket(7, 100)] {
+                let mut rng_a = Rng::seed_from_u64(5);
+                let mut rng_b = Rng::seed_from_u64(5);
+                let via_wire = q.decompress(&q.compress(&x, &mut rng_a));
+                let mut via_apply = x.clone();
+                q.apply(&mut via_apply, &mut rng_b);
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&via_wire), bits(&via_apply), "q{} d={d}", q.bits);
+                // And the RNG streams stay in lockstep afterwards.
+                assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+            }
+        }
     }
 
     #[test]

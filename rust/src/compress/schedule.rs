@@ -1,0 +1,287 @@
+//! Round-indexed compression schedules: `sched:topk:0.3..0.05@cosine`.
+//!
+//! A [`Schedule`] anneals one compressor family's strength over the run's
+//! communication rounds — sparsity for `topk`/`randk`, bit width for `q` —
+//! the "start dense, finish sparse" curriculum the sparse-training
+//! literature uses to buy early optimization progress before clamping the
+//! communication budget. The schedule is a *spec*, not state: the value at
+//! round t is a pure function of (t, total_rounds), so scheduled pipelines
+//! stay bit-deterministic under any worker count.
+//!
+//! Grammar (the part after the `sched:` prefix):
+//!
+//! ```text
+//! <family>:<from>..<to>[@<curve>]     family ∈ {topk, randk, q}
+//! ```
+//!
+//! `from` is the round-0 value and `to` the final-round value (either may
+//! be the larger); `curve` is `linear` (default) or `cosine` (half-cosine
+//! anneal). A single-round run sits at `from`.
+
+use super::quantize::QuantizeR;
+use super::topk::{RandK, TopK};
+use super::{CodecMeta, Compressor};
+use crate::util::rng::Rng;
+
+/// Interpolation curve between the schedule's endpoints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Curve {
+    /// Straight-line interpolation from `from` to `to`.
+    Linear,
+    /// Half-cosine anneal: flat near both endpoints, steep in the middle.
+    Cosine,
+}
+
+impl Curve {
+    /// Parse a curve name (`linear` | `cosine`).
+    pub fn parse(s: &str) -> Option<Curve> {
+        match s {
+            "linear" => Some(Curve::Linear),
+            "cosine" => Some(Curve::Cosine),
+            _ => None,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Curve::Linear => "linear",
+            Curve::Cosine => "cosine",
+        }
+    }
+
+    /// Interpolation weight toward `to` at progress `t ∈ [0, 1]`.
+    fn weight(self, t: f64) -> f64 {
+        match self {
+            Curve::Linear => t,
+            Curve::Cosine => 0.5 * (1.0 - (std::f64::consts::PI * t).cos()),
+        }
+    }
+}
+
+/// The compressor family a schedule anneals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedFamily {
+    /// TopK density in (0, 1].
+    TopK,
+    /// RandK density in (0, 1].
+    RandK,
+    /// Quantizer bit width in 1..=32 (rounded to the nearest integer).
+    Bits,
+}
+
+/// A parsed, validated schedule (see module docs for the grammar).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Schedule {
+    /// Which compressor family the scheduled value parameterizes.
+    pub family: SchedFamily,
+    /// Value at round 0.
+    pub from: f64,
+    /// Value at the final round.
+    pub to: f64,
+    /// Interpolation curve.
+    pub curve: Curve,
+}
+
+impl Schedule {
+    /// Parse the part after the `sched:` prefix, e.g. `topk:0.3..0.05@cosine`.
+    pub fn parse(s: &str) -> Result<Schedule, String> {
+        let (head, rest) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad schedule '{s}' (want <family>:<from>..<to>[@curve])"))?;
+        let family = match head {
+            "topk" => SchedFamily::TopK,
+            "randk" => SchedFamily::RandK,
+            "q" => SchedFamily::Bits,
+            other => return Err(format!("unschedulable family '{other}' (have: topk, randk, q)")),
+        };
+        let (range, curve) = match rest.split_once('@') {
+            Some((r, c)) => (
+                r,
+                Curve::parse(c).ok_or_else(|| format!("unknown curve '{c}' (have: linear, cosine)"))?,
+            ),
+            None => (rest, Curve::Linear),
+        };
+        let (a, b) = range
+            .split_once("..")
+            .ok_or_else(|| format!("bad schedule range '{range}' (want <from>..<to>)"))?;
+        let parse_v = |v: &str| -> Result<f64, String> {
+            v.parse::<f64>().map_err(|_| format!("bad schedule value '{v}'"))
+        };
+        let (from, to) = (parse_v(a)?, parse_v(b)?);
+        let check = |v: f64| -> Result<(), String> {
+            match family {
+                SchedFamily::TopK | SchedFamily::RandK => {
+                    if !(v > 0.0 && v <= 1.0) {
+                        return Err(format!("density must be in (0,1], got {v}"));
+                    }
+                }
+                SchedFamily::Bits => {
+                    if !(1.0..=32.0).contains(&v) {
+                        return Err(format!("quantizer bits must be in 1..=32, got {v}"));
+                    }
+                }
+            }
+            Ok(())
+        };
+        check(from)?;
+        check(to)?;
+        Ok(Schedule {
+            family,
+            from,
+            to,
+            curve,
+        })
+    }
+
+    /// Canonical spec string (the parseable `sched:` suffix).
+    pub fn key(&self) -> String {
+        let fam = match self.family {
+            SchedFamily::TopK => "topk",
+            SchedFamily::RandK => "randk",
+            SchedFamily::Bits => "q",
+        };
+        format!("sched:{fam}:{}..{}@{}", self.from, self.to, self.curve.name())
+    }
+
+    /// The scheduled value at communication round `round` of a
+    /// `total_rounds`-round run: `from` at round 0, `to` at the final
+    /// round, interpolated by the curve in between. A single-round run
+    /// (and round indices past the end) clamp into [0, total−1].
+    pub fn value_at(&self, round: usize, total_rounds: usize) -> f64 {
+        let t = if total_rounds <= 1 {
+            0.0
+        } else {
+            round.min(total_rounds - 1) as f64 / (total_rounds - 1) as f64
+        };
+        self.from + (self.to - self.from) * self.curve.weight(t)
+    }
+
+    /// Encode `x` with the round-`round` instantiation of the scheduled
+    /// family (byte-identical to building that compressor directly).
+    pub fn compress_into(
+        &self,
+        round: usize,
+        total_rounds: usize,
+        x: &[f32],
+        rng: &mut Rng,
+        payload: &mut Vec<u8>,
+    ) -> CodecMeta {
+        let v = self.value_at(round, total_rounds);
+        match self.family {
+            SchedFamily::TopK => TopK::with_density(v).compress_into(x, rng, payload),
+            SchedFamily::RandK => RandK::with_density(v).compress_into(x, rng, payload),
+            SchedFamily::Bits => {
+                QuantizeR::new((v.round() as u32).clamp(1, 32)).compress_into(x, rng, payload)
+            }
+        }
+    }
+
+    /// Worst-case wire bits of the round-`round` instantiation.
+    pub fn nominal_bits(&self, round: usize, total_rounds: usize, d: usize) -> u64 {
+        let v = self.value_at(round, total_rounds);
+        match self.family {
+            SchedFamily::TopK => TopK::with_density(v).nominal_bits(d),
+            SchedFamily::RandK => RandK::with_density(v).nominal_bits(d),
+            SchedFamily::Bits => QuantizeR::new((v.round() as u32).clamp(1, 32)).nominal_bits(d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_roundtrips_key() {
+        let s = Schedule::parse("topk:0.3..0.05@cosine").unwrap();
+        assert_eq!(s.family, SchedFamily::TopK);
+        assert_eq!((s.from, s.to), (0.3, 0.05));
+        assert_eq!(s.curve, Curve::Cosine);
+        assert_eq!(s.key(), "sched:topk:0.3..0.05@cosine");
+        // Default curve is linear; q schedules parse too.
+        let q = Schedule::parse("q:8..2").unwrap();
+        assert_eq!(q.family, SchedFamily::Bits);
+        assert_eq!(q.curve, Curve::Linear);
+        assert_eq!(Schedule::parse("randk:0.5..0.1@linear").unwrap().family, SchedFamily::RandK);
+    }
+
+    #[test]
+    fn bad_schedules_rejected() {
+        for bad in [
+            "topk:0.3",            // no range
+            "topk:0..0.1",         // zero density
+            "topk:0.3..1.5",       // density > 1
+            "q:0..8",              // bits out of range
+            "q:8..64",             // bits out of range
+            "nat:0.1..0.2",        // unschedulable family
+            "topk:0.3..0.1@step",  // unknown curve
+            "topk:a..b",           // unparsable values
+        ] {
+            assert!(Schedule::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn boundary_values_hit_the_endpoints() {
+        for curve in ["linear", "cosine"] {
+            let s = Schedule::parse(&format!("topk:0.3..0.05@{curve}")).unwrap();
+            for total in [1usize, 2, 7, 100] {
+                assert_eq!(s.value_at(0, total), 0.3, "{curve} T={total}");
+                if total > 1 {
+                    let last = s.value_at(total - 1, total);
+                    assert!((last - 0.05).abs() < 1e-12, "{curve} T={total}: {last}");
+                    // Past-the-end rounds clamp to the final value.
+                    assert_eq!(s.value_at(total + 5, total), last);
+                }
+            }
+            // Single-round run sits at `from`.
+            assert_eq!(s.value_at(0, 1), 0.3);
+            assert_eq!(s.value_at(3, 1), 0.3);
+        }
+    }
+
+    #[test]
+    fn schedules_are_monotone_between_endpoints() {
+        for curve in [Curve::Linear, Curve::Cosine] {
+            let s = Schedule {
+                family: SchedFamily::TopK,
+                from: 0.3,
+                to: 0.05,
+                curve,
+            };
+            let total = 50;
+            let vals: Vec<f64> = (0..total).map(|r| s.value_at(r, total)).collect();
+            assert!(
+                vals.windows(2).all(|w| w[1] <= w[0] + 1e-12),
+                "{curve:?} not non-increasing"
+            );
+            assert!(vals.iter().all(|&v| (0.05..=0.3).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn scheduled_encode_matches_direct_compressor() {
+        use crate::util::rng::Rng;
+        let x: Vec<f32> = (0..500).map(|i| ((i as f32) * 0.11).sin()).collect();
+        let s = Schedule::parse("topk:0.3..0.1@linear").unwrap();
+        let total = 5;
+        for round in [0usize, 2, 4] {
+            let mut payload = Vec::new();
+            let mut rng = Rng::seed_from_u64(7);
+            let meta = s.compress_into(round, total, &x, &mut rng, &mut payload);
+            let direct = TopK::with_density(s.value_at(round, total))
+                .compress(&x, &mut Rng::seed_from_u64(7));
+            assert_eq!(payload, direct.payload, "round {round}");
+            assert_eq!(meta.wire_bits, direct.wire_bits);
+            assert!(meta.wire_bits <= s.nominal_bits(round, total, x.len()));
+        }
+        // An annealing q schedule changes the wire cost over rounds.
+        let q = Schedule::parse("q:16..2@linear").unwrap();
+        let mut rng = Rng::seed_from_u64(9);
+        let mut p0 = Vec::new();
+        let mut p9 = Vec::new();
+        let m0 = q.compress_into(0, 10, &x, &mut rng, &mut p0);
+        let m9 = q.compress_into(9, 10, &x, &mut rng, &mut p9);
+        assert!(m9.wire_bits < m0.wire_bits);
+    }
+}

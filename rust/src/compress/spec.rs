@@ -1,0 +1,384 @@
+//! The string-keyed compressor registry and the [`CompressorSpec`] handle —
+//! the compression twin of [`crate::fed::AlgorithmSpec`],
+//! [`crate::model::ModelSpec`], and [`crate::data::DatasetSpec`].
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! pipeline := "ef(" pipeline ")"            error feedback (stateful)
+//!           | "sched:" <schedule>           round-indexed schedule
+//!           | chain
+//! chain    := atom ("|" atom)*              composition, applied left→right
+//! atom     := <family>[:<arg>]              registry lookup
+//! ```
+//!
+//! Families (see [`compressor_registry`]): `none`, `topk:<density>`,
+//! `randk:<density>`, `q<bits>` (also `q:<bits>`), `natural`. The seed's
+//! `topk:<d>+q:<b>` double-compression spelling still parses — `+` is
+//! accepted as a chain separator — and a sparsifier→quantizer chain emits
+//! the seed's exact fused wire layout (see [`super::Chain`]). Schedules are
+//! documented in [`super::schedule`]; `ef(...)` wraps any pipeline with
+//! per-link error-feedback memory ([`super::ef`]).
+//!
+//! Stateless chains are available directly as [`super::parse_spec`]
+//! (`Box<dyn Compressor>`); `ef`/`sched` pipelines carry per-link state and
+//! round indices, so they only exist as [`Pipeline`] instances built from a
+//! validated [`CompressorSpec`] — one per (client, direction), owned by
+//! `Federation`.
+
+use super::identity::Identity;
+use super::natural::Natural;
+use super::pipeline::{Chain, Pipeline};
+use super::quantize::QuantizeR;
+use super::schedule::Schedule;
+use super::topk::{RandK, TopK};
+use super::Compressor;
+
+/// One entry in the string-keyed compressor registry.
+pub struct CompressorFamily {
+    /// Registry key, e.g. `topk`.
+    pub key: &'static str,
+    /// Help text for the argument after the key, if any.
+    pub arg_help: &'static str,
+    /// One-line description shown by `list-compressors`.
+    pub summary: &'static str,
+    build: fn(&str) -> Result<Box<dyn Compressor>, String>,
+}
+
+fn parse_density(v: &str) -> Result<f64, String> {
+    let density: f64 = v.parse().map_err(|_| format!("bad density '{v}'"))?;
+    if !(0.0..=1.0).contains(&density) || density == 0.0 {
+        return Err(format!("density must be in (0,1], got {density}"));
+    }
+    Ok(density)
+}
+
+fn parse_bits(v: &str) -> Result<u32, String> {
+    let bits: u32 = v.parse().map_err(|_| format!("bad bit count '{v}'"))?;
+    if !(1..=32).contains(&bits) {
+        return Err(format!("quantizer bits must be in 1..=32, got {bits}"));
+    }
+    Ok(bits)
+}
+
+fn build_none(arg: &str) -> Result<Box<dyn Compressor>, String> {
+    if !arg.is_empty() {
+        return Err(format!("identity takes no argument, got '{arg}'"));
+    }
+    Ok(Box::new(Identity))
+}
+
+fn build_topk(arg: &str) -> Result<Box<dyn Compressor>, String> {
+    Ok(Box::new(TopK::with_density(parse_density(arg)?)))
+}
+
+fn build_randk(arg: &str) -> Result<Box<dyn Compressor>, String> {
+    Ok(Box::new(RandK::with_density(parse_density(arg)?)))
+}
+
+fn build_q(arg: &str) -> Result<Box<dyn Compressor>, String> {
+    Ok(Box::new(QuantizeR::new(parse_bits(arg)?)))
+}
+
+fn build_natural(arg: &str) -> Result<Box<dyn Compressor>, String> {
+    if !arg.is_empty() {
+        return Err(format!("natural takes no argument, got '{arg}'"));
+    }
+    Ok(Box::new(Natural))
+}
+
+static COMPRESSOR_REGISTRY: [CompressorFamily; 5] = [
+    CompressorFamily {
+        key: "none",
+        arg_help: "",
+        summary: "identity: dense 32-bit f32 wire format (K=100% baseline)",
+        build: build_none,
+    },
+    CompressorFamily {
+        key: "topk",
+        arg_help: "density in (0,1], e.g. topk:0.1",
+        summary: "biased TopK sparsifier (paper Def. 3.1), adaptive sparse codec",
+        build: build_topk,
+    },
+    CompressorFamily {
+        key: "randk",
+        arg_help: "density in (0,1], e.g. randk:0.1",
+        summary: "uniform random-K sparsifier (support ablation; TopK wire format)",
+        build: build_randk,
+    },
+    CompressorFamily {
+        key: "q",
+        arg_help: "bits in 1..=32, e.g. q8 or q:8",
+        summary: "unbiased stochastic quantizer Q_r (paper Def. 3.2, QSGD-style)",
+        build: build_q,
+    },
+    CompressorFamily {
+        key: "natural",
+        arg_help: "",
+        summary: "natural compression C_nat: sign + exponent, 9 bits/coordinate",
+        build: build_natural,
+    },
+];
+
+/// The compressor registry: every stateless codec family, keyed by the
+/// spec prefix. Combinators (`|` chains, `ef(...)`, `sched:...`) compose
+/// these — `fedcomloc list-compressors` shows the full grammar.
+pub fn compressor_registry() -> &'static [CompressorFamily] {
+    &COMPRESSOR_REGISTRY
+}
+
+/// Resolve one atom (`<family>[:<arg>]`, plus the `q8` shorthand) against
+/// the registry.
+fn build_atom(atom: &str) -> Result<Box<dyn Compressor>, String> {
+    let atom = atom.trim();
+    if atom.is_empty() {
+        return Err("empty chain stage (dangling '|' or '+'?)".to_string());
+    }
+    if atom == "identity" {
+        return build_none("");
+    }
+    let (head, arg) = match atom.split_once(':') {
+        Some((h, a)) => (h, a),
+        None => (atom, ""),
+    };
+    let head = head.to_ascii_lowercase();
+    for fam in compressor_registry() {
+        if fam.key == head {
+            return (fam.build)(arg).map_err(|e| format!("compressor '{atom}': {e}"));
+        }
+    }
+    // `q8`-style shorthand: bits glued to the family key.
+    if let Some(rest) = head.strip_prefix('q') {
+        if arg.is_empty() && !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()) {
+            return build_q(rest).map_err(|e| format!("compressor '{atom}': {e}"));
+        }
+    }
+    let keys: Vec<&str> = compressor_registry().iter().map(|f| f.key).collect();
+    Err(format!(
+        "unknown compressor '{atom}' (have: {}; combinators: a|b, ef(...), sched:...)",
+        keys.join(", ")
+    ))
+}
+
+/// Parse a stateless chain spec — atoms joined by `|` (or the legacy `+`)
+/// — into a [`Compressor`]. This is the full grammar *minus* the stateful
+/// combinators: `ef(...)`/`sched:...` need per-link state and a round
+/// index, so they are only constructible as [`Pipeline`]s via
+/// [`CompressorSpec`].
+pub fn parse_chain(spec: &str) -> Result<Box<dyn Compressor>, String> {
+    let spec = spec.trim();
+    if spec.starts_with("ef(") || spec.starts_with("sched:") {
+        return Err(format!(
+            "'{spec}' is a stateful pipeline; use CompressorSpec / --compress-up \
+             (stateless contexts accept atoms and '|' chains only)"
+        ));
+    }
+    if spec.is_empty() || spec == "none" || spec == "identity" {
+        return build_none("");
+    }
+    let atoms: Vec<&str> = spec.split(['|', '+']).collect();
+    if atoms.len() == 1 {
+        return build_atom(atoms[0]);
+    }
+    let stages = atoms
+        .into_iter()
+        .map(build_atom)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Box::new(Chain::new(stages)))
+}
+
+/// A validated, string-keyed compression-pipeline selector — the registry
+/// handle `RunConfig`, the CLI, and the sweep engine configure links
+/// through. Parsing validates the whole grammar up front;
+/// [`CompressorSpec::build`] then instantiates a fresh per-link
+/// [`Pipeline`] (pipelines may hold state, so one per (client, direction)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompressorSpec {
+    spec: String,
+    display: String,
+    identity: bool,
+    stateful: bool,
+}
+
+impl CompressorSpec {
+    /// Validate a pipeline spec string and remember it (see the module
+    /// docs for the grammar).
+    pub fn parse(spec: &str) -> Result<CompressorSpec, String> {
+        let spec = spec.trim();
+        // Validate by building a throwaway instance (total_rounds is only
+        // a schedule parameter; 1 is always valid).
+        let pipe = build_pipeline(spec, 1)?;
+        Ok(CompressorSpec {
+            spec: spec.to_string(),
+            display: pipe.name(),
+            identity: pipe.is_identity(),
+            stateful: pipe.has_state(),
+        })
+    }
+
+    /// The identity (no-compression) spec.
+    pub fn identity() -> CompressorSpec {
+        CompressorSpec::parse("none").expect("identity spec parses")
+    }
+
+    /// The (trimmed) spec string this was parsed from.
+    pub fn key(&self) -> &str {
+        &self.spec
+    }
+
+    /// Display name, e.g. `topk(0.10)+q8`, `ef(topk(0.10))`.
+    pub fn name(&self) -> String {
+        self.display.clone()
+    }
+
+    /// True when this spec is the identity (dense wire format).
+    pub fn is_identity(&self) -> bool {
+        self.identity
+    }
+
+    /// True when built pipelines carry memory between calls (`ef(...)`) —
+    /// see [`Pipeline::has_state`] for the one-stream-per-instance rule.
+    pub fn has_state(&self) -> bool {
+        self.stateful
+    }
+
+    /// Instantiate a fresh per-link [`Pipeline`]. `total_rounds` is the
+    /// run length schedules interpolate over (ignored by everything else).
+    pub fn build(&self, total_rounds: usize) -> Pipeline {
+        build_pipeline(&self.spec, total_rounds).expect("spec validated at parse time")
+    }
+}
+
+impl std::str::FromStr for CompressorSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        CompressorSpec::parse(s)
+    }
+}
+
+/// Compile a pipeline spec (full grammar) for a `total_rounds`-round run.
+fn build_pipeline(spec: &str, total_rounds: usize) -> Result<Pipeline, String> {
+    let spec = spec.trim();
+    if let Some(inner) = spec.strip_prefix("ef(").and_then(|r| r.strip_suffix(')')) {
+        return Ok(Pipeline::ef(build_pipeline(inner, total_rounds)?));
+    }
+    if let Some(rest) = spec.strip_prefix("sched:") {
+        return Ok(Pipeline::sched(Schedule::parse(rest)?, total_rounds));
+    }
+    // Neither combinator matched outermost, so any ef/sched appearing in
+    // the string sits inside a chain — give the actual rule instead of
+    // parse_chain's stateless-context guidance (circular from here).
+    if spec.contains("ef(") || spec.contains("sched:") {
+        return Err(format!(
+            "'{spec}': ef(...)/sched:... must wrap the whole pipeline — write \
+             ef(topk:0.1|q8), not ef(topk:0.1)|q8; they cannot be chain stages"
+        ));
+    }
+    Ok(Pipeline::plain(parse_chain(spec)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_keys_unique_and_each_family_builds() {
+        let reg = compressor_registry();
+        let mut keys: Vec<_> = reg.iter().map(|f| f.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), reg.len(), "duplicate registry keys");
+        for (spec, want) in [
+            ("none", "identity"),
+            ("topk:0.1", "topk(0.10)"),
+            ("randk:0.2", "randk(0.20)"),
+            ("q:8", "q8"),
+            ("q8", "q8"),
+            ("natural", "natural"),
+        ] {
+            assert_eq!(build_atom(spec).unwrap().name(), want, "{spec}");
+        }
+    }
+
+    #[test]
+    fn full_grammar_parses_and_canonicalizes_names() {
+        for (spec, name, identity) in [
+            ("none", "identity", true),
+            ("identity", "identity", true),
+            ("", "identity", true),
+            ("topk:0.1|q8", "topk(0.10)+q8", false),
+            ("topk:0.25+q:4", "topk(0.25)+q4", false),
+            ("ef(topk:0.1)", "ef(topk(0.10))", false),
+            ("ef(topk:0.1|q8)", "ef(topk(0.10)+q8)", false),
+            ("ef(sched:topk:0.3..0.1@linear)", "ef(sched:topk:0.3..0.1@linear)", false),
+            ("sched:topk:0.3..0.05@cosine", "sched:topk:0.3..0.05@cosine", false),
+            ("sched:q:8..2@linear", "sched:q:8..2@linear", false),
+            ("natural|topk:0.5", "natural+topk(0.50)", false),
+        ] {
+            let parsed = CompressorSpec::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(parsed.name(), name, "{spec}");
+            assert_eq!(parsed.is_identity(), identity, "{spec}");
+            assert_eq!(parsed.key(), spec.trim(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn bad_specs_rejected_up_front() {
+        for bad in [
+            "wat",
+            "topk",            // missing density
+            "topk:0",
+            "topk:1.5",
+            "q:0",
+            "q:33",
+            "q8x",
+            "none:7",
+            "natural:2",
+            "topk:0.1|",       // empty chain stage
+            "|q8",
+            "ef(",             // unbalanced
+            "ef(wat)",
+            "sched:wat:1..2",
+            "sched:topk:0..0.1",
+        ] {
+            assert!(CompressorSpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn stateless_parse_rejects_stateful_combinators_with_guidance() {
+        let err = parse_chain("ef(topk:0.1)").unwrap_err();
+        assert!(err.contains("stateful"), "{err}");
+        let err = parse_chain("sched:topk:0.3..0.1").unwrap_err();
+        assert!(err.contains("stateful"), "{err}");
+    }
+
+    #[test]
+    fn only_ef_specs_report_state() {
+        for (spec, stateful) in [
+            ("none", false),
+            ("topk:0.1|q8", false),
+            ("sched:topk:0.3..0.05@cosine", false), // pure function of round
+            ("ef(topk:0.1)", true),
+            ("ef(sched:q:8..2@linear)", true),
+        ] {
+            assert_eq!(
+                CompressorSpec::parse(spec).unwrap().has_state(),
+                stateful,
+                "{spec}"
+            );
+        }
+    }
+
+    #[test]
+    fn mid_chain_combinators_get_the_wrapping_rule_not_circular_guidance() {
+        for bad in ["ef(topk:0.1)|q8", "topk:0.1|ef(q8)", "topk:0.1|sched:q:8..2"] {
+            let err = CompressorSpec::parse(bad).unwrap_err();
+            assert!(
+                err.contains("wrap the whole pipeline"),
+                "{bad}: {err}"
+            );
+        }
+    }
+}

@@ -143,10 +143,103 @@ impl Compressor for TopK {
     }
 
     fn nominal_bits(&self, d: usize) -> u64 {
-        let k = self.k_for(d) as u64;
-        let idx_mode = 64 + k * (bits_for(d as u64) as u64 + 32);
-        let bitmap_mode = 64 + d as u64 + k * 32;
-        idx_mode.min(bitmap_mode)
+        sparse_nominal_bits(d, self.k_for(d))
+    }
+
+    fn select_support(&self, x: &[f32], _rng: &mut Rng) -> Option<Vec<usize>> {
+        Some(select_topk_indices(x, self.k_for(x.len())))
+    }
+
+    fn support_size(&self, d: usize) -> Option<usize> {
+        Some(self.k_for(d))
+    }
+}
+
+/// Worst-case sparse-codec wire bits for `k` survivors of dimension `d`
+/// (the encoder picks the cheaper of the two modes; shared by TopK and
+/// RandK so the bound and the encoder cannot drift).
+pub(super) fn sparse_nominal_bits(d: usize, k: usize) -> u64 {
+    let k = k as u64;
+    let idx_mode = 64 + k * (bits_for(d as u64) as u64 + 32);
+    let bitmap_mode = 64 + d as u64 + k * 32;
+    idx_mode.min(bitmap_mode)
+}
+
+/// The unbiased-support RandK sparsifier: keeps K coordinates drawn
+/// uniformly without replacement from the caller's RNG stream each call
+/// (so repeated compressions of the same vector keep different supports).
+///
+/// Like [`TopK`], the kept values are transmitted unscaled — the operator
+/// sparsifies *models* in FedComLoc's role, where the d/K unbiasedness
+/// rescaling of the gradient-compression literature would blow the iterate
+/// up. Wire format and K-for-density convention are exactly TopK's, so
+/// RandK is an apples-to-apples ablation of *where* the kept support comes
+/// from.
+#[derive(Debug, Clone, Copy)]
+pub struct RandK {
+    /// Density ratio in (0, 1]: K = ceil(density · d), as for [`TopK`].
+    pub density: f64,
+}
+
+impl RandK {
+    /// RandK keeping `density · d` random coordinates (density in (0, 1]).
+    pub fn with_density(density: f64) -> Self {
+        assert!(density > 0.0 && density <= 1.0, "density in (0,1]");
+        Self { density }
+    }
+
+    /// K for a given dimension (TopK's rounding convention).
+    pub fn k_for(&self, d: usize) -> usize {
+        ((self.density * d as f64).ceil() as usize).clamp(1, d)
+    }
+
+    fn draw_support(&self, d: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut idx = rng.sample_without_replacement(d, self.k_for(d));
+        idx.sort_unstable();
+        idx
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("randk({:.2})", self.density)
+    }
+
+    fn compress_into(&self, x: &[f32], rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
+        let d = x.len();
+        let idx = self.draw_support(d, rng);
+        encode_sparse_into(d, &idx, x, payload)
+    }
+
+    fn decompress(&self, c: &super::Compressed) -> Vec<f32> {
+        super::decode_payload(c.codec, c.dim, &c.payload)
+    }
+
+    fn nominal_bits(&self, d: usize) -> u64 {
+        sparse_nominal_bits(d, self.k_for(d))
+    }
+
+    fn apply(&self, x: &mut [f32], rng: &mut Rng) {
+        // In-place twin of encode→decode: the same support draw (same RNG
+        // consumption), survivors keep their exact values, everything else
+        // zeroes — bit-identical to the sparse-codec round-trip.
+        let idx = self.draw_support(x.len(), rng);
+        let mut keep = idx.iter().peekable();
+        for (i, v) in x.iter_mut().enumerate() {
+            if keep.peek() == Some(&&i) {
+                keep.next();
+            } else {
+                *v = 0.0;
+            }
+        }
+    }
+
+    fn select_support(&self, x: &[f32], rng: &mut Rng) -> Option<Vec<usize>> {
+        Some(self.draw_support(x.len(), rng))
+    }
+
+    fn support_size(&self, d: usize) -> Option<usize> {
+        Some(self.k_for(d))
     }
 }
 
@@ -356,5 +449,51 @@ mod tests {
         let mut x = vec![1.0, -3.0];
         apply_topk(&mut x, 1);
         assert_eq!(x, vec![0.0, -3.0]);
+    }
+
+    #[test]
+    fn randk_keeps_k_original_values_on_a_random_support() {
+        let mut rng = Rng::seed_from_u64(21);
+        let x: Vec<f32> = (0..400).map(|i| (i as f32 + 1.0) * 0.01).collect();
+        let c = RandK::with_density(0.1);
+        let enc = c.compress(&x, &mut rng);
+        let y = c.decompress(&enc);
+        let kept: Vec<usize> = (0..x.len()).filter(|&i| y[i] != 0.0).collect();
+        assert_eq!(kept.len(), c.k_for(x.len()));
+        for &i in &kept {
+            assert_eq!(y[i], x[i], "survivors carry exact values");
+        }
+        // A second compression draws a different support (same density).
+        let enc2 = c.compress(&x, &mut rng);
+        let y2 = c.decompress(&enc2);
+        let kept2: Vec<usize> = (0..x.len()).filter(|&i| y2[i] != 0.0).collect();
+        assert_ne!(kept, kept2, "support must be stochastic across calls");
+        assert!(enc.wire_bits <= c.nominal_bits(x.len()));
+    }
+
+    #[test]
+    fn randk_apply_is_bit_identical_to_codec_roundtrip() {
+        let mut sample = Rng::seed_from_u64(8);
+        let x: Vec<f32> = (0..500).map(|_| sample.normal_f32(0.0, 1.0)).collect();
+        let c = RandK::with_density(0.15);
+        let mut rng_a = Rng::seed_from_u64(3);
+        let mut rng_b = Rng::seed_from_u64(3);
+        let via_wire = c.decompress(&c.compress(&x, &mut rng_a));
+        let mut via_apply = x.clone();
+        c.apply(&mut via_apply, &mut rng_b);
+        assert_eq!(via_wire, via_apply);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG streams in lockstep");
+    }
+
+    #[test]
+    fn randk_support_capability_is_sorted_and_sized() {
+        let mut rng = Rng::seed_from_u64(5);
+        let x = vec![1.0f32; 97];
+        let idx = RandK::with_density(0.25).select_support(&x, &mut rng).unwrap();
+        assert_eq!(idx.len(), 25);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "ascending, distinct");
+        // TopK exposes the same capability deterministically.
+        let t = TopK::with_density(0.5).select_support(&x, &mut rng).unwrap();
+        assert_eq!(t, (0..49).collect::<Vec<_>>());
     }
 }

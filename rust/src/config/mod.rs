@@ -15,6 +15,7 @@
 
 pub mod presets;
 
+use crate::compress::CompressorSpec;
 use crate::data::DatasetSpec;
 use crate::fed::RunConfig;
 use crate::model::ModelSpec;
@@ -112,6 +113,14 @@ pub fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(),
         "data_dir" => {
             cfg.data_dir = value.as_str().ok_or("expected string")?.into();
         }
+        "compress_up" => {
+            let s = value.as_str().ok_or("expected string")?;
+            cfg.compress_up = CompressorSpec::parse(s)?.key().to_string();
+        }
+        "compress_down" => {
+            let s = value.as_str().ok_or("expected string")?;
+            cfg.compress_down = CompressorSpec::parse(s)?.key().to_string();
+        }
         other => return Err(format!("unknown key '{other}'")),
     }
     Ok(())
@@ -151,6 +160,8 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
         ("tau", "tau"),
         ("threads", "threads"),
         ("data-dir", "data_dir"),
+        ("compress-up", "compress_up"),
+        ("compress-down", "compress_down"),
     ];
     for (flag, key) in pairs {
         if let Some(raw) = args.get(flag) {
@@ -171,7 +182,9 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
 /// "expected integer" from `apply_kv`, far from the cause.
 fn parse_flag_value(key: &str, raw: &str) -> Result<TomlValue, String> {
     match key {
-        "dataset" | "data_dir" | "model" => Ok(TomlValue::Str(raw.to_string())),
+        "dataset" | "data_dir" | "model" | "compress_up" | "compress_down" => {
+            Ok(TomlValue::Str(raw.to_string()))
+        }
         "alpha" | "p" | "gamma" | "tau" => raw
             .parse::<f64>()
             .map(TomlValue::Float)
@@ -262,6 +275,34 @@ clients = 50
         let doc = toml::parse("[run]\nmodel = \"nope\"").unwrap();
         let err = apply_toml(&mut cfg, &doc).unwrap_err();
         assert!(err.to_string().contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn compression_keys_apply_and_validate() {
+        let mut cfg = RunConfig::default_mnist();
+        let doc = toml::parse(
+            "[run]\ncompress_up = \"ef(topk:0.1|q8)\"\ncompress_down = \"sched:topk:0.3..0.05@cosine\"",
+        )
+        .unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.compress_up, "ef(topk:0.1|q8)");
+        assert_eq!(cfg.compress_down, "sched:topk:0.3..0.05@cosine");
+        // Validation happens at entry, naming the key.
+        let doc = toml::parse("[run]\ncompress_up = \"wat\"").unwrap();
+        let err = apply_toml(&mut cfg, &doc).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("compress_up") && msg.contains("unknown compressor"), "{msg}");
+        // CLI flags route to the same schema point.
+        let cmd = crate::cli::Command::new("train", "t")
+            .opt("compress-up", "SPEC", "")
+            .opt("compress-down", "SPEC", "");
+        let args = cmd
+            .parse(&["--compress-up".into(), "q8".into(), "--compress-down".into(), "topk:0.3".into()])
+            .unwrap();
+        let mut cfg = RunConfig::default_mnist();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.compress_up, "q8");
+        assert_eq!(cfg.compress_down, "topk:0.3");
     }
 
     #[test]

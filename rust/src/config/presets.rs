@@ -31,6 +31,8 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
             tau: 0.01,
             threads: 0,
             data_dir: std::path::PathBuf::from("data"),
+            compress_up: "none".to_string(),
+            compress_down: "none".to_string(),
         }),
         "paper-cifar" => Some(RunConfig {
             dataset: DatasetSpec::cifar10(),
@@ -51,6 +53,8 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
             tau: 0.01,
             threads: 0,
             data_dir: std::path::PathBuf::from("data"),
+            compress_up: "none".to_string(),
+            compress_down: "none".to_string(),
         }),
         "smoke" => Some(RunConfig {
             train_n: 1_000,

@@ -140,6 +140,15 @@ pub fn drive_federation(
     for (key, value) in algo.log_meta(cfg) {
         log = log.with_meta(&key, value);
     }
+    // Directional pipelines are run-level config, not algorithm state, so
+    // the drive loop records them (only when set, keeping legacy logs
+    // byte-stable).
+    if cfg.compress_up != "none" {
+        log = log.with_meta("compress_up", &cfg.compress_up);
+    }
+    if cfg.compress_down != "none" {
+        log = log.with_meta("compress_down", &cfg.compress_down);
+    }
     algo.setup(fed, cfg);
     let mut logger = RoundLogger::new(cfg, log);
     for round in 0..cfg.rounds {

@@ -2,41 +2,49 @@
 //! [`FedAlgorithm`].
 //!
 //! Round shape: the drive loop samples S_r; the server broadcasts x over
-//! the transport; each participant runs E local SGD steps (no control
+//! the transport — through the federation's downlink
+//! [`crate::compress::Pipeline`] when one is configured, so participants
+//! train from the decoded (lossy) model and `downlink_bits` reflects the
+//! actual codec; each participant runs E local SGD steps (no control
 //! variates — h is ignored by passing zeros); clients upload their model
-//! (TopK-compressed for sparseFedAvg, exactly mirroring FedComLoc-Com's
-//! wire format so the Fig. 9 bits-axis comparison is apples-to-apples);
-//! the server averages the delivered updates.
+//! through their uplink pipeline (TopK for sparseFedAvg, exactly mirroring
+//! FedComLoc-Com's wire format so the Fig. 9 bits-axis comparison is
+//! apples-to-apples); the server averages the delivered updates.
 
 use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
-use crate::compress::Compressor;
+use crate::compress::CompressorSpec;
+use crate::util::rng::Rng;
 
 /// FedAvg; an `identity` compressor gives vanilla FedAvg, TopK gives the
 /// paper's sparseFedAvg.
 pub struct FedAvg {
-    compressor: Box<dyn Compressor>,
+    /// Inline uplink compressor spec (the sparseFedAvg shim).
+    spec: CompressorSpec,
     zeros: Vec<f32>,
+    /// Server-side randomness for a stochastic downlink codec.
+    server_rng: Rng,
     /// Per-round decoded-uplink buffers, reused across rounds.
     delivery: Vec<Vec<f32>>,
 }
 
 impl FedAvg {
-    /// FedAvg whose uplinks cross the wire through `compressor`.
-    pub fn new(compressor: Box<dyn Compressor>) -> FedAvg {
+    /// FedAvg whose uplinks cross the wire through `spec`.
+    pub fn new(spec: CompressorSpec) -> FedAvg {
         FedAvg {
-            compressor,
+            spec,
             zeros: Vec::new(),
+            server_rng: Rng::seed_from_u64(0),
             delivery: Vec::new(),
         }
     }
 
     fn algo_name(&self) -> String {
-        if self.compressor.name() == "identity" {
+        if self.spec.is_identity() {
             "fedavg".to_string()
         } else {
-            format!("sparsefedavg[{}]", self.compressor.name())
+            format!("sparsefedavg[{}]", self.spec.name())
         }
     }
 }
@@ -59,14 +67,22 @@ impl FedAlgorithm for FedAvg {
         ]
     }
 
-    fn setup(&mut self, fed: &mut Federation, _cfg: &RunConfig) {
+    fn setup(&mut self, fed: &mut Federation, cfg: &RunConfig) {
+        fed.install_uplink_shim(&self.spec, cfg);
         self.zeros = vec![0.0f32; fed.x.len()];
+        self.server_rng = fed.rng.derive(0x0D01_1AF5);
     }
 
     fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome {
         let cfg = ctx.cfg;
         let round = ctx.round;
-        let msg = Message::dense(round, SERVER, &ctx.fed.x);
+        let msg = Message::through(
+            round,
+            SERVER,
+            &ctx.fed.x,
+            &mut ctx.fed.downlink,
+            &mut self.server_rng,
+        );
         let participants = ctx.transport.broadcast(&ctx.sampled, &msg);
         let x = msg.to_dense();
 
@@ -74,7 +90,6 @@ impl FedAlgorithm for FedAvg {
         let gamma = cfg.gamma;
         let local_steps = cfg.local_steps;
         let zeros = &self.zeros;
-        let compressor = self.compressor.as_ref();
         let d = x.len();
         let results: Vec<(Message, f64)> = ctx.map_clients_ws(&participants, |ci, state, ws| {
             let mut xi = ws.take_xi_primed(&x);
@@ -85,9 +100,10 @@ impl FedAlgorithm for FedAvg {
                 std::mem::swap(&mut xi, &mut ws.step);
                 loss_sum += loss as f64;
             }
-            let compressed = compressor.compress(&xi[..d], &mut state.rng);
+            let upload =
+                Message::through(round, ci as u32, &xi[..d], &mut state.up, &mut state.rng);
             ws.put_xi(xi);
-            (Message::from_compressed(round, ci as u32, compressed), loss_sum)
+            (upload, loss_sum)
         });
 
         let loss_sum: f64 = results.iter().map(|(_, l)| l).sum();

@@ -7,17 +7,22 @@
 //! by E SGD steps; afterwards λ_i ← λ_i − α_dyn·(x_i − x_server).
 //! The server tracks s ← s − (α_dyn/n)·Σ_{i∈S}(x_i − x_server) and sets
 //!     x_server = mean_{i∈S}(x_i) − s/α_dyn.
-//! Communication is dense both ways (one d-vector [`Message`] each).
+//! Communication is one d-vector [`Message`] each way — dense by default,
+//! routed through the configured `compress_up`/`compress_down` pipelines
+//! like every other driver.
 
 use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::tensor;
+use crate::util::rng::Rng;
 
 /// FedDyn with regularizer strength `alpha_dyn` (see module docs).
 pub struct FedDyn {
     alpha_dyn: f64,
     server_state: Vec<f32>,
+    /// Server-side randomness for a stochastic downlink codec.
+    server_rng: Rng,
 }
 
 impl FedDyn {
@@ -26,6 +31,7 @@ impl FedDyn {
         FedDyn {
             alpha_dyn,
             server_state: Vec::new(),
+            server_rng: Rng::seed_from_u64(0),
         }
     }
 }
@@ -56,6 +62,7 @@ impl FedAlgorithm for FedDyn {
 
     fn setup(&mut self, fed: &mut Federation, _cfg: &RunConfig) {
         self.server_state = vec![0.0f32; fed.x.len()];
+        self.server_rng = fed.rng.derive(0xFEDD_D114);
     }
 
     fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome {
@@ -63,7 +70,13 @@ impl FedAlgorithm for FedDyn {
         let round = ctx.round;
         let a = self.alpha_dyn as f32;
 
-        let msg = Message::dense(round, SERVER, &ctx.fed.x);
+        let msg = Message::through(
+            round,
+            SERVER,
+            &ctx.fed.x,
+            &mut ctx.fed.downlink,
+            &mut self.server_rng,
+        );
         let participants = ctx.transport.broadcast(&ctx.sampled, &msg);
         let x = msg.to_dense();
 
@@ -88,7 +101,8 @@ impl FedAlgorithm for FedDyn {
                 std::mem::swap(&mut xi, &mut ws.step);
                 loss_sum += loss as f64;
             }
-            let upload = Message::dense(round, ci as u32, &xi[..d]);
+            let upload =
+                Message::through(round, ci as u32, &xi[..d], &mut state.up, &mut state.rng);
             ws.put_xi(xi);
             (upload, loss_sum)
         });

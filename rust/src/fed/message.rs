@@ -20,7 +20,8 @@
 //! envelope is bookkeeping, exposed separately via [`Message::frame_bits`]
 //! for transports that want to charge it.
 
-use crate::compress::{decode_payload, decode_payload_into, Codec, Compressed};
+use crate::compress::{decode_payload, decode_payload_into, Codec, Compressed, Pipeline};
+use crate::util::rng::Rng;
 
 /// `sender` value identifying the server in downlink messages.
 pub const SERVER: u32 = u32::MAX;
@@ -119,12 +120,13 @@ fn codec_tag(codec: Codec) -> u8 {
         Codec::SparseBitmap => 2,
         Codec::Quantized { .. } => 3,
         Codec::SparseQuantized { .. } => 4,
+        Codec::Natural => 5,
     }
 }
 
 fn codec_params(codec: Codec) -> (u8, u32) {
     match codec {
-        Codec::Dense | Codec::SparseIdx | Codec::SparseBitmap => (0, 0),
+        Codec::Dense | Codec::SparseIdx | Codec::SparseBitmap | Codec::Natural => (0, 0),
         Codec::Quantized { bits, bucket } | Codec::SparseQuantized { bits, bucket } => {
             (bits as u8, bucket)
         }
@@ -147,6 +149,7 @@ fn codec_from_wire(tag: u8, bits: u8, bucket: u32) -> Result<Codec, WireError> {
         2 => Ok(Codec::SparseBitmap),
         3 => quant(|bits, bucket| Codec::Quantized { bits, bucket }),
         4 => quant(|bits, bucket| Codec::SparseQuantized { bits, bucket }),
+        5 => Ok(Codec::Natural),
         t => Err(WireError::BadCodecTag(t)),
     }
 }
@@ -182,6 +185,27 @@ impl Message {
             },
             wire_bits: 32 * x.len() as u64,
             payload,
+        }
+    }
+
+    /// Route `x` through a directional compression [`Pipeline`] for the
+    /// wire: the identity pipeline short-circuits to [`Message::dense`]
+    /// (byte-identical to encoding through the identity codec, minus a
+    /// copy), anything else encodes with the pipeline's codec and carries
+    /// its exact [`crate::compress::CodecMeta`] wire bits. This is the one
+    /// constructor all four drivers use for both directions, so
+    /// `uplink_bits`/`downlink_bits` always reflect the actual codec.
+    pub fn through(
+        round: usize,
+        sender: u32,
+        x: &[f32],
+        pipeline: &mut Pipeline,
+        rng: &mut Rng,
+    ) -> Message {
+        if pipeline.is_identity() {
+            Message::dense(round, sender, x)
+        } else {
+            Message::from_compressed(round, sender, pipeline.compress(x, round, rng))
         }
     }
 
@@ -358,14 +382,17 @@ fn validate_consistency(codec: Codec, dim: usize, payload: &[u8]) -> Result<(), 
                 "sparse-quantized payload length out of range",
             )
         }
+        Codec::Natural => check_exact(
+            (9 * dim as u64).div_ceil(8) as usize,
+            "natural payload length != ceil(9*dim/8)",
+        ),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{Compressor, DoubleCompress, Identity, QuantizeR, TopK};
-    use crate::util::rng::Rng;
+    use crate::compress::{parse_spec, Compressor, Identity, Natural, QuantizeR, RandK, TopK};
 
     fn sample(d: usize) -> Vec<f32> {
         let mut rng = Rng::seed_from_u64(3);
@@ -379,9 +406,12 @@ mod tests {
             Box::new(Identity),
             Box::new(TopK::with_density(0.05)),
             Box::new(TopK::with_density(0.8)),
+            Box::new(RandK::with_density(0.1)),
             Box::new(QuantizeR::new(6)),
             Box::new(QuantizeR::with_bucket(3, 128)),
-            Box::new(DoubleCompress::new(0.25, 4)),
+            Box::new(Natural),
+            parse_spec("topk:0.25|q4").unwrap(),
+            parse_spec("q8|topk:0.2").unwrap(),
         ];
         let mut rng = Rng::seed_from_u64(4);
         for c in comps {
@@ -495,5 +525,33 @@ mod tests {
         let msg = Message::dense(0, 0, &sample(10));
         assert_eq!(msg.frame_bits(), 8 * (FRAME_HEADER_BYTES as u64 + 40));
         assert!(msg.wire_bits() <= msg.frame_bits());
+    }
+
+    #[test]
+    fn through_identity_is_byte_identical_to_dense() {
+        use crate::compress::CompressorSpec;
+        let x = sample(123);
+        let mut rng = Rng::seed_from_u64(1);
+        let mut idp = CompressorSpec::identity().build(4);
+        let via = Message::through(3, 7, &x, &mut idp, &mut rng);
+        let dense = Message::dense(3, 7, &x);
+        assert_eq!(via, dense);
+        // Identity consumed no randomness.
+        let mut rng2 = Rng::seed_from_u64(1);
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn through_codec_carries_exact_meta_bits() {
+        use crate::compress::CompressorSpec;
+        let x = sample(2000);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut pipe = CompressorSpec::parse("topk:0.1|q8").unwrap().build(4);
+        let msg = Message::through(0, SERVER, &x, &mut pipe, &mut rng);
+        let mut pipe2 = CompressorSpec::parse("topk:0.1|q8").unwrap().build(4);
+        let direct = pipe2.compress(&x, 0, &mut Rng::seed_from_u64(2));
+        assert_eq!(msg.wire_bits(), direct.wire_bits);
+        assert_eq!(msg.payload, direct.payload);
+        assert_eq!(msg.to_dense(), decode_payload(direct.codec, direct.dim, &direct.payload));
     }
 }

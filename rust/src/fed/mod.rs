@@ -36,7 +36,7 @@ pub mod transport;
 
 pub use algorithm::{drive, drive_federation, FedAlgorithm, RoundCtx, RoundOutcome};
 
-use crate::compress::parse_spec;
+use crate::compress::{CompressorSpec, Pipeline};
 use crate::data::dirichlet::{partition, Partition};
 use crate::data::loader::{eval_batches, ClientLoader, EvalBatches};
 use crate::data::{load_or_synthesize, DatasetSpec, TrainTest};
@@ -79,6 +79,23 @@ impl Variant {
     }
 }
 
+/// Which wire direction an algorithm family's inline compressor argument
+/// shims into (the legacy `--algo fedcomloc-com:<spec>` grammar). The
+/// shimmed direction and the corresponding `RunConfig`
+/// `compress_up`/`compress_down` key are mutually exclusive — setting
+/// both is a configuration conflict, detected at sweep expansion
+/// ([`crate::sweep`]) and again at [`Federation`] setup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireShim {
+    /// The argument never reaches the wire (e.g. `fedcomloc-local`'s
+    /// in-graph mask density, `feddyn`'s regularizer α).
+    None,
+    /// The argument becomes the per-client uplink pipeline.
+    Uplink,
+    /// The argument becomes the server broadcast (downlink) pipeline.
+    Downlink,
+}
+
 /// One entry in the string-keyed algorithm registry.
 pub struct AlgorithmFamily {
     /// Registry key, e.g. `fedcomloc-com`.
@@ -87,11 +104,18 @@ pub struct AlgorithmFamily {
     pub arg_help: &'static str,
     /// One-line description shown by `list-algorithms`.
     pub summary: &'static str,
+    /// Wire direction the family's compressor argument shims into.
+    pub shim: WireShim,
+    /// True when the algorithm sends more than one logical vector stream
+    /// over each link per round (Scaffold's x/c and Δx/Δc pairs) — such
+    /// families reject stateful `ef(...)` pipelines, whose single residual
+    /// memory cannot serve interleaved streams.
+    pub multi_stream: bool,
     build: fn(&str) -> Result<Box<dyn FedAlgorithm>, String>,
 }
 
-fn arg_compressor(arg: &str) -> Result<Box<dyn crate::compress::Compressor>, String> {
-    parse_spec(if arg.is_empty() { "none" } else { arg })
+fn arg_compressor(arg: &str) -> Result<CompressorSpec, String> {
+    CompressorSpec::parse(if arg.is_empty() { "none" } else { arg })
 }
 
 fn build_fedcomloc_com(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
@@ -99,7 +123,18 @@ fn build_fedcomloc_com(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
 }
 
 fn build_fedcomloc_local(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
-    Ok(Box::new(scaffnew::FedComLoc::new(Variant::Local, arg_compressor(arg)?)))
+    let spec = arg_compressor(arg)?;
+    // -Local applies C(x) in-graph via the TopK mask: a spec that carries
+    // no extractable density would silently train (and transmit) dense
+    // while the run name advertises a compressor — reject it up front.
+    if !spec.is_identity() && scaffnew::local_mask_density(&spec).is_none() {
+        return Err(format!(
+            "fedcomloc-local masks in-graph and needs a leading topk:<density> spec \
+             (got '{}'); use fedcomloc-com or compress_up for wire-only compression",
+            spec.key()
+        ));
+    }
+    Ok(Box::new(scaffnew::FedComLoc::new(Variant::Local, spec)))
 }
 
 fn build_fedcomloc_global(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
@@ -112,7 +147,7 @@ fn build_fedavg(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
 
 fn build_sparsefedavg(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
     let spec = if arg.is_empty() { "topk:0.3" } else { arg };
-    Ok(Box::new(fedavg::FedAvg::new(parse_spec(spec)?)))
+    Ok(Box::new(fedavg::FedAvg::new(CompressorSpec::parse(spec)?)))
 }
 
 fn build_scaffold(arg: &str) -> Result<Box<dyn FedAlgorithm>, String> {
@@ -139,48 +174,64 @@ static ALGORITHM_REGISTRY: [AlgorithmFamily; 8] = [
         key: "fedcomloc-com",
         arg_help: "compressor spec (default: none)",
         summary: "FedComLoc, client->server uplink compression (paper default)",
+        shim: WireShim::Uplink,
+        multi_stream: false,
         build: build_fedcomloc_com,
     },
     AlgorithmFamily {
         key: "fedcomloc-local",
         arg_help: "compressor spec (default: none)",
         summary: "FedComLoc, in-graph model compression during local steps",
+        shim: WireShim::None,
+        multi_stream: false,
         build: build_fedcomloc_local,
     },
     AlgorithmFamily {
         key: "fedcomloc-global",
         arg_help: "compressor spec (default: none)",
         summary: "FedComLoc, server->client downlink compression",
+        shim: WireShim::Downlink,
+        multi_stream: false,
         build: build_fedcomloc_global,
     },
     AlgorithmFamily {
         key: "fedcomloc",
         arg_help: "compressor spec (default: none)",
         summary: "alias for fedcomloc-com",
+        shim: WireShim::Uplink,
+        multi_stream: false,
         build: build_fedcomloc_com,
     },
     AlgorithmFamily {
         key: "fedavg",
         arg_help: "optional compressor spec (identity = vanilla FedAvg)",
         summary: "FedAvg (McMahan et al.); with a compressor it becomes sparseFedAvg",
+        shim: WireShim::Uplink,
+        multi_stream: false,
         build: build_fedavg,
     },
     AlgorithmFamily {
         key: "sparsefedavg",
         arg_help: "compressor spec (default: topk:0.3)",
         summary: "sparseFedAvg (paper §4.7): FedAvg with compressed uplink",
+        shim: WireShim::Uplink,
+        multi_stream: false,
         build: build_sparsefedavg,
     },
     AlgorithmFamily {
         key: "scaffold",
         arg_help: "",
         summary: "Scaffold (Karimireddy et al.): control variates, 2x dense traffic",
+        shim: WireShim::None,
+        multi_stream: true,
         build: build_scaffold,
     },
     AlgorithmFamily {
         key: "feddyn",
         arg_help: "regularizer alpha (default: 0.01)",
         summary: "FedDyn (Acar et al.): dynamic regularization baseline",
+        shim: WireShim::None,
+        multi_stream: false,
         build: build_feddyn,
     },
 ];
@@ -191,8 +242,10 @@ pub fn algorithm_registry() -> &'static [AlgorithmFamily] {
     &ALGORITHM_REGISTRY
 }
 
-/// Resolve a spec string (`<family>[:<arg>]`) against the registry.
-pub fn build_algorithm(spec: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+/// Resolve a spec string's `<family>[:<arg>]` head against the registry —
+/// the single parse point [`build_algorithm`] and [`embedded_wire_specs`]
+/// share, so they can never disagree on the grammar.
+fn resolve_family(spec: &str) -> Result<(&'static AlgorithmFamily, &str), String> {
     let spec = spec.trim();
     let (family, arg) = match spec.split_once(':') {
         Some((f, a)) => (f, a),
@@ -201,11 +254,54 @@ pub fn build_algorithm(spec: &str) -> Result<Box<dyn FedAlgorithm>, String> {
     let family = family.to_ascii_lowercase();
     for fam in algorithm_registry() {
         if fam.key == family {
-            return (fam.build)(arg);
+            return Ok((fam, arg));
         }
     }
     let keys: Vec<&str> = algorithm_registry().iter().map(|f| f.key).collect();
     Err(format!("unknown algorithm '{family}' (have: {})", keys.join(", ")))
+}
+
+/// Resolve a spec string (`<family>[:<arg>]`) against the registry.
+pub fn build_algorithm(spec: &str) -> Result<Box<dyn FedAlgorithm>, String> {
+    let (fam, arg) = resolve_family(spec)?;
+    (fam.build)(arg)
+}
+
+/// The wire pipelines a legacy algorithm spec embeds inline (the
+/// back-compat shim): `(uplink, downlink)`, each `Some` only when the
+/// family's argument shims into that direction *and* is not the identity.
+/// `fedcomloc-com:topk:0.1` ⇒ `(Some(topk:0.1), None)`;
+/// `fedcomloc-global:q8` ⇒ `(None, Some(q8))`; `sparsefedavg` ⇒ its
+/// `topk:0.3` default uplink. The sweep expander and `Federation` both
+/// use this to reject a spec that collides with an explicit
+/// `compress_up`/`compress_down` key.
+pub fn embedded_wire_specs(
+    spec: &str,
+) -> Result<(Option<CompressorSpec>, Option<CompressorSpec>), String> {
+    let (fam, arg) = resolve_family(spec)?;
+    if fam.shim == WireShim::None {
+        return Ok((None, None));
+    }
+    let arg = if arg.is_empty() && fam.key == "sparsefedavg" {
+        "topk:0.3"
+    } else {
+        arg
+    };
+    let parsed = arg_compressor(arg)?;
+    let embedded = (!parsed.is_identity()).then_some(parsed);
+    Ok(match fam.shim {
+        WireShim::Uplink => (embedded, None),
+        WireShim::Downlink => (None, embedded),
+        WireShim::None => unreachable!("handled above"),
+    })
+}
+
+/// True when the algorithm family behind `spec` multiplexes several vector
+/// streams per link per round (see [`AlgorithmFamily::multi_stream`]) —
+/// the sweep expander uses this to reject stateful `ef(...)` pipelines up
+/// front instead of panicking in a worker thread.
+pub fn multiplexes_streams(spec: &str) -> Result<bool, String> {
+    Ok(resolve_family(spec)?.0.multi_stream)
 }
 
 /// A validated, string-keyed algorithm selector — the registry handle the
@@ -297,6 +393,17 @@ pub struct RunConfig {
     pub threads: usize,
     /// Data directory for real datasets (falls back to synthetic).
     pub data_dir: std::path::PathBuf,
+    /// Client→server (uplink) compression pipeline spec
+    /// ([`CompressorSpec`] grammar; `"none"` = dense). Every driver routes
+    /// client uploads through this; state (e.g. `ef` residuals) is
+    /// per-client. Mutually exclusive with an algorithm spec that embeds
+    /// an uplink compressor (`fedcomloc-com:<spec>`, `sparsefedavg:...`).
+    pub compress_up: String,
+    /// Server→client (downlink) compression pipeline spec. Every driver
+    /// routes server broadcasts through this; FedComLoc additionally
+    /// retains the compressed model between rounds (the -Global
+    /// semantics). Mutually exclusive with `fedcomloc-global:<spec>`.
+    pub compress_down: String,
 }
 
 impl RunConfig {
@@ -330,6 +437,8 @@ impl RunConfig {
             tau: 0.01,
             threads: 0,
             data_dir: std::path::PathBuf::from("data"),
+            compress_up: "none".to_string(),
+            compress_down: "none".to_string(),
         }
     }
 
@@ -359,7 +468,22 @@ impl RunConfig {
             tau: 0.01,
             threads: 0,
             data_dir: std::path::PathBuf::from("data"),
+            compress_up: "none".to_string(),
+            compress_down: "none".to_string(),
         }
+    }
+
+    /// The validated uplink pipeline spec (panics on an invalid string —
+    /// the config layer validates on entry).
+    pub fn uplink_spec(&self) -> CompressorSpec {
+        CompressorSpec::parse(&self.compress_up)
+            .unwrap_or_else(|e| panic!("invalid compress_up '{}': {e}", self.compress_up))
+    }
+
+    /// The validated downlink pipeline spec (panics on an invalid string).
+    pub fn downlink_spec(&self) -> CompressorSpec {
+        CompressorSpec::parse(&self.compress_down)
+            .unwrap_or_else(|e| panic!("invalid compress_down '{}': {e}", self.compress_down))
     }
 }
 
@@ -373,6 +497,11 @@ pub struct ClientState {
     pub h: Vec<f32>,
     /// Per-client RNG stream (compression stochasticity etc.).
     pub rng: Rng,
+    /// The client's uplink compression pipeline — the per-(client,
+    /// direction) codec instance. Stateful combinators (`ef`) keep their
+    /// residual here, so it survives rounds and is independent of which
+    /// worker slot runs the client (bit-determinism at any thread count).
+    pub up: Pipeline,
 }
 
 /// Shared run state: data, clients, pool, model params.
@@ -395,6 +524,11 @@ pub struct Federation {
     /// `workspaces[w]`, so locks never contend and scratch stays warm
     /// across iterations, rounds, and runs.
     pub workspaces: Vec<Mutex<Workspace>>,
+    /// The server broadcast's compression pipeline (the downlink twin of
+    /// each client's [`ClientState::up`]): all four drivers route
+    /// broadcasts through it, so `downlink_bits` always reflects the
+    /// actual codec's [`crate::compress::CodecMeta`].
+    pub downlink: Pipeline,
     /// The global model parameters x.
     pub x: Vec<f32>,
     /// The run's root RNG (client sampling; streams derive from it).
@@ -452,6 +586,7 @@ impl Federation {
         );
         let train = Arc::new(data.train.clone());
         let dim = model.dim();
+        let up_spec = cfg.uplink_spec();
         let clients: Vec<Mutex<ClientState>> = part
             .client_indices
             .iter()
@@ -466,6 +601,7 @@ impl Federation {
                     ),
                     h: vec![0.0f32; dim],
                     rng: rng.derive(0xC0_FFEE + i as u64),
+                    up: up_spec.build(cfg.rounds),
                 })
             })
             .collect();
@@ -487,6 +623,7 @@ impl Federation {
         // the run never exercises (pool wider than clients_per_round and
         // the eval batch count) cost nothing.
         let workspaces = (0..pool.size()).map(|_| Mutex::new(Workspace::new())).collect();
+        let downlink = cfg.downlink_spec().build(cfg.rounds);
         Federation {
             model,
             trainer,
@@ -495,10 +632,49 @@ impl Federation {
             eval_set,
             pool,
             workspaces,
+            downlink,
             x,
             rng,
             data,
         }
+    }
+
+    /// Install a legacy algorithm spec's inline compressor as the uplink
+    /// pipeline of every client (`fedcomloc-com:<spec>` /
+    /// `sparsefedavg:<spec>` back-compat shim). No-op for the identity;
+    /// panics when the run config *also* sets `compress_up` — the two
+    /// grammars must not silently fight over the same link.
+    pub fn install_uplink_shim(&mut self, spec: &CompressorSpec, cfg: &RunConfig) {
+        if spec.is_identity() {
+            return;
+        }
+        assert!(
+            cfg.uplink_spec().is_identity(),
+            "uplink compressor conflict: algorithm spec embeds '{}' but compress_up='{}' \
+             is also set; use one or the other",
+            spec.key(),
+            cfg.compress_up
+        );
+        for client in &self.clients {
+            client.lock().unwrap().up = spec.build(cfg.rounds);
+        }
+    }
+
+    /// Install a legacy algorithm spec's inline compressor as the server
+    /// broadcast pipeline (`fedcomloc-global:<spec>` back-compat shim).
+    /// No-op for the identity; panics when `compress_down` is also set.
+    pub fn install_downlink_shim(&mut self, spec: &CompressorSpec, cfg: &RunConfig) {
+        if spec.is_identity() {
+            return;
+        }
+        assert!(
+            cfg.downlink_spec().is_identity(),
+            "downlink compressor conflict: algorithm spec embeds '{}' but compress_down='{}' \
+             is also set; use one or the other",
+            spec.key(),
+            cfg.compress_down
+        );
+        self.downlink = spec.build(cfg.rounds);
     }
 
     /// Sample the participating set S_r for a round (uniform w/o
@@ -692,6 +868,12 @@ mod tests {
             "feddyn:zero",
             "feddyn:-1",
             "sparsefedavg:topk:0",
+            // -Local needs a pure topk density for the in-graph mask;
+            // anything else would silently run (and transmit) dense.
+            "fedcomloc-local:q:8",
+            "fedcomloc-local:randk:0.2",
+            "fedcomloc-local:topk:0.5|q8",
+            "fedcomloc-local:ef(topk:0.1)",
         ] {
             assert!(AlgorithmSpec::parse(bad).is_err(), "{bad}");
         }
@@ -709,6 +891,68 @@ mod tests {
         assert_eq!(cfg.p, 0.1);
         assert_eq!(cfg.local_steps, 10);
         assert_eq!(cfg.eval_every, 5);
+    }
+
+    #[test]
+    fn embedded_wire_specs_map_families_to_directions() {
+        let up = |s: &str| embedded_wire_specs(s).unwrap().0.map(|c| c.key().to_string());
+        let down = |s: &str| embedded_wire_specs(s).unwrap().1.map(|c| c.key().to_string());
+        assert_eq!(up("fedcomloc-com:topk:0.1"), Some("topk:0.1".into()));
+        assert_eq!(down("fedcomloc-com:topk:0.1"), None);
+        assert_eq!(down("fedcomloc-global:q:8"), Some("q:8".into()));
+        assert_eq!(up("fedcomloc-global:q:8"), None);
+        // Identity args and non-wire families embed nothing.
+        assert_eq!(embedded_wire_specs("fedcomloc-com").unwrap(), (None, None));
+        assert_eq!(embedded_wire_specs("fedavg").unwrap(), (None, None));
+        assert_eq!(embedded_wire_specs("scaffold").unwrap(), (None, None));
+        assert_eq!(embedded_wire_specs("feddyn:0.1").unwrap(), (None, None));
+        // -Local's arg is the in-graph mask density, not a wire codec.
+        assert_eq!(embedded_wire_specs("fedcomloc-local:topk:0.5").unwrap(), (None, None));
+        // sparsefedavg's default argument counts as embedded.
+        assert_eq!(up("sparsefedavg"), Some("topk:0.3".into()));
+        assert!(embedded_wire_specs("wat").is_err());
+        // Only Scaffold multiplexes several vector streams per link.
+        assert!(multiplexes_streams("scaffold").unwrap());
+        for single in ["fedcomloc-com:topk:0.1", "fedavg", "feddyn:0.01", "fedcomloc-global"] {
+            assert!(!multiplexes_streams(single).unwrap(), "{single}");
+        }
+        assert!(multiplexes_streams("wat").is_err());
+    }
+
+    #[test]
+    fn stateful_pipeline_specs_resolve_through_the_registry() {
+        for (spec, want) in [
+            ("fedcomloc-com:ef(topk:0.1)", "fedcomloc-com[ef(topk(0.10))]"),
+            ("fedcomloc-com:topk:0.1|q8", "fedcomloc-com[topk(0.10)+q8]"),
+            (
+                "fedcomloc-com:sched:topk:0.3..0.05@cosine",
+                "fedcomloc-com[sched:topk:0.3..0.05@cosine]",
+            ),
+            ("fedcomloc-com:randk:0.2", "fedcomloc-com[randk(0.20)]"),
+            ("fedcomloc-com:natural", "fedcomloc-com[natural]"),
+        ] {
+            let parsed = AlgorithmSpec::parse(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+            assert_eq!(parsed.name(), want, "{spec}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "uplink compressor conflict")]
+    fn uplink_shim_conflicts_with_explicit_compress_up() {
+        let cfg = RunConfig {
+            train_n: 400,
+            test_n: 100,
+            n_clients: 4,
+            clients_per_round: 2,
+            rounds: 2,
+            compress_up: "q8".to_string(),
+            ..RunConfig::default_mnist()
+        };
+        let trainer =
+            Arc::new(crate::model::native::NativeTrainer::from_spec("mlp").unwrap());
+        let mut fed = Federation::new(&cfg, trainer);
+        let shim = CompressorSpec::parse("topk:0.1").unwrap();
+        fed.install_uplink_shim(&shim, &cfg);
     }
 
     #[test]

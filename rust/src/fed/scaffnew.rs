@@ -13,26 +13,31 @@
 //! aggregation; control variates h_i of unsampled (or dropped) clients stay
 //! frozen.
 //!
-//! Compression points (and one deliberate reading choice): Algorithm 1's
-//! line 8 notationally applies C(x̂) every iteration, but between
-//! communications x̂ never crosses the network, so -Com compresses exactly
-//! the transmitted update (at θ=1). In-iteration model compression is
-//! precisely the -Local variant (line 6½), which we implement via the
-//! in-graph TopK Pallas kernel. -Global compresses the aggregated model
-//! server-side (lines 11–12), and the h-refresh (line 16) uses the
-//! *compressed* x_{t+1}, faithful to the pseudocode.
+//! **Compression is directional.** The driver itself is variant-agnostic
+//! about the wire: every client upload goes through that client's uplink
+//! [`crate::compress::Pipeline`] ([`super::ClientState::up`]) and, when
+//! the federation's downlink pipeline is non-identity, the aggregated
+//! model is compressed server-side, retained, and rebroadcast in its
+//! compressed form with the h-refresh (line 16) using the *compressed*
+//! x_{t+1} — faithful to Algorithm 1 lines 11–12/16. The legacy variants
+//! are shims over this: `-Com` installs its compressor as every client's
+//! uplink pipeline, `-Global` as the downlink pipeline, and `-Local`
+//! applies C(x) in-graph inside each local step (the TopK Pallas kernel)
+//! with a dense wire. `compress_up`/`compress_down` in
+//! [`super::RunConfig`] configure the same two pipelines directly — e.g.
+//! `fedcomloc` + `compress_down=topk:0.3` *is* FedComLoc-Global, and
+//! setting both gives LoCoDL-style bidirectional compression.
 //!
 //! Wire shape per round: one downlink broadcast (dense, or the retained
-//! compressed model under -Global) and one uplink [`Message`] per
-//! participant (compressed under -Com).
+//! compressed model) and one uplink [`Message`] per participant.
 //!
-//! Invariant (tested): with -Com/-Local, Σ_i h_i stays 0 — each round's
-//! updates sum to (p/γ)·(m·mean(ε) − Σ ε) = 0.
+//! Invariant (tested): with an uncompressed downlink, Σ_i h_i stays 0 —
+//! each round's updates sum to (p/γ)·(m·mean(ε) − Σ ε) = 0.
 
 use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig, Variant};
-use crate::compress::Compressor;
+use crate::compress::CompressorSpec;
 use crate::util::rng::Rng;
 
 /// One client's segment result (the uplink message plus local stats).
@@ -55,17 +60,20 @@ pub fn next_segment_len(coin_rng: &mut Rng, p: f64) -> usize {
 /// FedComLoc in its -Com / -Local / -Global variants.
 pub struct FedComLoc {
     variant: Variant,
-    compressor: Box<dyn Compressor>,
+    /// The variant's inline compressor spec (wire shim for -Com/-Global,
+    /// in-graph mask density source for -Local).
+    spec: CompressorSpec,
     /// Density for the -Local in-graph masked step (TopK only).
     local_density: Option<f64>,
     /// Algorithm 1's server coin stream (derived in `setup`).
     coin_rng: Rng,
-    /// Server-side compression randomness for -Global.
+    /// Server-side compression randomness for the downlink pipeline.
     server_rng: Rng,
     /// (p/γ) for the control-variate refresh.
     p_over_gamma: f32,
-    /// -Global retains the compressed model message between rounds so
-    /// subsequent downlinks ship (and are billed at) the compressed form.
+    /// A non-identity downlink retains the compressed model message
+    /// between rounds so subsequent downlinks ship (and are billed at)
+    /// the compressed form.
     downlink_msg: Option<Message>,
     /// Per-round decoded-uplink buffers, reused across rounds (grown on
     /// demand, never shrunk) — the server-side twin of the workers'
@@ -73,14 +81,29 @@ pub struct FedComLoc {
     delivery: Vec<Vec<f32>>,
 }
 
+/// The in-graph mask density a compressor spec supplies to the -Local
+/// variant: `Some` exactly for a pure `topk:<density>` spec, parsed from
+/// the spec *key* (the user's exact string — the `{:.2}` display name
+/// would round 0.125 to 0.12), `None` otherwise (the registry rejects
+/// maskless non-identity -Local specs at build time). The density range
+/// was already validated by [`CompressorSpec::parse`], so any value that
+/// parses here is in (0, 1].
+pub(crate) fn local_mask_density(spec: &CompressorSpec) -> Option<f64> {
+    spec.key()
+        .trim()
+        .to_ascii_lowercase()
+        .strip_prefix("topk:")
+        .and_then(|rest| rest.parse::<f64>().ok())
+}
+
 impl FedComLoc {
-    /// FedComLoc in `variant`, compressing through `compressor` (for
-    /// -Local, a TopK compressor also supplies the in-graph mask density).
-    pub fn new(variant: Variant, compressor: Box<dyn Compressor>) -> FedComLoc {
-        let local_density = compressor_density(compressor.as_ref());
+    /// FedComLoc in `variant`, with the variant's inline compressor spec
+    /// (for -Local, a TopK spec also supplies the in-graph mask density).
+    pub fn new(variant: Variant, spec: CompressorSpec) -> FedComLoc {
+        let local_density = local_mask_density(&spec);
         FedComLoc {
             variant,
-            compressor,
+            spec,
             local_density,
             coin_rng: Rng::seed_from_u64(0),
             server_rng: Rng::seed_from_u64(0),
@@ -93,14 +116,14 @@ impl FedComLoc {
 
 impl FedAlgorithm for FedComLoc {
     fn name(&self) -> String {
-        format!("fedcomloc-{}[{}]", self.variant.name(), self.compressor.name())
+        format!("fedcomloc-{}[{}]", self.variant.name(), self.spec.name())
     }
 
     fn log_name(&self, fed: &Federation, cfg: &RunConfig) -> String {
         format!(
             "fedcomloc-{}[{}]-{}-a{}",
             self.variant.name(),
-            self.compressor.name(),
+            self.spec.name(),
             fed.model.name(),
             cfg.dirichlet_alpha
         )
@@ -109,7 +132,7 @@ impl FedAlgorithm for FedComLoc {
     fn log_meta(&self, cfg: &RunConfig) -> Vec<(String, String)> {
         vec![
             ("algorithm".into(), format!("fedcomloc-{}", self.variant.name())),
-            ("compressor".into(), self.compressor.name()),
+            ("compressor".into(), self.spec.name()),
             ("p".into(), cfg.p.to_string()),
             ("gamma".into(), cfg.gamma.to_string()),
             ("alpha".into(), cfg.dirichlet_alpha.to_string()),
@@ -119,6 +142,13 @@ impl FedAlgorithm for FedComLoc {
     }
 
     fn setup(&mut self, fed: &mut Federation, cfg: &RunConfig) {
+        // Legacy shim: the variant's inline compressor becomes the
+        // directional pipeline it historically drove.
+        match self.variant {
+            Variant::Com => fed.install_uplink_shim(&self.spec, cfg),
+            Variant::Global => fed.install_downlink_shim(&self.spec, cfg),
+            Variant::Local => {}
+        }
         self.coin_rng = fed.rng.derive(0x5EED_C019);
         self.server_rng = fed.rng.derive(0x5E2E_5EED);
         self.p_over_gamma = (cfg.p / cfg.gamma as f64) as f32;
@@ -132,7 +162,7 @@ impl FedAlgorithm for FedComLoc {
         // ---- downlink: broadcast current model to the sampled set ----
         let msg = match &self.downlink_msg {
             Some(m) => {
-                // The retained -Global payload is rebroadcast as this
+                // The retained compressed payload is rebroadcast as this
                 // round's message, so re-stamp the header.
                 let mut m = m.clone();
                 m.header.round = ctx.round as u32;
@@ -148,7 +178,6 @@ impl FedAlgorithm for FedComLoc {
         let gamma = cfg.gamma;
         let round = ctx.round;
         let (variant, local_density) = (self.variant, self.local_density);
-        let compressor = self.compressor.as_ref();
         let d = x.len();
         let results: Vec<Segment> = ctx.map_clients_ws(&participants, |ci, state, ws| {
             // The local iterate x_i lives in the worker's workspace and
@@ -173,15 +202,9 @@ impl FedAlgorithm for FedComLoc {
                 std::mem::swap(&mut xi, &mut ws.step);
                 loss_sum += loss as f64;
             }
-            // ---- uplink: transmit x̂ (compressed for -Com) ----
-            let upload = match variant {
-                Variant::Com => Message::from_compressed(
-                    round,
-                    ci as u32,
-                    compressor.compress(&xi[..d], &mut state.rng),
-                ),
-                _ => Message::dense(round, ci as u32, &xi[..d]),
-            };
+            // ---- uplink: transmit x̂ through the client's pipeline ----
+            let upload =
+                Message::through(round, ci as u32, &xi[..d], &mut state.up, &mut state.rng);
             ws.put_xi(xi);
             Segment {
                 upload,
@@ -213,10 +236,11 @@ impl FedAlgorithm for FedComLoc {
             // ---- aggregate (Algorithm 1 line 10) ----
             let rows: Vec<&[f32]> = self.delivery[..used].iter().map(|e| e.as_slice()).collect();
             crate::tensor::mean_into(&rows, &mut ctx.fed.x);
-            // -Global: compress the aggregated model server-side (lines
-            // 11–12); subsequent downlinks ship the compressed form.
-            if self.variant == Variant::Global {
-                let enc = self.compressor.compress(&ctx.fed.x, &mut self.server_rng);
+            // Compress the aggregated model server-side (lines 11–12) when
+            // a downlink pipeline is configured; subsequent downlinks ship
+            // the compressed form and the h-refresh sees the compressed x.
+            if !ctx.fed.downlink.is_identity() {
+                let enc = ctx.fed.downlink.compress(&ctx.fed.x, round, &mut self.server_rng);
                 let global = Message::from_compressed(round, SERVER, enc);
                 ctx.fed.x = global.to_dense();
                 self.downlink_msg = Some(global);
@@ -241,20 +265,6 @@ impl FedAlgorithm for FedComLoc {
     }
 }
 
-/// Density of a TopK(-like) compressor for the -Local masked step; None for
-/// quantizers (the -Local variant is sparsity-based in the paper).
-fn compressor_density(c: &dyn Compressor) -> Option<f64> {
-    let name = c.name();
-    if let Some(rest) = name.strip_prefix("topk(") {
-        rest.split(')')
-            .next()
-            .and_then(|v| v.parse::<f64>().ok())
-            .filter(|d| (0.0..=1.0).contains(d))
-    } else {
-        None
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -273,13 +283,30 @@ mod tests {
     }
 
     #[test]
-    fn density_extraction() {
-        use crate::compress::{parse_spec, TopK};
+    fn density_extraction_accepts_only_pure_topk() {
         assert_eq!(
-            compressor_density(&TopK::with_density(0.25)),
+            local_mask_density(&CompressorSpec::parse("topk:0.25").unwrap()),
             Some(0.25)
         );
-        let q = parse_spec("q:8").unwrap();
-        assert_eq!(compressor_density(q.as_ref()), None);
+        // Exact, not display-rounded: 0.125 must not become 0.12, and a
+        // sub-percent density must not collapse to 0.00.
+        assert_eq!(
+            local_mask_density(&CompressorSpec::parse("topk:0.125").unwrap()),
+            Some(0.125)
+        );
+        assert_eq!(
+            local_mask_density(&CompressorSpec::parse("topk:0.001").unwrap()),
+            Some(0.001)
+        );
+        // Everything else — quantizers, chains (whose trailing stages the
+        // -Local variant would silently drop), EF, schedules — yields None
+        // and is rejected by the registry builder for -Local.
+        for spec in ["q:8", "topk:0.5|q8", "ef(topk:0.1)", "randk:0.2"] {
+            assert_eq!(
+                local_mask_density(&CompressorSpec::parse(spec).unwrap()),
+                None,
+                "{spec}"
+            );
+        }
     }
 }

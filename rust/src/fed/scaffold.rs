@@ -8,24 +8,35 @@
 //!     c_i⁺ = c_i − c + (x_server − x_i)/(E·γ)
 //!     uplink Δx = x_i − x_server and Δc = c_i⁺ − c_i
 //!     server: x += mean(Δx);  c += (|S|/n)·mean(Δc)
-//! Communication is uncompressed both ways, and each direction carries TWO
-//! d-vector [`Message`]s per client — Scaffold's well-known 2× communication
-//! overhead, which the bits-axis plots make visible.
+//! Each direction carries TWO d-vector [`Message`]s per client — Scaffold's
+//! well-known 2× communication overhead, which the bits-axis plots make
+//! visible. By default both are dense; configured
+//! `compress_up`/`compress_down` pipelines apply to *both* vectors of the
+//! respective direction (x then c downlink; Δx then Δc uplink, a fixed
+//! order). Stateful `ef(...)` pipelines are rejected at setup: one
+//! residual memory cannot serve two interleaved streams (see
+//! [`crate::compress::Pipeline::has_state`]).
 
 use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::tensor;
+use crate::util::rng::Rng;
 
 /// Scaffold with option-II control-variate updates (see module docs).
 pub struct Scaffold {
     c_global: Vec<f32>,
+    /// Server-side randomness for a stochastic downlink codec.
+    server_rng: Rng,
 }
 
 impl Scaffold {
     /// A fresh Scaffold (c and every c_i start at zero in `setup`).
     pub fn new() -> Scaffold {
-        Scaffold { c_global: Vec::new() }
+        Scaffold {
+            c_global: Vec::new(),
+            server_rng: Rng::seed_from_u64(0),
+        }
     }
 }
 
@@ -53,8 +64,19 @@ impl FedAlgorithm for Scaffold {
         ]
     }
 
-    fn setup(&mut self, fed: &mut Federation, _cfg: &RunConfig) {
+    fn setup(&mut self, fed: &mut Federation, cfg: &RunConfig) {
+        // Scaffold multiplexes two logical streams over each link (x/c
+        // down, Δx/Δc up), but a stateful pipeline owns exactly one
+        // residual memory per link — error feedback would bleed model mass
+        // into the control-variate stream and vice versa. Reject rather
+        // than silently corrupt (stateless chains/schedules are fine).
+        assert!(
+            !cfg.uplink_spec().has_state() && !cfg.downlink_spec().has_state(),
+            "scaffold ships two vectors per direction; stateful ef(...) pipelines \
+             need per-stream memory — use a stateless compress_up/compress_down spec"
+        );
         self.c_global = vec![0.0f32; fed.x.len()];
+        self.server_rng = fed.rng.derive(0x5CAF_F01D);
     }
 
     fn round(&mut self, ctx: &mut RoundCtx<'_>) -> RoundOutcome {
@@ -62,14 +84,27 @@ impl FedAlgorithm for Scaffold {
         let round = ctx.round;
         let inv_e_gamma = 1.0 / (cfg.local_steps as f32 * cfg.gamma);
 
-        // Downlink: x and c (2 dense vectors). The transport pins one
-        // availability decision per client per round, so both broadcasts
-        // see the same participant set; both target the full sampled set so
-        // server egress is charged 2x per sampled client even for clients
-        // that turn out to be unreachable.
-        let x_msg = Message::dense(round, SERVER, &ctx.fed.x);
+        // Downlink: x and c (2 vectors, through the downlink pipeline in a
+        // fixed x-then-c order). The transport pins one availability
+        // decision per client per round, so both broadcasts see the same
+        // participant set; both target the full sampled set so server
+        // egress is charged 2x per sampled client even for clients that
+        // turn out to be unreachable.
+        let x_msg = Message::through(
+            round,
+            SERVER,
+            &ctx.fed.x,
+            &mut ctx.fed.downlink,
+            &mut self.server_rng,
+        );
         let participants = ctx.transport.broadcast(&ctx.sampled, &x_msg);
-        let c_msg = Message::dense(round, SERVER, &self.c_global);
+        let c_msg = Message::through(
+            round,
+            SERVER,
+            &self.c_global,
+            &mut ctx.fed.downlink,
+            &mut self.server_rng,
+        );
         ctx.transport.broadcast(&ctx.sampled, &c_msg);
         let x = x_msg.to_dense();
         let c_ref = c_msg.to_dense();
@@ -105,12 +140,12 @@ impl FedAlgorithm for Scaffold {
                 let mut dc = vec![0.0f32; d];
                 tensor::sub(&c_new, &state.h, &mut dc);
                 ws.put_xi(xi);
-                (
-                    Message::dense(round, ci as u32, &dx),
-                    Message::dense(round, ci as u32, &dc),
-                    c_new,
-                    loss_sum,
-                )
+                // Uplink pipeline, fixed Δx-then-Δc order per client.
+                let dx_msg =
+                    Message::through(round, ci as u32, &dx, &mut state.up, &mut state.rng);
+                let dc_msg =
+                    Message::through(round, ci as u32, &dc, &mut state.up, &mut state.rng);
+                (dx_msg, dc_msg, c_new, loss_sum)
             });
 
         let loss_sum: f64 = results.iter().map(|(_, _, _, l)| l).sum();

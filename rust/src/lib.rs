@@ -13,9 +13,12 @@
 //!   ([`compress`]), Dirichlet-partitioned data ([`data`]), metrics
 //!   ([`metrics`]) and the experiment registry ([`experiments`]).
 //!   Algorithms ([`fed::AlgorithmSpec`]), models ([`model::ModelSpec`]
-//!   over the composable [`model::Layer`] API), and datasets
-//!   ([`data::DatasetSpec`]) are all string-keyed open registries.
-//!   ARCHITECTURE.md documents the fed-layer APIs and both substrates.
+//!   over the composable [`model::Layer`] API), datasets
+//!   ([`data::DatasetSpec`]), and compression pipelines
+//!   ([`compress::CompressorSpec`] — chains, error feedback, schedules,
+//!   per-direction via `compress_up`/`compress_down`) are all string-keyed
+//!   open registries. ARCHITECTURE.md documents the fed-layer APIs and
+//!   both substrates.
 //! * **L2 — `python/compile`**: JAX models (MLP/CNN over flat parameter
 //!   vectors) AOT-lowered to HLO text, executed via [`runtime`] (PJRT).
 //! * **L1 — `python/compile/kernels`**: Pallas kernels (fused dense layer,

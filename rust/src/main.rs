@@ -6,6 +6,7 @@
 //!   experiment        regenerate paper tables/figures (sweep-preset aliases)
 //!   list-experiments  show the experiment registry
 //!   list-algorithms   show the algorithm registry (spec strings for --algo)
+//!   list-compressors  show the compressor registry (specs for --compress-up/-down)
 //!   list-models       show the model registry (spec strings for --model)
 //!   list-datasets     show the dataset registry (spec strings for --dataset)
 //!   data-stats        Figure 11 class-distribution report
@@ -32,6 +33,7 @@ fn main() {
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("list-experiments") => cmd_list(),
         Some("list-algorithms") => cmd_list_algorithms(),
+        Some("list-compressors") => cmd_list_compressors(),
         Some("list-models") => cmd_list_models(&argv[1..]),
         Some("list-datasets") => cmd_list_datasets(&argv[1..]),
         Some("data-stats") => cmd_data_stats(&argv[1..]),
@@ -96,6 +98,7 @@ SUBCOMMANDS:
     experiment        regenerate paper tables/figures (sweep-preset aliases)
     list-experiments  show the experiment registry
     list-algorithms   show the algorithm registry (spec strings for --algo)
+    list-compressors  show the compressor registry (specs for --compress-up/-down)
     list-models       show the model registry (spec strings for --model)
     list-datasets     show the dataset registry (spec strings for --dataset)
     data-stats        Figure 11 class-distribution report
@@ -117,8 +120,18 @@ fn train_command() -> Command {
         .opt_default(
             "compress",
             "SPEC",
-            "compressor: none | topk:<density> | q:<bits> | topk:<d>+q:<b>",
+            "compressor for the --algo shim: none | topk:<d> | q<b> | a|b chains (see list-compressors)",
             "topk:0.3",
+        )
+        .opt(
+            "compress-up",
+            "SPEC",
+            "uplink pipeline: none | topk:<d> | randk:<d> | q<b> | natural | a|b | ef(...) | sched:...",
+        )
+        .opt(
+            "compress-down",
+            "SPEC",
+            "downlink (broadcast) pipeline, same grammar as --compress-up",
         )
         .opt_default(
             "transport",
@@ -178,14 +191,31 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     // must carry its compressor inline (an explicit --compress alongside
     // one is an error rather than silently ignored).
     let explicit_compress = args.get("compress");
-    let compress = explicit_compress.unwrap_or("topk:0.3");
+    // The historic `--compress topk:0.3` default is suppressed only when a
+    // directional flag configures the *same link the default would shim
+    // into* (uplink for -Com/sparsefedavg, downlink for -Global) — a
+    // silently-injected default there would conflict with the explicit
+    // pipeline. -Local's compressor is the in-graph mask, not a wire
+    // codec, so the directional flags never suppress it, and the opposite
+    // direction's flag keeps the documented default for the shimmed one.
+    let up_flag = args.get("compress-up").is_some();
+    let down_flag = args.get("compress-down").is_some();
+    let default_for = |suppressed: bool| if suppressed { "none" } else { "topk:0.3" };
     let spec_str = match args.get("algo").unwrap_or("fedcomloc") {
         "fedcomloc" => {
             let variant = Variant::parse(args.get("variant").unwrap_or("com"))
                 .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
+            let suppressed = match variant {
+                Variant::Com => up_flag,
+                Variant::Global => down_flag,
+                Variant::Local => false,
+            };
+            let compress = explicit_compress.unwrap_or(default_for(suppressed));
             format!("fedcomloc-{}:{compress}", variant.name())
         }
-        "sparsefedavg" => format!("sparsefedavg:{compress}"),
+        "sparsefedavg" => {
+            format!("sparsefedavg:{}", explicit_compress.unwrap_or(default_for(up_flag)))
+        }
         other => match explicit_compress {
             Some(c) if other.starts_with("fedcomloc") && !other.contains(':') => {
                 format!("{other}:{c}")
@@ -227,6 +257,12 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         cfg.dirichlet_alpha,
         cfg.gamma
     );
+    if cfg.compress_up != "none" || cfg.compress_down != "none" {
+        println!(
+            "compression pipelines: uplink {} / downlink {}",
+            cfg.compress_up, cfg.compress_down
+        );
+    }
     let t0 = std::time::Instant::now();
     let log = run_with_transport(&cfg, trainer, &spec, transport.as_mut());
     let elapsed = t0.elapsed();
@@ -427,6 +463,26 @@ fn cmd_list_algorithms() -> anyhow::Result<()> {
         println!("{:<18}{:<46}{}", fam.key, arg, fam.summary);
     }
     println!("\nSpec grammar: <key>[:<argument>], e.g. fedcomloc-com:topk:0.25+q:4");
+    Ok(())
+}
+
+fn cmd_list_compressors() -> anyhow::Result<()> {
+    println!("{:<10}{:<36}{}", "key", "argument", "description");
+    for fam in fedcomloc::compress::compressor_registry() {
+        let arg = if fam.arg_help.is_empty() { "-" } else { fam.arg_help };
+        println!("{:<10}{:<36}{}", fam.key, arg, fam.summary);
+    }
+    println!(
+        "\nCombinators (compose freely):\n\
+         \x20   a|b            chain: apply a then b; a sparsifier|quantizer pair fuses\n\
+         \x20                  into the sparse-quantized wire layout (topk:0.1|q8)\n\
+         \x20   ef(<spec>)     error feedback: per-link residual memory (EF14-style)\n\
+         \x20   sched:<f>:<from>..<to>[@linear|cosine]\n\
+         \x20                  round-indexed schedule over topk/randk density or q bits\n\
+         \nPass via --compress-up / --compress-down (train), the compress_up /\n\
+         compress_down [run]-table keys, or the same-named sweep axes; legacy\n\
+         '--algo fedcomloc-com:<spec>' embeds the uplink spec inline."
+    );
     Ok(())
 }
 

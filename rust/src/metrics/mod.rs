@@ -17,8 +17,9 @@
 //!   test_accuracy, uplink_bits, downlink_bits, cum_uplink_bits,
 //!   cum_downlink_bits, total_cost, wall_secs, sim_secs, cum_sim_secs,
 //!   dropped_clients` (test columns empty between evaluations).
-//! * **Sweep sink, schema v1** (`sweep::sink`, written by `fedcomloc sweep
-//!   run`): one summary-CSV row per *run* plus one JSONL object per round,
+//! * **Sweep sink, result schema v2** (`sweep::sink`, written by
+//!   `fedcomloc sweep run`): one summary-CSV row per *run* plus one JSONL
+//!   object per round,
 //!   both versioned with an explicit `schema` field and deliberately
 //!   excluding wall-clock so files are byte-reproducible; the exact field
 //!   lists are documented in `sweep::sink` and EXPERIMENTS.md and pinned by

@@ -1,10 +1,11 @@
 //! The declarative sweep engine: the paper's entire empirical section as
 //! data, not code.
 //!
-//! A sweep is a TOML file ([`SweepSpec`]) that lists values over the three
-//! string-keyed registries (`--algo`, `--model`, `--dataset`), the
-//! transport, and scalar grids (rounds, local iterations, Dirichlet α,
-//! stepsize, communication probability, seeds). The engine expands the
+//! A sweep is a TOML file ([`SweepSpec`]) that lists values over the four
+//! string-keyed registries (`--algo`, `--model`, `--dataset`, and the
+//! `compress_up`/`compress_down` pipeline specs), the transport, and
+//! scalar grids (rounds, local iterations, Dirichlet α, stepsize,
+//! communication probability, seeds). The engine expands the
 //! cross-product into validated [`RunUnit`]s ([`spec`]), executes them in
 //! parallel on the shared worker pool — one run per worker, each run
 //! seeding its own RNG streams so results are order-independent and

@@ -16,7 +16,7 @@ pub struct SweepPreset {
     pub toml: &'static str,
 }
 
-static SWEEP_PRESETS: [SweepPreset; 9] = [
+static SWEEP_PRESETS: [SweepPreset; 10] = [
     SweepPreset {
         name: "sparsity",
         paper: "Table 1, Figure 1",
@@ -56,6 +56,11 @@ static SWEEP_PRESETS: [SweepPreset; 9] = [
         name: "double",
         paper: "Figure 16",
         toml: include_str!("../../../experiments/double.toml"),
+    },
+    SweepPreset {
+        name: "bidir",
+        paper: "Figure 16 (extended)",
+        toml: include_str!("../../../experiments/bidir.toml"),
     },
     SweepPreset {
         name: "smoke",
@@ -119,6 +124,7 @@ mod tests {
         assert_eq!(runs("baselines"), 1 + 3 + 4, "fig9 panels");
         assert_eq!(runs("variants"), 9, "3 densities x 3 variants");
         assert_eq!(runs("double"), 5, "fig16 cases");
+        assert_eq!(runs("bidir"), 6 + 4, "up curve + asymmetric grid");
         assert_eq!(runs("smoke"), 2);
     }
 }

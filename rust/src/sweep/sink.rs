@@ -10,15 +10,21 @@
 //!   rounds/<run_id>.jsonl    one JSON object per communication round
 //! ```
 //!
-//! # Summary CSV schema (v1)
+//! # Summary CSV schema (v2)
 //!
 //! ```text
 //! schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,
 //! local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,
-//! batch_size,eval_batch,eval_every,tau,data_dir,best_accuracy,
-//! final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,
-//! total_cost,total_sim_secs,dropped_clients
+//! batch_size,eval_batch,eval_every,tau,data_dir,compress_up,
+//! compress_down,best_accuracy,final_accuracy,final_train_loss,
+//! total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,
+//! dropped_clients
 //! ```
+//!
+//! v2 appended the `compress_up`/`compress_down` columns to the
+//! configuration prefix (they are result-affecting); the sweep-*file*
+//! schema is versioned separately and stayed at
+//! [`crate::sweep::spec::SCHEMA_VERSION`] = 1.
 //!
 //! The columns through `data_dir` are the run's complete *result-affecting*
 //! configuration — every `RunConfig` field except `threads` (results are
@@ -46,15 +52,20 @@
 //! break bit-reproducibility); per-run wall time goes to the log output.
 //! `tests/sweep_engine.rs` pins both schemas golden.
 
-use super::spec::{RunUnit, SCHEMA_VERSION};
+use super::spec::RunUnit;
 use crate::metrics::{MetricsLog, RoundRecord};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-/// The pinned v1 summary header (also the golden-test reference).
-pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients";
+/// Version of the *result* schema (summary CSV + round JSONL): stamped
+/// into every row/line and matched by `--resume`, so results written under
+/// an older schema are never silently reused.
+pub const RESULT_SCHEMA: i64 = 2;
+
+/// The pinned v2 summary header (also the golden-test reference).
+pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,compress_up,compress_down,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients";
 
 /// `<out>/<sweep>/summary.csv`.
 pub fn summary_path(sweep_dir: &Path) -> PathBuf {
@@ -81,8 +92,8 @@ fn opt_f64(v: Option<f64>) -> String {
 pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
     let cfg = &unit.cfg;
     format!(
-        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir}",
-        schema = SCHEMA_VERSION,
+        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir},{compress_up},{compress_down}",
+        schema = RESULT_SCHEMA,
         id = unit.id,
         algo = unit.algo,
         dataset = cfg.dataset.key(),
@@ -103,6 +114,8 @@ pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
         eval_every = cfg.eval_every,
         tau = cfg.tau,
         data_dir = cfg.data_dir.display(),
+        compress_up = cfg.compress_up,
+        compress_down = cfg.compress_down,
     )
 }
 
@@ -126,7 +139,7 @@ pub fn summary_row(sweep: &str, trainer: &str, unit: &RunUnit, log: &MetricsLog)
 /// Render one round as a compact JSONL line (no trailing newline).
 pub fn round_line(run_id: &str, r: &RoundRecord) -> String {
     let mut o = Json::obj();
-    o.set("schema", (SCHEMA_VERSION as u64).into());
+    o.set("schema", (RESULT_SCHEMA as u64).into());
     o.set("run", run_id.into());
     o.set("round", r.round.into());
     o.set("local_steps", r.local_steps.into());
@@ -177,7 +190,7 @@ pub fn read_summary_rows(path: &Path) -> BTreeMap<String, String> {
     let Ok(text) = std::fs::read_to_string(path) else {
         return rows;
     };
-    let want_schema = SCHEMA_VERSION.to_string();
+    let want_schema = RESULT_SCHEMA.to_string();
     for line in text.lines().skip(1) {
         let mut fields = line.split(',');
         let schema_ok = fields.next() == Some(want_schema.as_str());
@@ -230,7 +243,7 @@ mod tests {
         assert_eq!(
             line,
             "{\"cum_downlink_bits\":200,\"cum_uplink_bits\":100,\"downlink_bits\":200,\
-             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":1,\
+             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":2,\
              \"total_cost\":1.07,\"train_loss\":0.5,\"uplink_bits\":100}"
         );
         let eval = round_line("r000-x", &record(1));
@@ -246,8 +259,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = summary_path(&dir);
         let rows = vec![
-            format!("{SCHEMA_VERSION},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,0.8,0.7,0.3,1,2,3,0,0"),
-            format!("{SCHEMA_VERSION},r001-b,s,scaffold,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,,,,1,2,3,0,0"),
+            format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,0.8,0.7,0.3,1,2,3,0,0"),
+            format!("{RESULT_SCHEMA},r001-b,s,scaffold,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,q8,none,,,,1,2,3,0,0"),
         ];
         write_summary(&path, &rows).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
@@ -255,8 +268,8 @@ mod tests {
         let back = read_summary_rows(&path);
         assert_eq!(back.len(), 2);
         assert_eq!(back.get("r000-a"), Some(&rows[0]));
-        // Foreign-schema rows are ignored.
-        write_summary(&path, &["9,r009-z,s,x,m,m,t,native,1,1,0,0,0,0,1,1,1,1,1,1,1,0,d,,,,0,0,0,0,0".to_string()])
+        // Foreign-schema rows (e.g. pre-compression v1 results) are ignored.
+        write_summary(&path, &["1,r009-z,s,x,m,m,t,native,1,1,0,0,0,0,1,1,1,1,1,1,1,0,d,,,,0,0,0,0,0".to_string()])
             .unwrap();
         assert!(read_summary_rows(&path).is_empty());
         let _ = std::fs::remove_dir_all(&dir);

@@ -23,28 +23,34 @@
 //! ```
 //!
 //! Axis keys (each accepts a scalar or a list; a missing axis inherits the
-//! base value): `algos`, `models`, `datasets`, `transports` over the
-//! string-keyed registries, plus scalar grids `rounds`, `local_iters`,
-//! `alphas`, `gammas`, `ps`, `seeds`. Any *other* key inside a `[[grid]]`
-//! block is a fixed per-block override routed through
-//! [`crate::config::apply_kv`], exactly like a `[run]`-table key.
+//! base value): `algos`, `models`, `datasets`, `transports`, `compress_up`,
+//! `compress_down` over the string-keyed registries, plus scalar grids
+//! `rounds`, `local_iters`, `alphas`, `gammas`, `ps`, `seeds`. Any *other*
+//! key inside a `[[grid]]` block is a fixed per-block override routed
+//! through [`crate::config::apply_kv`], exactly like a `[run]`-table key.
 //!
 //! Expansion order is canonical and documented: grid blocks in file order;
-//! within a block, nested loops over dataset → model → transport → algo →
-//! rounds → local_iters → alpha → gamma → p → seed. Every expanded unit is
-//! fully validated (registry specs resolve, model/dataset dims agree)
-//! before anything runs, so a typo fails the whole sweep up front instead
-//! of panicking inside a worker thread.
+//! within a block, nested loops over dataset → model → transport →
+//! compress_up → compress_down → algo → rounds → local_iters → alpha →
+//! gamma → p → seed. Every expanded unit is fully validated (registry
+//! specs resolve, model/dataset dims agree, directional pipelines don't
+//! collide with algorithm-embedded compressors) before anything runs, so a
+//! typo fails the whole sweep up front instead of panicking inside a
+//! worker thread.
 
+use crate::compress::CompressorSpec;
 use crate::config::{self, presets};
 use crate::data::DatasetSpec;
 use crate::fed::transport::parse_transport;
-use crate::fed::{AlgorithmSpec, RunConfig};
+use crate::fed::{embedded_wire_specs, AlgorithmSpec, RunConfig};
 use crate::model::ModelSpec;
 use crate::util::toml::{self, TomlTable, TomlValue};
 
-/// Version of the sweep-file schema this crate reads and of the result
-/// schema it writes (stamped into every summary row and JSONL line).
+/// Version of the sweep-*file* schema this crate reads (`schema = 1` in a
+/// sweep TOML). The *result* schema the sink writes is versioned
+/// separately — see [`crate::sweep::sink::RESULT_SCHEMA`] (bumped to 2
+/// when the summary gained `compress_up`/`compress_down` columns; sweep
+/// files were unaffected).
 pub const SCHEMA_VERSION: i64 = 1;
 
 /// One `[[grid]]` block: registry axes plus scalar grids, with optional
@@ -65,6 +71,11 @@ pub struct GridBlock {
     pub datasets: Vec<String>,
     /// Transport specs (`inproc`, `simnet[:...]`).
     pub transports: Vec<String>,
+    /// Uplink compression pipeline specs
+    /// ([`crate::compress::CompressorSpec`] grammar).
+    pub compress_up: Vec<String>,
+    /// Downlink compression pipeline specs.
+    pub compress_down: Vec<String>,
     /// Communication-round counts.
     pub rounds: Vec<usize>,
     /// Local iterations per round (baseline algorithms' `local_steps`).
@@ -190,6 +201,8 @@ impl GridBlock {
                 "models" => block.models = list_of_strings(key, value)?,
                 "datasets" => block.datasets = list_of_strings(key, value)?,
                 "transports" => block.transports = list_of_strings(key, value)?,
+                "compress_up" => block.compress_up = list_of_strings(key, value)?,
+                "compress_down" => block.compress_down = list_of_strings(key, value)?,
                 "rounds" => block.rounds = list_of_usize(key, value)?,
                 "local_iters" => block.local_iters = list_of_usize(key, value)?,
                 "alphas" => block.alphas = list_of_f64(key, value)?,
@@ -215,6 +228,8 @@ impl GridBlock {
         axis(self.datasets.len())
             * axis(self.models.len())
             * axis(self.transports.len())
+            * axis(self.compress_up.len())
+            * axis(self.compress_down.len())
             * self.algos.len()
             * axis(self.rounds.len())
             * axis(self.local_iters.len())
@@ -410,6 +425,20 @@ impl SweepSpec {
         } else {
             block.transports.iter().map(|t| Some(t.clone())).collect()
         };
+        let compress_axis = |axis: &[String], key: &str| -> Result<Vec<Option<String>>, String> {
+            if axis.is_empty() {
+                return Ok(vec![None]);
+            }
+            axis.iter()
+                .map(|s| {
+                    CompressorSpec::parse(s)
+                        .map(|c| Some(c.key().to_string()))
+                        .map_err(|e| format!("{key} '{s}': {e}"))
+                })
+                .collect()
+        };
+        let compress_up = compress_axis(&block.compress_up, "compress_up")?;
+        let compress_down = compress_axis(&block.compress_down, "compress_down")?;
 
         let opt =
             |xs: &[usize]| -> Vec<Option<usize>> {
@@ -437,50 +466,60 @@ impl SweepSpec {
         for dataset in &datasets {
             for model in &models {
                 for transport in &transports {
-                    for algo in &block.algos {
-                        for &r in &rounds {
-                            for &li in &local_iters {
-                                for &alpha in &alphas {
-                                    for &gamma in &gammas {
-                                        for &p in &ps {
-                                            for &seed in &seeds {
-                                                let mut cfg = base.clone();
-                                                if let Some(ds) = dataset {
-                                                    cfg.dataset = ds.clone();
+                    for up in &compress_up {
+                        for down in &compress_down {
+                            for algo in &block.algos {
+                                for &r in &rounds {
+                                    for &li in &local_iters {
+                                        for &alpha in &alphas {
+                                            for &gamma in &gammas {
+                                                for &p in &ps {
+                                                    for &seed in &seeds {
+                                                        let mut cfg = base.clone();
+                                                        if let Some(ds) = dataset {
+                                                            cfg.dataset = ds.clone();
+                                                        }
+                                                        if let Some(m) = model {
+                                                            cfg.model = m.clone();
+                                                        }
+                                                        if let Some(u) = up {
+                                                            cfg.compress_up = u.clone();
+                                                        }
+                                                        if let Some(dn) = down {
+                                                            cfg.compress_down = dn.clone();
+                                                        }
+                                                        if let Some(r) = r {
+                                                            cfg.rounds = r;
+                                                        }
+                                                        if let Some(li) = li {
+                                                            cfg.local_steps = li;
+                                                        }
+                                                        if let Some(a) = alpha {
+                                                            cfg.dirichlet_alpha = a;
+                                                        }
+                                                        if let Some(g) = gamma {
+                                                            cfg.gamma = g as f32;
+                                                        }
+                                                        if let Some(p) = p {
+                                                            cfg.p = p;
+                                                        }
+                                                        if let Some(s) = seed {
+                                                            cfg.seed = s;
+                                                        }
+                                                        let transport_spec = transport
+                                                            .clone()
+                                                            .unwrap_or_else(|| "inproc".to_string());
+                                                        validate_unit(&cfg, &transport_spec, algo)?;
+                                                        let index = units.len();
+                                                        units.push(RunUnit {
+                                                            index,
+                                                            id: unit_id(index, algo, &cfg),
+                                                            algo: algo.clone(),
+                                                            transport: transport_spec,
+                                                            cfg,
+                                                        });
+                                                    }
                                                 }
-                                                if let Some(m) = model {
-                                                    cfg.model = m.clone();
-                                                }
-                                                if let Some(r) = r {
-                                                    cfg.rounds = r;
-                                                }
-                                                if let Some(li) = li {
-                                                    cfg.local_steps = li;
-                                                }
-                                                if let Some(a) = alpha {
-                                                    cfg.dirichlet_alpha = a;
-                                                }
-                                                if let Some(g) = gamma {
-                                                    cfg.gamma = g as f32;
-                                                }
-                                                if let Some(p) = p {
-                                                    cfg.p = p;
-                                                }
-                                                if let Some(s) = seed {
-                                                    cfg.seed = s;
-                                                }
-                                                let transport_spec = transport
-                                                    .clone()
-                                                    .unwrap_or_else(|| "inproc".to_string());
-                                                validate_unit(&cfg, &transport_spec)?;
-                                                let index = units.len();
-                                                units.push(RunUnit {
-                                                    index,
-                                                    id: format!("r{index:03}-{}", sanitize(algo)),
-                                                    algo: algo.clone(),
-                                                    transport: transport_spec,
-                                                    cfg,
-                                                });
                                             }
                                         }
                                     }
@@ -495,11 +534,60 @@ impl SweepSpec {
     }
 }
 
+/// Stable, filesystem-safe run id. Legacy shape (`r<idx>-<algo>`) when no
+/// directional pipeline is set; runs that differ only in
+/// `compress_up`/`compress_down` gain `-u-<spec>` / `-d-<spec>` suffixes
+/// so ids stay unique (they key resume and the JSONL files).
+fn unit_id(index: usize, algo: &str, cfg: &RunConfig) -> String {
+    let mut id = format!("r{index:03}-{}", sanitize(algo));
+    if cfg.compress_up != "none" {
+        id.push_str(&format!("-u-{}", sanitize(&cfg.compress_up)));
+    }
+    if cfg.compress_down != "none" {
+        id.push_str(&format!("-d-{}", sanitize(&cfg.compress_down)));
+    }
+    id
+}
+
 /// The model/dataset/topology agreement checks `Federation::new` asserts,
 /// surfaced as errors at expansion time so a bad combination fails the
 /// sweep up front instead of panicking in a worker thread.
-fn validate_unit(cfg: &RunConfig, transport: &str) -> Result<(), String> {
+fn validate_unit(cfg: &RunConfig, transport: &str, algo: &str) -> Result<(), String> {
     parse_transport(transport, cfg.n_clients, cfg.seed)?;
+    let up = CompressorSpec::parse(&cfg.compress_up)
+        .map_err(|e| format!("compress_up '{}': {e}", cfg.compress_up))?;
+    let down = CompressorSpec::parse(&cfg.compress_down)
+        .map_err(|e| format!("compress_down '{}': {e}", cfg.compress_down))?;
+    // The same conflict `Federation::install_*_shim` panics on, as an
+    // up-front error: an algorithm spec with an inline wire compressor
+    // must not collide with an explicit directional pipeline.
+    let (embed_up, embed_down) = embedded_wire_specs(algo)?;
+    if let (Some(e), false) = (&embed_up, up.is_identity()) {
+        return Err(format!(
+            "uplink compressor conflict: algo '{algo}' embeds '{}' but compress_up='{}' is \
+             also set; use a bare algo key with compress_up, or drop one",
+            e.key(),
+            cfg.compress_up
+        ));
+    }
+    if let (Some(e), false) = (&embed_down, down.is_identity()) {
+        return Err(format!(
+            "downlink compressor conflict: algo '{algo}' embeds '{}' but compress_down='{}' \
+             is also set; use a bare algo key with compress_down, or drop one",
+            e.key(),
+            cfg.compress_down
+        ));
+    }
+    // Multi-stream algorithms (Scaffold's x/c, Δx/Δc pairs) reject
+    // stateful pipelines: one ef(...) residual cannot serve interleaved
+    // streams (the driver would also panic at setup — fail up front here).
+    if crate::fed::multiplexes_streams(algo)? && (up.has_state() || down.has_state()) {
+        return Err(format!(
+            "algo '{algo}' ships multiple vectors per link; stateful ef(...) pipelines \
+             are unsupported there (compress_up='{}', compress_down='{}')",
+            cfg.compress_up, cfg.compress_down
+        ));
+    }
     if cfg.clients_per_round > cfg.n_clients {
         return Err(format!(
             "clients_per_round ({}) exceeds n_clients ({})",
@@ -650,6 +738,84 @@ rounds = 3
                 .unwrap_err();
             assert!(err.contains(needle), "toml: {toml}\nerr: {err}");
         }
+    }
+
+    #[test]
+    fn compression_axes_grid_and_suffix_ids() {
+        let spec = SweepSpec::parse_str(
+            "name = \"c\"\n[[grid]]\nalgos = [\"fedcomloc-com\"]\n\
+             compress_up = [\"none\", \"topk:0.1\", \"q8\", \"topk:0.1|q8\", \"ef(topk:0.1)\", \"sched:topk:0.3..0.05@cosine\"]\n\
+             compress_down = [\"none\", \"q8\"]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.grids[0].len(), 12);
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 12);
+        // Canonical nesting: up outer, down inner.
+        assert_eq!(units[0].cfg.compress_up, "none");
+        assert_eq!(units[0].cfg.compress_down, "none");
+        assert_eq!(units[1].cfg.compress_down, "q8");
+        assert_eq!(units[2].cfg.compress_up, "topk:0.1");
+        // Ids stay unique and legacy-shaped when no pipeline is set.
+        assert_eq!(units[0].id, "r000-fedcomloc-com");
+        assert_eq!(units[1].id, "r001-fedcomloc-com-d-q8");
+        assert_eq!(units[2].id, "r002-fedcomloc-com-u-topk_0.1");
+        let mut ids: Vec<_> = units.iter().map(|u| u.id.clone()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 12);
+    }
+
+    #[test]
+    fn compression_conflicts_and_bad_specs_fail_expansion() {
+        for (toml, needle) in [
+            // Axis colliding with an algorithm-embedded uplink compressor.
+            (
+                "name = \"c\"\n[[grid]]\nalgos = [\"fedcomloc-com:topk:0.3\"]\ncompress_up = [\"q8\"]\n",
+                "uplink compressor conflict",
+            ),
+            (
+                "name = \"c\"\n[[grid]]\nalgos = [\"fedcomloc-global:q8\"]\ncompress_down = [\"topk:0.3\"]\n",
+                "downlink compressor conflict",
+            ),
+            (
+                "name = \"c\"\n[[grid]]\nalgos = [\"sparsefedavg\"]\ncompress_up = [\"q8\"]\n",
+                "uplink compressor conflict",
+            ),
+            (
+                "name = \"c\"\n[[grid]]\nalgos = [\"fedavg\"]\ncompress_up = [\"wat\"]\n",
+                "unknown compressor",
+            ),
+            // Multi-stream algorithms reject stateful pipelines up front.
+            (
+                "name = \"c\"\n[[grid]]\nalgos = [\"scaffold\"]\ncompress_up = [\"ef(topk:0.1)\"]\n",
+                "multiple vectors per link",
+            ),
+        ] {
+            let err = SweepSpec::parse_str(toml)
+                .and_then(|s| s.expand(1.0, None).map(|_| ()))
+                .unwrap_err();
+            assert!(err.contains(needle), "toml: {toml}\nerr: {err}");
+        }
+        // Non-conflicting combinations pass: -Com embedded up + explicit down.
+        let ok = SweepSpec::parse_str(
+            "name = \"c\"\n[[grid]]\nalgos = [\"fedcomloc-com:topk:0.1\"]\ncompress_down = [\"q8\"]\n",
+        )
+        .unwrap();
+        assert_eq!(ok.expand(1.0, None).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn compression_keys_as_fixed_overrides_still_work() {
+        // Scalar (non-axis) usage routes through the same grid axis path.
+        let spec = SweepSpec::parse_str(
+            "name = \"c\"\n[base]\ncompress_down = \"q8\"\n[[grid]]\nalgos = [\"fedavg\"]\ncompress_up = \"topk:0.5\"\n",
+        )
+        .unwrap();
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 1);
+        assert_eq!(units[0].cfg.compress_up, "topk:0.5");
+        assert_eq!(units[0].cfg.compress_down, "q8");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Coordinator- and compressor-level invariants the paper's correctness
 //! rests on, checked over randomized inputs with shrink-on-failure.
 
-use fedcomloc::compress::{topk, Compressor, DoubleCompress, Identity, QuantizeR, TopK};
+use fedcomloc::compress::{parse_spec, topk, Compressor, Identity, Natural, QuantizeR, RandK, TopK};
 use fedcomloc::fed::message::Message;
 use fedcomloc::tensor;
 use fedcomloc::util::bitio::{BitReader, BitWriter};
@@ -14,7 +14,8 @@ fn any_vec(g: &mut Gen) -> Vec<f32> {
     g.vec_f32(1..=2048, -10.0, 10.0)
 }
 
-/// One randomly-parameterized compressor per codec family.
+/// One randomly-parameterized compressor per codec family, including the
+/// fused and generic chain compositions.
 fn any_compressors(g: &mut Gen) -> Vec<Box<dyn Compressor>> {
     let density = *g.choose(&[0.01, 0.1, 0.3, 0.5, 0.9, 1.0]);
     let bits = *g.choose(&[1u32, 2, 4, 7, 8, 12, 16]);
@@ -22,8 +23,13 @@ fn any_compressors(g: &mut Gen) -> Vec<Box<dyn Compressor>> {
     vec![
         Box::new(Identity),
         Box::new(TopK::with_density(density)),
+        Box::new(RandK::with_density(density)),
         Box::new(QuantizeR::with_bucket(bits, bucket)),
-        Box::new(DoubleCompress::new(density, bits)),
+        Box::new(Natural),
+        parse_spec(&format!("topk:{density}|q{bits}")).unwrap(),
+        parse_spec(&format!("randk:{density}|q{bits}")).unwrap(),
+        parse_spec(&format!("q{bits}|topk:{density}")).unwrap(),
+        parse_spec(&format!("natural|topk:{density}")).unwrap(),
     ]
 }
 
@@ -108,8 +114,10 @@ fn prop_wire_bits_never_exceed_payload() {
         let comps: Vec<Box<dyn Compressor>> = vec![
             Box::new(Identity),
             Box::new(TopK::with_density(0.2)),
+            Box::new(RandK::with_density(0.2)),
             Box::new(QuantizeR::new(6)),
-            Box::new(DoubleCompress::new(0.3, 5)),
+            Box::new(Natural),
+            parse_spec("topk:0.3|q5").unwrap(),
         ];
         let mut rng = Rng::seed_from_u64(g.rng().next_u64());
         for c in comps {

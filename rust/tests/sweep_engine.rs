@@ -42,6 +42,11 @@ alphas = [0.3, 0.8]
 [[grid]]
 algos = ["fedavg:q:8"]
 transports = ["simnet:10:5:0.2:2"]
+
+[[grid]]
+algos = ["fedcomloc-com"]
+compress_up = ["ef(topk:0.5)"]
+compress_down = ["q8"]
 "#;
 
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -68,7 +73,7 @@ fn summary_schema_is_golden() {
     let spec = SweepSpec::parse_str(TINY_SWEEP).unwrap();
     let out = tmp_dir("schema");
     let outcome = sweep::run_sweep(&spec, &opts(&out, 1)).unwrap();
-    assert_eq!(outcome.executed, 5);
+    assert_eq!(outcome.executed, 6);
     let text = read(&sink::summary_path(&outcome.dir));
     let mut lines = text.lines();
     assert_eq!(lines.next(), Some(sink::SUMMARY_HEADER));
@@ -76,16 +81,17 @@ fn summary_schema_is_golden() {
         sink::SUMMARY_HEADER,
         "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,\
          train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,\
+         compress_up,compress_down,\
          best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,\
          total_cost,total_sim_secs,dropped_clients",
-        "summary schema v1 is pinned; bump SCHEMA_VERSION to change it"
+        "summary schema v2 is pinned; bump sink::RESULT_SCHEMA to change it"
     );
     let rows: Vec<&str> = lines.collect();
-    assert_eq!(rows.len(), 5);
+    assert_eq!(rows.len(), 6);
     for (row, unit) in rows.iter().zip(&outcome.units) {
         let fields: Vec<&str> = row.split(',').collect();
-        assert_eq!(fields.len(), 31, "{row}");
-        assert_eq!(fields[0], "1");
+        assert_eq!(fields.len(), 33, "{row}");
+        assert_eq!(fields[0], "2");
         assert_eq!(fields[1], unit.id);
         assert_eq!(fields[2], "enginetest");
         assert_eq!(fields[3], unit.algo);
@@ -94,19 +100,25 @@ fn summary_schema_is_golden() {
         assert_eq!(fields[7], "native", "trainer column");
         assert_eq!(fields[14], "400", "train_n column");
         assert_eq!(fields[16], "6", "clients column");
+        assert_eq!(fields[23], unit.cfg.compress_up, "compress_up column");
+        assert_eq!(fields[24], unit.cfg.compress_down, "compress_down column");
         // Evaluated runs carry a best accuracy in (0, 1].
-        let best: f64 = fields[23].parse().unwrap_or_else(|e| panic!("{row}: {e}"));
+        let best: f64 = fields[25].parse().unwrap_or_else(|e| panic!("{row}: {e}"));
         assert!(best > 0.0 && best <= 1.0, "{row}");
     }
-    // The SimNet run (last) accumulated simulated seconds; InProc runs did not.
-    assert!(rows[4].split(',').nth(29).unwrap().parse::<f64>().unwrap() > 0.0);
-    assert_eq!(rows[0].split(',').nth(29), Some("0"));
+    // The EF/bidirectional run keeps the legacy id shape plus suffixes.
+    assert_eq!(outcome.units[5].cfg.compress_up, "ef(topk:0.5)");
+    assert_eq!(outcome.units[5].cfg.compress_down, "q8");
+    assert!(outcome.units[5].id.contains("-u-ef_topk_0.5_"), "{}", outcome.units[5].id);
+    // The SimNet run accumulated simulated seconds; InProc runs did not.
+    assert!(rows[4].split(',').nth(31).unwrap().parse::<f64>().unwrap() > 0.0);
+    assert_eq!(rows[0].split(',').nth(31), Some("0"));
     // Per-round JSONL exists for every run, with one line per round.
     for unit in &outcome.units {
         let jsonl = read(&sink::rounds_path(&outcome.dir, &unit.id));
         assert_eq!(jsonl.lines().count(), 3, "{}", unit.id);
         let first = fedcomloc::util::json::parse(jsonl.lines().next().unwrap()).unwrap();
-        assert_eq!(first.get("schema").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(first.get("schema").unwrap().as_usize().unwrap(), 2);
         assert_eq!(first.get("run").unwrap().as_str().unwrap(), unit.id);
         assert_eq!(first.get("round").unwrap().as_usize().unwrap(), 0);
         assert!(first.get("wall_secs").is_none(), "wall clock must not leak");
@@ -198,7 +210,7 @@ fn resume_skips_completed_runs_and_restores_the_canonical_summary() {
     )
     .unwrap();
     assert_eq!(resumed.executed, 1);
-    assert_eq!(resumed.skipped, 4);
+    assert_eq!(resumed.skipped, 5);
     assert_eq!(read(&spath), complete, "resume must restore the canonical summary");
 
     // Resuming an untouched sweep executes nothing.
@@ -211,7 +223,7 @@ fn resume_skips_completed_runs_and_restores_the_canonical_summary() {
     )
     .unwrap();
     assert_eq!(noop.executed, 0);
-    assert_eq!(noop.skipped, 5);
+    assert_eq!(noop.skipped, 6);
 
     // A row whose configuration prefix no longer matches the expanded unit
     // (here: a different seed) must be re-executed, not silently reused.
@@ -250,12 +262,13 @@ fn dry_run_writes_nothing_and_prints_the_matrix() {
     .unwrap();
     assert_eq!(outcome.executed, 0);
     assert!(outcome.rows.is_empty());
-    assert_eq!(outcome.units.len(), 5);
+    assert_eq!(outcome.units.len(), 6);
     assert!(!out.exists(), "dry run must not touch the filesystem");
     let matrix = sweep::format_matrix(&outcome.units);
-    assert_eq!(matrix.lines().count(), 6, "header + one line per run");
+    assert_eq!(matrix.lines().count(), 7, "header + one line per run");
     assert!(matrix.contains("fedavg:q:8"));
     assert!(matrix.contains("simnet:10:5:0.2:2"));
+    assert!(matrix.contains("ef(topk:0.5)"), "compress columns in the matrix");
     let _ = std::fs::remove_dir_all(&out);
 }
 

@@ -17,17 +17,24 @@ use fedcomloc::model::{build_model, init_params, LocalTrainer, Workspace};
 use fedcomloc::util::rng::Rng;
 use std::sync::Arc;
 
-/// Every compressor family the registry can produce, at assorted params.
+/// Every compressor family the registry can produce, at assorted params
+/// (including the legacy `+` and new `|` chain spellings, the generic
+/// non-fused chain, and the RandK/Natural families).
 const COMPRESSOR_SPECS: &[&str] = &[
     "none",
     "topk:0.05",
     "topk:0.5",
     "topk:0.95",
+    "randk:0.1",
     "q:1",
     "q:4",
     "q:8",
+    "natural",
     "topk:0.25+q:4",
     "topk:0.8+q:6",
+    "topk:0.25|q4",
+    "randk:0.2|q8",
+    "q8|topk:0.2",
 ];
 
 fn bits(v: &[f32]) -> Vec<u32> {

@@ -1,0 +1,71 @@
+//! Micro-bench: the scenario engine's event queue under a 10k-client
+//! semi-synchronous round.
+//!
+//! The scheduler's per-round cost is one `push` per delivered client plus
+//! one `pop` per accepted arrival, all on the `(time, seq)`-keyed heap —
+//! this is the only data structure the discrete-event runtime adds to the
+//! round loop, so its throughput bounds how far `n_clients` can scale.
+//! Exports `BENCH_event_queue.json`; CI's `perf-smoke` job gates it
+//! against `benches/baseline/BENCH_event_queue.json`.
+
+use fedcomloc::fed::sim::EventQueue;
+use fedcomloc::util::benchkit::{self, bb, Bench};
+use fedcomloc::util::rng::Rng;
+
+const ROUND: usize = 10_000;
+
+fn main() {
+    // Pre-drawn arrival times: the bench measures the queue, not the RNG.
+    let mut rng = Rng::seed_from_u64(42);
+    let times: Vec<f64> = (0..ROUND).map(|_| rng.uniform() * 100.0).collect();
+
+    let mut b = Bench::new("event_queue");
+
+    // Full round: every delivered client schedules one arrival, then the
+    // server drains the heap in virtual-time order (K = n worst case).
+    let mut q = EventQueue::new();
+    b.case("10k-client round: push all + drain", || {
+        for (c, &t) in times.iter().enumerate() {
+            q.push(t, c);
+        }
+        while let Some(ev) = q.pop() {
+            bb(ev);
+        }
+    });
+    b.record_metric(
+        "10k-client round events",
+        2.0 * ROUND as f64,
+        "events/round",
+    );
+
+    // FedBuff acceptance: push everyone, pop only the first K arrivals —
+    // the common case leaves most of the heap unpopped each round.
+    let k = 100;
+    let mut q = EventQueue::new();
+    b.case("10k-client round: push all + pop first 100", || {
+        for (c, &t) in times.iter().enumerate() {
+            q.push(t, c);
+        }
+        for _ in 0..k {
+            bb(q.pop());
+        }
+        while q.pop().is_some() {} // reset without measuring a leak
+    });
+
+    // Steady-state churn: an interleaved push/pop stream at constant
+    // occupancy, the long-run shape of a multi-round simulation.
+    let mut q = EventQueue::new();
+    for (c, &t) in times.iter().take(1_000).enumerate() {
+        q.push(t, c);
+    }
+    let mut i = 0usize;
+    b.case("steady-state push+pop at 1k occupancy", || {
+        let (t, c) = q.pop().expect("occupancy stays positive");
+        bb((t, c));
+        q.push(t + times[i % ROUND], c);
+        i += 1;
+    });
+
+    b.finish();
+    std::process::exit(benchkit::finalize("event_queue"));
+}

@@ -121,6 +121,10 @@ pub fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(),
             let s = value.as_str().ok_or("expected string")?;
             cfg.compress_down = CompressorSpec::parse(s)?.key().to_string();
         }
+        "scenario" => {
+            let s = value.as_str().ok_or("expected string")?;
+            cfg.scenario = crate::fed::sim::Scenario::parse(s)?.key();
+        }
         other => return Err(format!("unknown key '{other}'")),
     }
     Ok(())
@@ -162,6 +166,7 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
         ("data-dir", "data_dir"),
         ("compress-up", "compress_up"),
         ("compress-down", "compress_down"),
+        ("scenario", "scenario"),
     ];
     for (flag, key) in pairs {
         if let Some(raw) = args.get(flag) {
@@ -182,7 +187,7 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
 /// "expected integer" from `apply_kv`, far from the cause.
 fn parse_flag_value(key: &str, raw: &str) -> Result<TomlValue, String> {
     match key {
-        "dataset" | "data_dir" | "model" | "compress_up" | "compress_down" => {
+        "dataset" | "data_dir" | "model" | "compress_up" | "compress_down" | "scenario" => {
             Ok(TomlValue::Str(raw.to_string()))
         }
         "alpha" | "p" | "gamma" | "tau" => raw
@@ -303,6 +308,27 @@ clients = 50
         apply_cli(&mut cfg, &args).unwrap();
         assert_eq!(cfg.compress_up, "q8");
         assert_eq!(cfg.compress_down, "topk:0.3");
+    }
+
+    #[test]
+    fn scenario_key_applies_and_canonicalizes() {
+        let mut cfg = RunConfig::default_mnist();
+        assert_eq!(cfg.scenario, "sync");
+        // Omitted staleness canonicalizes to an explicit 0.5.
+        let doc = toml::parse("[run]\nscenario = \"semisync:4\"").unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.scenario, "semisync:4@0.5");
+        let doc = toml::parse("[run]\nscenario = \"async\"").unwrap();
+        let err = apply_toml(&mut cfg, &doc).unwrap_err();
+        assert!(err.to_string().contains("unknown scenario"), "{err}");
+        // CLI flag routes to the same schema point.
+        let cmd = crate::cli::Command::new("train", "t").opt("scenario", "SPEC", "");
+        let args = cmd
+            .parse(&["--scenario".into(), "semisync:2@1".into()])
+            .unwrap();
+        let mut cfg = RunConfig::default_mnist();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.scenario, "semisync:2@1");
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
             data_dir: std::path::PathBuf::from("data"),
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
+            scenario: "sync".to_string(),
         }),
         "paper-cifar" => Some(RunConfig {
             dataset: DatasetSpec::cifar10(),
@@ -55,6 +56,7 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
             data_dir: std::path::PathBuf::from("data"),
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
+            scenario: "sync".to_string(),
         }),
         "smoke" => Some(RunConfig {
             train_n: 1_000,

@@ -88,6 +88,19 @@ impl RoundCtx<'_> {
     }
 }
 
+/// What a client's uplink payload *means* — how a semi-synchronous
+/// scenario must turn a straggler's late message into an additive update
+/// (see [`crate::fed::sim`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UplinkKind {
+    /// The uplink carries the client's full local model x_i; a straggler's
+    /// contribution is the difference against the broadcast it trained
+    /// from (FedAvg, FedComLoc, FedDyn).
+    Model,
+    /// The uplink carries an additive delta already (Scaffold's Δx).
+    Delta,
+}
+
 /// A federated algorithm, drivable by [`drive`]. Implementations hold all
 /// algorithm-local server state (control variates, regularizer state, coin
 /// streams) and initialize it in [`FedAlgorithm::setup`].
@@ -110,6 +123,13 @@ pub trait FedAlgorithm: Send {
 
     /// One-time teardown after the last round.
     fn finalize(&mut self, _fed: &mut Federation, _cfg: &RunConfig) {}
+
+    /// What this algorithm's first uplink stream per client carries (how
+    /// the scenario engine folds a straggler's late update). Most drivers
+    /// upload the local model; override for delta-valued uplinks.
+    fn uplink_kind(&self) -> UplinkKind {
+        UplinkKind::Model
+    }
 }
 
 /// Run `algo` to completion on a fresh [`Federation`].
@@ -148,6 +168,9 @@ pub fn drive_federation(
     }
     if cfg.compress_down != "none" {
         log = log.with_meta("compress_down", &cfg.compress_down);
+    }
+    if cfg.scenario != "sync" {
+        log = log.with_meta("scenario", &cfg.scenario);
     }
     algo.setup(fed, cfg);
     let mut logger = RoundLogger::new(cfg, log);

@@ -32,6 +32,7 @@ pub mod feddyn;
 pub mod message;
 pub mod scaffold;
 pub mod scaffnew;
+pub mod sim;
 pub mod transport;
 
 pub use algorithm::{drive, drive_federation, FedAlgorithm, RoundCtx, RoundOutcome};
@@ -404,6 +405,12 @@ pub struct RunConfig {
     /// retains the compressed model between rounds (the -Global
     /// semantics). Mutually exclusive with `fedcomloc-global:<spec>`.
     pub compress_down: String,
+    /// Round runtime scenario ([`sim::Scenario`] grammar): `"sync"` runs
+    /// the legacy lock-step loop bit-identically; `"semisync:<K>[@<a>]"`
+    /// routes every round through the discrete-event scheduler in
+    /// [`sim`] — the server folds the first K arrivals and stragglers
+    /// land staleness-weighted in later rounds.
+    pub scenario: String,
 }
 
 impl RunConfig {
@@ -439,6 +446,7 @@ impl RunConfig {
             data_dir: std::path::PathBuf::from("data"),
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
+            scenario: "sync".to_string(),
         }
     }
 
@@ -470,6 +478,7 @@ impl RunConfig {
             data_dir: std::path::PathBuf::from("data"),
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
+            scenario: "sync".to_string(),
         }
     }
 
@@ -484,6 +493,13 @@ impl RunConfig {
     pub fn downlink_spec(&self) -> CompressorSpec {
         CompressorSpec::parse(&self.compress_down)
             .unwrap_or_else(|e| panic!("invalid compress_down '{}': {e}", self.compress_down))
+    }
+
+    /// The validated round-runtime scenario (panics on an invalid string —
+    /// the config layer validates on entry).
+    pub fn scenario_spec(&self) -> sim::Scenario {
+        sim::Scenario::parse(&self.scenario)
+            .unwrap_or_else(|e| panic!("invalid scenario '{}': {e}", self.scenario))
     }
 }
 
@@ -792,6 +808,8 @@ impl<'a> RoundLogger<'a> {
             sim_secs: report.sim_secs,
             cum_sim_secs: self.cum_sim_secs,
             dropped_clients: report.dropped_clients,
+            stale_updates: report.stale_updates,
+            churned_clients: report.churned_clients,
         });
     }
 
@@ -808,7 +826,10 @@ pub fn run(cfg: &RunConfig, trainer: Arc<dyn LocalTrainer>, spec: &AlgorithmSpec
     run_with_transport(cfg, trainer, spec, &mut transport)
 }
 
-/// Run an algorithm to completion over an arbitrary transport.
+/// Run an algorithm to completion over an arbitrary transport, routed
+/// through the round runtime `cfg.scenario` selects: the legacy lock-step
+/// loop for `sync` (bit-identical to every pre-scenario release), the
+/// discrete-event scheduler in [`sim`] for `semisync:<K>[@<a>]`.
 pub fn run_with_transport(
     cfg: &RunConfig,
     trainer: Arc<dyn LocalTrainer>,
@@ -816,7 +837,12 @@ pub fn run_with_transport(
     transport: &mut dyn transport::Transport,
 ) -> MetricsLog {
     let mut algo = spec.build();
-    algorithm::drive(cfg, trainer, algo.as_mut(), transport)
+    match cfg.scenario_spec() {
+        sim::Scenario::Sync => algorithm::drive(cfg, trainer, algo.as_mut(), transport),
+        scenario @ sim::Scenario::Semisync { .. } => {
+            sim::drive_scenario(cfg, trainer, algo.as_mut(), transport, &scenario)
+        }
+    }
 }
 
 #[cfg(test)]

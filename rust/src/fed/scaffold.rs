@@ -17,7 +17,7 @@
 //! residual memory cannot serve two interleaved streams (see
 //! [`crate::compress::Pipeline::has_state`]).
 
-use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome, UplinkKind};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::tensor;
@@ -172,5 +172,12 @@ impl FedAlgorithm for Scaffold {
             local_steps: cfg.local_steps,
             train_loss: loss_sum / (n_trained * cfg.local_steps).max(1) as f64,
         }
+    }
+
+    fn uplink_kind(&self) -> UplinkKind {
+        // The first uplink stream is Δx — already an additive delta, so a
+        // straggler's buffered contribution is the decoded payload itself
+        // (its Δc stream is forfeited, like any undelivered update).
+        UplinkKind::Delta
     }
 }

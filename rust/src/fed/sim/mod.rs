@@ -1,0 +1,270 @@
+//! The scenario engine: a discrete-event round runtime that replays any
+//! [`FedAlgorithm`] on a simulated wall clock.
+//!
+//! The synchronous drive loop ([`crate::fed::algorithm::drive`]) treats a
+//! round as instantaneous: every sampled client trains, every surviving
+//! uplink aggregates, and `sim_secs` only measures link time when the
+//! transport is a [`SimNet`]. Real federated deployments are dominated by
+//! *stragglers* — heterogeneous compute means the round is as slow as its
+//! slowest participant. This module models that regime without touching
+//! any algorithm:
+//!
+//! * [`queue`] — a deterministic virtual-clock event queue keyed by
+//!   `(time, seq)`, so event order is identical across seeds, threads and
+//!   platforms.
+//! * [`scheduler`] — [`ScenarioNet`], a [`Transport`] decorator that
+//!   assigns each client a seeded compute-speed multiplier, charges
+//!   per-link down/compute/up time, accepts the first K arrivals each
+//!   round (FedBuff-style semi-synchrony), and buffers stragglers' updates
+//!   to fold staleness-weighted — `(1+s)^(−α) / K` — into a later round.
+//! * [`drive_scenario`] — the drive loop variant that owns the
+//!   fold-arrivals / sample / round / settle sequence and emits the same
+//!   [`MetricsLog`] schema, with `sim_secs` now meaning simulated
+//!   wall-clock (link *and* compute) and the new `stale_updates` /
+//!   `churned_clients` columns populated.
+//!
+//! A scenario is selected by the `scenario` axis in
+//! [`RunConfig`](crate::fed::RunConfig) / TOML / CLI:
+//!
+//! ```text
+//! sync                      # the legacy loop, bit-identical (degenerate case)
+//! semisync:<K>              # fold first K arrivals, staleness α = 0.5
+//! semisync:<K>@<staleness>  # explicit staleness exponent α
+//! ```
+//!
+//! `sync` routes through the untouched [`drive`] path, so existing runs
+//! stay byte-identical. Dropout stays owned by the transport layer; churn
+//! (an in-flight straggler update discarded because its client was
+//! re-sampled) is owned here — see [`scheduler`] for the full contract.
+//!
+//! [`SimNet`]: crate::fed::transport::SimNet
+//! [`drive`]: crate::fed::algorithm::drive
+
+pub mod queue;
+pub mod scheduler;
+
+pub use queue::EventQueue;
+pub use scheduler::ScenarioNet;
+
+use super::algorithm::{drive_federation, FedAlgorithm, RoundCtx};
+use super::transport::Transport;
+use super::{Federation, RoundLogger, RunConfig};
+use crate::metrics::MetricsLog;
+use crate::model::LocalTrainer;
+use std::sync::Arc;
+
+/// A parsed round-runtime scenario (the `scenario` config axis).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    /// The legacy synchronous loop — every sampled client's update folds
+    /// this round. Degenerate case; bit-identical to the pre-scenario
+    /// drive path.
+    Sync,
+    /// Semi-synchronous (FedBuff-style): the server folds the first `k`
+    /// arrivals per round; stragglers' updates land `(1+s)^(−staleness)`
+    /// weighted in the round after their simulated arrival time.
+    Semisync {
+        /// Arrivals folded synchronously per round (clamped to the number
+        /// delivered).
+        k: usize,
+        /// Staleness exponent α ≥ 0; 0 weights stale updates like fresh
+        /// ones (modulo the 1/K divisor).
+        staleness: f64,
+    },
+}
+
+impl Scenario {
+    /// Parse a scenario spec: `sync` | `semisync:<K>[@<staleness>]`.
+    /// Omitted staleness defaults to `0.5` (the FedBuff paper's choice).
+    pub fn parse(spec: &str) -> Result<Scenario, String> {
+        if spec == "sync" {
+            return Ok(Scenario::Sync);
+        }
+        if let Some(rest) = spec.strip_prefix("semisync:") {
+            let (k_str, alpha_str) = match rest.split_once('@') {
+                Some((k, a)) => (k, Some(a)),
+                None => (rest, None),
+            };
+            let k: usize = k_str
+                .parse()
+                .map_err(|_| format!("semisync K must be a positive integer, got '{k_str}'"))?;
+            if k == 0 {
+                return Err("semisync K must be >= 1".to_string());
+            }
+            let staleness = match alpha_str {
+                None => 0.5,
+                Some(a) => {
+                    let v: f64 = a
+                        .parse()
+                        .map_err(|_| format!("semisync staleness must be a number, got '{a}'"))?;
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(format!(
+                            "semisync staleness must be finite and >= 0, got '{a}'"
+                        ));
+                    }
+                    v
+                }
+            };
+            return Ok(Scenario::Semisync { k, staleness });
+        }
+        Err(format!(
+            "unknown scenario '{spec}' (expected 'sync' or 'semisync:<K>[@<staleness>]')"
+        ))
+    }
+
+    /// The canonical spec string (staleness always explicit), stable for
+    /// log metadata and sweep summary keys.
+    pub fn key(&self) -> String {
+        match self {
+            Scenario::Sync => "sync".to_string(),
+            Scenario::Semisync { k, staleness } => format!("semisync:{k}@{staleness}"),
+        }
+    }
+}
+
+/// Run `algo` to completion under `scenario` on a fresh
+/// [`Federation`] — the scenario-engine counterpart of
+/// [`crate::fed::algorithm::drive`].
+pub fn drive_scenario(
+    cfg: &RunConfig,
+    trainer: Arc<dyn LocalTrainer>,
+    algo: &mut dyn FedAlgorithm,
+    transport: &mut dyn Transport,
+    scenario: &Scenario,
+) -> MetricsLog {
+    let mut fed = Federation::new(cfg, trainer);
+    drive_scenario_federation(cfg, &mut fed, algo, transport, scenario)
+}
+
+/// Run `algo` under `scenario` on an existing [`Federation`].
+///
+/// Mirrors [`drive_federation`]'s loop with three scenario hooks per
+/// round, in this order:
+///
+/// 1. **fold** — arrived straggler updates fold into `fed.x` *before*
+///    sampling, so the round's broadcast carries them;
+/// 2. **churn** — [`ScenarioNet::begin_round`] discards in-flight updates
+///    from re-sampled clients;
+/// 3. **settle** — after the algorithm's round,
+///    [`ScenarioNet::note_local_steps`] records the actual segment length
+///    and `end_round` advances the virtual clock to the slowest accepted
+///    arrival.
+///
+/// `Scenario::Sync` delegates straight to [`drive_federation`]: the
+/// synchronous path stays bit-identical with no decorator in the loop.
+pub fn drive_scenario_federation(
+    cfg: &RunConfig,
+    fed: &mut Federation,
+    algo: &mut dyn FedAlgorithm,
+    transport: &mut dyn Transport,
+    scenario: &Scenario,
+) -> MetricsLog {
+    let (k, staleness) = match *scenario {
+        Scenario::Sync => return drive_federation(cfg, fed, algo, transport),
+        Scenario::Semisync { k, staleness } => (k, staleness),
+    };
+    let name = algo.log_name(fed, cfg);
+    let mut log = MetricsLog::new(&name);
+    for (key, value) in algo.log_meta(cfg) {
+        log = log.with_meta(&key, value);
+    }
+    if cfg.compress_up != "none" {
+        log = log.with_meta("compress_up", &cfg.compress_up);
+    }
+    if cfg.compress_down != "none" {
+        log = log.with_meta("compress_down", &cfg.compress_down);
+    }
+    log = log.with_meta("scenario", scenario.key());
+    algo.setup(fed, cfg);
+    let kind = algo.uplink_kind();
+    let mut logger = RoundLogger::new(cfg, log);
+    let mut net = ScenarioNet::new(transport, k, staleness, kind, cfg);
+    for round in 0..cfg.rounds {
+        logger.begin_round();
+        net.fold_arrivals(round, &mut fed.x);
+        let sampled = fed.sample_clients(cfg.clients_per_round);
+        net.begin_round(round, &sampled);
+        let outcome = {
+            let mut ctx = RoundCtx {
+                cfg,
+                fed: &mut *fed,
+                transport: &mut net,
+                round,
+                sampled,
+            };
+            algo.round(&mut ctx)
+        };
+        net.note_local_steps(outcome.local_steps);
+        let report = net.end_round();
+        let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
+            Some(fed.evaluate())
+        } else {
+            None
+        };
+        if let Some(e) = &eval {
+            log::info!(
+                "[{name}] round {round}: loss {:.4} acc {:.4} up {} bits (sim {:.1}s)",
+                outcome.train_loss,
+                e.accuracy,
+                report.usage.uplink_bits,
+                report.sim_secs
+            );
+        }
+        logger.end_round(round, outcome.local_steps, outcome.train_loss, &report, eval);
+    }
+    algo.finalize(fed, cfg);
+    logger.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sync() {
+        assert_eq!(Scenario::parse("sync"), Ok(Scenario::Sync));
+        assert_eq!(Scenario::Sync.key(), "sync");
+    }
+
+    #[test]
+    fn parse_semisync_defaults_staleness() {
+        let s = Scenario::parse("semisync:4").unwrap();
+        assert_eq!(
+            s,
+            Scenario::Semisync {
+                k: 4,
+                staleness: 0.5
+            }
+        );
+        assert_eq!(s.key(), "semisync:4@0.5");
+    }
+
+    #[test]
+    fn parse_semisync_explicit_staleness_roundtrips() {
+        for spec in ["semisync:1@0", "semisync:8@0.5", "semisync:2@1", "semisync:3@1.25"] {
+            let s = Scenario::parse(spec).unwrap();
+            let key = s.key();
+            assert_eq!(Scenario::parse(&key).unwrap(), s, "canonical key must reparse");
+            assert_eq!(Scenario::parse(&key).unwrap().key(), key, "key is a fixpoint");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "async",
+            "semisync",
+            "semisync:",
+            "semisync:0",
+            "semisync:-1",
+            "semisync:2@",
+            "semisync:2@nan",
+            "semisync:2@-0.5",
+            "semisync:2@inf",
+            "SYNC",
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+}

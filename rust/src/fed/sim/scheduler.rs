@@ -1,0 +1,452 @@
+//! The semi-synchronous round scheduler: a [`Transport`] decorator that
+//! places every message on a virtual clock and splits each round's
+//! participants into first-K **accepted** clients and **stragglers** whose
+//! updates land staleness-weighted in a later round (FedBuff-style
+//! buffered aggregation).
+//!
+//! # Event model
+//!
+//! Per client `c`, one round is three virtual-time intervals:
+//!
+//! ```text
+//! t_down(c)  = Σ broadcast link_secs      (queried from the inner transport)
+//! compute(c) = local_steps · τ · speed_c  (speed_c: per-client multiplier)
+//! t_up(c)    = Σ uplink link_secs
+//! ```
+//!
+//! The per-client compute-speed multipliers `speed_c` are drawn
+//! log-uniformly from `[1, SPEED_SPREAD]` at construction from the run
+//! seed (salt [`SPEED_SALT`]) — the compute twin of [`SimNetCfg`]'s
+//! bandwidth heterogeneity, and an independent RNG stream from every
+//! training/transport stream, so enabling a scenario never perturbs
+//! training randomness.
+//!
+//! Acceptance is decided once per round on the deterministic
+//! [`EventQueue`]: clients ranked by ready-to-upload deadline
+//! `t_down(c) + n₀·τ·speed_c` (n₀ = `cfg.local_steps`, the *nominal*
+//! segment length — exact for the fixed-step drivers, and for FedComLoc's
+//! geometric segments the per-round segment length is shared by all
+//! clients, so scaling it never reorders the deadlines), ties broken by
+//! delivery order. The first K pop as accepted; the round completes — and
+//! `sim_secs` is measured — at the slowest *accepted* client's arrival,
+//! computed from the actual step count. Stragglers' uplinks are decoded
+//! into additive deltas (per the algorithm's
+//! [`UplinkKind`](crate::fed::algorithm::UplinkKind)), buffered, and
+//! folded by [`ScenarioNet::fold_arrivals`] once the virtual clock passes
+//! their arrival, weighted `(1+s)^(−α) / K_origin` at staleness `s`
+//! rounds.
+//!
+//! # Dropout vs churn: one owner each
+//!
+//! Round-level *unavailability* is owned by the inner transport and its
+//! single RNG stream ([`SimNetCfg::drop_prob`]): a client the inner
+//! transport drops is never delivered to, never scheduled, and never
+//! buffered here — so it is counted exactly once, in the inner transport's
+//! `dropped_clients`. The scheduler draws **no** second availability coin.
+//! *Churn* is this layer's own, RNG-free notion: an in-flight straggler
+//! update is discarded when its client is re-sampled into a newer round
+//! before arrival (the fresh model supersedes the stale work), counted in
+//! `churned_clients`.
+//!
+//! [`SimNetCfg`]: crate::fed::transport::SimNetCfg
+//! [`SimNetCfg::drop_prob`]: crate::fed::transport::SimNetCfg::drop_prob
+
+use super::queue::EventQueue;
+use crate::fed::algorithm::UplinkKind;
+use crate::fed::message::Message;
+use crate::fed::transport::{LinkReport, Transport};
+use crate::fed::RunConfig;
+use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+
+/// Salt deriving the per-client compute-speed stream from `cfg.seed`
+/// (distinct from every transport/training salt in the tree).
+pub const SPEED_SALT: u64 = 0x5C_ED01;
+
+/// Log-uniform spread of the per-client compute-speed multipliers: the
+/// slowest client computes up to this factor slower than the fastest —
+/// mirroring [`crate::fed::transport::SimNetCfg`]'s default bandwidth
+/// heterogeneity of 4×.
+pub const SPEED_SPREAD: f64 = 4.0;
+
+/// One buffered straggler update awaiting its virtual-time arrival.
+struct Pending {
+    client: usize,
+    origin_round: usize,
+    /// Absolute virtual-clock arrival time at the server.
+    arrival: f64,
+    /// Accepted-set size of the origin round (the mean divisor the
+    /// algorithm applied that round — the stale fold uses the same one).
+    k_origin: usize,
+    delta: Vec<f32>,
+}
+
+/// The scheduling [`Transport`] decorator (see module docs). Built per run
+/// by [`super::drive_scenario`]; all scheduling state lives here, on the
+/// coordinator thread, so results are byte-invariant to `--threads`.
+pub struct ScenarioNet<'a> {
+    inner: &'a mut dyn Transport,
+    k: usize,
+    staleness: f64,
+    kind: UplinkKind,
+    tau: f64,
+    nominal_steps: usize,
+    /// Per-client compute-speed multiplier (≥ 1), drawn at construction.
+    speed: Vec<f64>,
+    /// The virtual clock: absolute start time of the current round.
+    now: f64,
+    round: usize,
+    // --- per-round state, reset by `begin_round` ---
+    delivered_order: Vec<usize>,
+    t_down: HashMap<usize, f64>,
+    up_secs: HashMap<usize, f64>,
+    accepted: Vec<usize>,
+    decided: bool,
+    bcast_x: Option<Vec<f32>>,
+    staged: Vec<(usize, Vec<f32>)>,
+    straggler_streams: HashSet<usize>,
+    actual_steps: Option<usize>,
+    stale_this_round: u64,
+    churned_this_round: u64,
+    // --- cross-round state ---
+    pending: Vec<Pending>,
+}
+
+impl<'a> ScenarioNet<'a> {
+    /// Wrap `inner` in a semi-synchronous scheduler accepting the first
+    /// `k` arrivals per round, weighting stragglers by `(1+s)^(−staleness)`.
+    pub fn new(
+        inner: &'a mut dyn Transport,
+        k: usize,
+        staleness: f64,
+        kind: UplinkKind,
+        cfg: &RunConfig,
+    ) -> ScenarioNet<'a> {
+        assert!(k >= 1, "semisync K must be >= 1");
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ SPEED_SALT);
+        let log_spread = SPEED_SPREAD.ln();
+        let speed = (0..cfg.n_clients).map(|_| (rng.uniform() * log_spread).exp()).collect();
+        ScenarioNet {
+            inner,
+            k,
+            staleness,
+            kind,
+            tau: cfg.tau,
+            nominal_steps: cfg.local_steps.max(1),
+            speed,
+            now: 0.0,
+            round: 0,
+            delivered_order: Vec::new(),
+            t_down: HashMap::new(),
+            up_secs: HashMap::new(),
+            accepted: Vec::new(),
+            decided: false,
+            bcast_x: None,
+            staged: Vec::new(),
+            straggler_streams: HashSet::new(),
+            actual_steps: None,
+            stale_this_round: 0,
+            churned_this_round: 0,
+            pending: Vec::new(),
+        }
+    }
+
+    fn compute_secs(&self, client: usize, steps: usize) -> f64 {
+        steps as f64 * self.tau * self.speed[client]
+    }
+
+    /// Fold every buffered straggler update whose arrival time the virtual
+    /// clock has passed into the global model `x`, weighted
+    /// `(1+s)^(−α) / K_origin` (s = `round` − origin round). Call at round
+    /// start, *before* sampling. Sets this round's `stale_updates` count.
+    pub fn fold_arrivals(&mut self, round: usize, x: &mut [f32]) {
+        let now = self.now;
+        let mut folded = 0u64;
+        let mut keep = Vec::with_capacity(self.pending.len());
+        for p in self.pending.drain(..) {
+            if p.arrival <= now {
+                let s = (round - p.origin_round) as f64;
+                let w = ((1.0 + s).powf(-self.staleness) / p.k_origin as f64) as f32;
+                crate::tensor::axpy(w, &p.delta, x);
+                folded += 1;
+            } else {
+                keep.push(p);
+            }
+        }
+        self.pending = keep;
+        self.stale_this_round = folded;
+    }
+
+    /// Start round `round` with participant set `sampled`: discard
+    /// in-flight updates from re-sampled clients (churn — the fresh model
+    /// supersedes their stale work) and reset per-round scheduling state.
+    pub fn begin_round(&mut self, round: usize, sampled: &[usize]) {
+        let before = self.pending.len();
+        self.pending.retain(|p| !sampled.contains(&p.client));
+        self.churned_this_round = (before - self.pending.len()) as u64;
+        self.round = round;
+        self.delivered_order.clear();
+        self.t_down.clear();
+        self.up_secs.clear();
+        self.accepted.clear();
+        self.decided = false;
+        self.bcast_x = None;
+        self.staged.clear();
+        self.straggler_streams.clear();
+        self.actual_steps = None;
+    }
+
+    /// Record the actual local-step count the algorithm ran this round
+    /// (FedComLoc's geometric segments differ from the nominal). Call
+    /// between the algorithm's round and [`Transport::end_round`]; arrival
+    /// times and `sim_secs` use it.
+    pub fn note_local_steps(&mut self, steps: usize) {
+        self.actual_steps = Some(steps.max(1));
+    }
+
+    /// Buffered straggler updates currently in flight (for tests/driver
+    /// diagnostics).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Rank this round's delivered clients by ready-to-upload deadline on
+    /// the event queue and accept the first K (see module docs). Decided
+    /// lazily at the first uplink, after every broadcast has landed.
+    fn decide_accept(&mut self) {
+        self.decided = true;
+        let mut queue = EventQueue::new();
+        for &c in &self.delivered_order {
+            queue.push(self.t_down[&c] + self.compute_secs(c, self.nominal_steps), c);
+        }
+        let k = self.k.min(queue.len());
+        self.accepted = (0..k).filter_map(|_| queue.pop().map(|(_, c)| c)).collect();
+    }
+}
+
+impl Transport for ScenarioNet<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn broadcast(&mut self, clients: &[usize], msg: &Message) -> Vec<usize> {
+        let delivered = self.inner.broadcast(clients, msg);
+        let bits = msg.wire_bits();
+        for &c in &delivered {
+            let secs = self.inner.link_secs(c, bits);
+            match self.t_down.entry(c) {
+                // A later broadcast stream (Scaffold's c after x) extends
+                // the client's downlink completion time.
+                std::collections::hash_map::Entry::Occupied(mut e) => *e.get_mut() += secs,
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(self.now + secs);
+                    self.delivered_order.push(c);
+                }
+            }
+        }
+        // Retain the first decoded broadcast: the base a Model-kind
+        // straggler's delta is taken against.
+        if self.kind == UplinkKind::Model && self.bcast_x.is_none() {
+            self.bcast_x = Some(msg.to_dense());
+        }
+        delivered
+    }
+
+    fn uplink(&mut self, client: usize, msg: Message) -> Option<Message> {
+        if !self.decided {
+            self.decide_accept();
+        }
+        let bits = msg.wire_bits();
+        let received = self.inner.uplink(client, msg)?;
+        *self.up_secs.entry(client).or_insert(0.0) += self.inner.link_secs(client, bits);
+        if self.accepted.contains(&client) {
+            return Some(received);
+        }
+        // Straggler: buffer the first stream as an additive delta; any
+        // further stream this round (Scaffold's Δc) is transmitted — and
+        // billed — but its server-side effect is forfeited, like a
+        // dropped client's.
+        if self.straggler_streams.insert(client) {
+            let delta = match self.kind {
+                UplinkKind::Delta => received.to_dense(),
+                UplinkKind::Model => {
+                    let mut d = received.to_dense();
+                    let base = self
+                        .bcast_x
+                        .as_ref()
+                        .expect("Model-kind uplink before any broadcast this round");
+                    for (dj, bj) in d.iter_mut().zip(base) {
+                        *dj -= bj;
+                    }
+                    d
+                }
+            };
+            self.staged.push((client, delta));
+        }
+        None
+    }
+
+    fn end_round(&mut self) -> LinkReport {
+        let steps = self.actual_steps.unwrap_or(self.nominal_steps);
+        // The round completes when the slowest accepted arrival lands.
+        let mut done = self.now;
+        for &c in &self.accepted {
+            let arrival = self.t_down[&c]
+                + self.compute_secs(c, steps)
+                + self.up_secs.get(&c).copied().unwrap_or(0.0);
+            done = done.max(arrival);
+        }
+        let k_origin = self.accepted.len().max(1);
+        let origin_round = self.round;
+        for (c, delta) in self.staged.drain(..) {
+            let arrival = self.t_down[&c]
+                + self.compute_secs(c, steps)
+                + self.up_secs.get(&c).copied().unwrap_or(0.0);
+            self.pending.push(Pending {
+                client: c,
+                origin_round,
+                arrival,
+                k_origin,
+                delta,
+            });
+        }
+        let sim_secs = done - self.now;
+        self.now = done;
+        let inner = self.inner.end_round();
+        LinkReport {
+            usage: inner.usage,
+            sim_secs,
+            // Unavailability is counted exactly once, by the layer that
+            // owns it (the inner transport); churn is this layer's.
+            dropped_clients: inner.dropped_clients,
+            stale_updates: self.stale_this_round,
+            churned_clients: self.churned_this_round,
+        }
+    }
+
+    fn link_secs(&self, client: usize, bits: u64) -> f64 {
+        self.inner.link_secs(client, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fed::message::SERVER;
+    use crate::fed::transport::InProc;
+
+    /// A 3-client, K=1 schedule computed by hand: InProc links (zero link
+    /// time), unit τ, one local step, speeds {1, 2, 4}, staleness α = 1.
+    ///
+    /// Round 0 at t=0: deadlines {c0: 1, c1: 2, c2: 4} ⇒ c0 accepted; the
+    /// round completes at t=1 (sim_secs = 1); c1/c2 buffer deltas arriving
+    /// at t=2 and t=4 with K_origin = 1. Round 1 ends at t=2. At round 2,
+    /// c1's update (arrival 2 ≤ clock 2) folds with weight
+    /// (1+2)^(−1)/1 = 1/3; c2 is re-sampled and churns.
+    #[test]
+    fn hand_computed_three_client_schedule() {
+        let cfg = RunConfig {
+            n_clients: 3,
+            clients_per_round: 1,
+            local_steps: 1,
+            tau: 1.0,
+            ..RunConfig::default_mnist()
+        };
+        let mut inner = InProc::default();
+        let mut net = ScenarioNet::new(&mut inner, 1, 1.0, UplinkKind::Model, &cfg);
+        net.speed = vec![1.0, 2.0, 4.0];
+        let mut x = vec![10.0f32];
+
+        // ---- round 0: broadcast x=10, clients reply 11/12/13 ----
+        net.fold_arrivals(0, &mut x);
+        net.begin_round(0, &[0, 1, 2]);
+        let bcast = Message::dense(0, SERVER, &x);
+        assert_eq!(net.broadcast(&[0, 1, 2], &bcast), vec![0, 1, 2]);
+        assert!(net.uplink(0, Message::dense(0, 0, &[11.0])).is_some(), "c0 accepted");
+        assert!(net.uplink(1, Message::dense(0, 1, &[12.0])).is_none(), "c1 straggles");
+        assert!(net.uplink(2, Message::dense(0, 2, &[13.0])).is_none(), "c2 straggles");
+        net.note_local_steps(1);
+        let r0 = net.end_round();
+        assert!((r0.sim_secs - 1.0).abs() < 1e-12, "{}", r0.sim_secs);
+        assert_eq!((r0.stale_updates, r0.churned_clients), (0, 0));
+        assert_eq!(net.pending_len(), 2);
+        assert!((net.pending[0].arrival - 2.0).abs() < 1e-12);
+        assert!((net.pending[1].arrival - 4.0).abs() < 1e-12);
+        assert_eq!(net.pending[0].k_origin, 1);
+        // Model-kind deltas are taken against the broadcast base.
+        assert_eq!(net.pending[0].delta, vec![2.0]);
+        assert_eq!(net.pending[1].delta, vec![3.0]);
+        x = vec![11.0]; // the algorithm would aggregate the accepted set
+
+        // ---- round 1: only c0 sampled; nothing has arrived yet ----
+        net.fold_arrivals(1, &mut x);
+        assert_eq!(net.pending_len(), 2, "arrivals at t=2,4 > clock t=1");
+        net.begin_round(1, &[0]);
+        let bcast = Message::dense(1, SERVER, &x);
+        net.broadcast(&[0], &bcast);
+        assert!(net.uplink(0, Message::dense(1, 0, &[11.5])).is_some());
+        net.note_local_steps(1);
+        let r1 = net.end_round();
+        assert!((r1.sim_secs - 1.0).abs() < 1e-12, "clock 1 -> 2");
+        assert_eq!((r1.stale_updates, r1.churned_clients), (0, 0));
+
+        // ---- round 2: c1's update folds at weight 1/3; c2 churns ----
+        net.fold_arrivals(2, &mut x);
+        let w = (3.0f64.powf(-1.0) as f32) * 2.0; // (1+2)^(-1)/1 · Δ
+        assert!((x[0] - (11.0 + w)).abs() < 1e-6, "{}", x[0]);
+        net.begin_round(2, &[2]);
+        assert_eq!(net.pending_len(), 0, "c2 re-sampled before arrival");
+        let bcast = Message::dense(2, SERVER, &x);
+        net.broadcast(&[2], &bcast);
+        assert!(net.uplink(2, Message::dense(2, 2, &[14.0])).is_some(), "K=1 of 1");
+        net.note_local_steps(1);
+        let r2 = net.end_round();
+        assert_eq!((r2.stale_updates, r2.churned_clients), (1, 1));
+        assert!((r2.sim_secs - 4.0).abs() < 1e-12, "c2: 1 step x 4.0 speed from t=2");
+    }
+
+    #[test]
+    fn degenerate_k_accepts_everyone() {
+        let cfg = RunConfig {
+            n_clients: 4,
+            local_steps: 2,
+            tau: 0.5,
+            ..RunConfig::default_mnist()
+        };
+        let mut inner = InProc::default();
+        let mut net = ScenarioNet::new(&mut inner, 4, 0.5, UplinkKind::Model, &cfg);
+        net.begin_round(0, &[0, 1, 2, 3]);
+        let bcast = Message::dense(0, SERVER, &[1.0, 2.0]);
+        net.broadcast(&[0, 1, 2, 3], &bcast);
+        for c in 0..4usize {
+            assert!(
+                net.uplink(c, Message::dense(0, c as u32, &[0.0, 0.0])).is_some(),
+                "K = |S_r|: every delivered uplink is accepted"
+            );
+        }
+        net.note_local_steps(2);
+        let r = net.end_round();
+        assert_eq!(r.stale_updates, 0);
+        assert_eq!(net.pending_len(), 0);
+        // sim_secs = slowest accepted compute: 2 steps x 0.5 tau x max speed.
+        let max_speed = net.speed.iter().cloned().fold(0.0f64, f64::max);
+        assert!((r.sim_secs - max_speed).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speeds_are_seeded_log_uniform_and_deterministic() {
+        let cfg = RunConfig {
+            n_clients: 200,
+            ..RunConfig::default_mnist()
+        };
+        let mut a = InProc::default();
+        let mut b = InProc::default();
+        let na = ScenarioNet::new(&mut a, 1, 0.5, UplinkKind::Model, &cfg);
+        let nb = ScenarioNet::new(&mut b, 1, 0.5, UplinkKind::Model, &cfg);
+        assert_eq!(na.speed, nb.speed, "same seed, same speeds");
+        assert!(na.speed.iter().all(|&s| (1.0..SPEED_SPREAD).contains(&s)));
+        let spread = na.speed.iter().cloned().fold(0.0f64, f64::max)
+            / na.speed.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 2.0, "spread {spread}");
+    }
+}

@@ -68,6 +68,13 @@ pub struct LinkReport {
     pub sim_secs: f64,
     /// Sampled clients that were unreachable this round (0 for [`InProc`]).
     pub dropped_clients: u64,
+    /// Straggler updates folded staleness-weighted into this round by a
+    /// semi-synchronous scenario (0 for plain transports — only the
+    /// scenario engine in [`crate::fed::sim`] produces these).
+    pub stale_updates: u64,
+    /// In-flight straggler updates discarded this round because their
+    /// client was re-sampled before arrival (0 for plain transports).
+    pub churned_clients: u64,
 }
 
 /// A bidirectional client/server message channel with per-round accounting.
@@ -92,6 +99,14 @@ pub trait Transport: Send {
 
     /// Drain this round's accounting.
     fn end_round(&mut self) -> LinkReport;
+
+    /// One-way transfer time for `bits` over this client's link, in
+    /// simulated seconds. The scenario engine ([`crate::fed::sim`]) queries
+    /// this to place message arrivals on its virtual clock; transports
+    /// without a timing model ([`InProc`]) report instantaneous links.
+    fn link_secs(&self, _client: usize, _bits: u64) -> f64 {
+        0.0
+    }
 }
 
 /// The in-process transport: today's semantics, byte-exact, zero loss.
@@ -122,6 +137,8 @@ impl Transport for InProc {
             usage: std::mem::take(&mut self.usage),
             sim_secs: 0.0,
             dropped_clients: 0,
+            stale_updates: 0,
+            churned_clients: 0,
         }
     }
 }
@@ -188,10 +205,6 @@ impl SimNet {
             round_avail: HashMap::new(),
         }
     }
-
-    fn link_secs(&self, client: usize, bits: u64) -> f64 {
-        self.cfg.latency_secs + bits as f64 / self.client_bw[client]
-    }
 }
 
 impl Transport for SimNet {
@@ -242,7 +255,13 @@ impl Transport for SimNet {
             usage: std::mem::take(&mut self.usage),
             sim_secs,
             dropped_clients: dropped,
+            stale_updates: 0,
+            churned_clients: 0,
         }
+    }
+
+    fn link_secs(&self, client: usize, bits: u64) -> f64 {
+        self.cfg.latency_secs + bits as f64 / self.client_bw[client]
     }
 }
 

@@ -133,6 +133,11 @@ fn train_command() -> Command {
             "SPEC",
             "downlink (broadcast) pipeline, same grammar as --compress-up",
         )
+        .opt(
+            "scenario",
+            "SPEC",
+            "round runtime: sync | semisync:<K>[@<staleness>] (fold first K arrivals)",
+        )
         .opt_default(
             "transport",
             "SPEC",
@@ -285,6 +290,13 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
                 "simulated network: {:.2} s total, {dropped} dropped client-rounds",
                 last.cum_sim_secs
             );
+            let stale: u64 = log.records.iter().map(|r| r.stale_updates).sum();
+            let churned: u64 = log.records.iter().map(|r| r.churned_clients).sum();
+            if stale > 0 || churned > 0 {
+                println!(
+                    "scenario engine: {stale} stale updates folded, {churned} in-flight updates churned"
+                );
+            }
         }
     }
     println!("metrics: {}/train/{}.csv", opts.out_dir.display(), log.run_name);

@@ -16,8 +16,10 @@
 //!   CSV columns: `round, local_steps, train_loss, test_loss,
 //!   test_accuracy, uplink_bits, downlink_bits, cum_uplink_bits,
 //!   cum_downlink_bits, total_cost, wall_secs, sim_secs, cum_sim_secs,
-//!   dropped_clients` (test columns empty between evaluations).
-//! * **Sweep sink, result schema v2** (`sweep::sink`, written by
+//!   dropped_clients, stale_updates, churned_clients` (test columns empty
+//!   between evaluations; the last two are produced by the scenario
+//!   engine, `fed::sim`, and stay 0 on synchronous runs).
+//! * **Sweep sink, result schema v3** (`sweep::sink`, written by
 //!   `fedcomloc sweep run`): one summary-CSV row per *run* plus one JSONL
 //!   object per round,
 //!   both versioned with an explicit `schema` field and deliberately
@@ -64,6 +66,13 @@ pub struct RoundRecord {
     /// Sampled clients the transport dropped this round (straggler /
     /// unavailability simulation). 0 under the in-process transport.
     pub dropped_clients: u64,
+    /// Straggler updates folded staleness-weighted into this round by a
+    /// semi-synchronous scenario ([`crate::fed::sim`]). 0 on synchronous
+    /// runs.
+    pub stale_updates: u64,
+    /// In-flight straggler updates discarded this round because their
+    /// client was re-sampled before arrival. 0 on synchronous runs.
+    pub churned_clients: u64,
 }
 
 impl RoundRecord {
@@ -141,11 +150,11 @@ impl MetricsLog {
     /// Per-round CSV (column list in the module docs).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "round,local_steps,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,cum_uplink_bits,cum_downlink_bits,total_cost,wall_secs,sim_secs,cum_sim_secs,dropped_clients\n",
+            "round,local_steps,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,cum_uplink_bits,cum_downlink_bits,total_cost,wall_secs,sim_secs,cum_sim_secs,dropped_clients,stale_updates,churned_clients\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{:.6},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{}\n",
+                "{},{},{:.6},{},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{},{},{}\n",
                 r.round,
                 r.local_steps,
                 r.train_loss,
@@ -161,6 +170,8 @@ impl MetricsLog {
                 r.sim_secs,
                 r.cum_sim_secs,
                 r.dropped_clients,
+                r.stale_updates,
+                r.churned_clients,
             ));
         }
         out
@@ -195,10 +206,16 @@ impl MetricsLog {
                 o.set("downlink_bits", r.downlink_bits.into());
                 o.set("cum_uplink_bits", r.cum_uplink_bits.into());
                 o.set("total_cost", r.total_cost.into());
-                if r.sim_secs > 0.0 || r.dropped_clients > 0 {
+                if r.sim_secs > 0.0
+                    || r.dropped_clients > 0
+                    || r.stale_updates > 0
+                    || r.churned_clients > 0
+                {
                     o.set("sim_secs", r.sim_secs.into());
                     o.set("cum_sim_secs", r.cum_sim_secs.into());
                     o.set("dropped_clients", r.dropped_clients.into());
+                    o.set("stale_updates", r.stale_updates.into());
+                    o.set("churned_clients", r.churned_clients.into());
                 }
                 o
             })
@@ -238,6 +255,8 @@ mod tests {
             sim_secs: 0.0,
             cum_sim_secs: 0.0,
             dropped_clients: 0,
+            stale_updates: 0,
+            churned_clients: 0,
         }
     }
 

@@ -16,7 +16,7 @@ pub struct SweepPreset {
     pub toml: &'static str,
 }
 
-static SWEEP_PRESETS: [SweepPreset; 10] = [
+static SWEEP_PRESETS: [SweepPreset; 11] = [
     SweepPreset {
         name: "sparsity",
         paper: "Table 1, Figure 1",
@@ -61,6 +61,11 @@ static SWEEP_PRESETS: [SweepPreset; 10] = [
         name: "bidir",
         paper: "Figure 16 (extended)",
         toml: include_str!("../../../experiments/bidir.toml"),
+    },
+    SweepPreset {
+        name: "stragglers",
+        paper: "",
+        toml: include_str!("../../../experiments/stragglers.toml"),
     },
     SweepPreset {
         name: "smoke",
@@ -125,6 +130,7 @@ mod tests {
         assert_eq!(runs("variants"), 9, "3 densities x 3 variants");
         assert_eq!(runs("double"), 5, "fig16 cases");
         assert_eq!(runs("bidir"), 6 + 4, "up curve + asymmetric grid");
+        assert_eq!(runs("stragglers"), 6, "2 uplinks x 3 scenarios");
         assert_eq!(runs("smoke"), 2);
     }
 }

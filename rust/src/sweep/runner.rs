@@ -98,17 +98,18 @@ pub struct SweepOutcome {
 /// Render the expanded matrix as the `--dry-run` table.
 pub fn format_matrix(units: &[RunUnit]) -> String {
     let mut out = format!(
-        "{:<40}{:<34}{:<18}{:<22}{:<10}{:<26}{:<26}{:>7}{:>7}{:>7}{:>8}{:>8}{:>7}\n",
-        "run_id", "algo", "dataset", "model", "transport", "up", "down", "rounds", "local", "p", "alpha", "gamma", "seed"
+        "{:<40}{:<34}{:<18}{:<22}{:<10}{:<18}{:<26}{:<26}{:>7}{:>7}{:>7}{:>8}{:>8}{:>7}\n",
+        "run_id", "algo", "dataset", "model", "transport", "scenario", "up", "down", "rounds", "local", "p", "alpha", "gamma", "seed"
     );
     for u in units {
         out.push_str(&format!(
-            "{:<40}{:<34}{:<18}{:<22}{:<10}{:<26}{:<26}{:>7}{:>7}{:>7}{:>8}{:>8}{:>7}\n",
+            "{:<40}{:<34}{:<18}{:<22}{:<10}{:<18}{:<26}{:<26}{:>7}{:>7}{:>7}{:>8}{:>8}{:>7}\n",
             u.id,
             u.algo,
             u.cfg.dataset.key(),
             u.model_key(),
             u.transport,
+            u.cfg.scenario,
             u.cfg.compress_up,
             u.cfg.compress_down,
             u.cfg.rounds,

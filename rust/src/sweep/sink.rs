@@ -10,19 +10,21 @@
 //!   rounds/<run_id>.jsonl    one JSON object per communication round
 //! ```
 //!
-//! # Summary CSV schema (v2)
+//! # Summary CSV schema (v3)
 //!
 //! ```text
 //! schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,
 //! local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,
 //! batch_size,eval_batch,eval_every,tau,data_dir,compress_up,
-//! compress_down,best_accuracy,final_accuracy,final_train_loss,
+//! compress_down,scenario,best_accuracy,final_accuracy,final_train_loss,
 //! total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,
-//! dropped_clients
+//! dropped_clients,stale_updates,churned_clients
 //! ```
 //!
 //! v2 appended the `compress_up`/`compress_down` columns to the
-//! configuration prefix (they are result-affecting); the sweep-*file*
+//! configuration prefix (they are result-affecting); v3 added the
+//! `scenario` axis (`fed::sim` round runtime) to the prefix and the
+//! `stale_updates`/`churned_clients` metric columns; the sweep-*file*
 //! schema is versioned separately and stayed at
 //! [`crate::sweep::spec::SCHEMA_VERSION`] = 1.
 //!
@@ -39,14 +41,15 @@
 //! sweep, rows are appended in completion order (crash-resumable); on
 //! completion the file is rewritten in canonical expansion order.
 //!
-//! # Round JSONL schema (v1)
+//! # Round JSONL schema
 //!
 //! One compact JSON object per round with keys `schema`, `run`, `round`,
 //! `local_steps`, `train_loss`, `test_loss`/`test_accuracy` (present only
 //! on evaluation rounds), `uplink_bits`, `downlink_bits`,
 //! `cum_uplink_bits`, `cum_downlink_bits`, `total_cost`, `sim_secs`,
-//! `cum_sim_secs`, `dropped_clients` (the last three only when a simulated
-//! transport produced them). Keys serialize in lexicographic order.
+//! `cum_sim_secs`, `dropped_clients`, `stale_updates`, `churned_clients`
+//! (the last five only when a simulated transport or scenario produced
+//! them). Keys serialize in lexicographic order.
 //!
 //! Wall-clock time is deliberately **excluded** from both formats (it would
 //! break bit-reproducibility); per-run wall time goes to the log output.
@@ -62,10 +65,10 @@ use std::path::{Path, PathBuf};
 /// Version of the *result* schema (summary CSV + round JSONL): stamped
 /// into every row/line and matched by `--resume`, so results written under
 /// an older schema are never silently reused.
-pub const RESULT_SCHEMA: i64 = 2;
+pub const RESULT_SCHEMA: i64 = 3;
 
-/// The pinned v2 summary header (also the golden-test reference).
-pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,compress_up,compress_down,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients";
+/// The pinned v3 summary header (also the golden-test reference).
+pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,compress_up,compress_down,scenario,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients";
 
 /// `<out>/<sweep>/summary.csv`.
 pub fn summary_path(sweep_dir: &Path) -> PathBuf {
@@ -92,7 +95,7 @@ fn opt_f64(v: Option<f64>) -> String {
 pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
     let cfg = &unit.cfg;
     format!(
-        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir},{compress_up},{compress_down}",
+        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir},{compress_up},{compress_down},{scenario}",
         schema = RESULT_SCHEMA,
         id = unit.id,
         algo = unit.algo,
@@ -116,6 +119,7 @@ pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
         data_dir = cfg.data_dir.display(),
         compress_up = cfg.compress_up,
         compress_down = cfg.compress_down,
+        scenario = cfg.scenario,
     )
 }
 
@@ -123,8 +127,10 @@ pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
 pub fn summary_row(sweep: &str, trainer: &str, unit: &RunUnit, log: &MetricsLog) -> String {
     let last = log.records.last();
     let dropped: u64 = log.records.iter().map(|r| r.dropped_clients).sum();
+    let stale: u64 = log.records.iter().map(|r| r.stale_updates).sum();
+    let churned: u64 = log.records.iter().map(|r| r.churned_clients).sum();
     format!(
-        "{key},{best},{fin},{loss},{up},{down},{cost},{sim},{dropped}",
+        "{key},{best},{fin},{loss},{up},{down},{cost},{sim},{dropped},{stale},{churned}",
         key = summary_key(sweep, trainer, unit),
         best = opt_f64(log.best_accuracy()),
         fin = opt_f64(log.final_accuracy()),
@@ -155,10 +161,17 @@ pub fn round_line(run_id: &str, r: &RoundRecord) -> String {
     o.set("cum_uplink_bits", r.cum_uplink_bits.into());
     o.set("cum_downlink_bits", r.cum_downlink_bits.into());
     o.set("total_cost", r.total_cost.into());
-    if r.sim_secs > 0.0 || r.cum_sim_secs > 0.0 || r.dropped_clients > 0 {
+    if r.sim_secs > 0.0
+        || r.cum_sim_secs > 0.0
+        || r.dropped_clients > 0
+        || r.stale_updates > 0
+        || r.churned_clients > 0
+    {
         o.set("sim_secs", r.sim_secs.into());
         o.set("cum_sim_secs", r.cum_sim_secs.into());
         o.set("dropped_clients", r.dropped_clients.into());
+        o.set("stale_updates", r.stale_updates.into());
+        o.set("churned_clients", r.churned_clients.into());
     }
     o.to_string_compact()
 }
@@ -234,6 +247,8 @@ mod tests {
             sim_secs: 0.0,
             cum_sim_secs: 0.0,
             dropped_clients: 0,
+            stale_updates: 0,
+            churned_clients: 0,
         }
     }
 
@@ -243,7 +258,7 @@ mod tests {
         assert_eq!(
             line,
             "{\"cum_downlink_bits\":200,\"cum_uplink_bits\":100,\"downlink_bits\":200,\
-             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":2,\
+             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":3,\
              \"total_cost\":1.07,\"train_loss\":0.5,\"uplink_bits\":100}"
         );
         let eval = round_line("r000-x", &record(1));
@@ -259,8 +274,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = summary_path(&dir);
         let rows = vec![
-            format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,0.8,0.7,0.3,1,2,3,0,0"),
-            format!("{RESULT_SCHEMA},r001-b,s,scaffold,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,q8,none,,,,1,2,3,0,0"),
+            format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,sync,0.8,0.7,0.3,1,2,3,0,0,0,0"),
+            format!("{RESULT_SCHEMA},r001-b,s,scaffold,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,q8,none,semisync:2@0.5,,,,1,2,3,0,0,1,1"),
         ];
         write_summary(&path, &rows).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();

@@ -23,16 +23,18 @@
 //! ```
 //!
 //! Axis keys (each accepts a scalar or a list; a missing axis inherits the
-//! base value): `algos`, `models`, `datasets`, `transports`, `compress_up`,
-//! `compress_down` over the string-keyed registries, plus scalar grids
-//! `rounds`, `local_iters`, `alphas`, `gammas`, `ps`, `seeds`. Any *other*
-//! key inside a `[[grid]]` block is a fixed per-block override routed
-//! through [`crate::config::apply_kv`], exactly like a `[run]`-table key.
+//! base value): `algos`, `models`, `datasets`, `transports`, `scenarios`
+//! (`sync` / `semisync:<K>[@<staleness>]` round runtimes — see
+//! [`crate::fed::sim`]), `compress_up`, `compress_down` over the
+//! string-keyed registries, plus scalar grids `rounds`, `local_iters`,
+//! `alphas`, `gammas`, `ps`, `seeds`. Any *other* key inside a `[[grid]]`
+//! block is a fixed per-block override routed through
+//! [`crate::config::apply_kv`], exactly like a `[run]`-table key.
 //!
 //! Expansion order is canonical and documented: grid blocks in file order;
 //! within a block, nested loops over dataset → model → transport →
-//! compress_up → compress_down → algo → rounds → local_iters → alpha →
-//! gamma → p → seed. Every expanded unit is fully validated (registry
+//! scenario → compress_up → compress_down → algo → rounds → local_iters →
+//! alpha → gamma → p → seed. Every expanded unit is fully validated (registry
 //! specs resolve, model/dataset dims agree, directional pipelines don't
 //! collide with algorithm-embedded compressors) before anything runs, so a
 //! typo fails the whole sweep up front instead of panicking inside a
@@ -71,6 +73,10 @@ pub struct GridBlock {
     pub datasets: Vec<String>,
     /// Transport specs (`inproc`, `simnet[:...]`).
     pub transports: Vec<String>,
+    /// Round-runtime scenario specs (`sync`,
+    /// `semisync:<K>[@<staleness>]` — [`crate::fed::sim::Scenario`]
+    /// grammar), stored canonicalized.
+    pub scenarios: Vec<String>,
     /// Uplink compression pipeline specs
     /// ([`crate::compress::CompressorSpec`] grammar).
     pub compress_up: Vec<String>,
@@ -201,6 +207,7 @@ impl GridBlock {
                 "models" => block.models = list_of_strings(key, value)?,
                 "datasets" => block.datasets = list_of_strings(key, value)?,
                 "transports" => block.transports = list_of_strings(key, value)?,
+                "scenarios" => block.scenarios = list_of_strings(key, value)?,
                 "compress_up" => block.compress_up = list_of_strings(key, value)?,
                 "compress_down" => block.compress_down = list_of_strings(key, value)?,
                 "rounds" => block.rounds = list_of_usize(key, value)?,
@@ -228,6 +235,7 @@ impl GridBlock {
         axis(self.datasets.len())
             * axis(self.models.len())
             * axis(self.transports.len())
+            * axis(self.scenarios.len())
             * axis(self.compress_up.len())
             * axis(self.compress_down.len())
             * self.algos.len()
@@ -425,6 +433,21 @@ impl SweepSpec {
         } else {
             block.transports.iter().map(|t| Some(t.clone())).collect()
         };
+        // Scenarios are stored canonicalized (staleness always explicit) so
+        // summary keys and run ids are stable across equivalent spellings.
+        let scenarios: Vec<Option<String>> = if block.scenarios.is_empty() {
+            vec![None]
+        } else {
+            block
+                .scenarios
+                .iter()
+                .map(|s| {
+                    crate::fed::sim::Scenario::parse(s)
+                        .map(|sc| Some(sc.key()))
+                        .map_err(|e| format!("scenarios '{s}': {e}"))
+                })
+                .collect::<Result<_, _>>()?
+        };
         let compress_axis = |axis: &[String], key: &str| -> Result<Vec<Option<String>>, String> {
             if axis.is_empty() {
                 return Ok(vec![None]);
@@ -466,58 +489,63 @@ impl SweepSpec {
         for dataset in &datasets {
             for model in &models {
                 for transport in &transports {
-                    for up in &compress_up {
-                        for down in &compress_down {
-                            for algo in &block.algos {
-                                for &r in &rounds {
-                                    for &li in &local_iters {
-                                        for &alpha in &alphas {
-                                            for &gamma in &gammas {
-                                                for &p in &ps {
-                                                    for &seed in &seeds {
-                                                        let mut cfg = base.clone();
-                                                        if let Some(ds) = dataset {
-                                                            cfg.dataset = ds.clone();
+                    for scenario in &scenarios {
+                        for up in &compress_up {
+                            for down in &compress_down {
+                                for algo in &block.algos {
+                                    for &r in &rounds {
+                                        for &li in &local_iters {
+                                            for &alpha in &alphas {
+                                                for &gamma in &gammas {
+                                                    for &p in &ps {
+                                                        for &seed in &seeds {
+                                                            let mut cfg = base.clone();
+                                                            if let Some(ds) = dataset {
+                                                                cfg.dataset = ds.clone();
+                                                            }
+                                                            if let Some(m) = model {
+                                                                cfg.model = m.clone();
+                                                            }
+                                                            if let Some(sc) = scenario {
+                                                                cfg.scenario = sc.clone();
+                                                            }
+                                                            if let Some(u) = up {
+                                                                cfg.compress_up = u.clone();
+                                                            }
+                                                            if let Some(dn) = down {
+                                                                cfg.compress_down = dn.clone();
+                                                            }
+                                                            if let Some(r) = r {
+                                                                cfg.rounds = r;
+                                                            }
+                                                            if let Some(li) = li {
+                                                                cfg.local_steps = li;
+                                                            }
+                                                            if let Some(a) = alpha {
+                                                                cfg.dirichlet_alpha = a;
+                                                            }
+                                                            if let Some(g) = gamma {
+                                                                cfg.gamma = g as f32;
+                                                            }
+                                                            if let Some(p) = p {
+                                                                cfg.p = p;
+                                                            }
+                                                            if let Some(s) = seed {
+                                                                cfg.seed = s;
+                                                            }
+                                                            let transport_spec = transport
+                                                                .clone()
+                                                                .unwrap_or_else(|| "inproc".to_string());
+                                                            validate_unit(&cfg, &transport_spec, algo)?;
+                                                            let index = units.len();
+                                                            units.push(RunUnit {
+                                                                index,
+                                                                id: unit_id(index, algo, &cfg),
+                                                                algo: algo.clone(),
+                                                                transport: transport_spec,
+                                                                cfg,
+                                                            });
                                                         }
-                                                        if let Some(m) = model {
-                                                            cfg.model = m.clone();
-                                                        }
-                                                        if let Some(u) = up {
-                                                            cfg.compress_up = u.clone();
-                                                        }
-                                                        if let Some(dn) = down {
-                                                            cfg.compress_down = dn.clone();
-                                                        }
-                                                        if let Some(r) = r {
-                                                            cfg.rounds = r;
-                                                        }
-                                                        if let Some(li) = li {
-                                                            cfg.local_steps = li;
-                                                        }
-                                                        if let Some(a) = alpha {
-                                                            cfg.dirichlet_alpha = a;
-                                                        }
-                                                        if let Some(g) = gamma {
-                                                            cfg.gamma = g as f32;
-                                                        }
-                                                        if let Some(p) = p {
-                                                            cfg.p = p;
-                                                        }
-                                                        if let Some(s) = seed {
-                                                            cfg.seed = s;
-                                                        }
-                                                        let transport_spec = transport
-                                                            .clone()
-                                                            .unwrap_or_else(|| "inproc".to_string());
-                                                        validate_unit(&cfg, &transport_spec, algo)?;
-                                                        let index = units.len();
-                                                        units.push(RunUnit {
-                                                            index,
-                                                            id: unit_id(index, algo, &cfg),
-                                                            algo: algo.clone(),
-                                                            transport: transport_spec,
-                                                            cfg,
-                                                        });
                                                     }
                                                 }
                                             }
@@ -535,11 +563,15 @@ impl SweepSpec {
 }
 
 /// Stable, filesystem-safe run id. Legacy shape (`r<idx>-<algo>`) when no
-/// directional pipeline is set; runs that differ only in
-/// `compress_up`/`compress_down` gain `-u-<spec>` / `-d-<spec>` suffixes
-/// so ids stay unique (they key resume and the JSONL files).
+/// directional pipeline or scenario is set; runs that differ only in
+/// `compress_up`/`compress_down`/`scenario` gain `-u-<spec>` / `-d-<spec>`
+/// / `-s-<spec>` suffixes so ids stay unique (they key resume and the
+/// JSONL files).
 fn unit_id(index: usize, algo: &str, cfg: &RunConfig) -> String {
     let mut id = format!("r{index:03}-{}", sanitize(algo));
+    if cfg.scenario != "sync" {
+        id.push_str(&format!("-s-{}", sanitize(&cfg.scenario)));
+    }
     if cfg.compress_up != "none" {
         id.push_str(&format!("-u-{}", sanitize(&cfg.compress_up)));
     }
@@ -593,6 +625,17 @@ fn validate_unit(cfg: &RunConfig, transport: &str, algo: &str) -> Result<(), Str
             "clients_per_round ({}) exceeds n_clients ({})",
             cfg.clients_per_round, cfg.n_clients
         ));
+    }
+    let scenario = crate::fed::sim::Scenario::parse(&cfg.scenario)
+        .map_err(|e| format!("scenario '{}': {e}", cfg.scenario))?;
+    if let crate::fed::sim::Scenario::Semisync { k, .. } = scenario {
+        if k > cfg.clients_per_round {
+            return Err(format!(
+                "semisync K ({k}) exceeds clients_per_round ({}); the server cannot \
+                 fold more arrivals than it samples",
+                cfg.clients_per_round
+            ));
+        }
     }
     if cfg.rounds == 0 {
         return Err("rounds must be at least 1".to_string());
@@ -816,6 +859,51 @@ rounds = 3
         assert_eq!(units.len(), 1);
         assert_eq!(units[0].cfg.compress_up, "topk:0.5");
         assert_eq!(units[0].cfg.compress_down, "q8");
+    }
+
+    #[test]
+    fn scenario_axis_expands_canonicalizes_and_suffixes_ids() {
+        let spec = SweepSpec::parse_str(
+            "name = \"s\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
+             scenarios = [\"sync\", \"semisync:2\", \"semisync:2@1\"]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.grids[0].len(), 3);
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 3);
+        assert_eq!(units[0].cfg.scenario, "sync");
+        // Omitted staleness canonicalizes to an explicit 0.5.
+        assert_eq!(units[1].cfg.scenario, "semisync:2@0.5");
+        assert_eq!(units[2].cfg.scenario, "semisync:2@1");
+        // Sync keeps the legacy id shape; semisync runs gain -s- suffixes.
+        assert_eq!(units[0].id, "r000-fedavg");
+        assert_eq!(units[1].id, "r001-fedavg-s-semisync_2_0.5");
+        assert_eq!(units[2].id, "r002-fedavg-s-semisync_2_1");
+    }
+
+    #[test]
+    fn scenario_validation_fails_expansion_up_front() {
+        for (toml, needle) in [
+            (
+                "name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nscenarios = [\"async\"]\n",
+                "unknown scenario",
+            ),
+            (
+                "name = \"s\"\n[[grid]]\nalgos = [\"fedavg\"]\nscenarios = [\"semisync:0\"]\n",
+                "K must be",
+            ),
+            // smoke preset samples 3 of 10 clients: K = 5 cannot fold.
+            (
+                "name = \"s\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
+                 scenarios = [\"semisync:5\"]\n",
+                "exceeds clients_per_round",
+            ),
+        ] {
+            let err = SweepSpec::parse_str(toml)
+                .and_then(|s| s.expand(1.0, None).map(|_| ()))
+                .unwrap_err();
+            assert!(err.contains(needle), "toml: {toml}\nerr: {err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! End-to-end pins for the scenario engine (`fed::sim`):
+//!
+//! * `scenario = "sync"` routes through the legacy drive path with
+//!   **bit-identical** output for all four algorithm families — the
+//!   degenerate case costs nothing and perturbs nothing;
+//! * semi-synchrony with K = clients_per_round on a lossless transport
+//!   reproduces the synchronous training trajectory exactly (every
+//!   delivered uplink is accepted), while `sim_secs` starts measuring
+//!   simulated compute + link wall-clock;
+//! * a semisync run is byte-invariant to `--threads` (all scheduling
+//!   state lives on the coordinator; the event queue orders by
+//!   `(time, seq)`, never by thread arrival);
+//! * transport-level dropout and scheduler-level churn never double-count
+//!   (one owner each — see `fed::sim::scheduler` docs);
+//! * simulated wall-clock is monotone: `cum_sim_secs` never decreases.
+
+use fedcomloc::fed::sim::{drive_scenario, Scenario};
+use fedcomloc::fed::transport::{parse_transport, InProc};
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
+use fedcomloc::metrics::MetricsLog;
+use fedcomloc::model::native::NativeTrainer;
+use std::sync::Arc;
+
+fn tiny_cfg() -> RunConfig {
+    RunConfig {
+        train_n: 1_200,
+        test_n: 300,
+        n_clients: 12,
+        clients_per_round: 4,
+        rounds: 8,
+        eval_every: 3,
+        gamma: 0.05,
+        ..RunConfig::default_mnist()
+    }
+}
+
+fn native() -> Arc<NativeTrainer> {
+    Arc::new(NativeTrainer::from_spec("mlp").unwrap())
+}
+
+const ALL_FOUR: [&str; 4] = ["fedcomloc-com:topk:0.3", "fedavg", "scaffold", "feddyn:0.01"];
+
+/// Every deterministic field of one round, floats bit-cast (`wall_secs` is
+/// real time and exempt; everything else must match exactly).
+#[allow(clippy::type_complexity)]
+fn fingerprint(log: &MetricsLog) -> Vec<(usize, usize, u64, Option<u64>, Option<u64>, u64, u64, u64, u64, u64, u64, u64, u64, u64, u64)> {
+    log.records
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.local_steps,
+                r.train_loss.to_bits(),
+                r.test_loss.map(f64::to_bits),
+                r.test_accuracy.map(f64::to_bits),
+                r.uplink_bits,
+                r.downlink_bits,
+                r.cum_uplink_bits,
+                r.cum_downlink_bits,
+                r.total_cost.to_bits(),
+                r.sim_secs.to_bits(),
+                r.cum_sim_secs.to_bits(),
+                r.dropped_clients,
+                r.stale_updates,
+                r.churned_clients,
+            )
+        })
+        .collect()
+}
+
+/// The training-trajectory subset: everything except the simulated-time
+/// and scenario-counter columns (which semisync legitimately changes).
+fn trajectory(log: &MetricsLog) -> Vec<(usize, usize, u64, Option<u64>, Option<u64>, u64, u64, u64)> {
+    log.records
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.local_steps,
+                r.train_loss.to_bits(),
+                r.test_loss.map(f64::to_bits),
+                r.test_accuracy.map(f64::to_bits),
+                r.uplink_bits,
+                r.downlink_bits,
+                r.total_cost.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn assert_cum_sim_secs_monotone(log: &MetricsLog, what: &str) {
+    let mut prev = 0.0f64;
+    for r in &log.records {
+        assert!(r.sim_secs >= 0.0, "{what}: round {} sim_secs {}", r.round, r.sim_secs);
+        assert!(
+            r.cum_sim_secs >= prev,
+            "{what}: cum_sim_secs decreased at round {}",
+            r.round
+        );
+        prev = r.cum_sim_secs;
+    }
+}
+
+#[test]
+fn sync_scenario_routes_through_the_legacy_drive_path_bit_identically() {
+    for spec in ALL_FOUR {
+        let cfg = tiny_cfg();
+        assert_eq!(cfg.scenario, "sync", "sync is the default");
+        let legacy = run(&cfg, native(), &AlgorithmSpec::parse(spec).unwrap());
+        // Dispatching the same run through the scenario engine's Sync arm
+        // must delegate to the untouched loop: identical records and meta.
+        let mut algo = AlgorithmSpec::parse(spec).unwrap().build();
+        let mut transport = InProc::default();
+        let scenario = drive_scenario(&cfg, native(), algo.as_mut(), &mut transport, &Scenario::Sync);
+        assert_eq!(fingerprint(&legacy), fingerprint(&scenario), "{spec}");
+        assert_eq!(legacy.run_name, scenario.run_name, "{spec}");
+        assert_eq!(legacy.meta, scenario.meta, "{spec}: sync adds no meta");
+        assert!(
+            !legacy.meta.iter().any(|(k, _)| k == "scenario"),
+            "{spec}: legacy logs stay byte-stable"
+        );
+    }
+}
+
+#[test]
+fn degenerate_semisync_reproduces_the_sync_trajectory_exactly() {
+    // K = clients_per_round on a lossless transport: every delivered
+    // uplink is accepted, so the algorithm sees exactly the synchronous
+    // round — losses, accuracies, and bits must match to the bit. Only
+    // the simulated clock (now including compute time) and the scenario
+    // meta may differ.
+    for spec in ALL_FOUR {
+        let sync_cfg = tiny_cfg();
+        let mut semi_cfg = tiny_cfg();
+        semi_cfg.scenario = "semisync:4@0.5".to_string();
+        let sync_log = run(&sync_cfg, native(), &AlgorithmSpec::parse(spec).unwrap());
+        let semi_log = run(&semi_cfg, native(), &AlgorithmSpec::parse(spec).unwrap());
+        assert_eq!(trajectory(&sync_log), trajectory(&semi_log), "{spec}");
+        assert!(
+            semi_log.records.iter().all(|r| r.stale_updates == 0 && r.churned_clients == 0),
+            "{spec}: nothing straggles when K = |S_r|"
+        );
+        // Compute time now registers on the virtual clock.
+        assert!(semi_log.records[0].sim_secs > 0.0, "{spec}");
+        assert_cum_sim_secs_monotone(&semi_log, spec);
+        assert!(
+            semi_log
+                .meta
+                .contains(&("scenario".to_string(), "semisync:4@0.5".to_string())),
+            "{spec}: scenario recorded in run meta"
+        );
+    }
+}
+
+#[test]
+fn semisync_run_is_bit_identical_across_thread_counts() {
+    let run_at = |threads: usize| {
+        let mut cfg = tiny_cfg();
+        cfg.scenario = "semisync:2@0.5".to_string();
+        cfg.threads = threads;
+        run(&cfg, native(), &AlgorithmSpec::parse("fedcomloc-com:topk:0.3").unwrap())
+    };
+    let one = run_at(1);
+    let four = run_at(4);
+    assert_eq!(
+        fingerprint(&one),
+        fingerprint(&four),
+        "scenario results must not depend on --threads"
+    );
+    // K=2 of 4 sampled: the run actually exercises straggling — at least
+    // one buffered update folds late or churns across 8 rounds.
+    let stale: u64 = one.records.iter().map(|r| r.stale_updates).sum();
+    let churned: u64 = one.records.iter().map(|r| r.churned_clients).sum();
+    assert!(stale + churned > 0, "stragglers never resolved: stale {stale} churned {churned}");
+    assert_cum_sim_secs_monotone(&one, "semisync threads=1");
+}
+
+#[test]
+fn transport_dropout_and_scheduler_churn_never_double_count() {
+    // Same seed, same SimNet (20% drop): the transport's availability
+    // stream is consumed identically under sync and semisync, so the
+    // per-round dropped_clients columns must be equal — a client the
+    // transport drops is never also buffered, staled, or churned by the
+    // scheduler (one owner per concept).
+    let run_scenario = |scenario: &str| {
+        let mut cfg = tiny_cfg();
+        cfg.scenario = scenario.to_string();
+        let mut transport = parse_transport("simnet:10:5:0.2:2", cfg.n_clients, cfg.seed).unwrap();
+        fedcomloc::fed::run_with_transport(
+            &cfg,
+            native(),
+            &AlgorithmSpec::parse("fedavg").unwrap(),
+            transport.as_mut(),
+        )
+    };
+    let sync_log = run_scenario("sync");
+    let semi_log = run_scenario("semisync:2@0.5");
+    let dropped = |log: &MetricsLog| -> Vec<u64> {
+        log.records.iter().map(|r| r.dropped_clients).collect()
+    };
+    assert_eq!(dropped(&sync_log), dropped(&semi_log), "dropout is transport-owned");
+    assert!(
+        dropped(&sync_log).iter().sum::<u64>() > 0,
+        "20% drop over 8x4 client-rounds should drop someone"
+    );
+    assert!(
+        sync_log.records.iter().all(|r| r.stale_updates == 0 && r.churned_clients == 0),
+        "sync rounds never stale or churn"
+    );
+    // Per-round sanity: the scheduler can never stale/churn more updates
+    // than clients exist, and dropped stays bounded by the sampled set.
+    for r in &semi_log.records {
+        assert!(r.dropped_clients <= tiny_cfg().clients_per_round as u64);
+        assert!(r.churned_clients <= tiny_cfg().n_clients as u64);
+    }
+    assert_cum_sim_secs_monotone(&semi_log, "semisync simnet");
+}

@@ -1,0 +1,566 @@
+//! [`Checkpointer`]: the [`DriveObserver`] that snapshots full federation
+//! state at round boundaries and restores it bit-identically on resume.
+//!
+//! Capture happens in [`DriveObserver::on_round_end`], after the round's
+//! [`crate::metrics::RoundRecord`] is committed, so a snapshot always
+//! represents a clean round boundary. Restore happens in
+//! [`DriveObserver::on_start`] — after [`crate::fed::FedAlgorithm::setup`]
+//! has built the algorithm's default state, which the checkpoint then
+//! overwrites — and returns the restored round index so the drive loop
+//! continues exactly where the checkpointed process stopped.
+//!
+//! The state inventory (one section each, see [`Snapshot`]):
+//!
+//! | section     | contents                                                |
+//! |-------------|---------------------------------------------------------|
+//! | `config`    | canonical run-config kv pairs (validated on resume)     |
+//! | `model`     | global parameters x                                     |
+//! | `fed_rng`   | federation root RNG (client sampling stream)            |
+//! | `clients`   | per client: h, RNG, loader permutation/cursor/RNG, `ef` residuals |
+//! | `downlink`  | server broadcast pipeline's `ef` residuals              |
+//! | `algo`      | the algorithm's [`AlgoState`] (server RNGs, variates, retained messages) |
+//! | `transport` | [`Transport::save_state`] bytes (SimNet RNG; ScenarioNet clock + straggler buffer, nested) |
+//! | `logger`    | cumulative bit/iteration/sim-time counters              |
+//! | `records`   | every round record emitted so far                       |
+
+use super::snapshot::{self, Snapshot};
+use crate::config;
+use crate::fed::algorithm::{DriveObserver, FedAlgorithm};
+use crate::fed::message::Message;
+use crate::fed::transport::Transport;
+use crate::fed::{AlgoState, Federation, RoundLogger, StateItem};
+use crate::metrics::RoundRecord;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use std::path::{Path, PathBuf};
+
+/// Checkpointing policy + crash injection, attached to a drive loop via
+/// [`crate::fed::run_with_transport_observed`].
+pub struct Checkpointer {
+    dir: PathBuf,
+    every: usize,
+    keep_last: usize,
+    crash_after: Option<usize>,
+    algo_spec: String,
+    resumed_from: Option<u64>,
+}
+
+impl Checkpointer {
+    /// A checkpointer writing into `dir` for a run of `algo_spec`
+    /// (the registry spec string). Defaults: snapshot every round, keep the
+    /// newest 3, never crash.
+    pub fn new(dir: &Path, algo_spec: &str) -> Checkpointer {
+        Checkpointer {
+            dir: dir.to_path_buf(),
+            every: 1,
+            keep_last: 3,
+            crash_after: None,
+            algo_spec: algo_spec.to_string(),
+            resumed_from: None,
+        }
+    }
+
+    /// Snapshot cadence in rounds; `0` disables periodic snapshots (the
+    /// final round is always written, so `serve` has an artifact).
+    pub fn every(mut self, rounds: usize) -> Checkpointer {
+        self.every = rounds;
+        self
+    }
+
+    /// Retention: keep the newest `n` checkpoints (`0` keeps all).
+    pub fn keep_last(mut self, n: usize) -> Checkpointer {
+        self.keep_last = n;
+        self
+    }
+
+    /// Stop the drive loop (without finalizing) after `rounds` completed
+    /// rounds — the controlled-crash hook the resume tests and the CI
+    /// `resume-smoke` job use to simulate a kill.
+    pub fn crash_after(mut self, rounds: usize) -> Checkpointer {
+        self.crash_after = Some(rounds);
+        self
+    }
+
+    /// The round the run resumed from, when [`DriveObserver::on_start`]
+    /// found and restored a checkpoint.
+    pub fn resumed_from(&self) -> Option<u64> {
+        self.resumed_from
+    }
+
+    fn capture(
+        &self,
+        completed: u64,
+        fed: &Federation,
+        algo: &dyn FedAlgorithm,
+        transport: &dyn Transport,
+        logger: &RoundLogger<'_>,
+    ) -> Snapshot {
+        let mut snap = Snapshot::new(completed, &self.algo_spec);
+        snap.push_section("config", encode_config(&config::to_kv(logger.cfg)));
+        let mut w = ByteWriter::new();
+        w.put_f32s(&fed.x);
+        snap.push_section("model", w.into_bytes());
+        let mut w = ByteWriter::new();
+        w.put_rng(&fed.rng);
+        snap.push_section("fed_rng", w.into_bytes());
+        let mut w = ByteWriter::new();
+        w.put_u64(fed.clients.len() as u64);
+        for client in &fed.clients {
+            let st = client.lock().unwrap();
+            w.put_f32s(&st.h);
+            w.put_rng(&st.rng);
+            let (indices, cursor, loader_rng) = st.loader.cursor_state();
+            w.put_usizes(indices);
+            w.put_u64(cursor as u64);
+            w.put_rng(loader_rng);
+            let residuals = st.up.ef_residuals();
+            w.put_u64(residuals.len() as u64);
+            for r in &residuals {
+                w.put_f32s(r);
+            }
+        }
+        snap.push_section("clients", w.into_bytes());
+        let mut w = ByteWriter::new();
+        let residuals = fed.downlink.ef_residuals();
+        w.put_u64(residuals.len() as u64);
+        for r in &residuals {
+            w.put_f32s(r);
+        }
+        snap.push_section("downlink", w.into_bytes());
+        snap.push_section("algo", encode_algo_state(&algo.save_state()));
+        snap.push_section("transport", transport.save_state());
+        let (cum_up, cum_down, cum_iters, cum_sim) = logger.cum_state();
+        let mut w = ByteWriter::new();
+        w.put_u64(cum_up);
+        w.put_u64(cum_down);
+        w.put_u64(cum_iters);
+        w.put_f64(cum_sim);
+        snap.push_section("logger", w.into_bytes());
+        snap.push_section("records", encode_records(&logger.log.records));
+        snap
+    }
+
+    fn restore(
+        &mut self,
+        snap: &Snapshot,
+        fed: &mut Federation,
+        algo: &mut dyn FedAlgorithm,
+        transport: &mut dyn Transport,
+        logger: &mut RoundLogger<'_>,
+    ) -> Result<u64, String> {
+        if snap.algo_spec != self.algo_spec {
+            return Err(format!(
+                "checkpoint was written by algorithm '{}' but this run uses '{}'",
+                snap.algo_spec, self.algo_spec
+            ));
+        }
+        let saved = decode_config(snap.section("config")?)?;
+        let live = config::to_kv(logger.cfg);
+        for (s, l) in saved.iter().zip(live.iter()) {
+            if s != l {
+                return Err(format!(
+                    "checkpoint config mismatch on '{}': checkpoint has '{}', run has '{}={}'",
+                    s.0, s.1, l.0, l.1
+                ));
+            }
+        }
+        if saved.len() != live.len() {
+            return Err(format!(
+                "checkpoint config has {} keys but this run has {}",
+                saved.len(),
+                live.len()
+            ));
+        }
+        let mut r = ByteReader::new(snap.section("model")?, "model section");
+        let x = r.take_f32s()?;
+        r.finish()?;
+        if x.len() != fed.x.len() {
+            return Err(format!(
+                "checkpoint model has dim {} but federation has {}",
+                x.len(),
+                fed.x.len()
+            ));
+        }
+        fed.x = x;
+        let mut r = ByteReader::new(snap.section("fed_rng")?, "fed_rng section");
+        fed.rng = r.take_rng()?;
+        r.finish()?;
+        let mut r = ByteReader::new(snap.section("clients")?, "clients section");
+        let n = r.take_u64()? as usize;
+        if n != fed.clients.len() {
+            return Err(format!(
+                "checkpoint has {n} clients but federation has {}",
+                fed.clients.len()
+            ));
+        }
+        for (ci, client) in fed.clients.iter().enumerate() {
+            let mut st = client.lock().unwrap();
+            let h = r.take_f32s()?;
+            if h.len() != st.h.len() {
+                return Err(format!("client {ci}: control variate dim mismatch"));
+            }
+            st.h = h;
+            st.rng = r.take_rng()?;
+            let indices = r.take_usizes()?;
+            let cursor = r.take_u64()? as usize;
+            let loader_rng = r.take_rng()?;
+            st.loader
+                .restore_cursor_state(indices, cursor, loader_rng)
+                .map_err(|e| format!("client {ci}: {e}"))?;
+            let n_res = r.take_u64()? as usize;
+            let mut residuals = Vec::with_capacity(n_res);
+            for _ in 0..n_res {
+                residuals.push(r.take_f32s()?);
+            }
+            st.up
+                .restore_ef_residuals(residuals)
+                .map_err(|e| format!("client {ci} uplink pipeline: {e}"))?;
+        }
+        r.finish()?;
+        let mut r = ByteReader::new(snap.section("downlink")?, "downlink section");
+        let n_res = r.take_u64()? as usize;
+        let mut residuals = Vec::with_capacity(n_res);
+        for _ in 0..n_res {
+            residuals.push(r.take_f32s()?);
+        }
+        r.finish()?;
+        fed.downlink
+            .restore_ef_residuals(residuals)
+            .map_err(|e| format!("downlink pipeline: {e}"))?;
+        algo.restore_state(decode_algo_state(snap.section("algo")?)?)
+            .map_err(|e| format!("algorithm state: {e}"))?;
+        transport
+            .restore_state(snap.section("transport")?)
+            .map_err(|e| format!("transport state: {e}"))?;
+        let mut r = ByteReader::new(snap.section("logger")?, "logger section");
+        let (cum_up, cum_down, cum_iters) = (r.take_u64()?, r.take_u64()?, r.take_u64()?);
+        let cum_sim = r.take_f64()?;
+        r.finish()?;
+        logger.restore_cum_state(cum_up, cum_down, cum_iters, cum_sim);
+        logger.log.records = decode_records(snap.section("records")?)?;
+        self.resumed_from = Some(snap.round);
+        Ok(snap.round)
+    }
+}
+
+impl DriveObserver for Checkpointer {
+    fn on_start(
+        &mut self,
+        fed: &mut Federation,
+        algo: &mut dyn FedAlgorithm,
+        transport: &mut dyn Transport,
+        logger: &mut RoundLogger<'_>,
+    ) -> Result<usize, String> {
+        match snapshot::latest_checkpoint(&self.dir) {
+            None => Ok(0),
+            Some((_, path)) => {
+                let snap = Snapshot::load(&path)?;
+                let round = self.restore(&snap, fed, algo, transport, logger)?;
+                log::info!(
+                    "resumed from {} at round {round}/{}",
+                    path.display(),
+                    logger.cfg.rounds
+                );
+                Ok((round as usize).min(logger.cfg.rounds))
+            }
+        }
+    }
+
+    fn on_round_end(
+        &mut self,
+        round: usize,
+        fed: &mut Federation,
+        algo: &mut dyn FedAlgorithm,
+        transport: &mut dyn Transport,
+        logger: &mut RoundLogger<'_>,
+    ) -> Result<bool, String> {
+        let completed = round + 1;
+        let due = (self.every > 0 && completed % self.every == 0) || completed == logger.cfg.rounds;
+        if due {
+            let snap = self.capture(completed as u64, fed, algo, transport, logger);
+            snap.save_atomic(&self.dir)?;
+            snapshot::prune(&self.dir, self.keep_last);
+        }
+        Ok(self.crash_after != Some(completed))
+    }
+}
+
+fn encode_config(kv: &[(String, String)]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u32(kv.len() as u32);
+    for (k, v) in kv {
+        w.put_str(k);
+        w.put_str(v);
+    }
+    w.into_bytes()
+}
+
+fn decode_config(bytes: &[u8]) -> Result<Vec<(String, String)>, String> {
+    let mut r = ByteReader::new(bytes, "config section");
+    let n = r.take_u32()? as usize;
+    let mut kv = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = r.take_str()?;
+        let v = r.take_str()?;
+        kv.push((k, v));
+    }
+    r.finish()?;
+    Ok(kv)
+}
+
+const ITEM_RNG: u8 = 0;
+const ITEM_VEC: u8 = 1;
+const ITEM_MSG: u8 = 2;
+
+fn encode_algo_state(state: &AlgoState) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u32(state.items().len() as u32);
+    for (name, item) in state.items() {
+        w.put_str(name);
+        match item {
+            StateItem::Rng(rng) => {
+                w.put_u8(ITEM_RNG);
+                w.put_rng(rng);
+            }
+            StateItem::VecF32(v) => {
+                w.put_u8(ITEM_VEC);
+                w.put_f32s(v);
+            }
+            StateItem::Msg(m) => {
+                w.put_u8(ITEM_MSG);
+                match m {
+                    None => w.put_u8(0),
+                    Some(msg) => {
+                        w.put_u8(1);
+                        w.put_bytes(&msg.encode());
+                    }
+                }
+            }
+        }
+    }
+    w.into_bytes()
+}
+
+fn decode_algo_state(bytes: &[u8]) -> Result<AlgoState, String> {
+    let mut r = ByteReader::new(bytes, "algo section");
+    let n = r.take_u32()? as usize;
+    let mut state = AlgoState::new();
+    for _ in 0..n {
+        let name = r.take_str()?;
+        match r.take_u8()? {
+            ITEM_RNG => {
+                let rng = r.take_rng()?;
+                state.push(&name, StateItem::Rng(rng));
+            }
+            ITEM_VEC => {
+                let v = r.take_f32s()?;
+                state.push(&name, StateItem::VecF32(v));
+            }
+            ITEM_MSG => {
+                let m = if r.take_u8()? == 1 {
+                    let frame = r.take_bytes()?;
+                    Some(
+                        Message::decode(&frame)
+                            .map_err(|e| format!("algo state '{name}': bad message: {e}"))?,
+                    )
+                } else {
+                    None
+                };
+                state.push(&name, StateItem::Msg(m));
+            }
+            tag => return Err(format!("algo state '{name}': unknown item tag {tag}")),
+        }
+    }
+    r.finish()?;
+    Ok(state)
+}
+
+fn encode_records(records: &[RoundRecord]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u64(records.len() as u64);
+    let put_opt = |w: &mut ByteWriter, v: Option<f64>| match v {
+        None => w.put_u8(0),
+        Some(x) => {
+            w.put_u8(1);
+            w.put_f64(x);
+        }
+    };
+    for r in records {
+        w.put_u64(r.round as u64);
+        w.put_u64(r.local_steps as u64);
+        w.put_f64(r.train_loss);
+        put_opt(&mut w, r.test_loss);
+        put_opt(&mut w, r.test_accuracy);
+        w.put_u64(r.uplink_bits);
+        w.put_u64(r.downlink_bits);
+        w.put_u64(r.cum_uplink_bits);
+        w.put_u64(r.cum_downlink_bits);
+        w.put_f64(r.total_cost);
+        w.put_f64(r.wall_secs);
+        w.put_f64(r.sim_secs);
+        w.put_f64(r.cum_sim_secs);
+        w.put_u64(r.dropped_clients);
+        w.put_u64(r.stale_updates);
+        w.put_u64(r.churned_clients);
+    }
+    w.into_bytes()
+}
+
+fn decode_records(bytes: &[u8]) -> Result<Vec<RoundRecord>, String> {
+    let mut r = ByteReader::new(bytes, "records section");
+    let n = r.take_u64()? as usize;
+    let mut records = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let round = r.take_u64()? as usize;
+        let local_steps = r.take_u64()? as usize;
+        let train_loss = r.take_f64()?;
+        let test_loss = if r.take_u8()? == 1 { Some(r.take_f64()?) } else { None };
+        let test_accuracy = if r.take_u8()? == 1 { Some(r.take_f64()?) } else { None };
+        records.push(RoundRecord {
+            round,
+            local_steps,
+            train_loss,
+            test_loss,
+            test_accuracy,
+            uplink_bits: r.take_u64()?,
+            downlink_bits: r.take_u64()?,
+            cum_uplink_bits: r.take_u64()?,
+            cum_downlink_bits: r.take_u64()?,
+            total_cost: r.take_f64()?,
+            wall_secs: r.take_f64()?,
+            sim_secs: r.take_f64()?,
+            cum_sim_secs: r.take_f64()?,
+            dropped_clients: r.take_u64()?,
+            stale_updates: r.take_u64()?,
+            churned_clients: r.take_u64()?,
+        });
+    }
+    r.finish()?;
+    Ok(records)
+}
+
+/// Decode the `records` section of a checkpoint — the deploy side
+/// ([`super::ServeState`]) reads the recorded metric history without
+/// rebuilding a federation.
+pub fn records_from_snapshot(snap: &Snapshot) -> Result<Vec<RoundRecord>, String> {
+    decode_records(snap.section("records")?)
+}
+
+/// Decode the `model` section of a checkpoint: the global parameter
+/// vector x as captured at the round boundary.
+pub fn model_from_snapshot(snap: &Snapshot) -> Result<Vec<f32>, String> {
+    let mut r = ByteReader::new(snap.section("model")?, "model section");
+    let x = r.take_f32s()?;
+    r.finish()?;
+    Ok(x)
+}
+
+/// Decode the `config` section of a checkpoint into kv pairs (see
+/// [`crate::config::to_kv`]).
+pub fn config_from_snapshot(snap: &Snapshot) -> Result<Vec<(String, String)>, String> {
+    decode_config(snap.section("config")?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn algo_state_roundtrips_every_item_shape() {
+        let mut rng = Rng::seed_from_u64(3);
+        let _ = rng.normal(); // leave a cached normal in the state
+        let mut state = AlgoState::new();
+        state.push_rng("coin", &rng);
+        state.push_vec("c_global", &[1.0, -2.5, 0.0]);
+        state.push_msg("kept", &Some(Message::dense(4, 9, &[0.5, 1.5])));
+        state.push_msg("empty", &None);
+        let mut back = decode_algo_state(&encode_algo_state(&state)).unwrap();
+        let mut got = back.take_rng("coin").unwrap();
+        assert_eq!(got.next_u64(), rng.clone().next_u64());
+        assert_eq!(got.normal().to_bits(), {
+            let mut orig = rng.clone();
+            orig.next_u64();
+            orig.normal().to_bits()
+        });
+        assert_eq!(back.take_vec("c_global").unwrap(), vec![1.0, -2.5, 0.0]);
+        let msg = back.take_msg("kept").unwrap().unwrap();
+        assert_eq!(msg.to_dense(), vec![0.5, 1.5]);
+        assert_eq!(msg.header.sender, 9);
+        assert_eq!(back.take_msg("empty").unwrap(), None);
+        back.finish().unwrap();
+    }
+
+    #[test]
+    fn algo_state_decode_rejects_corruption() {
+        let mut state = AlgoState::new();
+        state.push_vec("v", &[1.0]);
+        let bytes = encode_algo_state(&state);
+        assert!(decode_algo_state(&bytes[..bytes.len() - 2]).is_err());
+        let mut bad = bytes.clone();
+        // Flip the item tag byte (after count + name framing) to garbage.
+        let tag_pos = 4 + 4 + 1; // u32 count, u32 name len, "v"
+        bad[tag_pos] = 77;
+        assert!(decode_algo_state(&bad).unwrap_err().contains("tag"));
+    }
+
+    #[test]
+    fn records_roundtrip_bitwise() {
+        let records = vec![
+            RoundRecord {
+                round: 0,
+                local_steps: 10,
+                train_loss: 0.731,
+                test_loss: None,
+                test_accuracy: None,
+                uplink_bits: 12345,
+                downlink_bits: 54321,
+                cum_uplink_bits: 12345,
+                cum_downlink_bits: 54321,
+                total_cost: 1.1,
+                wall_secs: 0.023,
+                sim_secs: 2.5,
+                cum_sim_secs: 2.5,
+                dropped_clients: 1,
+                stale_updates: 0,
+                churned_clients: 0,
+            },
+            RoundRecord {
+                round: 1,
+                local_steps: 7,
+                train_loss: 0.5,
+                test_loss: Some(0.44),
+                test_accuracy: Some(0.81),
+                uplink_bits: 11,
+                downlink_bits: 22,
+                cum_uplink_bits: 12356,
+                cum_downlink_bits: 54343,
+                total_cost: 2.2,
+                wall_secs: 0.031,
+                sim_secs: 1.25,
+                cum_sim_secs: 3.75,
+                dropped_clients: 0,
+                stale_updates: 2,
+                churned_clients: 1,
+            },
+        ];
+        let back = decode_records(&encode_records(&records)).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in back.iter().zip(&records) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+            assert_eq!(a.cum_uplink_bits, b.cum_uplink_bits);
+            assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits());
+            assert_eq!(a.churned_clients, b.churned_clients);
+        }
+    }
+
+    #[test]
+    fn config_kv_roundtrips() {
+        let kv = vec![
+            ("rounds".to_string(), "6".to_string()),
+            ("scenario".to_string(), "semisync:2@0.5".to_string()),
+        ];
+        assert_eq!(decode_config(&encode_config(&kv)).unwrap(), kv);
+    }
+}

@@ -1,0 +1,50 @@
+//! Crash-tolerant checkpointing and checkpoint-backed inference serving.
+//!
+//! This subsystem closes the train→deploy loop: `fedcomloc run` snapshots
+//! the *entire* federation state at round boundaries, a killed run resumes
+//! **bit-identically** (the paper's determinism story extended across
+//! process lifetimes), and `fedcomloc serve` answers inference requests
+//! straight from a checkpoint file.
+//!
+//! Three pieces:
+//!
+//! * [`snapshot`] — the versioned, self-describing binary container
+//!   ([`Snapshot`]): a schema-tagged header plus named, length-framed,
+//!   CRC-guarded state sections, written atomically (tmp + fsync + rename)
+//!   so a crash mid-write can never corrupt the latest good checkpoint.
+//! * [`checkpointer`] — [`Checkpointer`], a
+//!   [`crate::fed::DriveObserver`] that captures/restores every
+//!   cross-round state stream: model parameters, the federation root RNG,
+//!   per-client control variates + RNG streams + loader cursors + `ef`
+//!   residuals, the downlink pipeline, the algorithm's
+//!   [`crate::fed::AlgoState`], the transport (including the scenario
+//!   engine's virtual clock and pending straggler buffer), the cumulative
+//!   metric counters, and the per-round records already emitted. Resume is
+//!   *bit-identical*: a run killed at any checkpointed round and restarted
+//!   produces byte-identical metrics to an uninterrupted run (pinned by
+//!   `rust/tests/checkpoint_resume.rs` across all four algorithms,
+//!   stateful `ef` pipelines, and `semisync` scenarios).
+//! * [`serve`] — [`ServeState`], the deploy side: loads a checkpoint,
+//!   rebuilds the model + eval set from the embedded config, and answers
+//!   `info`/`eval`/`predict` requests over a JSON-lines protocol, each
+//!   reply carrying the dense vs masked vs quantized inference cost
+//!   (parameters touched, wire-equivalent bytes, multiply-adds).
+//!
+//! The checkpoint embeds its full [`crate::fed::RunConfig`] as canonical
+//! key/value pairs ([`crate::config::to_kv`]); resume validates them
+//! against the live config and refuses a mismatch, naming the offending
+//! key — a checkpoint can never silently continue under different
+//! hyperparameters.
+
+pub mod checkpointer;
+pub mod serve;
+pub mod snapshot;
+
+pub use checkpointer::Checkpointer;
+pub use serve::ServeState;
+pub use snapshot::{latest_checkpoint, Snapshot};
+
+/// Checkpoint container schema version ([`Snapshot`] refuses other
+/// versions). Bump on any layout change to the header or the section
+/// encodings in [`checkpointer`].
+pub const SCHEMA_VERSION: u16 = 1;

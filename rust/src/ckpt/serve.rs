@@ -1,0 +1,435 @@
+//! [`ServeState`]: checkpoint-backed inference — the deploy side of the
+//! train→deploy loop.
+//!
+//! Loads a [`Snapshot`], rebuilds the model + eval set from the embedded
+//! config (the same [`crate::config::to_kv`] pairs resume validates
+//! against), and answers requests over a JSON-lines protocol: one request
+//! object per line in, one reply object per line out. `fedcomloc serve`
+//! owns the transport (stdin/stdout, optionally TCP); this module owns
+//! the state and the protocol.
+//!
+//! Requests (`cmd` selects):
+//!
+//! * `{"cmd":"info"}` — checkpoint provenance (round, algorithm, model,
+//!   dim, recorded final test metrics) plus the inference-cost report.
+//! * `{"cmd":"eval"}` — evaluate the checkpointed parameters over the
+//!   config's test split. The reduction is the sequential per-batch fold
+//!   of [`crate::model::LocalTrainer::eval_batch`] in batch order — the
+//!   bit-identical equivalent of the training-side
+//!   `Federation::evaluate`, so `accuracy` matches the checkpoint's
+//!   recorded final-round accuracy exactly (pinned by
+//!   `rust/tests/checkpoint_resume.rs`).
+//! * `{"cmd":"predict","x":[...]}` — classify one feature row. Probes
+//!   each class through `eval_batch` (loss −ln p_c per class), so it
+//!   works unchanged on both compute planes; replies with the argmax
+//!   class and per-class probabilities.
+//!
+//! Every reply carries `round` so clients can pin which checkpoint
+//! answered. Malformed input never kills the server: the reply is
+//! `{"error": ...}`.
+//!
+//! The inference-cost report compares three deployment formats of the
+//! same checkpointed vector: `dense` (every weight shipped and touched),
+//! `masked` (only the nonzero survivors of the TopK-sparsified model —
+//! wire cost is the exact `SparseIdx` framing the training wire uses),
+//! and `quantized8` (dense shape, 8-bit quantized words — wire cost from
+//! the paper's ⌈d/B⌉·32 + d·(r+2) bit formula). Parameters touched,
+//! wire-equivalent bytes, and forward multiply-adds per example.
+
+use super::checkpointer::{config_from_snapshot, model_from_snapshot, records_from_snapshot};
+use super::snapshot::Snapshot;
+use crate::compress::{Compressor, QuantizeR};
+use crate::config;
+use crate::data::loader::{eval_batches, Batch, EvalBatches};
+use crate::data::load_or_synthesize;
+use crate::fed::RunConfig;
+use crate::model::{Layer, LocalTrainer, Workspace};
+use crate::util::bitio::bits_for;
+use crate::util::json::{self, Json};
+use std::path::Path;
+use std::sync::Arc;
+
+/// A loaded checkpoint ready to answer `info`/`eval`/`predict` requests
+/// (see module docs for the protocol).
+pub struct ServeState {
+    cfg: RunConfig,
+    trainer: Arc<dyn LocalTrainer>,
+    x: Vec<f32>,
+    eval_set: EvalBatches,
+    ws: Workspace,
+    round: u64,
+    algo_spec: String,
+    recorded_loss: Option<f64>,
+    recorded_accuracy: Option<f64>,
+}
+
+impl ServeState {
+    /// Load a checkpoint file and rebuild everything inference needs.
+    /// `trainer_mode` is the shared `--trainer auto|native|pjrt` policy
+    /// (see [`crate::runtime::build_trainer`]); `artifacts_dir` is where
+    /// the AOT artifacts live when the PJRT plane is selected.
+    pub fn load(path: &Path, trainer_mode: &str, artifacts_dir: &Path) -> Result<ServeState, String> {
+        let snap = Snapshot::load(path)?;
+        Self::from_snapshot(&snap, trainer_mode, artifacts_dir)
+    }
+
+    /// [`ServeState::load`] over an already-decoded snapshot.
+    pub fn from_snapshot(
+        snap: &Snapshot,
+        trainer_mode: &str,
+        artifacts_dir: &Path,
+    ) -> Result<ServeState, String> {
+        let mut cfg = RunConfig::default_mnist();
+        cfg.model = None;
+        for (k, v) in &config_from_snapshot(snap)? {
+            config::apply_kv_str(&mut cfg, k, v)
+                .map_err(|e| format!("checkpoint config '{k}={v}': {e}"))?;
+        }
+        let trainer = crate::runtime::build_trainer(trainer_mode, artifacts_dir, &cfg.model_spec());
+        let x = model_from_snapshot(snap)?;
+        if x.len() != trainer.dim() {
+            return Err(format!(
+                "checkpoint model has dim {} but spec '{}' builds dim {}",
+                x.len(),
+                cfg.model_spec().key(),
+                trainer.dim()
+            ));
+        }
+        let data = load_or_synthesize(&cfg.dataset, &cfg.data_dir, cfg.train_n, cfg.test_n, cfg.seed);
+        let eval_set = eval_batches(&data.test, cfg.eval_batch);
+        let (mut recorded_loss, mut recorded_accuracy) = (None, None);
+        for r in records_from_snapshot(snap)?.iter().rev() {
+            if r.test_accuracy.is_some() {
+                recorded_loss = r.test_loss;
+                recorded_accuracy = r.test_accuracy;
+                break;
+            }
+        }
+        Ok(ServeState {
+            cfg,
+            trainer,
+            x,
+            eval_set,
+            ws: Workspace::new(),
+            round: snap.round,
+            algo_spec: snap.algo_spec.clone(),
+            recorded_loss,
+            recorded_accuracy,
+        })
+    }
+
+    /// The round the served checkpoint was captured at.
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// The algorithm spec recorded in the served checkpoint.
+    pub fn algo_spec(&self) -> &str {
+        &self.algo_spec
+    }
+
+    /// The final recorded test accuracy in the checkpoint's round records.
+    pub fn recorded_accuracy(&self) -> Option<f64> {
+        self.recorded_accuracy
+    }
+
+    /// Evaluate the checkpointed parameters over the test split — the
+    /// sequential fold that is bit-identical to the training-side
+    /// evaluation (see module docs).
+    pub fn eval(&mut self) -> crate::model::EvalResult {
+        self.trainer.eval_into(&self.x, &self.eval_set, &mut self.ws)
+    }
+
+    /// Classify one feature row: per-class loss probes through
+    /// [`LocalTrainer::eval_batch`] (−ln p_c), returning
+    /// `(argmax class, per-class probabilities)`.
+    pub fn predict(&mut self, row: &[f32]) -> Result<(usize, Vec<f64>), String> {
+        let d = self.trainer.model().input_dim();
+        if row.len() != d {
+            return Err(format!("predict needs {d} features, got {}", row.len()));
+        }
+        let classes = self.trainer.model().num_classes();
+        let bs = self.cfg.eval_batch;
+        let mut x = Vec::with_capacity(bs * d);
+        for _ in 0..bs {
+            x.extend_from_slice(row);
+        }
+        let mut probs = Vec::with_capacity(classes);
+        for c in 0..classes {
+            let batch = Batch {
+                x: x.clone(),
+                y: vec![c as i32; bs],
+                batch_size: bs,
+                feature_dim: d,
+            };
+            // valid=1: the loss over the single valid row is −ln p_c.
+            let (loss, _) = self.trainer.eval_batch(&self.x, &batch, 1, &mut self.ws);
+            probs.push((-loss).exp());
+        }
+        let best = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Ok((best, probs))
+    }
+
+    /// The dense vs masked vs quantized inference-cost report (see
+    /// module docs for the three formats).
+    pub fn inference_cost(&self) -> Json {
+        let d = self.x.len();
+        let nnz = self.x.iter().filter(|&&v| v != 0.0).count();
+        let mul_adds = dense_mul_adds(self.trainer.model());
+        let mut cost = Json::obj();
+        let mut dense = Json::obj();
+        dense.set("params", d.into());
+        dense.set("wire_bytes", (4 * d).into());
+        dense.set("mul_adds", mul_adds.into());
+        cost.set("dense", dense);
+        let mut masked = Json::obj();
+        masked.set("params", nnz.into());
+        // Exact SparseIdx framing: 32-bit k header + one packed index per
+        // survivor, then 4 bytes of value each (compress::validate_payload
+        // pins the same formula on the decode side).
+        let idx_bytes = (32 + nnz as u64 * bits_for(d as u64) as u64).div_ceil(8);
+        masked.set("wire_bytes", (idx_bytes + 4 * nnz as u64).into());
+        let scaled = (mul_adds as f64 * nnz as f64 / d.max(1) as f64).round() as u64;
+        masked.set("mul_adds", scaled.into());
+        masked.set("density", (nnz as f64 / d.max(1) as f64).into());
+        cost.set("masked", masked);
+        let mut quant = Json::obj();
+        quant.set("params", d.into());
+        quant.set(
+            "wire_bytes",
+            QuantizeR::new(8).nominal_bits(d).div_ceil(8).into(),
+        );
+        quant.set("mul_adds", mul_adds.into());
+        cost.set("quantized8", quant);
+        cost
+    }
+
+    /// Answer one JSON-lines request; the reply is always one compact
+    /// JSON object (an `{"error": ...}` object on malformed input).
+    pub fn handle_line(&mut self, line: &str) -> String {
+        match self.handle(line) {
+            Ok(reply) => reply.to_string_compact(),
+            Err(msg) => {
+                let mut e = Json::obj();
+                e.set("error", msg.into());
+                e.to_string_compact()
+            }
+        }
+    }
+
+    fn handle(&mut self, line: &str) -> Result<Json, String> {
+        let req = json::parse(line.trim()).map_err(|e| e.to_string())?;
+        let cmd = req
+            .get("cmd")
+            .and_then(|c| c.as_str())
+            .ok_or("request needs a string 'cmd' (info|eval|predict)")?;
+        let mut reply = Json::obj();
+        reply.set("round", self.round.into());
+        match cmd {
+            "info" => {
+                reply.set("algorithm", self.algo_spec.as_str().into());
+                reply.set("model", self.cfg.model_spec().key().into());
+                reply.set("dataset", self.cfg.dataset.key().into());
+                reply.set("dim", self.x.len().into());
+                if let Some(a) = self.recorded_accuracy {
+                    reply.set("recorded_test_accuracy", a.into());
+                }
+                if let Some(l) = self.recorded_loss {
+                    reply.set("recorded_test_loss", l.into());
+                }
+                reply.set("cost", self.inference_cost());
+            }
+            "eval" => {
+                let r = self.eval();
+                reply.set("mean_loss", r.mean_loss.into());
+                reply.set("accuracy", r.accuracy.into());
+                reply.set("examples", r.examples.into());
+                if let Some(a) = self.recorded_accuracy {
+                    reply.set("recorded_test_accuracy", a.into());
+                    reply.set("matches_recorded", (r.accuracy == a).into());
+                }
+                reply.set("cost", self.inference_cost());
+            }
+            "predict" => {
+                let xs = req
+                    .get("x")
+                    .and_then(|x| x.as_arr())
+                    .ok_or("predict needs a numeric array 'x'")?;
+                let mut row = Vec::with_capacity(xs.len());
+                for v in xs {
+                    row.push(v.as_f64().ok_or("predict 'x' must be all numbers")? as f32);
+                }
+                let (class, probs) = self.predict(&row)?;
+                reply.set("prediction", class.into());
+                reply.set("probabilities", probs.into());
+            }
+            other => return Err(format!("unknown cmd '{other}' (info|eval|predict)")),
+        }
+        Ok(reply)
+    }
+}
+
+/// Forward multiply-adds per example for a dense pass over `model`.
+fn dense_mul_adds(model: &crate::model::Model) -> u64 {
+    model
+        .layers()
+        .iter()
+        .map(|l| match *l {
+            Layer::Dense { in_dim, out_dim, .. } => (in_dim * out_dim) as u64,
+            Layer::Conv {
+                in_ch,
+                out_ch,
+                in_h,
+                in_w,
+                k,
+                ..
+            } => (out_ch * in_ch * k * k * (in_h - k + 1) * (in_w - k + 1)) as u64,
+            Layer::MaxPool2 { .. } => 0,
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+    use crate::util::bytes::ByteWriter;
+    use crate::util::rng::Rng;
+
+    fn tiny_snapshot(dir: &Path) -> std::path::PathBuf {
+        let mut cfg = RunConfig::default_mnist();
+        cfg.dataset = crate::data::DatasetSpec::parse("synthetic:64-c5").unwrap();
+        cfg.model = None;
+        cfg.train_n = 64;
+        cfg.test_n = 32;
+        cfg.eval_batch = 8;
+        cfg.rounds = 2;
+        let mut snap = Snapshot::new(2, "fedavg");
+        let kv = config::to_kv(&cfg);
+        let mut w = ByteWriter::new();
+        w.put_u32(kv.len() as u32);
+        for (k, v) in &kv {
+            w.put_str(k);
+            w.put_str(v);
+        }
+        snap.push_section("config", w.into_bytes());
+        // softmax:64x5 → 64*5 + 5 params
+        let mut rng = Rng::seed_from_u64(7);
+        let x: Vec<f32> = (0..64 * 5 + 5).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let mut w = ByteWriter::new();
+        w.put_f32s(&x);
+        snap.push_section("model", w.into_bytes());
+        let records = vec![RoundRecord {
+            round: 1,
+            local_steps: 4,
+            train_loss: 1.0,
+            test_loss: Some(1.5),
+            test_accuracy: Some(0.25),
+            uplink_bits: 0,
+            downlink_bits: 0,
+            cum_uplink_bits: 0,
+            cum_downlink_bits: 0,
+            total_cost: 0.0,
+            wall_secs: 0.0,
+            sim_secs: 0.0,
+            cum_sim_secs: 0.0,
+            dropped_clients: 0,
+            stale_updates: 0,
+            churned_clients: 0,
+        }];
+        let mut w = ByteWriter::new();
+        w.put_u64(1);
+        let r = &records[0];
+        w.put_u64(r.round as u64);
+        w.put_u64(r.local_steps as u64);
+        w.put_f64(r.train_loss);
+        w.put_u8(1);
+        w.put_f64(r.test_loss.unwrap());
+        w.put_u8(1);
+        w.put_f64(r.test_accuracy.unwrap());
+        for _ in 0..4 {
+            w.put_u64(0);
+        }
+        w.put_f64(r.total_cost);
+        w.put_f64(r.wall_secs);
+        w.put_f64(r.sim_secs);
+        w.put_f64(r.cum_sim_secs);
+        for _ in 0..3 {
+            w.put_u64(0);
+        }
+        snap.push_section("records", w.into_bytes());
+        snap.save_atomic(dir).unwrap()
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedcomloc-serve-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn info_eval_predict_over_a_tiny_checkpoint() {
+        let dir = temp_dir("proto");
+        let path = tiny_snapshot(&dir);
+        let mut state = ServeState::load(&path, "native", &dir).unwrap();
+        assert_eq!(state.round(), 2);
+        assert_eq!(state.algo_spec(), "fedavg");
+        assert_eq!(state.recorded_accuracy(), Some(0.25));
+
+        let info = json::parse(&state.handle_line(r#"{"cmd":"info"}"#)).unwrap();
+        assert_eq!(info.get("model").unwrap().as_str().unwrap(), "softmax:64x5");
+        assert_eq!(info.get("dim").unwrap().as_usize().unwrap(), 64 * 5 + 5);
+        let cost = info.get("cost").unwrap();
+        let dense = cost.get("dense").unwrap();
+        assert_eq!(dense.get("wire_bytes").unwrap().as_usize().unwrap(), 4 * 325);
+        assert_eq!(dense.get("mul_adds").unwrap().as_usize().unwrap(), 64 * 5);
+        let masked = cost.get("masked").unwrap();
+        assert!(masked.get("params").unwrap().as_usize().unwrap() <= 325);
+
+        let eval1 = json::parse(&state.handle_line(r#"{"cmd":"eval"}"#)).unwrap();
+        let eval2 = json::parse(&state.handle_line(r#"{"cmd":"eval"}"#)).unwrap();
+        assert_eq!(eval1, eval2, "eval must be deterministic");
+        assert_eq!(eval1.get("examples").unwrap().as_usize().unwrap(), 32);
+        // Same trainer + params as ServeState::eval.
+        let direct = state.eval();
+        assert_eq!(eval1.get("accuracy").unwrap().as_f64().unwrap(), direct.accuracy);
+
+        let row: Vec<String> = (0..64).map(|i| format!("{}", (i % 7) as f64 * 0.1)).collect();
+        let req = format!(r#"{{"cmd":"predict","x":[{}]}}"#, row.join(","));
+        let pred = json::parse(&state.handle_line(&req)).unwrap();
+        let class = pred.get("prediction").unwrap().as_usize().unwrap();
+        assert!(class < 5);
+        let probs = pred.get("probabilities").unwrap().as_arr().unwrap();
+        assert_eq!(probs.len(), 5);
+        let total: f64 = probs.iter().map(|p| p.as_f64().unwrap()).sum();
+        assert!((total - 1.0).abs() < 1e-3, "probs sum to ~1, got {total}");
+        assert!(probs[class].as_f64().unwrap() >= probs[(class + 1) % 5].as_f64().unwrap());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_requests_return_errors_not_panics() {
+        let dir = temp_dir("errs");
+        let path = tiny_snapshot(&dir);
+        let mut state = ServeState::load(&path, "native", &dir).unwrap();
+        for bad in [
+            "not json",
+            "{}",
+            r#"{"cmd":"launch-missiles"}"#,
+            r#"{"cmd":"predict"}"#,
+            r#"{"cmd":"predict","x":[1,2]}"#,
+            r#"{"cmd":"predict","x":["a"]}"#,
+        ] {
+            let reply = json::parse(&state.handle_line(bad)).unwrap();
+            assert!(reply.get("error").is_some(), "no error for {bad:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,327 @@
+//! The checkpoint container: a versioned, self-describing, CRC-guarded
+//! binary snapshot file.
+//!
+//! Layout (all integers little-endian, mirroring the wire
+//! [`crate::fed::message::Message`] framing discipline):
+//!
+//! ```text
+//! "FCKP"                      4-byte magic
+//! schema                      u16  (see [`crate::ckpt::SCHEMA_VERSION`])
+//! round                       u64  completed rounds when captured
+//! algo_spec                   u32 len + UTF-8 (registry spec string)
+//! n_sections                  u32
+//! per section:
+//!   name                      u32 len + UTF-8
+//!   payload                   u64 len + bytes
+//!   crc32(payload)            u32  (IEEE, [`crate::util::bytes::crc32`])
+//! ```
+//!
+//! Sections are named and length-framed, so a reader skips sections it
+//! does not understand and a writer may append new ones without a schema
+//! bump; every payload is CRC-guarded, so torn or bit-rotted state is
+//! detected at load, not at some confusing point mid-resume. Files are
+//! written atomically: serialize to `<name>.tmp`, flush + fsync, then
+//! rename over the final name — a crash mid-write leaves the previous
+//! checkpoint untouched.
+
+use super::SCHEMA_VERSION;
+use crate::util::bytes::{crc32, ByteReader, ByteWriter};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+const MAGIC: [u8; 4] = *b"FCKP";
+
+/// One checkpoint: header metadata plus named state sections.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Completed rounds when this snapshot was captured; resume restarts
+    /// the drive loop at exactly this round index.
+    pub round: u64,
+    /// The algorithm registry spec string the run was launched with;
+    /// resume refuses a different algorithm.
+    pub algo_spec: String,
+    /// Named state sections, in capture order.
+    pub sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Snapshot {
+    /// An empty snapshot for `round` completed rounds of `algo_spec`.
+    pub fn new(round: u64, algo_spec: &str) -> Snapshot {
+        Snapshot {
+            round,
+            algo_spec: algo_spec.to_string(),
+            sections: Vec::new(),
+        }
+    }
+
+    /// Append a named state section.
+    pub fn push_section(&mut self, name: &str, payload: Vec<u8>) {
+        self.sections.push((name.to_string(), payload));
+    }
+
+    /// Look up a section's payload by name.
+    pub fn section(&self, name: &str) -> Result<&[u8], String> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_slice())
+            .ok_or_else(|| format!("checkpoint is missing section '{name}'"))
+    }
+
+    /// Serialize the full container (header + CRC-framed sections).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        for b in MAGIC {
+            w.put_u8(b);
+        }
+        w.put_u16(SCHEMA_VERSION);
+        w.put_u64(self.round);
+        w.put_str(&self.algo_spec);
+        w.put_u32(self.sections.len() as u32);
+        for (name, payload) in &self.sections {
+            w.put_str(name);
+            w.put_bytes(payload);
+            w.put_u32(crc32(payload));
+        }
+        w.into_bytes()
+    }
+
+    /// Parse and validate a serialized container: magic, schema version,
+    /// and every section's CRC.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot, String> {
+        let mut r = ByteReader::new(bytes, "checkpoint");
+        let mut magic = [0u8; 4];
+        for b in &mut magic {
+            *b = r.take_u8()?;
+        }
+        if magic != MAGIC {
+            return Err(format!("not a checkpoint file (bad magic {magic:02x?})"));
+        }
+        let schema = r.take_u16()?;
+        if schema != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported checkpoint schema v{schema} (this build reads v{SCHEMA_VERSION})"
+            ));
+        }
+        let round = r.take_u64()?;
+        let algo_spec = r.take_str()?;
+        let n = r.take_u32()? as usize;
+        let mut sections = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = r.take_str()?;
+            let payload = r.take_bytes()?;
+            let want = r.take_u32()?;
+            let got = crc32(&payload);
+            if got != want {
+                return Err(format!(
+                    "checkpoint section '{name}' is corrupt: crc {got:08x} != recorded {want:08x}"
+                ));
+            }
+            sections.push((name, payload));
+        }
+        r.finish()?;
+        Ok(Snapshot {
+            round,
+            algo_spec,
+            sections,
+        })
+    }
+
+    /// Write the snapshot to `<dir>/ckpt-<round>.fckp` atomically
+    /// (tmp + flush + fsync + rename) and return the final path.
+    pub fn save_atomic(&self, dir: &Path) -> Result<PathBuf, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create checkpoint dir {}: {e}", dir.display()))?;
+        let path = dir.join(file_name(self.round));
+        let tmp = dir.join(format!("{}.tmp", file_name(self.round)));
+        let bytes = self.to_bytes();
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| format!("cannot create {}: {e}", tmp.display()))?;
+            f.write_all(&bytes)
+                .and_then(|_| f.flush())
+                .and_then(|_| f.sync_all())
+                .map_err(|e| format!("cannot write {}: {e}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("cannot rename {} -> {}: {e}", tmp.display(), path.display()))?;
+        // Make the rename itself durable (best-effort: directory handles
+        // are not syncable on every platform/filesystem).
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(path)
+    }
+
+    /// Read and validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Snapshot, String> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| format!("cannot read checkpoint {}: {e}", path.display()))?;
+        Snapshot::from_bytes(&bytes)
+            .map_err(|e| format!("invalid checkpoint {}: {e}", path.display()))
+    }
+
+    /// Human-readable description: schema, round, algorithm, and the name
+    /// and size of every state section (`fedcomloc ckpt inspect`).
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("schema:      v{SCHEMA_VERSION}\n"));
+        out.push_str(&format!("rounds done: {}\n", self.round));
+        out.push_str(&format!("algorithm:   {}\n", self.algo_spec));
+        out.push_str(&format!("sections:    {}\n", self.sections.len()));
+        for (name, payload) in &self.sections {
+            out.push_str(&format!(
+                "  {:<12} {:>10} bytes  crc32 {:08x}\n",
+                name,
+                payload.len(),
+                crc32(payload)
+            ));
+        }
+        out
+    }
+}
+
+/// Canonical checkpoint file name for `round` completed rounds.
+pub fn file_name(round: u64) -> String {
+    format!("ckpt-{round:06}.fckp")
+}
+
+/// The newest checkpoint in `dir`: `(completed_rounds, path)` with the
+/// highest round number, or `None` when the directory holds none (or does
+/// not exist). Only files matching the `ckpt-<round>.fckp` pattern are
+/// considered, so foreign files and leftover `.tmp` spills are ignored.
+pub fn latest_checkpoint(dir: &Path) -> Option<(u64, PathBuf)> {
+    let entries = std::fs::read_dir(dir).ok()?;
+    let mut best: Option<(u64, PathBuf)> = None;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(round) = parse_round(&name) {
+            let newer = match &best {
+                None => true,
+                Some((r, _)) => round > *r,
+            };
+            if newer {
+                best = Some((round, entry.path()));
+            }
+        }
+    }
+    best
+}
+
+/// Delete all but the newest `keep_last` checkpoints in `dir`
+/// (`keep_last == 0` keeps everything). Returns the number removed.
+pub fn prune(dir: &Path, keep_last: usize) -> usize {
+    if keep_last == 0 {
+        return 0;
+    }
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut found: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| parse_round(&e.file_name().to_string_lossy()).map(|r| (r, e.path())))
+        .collect();
+    found.sort_by_key(|(r, _)| std::cmp::Reverse(*r));
+    let mut removed = 0;
+    for (_, path) in found.into_iter().skip(keep_last) {
+        if std::fs::remove_file(&path).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+fn parse_round(name: &str) -> Option<u64> {
+    name.strip_prefix("ckpt-")?.strip_suffix(".fckp")?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedcomloc_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample() -> Snapshot {
+        let mut s = Snapshot::new(7, "fedcomloc-com:topk:0.1");
+        s.push_section("model", vec![1, 2, 3, 4, 5]);
+        s.push_section("fed_rng", vec![0xAA; 41]);
+        s.push_section("empty", Vec::new());
+        s
+    }
+
+    #[test]
+    fn container_roundtrips() {
+        let s = sample();
+        let back = Snapshot::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.section("model").unwrap(), &[1, 2, 3, 4, 5]);
+        assert!(back.section("nope").unwrap_err().contains("nope"));
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let s = sample();
+        let good = s.to_bytes();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(Snapshot::from_bytes(&bad).unwrap_err().contains("magic"));
+        // Wrong schema.
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(Snapshot::from_bytes(&bad).unwrap_err().contains("schema"));
+        // Flip a payload byte: the section's CRC must catch it.
+        let mut bad = good.clone();
+        let payload_pos = good
+            .windows(5)
+            .position(|w| w == [1, 2, 3, 4, 5])
+            .expect("payload present");
+        bad[payload_pos] ^= 0xFF;
+        let err = Snapshot::from_bytes(&bad).unwrap_err();
+        assert!(err.contains("corrupt") && err.contains("model"), "{err}");
+        // Truncation anywhere is an error, never a panic.
+        for cut in 0..good.len() {
+            assert!(Snapshot::from_bytes(&good[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn atomic_save_load_latest_and_prune() {
+        let dir = tmpdir("atomic");
+        for round in [2u64, 4, 6, 8] {
+            let mut s = sample();
+            s.round = round;
+            let path = s.save_atomic(&dir).unwrap();
+            assert_eq!(path.file_name().unwrap().to_string_lossy(), file_name(round));
+            assert_eq!(Snapshot::load(&path).unwrap().round, round);
+        }
+        // A leftover tmp spill and a foreign file are ignored.
+        std::fs::write(dir.join("ckpt-000099.fckp.tmp"), b"junk").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"junk").unwrap();
+        let (round, path) = latest_checkpoint(&dir).unwrap();
+        assert_eq!(round, 8);
+        assert_eq!(Snapshot::load(&path).unwrap().round, 8);
+        assert_eq!(prune(&dir, 2), 2);
+        assert_eq!(latest_checkpoint(&dir).unwrap().0, 8);
+        assert!(!dir.join(file_name(2)).exists());
+        assert!(!dir.join(file_name(4)).exists());
+        assert!(dir.join(file_name(6)).exists());
+        // keep_last = 0 keeps everything.
+        assert_eq!(prune(&dir, 0), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn describe_names_sections() {
+        let text = sample().describe();
+        assert!(text.contains("fedcomloc-com:topk:0.1"));
+        assert!(text.contains("model"));
+        assert!(text.contains("rounds done: 7"));
+    }
+}

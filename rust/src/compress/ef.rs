@@ -74,6 +74,14 @@ impl ErrorFeedback {
     pub fn residual(&self) -> &[f32] {
         &self.err
     }
+
+    /// Overwrite the residual with a checkpointed value (see
+    /// [`crate::ckpt`]). The restored dimension must match the link's first
+    /// post-restore [`ErrorFeedback::shift`] input, otherwise `shift` would
+    /// discard it as a dimension change.
+    pub fn restore_residual(&mut self, err: Vec<f32>) {
+        self.err = err;
+    }
 }
 
 #[cfg(test)]

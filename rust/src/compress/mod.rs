@@ -125,14 +125,131 @@ pub enum Codec {
     Natural,
 }
 
+/// A payload failed structural validation against its codec/dimension
+/// metadata — the codec-level error [`validate_payload`] reports before any
+/// decoder is allowed to touch (or allocate for) the bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadError {
+    /// The payload is shorter than a mandatory fixed-offset field requires.
+    Truncated {
+        /// Bytes the field requires.
+        need: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// The payload's declared structure disagrees with the codec metadata
+    /// (e.g. a dense payload whose length is not `4·dim`, or a sparse
+    /// survivor count exceeding the dimension).
+    Inconsistent(&'static str),
+}
+
+impl std::fmt::Display for PayloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PayloadError::Truncated { need, have } => {
+                write!(f, "truncated payload: need {need} bytes, have {have}")
+            }
+            PayloadError::Inconsistent(what) => {
+                write!(f, "codec/payload inconsistency: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PayloadError {}
+
+/// Check that a payload is structurally consistent with `(codec, dim)`
+/// *before* it reaches the panicking decoders or triggers any
+/// size-dependent allocation: exact sizes for the fixed-layout codecs,
+/// tight size *bounds* for the quantized ones (whose exact size depends on
+/// which bucket norms were zero), and declared survivor counts validated
+/// against `dim` so a hostile header cannot drive the decoder into absurd
+/// allocations. [`crate::fed::message::Message::decode`] maps this into its
+/// `WireError`; [`decode_payload_into`] enforces it on the in-process path.
+pub fn validate_payload(codec: Codec, dim: usize, payload: &[u8]) -> Result<(), PayloadError> {
+    use crate::util::bitio::bits_for;
+    // Survivor-count header shared by the sparse codecs (LE u32 at offset 0).
+    let survivors = |payload: &[u8]| -> Result<usize, PayloadError> {
+        if payload.len() < 4 {
+            return Err(PayloadError::Truncated {
+                need: 4,
+                have: payload.len(),
+            });
+        }
+        let k = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+        if k > dim {
+            return Err(PayloadError::Inconsistent("survivor count exceeds dimension"));
+        }
+        Ok(k)
+    };
+    let check_exact = |want: usize, what: &'static str| {
+        if payload.len() == want {
+            Ok(())
+        } else {
+            Err(PayloadError::Inconsistent(what))
+        }
+    };
+    let check_range = |min_bits: u64, max_bits: u64, what: &'static str| {
+        let len = payload.len() as u64;
+        if len >= min_bits.div_ceil(8) && len <= max_bits.div_ceil(8) {
+            Ok(())
+        } else {
+            Err(PayloadError::Inconsistent(what))
+        }
+    };
+    match codec {
+        Codec::Dense => check_exact(4 * dim, "dense payload length != 4*dim"),
+        Codec::SparseIdx => {
+            let k = survivors(payload)?;
+            let idx_bits = bits_for(dim as u64) as u64;
+            let want = (32 + k as u64 * idx_bits).div_ceil(8) as usize + 4 * k;
+            check_exact(want, "sparse-index payload length mismatch")
+        }
+        Codec::SparseBitmap => {
+            let k = survivors(payload)?;
+            let want = (32 + dim as u64).div_ceil(8) as usize + 4 * k;
+            check_exact(want, "sparse-bitmap payload length mismatch")
+        }
+        Codec::Quantized { bits, bucket } => {
+            if bucket == 0 {
+                return Err(PayloadError::Inconsistent("quantizer bucket must be nonzero"));
+            }
+            let buckets = (dim as u64).div_ceil(bucket as u64);
+            check_range(
+                32 * buckets,
+                32 * buckets + dim as u64 * (bits as u64 + 2),
+                "quantized payload length out of range",
+            )
+        }
+        Codec::SparseQuantized { bits, bucket } => {
+            if bucket == 0 {
+                return Err(PayloadError::Inconsistent("quantizer bucket must be nonzero"));
+            }
+            let k = survivors(payload)? as u64;
+            let buckets = k.div_ceil(bucket as u64);
+            let base = 32 + 32 * buckets + k * bits_for(dim as u64) as u64;
+            check_range(
+                base,
+                base + k * (bits as u64 + 2),
+                "sparse-quantized payload length out of range",
+            )
+        }
+        Codec::Natural => check_exact(
+            (9 * dim as u64).div_ceil(8) as usize,
+            "natural payload length != ceil(9*dim/8)",
+        ),
+    }
+}
+
 /// Decode a serialized payload into a dense `dim`-vector from the wire
 /// metadata alone. This is the single decode path for every codec: the
 /// `Compressor::decompress` impls and the transport layer both dispatch
 /// here, so an encoder/decoder mismatch is impossible by construction.
 ///
 /// Panics on corrupt payloads (wire corruption is a programming error in
-/// the in-process transports; a remote transport would validate framing in
-/// [`crate::fed::message::Message::decode`] first).
+/// the in-process transports; a remote transport validates framing in
+/// [`crate::fed::message::Message::decode`] first, which routes the same
+/// [`validate_payload`] check into a recoverable error).
 pub fn decode_payload(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32> {
     let mut out = vec![0.0f32; dim];
     decode_payload_into(codec, dim, payload, &mut out);
@@ -141,9 +258,15 @@ pub fn decode_payload(codec: Codec, dim: usize, payload: &[u8]) -> Vec<f32> {
 
 /// [`decode_payload`] into a caller buffer of exactly `dim` elements
 /// (fully overwritten) — the zero-allocation decode path the drivers'
-/// reused delivery buffers go through.
+/// reused delivery buffers go through. Validates the payload structure
+/// ([`validate_payload`]) before dispatching, so a corrupt buffer panics
+/// with a diagnostic here instead of an index-out-of-bounds deep inside a
+/// codec decoder.
 pub fn decode_payload_into(codec: Codec, dim: usize, payload: &[u8], out: &mut [f32]) {
     assert_eq!(out.len(), dim, "decode buffer must be exactly dim");
+    if let Err(e) = validate_payload(codec, dim, payload) {
+        panic!("decode_payload: {e}");
+    }
     match codec {
         Codec::Dense => identity::decode_dense_into(dim, payload, out),
         Codec::SparseIdx | Codec::SparseBitmap => topk::decode_sparse_into(codec, dim, payload, out),
@@ -262,6 +385,58 @@ mod tests {
         assert!(parse_spec("q:33").is_err());
         assert!(parse_spec("wat").is_err());
         assert!(parse_spec("ef(topk:0.1)").is_err(), "stateful needs CompressorSpec");
+    }
+
+    #[test]
+    fn validate_payload_accepts_real_encoders_rejects_corruption() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(11);
+        let x: Vec<f32> = (0..300).map(|i| ((i as f32) - 150.0) / 13.0).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(TopK::with_density(0.1)),
+            Box::new(RandK::with_density(0.2)),
+            Box::new(QuantizeR::new(5)),
+            Box::new(Natural),
+            parse_spec("topk:0.25|q4").unwrap(),
+        ];
+        for c in comps {
+            let enc = c.compress(&x, &mut rng);
+            assert_eq!(
+                validate_payload(enc.codec, enc.dim, &enc.payload),
+                Ok(()),
+                "{}",
+                c.name()
+            );
+            // Growing past every codec's upper bound (the quantized ranges
+            // allow at most (bits+2)/8 bytes of slack per coordinate, far
+            // less than 4 bytes per coordinate) must be rejected.
+            let mut grown = enc.payload.clone();
+            grown.resize(grown.len() + 4 * enc.dim, 0);
+            assert!(
+                validate_payload(enc.codec, enc.dim, &grown).is_err(),
+                "{} must reject oversized payload",
+                c.name()
+            );
+        }
+        // Exact-size codecs catch a dimension mismatch outright.
+        let dense = Identity.compress(&x, &mut rng);
+        assert!(validate_payload(Codec::Dense, x.len() + 1, &dense.payload).is_err());
+        let nat = Natural.compress(&x, &mut rng);
+        assert!(validate_payload(Codec::Natural, x.len() + 1, &nat.payload).is_err());
+        // Sparse survivor count exceeding dim is refused without allocating.
+        let sparse = TopK::with_density(0.1).compress(&x, &mut rng);
+        let mut bad = sparse.payload.clone();
+        bad[0..4].copy_from_slice(&10_000u32.to_le_bytes());
+        assert_eq!(
+            validate_payload(sparse.codec, sparse.dim, &bad),
+            Err(PayloadError::Inconsistent("survivor count exceeds dimension"))
+        );
+        // Empty sparse payload reports truncation, not inconsistency.
+        assert_eq!(
+            validate_payload(Codec::SparseIdx, 100, &[]),
+            Err(PayloadError::Truncated { need: 4, have: 0 })
+        );
     }
 
     #[test]

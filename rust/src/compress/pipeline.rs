@@ -162,6 +162,24 @@ impl Node {
         // feedback carries memory between calls.
         matches!(self, Node::Ef { .. })
     }
+
+    fn collect_residuals(&self, out: &mut Vec<Vec<f32>>) {
+        if let Node::Ef { fb, inner } = self {
+            out.push(fb.residual().to_vec());
+            inner.collect_residuals(out);
+        }
+    }
+
+    fn restore_residuals(&mut self, src: &mut std::vec::IntoIter<Vec<f32>>) -> Result<(), String> {
+        if let Node::Ef { fb, inner } = self {
+            let err = src
+                .next()
+                .ok_or_else(|| "too few ef residuals for pipeline".to_string())?;
+            fb.restore_residual(err);
+            inner.restore_residuals(src)?;
+        }
+        Ok(())
+    }
 }
 
 /// One link's compression pipeline instance: the compiled spec plus any
@@ -245,6 +263,28 @@ impl Pipeline {
     /// Worst-case wire bits at round `round` for dimension `d`.
     pub fn nominal_bits(&self, d: usize, round: usize) -> u64 {
         self.node.nominal_bits(d, round)
+    }
+
+    /// Snapshot every [`ErrorFeedback`] residual in the pipeline, outermost
+    /// first (DFS order). Stateless pipelines return an empty vector. The
+    /// companion of [`Pipeline::restore_ef_residuals`] — together they make
+    /// stateful `ef(...)` links checkpointable (see [`crate::ckpt`]).
+    pub fn ef_residuals(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        self.node.collect_residuals(&mut out);
+        out
+    }
+
+    /// Restore residuals captured by [`Pipeline::ef_residuals`] on a
+    /// freshly-built pipeline of the same spec. Errors if the count does
+    /// not match the pipeline's `ef` node count.
+    pub fn restore_ef_residuals(&mut self, residuals: Vec<Vec<f32>>) -> Result<(), String> {
+        let mut iter = residuals.into_iter();
+        self.node.restore_residuals(&mut iter)?;
+        if iter.next().is_some() {
+            return Err("too many ef residuals for pipeline".to_string());
+        }
+        Ok(())
     }
 }
 

@@ -130,6 +130,50 @@ pub fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(),
     Ok(())
 }
 
+/// Apply one `[run]`-table key given as a raw string (the checkpoint kv
+/// section's format): the value is typed per-key exactly like a CLI flag
+/// and routed through [`apply_kv`], so a key accepted here is accepted in
+/// TOML and on the command line and vice versa.
+pub fn apply_kv_str(cfg: &mut RunConfig, key: &str, raw: &str) -> Result<(), String> {
+    let value = parse_flag_value(key, raw)?;
+    apply_kv(cfg, key, &value)
+}
+
+/// Export a [`RunConfig`] as canonical `(key, value)` string pairs — the
+/// inverse of [`apply_kv_str`] for every result-affecting setting. Used by
+/// the checkpoint format to embed (and on resume, validate) the exact run
+/// configuration. `threads` is deliberately excluded: it is host-local
+/// parallelism and must not block resuming on a different machine; the
+/// `model` key is emitted only when explicitly set, mirroring the
+/// dataset-default fallback of [`RunConfig::model_spec`].
+pub fn to_kv(cfg: &RunConfig) -> Vec<(String, String)> {
+    let mut kv: Vec<(String, String)> = Vec::new();
+    let mut put = |k: &str, v: String| kv.push((k.to_string(), v));
+    put("dataset", cfg.dataset.key().to_string());
+    if let Some(model) = &cfg.model {
+        put("model", model.key().to_string());
+    }
+    put("train_n", cfg.train_n.to_string());
+    put("test_n", cfg.test_n.to_string());
+    put("clients", cfg.n_clients.to_string());
+    put("sampled", cfg.clients_per_round.to_string());
+    put("alpha", cfg.dirichlet_alpha.to_string());
+    put("rounds", cfg.rounds.to_string());
+    put("p", cfg.p.to_string());
+    put("local_steps", cfg.local_steps.to_string());
+    put("gamma", cfg.gamma.to_string());
+    put("batch_size", cfg.batch_size.to_string());
+    put("eval_batch", cfg.eval_batch.to_string());
+    put("eval_every", cfg.eval_every.to_string());
+    put("seed", cfg.seed.to_string());
+    put("tau", cfg.tau.to_string());
+    put("data_dir", cfg.data_dir.to_string_lossy().into_owned());
+    put("compress_up", cfg.compress_up.clone());
+    put("compress_down", cfg.compress_down.clone());
+    put("scenario", cfg.scenario.clone());
+    kv
+}
+
 /// Apply the `--scale` factor shared by `fedcomloc experiment` and
 /// `fedcomloc sweep run`: multiply rounds and dataset sizes toward the
 /// paper's full configuration, with floors keeping tiny factors runnable.
@@ -329,6 +373,30 @@ clients = 50
         let mut cfg = RunConfig::default_mnist();
         apply_cli(&mut cfg, &args).unwrap();
         assert_eq!(cfg.scenario, "semisync:2@1");
+    }
+
+    #[test]
+    fn kv_roundtrip_reconstructs_config() {
+        let mut cfg = RunConfig::default_mnist();
+        cfg.model = Some(ModelSpec::parse("linear:784").unwrap());
+        cfg.compress_up = "ef(topk:0.1)".into();
+        cfg.compress_down = "q8".into();
+        cfg.scenario = "semisync:2@0.5".into();
+        cfg.seed = 42;
+        cfg.gamma = 0.037;
+        cfg.dirichlet_alpha = 0.31;
+        cfg.rounds = 17;
+        let kv = to_kv(&cfg);
+        assert!(kv.iter().all(|(k, _)| k != "threads"), "threads is host-local");
+        let mut back = RunConfig::default_mnist();
+        for (k, v) in &kv {
+            apply_kv_str(&mut back, k, v).unwrap();
+        }
+        // Fixpoint: re-exporting the reconstruction reproduces the pairs.
+        assert_eq!(to_kv(&back), kv);
+        assert_eq!(back.gamma, cfg.gamma);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.model_spec().key(), "linear:784");
     }
 
     #[test]

@@ -54,6 +54,47 @@ impl ClientLoader {
         self.indices.len()
     }
 
+    /// Snapshot the loader's mutable state — the current shard permutation,
+    /// batch cursor, and shuffle stream — for checkpointing (the `data`
+    /// reference and `batch_size` are rebuilt from config on resume).
+    pub fn cursor_state(&self) -> (&[usize], usize, &Rng) {
+        (&self.indices, self.cursor, &self.rng)
+    }
+
+    /// Restore a [`ClientLoader::cursor_state`] snapshot onto a loader
+    /// rebuilt over the same shard. Errors if the permutation is not a
+    /// same-length reordering of this loader's indices or the cursor is out
+    /// of range, so a checkpoint from a different partition cannot be
+    /// silently applied.
+    pub fn restore_cursor_state(
+        &mut self,
+        indices: Vec<usize>,
+        cursor: usize,
+        rng: Rng,
+    ) -> Result<(), String> {
+        if indices.len() != self.indices.len() {
+            return Err(format!(
+                "loader shard mismatch: checkpoint has {} indices, partition has {}",
+                indices.len(),
+                self.indices.len()
+            ));
+        }
+        let mut a = indices.clone();
+        let mut b = self.indices.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        if a != b {
+            return Err("loader shard mismatch: checkpoint permutes a different index set".into());
+        }
+        if cursor > indices.len() {
+            return Err(format!("loader cursor {cursor} out of range"));
+        }
+        self.indices = indices;
+        self.cursor = cursor;
+        self.rng = rng;
+        Ok(())
+    }
+
     fn reshuffle(&mut self) {
         self.rng.shuffle(&mut self.indices);
         self.cursor = 0;

@@ -21,10 +21,12 @@
 //!                └─────────────────┴── uplink(update) ◄┘
 //! ```
 
+use super::message::Message;
 use super::transport::Transport;
 use super::{ClientState, Federation, RoundLogger, RunConfig};
 use crate::metrics::MetricsLog;
 use crate::model::{LocalTrainer, Workspace};
+use crate::util::rng::Rng;
 use std::sync::Arc;
 
 /// What one communication round reports back to the drive loop. Wire usage
@@ -101,6 +103,112 @@ pub enum UplinkKind {
     Delta,
 }
 
+/// One named piece of algorithm-local server state, as enumerated by
+/// [`FedAlgorithm::save_state`]: the three shapes the shipped drivers hold
+/// (RNG streams, f32 vectors, a retained wire message).
+#[derive(Debug, Clone)]
+pub enum StateItem {
+    /// An RNG stream (coin stream, server compression randomness).
+    Rng(Rng),
+    /// A server-side vector (Scaffold's c, FedDyn's s).
+    VecF32(Vec<f32>),
+    /// An optionally-retained wire message (FedComLoc's compressed
+    /// downlink), stored in its encoded frame form.
+    Msg(Option<Message>),
+}
+
+/// An ordered, named collection of [`StateItem`]s — what an algorithm hands
+/// to a checkpoint and receives back on resume. Names make mismatches
+/// (schema drift, wrong algorithm) fail loudly instead of silently
+/// transposing state.
+#[derive(Debug, Default)]
+pub struct AlgoState {
+    items: Vec<(String, StateItem)>,
+}
+
+impl AlgoState {
+    /// An empty state (what a stateless algorithm saves).
+    pub fn new() -> AlgoState {
+        AlgoState::default()
+    }
+
+    /// True when no items were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The recorded items, in save order (for serialization).
+    pub fn items(&self) -> &[(String, StateItem)] {
+        &self.items
+    }
+
+    /// Record one named item.
+    pub fn push(&mut self, name: &str, item: StateItem) {
+        self.items.push((name.to_string(), item));
+    }
+
+    /// Record a named RNG stream.
+    pub fn push_rng(&mut self, name: &str, rng: &Rng) {
+        self.push(name, StateItem::Rng(rng.clone()));
+    }
+
+    /// Record a named f32 vector.
+    pub fn push_vec(&mut self, name: &str, v: &[f32]) {
+        self.push(name, StateItem::VecF32(v.to_vec()));
+    }
+
+    /// Record a named optional message.
+    pub fn push_msg(&mut self, name: &str, m: &Option<Message>) {
+        self.push(name, StateItem::Msg(m.clone()));
+    }
+
+    fn take(&mut self, name: &str) -> Result<StateItem, String> {
+        if self.items.is_empty() {
+            return Err(format!("algorithm state '{name}' missing from checkpoint"));
+        }
+        let (got, item) = self.items.remove(0);
+        if got != name {
+            return Err(format!("algorithm state order mismatch: want '{name}', found '{got}'"));
+        }
+        Ok(item)
+    }
+
+    /// Remove and return the next item, which must be the RNG named `name`.
+    pub fn take_rng(&mut self, name: &str) -> Result<Rng, String> {
+        match self.take(name)? {
+            StateItem::Rng(r) => Ok(r),
+            other => Err(format!("algorithm state '{name}' has wrong type: {other:?}")),
+        }
+    }
+
+    /// Remove and return the next item, which must be the vector named
+    /// `name`.
+    pub fn take_vec(&mut self, name: &str) -> Result<Vec<f32>, String> {
+        match self.take(name)? {
+            StateItem::VecF32(v) => Ok(v),
+            other => Err(format!("algorithm state '{name}' has wrong type: {other:?}")),
+        }
+    }
+
+    /// Remove and return the next item, which must be the message named
+    /// `name`.
+    pub fn take_msg(&mut self, name: &str) -> Result<Option<Message>, String> {
+        match self.take(name)? {
+            StateItem::Msg(m) => Ok(m),
+            other => Err(format!("algorithm state '{name}' has wrong type: {other:?}")),
+        }
+    }
+
+    /// Error unless every item was consumed — a restore that leaves state
+    /// behind restored the wrong algorithm.
+    pub fn finish(self) -> Result<(), String> {
+        if let Some((name, _)) = self.items.first() {
+            return Err(format!("unconsumed algorithm state '{name}' in checkpoint"));
+        }
+        Ok(())
+    }
+}
+
 /// A federated algorithm, drivable by [`drive`]. Implementations hold all
 /// algorithm-local server state (control variates, regularizer state, coin
 /// streams) and initialize it in [`FedAlgorithm::setup`].
@@ -130,6 +238,77 @@ pub trait FedAlgorithm: Send {
     fn uplink_kind(&self) -> UplinkKind {
         UplinkKind::Model
     }
+
+    /// Enumerate algorithm-local server state for a checkpoint
+    /// ([`crate::ckpt`]), taken at a round boundary. Stateless algorithms
+    /// keep the empty default; stateful ones must save everything their
+    /// [`FedAlgorithm::round`] reads across rounds (RNG streams included).
+    fn save_state(&self) -> AlgoState {
+        AlgoState::new()
+    }
+
+    /// Restore a [`FedAlgorithm::save_state`] snapshot, called after
+    /// [`FedAlgorithm::setup`] on resume. The default accepts only an empty
+    /// state, so a stateful checkpoint cannot silently no-op.
+    fn restore_state(&mut self, state: AlgoState) -> Result<(), String> {
+        state.finish()
+    }
+}
+
+/// Hooks the checkpointing layer uses to observe (and steer) the drive
+/// loop without the loop knowing about snapshots: [`drive_federation`] and
+/// its scenario twin run every round through an observer.
+pub trait DriveObserver {
+    /// Called once after [`FedAlgorithm::setup`], before the first round.
+    /// Returns the round to start from: 0 for a fresh run, or the round
+    /// recorded in a restored checkpoint (after this hook has overwritten
+    /// federation/algorithm/transport/logger state).
+    fn on_start(
+        &mut self,
+        fed: &mut Federation,
+        algo: &mut dyn FedAlgorithm,
+        transport: &mut dyn Transport,
+        logger: &mut RoundLogger<'_>,
+    ) -> Result<usize, String>;
+
+    /// Called after each round is fully recorded (post
+    /// [`RoundLogger::end_round`]); `round` is the 0-based index just
+    /// completed. Return `Ok(false)` to stop the loop early without
+    /// finalizing — the controlled-crash path of the resume tests.
+    fn on_round_end(
+        &mut self,
+        round: usize,
+        fed: &mut Federation,
+        algo: &mut dyn FedAlgorithm,
+        transport: &mut dyn Transport,
+        logger: &mut RoundLogger<'_>,
+    ) -> Result<bool, String>;
+}
+
+/// The do-nothing observer: start at round 0, never stop early, never fail.
+pub struct NoopObserver;
+
+impl DriveObserver for NoopObserver {
+    fn on_start(
+        &mut self,
+        _fed: &mut Federation,
+        _algo: &mut dyn FedAlgorithm,
+        _transport: &mut dyn Transport,
+        _logger: &mut RoundLogger<'_>,
+    ) -> Result<usize, String> {
+        Ok(0)
+    }
+
+    fn on_round_end(
+        &mut self,
+        _round: usize,
+        _fed: &mut Federation,
+        _algo: &mut dyn FedAlgorithm,
+        _transport: &mut dyn Transport,
+        _logger: &mut RoundLogger<'_>,
+    ) -> Result<bool, String> {
+        Ok(true)
+    }
 }
 
 /// Run `algo` to completion on a fresh [`Federation`].
@@ -155,6 +334,22 @@ pub fn drive_federation(
     algo: &mut dyn FedAlgorithm,
     transport: &mut dyn Transport,
 ) -> MetricsLog {
+    drive_federation_observed(cfg, fed, algo, transport, &mut NoopObserver)
+        .expect("noop observer cannot fail")
+}
+
+/// [`drive_federation`] with a [`DriveObserver`] in the loop — the
+/// checkpoint-aware entry point. The observer picks the start round (0, or
+/// a restored checkpoint's), sees every completed round, and may stop the
+/// loop early (a controlled crash skips [`FedAlgorithm::finalize`] but
+/// still returns the partial log).
+pub fn drive_federation_observed(
+    cfg: &RunConfig,
+    fed: &mut Federation,
+    algo: &mut dyn FedAlgorithm,
+    transport: &mut dyn Transport,
+    observer: &mut dyn DriveObserver,
+) -> Result<MetricsLog, String> {
     let name = algo.log_name(fed, cfg);
     let mut log = MetricsLog::new(&name);
     for (key, value) in algo.log_meta(cfg) {
@@ -174,7 +369,9 @@ pub fn drive_federation(
     }
     algo.setup(fed, cfg);
     let mut logger = RoundLogger::new(cfg, log);
-    for round in 0..cfg.rounds {
+    let start = observer.on_start(fed, algo, transport, &mut logger)?;
+    let mut finalize = true;
+    for round in start..cfg.rounds {
         logger.begin_round();
         let sampled = fed.sample_clients(cfg.clients_per_round);
         let outcome = {
@@ -203,7 +400,13 @@ pub fn drive_federation(
             );
         }
         logger.end_round(round, outcome.local_steps, outcome.train_loss, &report, eval);
+        if !observer.on_round_end(round, fed, algo, transport, &mut logger)? {
+            finalize = false;
+            break;
+        }
     }
-    algo.finalize(fed, cfg);
-    logger.finish()
+    if finalize {
+        algo.finalize(fed, cfg);
+    }
+    Ok(logger.finish())
 }

@@ -11,7 +11,7 @@
 //! FedComLoc-Com's wire format so the Fig. 9 bits-axis comparison is
 //! apples-to-apples); the server averages the delivered updates.
 
-use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::algorithm::{AlgoState, FedAlgorithm, RoundCtx, RoundOutcome};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::compress::CompressorSpec;
@@ -127,5 +127,18 @@ impl FedAlgorithm for FedAvg {
             local_steps: cfg.local_steps,
             train_loss: loss_sum / (n_trained * cfg.local_steps).max(1) as f64,
         }
+    }
+
+    fn save_state(&self) -> AlgoState {
+        // The downlink codec stream is the only cross-round server state
+        // (`zeros` is shape-only and rebuilt by `setup`).
+        let mut state = AlgoState::new();
+        state.push_rng("server_rng", &self.server_rng);
+        state
+    }
+
+    fn restore_state(&mut self, mut state: AlgoState) -> Result<(), String> {
+        self.server_rng = state.take_rng("server_rng")?;
+        state.finish()
     }
 }

@@ -11,7 +11,7 @@
 //! routed through the configured `compress_up`/`compress_down` pipelines
 //! like every other driver.
 
-use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::algorithm::{AlgoState, FedAlgorithm, RoundCtx, RoundOutcome};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::tensor;
@@ -143,5 +143,20 @@ impl FedAlgorithm for FedDyn {
             local_steps: cfg.local_steps,
             train_loss: loss_sum / (n_trained * cfg.local_steps).max(1) as f64,
         }
+    }
+
+    fn save_state(&self) -> AlgoState {
+        // Cross-round server state: the gradient tracker s and the downlink
+        // codec stream (per-client λ_i live in `ClientState::h`).
+        let mut state = AlgoState::new();
+        state.push_vec("server_state", &self.server_state);
+        state.push_rng("server_rng", &self.server_rng);
+        state
+    }
+
+    fn restore_state(&mut self, mut state: AlgoState) -> Result<(), String> {
+        self.server_state = state.take_vec("server_state")?;
+        self.server_rng = state.take_rng("server_rng")?;
+        state.finish()
     }
 }

@@ -20,7 +20,10 @@
 //! envelope is bookkeeping, exposed separately via [`Message::frame_bits`]
 //! for transports that want to charge it.
 
-use crate::compress::{decode_payload, decode_payload_into, Codec, Compressed, Pipeline};
+use crate::compress::{
+    decode_payload, decode_payload_into, validate_payload, Codec, Compressed, PayloadError,
+    Pipeline,
+};
 use crate::util::rng::Rng;
 
 /// `sender` value identifying the server in downlink messages.
@@ -317,76 +320,14 @@ impl Message {
 }
 
 /// Check that a payload is structurally consistent with its header before
-/// it reaches the (panicking) codec decoders: exact sizes for the
-/// fixed-layout codecs, tight size *bounds* for the quantized ones (whose
-/// exact size depends on which bucket norms were zero).
+/// it reaches the (panicking) codec decoders. The structural rules live
+/// with the codecs ([`crate::compress::validate_payload`]); this shim maps
+/// the codec-level [`PayloadError`] into the wire-level [`WireError`].
 fn validate_consistency(codec: Codec, dim: usize, payload: &[u8]) -> Result<(), WireError> {
-    use crate::util::bitio::bits_for;
-    // Survivor-count header shared by the sparse codecs (LE u32 at offset 0).
-    let survivors = |payload: &[u8]| -> Result<usize, WireError> {
-        if payload.len() < 4 {
-            return Err(WireError::Truncated {
-                need: 4,
-                have: payload.len(),
-            });
-        }
-        let k = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-        if k > dim {
-            return Err(WireError::Inconsistent("survivor count exceeds dimension"));
-        }
-        Ok(k)
-    };
-    let check_exact = |want: usize, what: &'static str| {
-        if payload.len() == want {
-            Ok(())
-        } else {
-            Err(WireError::Inconsistent(what))
-        }
-    };
-    let check_range = |min_bits: u64, max_bits: u64, what: &'static str| {
-        let len = payload.len() as u64;
-        if len >= min_bits.div_ceil(8) && len <= max_bits.div_ceil(8) {
-            Ok(())
-        } else {
-            Err(WireError::Inconsistent(what))
-        }
-    };
-    match codec {
-        Codec::Dense => check_exact(4 * dim, "dense payload length != 4*dim"),
-        Codec::SparseIdx => {
-            let k = survivors(payload)?;
-            let idx_bits = bits_for(dim as u64) as u64;
-            let want = (32 + k as u64 * idx_bits).div_ceil(8) as usize + 4 * k;
-            check_exact(want, "sparse-index payload length mismatch")
-        }
-        Codec::SparseBitmap => {
-            let k = survivors(payload)?;
-            let want = (32 + dim as u64).div_ceil(8) as usize + 4 * k;
-            check_exact(want, "sparse-bitmap payload length mismatch")
-        }
-        Codec::Quantized { bits, bucket } => {
-            let buckets = (dim as u64).div_ceil(bucket as u64);
-            check_range(
-                32 * buckets,
-                32 * buckets + dim as u64 * (bits as u64 + 2),
-                "quantized payload length out of range",
-            )
-        }
-        Codec::SparseQuantized { bits, bucket } => {
-            let k = survivors(payload)? as u64;
-            let buckets = k.div_ceil(bucket as u64);
-            let base = 32 + 32 * buckets + k * bits_for(dim as u64) as u64;
-            check_range(
-                base,
-                base + k * (bits as u64 + 2),
-                "sparse-quantized payload length out of range",
-            )
-        }
-        Codec::Natural => check_exact(
-            (9 * dim as u64).div_ceil(8) as usize,
-            "natural payload length != ceil(9*dim/8)",
-        ),
-    }
+    validate_payload(codec, dim, payload).map_err(|e| match e {
+        PayloadError::Truncated { need, have } => WireError::Truncated { need, have },
+        PayloadError::Inconsistent(what) => WireError::Inconsistent(what),
+    })
 }
 
 #[cfg(test)]

@@ -35,7 +35,10 @@ pub mod scaffnew;
 pub mod sim;
 pub mod transport;
 
-pub use algorithm::{drive, drive_federation, FedAlgorithm, RoundCtx, RoundOutcome};
+pub use algorithm::{
+    drive, drive_federation, drive_federation_observed, AlgoState, DriveObserver, FedAlgorithm,
+    NoopObserver, RoundCtx, RoundOutcome, StateItem,
+};
 
 use crate::compress::{CompressorSpec, Pipeline};
 use crate::data::dirichlet::{partition, Partition};
@@ -817,6 +820,21 @@ impl<'a> RoundLogger<'a> {
     pub fn finish(self) -> MetricsLog {
         self.log
     }
+
+    /// Snapshot the cumulative counters `(cum_up, cum_down,
+    /// cum_local_iters, cum_sim_secs)` for a checkpoint ([`crate::ckpt`]).
+    pub fn cum_state(&self) -> (u64, u64, u64, f64) {
+        (self.cum_up, self.cum_down, self.cum_local_iters, self.cum_sim_secs)
+    }
+
+    /// Restore a [`RoundLogger::cum_state`] snapshot on resume, so
+    /// cumulative columns continue exactly where the checkpoint left off.
+    pub fn restore_cum_state(&mut self, cum_up: u64, cum_down: u64, cum_local_iters: u64, cum_sim_secs: f64) {
+        self.cum_up = cum_up;
+        self.cum_down = cum_down;
+        self.cum_local_iters = cum_local_iters;
+        self.cum_sim_secs = cum_sim_secs;
+    }
 }
 
 /// Run an algorithm to completion over the in-process transport (the seed's
@@ -836,12 +854,35 @@ pub fn run_with_transport(
     spec: &AlgorithmSpec,
     transport: &mut dyn transport::Transport,
 ) -> MetricsLog {
+    run_with_transport_observed(cfg, trainer, spec, transport, &mut NoopObserver)
+        .expect("noop observer cannot fail")
+}
+
+/// [`run_with_transport`] with a [`DriveObserver`] in the loop — how the
+/// checkpoint subsystem ([`crate::ckpt`]) attaches snapshot/resume/stop
+/// behavior to any algorithm × scenario combination without the drive
+/// loops knowing about snapshot files.
+pub fn run_with_transport_observed(
+    cfg: &RunConfig,
+    trainer: Arc<dyn LocalTrainer>,
+    spec: &AlgorithmSpec,
+    transport: &mut dyn transport::Transport,
+    observer: &mut dyn DriveObserver,
+) -> Result<MetricsLog, String> {
     let mut algo = spec.build();
+    let mut fed = Federation::new(cfg, trainer);
     match cfg.scenario_spec() {
-        sim::Scenario::Sync => algorithm::drive(cfg, trainer, algo.as_mut(), transport),
-        scenario @ sim::Scenario::Semisync { .. } => {
-            sim::drive_scenario(cfg, trainer, algo.as_mut(), transport, &scenario)
+        sim::Scenario::Sync => {
+            drive_federation_observed(cfg, &mut fed, algo.as_mut(), transport, observer)
         }
+        scenario @ sim::Scenario::Semisync { .. } => sim::drive_scenario_federation_observed(
+            cfg,
+            &mut fed,
+            algo.as_mut(),
+            transport,
+            &scenario,
+            observer,
+        ),
     }
 }
 

@@ -34,7 +34,7 @@
 //! Invariant (tested): with an uncompressed downlink, Σ_i h_i stays 0 —
 //! each round's updates sum to (p/γ)·(m·mean(ε) − Σ ε) = 0.
 
-use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome};
+use super::algorithm::{AlgoState, FedAlgorithm, RoundCtx, RoundOutcome};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig, Variant};
 use crate::compress::CompressorSpec;
@@ -262,6 +262,25 @@ impl FedAlgorithm for FedComLoc {
             local_steps: seg_len,
             train_loss: loss_sum / total_steps.max(1) as f64,
         }
+    }
+
+    fn save_state(&self) -> AlgoState {
+        // Cross-round server state: the two RNG streams plus the retained
+        // compressed downlink. `p_over_gamma`/`delivery` are re-derived or
+        // scratch; the EF residuals of the pipelines live with the
+        // federation, not here.
+        let mut state = AlgoState::new();
+        state.push_rng("coin_rng", &self.coin_rng);
+        state.push_rng("server_rng", &self.server_rng);
+        state.push_msg("downlink_msg", &self.downlink_msg);
+        state
+    }
+
+    fn restore_state(&mut self, mut state: AlgoState) -> Result<(), String> {
+        self.coin_rng = state.take_rng("coin_rng")?;
+        self.server_rng = state.take_rng("server_rng")?;
+        self.downlink_msg = state.take_msg("downlink_msg")?;
+        state.finish()
     }
 }
 

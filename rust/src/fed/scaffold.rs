@@ -17,7 +17,7 @@
 //! residual memory cannot serve two interleaved streams (see
 //! [`crate::compress::Pipeline::has_state`]).
 
-use super::algorithm::{FedAlgorithm, RoundCtx, RoundOutcome, UplinkKind};
+use super::algorithm::{AlgoState, FedAlgorithm, RoundCtx, RoundOutcome, UplinkKind};
 use super::message::{Message, SERVER};
 use super::{Federation, RunConfig};
 use crate::tensor;
@@ -179,5 +179,21 @@ impl FedAlgorithm for Scaffold {
         // straggler's buffered contribution is the decoded payload itself
         // (its Δc stream is forfeited, like any undelivered update).
         UplinkKind::Delta
+    }
+
+    fn save_state(&self) -> AlgoState {
+        // Cross-round server state: the global variate c and the downlink
+        // codec stream (per-client c_i live in `ClientState::h`, which the
+        // federation snapshot covers).
+        let mut state = AlgoState::new();
+        state.push_vec("c_global", &self.c_global);
+        state.push_rng("server_rng", &self.server_rng);
+        state
+    }
+
+    fn restore_state(&mut self, mut state: AlgoState) -> Result<(), String> {
+        self.c_global = state.take_vec("c_global")?;
+        self.server_rng = state.take_rng("server_rng")?;
+        state.finish()
     }
 }

@@ -46,7 +46,9 @@ pub mod scheduler;
 pub use queue::EventQueue;
 pub use scheduler::ScenarioNet;
 
-use super::algorithm::{drive_federation, FedAlgorithm, RoundCtx};
+use super::algorithm::{
+    drive_federation_observed, DriveObserver, FedAlgorithm, NoopObserver, RoundCtx,
+};
 use super::transport::Transport;
 use super::{Federation, RoundLogger, RunConfig};
 use crate::metrics::MetricsLog;
@@ -138,8 +140,8 @@ pub fn drive_scenario(
 
 /// Run `algo` under `scenario` on an existing [`Federation`].
 ///
-/// Mirrors [`drive_federation`]'s loop with three scenario hooks per
-/// round, in this order:
+/// Mirrors [`crate::fed::drive_federation`]'s loop with three scenario
+/// hooks per round, in this order:
 ///
 /// 1. **fold** — arrived straggler updates fold into `fed.x` *before*
 ///    sampling, so the round's broadcast carries them;
@@ -150,8 +152,8 @@ pub fn drive_scenario(
 ///    and `end_round` advances the virtual clock to the slowest accepted
 ///    arrival.
 ///
-/// `Scenario::Sync` delegates straight to [`drive_federation`]: the
-/// synchronous path stays bit-identical with no decorator in the loop.
+/// `Scenario::Sync` delegates straight to [`crate::fed::drive_federation`]:
+/// the synchronous path stays bit-identical with no decorator in the loop.
 pub fn drive_scenario_federation(
     cfg: &RunConfig,
     fed: &mut Federation,
@@ -159,8 +161,26 @@ pub fn drive_scenario_federation(
     transport: &mut dyn Transport,
     scenario: &Scenario,
 ) -> MetricsLog {
+    drive_scenario_federation_observed(cfg, fed, algo, transport, scenario, &mut NoopObserver)
+        .expect("noop observer cannot fail")
+}
+
+/// [`drive_scenario_federation`] with a [`DriveObserver`] in the loop — the
+/// checkpoint-aware entry point. The observer sees the [`ScenarioNet`]
+/// decorator as its transport, so its save/restore hooks reach the virtual
+/// clock and pending straggler buffer as well as the inner channel.
+pub fn drive_scenario_federation_observed(
+    cfg: &RunConfig,
+    fed: &mut Federation,
+    algo: &mut dyn FedAlgorithm,
+    transport: &mut dyn Transport,
+    scenario: &Scenario,
+    observer: &mut dyn DriveObserver,
+) -> Result<MetricsLog, String> {
     let (k, staleness) = match *scenario {
-        Scenario::Sync => return drive_federation(cfg, fed, algo, transport),
+        Scenario::Sync => {
+            return drive_federation_observed(cfg, fed, algo, transport, observer);
+        }
         Scenario::Semisync { k, staleness } => (k, staleness),
     };
     let name = algo.log_name(fed, cfg);
@@ -179,7 +199,9 @@ pub fn drive_scenario_federation(
     let kind = algo.uplink_kind();
     let mut logger = RoundLogger::new(cfg, log);
     let mut net = ScenarioNet::new(transport, k, staleness, kind, cfg);
-    for round in 0..cfg.rounds {
+    let start = observer.on_start(fed, algo, &mut net, &mut logger)?;
+    let mut finalize = true;
+    for round in start..cfg.rounds {
         logger.begin_round();
         net.fold_arrivals(round, &mut fed.x);
         let sampled = fed.sample_clients(cfg.clients_per_round);
@@ -211,9 +233,15 @@ pub fn drive_scenario_federation(
             );
         }
         logger.end_round(round, outcome.local_steps, outcome.train_loss, &report, eval);
+        if !observer.on_round_end(round, fed, algo, &mut net, &mut logger)? {
+            finalize = false;
+            break;
+        }
     }
-    algo.finalize(fed, cfg);
-    logger.finish()
+    if finalize {
+        algo.finalize(fed, cfg);
+    }
+    Ok(logger.finish())
 }
 
 #[cfg(test)]

@@ -327,6 +327,50 @@ impl Transport for ScenarioNet<'_> {
     fn link_secs(&self, client: usize, bits: u64) -> f64 {
         self.inner.link_secs(client, bits)
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        // Cross-round state at a round boundary: the virtual clock plus the
+        // in-flight straggler buffer (`speed` is re-drawn from cfg.seed at
+        // construction; all per-round fields are empty between rounds). The
+        // inner transport's section is nested length-prefixed so one opaque
+        // blob round-trips the whole decorator stack.
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.put_f64(self.now);
+        w.put_u64(self.pending.len() as u64);
+        for p in &self.pending {
+            w.put_u64(p.client as u64);
+            w.put_u64(p.origin_round as u64);
+            w.put_f64(p.arrival);
+            w.put_u64(p.k_origin as u64);
+            w.put_f32s(&p.delta);
+        }
+        w.put_bytes(&self.inner.save_state());
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = crate::util::bytes::ByteReader::new(bytes, "scenario state");
+        self.now = r.take_f64()?;
+        let n = r.take_u64()? as usize;
+        self.pending.clear();
+        for _ in 0..n {
+            let client = r.take_u64()? as usize;
+            let origin_round = r.take_u64()? as usize;
+            let arrival = r.take_f64()?;
+            let k_origin = r.take_u64()? as usize;
+            let delta = r.take_f32s()?;
+            self.pending.push(Pending {
+                client,
+                origin_round,
+                arrival,
+                k_origin,
+                delta,
+            });
+        }
+        let inner = r.take_bytes()?;
+        r.finish()?;
+        self.inner.restore_state(&inner)
+    }
 }
 
 #[cfg(test)]
@@ -431,6 +475,45 @@ mod tests {
         // sim_secs = slowest accepted compute: 2 steps x 0.5 tau x max speed.
         let max_speed = net.speed.iter().cloned().fold(0.0f64, f64::max);
         assert!((r.sim_secs - max_speed).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scheduler_state_roundtrips_clock_and_pending() {
+        let cfg = RunConfig {
+            n_clients: 3,
+            clients_per_round: 1,
+            local_steps: 1,
+            tau: 1.0,
+            ..RunConfig::default_mnist()
+        };
+        let mut inner = InProc::default();
+        let mut net = ScenarioNet::new(&mut inner, 1, 1.0, UplinkKind::Model, &cfg);
+        net.speed = vec![1.0, 2.0, 4.0];
+        let mut x = vec![10.0f32];
+        net.fold_arrivals(0, &mut x);
+        net.begin_round(0, &[0, 1, 2]);
+        let bcast = Message::dense(0, SERVER, &x);
+        net.broadcast(&[0, 1, 2], &bcast);
+        net.uplink(0, Message::dense(0, 0, &[11.0]));
+        net.uplink(1, Message::dense(0, 1, &[12.0]));
+        net.uplink(2, Message::dense(0, 2, &[13.0]));
+        net.note_local_steps(1);
+        net.end_round();
+        let state = net.save_state();
+
+        // Restore onto a freshly constructed decorator of the same spec.
+        let mut inner2 = InProc::default();
+        let mut net2 = ScenarioNet::new(&mut inner2, 1, 1.0, UplinkKind::Model, &cfg);
+        net2.speed = vec![1.0, 2.0, 4.0];
+        net2.restore_state(&state).unwrap();
+        assert_eq!(net2.now, net.now);
+        assert_eq!(net2.pending_len(), 2);
+        assert_eq!(net2.pending[0].delta, vec![2.0]);
+        assert_eq!(net2.pending[1].arrival, net.pending[1].arrival);
+        assert_eq!(net2.pending[0].k_origin, 1);
+
+        // Truncated state errors cleanly instead of panicking.
+        assert!(net2.restore_state(&state[..state.len() - 3]).is_err());
     }
 
     #[test]

@@ -107,6 +107,30 @@ pub trait Transport: Send {
     fn link_secs(&self, _client: usize, _bits: u64) -> f64 {
         0.0
     }
+
+    /// Serialize the transport's cross-round state for a checkpoint
+    /// ([`crate::ckpt`]), taken at a round boundary (after
+    /// [`Transport::end_round`] has drained per-round state). Stateless
+    /// transports like [`InProc`] return an empty section.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore a [`Transport::save_state`] section onto a freshly
+    /// constructed transport of the same spec. The default accepts only an
+    /// empty section, so a checkpoint from a stateful transport cannot be
+    /// silently dropped on a stateless one.
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        if bytes.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "transport '{}' is stateless but checkpoint carries {} state bytes",
+                self.name(),
+                bytes.len()
+            ))
+        }
+    }
 }
 
 /// The in-process transport: today's semantics, byte-exact, zero loss.
@@ -262,6 +286,21 @@ impl Transport for SimNet {
 
     fn link_secs(&self, client: usize, bits: u64) -> f64 {
         self.cfg.latency_secs + bits as f64 / self.client_bw[client]
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        // The only cross-round state is the dropout RNG stream: `client_bw`
+        // is drawn once at construction (so a same-spec rebuild reproduces
+        // it), and `round_secs`/`round_avail` are empty at round boundaries.
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.put_rng(&self.rng);
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = crate::util::bytes::ByteReader::new(bytes, "simnet state");
+        self.rng = r.take_rng()?;
+        r.finish()
     }
 }
 
@@ -424,6 +463,38 @@ mod tests {
         assert!(parse_transport("simnet:1:1:0:0.5", 4, 0).is_err());
         assert!(parse_transport("carrier-pigeon", 4, 0).is_err());
         assert!(parse_transport("inproc:fast", 4, 0).is_err());
+    }
+
+    #[test]
+    fn simnet_state_roundtrip_continues_drop_stream() {
+        let cfg = SimNetCfg {
+            drop_prob: 0.5,
+            heterogeneity: 1.0,
+            ..SimNetCfg::default()
+        };
+        let clients: Vec<usize> = (0..32).collect();
+        let msg = dense_msg(10);
+        let mut a = SimNet::new(cfg, 32, 9);
+        // Advance a few rounds, snapshot, rebuild-from-spec + restore.
+        for _ in 0..3 {
+            a.broadcast(&clients, &msg);
+            a.end_round();
+        }
+        let state = a.save_state();
+        let mut b = SimNet::new(cfg, 32, 9);
+        b.restore_state(&state).unwrap();
+        for round in 0..4 {
+            assert_eq!(
+                a.broadcast(&clients, &msg),
+                b.broadcast(&clients, &msg),
+                "round {round}"
+            );
+            a.end_round();
+            b.end_round();
+        }
+        // A stateless transport rejects a non-empty section.
+        assert!(InProc::default().restore_state(&state).is_err());
+        assert!(InProc::default().restore_state(&[]).is_ok());
     }
 
     #[test]

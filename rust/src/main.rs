@@ -30,6 +30,9 @@ fn main() {
     let code = match argv.first().map(|s| s.as_str()) {
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("train") => cmd_train(&argv[1..]),
+        Some("run") => cmd_run(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("ckpt") => cmd_ckpt(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("list-experiments") => cmd_list(),
         Some("list-algorithms") => cmd_list_algorithms(),
@@ -95,6 +98,9 @@ USAGE:
 SUBCOMMANDS:
     sweep             declarative scenario sweeps: sweep run | sweep list
     train             run one federated algorithm end-to-end
+    run               train with crash-tolerant checkpointing (bit-identical resume)
+    serve             answer eval/predict requests from a checkpoint (JSON lines)
+    ckpt              checkpoint utilities: ckpt inspect <file>
     experiment        regenerate paper tables/figures (sweep-preset aliases)
     list-experiments  show the experiment registry
     list-algorithms   show the algorithm registry (spec strings for --algo)
@@ -109,8 +115,13 @@ Run 'fedcomloc <SUBCOMMAND> --help' for options."
 }
 
 fn train_command() -> Command {
-    Command::new("fedcomloc train", "Run one federated training job")
-        .opt_default(
+    train_options(Command::new("fedcomloc train", "Run one federated training job"))
+}
+
+/// The option set shared by `train` and `run` (which is `train` plus
+/// checkpointing) — one place so the two commands cannot drift.
+fn train_options(cmd: Command) -> Command {
+    cmd.opt_default(
             "algo",
             "SPEC",
             "algorithm spec, e.g. fedcomloc-com:topk:0.1 (see list-algorithms)",
@@ -170,14 +181,13 @@ fn train_command() -> Command {
         .flag("quiet", "suppress per-round logging")
 }
 
-fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
-    let cmd = train_command();
-    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
-    if args.wants_help() {
-        println!("{}", args.help_text());
-        println!("PRESETS: {}", presets::names().join(", "));
-        return Ok(());
-    }
+/// Resolve the run configuration and algorithm spec from parsed `train`/
+/// `run` options (preset → config file → CLI overrides, then the
+/// algorithm-spec sugar) — shared so both commands interpret every flag
+/// identically.
+fn resolve_train_setup(
+    args: &fedcomloc::cli::Args,
+) -> anyhow::Result<(fedcomloc::fed::RunConfig, AlgorithmSpec)> {
     let mut cfg = match args.get("preset") {
         Some(name) => presets::by_name(name).ok_or_else(|| {
             anyhow::anyhow!("unknown preset '{name}' (have: {})", presets::names().join(", "))
@@ -233,6 +243,18 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         },
     };
     let spec = AlgorithmSpec::parse(&spec_str).map_err(|e| anyhow::anyhow!(e))?;
+    Ok((cfg, spec))
+}
+
+fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = train_command();
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        println!("PRESETS: {}", presets::names().join(", "));
+        return Ok(());
+    }
+    let (cfg, spec) = resolve_train_setup(&args)?;
     let mut transport = parse_transport(
         args.get("transport").unwrap_or("inproc"),
         cfg.n_clients,
@@ -303,6 +325,237 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn run_command() -> Command {
+    train_options(Command::new(
+        "fedcomloc run",
+        "Run one federated training job with crash-tolerant checkpointing",
+    ))
+    .opt_default(
+        "checkpoint-dir",
+        "DIR",
+        "checkpoint directory; auto-resumes bit-identically from the latest snapshot",
+        "checkpoints",
+    )
+    .opt_default("checkpoint-every", "K", "snapshot every K completed rounds", "1")
+    .opt_default("checkpoint-keep", "N", "retain the newest N checkpoints (0 = all)", "3")
+    .opt(
+        "crash-after",
+        "K",
+        "stop without finalizing after K completed rounds (crash injection for resume tests)",
+    )
+    .opt(
+        "metrics-jsonl",
+        "FILE",
+        "write the byte-deterministic per-round JSONL (sink schema; CI byte-diffs resumed vs uninterrupted runs)",
+    )
+}
+
+fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
+    let cmd = run_command();
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        println!("PRESETS: {}", presets::names().join(", "));
+        return Ok(());
+    }
+    let (cfg, spec) = resolve_train_setup(&args)?;
+    let mut transport = parse_transport(
+        args.get("transport").unwrap_or("inproc"),
+        cfg.n_clients,
+        cfg.seed,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let opts = ExpOptions {
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let trainer = opts.make_trainer(&cfg.model_spec());
+
+    let ckpt_dir = PathBuf::from(args.get("checkpoint-dir").unwrap_or("checkpoints"));
+    let mut ckpt = fedcomloc::ckpt::Checkpointer::new(&ckpt_dir, spec.key())
+        .every(args.get_or("checkpoint-every", 1).map_err(|e| anyhow::anyhow!("{e}"))?)
+        .keep_last(args.get_or("checkpoint-keep", 3).map_err(|e| anyhow::anyhow!("{e}"))?);
+    if let Some(k) = args
+        .get_parsed::<usize>("crash-after")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+    {
+        ckpt = ckpt.crash_after(k);
+    }
+
+    println!(
+        "running {} on {} ({} rounds, checkpoints -> {})",
+        spec.name(),
+        cfg.dataset.key(),
+        cfg.rounds,
+        ckpt_dir.display()
+    );
+    let t0 = std::time::Instant::now();
+    let log = fedcomloc::fed::run_with_transport_observed(
+        &cfg,
+        trainer,
+        &spec,
+        transport.as_mut(),
+        &mut ckpt,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let elapsed = t0.elapsed();
+    if let Some(round) = ckpt.resumed_from() {
+        println!("resumed from checkpointed round {round}");
+    }
+    let crashed = log.records.len() < cfg.rounds;
+    if crashed {
+        println!(
+            "stopped after {} of {} rounds (crash injection); rerun to resume",
+            log.records.len(),
+            cfg.rounds
+        );
+    }
+    if let Some(path) = args.get("metrics-jsonl") {
+        let path = PathBuf::from(path);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = String::new();
+        for r in &log.records {
+            out.push_str(&sweep::sink::round_line(&log.run_name, r));
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        println!("per-round JSONL: {}", path.display());
+    }
+    opts.save("run", &log);
+    println!(
+        "\ndone in {elapsed:?}: best_acc={:?} final_loss={:?}",
+        log.best_accuracy(),
+        log.final_train_loss()
+    );
+    println!("metrics: {}/run/{}.csv", opts.out_dir.display(), log.run_name);
+    Ok(())
+}
+
+fn serve_command() -> Command {
+    Command::new(
+        "fedcomloc serve",
+        "Answer eval/predict requests from a checkpoint over JSON lines",
+    )
+    .opt("checkpoint", "FILE", "checkpoint file (.fckp) to serve")
+    .opt(
+        "checkpoint-dir",
+        "DIR",
+        "serve the newest checkpoint in DIR (alternative to --checkpoint)",
+    )
+    .opt_default("trainer", "T", "compute plane: auto|native|pjrt", "native")
+    .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
+    .opt(
+        "tcp",
+        "ADDR",
+        "also listen on ADDR (e.g. 127.0.0.1:7878), one connection at a time; default is stdin/stdout",
+    )
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    use std::io::{BufRead, Write};
+    let cmd = serve_command();
+    let args = cmd.parse(argv).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.wants_help() {
+        println!("{}", args.help_text());
+        println!(
+            "\nPROTOCOL (one JSON object per line):\n\
+             \x20   {{\"cmd\":\"info\"}}                  checkpoint provenance + inference-cost report\n\
+             \x20   {{\"cmd\":\"eval\"}}                  evaluate over the config's test split\n\
+             \x20   {{\"cmd\":\"predict\",\"x\":[...]}}    classify one feature row"
+        );
+        return Ok(());
+    }
+    let path = match (args.get("checkpoint"), args.get("checkpoint-dir")) {
+        (Some(file), None) => PathBuf::from(file),
+        (None, Some(dir)) => fedcomloc::ckpt::latest_checkpoint(std::path::Path::new(dir))
+            .map(|(_, p)| p)
+            .ok_or_else(|| anyhow::anyhow!("no checkpoints in {dir}"))?,
+        (Some(_), Some(_)) => anyhow::bail!("pass --checkpoint or --checkpoint-dir, not both"),
+        (None, None) => anyhow::bail!("pass --checkpoint <file> or --checkpoint-dir <dir>"),
+    };
+    let mut state = fedcomloc::ckpt::ServeState::load(
+        &path,
+        args.get("trainer").unwrap_or("native"),
+        std::path::Path::new(args.get("artifacts").unwrap_or("artifacts")),
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    eprintln!(
+        "serving {} (round {}, {}): one JSON request per line",
+        path.display(),
+        state.round(),
+        state.algo_spec()
+    );
+    if let Some(addr) = args.get("tcp") {
+        let listener = std::net::TcpListener::bind(addr)?;
+        eprintln!("listening on {addr} (sequential connections); ctrl-c to stop");
+        for stream in listener.incoming() {
+            let stream = stream?;
+            let reader = std::io::BufReader::new(stream.try_clone()?);
+            let mut writer = stream;
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                writeln!(writer, "{}", state.handle_line(&line))?;
+            }
+        }
+        return Ok(());
+    }
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        writeln!(out, "{}", state.handle_line(&line))?;
+        out.flush()?;
+    }
+    Ok(())
+}
+
+fn cmd_ckpt(argv: &[String]) -> anyhow::Result<()> {
+    match argv.first().map(|s| s.as_str()) {
+        Some("inspect") => {
+            let cmd = Command::new(
+                "fedcomloc ckpt inspect",
+                "Print a checkpoint's schema version, round, algorithm, and state sections",
+            );
+            let args = cmd.parse(&argv[1..]).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if args.wants_help() {
+                println!("{}", args.help_text());
+                println!("\nUSAGE:\n    fedcomloc ckpt inspect <file.fckp>");
+                return Ok(());
+            }
+            let file = args
+                .positionals
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("pass a checkpoint file: ckpt inspect <file.fckp>"))?;
+            let snap = fedcomloc::ckpt::Snapshot::load(std::path::Path::new(file))
+                .map_err(|e| anyhow::anyhow!(e))?;
+            print!("{}", snap.describe());
+            Ok(())
+        }
+        Some("--help") | Some("-h") | None => {
+            println!(
+                "fedcomloc ckpt — checkpoint utilities\n\n\
+                 USAGE:\n    fedcomloc ckpt inspect <file.fckp>   print schema/round/algorithm/sections"
+            );
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown ckpt subcommand '{other}' (try inspect)"),
+    }
+}
+
 fn experiment_command() -> Command {
     Command::new("fedcomloc experiment", "Regenerate paper tables/figures")
         .opt("id", "ID", "experiment id (see list-experiments)")
@@ -358,6 +611,12 @@ fn sweep_run_command() -> Command {
         .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
         .flag("dry-run", "print the expanded run matrix and exit")
         .flag("resume", "skip runs whose summary row exists with a matching config")
+        .opt(
+            "checkpoint-dir",
+            "DIR",
+            "per-run checkpoints in DIR/<run_id>/; with --resume, unfinished runs restart at their last snapshot",
+        )
+        .opt_default("checkpoint-every", "K", "snapshot cadence in rounds for --checkpoint-dir", "1")
 }
 
 fn cmd_sweep(argv: &[String]) -> anyhow::Result<()> {
@@ -424,6 +683,8 @@ fn cmd_sweep_run(argv: &[String]) -> anyhow::Result<()> {
         seed: args.get_parsed("seed").map_err(|e| anyhow::anyhow!("{e}"))?,
         trainer: args.get("trainer").unwrap_or("auto").to_string(),
         artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+        checkpoint_every: args.get_or("checkpoint-every", 1).map_err(|e| anyhow::anyhow!("{e}"))?,
     };
     println!("sweep '{}' — {}", spec.name, spec.title);
     if !spec.paper.is_empty() {

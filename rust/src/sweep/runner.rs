@@ -27,7 +27,7 @@
 use super::sink;
 use super::spec::{RunUnit, SweepSpec};
 use crate::fed::transport::parse_transport;
-use crate::fed::{run_with_transport, AlgorithmSpec};
+use crate::fed::{run_with_transport, run_with_transport_observed, AlgorithmSpec};
 use crate::model::LocalTrainer;
 use crate::util::threadpool::ThreadPool;
 use std::collections::BTreeMap;
@@ -62,6 +62,15 @@ pub struct SweepOptions {
     pub trainer: String,
     /// AOT artifacts directory for the PJRT plane.
     pub artifacts_dir: PathBuf,
+    /// When set, every run checkpoints into
+    /// `<checkpoint_dir>/<run_id>/` via a [`crate::ckpt::Checkpointer`]
+    /// and auto-resumes from the latest snapshot there — a killed sweep
+    /// restarted with `--resume` re-enters each unfinished run at its
+    /// last checkpointed round instead of from scratch.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Snapshot cadence in rounds for [`SweepOptions::checkpoint_dir`]
+    /// (0 = every round).
+    pub checkpoint_every: usize,
 }
 
 impl Default for SweepOptions {
@@ -75,6 +84,8 @@ impl Default for SweepOptions {
             seed: None,
             trainer: "auto".to_string(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -157,7 +168,15 @@ fn run_unit(
     let algo = AlgorithmSpec::parse(&unit.algo)?;
     let mut transport = parse_transport(&unit.transport, cfg.n_clients, cfg.seed)?;
     let t0 = std::time::Instant::now();
-    let log = run_with_transport(&cfg, trainer, &algo, transport.as_mut());
+    let log = match &opts.checkpoint_dir {
+        Some(root) => {
+            let mut ckpt = crate::ckpt::Checkpointer::new(&root.join(&unit.id), algo.key())
+                .every(opts.checkpoint_every.max(1));
+            run_with_transport_observed(&cfg, trainer, &algo, transport.as_mut(), &mut ckpt)
+                .map_err(|e| format!("{}: {e}", unit.id))?
+        }
+        None => run_with_transport(&cfg, trainer, &algo, transport.as_mut()),
+    };
     log::info!(
         "[sweep {sweep_name}] {} done in {:.2?}: best_acc={:?}",
         unit.id,
@@ -279,7 +298,12 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, 
     let results: Vec<Result<String, String>> = pool.map(&todo, |_, unit| {
         let row = run_unit(&spec.name, &dir, unit, opts, workers, &trainers)?;
         if let Ok(mut f) = progress.lock() {
+            // Flush + fsync each progress row: a crash right after a run
+            // completes must not lose its row to OS buffering (the row is
+            // what --resume matches to skip re-executing the run).
             let _ = writeln!(f, "{row}");
+            let _ = f.flush();
+            let _ = f.sync_data();
         }
         Ok(row)
     });

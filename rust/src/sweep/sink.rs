@@ -176,7 +176,28 @@ pub fn round_line(run_id: &str, r: &RoundRecord) -> String {
     o.to_string_compact()
 }
 
-/// Write the full per-round JSONL file for one run.
+/// Write `bytes` to `path` atomically: the content lands in `<path>.tmp`,
+/// is flushed and fsynced, and only then renamed over the target — a crash
+/// at any instant leaves either the old complete file or the new complete
+/// file, never a truncated hybrid. Shared by the summary and per-round
+/// writers (and the same discipline [`crate::ckpt::Snapshot`] uses for
+/// checkpoint files).
+fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension(match path.extension().and_then(|e| e.to_str()) {
+        Some(ext) => format!("{ext}.tmp"),
+        None => "tmp".to_string(),
+    });
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.flush()?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Write the full per-round JSONL file for one run (atomically — see
+/// [`write_atomic`]).
 pub fn write_rounds_jsonl(
     sweep_dir: &Path,
     run_id: &str,
@@ -191,20 +212,27 @@ pub fn write_rounds_jsonl(
         out.push_str(&round_line(run_id, r));
         out.push('\n');
     }
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(out.as_bytes())
+    write_atomic(&path, out.as_bytes())
 }
 
 /// Read an existing summary file into `run_id -> row` (resume support).
 /// A missing file is an empty map; rows with an unknown schema version are
-/// ignored so `--resume` never trusts stale-format results.
+/// ignored so `--resume` never trusts stale-format results, and a torn
+/// final line (the file does not end in a newline — a crash mid-append)
+/// is dropped so a partially-written row is re-executed rather than
+/// resumed as a complete result.
 pub fn read_summary_rows(path: &Path) -> BTreeMap<String, String> {
     let mut rows = BTreeMap::new();
     let Ok(text) = std::fs::read_to_string(path) else {
         return rows;
     };
+    let complete = text.ends_with('\n');
+    let mut lines: Vec<&str> = text.lines().collect();
+    if !complete {
+        lines.pop();
+    }
     let want_schema = RESULT_SCHEMA.to_string();
-    for line in text.lines().skip(1) {
+    for line in lines.into_iter().skip(1) {
         let mut fields = line.split(',');
         let schema_ok = fields.next() == Some(want_schema.as_str());
         if let (true, Some(id)) = (schema_ok, fields.next()) {
@@ -214,7 +242,9 @@ pub fn read_summary_rows(path: &Path) -> BTreeMap<String, String> {
     rows
 }
 
-/// Rewrite the summary file with `rows` in canonical (expansion) order.
+/// Rewrite the summary file with `rows` in canonical (expansion) order
+/// (atomically — see [`write_atomic`]; the canonical rewrite can never
+/// destroy the crash-resumable progress rows it replaces).
 pub fn write_summary(path: &Path, rows: &[String]) -> std::io::Result<()> {
     let mut out = String::with_capacity(SUMMARY_HEADER.len() + 1 + rows.len() * 128);
     out.push_str(SUMMARY_HEADER);
@@ -223,8 +253,7 @@ pub fn write_summary(path: &Path, rows: &[String]) -> std::io::Result<()> {
         out.push_str(row);
         out.push('\n');
     }
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(out.as_bytes())
+    write_atomic(path, out.as_bytes())
 }
 
 #[cfg(test)]
@@ -287,6 +316,40 @@ mod tests {
         write_summary(&path, &["1,r009-z,s,x,m,m,t,native,1,1,0,0,0,0,1,1,1,1,1,1,1,0,d,,,,0,0,0,0,0".to_string()])
             .unwrap();
         assert!(read_summary_rows(&path).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_partial_write_recovers_to_complete_rows_only() {
+        let dir = std::env::temp_dir().join(format!("fedcomloc_sink_trunc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = summary_path(&dir);
+        let complete = format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,sync,0.8,0.7,0.3,1,2,3,0,0,0,0");
+        let torn = format!("{RESULT_SCHEMA},r001-b,s,scaffold,mnist,mlp,inproc,nat");
+        // Simulate a crash mid-append: one complete row, then a row cut
+        // short with no trailing newline.
+        std::fs::write(&path, format!("{SUMMARY_HEADER}\n{complete}\n{torn}")).unwrap();
+        let rows = read_summary_rows(&path);
+        assert_eq!(rows.len(), 1, "torn final row must be dropped: {rows:?}");
+        assert_eq!(rows.get("r000-a"), Some(&complete));
+        // Truncation *inside* an earlier row (crash mid-rewrite of a
+        // non-atomic writer) must also never panic; the reader just keeps
+        // whatever rows are still well-formed lines.
+        std::fs::write(&path, format!("{SUMMARY_HEADER}\n{}", &complete[..40])).unwrap();
+        let _ = read_summary_rows(&path);
+
+        // The atomic writer never leaves a .tmp behind and the target is
+        // always complete after it returns.
+        write_summary(&path, &[complete.clone()]).unwrap();
+        assert!(!path.with_extension("csv.tmp").exists());
+        assert_eq!(read_summary_rows(&path).len(), 1);
+
+        // write_rounds_jsonl goes through the same atomic path.
+        let log = MetricsLog::new("r000-a");
+        write_rounds_jsonl(&dir, "r000-a", &log).unwrap();
+        assert!(rounds_path(&dir, "r000-a").is_file());
+        assert!(!dir.join("rounds").join("r000-a.jsonl.tmp").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,371 @@
+//! Little-endian byte serialization for checkpoint snapshots: a growable
+//! [`ByteWriter`], a bounds-checked [`ByteReader`], a table-driven CRC-32,
+//! and helpers for the repo's [`Rng`] state tuple.
+//!
+//! This sits in `util` (not under `ckpt`) so that `fed/`-layer state hooks
+//! ([`crate::fed::FedAlgorithm::save_state`], transport `save_state`) can
+//! produce byte sections without depending on the checkpoint subsystem.
+//! Everything is fixed-width little-endian so snapshots are bit-identical
+//! across hosts, mirroring the wire [`crate::fed::Message`] framing
+//! discipline.
+
+use crate::util::rng::Rng;
+
+/// Growable little-endian byte sink for snapshot sections.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// An empty writer.
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    /// Consume the writer and return the accumulated bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Append one byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u16`, little-endian.
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f32` as its IEEE-754 bit pattern, little-endian.
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` as its IEEE-754 bit pattern, little-endian.
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed (u32) UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed (u64 element count) `f32` slice.
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+
+    /// Append a length-prefixed (u64 element count) `usize` slice (as u64s).
+    pub fn put_usizes(&mut self, v: &[usize]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x as u64);
+        }
+    }
+
+    /// Append a length-prefixed (u64 byte count) raw byte slice.
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Append an [`Rng`] state: the four xoshiro words plus the cached
+    /// Box–Muller normal (flag byte + f64 bit pattern).
+    pub fn put_rng(&mut self, rng: &Rng) {
+        let (s, cached) = rng.state();
+        for w in s {
+            self.put_u64(w);
+        }
+        match cached {
+            Some(v) => {
+                self.put_u8(1);
+                self.put_f64(v);
+            }
+            None => self.put_u8(0),
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a snapshot section. Every
+/// `take_*` validates the remaining length before reading, so truncated or
+/// corrupted sections surface as descriptive `Err`s, never panics or
+/// oversized allocations.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Context prefix for error messages (the section being decoded).
+    what: &'a str,
+}
+
+impl<'a> ByteReader<'a> {
+    /// A reader over `buf`; `what` names the section in error messages.
+    pub fn new(buf: &'a [u8], what: &'a str) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0, what }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Error unless every byte has been consumed — catches trailing garbage
+    /// and schema drift.
+    pub fn finish(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!(
+                "{}: {} trailing bytes after decode",
+                self.what,
+                self.remaining()
+            ));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "{}: truncated (need {n} bytes at offset {}, have {})",
+                self.what,
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn take_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub fn take_u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn take_u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn take_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `f32` bit pattern.
+    pub fn take_f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `f64` bit pattern.
+    pub fn take_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a declared element/byte count and validate it against the bytes
+    /// actually remaining (each element at least `elem_bytes` wide), so a
+    /// corrupted length cannot trigger a huge allocation.
+    fn take_count(&mut self, elem_bytes: usize) -> Result<usize, String> {
+        let n = self.take_u64()?;
+        let need = (n as usize).saturating_mul(elem_bytes);
+        if n > usize::MAX as u64 || need > self.remaining() {
+            return Err(format!(
+                "{}: declared count {n} exceeds remaining {} bytes",
+                self.what,
+                self.remaining()
+            ));
+        }
+        Ok(n as usize)
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn take_str(&mut self) -> Result<String, String> {
+        let n = self.take_u32()? as usize;
+        if n > self.remaining() {
+            return Err(format!(
+                "{}: declared string length {n} exceeds remaining {} bytes",
+                self.what,
+                self.remaining()
+            ));
+        }
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| format!("{}: non-UTF-8 string", self.what))
+    }
+
+    /// Read a length-prefixed `f32` vector.
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.take_count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.take_f32()?);
+        }
+        Ok(v)
+    }
+
+    /// Read a length-prefixed `usize` vector.
+    pub fn take_usizes(&mut self) -> Result<Vec<usize>, String> {
+        let n = self.take_count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.take_u64()? as usize);
+        }
+        Ok(v)
+    }
+
+    /// Read a length-prefixed raw byte vector.
+    pub fn take_bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.take_count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Read an [`Rng`] state written by [`ByteWriter::put_rng`].
+    pub fn take_rng(&mut self) -> Result<Rng, String> {
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = self.take_u64()?;
+        }
+        let cached = match self.take_u8()? {
+            0 => None,
+            1 => Some(self.take_f64()?),
+            t => return Err(format!("{}: bad rng cache flag {t}", self.what)),
+        };
+        Ok(Rng::from_state(s, cached))
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB8_8320) over `bytes` —
+/// the per-section integrity guard of the snapshot format.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = crc32_table();
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut rng = Rng::seed_from_u64(7);
+        let _ = rng.normal(); // leave a cached normal in the state
+        let mut w = ByteWriter::new();
+        w.put_u8(0xAB);
+        w.put_u16(0x1234);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(-1.5);
+        w.put_f64(std::f64::consts::PI);
+        w.put_str("hello ✓");
+        w.put_f32s(&[1.0, -2.0, 3.5]);
+        w.put_usizes(&[0, 7, 42]);
+        w.put_bytes(&[9, 8, 7]);
+        w.put_rng(&rng);
+        let bytes = w.into_bytes();
+
+        let mut r = ByteReader::new(&bytes, "test");
+        assert_eq!(r.take_u8().unwrap(), 0xAB);
+        assert_eq!(r.take_u16().unwrap(), 0x1234);
+        assert_eq!(r.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.take_f32().unwrap(), -1.5);
+        assert_eq!(r.take_f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.take_str().unwrap(), "hello ✓");
+        assert_eq!(r.take_f32s().unwrap(), vec![1.0, -2.0, 3.5]);
+        assert_eq!(r.take_usizes().unwrap(), vec![0, 7, 42]);
+        assert_eq!(r.take_bytes().unwrap(), vec![9, 8, 7]);
+        let mut restored = r.take_rng().unwrap();
+        r.finish().unwrap();
+        // The restored stream continues identically.
+        for _ in 0..10 {
+            assert_eq!(restored.next_u64(), rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn truncation_and_bad_lengths_error_cleanly() {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&[1.0; 16]);
+        let bytes = w.into_bytes();
+        // Truncate mid-payload: clean error, no panic.
+        for cut in [0, 4, 9, bytes.len() - 1] {
+            let mut r = ByteReader::new(&bytes[..cut], "trunc");
+            assert!(r.take_f32s().is_err(), "cut={cut}");
+        }
+        // Corrupt the declared count upward: rejected against remaining len.
+        let mut evil = bytes.clone();
+        evil[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = ByteReader::new(&evil, "evil");
+        let err = r.take_f32s().unwrap_err();
+        assert!(err.contains("exceeds remaining"), "{err}");
+    }
+
+    #[test]
+    fn finish_flags_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_u32(5);
+        w.put_u8(0);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes, "tail");
+        r.take_u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+}

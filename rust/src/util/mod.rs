@@ -5,6 +5,7 @@
 
 pub mod benchkit;
 pub mod bitio;
+pub mod bytes;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

@@ -56,6 +56,19 @@ impl Rng {
         }
     }
 
+    /// Snapshot the generator's complete state — the four xoshiro words
+    /// plus the cached Box–Muller pair — for checkpointing. Restoring via
+    /// [`Rng::from_state`] continues the stream exactly where the snapshot
+    /// was taken, including a pending second normal.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.cached_normal)
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4], cached_normal: Option<f64>) -> Rng {
+        Rng { s, cached_normal }
+    }
+
     /// Derive an independent stream for a sub-component (client id, round,
     /// ...). Mixes the label into a fresh seed; streams with distinct labels
     /// are statistically independent.

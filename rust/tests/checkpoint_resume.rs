@@ -1,0 +1,205 @@
+//! Acceptance pins for the checkpoint subsystem (`fedcomloc::ckpt`):
+//!
+//! * **bit-identical resume** — a run killed after round k and restarted
+//!   from its latest snapshot produces byte-identical per-round metrics
+//!   (the sweep sink's canonical JSONL lines) to an uninterrupted run,
+//!   across all four algorithm families, a stateful `ef(...)` uplink
+//!   pipeline, and a `semisync:K` scenario with pending stragglers;
+//! * the checkpointing observer itself never perturbs training — an
+//!   observed run equals the plain `run_with_transport` drive byte for
+//!   byte;
+//! * retention keeps only the last `keep_last` snapshots and the final
+//!   round is always captured;
+//! * `ServeState` loaded from the final snapshot reproduces the recorded
+//!   final-round test accuracy **exactly** (same trainer plane, same
+//!   fold order), and answers `eval`/`predict`/`info` requests.
+
+use fedcomloc::ckpt::{latest_checkpoint, Checkpointer, ServeState};
+use fedcomloc::data::DatasetSpec;
+use fedcomloc::fed::transport::parse_transport;
+use fedcomloc::fed::{
+    run_with_transport, run_with_transport_observed, AlgorithmSpec, RunConfig,
+};
+use fedcomloc::metrics::MetricsLog;
+use fedcomloc::sweep::sink;
+use std::path::{Path, PathBuf};
+
+/// Fresh scratch dir under the system temp root (removed on re-entry so
+/// reruns never resume from a previous test process's snapshots).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedcomloc-ckptres-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Fast convex workload (softmax on flat synthetic Gaussians, d = 132),
+/// driven through the discrete-event `semisync:2` scenario so snapshots
+/// must carry pending straggler deliveries across the kill point.
+fn tiny_cfg(compress_up: &str) -> RunConfig {
+    RunConfig {
+        dataset: DatasetSpec::parse("synthetic:32-c4").unwrap(),
+        train_n: 400,
+        test_n: 100,
+        n_clients: 6,
+        clients_per_round: 4,
+        rounds: 6,
+        eval_every: 2,
+        batch_size: 16,
+        eval_batch: 32,
+        threads: 1,
+        compress_up: compress_up.to_string(),
+        scenario: "semisync:2".to_string(),
+        ..RunConfig::default_mnist()
+    }
+}
+
+fn run_observed(cfg: &RunConfig, spec: &AlgorithmSpec, ckpt: &mut Checkpointer) -> MetricsLog {
+    let trainer =
+        fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
+    let mut transport = parse_transport("inproc", cfg.n_clients, cfg.seed).unwrap();
+    run_with_transport_observed(cfg, trainer, spec, transport.as_mut(), ckpt)
+        .unwrap_or_else(|e| panic!("observed run failed: {e}"))
+}
+
+/// The deterministic per-round serialization the sweep sink writes to
+/// `rounds/<run_id>.jsonl` (wall-clock excluded) — byte equality here is
+/// the acceptance bar for "bit-identical resume".
+fn lines(log: &MetricsLog) -> Vec<String> {
+    log.records.iter().map(|r| sink::round_line("case", r)).collect()
+}
+
+/// Kill after 3 completed rounds, resume from the surviving snapshot, and
+/// require the stitched run to match an uninterrupted one byte for byte.
+fn assert_resume_bit_identical(algo: &str, compress_up: &str, tag: &str) {
+    let cfg = tiny_cfg(compress_up);
+    let spec = AlgorithmSpec::parse(algo).unwrap_or_else(|e| panic!("{algo}: {e}"));
+    let root = tmp_dir(tag);
+
+    // Uninterrupted reference, checkpointing every round.
+    let dir_a = root.join("a");
+    let mut ckpt_a = Checkpointer::new(&dir_a, spec.key());
+    let log_a = run_observed(&cfg, &spec, &mut ckpt_a);
+    assert_eq!(ckpt_a.resumed_from(), None, "{tag}: fresh dir must not resume");
+    assert_eq!(log_a.records.len(), cfg.rounds);
+
+    // Simulated crash: the observer stops the drive after round 3's
+    // snapshot lands, mid-run and without finalization.
+    let dir_b = root.join("b");
+    let mut crash = Checkpointer::new(&dir_b, spec.key()).crash_after(3);
+    let partial = run_observed(&cfg, &spec, &mut crash);
+    assert_eq!(partial.records.len(), 3, "{tag}: crash must stop the drive mid-run");
+    assert_eq!(lines(&partial), lines(&log_a)[..3].to_vec(), "{tag}: pre-crash rounds");
+
+    // Fresh process, same checkpoint dir: restart and run to completion.
+    let mut resume = Checkpointer::new(&dir_b, spec.key());
+    let log_b = run_observed(&cfg, &spec, &mut resume);
+    assert_eq!(resume.resumed_from(), Some(3), "{tag}: must resume at round 3");
+    assert_eq!(log_b.records.len(), cfg.rounds);
+
+    let (a, b) = (lines(&log_a), lines(&log_b));
+    for (la, lb) in a.iter().zip(&b) {
+        assert_eq!(la, lb, "{tag}: a resumed round diverged from the uninterrupted run");
+    }
+    assert_eq!(
+        log_a.best_accuracy().map(f64::to_bits),
+        log_b.best_accuracy().map(f64::to_bits),
+        "{tag}"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn fedcomloc_with_ef_pipeline_resumes_bit_identically() {
+    assert_resume_bit_identical("fedcomloc-com", "ef(topk:0.25)", "fedcomloc");
+}
+
+#[test]
+fn fedavg_with_ef_pipeline_resumes_bit_identically() {
+    assert_resume_bit_identical("fedavg", "ef(topk:0.25)", "fedavg");
+}
+
+#[test]
+fn scaffold_resumes_bit_identically() {
+    // Scaffold ships two vectors per direction and rejects stateful
+    // pipelines; its control variates still ride in the snapshot.
+    assert_resume_bit_identical("scaffold", "none", "scaffold");
+}
+
+#[test]
+fn feddyn_resumes_bit_identically() {
+    assert_resume_bit_identical("feddyn:0.01", "ef(topk:0.25)", "feddyn");
+}
+
+#[test]
+fn observer_never_perturbs_training() {
+    let cfg = tiny_cfg("ef(topk:0.25)");
+    let spec = AlgorithmSpec::parse("fedcomloc-com").unwrap();
+    let trainer =
+        fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
+    let mut plain_transport = parse_transport("inproc", cfg.n_clients, cfg.seed).unwrap();
+    let plain = run_with_transport(&cfg, trainer, &spec, plain_transport.as_mut());
+
+    let root = tmp_dir("noperturb");
+    let mut ckpt = Checkpointer::new(&root, spec.key());
+    let observed = run_observed(&cfg, &spec, &mut ckpt);
+    assert_eq!(lines(&plain), lines(&observed), "snapshotting must be invisible to the math");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn retention_prunes_to_keep_last_and_always_captures_the_final_round() {
+    let cfg = tiny_cfg("none");
+    let spec = AlgorithmSpec::parse("fedavg").unwrap();
+    let root = tmp_dir("retention");
+    let mut ckpt = Checkpointer::new(&root, spec.key()).every(1).keep_last(2);
+    let _ = run_observed(&cfg, &spec, &mut ckpt);
+    let mut kept: Vec<String> = std::fs::read_dir(&root)
+        .unwrap()
+        .flatten()
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    kept.sort();
+    assert_eq!(kept, vec!["ckpt-000005.fckp", "ckpt-000006.fckp"]);
+    let (round, _) = latest_checkpoint(&root).unwrap();
+    assert_eq!(round, cfg.rounds as u64);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn serve_reproduces_the_recorded_final_accuracy_exactly() {
+    let cfg = tiny_cfg("ef(topk:0.25)");
+    let spec = AlgorithmSpec::parse("fedcomloc-com").unwrap();
+    let root = tmp_dir("serve");
+    let mut ckpt = Checkpointer::new(&root, spec.key());
+    let log = run_observed(&cfg, &spec, &mut ckpt);
+
+    let (round, path) = latest_checkpoint(&root).unwrap();
+    assert_eq!(round, cfg.rounds as u64);
+    let mut serve = ServeState::load(&path, "native", Path::new("artifacts")).unwrap();
+    assert_eq!(serve.round(), cfg.rounds as u64);
+    assert_eq!(serve.algo_spec(), spec.key());
+
+    // The snapshot's record trail carries the final evaluated accuracy...
+    let trained = log.records.last().unwrap().test_accuracy.unwrap();
+    let recorded = serve.recorded_accuracy().unwrap();
+    assert_eq!(recorded.to_bits(), trained.to_bits(), "snapshot records drifted");
+
+    // ...and re-evaluating the restored parameters over the re-derived
+    // test split lands on the same number bit for bit: train → snapshot →
+    // serve is lossless end to end.
+    let eval = serve.eval();
+    assert_eq!(eval.examples, cfg.test_n);
+    assert_eq!(eval.accuracy.to_bits(), trained.to_bits(), "served accuracy drifted");
+
+    // The line protocol agrees with the typed API and stays total on use.
+    let reply = serve.handle_line(r#"{"cmd":"eval"}"#);
+    assert!(reply.contains("\"accuracy\""), "eval reply: {reply}");
+    assert!(reply.contains("\"matches_recorded\":true"), "eval reply: {reply}");
+    let row = vec![0.0f32; 32];
+    let (label, probs) = serve.predict(&row).unwrap();
+    assert!(label < 4, "label {label}");
+    // exp(−loss) probes recover the softmax outputs, which sum to 1 up to
+    // the f32 forward pass's rounding.
+    assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-3, "probs {probs:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,112 @@
+//! Adversarial wire-format property test: [`Message::decode`] over
+//! mutated, truncated, and garbage-extended frames must **never panic or
+//! over-allocate** — every outcome is either a structured `WireError` or
+//! a message whose declared geometry survived full payload validation
+//! (in which case decoding the payload to a dense vector is total).
+//!
+//! Valid frames are produced by the real codec registry (every family
+//! plus a chain), so the declared-length checks are exercised against
+//! every payload layout the federation actually ships.
+
+use fedcomloc::compress::CompressorSpec;
+use fedcomloc::fed::message::Message;
+use fedcomloc::util::quickcheck::{check, Gen};
+use fedcomloc::util::rng::Rng;
+
+/// One spec per codec family, plus the chained spelling (its own codec
+/// tag) — the full set of wire formats `Message::decode` accepts.
+const SPECS: &[&str] = &[
+    "none",
+    "topk:0.25",
+    "randk:0.25",
+    "q:8",
+    "q:4",
+    "natural",
+    "topk:0.1|q8",
+];
+
+/// Encode a valid frame for a random codec, dimension, and payload.
+fn valid_frame(g: &mut Gen) -> Vec<u8> {
+    let spec = *g.choose(SPECS);
+    let dim = g.usize_in(1..=64);
+    let x = g.vec_f32(dim..=dim, -4.0, 4.0);
+    let mut pipe = CompressorSpec::parse(spec).unwrap().build(dim);
+    let mut rng = Rng::seed_from_u64(g.rng().next_u64());
+    let enc = pipe.compress(&x, 0, &mut rng);
+    Message::from_compressed(0, 1, enc).encode()
+}
+
+#[test]
+fn valid_frames_of_every_codec_family_roundtrip() {
+    check("wire roundtrip", 200, |g| {
+        let bytes = valid_frame(g);
+        let msg = Message::decode(&bytes)
+            .map_err(|e| format!("valid frame rejected: {e:?} ({} bytes)", bytes.len()))?;
+        // A validated payload must decode to the declared dimension.
+        let dense = msg.to_dense();
+        if dense.len() != msg.header.dim as usize {
+            return Err(format!("dim {} decoded to {} values", msg.header.dim, dense.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mutated_frames_never_panic() {
+    check("wire fuzz", 400, |g| {
+        let mut bytes = valid_frame(g);
+        match g.usize_in(0..=2) {
+            0 => {
+                // Truncate anywhere, including inside the header.
+                let keep = g.usize_in(0..=bytes.len());
+                bytes.truncate(keep);
+            }
+            1 => {
+                // Flip a handful of bytes — header fields (magic, codec
+                // tag, declared dim/params) and payload alike.
+                for _ in 0..g.usize_in(1..=4) {
+                    if bytes.is_empty() {
+                        break;
+                    }
+                    let pos = g.rng().below_usize(bytes.len());
+                    let val = (g.rng().next_u64() & 0xFF) as u8;
+                    bytes[pos] = val;
+                }
+            }
+            _ => {
+                // Graft trailing garbage (decode must bound itself by the
+                // declared frame length, not the buffer length).
+                let extra = g.usize_in(1..=64);
+                for _ in 0..extra {
+                    bytes.push((g.rng().next_u64() & 0xFF) as u8);
+                }
+            }
+        }
+        // The property is totality: every outcome is a structured error
+        // or a message whose payload decodes without panicking.
+        if let Ok(msg) = Message::decode(&bytes) {
+            let dense = msg.to_dense();
+            if dense.len() != msg.header.dim as usize {
+                return Err(format!(
+                    "accepted frame decodes {} values for declared dim {}",
+                    dense.len(),
+                    msg.header.dim
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn declared_length_bombs_are_rejected_before_allocation() {
+    // A frame whose header declares a huge dimension but carries a tiny
+    // payload must be rejected by the length validation — not trusted
+    // into a multi-gigabyte allocation.
+    let mut bytes = Message::dense(0, 1, &[1.0, 2.0]).encode();
+    // dim is the little-endian u32 after magic(2) + version(1) + codec
+    // tag(1) + quantizer bits(1) + bucket(4).
+    let dim_pos = 9;
+    bytes[dim_pos..dim_pos + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Message::decode(&bytes).is_err(), "dim bomb must be rejected");
+}

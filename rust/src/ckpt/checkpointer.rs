@@ -16,7 +16,7 @@
 //! | `config`    | canonical run-config kv pairs (validated on resume)     |
 //! | `model`     | global parameters x                                     |
 //! | `fed_rng`   | federation root RNG (client sampling stream)            |
-//! | `clients`   | per client: h, RNG, loader permutation/cursor/RNG, `ef` residuals |
+//! | `clients`   | population size + per *resident* client (ascending id): id, h, RNG, loader permutation/cursor/RNG, `ef` residuals |
 //! | `downlink`  | server broadcast pipeline's `ef` residuals              |
 //! | `algo`      | the algorithm's [`AlgoState`] (server RNGs, variates, retained messages) |
 //! | `transport` | [`Transport::save_state`] bytes (SimNet RNG; ScenarioNet clock + straggler buffer, nested) |
@@ -102,10 +102,17 @@ impl Checkpointer {
         let mut w = ByteWriter::new();
         w.put_rng(&fed.rng);
         snap.push_section("fed_rng", w.into_bytes());
+        // Only materialized clients are written — untouched clients are
+        // implicit-zero and reconstructed from the template on resume, so
+        // a million-client checkpoint scales with the cohort history, not
+        // the population.
         let mut w = ByteWriter::new();
         w.put_u64(fed.clients.len() as u64);
-        for client in &fed.clients {
-            let st = client.lock().unwrap();
+        let resident = fed.clients.resident_ids_sorted();
+        w.put_u64(resident.len() as u64);
+        for id in resident {
+            let st = fed.clients[id].lock().unwrap();
+            w.put_u64(id as u64);
             w.put_f32s(&st.h);
             w.put_rng(&st.rng);
             let (indices, cursor, loader_rng) = st.loader.cursor_state();
@@ -192,8 +199,23 @@ impl Checkpointer {
                 fed.clients.len()
             ));
         }
-        for (ci, client) in fed.clients.iter().enumerate() {
-            let mut st = client.lock().unwrap();
+        // Materialize each checkpointed client from the template (the same
+        // pure per-id derivation the live run used), then overwrite its
+        // mutable state; clients absent from the checkpoint were never
+        // touched and stay implicit.
+        let n_resident = r.take_u64()? as usize;
+        let mut prev: Option<usize> = None;
+        for _ in 0..n_resident {
+            let ci = r.take_u64()? as usize;
+            if ci >= n {
+                return Err(format!("checkpoint client id {ci} out of range ({n} clients)"));
+            }
+            if prev.is_some_and(|p| p >= ci) {
+                return Err("checkpoint client ids not strictly ascending".into());
+            }
+            prev = Some(ci);
+            fed.clients.materialize(ci, &fed.partition);
+            let mut st = fed.clients[ci].lock().unwrap();
             let h = r.take_f32s()?;
             if h.len() != st.h.len() {
                 return Err(format!("client {ci}: control variate dim mismatch"));

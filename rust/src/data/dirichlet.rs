@@ -157,6 +157,295 @@ pub fn partition(
     }
 }
 
+/// A candidate for the largest-remainder bonus units, ordered so a bounded
+/// `BinaryHeap` keeps the *best* `cap` candidates with the *worst* on top:
+/// "greater" = worse = smaller fractional part, ties broken toward the
+/// larger client index (the eager path's stable descending sort hands
+/// bonus units to smaller indices first on ties).
+struct RemainderCand {
+    frac: f64,
+    idx: usize,
+}
+
+impl Ord for RemainderCand {
+    fn cmp(&self, o: &RemainderCand) -> std::cmp::Ordering {
+        o.frac.total_cmp(&self.frac).then(self.idx.cmp(&o.idx))
+    }
+}
+impl PartialOrd for RemainderCand {
+    fn partial_cmp(&self, o: &RemainderCand) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl PartialEq for RemainderCand {
+    fn eq(&self, o: &RemainderCand) -> bool {
+        self.cmp(o) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for RemainderCand {}
+
+/// A Dirichlet partition stored sparsely: only non-empty shards are
+/// materialized, so memory is O(examples) rather than O(n_clients) — the
+/// representation behind the million-client federation engine. Built by
+/// [`partition_streaming`], which consumes the *exact* RNG stream of the
+/// eager [`partition`] and produces element-identical shards for every
+/// client (the eager path stays as the reference implementation).
+#[derive(Debug, Clone)]
+pub struct SparsePartition {
+    n_clients: usize,
+    /// The Dirichlet concentration this partition was drawn with.
+    pub alpha: f64,
+    /// Non-empty shards only, ascending by client id.
+    shards: Vec<(usize, Vec<usize>)>,
+}
+
+impl SparsePartition {
+    /// Number of clients the data was split over (including the implicit
+    /// empty shards).
+    pub fn num_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    /// Client `k`'s example indices; the empty slice for clients that
+    /// received no examples. O(log #nonempty).
+    pub fn shard(&self, client: usize) -> &[usize] {
+        assert!(client < self.n_clients, "client {client} out of range");
+        match self.shards.binary_search_by_key(&client, |&(c, _)| c) {
+            Ok(i) => &self.shards[i].1,
+            Err(_) => &[],
+        }
+    }
+
+    /// Number of clients that actually hold examples.
+    pub fn num_nonempty(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The non-empty shards, ascending by client id.
+    pub fn nonempty(&self) -> impl Iterator<Item = (usize, &[usize])> {
+        self.shards.iter().map(|(c, s)| (*c, s.as_slice()))
+    }
+
+    /// Per-client class histogram, dense over all clients — identical to
+    /// [`Partition::class_histogram`]. O(n_clients × classes) output:
+    /// meant for reports and identity tests at inspection scale, not for
+    /// million-client runs.
+    pub fn class_histogram(&self, data: &Dataset) -> Vec<Vec<usize>> {
+        let mut hists = vec![vec![0usize; data.num_classes]; self.n_clients];
+        for (c, shard) in self.nonempty() {
+            for &i in shard {
+                hists[c][data.labels[i] as usize] += 1;
+            }
+        }
+        hists
+    }
+
+    /// Mean (over non-empty clients) total-variation distance to the global
+    /// class distribution — same accumulation order and result as
+    /// [`Partition::heterogeneity_tv`] (which skips empty shards), but
+    /// without materializing the empty rows.
+    pub fn heterogeneity_tv(&self, data: &Dataset) -> f64 {
+        let global = data.class_counts();
+        let gtotal: usize = global.iter().sum();
+        let gdist: Vec<f64> = global.iter().map(|&c| c as f64 / gtotal as f64).collect();
+        let mut acc = 0.0;
+        let mut counted = 0usize;
+        let mut h = vec![0usize; data.num_classes];
+        for (_, shard) in self.nonempty() {
+            h.iter_mut().for_each(|x| *x = 0);
+            for &i in shard {
+                h[data.labels[i] as usize] += 1;
+            }
+            let total: usize = h.iter().sum();
+            if total == 0 {
+                continue;
+            }
+            let tv: f64 = h
+                .iter()
+                .zip(&gdist)
+                .map(|(&c, &g)| (c as f64 / total as f64 - g).abs())
+                .sum::<f64>()
+                / 2.0;
+            acc += tv;
+            counted += 1;
+        }
+        if counted == 0 {
+            0.0
+        } else {
+            acc / counted as f64
+        }
+    }
+}
+
+/// Streaming Dirichlet partition: same draws, same shards as the eager
+/// [`partition`] for every `(data, n_clients, alpha, min_per_client, seed)`,
+/// in O(examples) memory regardless of `n_clients`.
+///
+/// Two regimes:
+///
+/// * `n_clients ≤ examples` — the eager path's own memory is already
+///   O(examples), so it runs verbatim and the result is wrapped sparsely
+///   (bit-identity by construction).
+/// * `n_clients > examples` — the eager rebalance floor
+///   `min_per_client.min(len / n_clients)` is 0, so rebalancing is a no-op
+///   and each class's Dir(α·1_n) draw is replayed in two streaming passes:
+///   a cloned generator accumulates the gamma sum left-to-right exactly as
+///   `Rng::dirichlet`'s `iter().sum()` does, then the real generator
+///   re-draws each gamma and derives `floor(p·n)` / fractional parts on
+///   the fly, keeping only non-zero allocations and a bounded heap of the
+///   best remainder candidates. The largest-remainder bonus count
+///   R = n − Σfloor satisfies R ≤ min(n_clients, bucket_len) (each
+///   fractional part is < 1), so a heap capped there always contains the
+///   true winners, replicated in the eager sort order (frac descending,
+///   index ascending on ties).
+pub fn partition_streaming(
+    data: &Dataset,
+    n_clients: usize,
+    alpha: f64,
+    min_per_client: usize,
+    rng: &mut Rng,
+) -> SparsePartition {
+    assert!(n_clients > 0);
+    assert!(alpha > 0.0, "Dirichlet alpha must be positive");
+    if n_clients <= data.len() {
+        let eager = partition(data, n_clients, alpha, min_per_client, rng);
+        let shards = eager
+            .client_indices
+            .into_iter()
+            .enumerate()
+            .filter(|(_, s)| !s.is_empty())
+            .collect();
+        return SparsePartition { n_clients, alpha, shards };
+    }
+
+    // Million-client regime: stream every class's Dirichlet draw.
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.num_classes];
+    for (i, &l) in data.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    for bucket in &mut by_class {
+        rng.shuffle(bucket);
+    }
+
+    use std::collections::HashMap;
+    let mut shard_map: HashMap<usize, Vec<usize>> = HashMap::new();
+    for bucket in &by_class {
+        if bucket.is_empty() {
+            continue;
+        }
+        let n = bucket.len();
+        let nf = n as f64;
+
+        // Pass 1 (cloned generator): the gamma sum, accumulated
+        // left-to-right exactly like `dirichlet`'s `v.iter().sum()`.
+        let mut probe = rng.clone();
+        let mut sum = 0.0f64;
+        for _ in 0..n_clients {
+            sum += probe.gamma(alpha);
+        }
+
+        // Sparse allocation for this class: (client, count), ascending.
+        let mut alloc: Vec<(usize, usize)>;
+        if sum <= 0.0 {
+            // Degenerate draw: `dirichlet` burns the k gammas, then
+            // one-hots a uniform index — whole bucket to that client.
+            for _ in 0..n_clients {
+                rng.gamma(alpha);
+            }
+            let idx = rng.below_usize(n_clients);
+            alloc = vec![(idx, n)];
+        } else {
+            // Pass 2 (real generator): floors and remainder candidates.
+            let cap = n_clients.min(n);
+            let mut floors: Vec<(usize, usize)> = Vec::new();
+            let mut assigned = 0usize;
+            let mut heap: std::collections::BinaryHeap<RemainderCand> =
+                std::collections::BinaryHeap::with_capacity(cap + 1);
+            for i in 0..n_clients {
+                let p = rng.gamma(alpha) / sum;
+                let t = p * nf;
+                let fl = t.floor();
+                let frac = t - fl;
+                let fl = fl as usize;
+                if fl > 0 {
+                    floors.push((i, fl));
+                    assigned += fl;
+                }
+                let cand = RemainderCand { frac, idx: i };
+                if heap.len() < cap {
+                    heap.push(cand);
+                } else if let Some(worst) = heap.peek() {
+                    if cand.cmp(worst) == std::cmp::Ordering::Less {
+                        heap.pop();
+                        heap.push(cand);
+                    }
+                }
+            }
+            let r = n - assigned;
+            let mut winners = heap.into_vec();
+            winners.sort_by(|a, b| b.frac.total_cmp(&a.frac).then(a.idx.cmp(&b.idx)));
+            let mut bonus: Vec<usize> = winners.into_iter().take(r).map(|w| w.idx).collect();
+            bonus.sort_unstable();
+            // Merge floors and bonus units, ascending by client.
+            alloc = Vec::with_capacity(floors.len() + bonus.len());
+            let (mut fi, mut bi) = (0, 0);
+            while fi < floors.len() || bi < bonus.len() {
+                let fc = floors.get(fi).map(|&(c, _)| c);
+                let bc = bonus.get(bi).copied();
+                match (fc, bc) {
+                    (Some(f), Some(b)) if f == b => {
+                        alloc.push((f, floors[fi].1 + 1));
+                        fi += 1;
+                        bi += 1;
+                    }
+                    (Some(f), Some(b)) if f < b => {
+                        alloc.push((f, floors[fi].1));
+                        fi += 1;
+                    }
+                    (Some(_), Some(b)) => {
+                        alloc.push((b, 1));
+                        bi += 1;
+                    }
+                    (Some(f), None) => {
+                        alloc.push((f, floors[fi].1));
+                        fi += 1;
+                    }
+                    (None, Some(b)) => {
+                        alloc.push((b, 1));
+                        bi += 1;
+                    }
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+
+        // Slice the shuffled bucket in ascending client order — the same
+        // cursor walk as the eager `alloc.iter().enumerate()` loop, which
+        // only advances on non-zero takes.
+        let mut cursor = 0;
+        for &(client, take) in &alloc {
+            shard_map
+                .entry(client)
+                .or_default()
+                .extend_from_slice(&bucket[cursor..cursor + take]);
+            cursor += take;
+        }
+        debug_assert_eq!(cursor, n);
+    }
+
+    // Rebalance floor is min_per_client.min(len / n_clients) = 0 here, so
+    // the eager top-up loop breaks immediately — nothing to replicate.
+    // Final shuffles: the eager path walks shards in client order; empty
+    // and single-element shards consume no draws, so shuffling only the
+    // non-empty shards in ascending id order is draw-for-draw identical.
+    let mut shards: Vec<(usize, Vec<usize>)> = shard_map.into_iter().collect();
+    shards.sort_unstable_by_key(|&(c, _)| c);
+    for (_, shard) in &mut shards {
+        rng.shuffle(shard);
+    }
+    SparsePartition { n_clients, alpha, shards }
+}
+
 /// Render the Figure 11-style per-client class distribution as text (rows:
 /// first `max_clients` clients; one bar per class).
 pub fn render_histogram(partition: &Partition, data: &Dataset, max_clients: usize) -> String {

@@ -94,11 +94,16 @@ impl FedAlgorithm for FedAvg {
         let results: Vec<(Message, f64)> = ctx.map_clients_ws(&participants, |ci, state, ws| {
             let mut xi = ws.take_xi_primed(&x);
             let mut loss_sum = 0.0f64;
-            for _ in 0..local_steps {
-                let batch = state.loader.next_batch();
-                let loss = trainer.train_step_into(&xi[..d], zeros, &batch, gamma, ws);
-                std::mem::swap(&mut xi, &mut ws.step);
-                loss_sum += loss as f64;
+            // Empty shards (million-client populations smaller than the
+            // dataset leave most clients without examples) skip local
+            // training: the client echoes the broadcast model back.
+            if !state.loader.is_empty() {
+                for _ in 0..local_steps {
+                    let batch = state.loader.next_batch();
+                    let loss = trainer.train_step_into(&xi[..d], zeros, &batch, gamma, ws);
+                    std::mem::swap(&mut xi, &mut ws.step);
+                    loss_sum += loss as f64;
+                }
             }
             let upload =
                 Message::through(round, ci as u32, &xi[..d], &mut state.up, &mut state.rng);

@@ -92,14 +92,19 @@ impl FedAlgorithm for FedDyn {
             // reused across the segment).
             let mut h_eff = vec![0.0f32; d];
             let mut loss_sum = 0.0f64;
-            for _ in 0..local_steps {
-                let batch = state.loader.next_batch();
-                for j in 0..d {
-                    h_eff[j] = state.h[j] - a * (xi[j] - x[j]);
+            // Empty shards (million-client populations smaller than the
+            // dataset leave most clients without examples) skip local
+            // training: the client echoes the broadcast model back.
+            if !state.loader.is_empty() {
+                for _ in 0..local_steps {
+                    let batch = state.loader.next_batch();
+                    for j in 0..d {
+                        h_eff[j] = state.h[j] - a * (xi[j] - x[j]);
+                    }
+                    let loss = trainer.train_step_into(&xi[..d], &h_eff, &batch, gamma, ws);
+                    std::mem::swap(&mut xi, &mut ws.step);
+                    loss_sum += loss as f64;
                 }
-                let loss = trainer.train_step_into(&xi[..d], &h_eff, &batch, gamma, ws);
-                std::mem::swap(&mut xi, &mut ws.step);
-                loss_sum += loss as f64;
             }
             let upload =
                 Message::through(round, ci as u32, &xi[..d], &mut state.up, &mut state.rng);

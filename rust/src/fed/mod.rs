@@ -33,16 +33,18 @@ pub mod message;
 pub mod scaffold;
 pub mod scaffnew;
 pub mod sim;
+pub mod state_store;
 pub mod transport;
 
 pub use algorithm::{
     drive, drive_federation, drive_federation_observed, AlgoState, DriveObserver, FedAlgorithm,
     NoopObserver, RoundCtx, RoundOutcome, StateItem,
 };
+pub use state_store::{ClientStore, StateTemplate};
 
 use crate::compress::{CompressorSpec, Pipeline};
-use crate::data::dirichlet::{partition, Partition};
-use crate::data::loader::{eval_batches, ClientLoader, EvalBatches};
+use crate::data::dirichlet::{partition_streaming, SparsePartition};
+use crate::data::loader::{eval_batches, EvalBatches};
 use crate::data::{load_or_synthesize, DatasetSpec, TrainTest};
 use crate::metrics::{MetricsLog, RoundRecord};
 use crate::model::{LocalTrainer, Model, ModelSpec, Workspace};
@@ -506,10 +508,12 @@ impl RunConfig {
     }
 }
 
-/// Per-client persistent state across rounds.
+/// Per-client persistent state across rounds. At million-client scale
+/// these are materialized lazily per sampled cohort by the paged
+/// [`ClientStore`] — see [`state_store`] — not per population.
 pub struct ClientState {
     /// The client's shard-local minibatch stream.
-    pub loader: ClientLoader,
+    pub loader: crate::data::loader::ClientLoader,
     /// Scaffnew control variate h_i (also reused as c_i by Scaffold and as
     /// the FedDyn gradient correction λ_i — exactly one algorithm runs per
     /// Federation, so the slot is never shared).
@@ -529,10 +533,12 @@ pub struct Federation {
     pub model: Model,
     /// The compute plane executing local objectives.
     pub trainer: Arc<dyn LocalTrainer>,
-    /// Per-client persistent state, lockable per worker.
-    pub clients: Vec<Mutex<ClientState>>,
-    /// The Dirichlet label-skew partition behind the client shards.
-    pub partition: Partition,
+    /// Per-client persistent state, paged in per sampled cohort and
+    /// lockable per worker (indexes like the `Vec` it replaced).
+    pub clients: ClientStore,
+    /// The sparse Dirichlet label-skew partition behind the client shards
+    /// (only non-empty shards are materialized).
+    pub partition: SparsePartition,
     /// Pre-batched test set for the evaluation cadence.
     pub eval_set: EvalBatches,
     /// Fork-join worker pool for per-round client parallelism and
@@ -596,7 +602,7 @@ impl Federation {
         let data =
             load_or_synthesize(&cfg.dataset, &cfg.data_dir, cfg.train_n, cfg.test_n, cfg.seed);
         let mut rng = Rng::seed_from_u64(cfg.seed);
-        let part = partition(
+        let part = partition_streaming(
             &data.train,
             cfg.n_clients,
             cfg.dirichlet_alpha,
@@ -605,25 +611,20 @@ impl Federation {
         );
         let train = Arc::new(data.train.clone());
         let dim = model.dim();
-        let up_spec = cfg.uplink_spec();
-        let clients: Vec<Mutex<ClientState>> = part
-            .client_indices
-            .iter()
-            .enumerate()
-            .map(|(i, shard)| {
-                Mutex::new(ClientState {
-                    loader: ClientLoader::new(
-                        Arc::clone(&train),
-                        shard.clone(),
-                        cfg.batch_size,
-                        rng.derive(0xC11E27 + i as u64),
-                    ),
-                    h: vec![0.0f32; dim],
-                    rng: rng.derive(0xC0_FFEE + i as u64),
-                    up: up_spec.build(cfg.rounds),
-                })
-            })
-            .collect();
+        // Per-client streams derive (purely) from the post-partition root
+        // state, so paging a client in at round 40 yields bit-identical
+        // state to the retired eager per-population construction.
+        let clients = ClientStore::new(
+            cfg.n_clients,
+            StateTemplate {
+                root: rng.clone(),
+                dim,
+                batch_size: cfg.batch_size,
+                rounds: cfg.rounds,
+                up_spec: cfg.uplink_spec(),
+                train: Arc::clone(&train),
+            },
+        );
         let eval_set = eval_batches(&data.test, cfg.eval_batch);
         let threads = if cfg.threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -674,9 +675,7 @@ impl Federation {
             spec.key(),
             cfg.compress_up
         );
-        for client in &self.clients {
-            client.lock().unwrap().up = spec.build(cfg.rounds);
-        }
+        self.clients.set_uplink_spec(spec.clone(), cfg.rounds);
     }
 
     /// Install a legacy algorithm spec's inline compressor as the server
@@ -697,10 +696,14 @@ impl Federation {
     }
 
     /// Sample the participating set S_r for a round (uniform w/o
-    /// replacement, paper §4: 10 of 100).
+    /// replacement, paper §4: 10 of 100) and page the cohort's state in.
+    /// O(clients_per_round) per round — the sampler never touches the
+    /// population size, and only the sampled ids are materialized.
     pub fn sample_clients(&mut self, m: usize) -> Vec<usize> {
-        self.rng
-            .sample_without_replacement(self.clients.len(), m.min(self.clients.len()))
+        let n = self.clients.len();
+        let sampled = self.rng.sample_without_replacement(n, m.min(n));
+        self.clients.materialize_all(&sampled, &self.partition);
+        sampled
     }
 
     /// Evaluate the current global model on the test set, fanning the eval
@@ -737,11 +740,14 @@ impl Federation {
     }
 
     /// Sum of all control variates (invariant diagnostics; see tests).
+    /// Never-materialized clients hold an implicit h_i = 0 and contribute
+    /// nothing, so summing the residents in ascending id order equals the
+    /// retired whole-population sum.
     pub fn control_variate_sum(&self) -> Vec<f32> {
         let dim = self.x.len();
         let mut acc = vec![0.0f32; dim];
-        for c in &self.clients {
-            let c = c.lock().unwrap();
+        for id in self.clients.resident_ids_sorted() {
+            let c = self.clients[id].lock().unwrap();
             crate::tensor::axpy(1.0, &c.h, &mut acc);
         }
         acc

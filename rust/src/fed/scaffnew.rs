@@ -186,21 +186,26 @@ impl FedAlgorithm for FedComLoc {
             // no heap allocation besides the uplink message itself.
             let mut xi = ws.take_xi_primed(&x);
             let mut loss_sum = 0.0f64;
-            for _ in 0..seg_len {
-                let batch = state.loader.next_batch();
-                let loss = match (variant, local_density) {
-                    (Variant::Local, Some(density)) => trainer.train_step_masked_into(
-                        &xi[..d],
-                        &state.h,
-                        &batch,
-                        gamma,
-                        density,
-                        ws,
-                    ),
-                    _ => trainer.train_step_into(&xi[..d], &state.h, &batch, gamma, ws),
-                };
-                std::mem::swap(&mut xi, &mut ws.step);
-                loss_sum += loss as f64;
+            // Empty shards (million-client populations smaller than the
+            // dataset leave most clients without examples) skip the local
+            // segment: the client echoes the broadcast model back.
+            if !state.loader.is_empty() {
+                for _ in 0..seg_len {
+                    let batch = state.loader.next_batch();
+                    let loss = match (variant, local_density) {
+                        (Variant::Local, Some(density)) => trainer.train_step_masked_into(
+                            &xi[..d],
+                            &state.h,
+                            &batch,
+                            gamma,
+                            density,
+                            ws,
+                        ),
+                        _ => trainer.train_step_into(&xi[..d], &state.h, &batch, gamma, ws),
+                    };
+                    std::mem::swap(&mut xi, &mut ws.step);
+                    loss_sum += loss as f64;
+                }
             }
             // ---- uplink: transmit x̂ through the client's pipeline ----
             let upload =

@@ -124,11 +124,17 @@ impl FedAlgorithm for Scaffold {
                 // h = c_i − c to the Scaffnew-form step x − γ(g − h).
                 let mut h_eff = vec![0.0f32; d];
                 tensor::sub(&state.h, &c_ref, &mut h_eff);
-                for _ in 0..local_steps {
-                    let batch = state.loader.next_batch();
-                    let loss = trainer.train_step_into(&xi[..d], &h_eff, &batch, gamma, ws);
-                    std::mem::swap(&mut xi, &mut ws.step);
-                    loss_sum += loss as f64;
+                // Empty shards (million-client populations smaller than
+                // the dataset leave most clients without examples) skip
+                // local training: xi stays at the broadcast model, so
+                // Δx = 0 and the option-II refresh stays well-defined.
+                if !state.loader.is_empty() {
+                    for _ in 0..local_steps {
+                        let batch = state.loader.next_batch();
+                        let loss = trainer.train_step_into(&xi[..d], &h_eff, &batch, gamma, ws);
+                        std::mem::swap(&mut xi, &mut ws.step);
+                        loss_sum += loss as f64;
+                    }
                 }
                 // Option II variate refresh.
                 let mut c_new = vec![0.0f32; d];

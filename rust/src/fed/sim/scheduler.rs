@@ -14,12 +14,14 @@
 //! t_up(c)    = Σ uplink link_secs
 //! ```
 //!
-//! The per-client compute-speed multipliers `speed_c` are drawn
-//! log-uniformly from `[1, SPEED_SPREAD]` at construction from the run
-//! seed (salt [`SPEED_SALT`]) — the compute twin of [`SimNetCfg`]'s
-//! bandwidth heterogeneity, and an independent RNG stream from every
-//! training/transport stream, so enabling a scenario never perturbs
-//! training randomness.
+//! The per-client compute-speed multipliers `speed_c` are log-uniform on
+//! `[1, SPEED_SPREAD]`, *derived on demand* from the run seed (salt
+//! [`SPEED_SALT`]) and the client **id** via the pure [`Rng::derive`]
+//! label mix — the compute twin of [`SimNetCfg`]'s bandwidth
+//! heterogeneity, an independent RNG stream from every training/transport
+//! stream (so enabling a scenario never perturbs training randomness),
+//! and O(1) memory regardless of population size (so a million-client
+//! federation never materializes a speed table).
 //!
 //! Acceptance is decided once per round on the deterministic
 //! [`EventQueue`]: clients ranked by ready-to-upload deadline
@@ -91,8 +93,13 @@ pub struct ScenarioNet<'a> {
     kind: UplinkKind,
     tau: f64,
     nominal_steps: usize,
-    /// Per-client compute-speed multiplier (≥ 1), drawn at construction.
-    speed: Vec<f64>,
+    /// Root of the per-client compute-speed streams; client `c`'s
+    /// multiplier is a pure function of this root and `c` (see
+    /// [`ScenarioNet::speed`]), so no per-client table is ever built.
+    speed_rng: Rng,
+    /// Test hook: pin exact per-client speeds for hand-computed schedules.
+    #[cfg(test)]
+    speed_override: Option<Vec<f64>>,
     /// The virtual clock: absolute start time of the current round.
     now: f64,
     round: usize,
@@ -123,9 +130,6 @@ impl<'a> ScenarioNet<'a> {
         cfg: &RunConfig,
     ) -> ScenarioNet<'a> {
         assert!(k >= 1, "semisync K must be >= 1");
-        let mut rng = Rng::seed_from_u64(cfg.seed ^ SPEED_SALT);
-        let log_spread = SPEED_SPREAD.ln();
-        let speed = (0..cfg.n_clients).map(|_| (rng.uniform() * log_spread).exp()).collect();
         ScenarioNet {
             inner,
             k,
@@ -133,7 +137,9 @@ impl<'a> ScenarioNet<'a> {
             kind,
             tau: cfg.tau,
             nominal_steps: cfg.local_steps.max(1),
-            speed,
+            speed_rng: Rng::seed_from_u64(cfg.seed ^ SPEED_SALT),
+            #[cfg(test)]
+            speed_override: None,
             now: 0.0,
             round: 0,
             delivered_order: Vec::new(),
@@ -151,8 +157,22 @@ impl<'a> ScenarioNet<'a> {
         }
     }
 
+    /// Client `c`'s compute-speed multiplier, log-uniform on
+    /// `[1, SPEED_SPREAD]` — a pure function of the run seed and `c`
+    /// (identical whether queried once, repeatedly, or never), so a
+    /// million-client population costs nothing until a client is actually
+    /// scheduled.
+    fn speed(&self, client: usize) -> f64 {
+        #[cfg(test)]
+        if let Some(ov) = &self.speed_override {
+            return ov[client];
+        }
+        let mut stream = self.speed_rng.derive(client as u64);
+        (stream.uniform() * SPEED_SPREAD.ln()).exp()
+    }
+
     fn compute_secs(&self, client: usize, steps: usize) -> f64 {
-        steps as f64 * self.tau * self.speed[client]
+        steps as f64 * self.tau * self.speed(client)
     }
 
     /// Fold every buffered straggler update whose arrival time the virtual
@@ -398,7 +418,7 @@ mod tests {
         };
         let mut inner = InProc::default();
         let mut net = ScenarioNet::new(&mut inner, 1, 1.0, UplinkKind::Model, &cfg);
-        net.speed = vec![1.0, 2.0, 4.0];
+        net.speed_override = Some(vec![1.0, 2.0, 4.0]);
         let mut x = vec![10.0f32];
 
         // ---- round 0: broadcast x=10, clients reply 11/12/13 ----
@@ -473,7 +493,7 @@ mod tests {
         assert_eq!(r.stale_updates, 0);
         assert_eq!(net.pending_len(), 0);
         // sim_secs = slowest accepted compute: 2 steps x 0.5 tau x max speed.
-        let max_speed = net.speed.iter().cloned().fold(0.0f64, f64::max);
+        let max_speed = (0..4).map(|c| net.speed(c)).fold(0.0f64, f64::max);
         assert!((r.sim_secs - max_speed).abs() < 1e-12);
     }
 
@@ -488,7 +508,7 @@ mod tests {
         };
         let mut inner = InProc::default();
         let mut net = ScenarioNet::new(&mut inner, 1, 1.0, UplinkKind::Model, &cfg);
-        net.speed = vec![1.0, 2.0, 4.0];
+        net.speed_override = Some(vec![1.0, 2.0, 4.0]);
         let mut x = vec![10.0f32];
         net.fold_arrivals(0, &mut x);
         net.begin_round(0, &[0, 1, 2]);
@@ -504,7 +524,7 @@ mod tests {
         // Restore onto a freshly constructed decorator of the same spec.
         let mut inner2 = InProc::default();
         let mut net2 = ScenarioNet::new(&mut inner2, 1, 1.0, UplinkKind::Model, &cfg);
-        net2.speed = vec![1.0, 2.0, 4.0];
+        net2.speed_override = Some(vec![1.0, 2.0, 4.0]);
         net2.restore_state(&state).unwrap();
         assert_eq!(net2.now, net.now);
         assert_eq!(net2.pending_len(), 2);
@@ -526,10 +546,25 @@ mod tests {
         let mut b = InProc::default();
         let na = ScenarioNet::new(&mut a, 1, 0.5, UplinkKind::Model, &cfg);
         let nb = ScenarioNet::new(&mut b, 1, 0.5, UplinkKind::Model, &cfg);
-        assert_eq!(na.speed, nb.speed, "same seed, same speeds");
-        assert!(na.speed.iter().all(|&s| (1.0..SPEED_SPREAD).contains(&s)));
-        let spread = na.speed.iter().cloned().fold(0.0f64, f64::max)
-            / na.speed.iter().cloned().fold(f64::MAX, f64::min);
+        let speeds_a: Vec<f64> = (0..200).map(|c| na.speed(c)).collect();
+        let speeds_b: Vec<f64> = (0..200).map(|c| nb.speed(c)).collect();
+        assert_eq!(speeds_a, speeds_b, "same seed, same speeds");
+        // Pure per-id derivation: repeated queries agree, in any order.
+        assert_eq!(na.speed(137), na.speed(137));
+        assert_eq!(na.speed(0), speeds_a[0]);
+        assert!(speeds_a.iter().all(|&s| (1.0..SPEED_SPREAD).contains(&s)));
+        let spread = speeds_a.iter().cloned().fold(0.0f64, f64::max)
+            / speeds_a.iter().cloned().fold(f64::MAX, f64::min);
         assert!(spread > 2.0, "spread {spread}");
+        // Keyed by id, not population: a million-client config derives the
+        // same multiplier for a shared id without building any table.
+        let big = RunConfig {
+            n_clients: 1_000_000,
+            ..RunConfig::default_mnist()
+        };
+        let mut c = InProc::default();
+        let nc = ScenarioNet::new(&mut c, 1, 0.5, UplinkKind::Model, &big);
+        assert_eq!(nc.speed(137), na.speed(137));
+        assert!((1.0..SPEED_SPREAD).contains(&nc.speed(999_999)));
     }
 }

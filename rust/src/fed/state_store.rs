@@ -1,0 +1,166 @@
+//! The paged client-state store behind the million-client federation
+//! engine: per-client state ([`ClientState`] — loader cursor, control
+//! variate h_i, RNG stream, uplink [`crate::compress::Pipeline`]) is
+//! materialized *on first touch*, so memory is O(clients sampled so far)
+//! instead of O(n_clients).
+//!
+//! Untouched clients are implicit: their control variate is zero, their
+//! loader has never drawn a batch, their RNG streams are untapped, and
+//! their EF residuals are empty — exactly the state the eager
+//! `Vec<Mutex<ClientState>>` held for a never-sampled client, because
+//! every per-client stream is *derived* (pure, order-independent) from the
+//! federation's post-partition root generator via [`Rng::derive`]. A
+//! client materialized lazily at round 40 is therefore bit-identical to
+//! one materialized eagerly at construction, and all existing identity
+//! pins hold.
+//!
+//! The store indexes like the `Vec` it replaces (`store[ci].lock()`), but
+//! only resident ids resolve — indexing a never-materialized client is a
+//! logic error (the drive loop materializes each round's cohort before any
+//! worker touches it) and panics with a clear message.
+
+use super::ClientState;
+use crate::compress::CompressorSpec;
+use crate::data::dirichlet::SparsePartition;
+use crate::data::loader::ClientLoader;
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Everything needed to materialize any client's initial state on demand.
+/// `root` is a clone of the federation RNG *after* partitioning (the state
+/// every eager per-client derive used), so lazily derived streams match the
+/// eager construction bit for bit.
+pub struct StateTemplate {
+    /// Post-partition root generator all per-client streams derive from.
+    pub root: Rng,
+    /// Model parameter count (h_i length).
+    pub dim: usize,
+    /// Local-step minibatch size.
+    pub batch_size: usize,
+    /// Total communication rounds (compression schedules need it).
+    pub rounds: usize,
+    /// The per-client uplink pipeline spec.
+    pub up_spec: CompressorSpec,
+    /// The shared training data the loaders index into.
+    pub train: Arc<Dataset>,
+}
+
+/// Paged client-state store: resident [`ClientState`]s keyed by client id,
+/// plus the [`StateTemplate`] that materializes absent ones on demand.
+pub struct ClientStore {
+    n_clients: usize,
+    resident: HashMap<usize, Mutex<ClientState>>,
+    template: StateTemplate,
+}
+
+/// Derivation salt for client `i`'s loader shuffle stream (matches the
+/// eager construction in every prior release).
+const LOADER_SALT: u64 = 0xC11E27;
+/// Derivation salt for client `i`'s compression/stochasticity stream.
+const CLIENT_SALT: u64 = 0xC0_FFEE;
+
+impl ClientStore {
+    /// An empty store over a population of `n_clients`, materializing from
+    /// `template`.
+    pub fn new(n_clients: usize, template: StateTemplate) -> ClientStore {
+        ClientStore {
+            n_clients,
+            resident: HashMap::new(),
+            template,
+        }
+    }
+
+    /// Population size (total federated clients, resident or not).
+    pub fn len(&self) -> usize {
+        self.n_clients
+    }
+
+    /// True when the population is empty (never for a valid run config).
+    pub fn is_empty(&self) -> bool {
+        self.n_clients == 0
+    }
+
+    /// Number of clients whose state is actually materialized — bounded by
+    /// the number of distinct clients sampled so far, i.e. at most
+    /// `rounds × clients_per_round`.
+    pub fn resident_clients(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// True when client `id`'s state is materialized.
+    pub fn is_resident(&self, id: usize) -> bool {
+        self.resident.contains_key(&id)
+    }
+
+    /// Materialize client `id` from the template (no-op when already
+    /// resident). The derived streams are pure functions of the template
+    /// root and the id, so materialization order never matters.
+    pub fn materialize(&mut self, id: usize, partition: &SparsePartition) {
+        assert!(id < self.n_clients, "client {id} out of range");
+        if self.resident.contains_key(&id) {
+            return;
+        }
+        let t = &self.template;
+        let state = ClientState {
+            loader: ClientLoader::new(
+                Arc::clone(&t.train),
+                partition.shard(id).to_vec(),
+                t.batch_size,
+                t.root.derive(LOADER_SALT + id as u64),
+            ),
+            h: vec![0.0f32; t.dim],
+            rng: t.root.derive(CLIENT_SALT + id as u64),
+            up: t.up_spec.build(t.rounds),
+        };
+        self.resident.insert(id, Mutex::new(state));
+    }
+
+    /// Materialize a whole cohort (the per-round entry point).
+    pub fn materialize_all(&mut self, ids: &[usize], partition: &SparsePartition) {
+        for &id in ids {
+            self.materialize(id, partition);
+        }
+    }
+
+    /// The resident client's state, or `None` when never materialized.
+    pub fn get(&self, id: usize) -> Option<&Mutex<ClientState>> {
+        self.resident.get(&id)
+    }
+
+    /// Resident client ids in ascending order — the canonical iteration
+    /// order for checkpoints and control-variate sums, independent of hash
+    /// iteration order.
+    pub fn resident_ids_sorted(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.resident.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Replace the uplink pipeline spec (the legacy algorithm-spec shim):
+    /// updates the template for future materializations and rebuilds every
+    /// resident client's pipeline.
+    pub fn set_uplink_spec(&mut self, spec: CompressorSpec, rounds: usize) {
+        for state in self.resident.values() {
+            state.lock().unwrap().up = spec.build(rounds);
+        }
+        self.template.up_spec = spec;
+        self.template.rounds = rounds;
+    }
+}
+
+impl std::ops::Index<usize> for ClientStore {
+    type Output = Mutex<ClientState>;
+
+    fn index(&self, id: usize) -> &Mutex<ClientState> {
+        self.resident.get(&id).unwrap_or_else(|| {
+            panic!(
+                "client {id} not resident (population {}, {} resident) — cohorts must be \
+                 materialized via sample_clients/materialize before use",
+                self.n_clients,
+                self.resident.len()
+            )
+        })
+    }
+}

@@ -199,8 +199,11 @@ impl Default for SimNetCfg {
 pub struct SimNet {
     cfg: SimNetCfg,
     rng: Rng,
-    /// Fixed per-client bandwidth (bits/sec), drawn at construction.
-    client_bw: Vec<f64>,
+    /// Root of the per-client bandwidth streams: client `c`'s fixed
+    /// bandwidth is a pure function of this root and `c` (see
+    /// [`SimNet::client_bw`]), so no per-client table is ever built and a
+    /// million-client population costs nothing.
+    bw_root: Rng,
     usage: WireUsage,
     /// Accumulated link seconds per participating client this round.
     round_secs: HashMap<usize, f64>,
@@ -209,25 +212,29 @@ pub struct SimNet {
 }
 
 impl SimNet {
-    /// Build a simulated network for `n_clients`, drawing the fixed
-    /// per-client bandwidths from `seed` (deterministic per run).
-    pub fn new(cfg: SimNetCfg, n_clients: usize, seed: u64) -> SimNet {
+    /// Build a simulated network for a population of `_n_clients` (kept in
+    /// the signature for spec symmetry; per-client bandwidths are derived
+    /// from `seed` and the client *id* on demand, deterministic per run).
+    pub fn new(cfg: SimNetCfg, _n_clients: usize, seed: u64) -> SimNet {
         assert!(cfg.bandwidth_bps > 0.0, "bandwidth must be positive");
         assert!((0.0..=1.0).contains(&cfg.drop_prob), "drop_prob in [0,1]");
         assert!(cfg.heterogeneity >= 1.0, "heterogeneity factor >= 1");
-        let mut rng = Rng::seed_from_u64(seed ^ 0x51A1_4E7);
-        let log_h = cfg.heterogeneity.ln();
-        let client_bw = (0..n_clients)
-            .map(|_| cfg.bandwidth_bps * (-rng.uniform() * log_h).exp())
-            .collect();
         SimNet {
             cfg,
-            rng,
-            client_bw,
+            rng: Rng::seed_from_u64(seed ^ 0x51A1_4E7),
+            bw_root: Rng::seed_from_u64(seed ^ 0xB0AD_BA4D),
             usage: WireUsage::default(),
             round_secs: HashMap::new(),
             round_avail: HashMap::new(),
         }
+    }
+
+    /// Client `c`'s fixed link bandwidth (bits/sec), log-uniform on
+    /// `[bandwidth/h, bandwidth]` — a pure per-id derivation, identical
+    /// whether queried once, repeatedly, or never.
+    fn client_bw(&self, client: usize) -> f64 {
+        let mut stream = self.bw_root.derive(client as u64);
+        self.cfg.bandwidth_bps * (-stream.uniform() * self.cfg.heterogeneity.ln()).exp()
     }
 }
 
@@ -285,13 +292,14 @@ impl Transport for SimNet {
     }
 
     fn link_secs(&self, client: usize, bits: u64) -> f64 {
-        self.cfg.latency_secs + bits as f64 / self.client_bw[client]
+        self.cfg.latency_secs + bits as f64 / self.client_bw(client)
     }
 
     fn save_state(&self) -> Vec<u8> {
-        // The only cross-round state is the dropout RNG stream: `client_bw`
-        // is drawn once at construction (so a same-spec rebuild reproduces
-        // it), and `round_secs`/`round_avail` are empty at round boundaries.
+        // The only cross-round state is the dropout RNG stream: bandwidths
+        // are pure per-id derivations from the seed (so a same-spec rebuild
+        // reproduces them), and `round_secs`/`round_avail` are empty at
+        // round boundaries.
         let mut w = crate::util::bytes::ByteWriter::new();
         w.put_rng(&self.rng);
         w.into_bytes()
@@ -442,11 +450,19 @@ mod tests {
             ..SimNetCfg::default()
         };
         let t = SimNet::new(cfg, 200, 3);
-        let min = t.client_bw.iter().cloned().fold(f64::MAX, f64::min);
-        let max = t.client_bw.iter().cloned().fold(0.0, f64::max);
+        let bws: Vec<f64> = (0..200).map(|c| t.client_bw(c)).collect();
+        let min = bws.iter().cloned().fold(f64::MAX, f64::min);
+        let max = bws.iter().cloned().fold(0.0, f64::max);
         assert!(max <= cfg.bandwidth_bps + 1e-6);
         assert!(min >= cfg.bandwidth_bps / 8.0 - 1e-6);
         assert!(max / min > 2.0, "spread {}", max / min);
+        // Pure per-id derivation: stable across queries and independent of
+        // population size — a million-client net derives the same link.
+        assert_eq!(t.client_bw(137).to_bits(), t.client_bw(137).to_bits());
+        let big = SimNet::new(cfg, 1_000_000, 3);
+        assert_eq!(big.client_bw(137).to_bits(), t.client_bw(137).to_bits());
+        let far = big.client_bw(999_999);
+        assert!(far <= cfg.bandwidth_bps + 1e-6 && far >= cfg.bandwidth_bps / 8.0 - 1e-6);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub struct SweepPreset {
     pub toml: &'static str,
 }
 
-static SWEEP_PRESETS: [SweepPreset; 11] = [
+static SWEEP_PRESETS: [SweepPreset; 12] = [
     SweepPreset {
         name: "sparsity",
         paper: "Table 1, Figure 1",
@@ -71,6 +71,11 @@ static SWEEP_PRESETS: [SweepPreset; 11] = [
         name: "smoke",
         paper: "",
         toml: include_str!("../../../experiments/smoke.toml"),
+    },
+    SweepPreset {
+        name: "scale",
+        paper: "",
+        toml: include_str!("../../../experiments/scale.toml"),
     },
 ];
 

@@ -27,14 +27,15 @@
 //! (`sync` / `semisync:<K>[@<staleness>]` round runtimes — see
 //! [`crate::fed::sim`]), `compress_up`, `compress_down` over the
 //! string-keyed registries, plus scalar grids `rounds`, `local_iters`,
-//! `alphas`, `gammas`, `ps`, `seeds`. Any *other* key inside a `[[grid]]`
-//! block is a fixed per-block override routed through
-//! [`crate::config::apply_kv`], exactly like a `[run]`-table key.
+//! `alphas`, `gammas`, `ps`, `seeds`, and the population-scale axes
+//! `clients` (`n_clients`) / `sampled` (`clients_per_round`). Any *other*
+//! key inside a `[[grid]]` block is a fixed per-block override routed
+//! through [`crate::config::apply_kv`], exactly like a `[run]`-table key.
 //!
 //! Expansion order is canonical and documented: grid blocks in file order;
 //! within a block, nested loops over dataset → model → transport →
 //! scenario → compress_up → compress_down → algo → rounds → local_iters →
-//! alpha → gamma → p → seed. Every expanded unit is fully validated (registry
+//! alpha → gamma → p → seed → clients → sampled. Every expanded unit is fully validated (registry
 //! specs resolve, model/dataset dims agree, directional pipelines don't
 //! collide with algorithm-embedded compressors) before anything runs, so a
 //! typo fails the whole sweep up front instead of panicking inside a
@@ -94,6 +95,11 @@ pub struct GridBlock {
     pub ps: Vec<f64>,
     /// RNG seeds.
     pub seeds: Vec<u64>,
+    /// Federated population sizes (`n_clients`) — the million-client scale
+    /// axis; the lazy partition/state store keep memory O(sampled).
+    pub clients: Vec<usize>,
+    /// Cohort sizes per round (`clients_per_round`).
+    pub sampled: Vec<usize>,
 }
 
 /// A parsed, not-yet-expanded sweep file.
@@ -218,6 +224,8 @@ impl GridBlock {
                 "seeds" => {
                     block.seeds = list_of_usize(key, value)?.into_iter().map(|s| s as u64).collect()
                 }
+                "clients" => block.clients = list_of_usize(key, value)?,
+                "sampled" => block.sampled = list_of_usize(key, value)?,
                 // Anything else is a fixed per-block run-config override;
                 // config::apply_kv validates it at expansion time.
                 _ => block.fixed.push((key.clone(), value.clone())),
@@ -245,6 +253,8 @@ impl GridBlock {
             * axis(self.gammas.len())
             * axis(self.ps.len())
             * axis(self.seeds.len())
+            * axis(self.clients.len())
+            * axis(self.sampled.len())
     }
 
     /// True when the block expands to no runs (never, post-validation).
@@ -485,6 +495,7 @@ impl SweepSpec {
         };
         let (rounds, local_iters) = (opt(&block.rounds), opt(&block.local_iters));
         let (alphas, gammas, ps) = (optf(&block.alphas), optf(&block.gammas), optf(&block.ps));
+        let (clients, sampled) = (opt(&block.clients), opt(&block.sampled));
 
         for dataset in &datasets {
             for model in &models {
@@ -499,52 +510,72 @@ impl SweepSpec {
                                                 for &gamma in &gammas {
                                                     for &p in &ps {
                                                         for &seed in &seeds {
-                                                            let mut cfg = base.clone();
-                                                            if let Some(ds) = dataset {
-                                                                cfg.dataset = ds.clone();
+                                                            for &nc in &clients {
+                                                                for &mc in &sampled {
+                                                                    let mut cfg = base.clone();
+                                                                    if let Some(ds) = dataset {
+                                                                        cfg.dataset = ds.clone();
+                                                                    }
+                                                                    if let Some(m) = model {
+                                                                        cfg.model = m.clone();
+                                                                    }
+                                                                    if let Some(sc) = scenario {
+                                                                        cfg.scenario = sc.clone();
+                                                                    }
+                                                                    if let Some(u) = up {
+                                                                        cfg.compress_up = u.clone();
+                                                                    }
+                                                                    if let Some(dn) = down {
+                                                                        cfg.compress_down = dn.clone();
+                                                                    }
+                                                                    if let Some(r) = r {
+                                                                        cfg.rounds = r;
+                                                                    }
+                                                                    if let Some(li) = li {
+                                                                        cfg.local_steps = li;
+                                                                    }
+                                                                    if let Some(a) = alpha {
+                                                                        cfg.dirichlet_alpha = a;
+                                                                    }
+                                                                    if let Some(g) = gamma {
+                                                                        cfg.gamma = g as f32;
+                                                                    }
+                                                                    if let Some(p) = p {
+                                                                        cfg.p = p;
+                                                                    }
+                                                                    if let Some(s) = seed {
+                                                                        cfg.seed = s;
+                                                                    }
+                                                                    if let Some(n) = nc {
+                                                                        cfg.n_clients = n;
+                                                                    }
+                                                                    if let Some(m) = mc {
+                                                                        cfg.clients_per_round = m;
+                                                                    }
+                                                                    let transport_spec = transport
+                                                                        .clone()
+                                                                        .unwrap_or_else(|| "inproc".to_string());
+                                                                    validate_unit(&cfg, &transport_spec, algo)?;
+                                                                    let index = units.len();
+                                                                    // Scale axes suffix the id only when
+                                                                    // actually swept, keeping legacy ids
+                                                                    // byte-stable.
+                                                                    let mut id = unit_id(index, algo, &cfg);
+                                                                    if let Some(n) = nc {
+                                                                        id.push_str(&format!("-n-{n}"));
+                                                                    }
+                                                                    if let Some(m) = mc {
+                                                                        id.push_str(&format!("-m-{m}"));
+                                                                    }
+                                                                    units.push(RunUnit {
+                                                                        index,
+                                                                        id,
+                                                                        algo: algo.clone(),
+                                                                        transport: transport_spec,
+                                                                        cfg,
+                                                                    });
+                                                                }
                                                             }
-                                                            if let Some(m) = model {
-                                                                cfg.model = m.clone();
-                                                            }
-                                                            if let Some(sc) = scenario {
-                                                                cfg.scenario = sc.clone();
-                                                            }
-                                                            if let Some(u) = up {
-                                                                cfg.compress_up = u.clone();
-                                                            }
-                                                            if let Some(dn) = down {
-                                                                cfg.compress_down = dn.clone();
-                                                            }
-                                                            if let Some(r) = r {
-                                                                cfg.rounds = r;
-                                                            }
-                                                            if let Some(li) = li {
-                                                                cfg.local_steps = li;
-                                                            }
-                                                            if let Some(a) = alpha {
-                                                                cfg.dirichlet_alpha = a;
-                                                            }
-                                                            if let Some(g) = gamma {
-                                                                cfg.gamma = g as f32;
-                                                            }
-                                                            if let Some(p) = p {
-                                                                cfg.p = p;
-                                                            }
-                                                            if let Some(s) = seed {
-                                                                cfg.seed = s;
-                                                            }
-                                                            let transport_spec = transport
-                                                                .clone()
-                                                                .unwrap_or_else(|| "inproc".to_string());
-                                                            validate_unit(&cfg, &transport_spec, algo)?;
-                                                            let index = units.len();
-                                                            units.push(RunUnit {
-                                                                index,
-                                                                id: unit_id(index, algo, &cfg),
-                                                                algo: algo.clone(),
-                                                                transport: transport_spec,
-                                                                cfg,
-                                                            });
                                                         }
                                                     }
                                                 }
@@ -619,6 +650,9 @@ fn validate_unit(cfg: &RunConfig, transport: &str, algo: &str) -> Result<(), Str
              are unsupported there (compress_up='{}', compress_down='{}')",
             cfg.compress_up, cfg.compress_down
         ));
+    }
+    if cfg.n_clients == 0 {
+        return Err("n_clients must be at least 1".to_string());
     }
     if cfg.clients_per_round > cfg.n_clients {
         return Err(format!(
@@ -897,6 +931,74 @@ rounds = 3
                 "name = \"s\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
                  scenarios = [\"semisync:5\"]\n",
                 "exceeds clients_per_round",
+            ),
+        ] {
+            let err = SweepSpec::parse_str(toml)
+                .and_then(|s| s.expand(1.0, None).map(|_| ()))
+                .unwrap_err();
+            assert!(err.contains(needle), "toml: {toml}\nerr: {err}");
+        }
+    }
+
+    #[test]
+    fn scale_axes_expand_suffix_ids_and_validate() {
+        // clients/sampled are real axes: they multiply out (innermost,
+        // after seeds), land in the config, and suffix the unit id.
+        let spec = SweepSpec::parse_str(
+            "name = \"n\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
+             clients = [1000000, 10000000]\nsampled = [100]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.grids[0].len(), 2);
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 2);
+        assert_eq!(units[0].cfg.n_clients, 1_000_000);
+        assert_eq!(units[1].cfg.n_clients, 10_000_000);
+        assert!(units.iter().all(|u| u.cfg.clients_per_round == 100));
+        assert_eq!(units[0].id, "r000-fedavg-n-1000000-m-100");
+        assert_eq!(units[1].id, "r001-fedavg-n-10000000-m-100");
+        // A scalar spelling works like a one-element axis.
+        let scalar = SweepSpec::parse_str(
+            "name = \"n\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
+             clients = 50\n",
+        )
+        .unwrap();
+        let u = scalar.expand(1.0, None).unwrap();
+        assert_eq!(u[0].cfg.n_clients, 50);
+        assert_eq!(u[0].id, "r000-fedavg-n-50");
+        // Sweeping only `sampled` keeps the base population and never
+        // suffixes -n-.
+        let only_m = SweepSpec::parse_str(
+            "name = \"n\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
+             sampled = [2, 3]\n",
+        )
+        .unwrap();
+        let u = only_m.expand(1.0, None).unwrap();
+        assert_eq!(u.len(), 2);
+        assert_eq!(u[0].id, "r000-fedavg-m-2");
+    }
+
+    #[test]
+    fn scale_axis_oversampling_fails_expansion_up_front() {
+        for (toml, needle) in [
+            // A cohort larger than the population must fail at expansion,
+            // not panic inside Federation::new — including at the
+            // million-client scale where only the axes make it plausible.
+            (
+                "name = \"n\"\n[[grid]]\nalgos = [\"fedavg\"]\nclients = [100]\nsampled = [101]\n",
+                "exceeds n_clients",
+            ),
+            (
+                "name = \"n\"\n[[grid]]\nalgos = [\"fedavg\"]\nclients = [1000000]\nsampled = [1000001]\n",
+                "exceeds n_clients",
+            ),
+            (
+                "name = \"n\"\n[[grid]]\nalgos = [\"fedavg\"]\nclients = [0]\n",
+                "n_clients must be",
+            ),
+            (
+                "name = \"n\"\n[[grid]]\nalgos = [\"fedavg\"]\nclients = [-5]\n",
+                "non-negative",
             ),
         ] {
             let err = SweepSpec::parse_str(toml)

@@ -224,17 +224,28 @@ impl Rng {
         }
     }
 
-    /// Sample `m` distinct indices uniformly from [0, n) (partial
-    /// Fisher–Yates; O(n) memory, O(m) swaps).
+    /// Sample `m` distinct indices uniformly from [0, n) — a *sparse*
+    /// partial Fisher–Yates over a displacement map, so memory and time are
+    /// O(m) even when `n` is in the millions (cohort sampling from huge
+    /// client populations). Draw-for-draw and output-identical to the
+    /// dense `(0..n)`-scratch formulation for every (state, n, m): step i
+    /// draws the same `j = i + below(n − i)`, reads the values currently at
+    /// positions i and j (identity where never displaced), emits position
+    /// i's post-swap value, and records the displacement at j; positions
+    /// < i are never read again, so they need no storage.
     pub fn sample_without_replacement(&mut self, n: usize, m: usize) -> Vec<usize> {
         assert!(m <= n, "cannot sample {m} from {n}");
-        let mut idx: Vec<usize> = (0..n).collect();
+        let mut displaced: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(m);
+        let mut out = Vec::with_capacity(m);
         for i in 0..m {
             let j = i + self.below_usize(n - i);
-            idx.swap(i, j);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            displaced.insert(j, vi);
+            out.push(vj);
         }
-        idx.truncate(m);
-        idx
+        out
     }
 
     /// Sample an index from an (unnormalized, non-negative) weight vector.
@@ -407,6 +418,46 @@ mod tests {
             assert_eq!(t.len(), 10);
             assert!(t.iter().all(|&i| i < 100));
         }
+    }
+
+    #[test]
+    fn sparse_sampler_matches_dense_reference() {
+        // The retired dense formulation, kept as the reference the sparse
+        // displacement-map sampler must reproduce draw for draw.
+        fn dense(rng: &mut Rng, n: usize, m: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..m {
+                let j = i + rng.below_usize(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(m);
+            idx
+        }
+        for seed in 0..20 {
+            for &(n, m) in &[(1usize, 1usize), (5, 5), (10, 3), (100, 10), (1000, 1000), (6, 4)] {
+                let mut a = Rng::seed_from_u64(seed);
+                let mut b = Rng::seed_from_u64(seed);
+                assert_eq!(
+                    a.sample_without_replacement(n, m),
+                    dense(&mut b, n, m),
+                    "seed={seed} n={n} m={m}"
+                );
+                // Same post-call stream state, too.
+                assert_eq!(a.state(), b.state());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_sampler_is_cheap_at_population_scale() {
+        let mut rng = Rng::seed_from_u64(41);
+        let s = rng.sample_without_replacement(10_000_000, 100);
+        assert_eq!(s.len(), 100);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 100);
+        assert!(t.iter().all(|&i| i < 10_000_000));
     }
 
     #[test]

@@ -130,6 +130,56 @@ fn feddyn_resumes_bit_identically() {
     assert_resume_bit_identical("feddyn:0.01", "ef(topk:0.25)", "feddyn");
 }
 
+/// Million-client population, 4-client cohorts, stateful `ef(...)` uplink:
+/// crash-and-resume must stay byte-identical, and snapshots must serialize
+/// only the *touched* clients — the file size is cohort-bounded, not
+/// population-proportional.
+#[test]
+fn million_client_run_resumes_bit_identically_with_sparse_snapshots() {
+    let mut cfg = tiny_cfg("ef(topk:0.25)");
+    cfg.n_clients = 1_000_000;
+    cfg.clients_per_round = 4;
+    let spec = AlgorithmSpec::parse("fedcomloc-com").unwrap();
+    let root = tmp_dir("million");
+
+    // Uninterrupted reference, checkpointing every round.
+    let dir_a = root.join("a");
+    let mut ckpt_a = Checkpointer::new(&dir_a, spec.key());
+    let log_a = run_observed(&cfg, &spec, &mut ckpt_a);
+    assert_eq!(log_a.records.len(), cfg.rounds);
+
+    // Crash after round 3, then restart from the surviving snapshot: the
+    // restore path materializes exactly the checkpointed residents (with
+    // their `ef` residuals) out of the 10^6-client population.
+    let dir_b = root.join("b");
+    let mut crash = Checkpointer::new(&dir_b, spec.key()).crash_after(3);
+    let partial = run_observed(&cfg, &spec, &mut crash);
+    assert_eq!(partial.records.len(), 3, "crash must stop the drive mid-run");
+    let mut resume = Checkpointer::new(&dir_b, spec.key());
+    let log_b = run_observed(&cfg, &spec, &mut resume);
+    assert_eq!(resume.resumed_from(), Some(3), "must resume at round 3");
+    assert_eq!(lines(&log_a), lines(&log_b), "resumed run diverged at 1M clients");
+
+    // Same workload at the seed's 6-client population: the only state
+    // difference is how many clients the cohorts touched, so the 1M-client
+    // snapshot may be at most a small constant factor larger — never the
+    // ~10^5x a population-proportional clients section would cost.
+    let small_cfg = tiny_cfg("ef(topk:0.25)");
+    let dir_s = root.join("s");
+    let mut ckpt_s = Checkpointer::new(&dir_s, spec.key());
+    let _ = run_observed(&small_cfg, &spec, &mut ckpt_s);
+    let (_, path_big) = latest_checkpoint(&dir_a).unwrap();
+    let (_, path_small) = latest_checkpoint(&dir_s).unwrap();
+    let big = std::fs::metadata(&path_big).unwrap().len();
+    let small = std::fs::metadata(&path_small).unwrap().len();
+    assert!(
+        big <= 8 * small,
+        "1M-client snapshot is {big} B vs {small} B at 6 clients: \
+         the clients section scales with population, not touched clients"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 #[test]
 fn observer_never_perturbs_training() {
     let cfg = tiny_cfg("ef(topk:0.25)");

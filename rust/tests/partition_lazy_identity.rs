@@ -1,0 +1,106 @@
+//! Lazy/eager partition identity pin: `partition_streaming` must be
+//! **bit-identical** to the eager `partition` reference — element-for-element
+//! shards, identical post-call RNG state (so everything downstream of the
+//! partitioner sees the same stream), and equal diagnostics — across a grid
+//! of population sizes (including populations larger than the dataset),
+//! concentrations (including the degenerate α=0.01 regime), and seeds.
+
+use fedcomloc::data::dirichlet::{partition, partition_streaming};
+use fedcomloc::data::{synthetic, Dataset, DatasetSpec};
+use fedcomloc::util::rng::Rng;
+
+fn dataset(n: usize) -> Dataset {
+    synthetic::generate(&DatasetSpec::mnist(), n, 10, &mut Rng::seed_from_u64(9)).train
+}
+
+#[test]
+fn lazy_partition_matches_eager_across_grid() {
+    let data = dataset(500);
+    // min_per_client mirrors Federation::new: capped by the per-client share
+    // so oversubscribed populations degrade to best-effort (floor 1).
+    let n_grid = [1usize, 7, 100, 600, 2_000, 5_000];
+    let alpha_grid = [0.01f64, 0.1, 0.7, 10.0];
+    for &n_clients in &n_grid {
+        for &alpha in &alpha_grid {
+            for seed in 0..3u64 {
+                let min_per_client = (data.len() / n_clients).clamp(1, 16);
+                let mut eager_rng = Rng::seed_from_u64(seed);
+                let eager = partition(&data, n_clients, alpha, min_per_client, &mut eager_rng);
+                let mut lazy_rng = Rng::seed_from_u64(seed);
+                let lazy =
+                    partition_streaming(&data, n_clients, alpha, min_per_client, &mut lazy_rng);
+
+                let tag = format!("n={n_clients} alpha={alpha} seed={seed}");
+                assert_eq!(lazy.num_clients(), eager.num_clients(), "{tag}");
+                // Post-call RNG state equality is the keystone: it means the
+                // model init, loader seeds and server streams that follow are
+                // untouched by swapping the partitioner.
+                assert_eq!(eager_rng.state(), lazy_rng.state(), "rng diverged: {tag}");
+
+                let mut nonempty = 0usize;
+                for c in 0..n_clients {
+                    let e = &eager.client_indices[c];
+                    let l = lazy.shard(c);
+                    assert_eq!(l, e.as_slice(), "shard {c} differs: {tag}");
+                    if !e.is_empty() {
+                        nonempty += 1;
+                    }
+                }
+                assert_eq!(lazy.num_nonempty(), nonempty, "{tag}");
+
+                // Diagnostics computed on the lazy view must agree exactly.
+                assert_eq!(
+                    lazy.class_histogram(&data),
+                    eager.class_histogram(&data),
+                    "histogram differs: {tag}"
+                );
+                let tv_e = eager.heterogeneity_tv(&data);
+                let tv_l = lazy.heterogeneity_tv(&data);
+                assert_eq!(tv_e.to_bits(), tv_l.to_bits(), "tv differs: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lazy_partition_handles_tiny_datasets_and_huge_populations() {
+    // Fewer examples than classes: some class buckets are empty, and with
+    // n_clients ≫ examples nearly every shard is empty. The sparse view must
+    // still agree with the eager reference on every id.
+    let data = dataset(8);
+    for &n_clients in &[3usize, 8, 50, 10_000] {
+        for seed in 0..2u64 {
+            let mut eager_rng = Rng::seed_from_u64(seed);
+            let eager = partition(&data, n_clients, 0.5, 1, &mut eager_rng);
+            let mut lazy_rng = Rng::seed_from_u64(seed);
+            let lazy = partition_streaming(&data, n_clients, 0.5, 1, &mut lazy_rng);
+            assert_eq!(eager_rng.state(), lazy_rng.state(), "n={n_clients} seed={seed}");
+            for c in 0..n_clients {
+                assert_eq!(
+                    lazy.shard(c),
+                    eager.client_indices[c].as_slice(),
+                    "n={n_clients} seed={seed} shard {c}"
+                );
+            }
+            // Sparse storage really is sparse: at most one entry per example.
+            assert!(lazy.num_nonempty() <= data.len());
+        }
+    }
+}
+
+#[test]
+fn lazy_partition_iterates_nonempty_in_ascending_order() {
+    let data = dataset(120);
+    let mut rng = Rng::seed_from_u64(4);
+    let lazy = partition_streaming(&data, 3_000, 0.3, 1, &mut rng);
+    let mut prev: Option<usize> = None;
+    let mut total = 0usize;
+    for (id, shard) in lazy.nonempty() {
+        assert!(prev.map_or(true, |p| p < id), "nonempty() not ascending");
+        assert!(!shard.is_empty());
+        assert!(id < lazy.num_clients());
+        prev = Some(id);
+        total += shard.len();
+    }
+    assert_eq!(total, data.len(), "every example lands in exactly one shard");
+}

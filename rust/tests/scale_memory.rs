@@ -1,0 +1,116 @@
+//! O(active-clients) memory pin for the million-client federation engine:
+//! peak resident heap for a 1M-client / 100-per-round run must stay within
+//! 2× of the identically-configured 1k-client run, and the paged client
+//! store must hold state only for clients a cohort actually touched.
+//!
+//! This file deliberately contains a single `#[test]` so the byte-counting
+//! global allocator sees no interference from concurrently running tests
+//! (same discipline as `alloc_steady_state.rs`).
+
+use fedcomloc::data::DatasetSpec;
+use fedcomloc::fed::transport::parse_transport;
+use fedcomloc::fed::{drive_federation, AlgorithmSpec, Federation, RunConfig};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// System allocator wrapper tracking live bytes and their high-water mark.
+struct PeakAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+fn bump(size: usize) {
+    let live = LIVE.fetch_add(size, Ordering::SeqCst) + size;
+    PEAK.fetch_max(live, Ordering::SeqCst);
+}
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let ptr = System.alloc(layout);
+        if !ptr.is_null() {
+            bump(layout.size());
+        }
+        ptr
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::SeqCst);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let ptr = System.realloc(ptr, layout, new_size);
+        if !ptr.is_null() {
+            LIVE.fetch_sub(layout.size(), Ordering::SeqCst);
+            bump(new_size);
+        }
+        ptr
+    }
+}
+
+#[global_allocator]
+static A: PeakAlloc = PeakAlloc;
+
+fn cfg(n_clients: usize) -> RunConfig {
+    RunConfig {
+        dataset: DatasetSpec::parse("synthetic:32-c4").unwrap(),
+        train_n: 400,
+        test_n: 100,
+        n_clients,
+        clients_per_round: 100,
+        rounds: 3,
+        eval_every: 2,
+        batch_size: 16,
+        eval_batch: 32,
+        threads: 1,
+        ..RunConfig::default_mnist()
+    }
+}
+
+/// Run a full fedavg drive at the given population and return the run's
+/// peak heap growth (bytes above the pre-run baseline) plus the number of
+/// clients the paged store materialized.
+fn measured_run(n_clients: usize) -> (usize, usize) {
+    let cfg = cfg(n_clients);
+    let spec = AlgorithmSpec::parse("fedavg").unwrap();
+    let trainer =
+        fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
+    let mut algo = spec.build();
+    let mut transport = parse_transport("inproc", cfg.n_clients, cfg.seed).unwrap();
+
+    let base = LIVE.load(Ordering::SeqCst);
+    PEAK.store(base, Ordering::SeqCst);
+    let mut fed = Federation::new(&cfg, trainer);
+    let log = drive_federation(&cfg, &mut fed, algo.as_mut(), transport.as_mut());
+    assert_eq!(log.records.len(), cfg.rounds, "n={n_clients}: run must complete");
+    let peak = PEAK.load(Ordering::SeqCst).saturating_sub(base);
+    (peak, fed.clients.resident_clients())
+}
+
+#[test]
+fn million_client_run_is_active_cohort_bounded() {
+    // Identical workload at two population scales; only n_clients differs,
+    // so any peak-memory gap is attributable to population-proportional
+    // structures. With lazy partitioning, the paged store and the sparse
+    // cohort sampler there are none left, so 1000× the population must not
+    // even double the peak.
+    let (peak_1k, resident_1k) = measured_run(1_000);
+    let (peak_1m, resident_1m) = measured_run(1_000_000);
+
+    assert!(peak_1k > 0, "allocator instrumentation must observe the run");
+    assert!(
+        peak_1m <= 2 * peak_1k,
+        "1M-client peak ({peak_1m} B) exceeds 2x the 1k-client peak ({peak_1k} B): \
+         something scales with the population again"
+    );
+
+    // The store holds only touched clients: at most one cohort per round,
+    // and far fewer than the population.
+    let bound = 3 * 100; // rounds x clients_per_round
+    assert!(
+        resident_1m <= bound,
+        "resident_clients() = {resident_1m}, expected <= {bound}"
+    );
+    assert!(resident_1k <= bound, "resident_clients() = {resident_1k} at 1k clients");
+}

@@ -273,6 +273,88 @@ fn dry_run_writes_nothing_and_prints_the_matrix() {
     let _ = std::fs::remove_dir_all(&out);
 }
 
+/// The scale axes at full size: a 10^6-client population sampled 100 per
+/// round. The sparse cohort sampler and paged store must keep this cheap,
+/// and — the actual pin — per-run RNG streams must make the schedule
+/// order-independent, so `--threads 4` reproduces `--threads 1` byte for
+/// byte even when runs materialize disjoint cohorts concurrently.
+const SCALE_SWEEP: &str = r#"
+schema = 1
+name = "scaletest"
+title = "million-client scale axes"
+
+[base]
+preset = "smoke"
+dataset = "synthetic:32-c4"
+train_n = 400
+test_n = 100
+rounds = 2
+eval_every = 2
+batch_size = 16
+eval_batch = 32
+
+[[grid]]
+algos = ["fedavg", "fedcomloc-com:topk:0.5"]
+clients = [1_000_000]
+sampled = [100]
+"#;
+
+#[test]
+fn million_client_scale_axis_sweep_is_bit_identical_across_threads() {
+    let spec = SweepSpec::parse_str(SCALE_SWEEP).unwrap();
+    let out1 = tmp_dir("scale1");
+    let out4 = tmp_dir("scale4");
+    let o1 = sweep::run_sweep(&spec, &opts(&out1, 1)).unwrap();
+    let o4 = sweep::run_sweep(&spec, &opts(&out4, 4)).unwrap();
+    assert_eq!(o1.executed, 2);
+    for unit in &o1.units {
+        assert!(unit.id.ends_with("-n-1000000-m-100"), "scale suffix missing: {}", unit.id);
+        assert_eq!(unit.cfg.n_clients, 1_000_000);
+        assert_eq!(unit.cfg.clients_per_round, 100);
+    }
+    assert_eq!(
+        read(&sink::summary_path(&o1.dir)),
+        read(&sink::summary_path(&o4.dir)),
+        "summary.csv must not depend on --threads at the million-client scale"
+    );
+    for unit in &o1.units {
+        assert_eq!(
+            read(&sink::rounds_path(&o1.dir, &unit.id)),
+            read(&sink::rounds_path(&o4.dir, &unit.id)),
+            "{}: rounds jsonl must not depend on --threads",
+            unit.id
+        );
+    }
+    let _ = std::fs::remove_dir_all(&out1);
+    let _ = std::fs::remove_dir_all(&out4);
+}
+
+#[test]
+fn oversampled_scale_axis_fails_expansion_before_any_run() {
+    // `sampled` > `clients` is caught when the matrix expands — before a
+    // single run executes or the output directory is created.
+    let bad = r#"
+schema = 1
+name = "scalebad"
+title = "oversampled"
+
+[base]
+dataset = "synthetic:32-c4"
+train_n = 400
+test_n = 100
+
+[[grid]]
+algos = ["fedavg"]
+clients = [1000]
+sampled = [5000]
+"#;
+    let spec = SweepSpec::parse_str(bad).unwrap();
+    let out = tmp_dir("scalebad");
+    let err = sweep::run_sweep(&spec, &opts(&out, 1)).unwrap_err();
+    assert!(err.contains("exceeds n_clients"), "unexpected error: {err}");
+    assert!(!out.exists(), "failed expansion must not touch the filesystem");
+}
+
 #[test]
 fn shipped_sparsity_preset_expands_to_the_legacy_density_grid() {
     let spec = sweep::preset_by_name("sparsity").unwrap().unwrap();

@@ -94,7 +94,7 @@ fn main() {
             &unit.cfg.model_spec(),
         );
         let mut transport =
-            parse_transport(&unit.transport, unit.cfg.n_clients, unit.cfg.seed).unwrap();
+            parse_transport(&unit.transport, unit.cfg.seed).unwrap();
         let _ = run_with_transport(&unit.cfg, trainer, &algo, transport.as_mut());
     }
     let direct = t0.elapsed();

@@ -423,6 +423,11 @@ fn encode_records(records: &[RoundRecord]) -> Vec<u8> {
         w.put_u64(r.dropped_clients);
         w.put_u64(r.stale_updates);
         w.put_u64(r.churned_clients);
+        w.put_u64(r.corrupt_frames);
+        w.put_u64(r.retransmits);
+        w.put_u64(r.dup_frames);
+        w.put_f64(r.backoff_secs);
+        w.put_u64(r.aborted);
     }
     w.into_bytes()
 }
@@ -454,6 +459,11 @@ fn decode_records(bytes: &[u8]) -> Result<Vec<RoundRecord>, String> {
             dropped_clients: r.take_u64()?,
             stale_updates: r.take_u64()?,
             churned_clients: r.take_u64()?,
+            corrupt_frames: r.take_u64()?,
+            retransmits: r.take_u64()?,
+            dup_frames: r.take_u64()?,
+            backoff_secs: r.take_f64()?,
+            aborted: r.take_u64()?,
         });
     }
     r.finish()?;
@@ -545,6 +555,11 @@ mod tests {
                 dropped_clients: 1,
                 stale_updates: 0,
                 churned_clients: 0,
+                corrupt_frames: 0,
+                retransmits: 0,
+                dup_frames: 0,
+                backoff_secs: 0.0,
+                aborted: 0,
             },
             RoundRecord {
                 round: 1,
@@ -563,6 +578,11 @@ mod tests {
                 dropped_clients: 0,
                 stale_updates: 2,
                 churned_clients: 1,
+                corrupt_frames: 3,
+                retransmits: 2,
+                dup_frames: 1,
+                backoff_secs: 1.5,
+                aborted: 1,
             },
         ];
         let back = decode_records(&encode_records(&records)).unwrap();
@@ -574,6 +594,11 @@ mod tests {
             assert_eq!(a.cum_uplink_bits, b.cum_uplink_bits);
             assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits());
             assert_eq!(a.churned_clients, b.churned_clients);
+            assert_eq!(a.corrupt_frames, b.corrupt_frames);
+            assert_eq!(a.retransmits, b.retransmits);
+            assert_eq!(a.dup_frames, b.dup_frames);
+            assert_eq!(a.backoff_secs.to_bits(), b.backoff_secs.to_bits());
+            assert_eq!(a.aborted, b.aborted);
         }
     }
 

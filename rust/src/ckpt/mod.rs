@@ -42,9 +42,13 @@ pub mod snapshot;
 
 pub use checkpointer::Checkpointer;
 pub use serve::ServeState;
-pub use snapshot::{latest_checkpoint, Snapshot};
+pub use snapshot::{latest_checkpoint, verify_dir, Snapshot};
 
 /// Checkpoint container schema version ([`Snapshot`] refuses other
 /// versions). Bump on any layout change to the header or the section
 /// encodings in [`checkpointer`].
-pub const SCHEMA_VERSION: u16 = 1;
+///
+/// v2: the embedded config gained the `faults` key and per-round records
+/// carry the fault/recovery counters (`corrupt_frames`, `retransmits`,
+/// `dup_frames`, `backoff_secs`, `aborted`).
+pub const SCHEMA_VERSION: u16 = 2;

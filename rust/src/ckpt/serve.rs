@@ -341,6 +341,11 @@ mod tests {
             dropped_clients: 0,
             stale_updates: 0,
             churned_clients: 0,
+            corrupt_frames: 0,
+            retransmits: 0,
+            dup_frames: 0,
+            backoff_secs: 0.0,
+            aborted: 0,
         }];
         let mut w = ByteWriter::new();
         w.put_u64(1);
@@ -359,9 +364,12 @@ mod tests {
         w.put_f64(r.wall_secs);
         w.put_f64(r.sim_secs);
         w.put_f64(r.cum_sim_secs);
-        for _ in 0..3 {
+        // dropped/stale/churned + corrupt/retransmits/dup counters.
+        for _ in 0..6 {
             w.put_u64(0);
         }
+        w.put_f64(r.backoff_secs);
+        w.put_u64(r.aborted);
         snap.push_section("records", w.into_bytes());
         snap.save_atomic(dir).unwrap()
     }

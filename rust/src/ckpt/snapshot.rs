@@ -186,27 +186,72 @@ pub fn file_name(round: u64) -> String {
     format!("ckpt-{round:06}.fckp")
 }
 
-/// The newest checkpoint in `dir`: `(completed_rounds, path)` with the
-/// highest round number, or `None` when the directory holds none (or does
-/// not exist). Only files matching the `ckpt-<round>.fckp` pattern are
-/// considered, so foreign files and leftover `.tmp` spills are ignored.
+/// The newest *valid* checkpoint in `dir`: `(completed_rounds, path)` with
+/// the highest round number that parses and passes every section CRC, or
+/// `None` when the directory holds none (or does not exist). Only files
+/// matching the `ckpt-<round>.fckp` pattern are considered, so foreign
+/// files and leftover `.tmp` spills are ignored. A truncated or bit-rotted
+/// candidate (e.g. a crash landed mid-write on a filesystem without atomic
+/// rename durability) is skipped with a warning and the previous valid
+/// snapshot is returned instead of hard-failing resume.
 pub fn latest_checkpoint(dir: &Path) -> Option<(u64, PathBuf)> {
     let entries = std::fs::read_dir(dir).ok()?;
-    let mut best: Option<(u64, PathBuf)> = None;
-    for entry in entries.flatten() {
-        let name = entry.file_name();
-        let name = name.to_string_lossy();
-        if let Some(round) = parse_round(&name) {
-            let newer = match &best {
-                None => true,
-                Some((r, _)) => round > *r,
-            };
-            if newer {
-                best = Some((round, entry.path()));
+    let mut found: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| parse_round(&e.file_name().to_string_lossy()).map(|r| (r, e.path())))
+        .collect();
+    found.sort_by_key(|(r, _)| std::cmp::Reverse(*r));
+    for (round, path) in found {
+        match Snapshot::load(&path) {
+            Ok(_) => return Some((round, path)),
+            Err(e) => {
+                log::warn!("skipping corrupt checkpoint {}: {e}", path.display());
             }
         }
     }
-    best
+    None
+}
+
+/// CRC-check every section of every `ckpt-<round>.fckp` snapshot in `dir`
+/// (`fedcomloc ckpt verify`). Returns a per-file report on success, or the
+/// report (with per-file errors) when any snapshot fails validation or the
+/// directory holds no checkpoints.
+pub fn verify_dir(dir: &Path) -> Result<String, String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read checkpoint dir {}: {e}", dir.display()))?;
+    let mut found: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| parse_round(&e.file_name().to_string_lossy()).map(|r| (r, e.path())))
+        .collect();
+    if found.is_empty() {
+        return Err(format!("no checkpoints in {}", dir.display()));
+    }
+    found.sort_by_key(|(r, _)| *r);
+    let mut report = String::new();
+    let mut bad = 0usize;
+    for (_, path) in &found {
+        let name = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
+        match Snapshot::load(path) {
+            Ok(s) => {
+                report.push_str(&format!(
+                    "{name}  ok  round {}, {} sections, algorithm {}\n",
+                    s.round,
+                    s.sections.len(),
+                    s.algo_spec
+                ));
+            }
+            Err(e) => {
+                bad += 1;
+                report.push_str(&format!("{name}  CORRUPT  {e}\n"));
+            }
+        }
+    }
+    report.push_str(&format!("{} checkpoints, {} corrupt\n", found.len(), bad));
+    if bad > 0 {
+        Err(report)
+    } else {
+        Ok(report)
+    }
 }
 
 /// Delete all but the newest `keep_last` checkpoints in `dir`
@@ -314,6 +359,58 @@ mod tests {
         assert!(dir.join(file_name(6)).exists());
         // keep_last = 0 keeps everything.
         assert_eq!(prune(&dir, 0), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_skips_corrupt_and_falls_back_to_previous_valid() {
+        let dir = tmpdir("fallback");
+        for round in [3u64, 5] {
+            let mut s = sample();
+            s.round = round;
+            s.save_atomic(&dir).unwrap();
+        }
+        // A crash mid-write (no atomic-rename durability) left the newest
+        // file truncated: resume must fall back to round 5, not hard-fail.
+        let good = {
+            let mut s = sample();
+            s.round = 9;
+            s.to_bytes()
+        };
+        std::fs::write(dir.join(file_name(9)), &good[..good.len() / 2]).unwrap();
+        let (round, path) = latest_checkpoint(&dir).unwrap();
+        assert_eq!(round, 5);
+        assert_eq!(Snapshot::load(&path).unwrap().round, 5);
+        // With every candidate corrupt, there is no checkpoint to resume.
+        std::fs::write(dir.join(file_name(5)), b"junk").unwrap();
+        std::fs::write(dir.join(file_name(3)), b"junk").unwrap();
+        assert!(latest_checkpoint(&dir).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_dir_reports_every_snapshot() {
+        let dir = tmpdir("verify");
+        assert!(verify_dir(&dir).unwrap_err().contains("no checkpoints"));
+        for round in [1u64, 2] {
+            let mut s = sample();
+            s.round = round;
+            s.save_atomic(&dir).unwrap();
+        }
+        let report = verify_dir(&dir).unwrap();
+        assert!(report.contains(&file_name(1)) && report.contains(&file_name(2)), "{report}");
+        assert!(report.contains("2 checkpoints, 0 corrupt"), "{report}");
+        // A bit-rotted payload fails the section CRC and the whole verify.
+        let path = dir.join(file_name(2));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let pos = bytes
+            .windows(5)
+            .position(|w| w == [1, 2, 3, 4, 5])
+            .expect("payload present");
+        bytes[pos] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let report = verify_dir(&dir).unwrap_err();
+        assert!(report.contains("CORRUPT") && report.contains("1 corrupt"), "{report}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -125,6 +125,10 @@ pub fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(),
             let s = value.as_str().ok_or("expected string")?;
             cfg.scenario = crate::fed::sim::Scenario::parse(s)?.key();
         }
+        "faults" => {
+            let s = value.as_str().ok_or("expected string")?;
+            cfg.faults = crate::fed::faults::FaultSpec::parse(s)?.key();
+        }
         other => return Err(format!("unknown key '{other}'")),
     }
     Ok(())
@@ -171,6 +175,7 @@ pub fn to_kv(cfg: &RunConfig) -> Vec<(String, String)> {
     put("compress_up", cfg.compress_up.clone());
     put("compress_down", cfg.compress_down.clone());
     put("scenario", cfg.scenario.clone());
+    put("faults", cfg.faults.clone());
     kv
 }
 
@@ -211,6 +216,7 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
         ("compress-up", "compress_up"),
         ("compress-down", "compress_down"),
         ("scenario", "scenario"),
+        ("faults", "faults"),
     ];
     for (flag, key) in pairs {
         if let Some(raw) = args.get(flag) {
@@ -231,9 +237,8 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
 /// "expected integer" from `apply_kv`, far from the cause.
 fn parse_flag_value(key: &str, raw: &str) -> Result<TomlValue, String> {
     match key {
-        "dataset" | "data_dir" | "model" | "compress_up" | "compress_down" | "scenario" => {
-            Ok(TomlValue::Str(raw.to_string()))
-        }
+        "dataset" | "data_dir" | "model" | "compress_up" | "compress_down" | "scenario"
+        | "faults" => Ok(TomlValue::Str(raw.to_string())),
         "alpha" | "p" | "gamma" | "tau" => raw
             .parse::<f64>()
             .map(TomlValue::Float)
@@ -373,6 +378,28 @@ clients = 50
         let mut cfg = RunConfig::default_mnist();
         apply_cli(&mut cfg, &args).unwrap();
         assert_eq!(cfg.scenario, "semisync:2@1");
+    }
+
+    #[test]
+    fn faults_key_applies_and_canonicalizes() {
+        let mut cfg = RunConfig::default_mnist();
+        assert_eq!(cfg.faults, "none");
+        // Default retry/backoff knobs are elided from the canonical key.
+        let doc =
+            toml::parse("[run]\nfaults = \"corrupt:0.02|retry:2|backoff:0.5\"").unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.faults, "corrupt:0.02");
+        let doc = toml::parse("[run]\nfaults = \"jitter:0.5\"").unwrap();
+        let err = apply_toml(&mut cfg, &doc).unwrap_err();
+        assert!(err.to_string().contains("unknown fault clause"), "{err}");
+        // CLI flag routes to the same schema point.
+        let cmd = crate::cli::Command::new("train", "t").opt("faults", "SPEC", "");
+        let args = cmd
+            .parse(&["--faults".into(), "crash:0.1|quorum:0.6".into()])
+            .unwrap();
+        let mut cfg = RunConfig::default_mnist();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.faults, "crash:0.1|quorum:0.6");
     }
 
     #[test]

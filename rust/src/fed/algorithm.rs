@@ -367,13 +367,22 @@ pub fn drive_federation_observed(
     if cfg.scenario != "sync" {
         log = log.with_meta("scenario", &cfg.scenario);
     }
+    if cfg.faults != "none" {
+        log = log.with_meta("faults", &cfg.faults);
+    }
     algo.setup(fed, cfg);
+    // A quorum-gated fault plane ([`crate::fed::faults`]) can abort a
+    // round: keep a pre-round model copy so an aborted round carries the
+    // model over unchanged (client-local state still advances, exactly as
+    // in a real deployment whose server discards a failed round).
+    let quorum_gated = cfg.faults != "none" && cfg.faults_spec().quorum > 0.0;
     let mut logger = RoundLogger::new(cfg, log);
     let start = observer.on_start(fed, algo, transport, &mut logger)?;
     let mut finalize = true;
     for round in start..cfg.rounds {
         logger.begin_round();
         let sampled = fed.sample_clients(cfg.clients_per_round);
+        let pre_round_x = quorum_gated.then(|| fed.x.clone());
         let outcome = {
             // Explicit reborrows: the ctx borrows end with this block.
             let mut ctx = RoundCtx {
@@ -386,6 +395,11 @@ pub fn drive_federation_observed(
             algo.round(&mut ctx)
         };
         let report = transport.end_round();
+        if report.aborted {
+            if let Some(x0) = &pre_round_x {
+                fed.x.copy_from_slice(x0);
+            }
+        }
         let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
             Some(fed.evaluate())
         } else {

@@ -1,0 +1,708 @@
+//! Deterministic fault-injection plane and recovery runtime.
+//!
+//! [`FaultSpec`] is an open string grammar (like
+//! [`crate::compress::CompressorSpec`]) describing link faults —
+//! `"corrupt:0.02|crash:0.01|dup:0.01|outage:0.005@3"` — and
+//! [`FaultNet`] compiles it into a [`Transport`] decorator that injects
+//! those faults *and* runs the recovery machinery that survives them:
+//!
+//! * **Frame corruption / truncation** (`corrupt:<p>`): each delivery may be
+//!   damaged in flight. Damage is detected at the transport boundary — the
+//!   damaged frame is actually produced byte-for-byte and pushed through
+//!   [`Message::decode`], which must surface a structured
+//!   [`crate::fed::message::WireError`] (never a panic, extending the
+//!   `wire_fuzz` totality contract) or fail the modeled link-layer CRC
+//!   ([`crate::util::bytes::crc32`]). Detected damage triggers a bounded
+//!   retransmit (`retry:<n>`, default 2) with exponential backoff
+//!   (`backoff:<secs>`, default 0.5) charged to the simulated clock and to
+//!   the wire-bit accounting of the wrapped transport.
+//! * **Mid-round client crashes** (`crash:<p>`): the client dies before its
+//!   uplink reaches the wire; nothing is billed and the server aggregates
+//!   without it.
+//! * **Duplicated deliveries** (`dup:<p>`): a successful uplink arrives
+//!   twice; the receiver deduplicates (the duplicate is billed and
+//!   discarded) so aggregation is unaffected.
+//! * **Transient link outages** (`outage:<p>@<secs>`): the client's link is
+//!   down for `<secs>` simulated seconds, long enough to miss the round.
+//! * **Quorum rounds** (`quorum:<f>`): after the per-round timeout the
+//!   server aggregates whatever arrived if at least `ceil(f · sampled)`
+//!   uplinks survived; otherwise the round is recorded as aborted and the
+//!   drive loop carries the model over unchanged.
+//!
+//! Every draw comes from a dedicated RNG stream seeded `seed ^`
+//! [`FAULT_SALT`], so the client-sampling, [`crate::fed::transport::SimNet`]
+//! and [`crate::fed::sim::ScenarioNet`] streams are untouched and
+//! `faults = "none"` is bit-identical to not constructing a [`FaultNet`] at
+//! all — by construction, not by accident.
+//!
+//! Error feedback stays correct across recovery: a retransmit re-sends the
+//! *identical already-encoded frame* (residuals were folded exactly once at
+//! [`Message::through`] compress time), and a transmit that exhausts its
+//! retries loses the update with the same semantics as an existing
+//! `SimNet` dropout — the residual keeps the compression error of the
+//! attempted send, which is the contract every driver already handles.
+//!
+//! All retries resolve within the round that issued them, so the only
+//! cross-round fault state is the RNG cursor; [`Transport::save_state`]
+//! persists it (nesting the wrapped transport's section) and crash+resume
+//! under an active fault spec is therefore bit-identical.
+
+use super::message::Message;
+use super::transport::{LinkReport, Transport};
+use crate::util::bytes::{crc32, ByteReader, ByteWriter};
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Salt XORed into the run seed for the fault plane's private RNG stream,
+/// keeping it decoupled from every other consumer of the seed.
+pub const FAULT_SALT: u64 = 0xFA01_7817;
+
+/// Default bounded-retransmit attempt budget per frame (`retry:<n>`).
+pub const DEFAULT_RETRY: u32 = 2;
+
+/// Default base backoff in simulated seconds (`backoff:<secs>`); attempt
+/// `k` waits `backoff · 2^(k-1)`.
+pub const DEFAULT_BACKOFF_SECS: f64 = 0.5;
+
+/// A parsed fault-plane specification.
+///
+/// Built by [`FaultSpec::parse`] from a `|`-separated clause list;
+/// [`FaultSpec::key`] re-emits the canonical form (a fixpoint of `parse`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Per-delivery probability a frame is corrupted or truncated in
+    /// flight (`corrupt:<p>`).
+    pub corrupt: f64,
+    /// Per-client per-round probability of a mid-round crash before the
+    /// uplink reaches the wire (`crash:<p>`).
+    pub crash: f64,
+    /// Per-delivery probability a successful uplink is duplicated
+    /// (`dup:<p>`).
+    pub dup: f64,
+    /// Per-client per-round probability of a transient link outage
+    /// (`outage:<p>@<secs>`).
+    pub outage_prob: f64,
+    /// Duration of a transient outage in simulated seconds.
+    pub outage_secs: f64,
+    /// Minimum fraction of the sampled cohort whose uplinks must survive
+    /// for the server to aggregate (`quorum:<f>`); `0` disables the check.
+    pub quorum: f64,
+    /// Bounded retransmit budget per frame (`retry:<n>`).
+    pub retry: u32,
+    /// Base exponential-backoff delay in simulated seconds
+    /// (`backoff:<secs>`).
+    pub backoff: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            corrupt: 0.0,
+            crash: 0.0,
+            dup: 0.0,
+            outage_prob: 0.0,
+            outage_secs: 0.0,
+            quorum: 0.0,
+            retry: DEFAULT_RETRY,
+            backoff: DEFAULT_BACKOFF_SECS,
+        }
+    }
+}
+
+fn parse_prob(key: &str, v: &str) -> Result<f64, String> {
+    let p: f64 = v
+        .parse()
+        .map_err(|_| format!("fault clause '{key}': '{v}' is not a number"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("fault clause '{key}': probability {v} not in [0, 1]"));
+    }
+    Ok(p)
+}
+
+fn parse_nonneg(key: &str, v: &str) -> Result<f64, String> {
+    let s: f64 = v
+        .parse()
+        .map_err(|_| format!("fault clause '{key}': '{v}' is not a number"))?;
+    if !s.is_finite() || s < 0.0 {
+        return Err(format!("fault clause '{key}': {v} must be finite and >= 0"));
+    }
+    Ok(s)
+}
+
+impl FaultSpec {
+    /// Parse a fault spec string.
+    ///
+    /// Grammar: `|`-separated clauses from the registry `corrupt:<p>`,
+    /// `crash:<p>`, `dup:<p>`, `outage:<p>@<secs>`, `quorum:<f>`,
+    /// `retry:<n>`, `backoff:<secs>`. The strings `"none"` and `""` mean no
+    /// fault plane. Probabilities must lie in `[0, 1]`; repeating a clause
+    /// or naming an unknown one is an error.
+    pub fn parse(spec: &str) -> Result<FaultSpec, String> {
+        let mut out = FaultSpec::default();
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(out);
+        }
+        let mut seen = BTreeSet::new();
+        for clause in spec.split('|') {
+            let clause = clause.trim();
+            let (key, value) = clause
+                .split_once(':')
+                .ok_or_else(|| format!("fault clause '{clause}': expected '<name>:<value>'"))?;
+            if !seen.insert(key.to_string()) {
+                return Err(format!("fault clause '{key}' given twice"));
+            }
+            match key {
+                "corrupt" => out.corrupt = parse_prob(key, value)?,
+                "crash" => out.crash = parse_prob(key, value)?,
+                "dup" => out.dup = parse_prob(key, value)?,
+                "outage" => {
+                    let (p, secs) = value.split_once('@').ok_or_else(|| {
+                        format!("fault clause 'outage': expected 'outage:<p>@<secs>', got '{clause}'")
+                    })?;
+                    out.outage_prob = parse_prob(key, p)?;
+                    out.outage_secs = parse_nonneg(key, secs)?;
+                }
+                "quorum" => out.quorum = parse_prob(key, value)?,
+                "retry" => {
+                    out.retry = value
+                        .parse()
+                        .map_err(|_| format!("fault clause 'retry': '{value}' is not a count"))?;
+                }
+                "backoff" => out.backoff = parse_nonneg(key, value)?,
+                other => {
+                    return Err(format!(
+                        "unknown fault clause '{other}' \
+                         (known: corrupt, crash, dup, outage, quorum, retry, backoff)"
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// True when the spec injects nothing: no fault plane is constructed
+    /// and the run is bit-identical to one with `faults = "none"`.
+    pub fn is_none(&self) -> bool {
+        self.corrupt == 0.0
+            && self.crash == 0.0
+            && self.dup == 0.0
+            && self.outage_prob == 0.0
+            && self.quorum == 0.0
+    }
+
+    /// Canonical spec string: active clauses in fixed order with default
+    /// `retry`/`backoff` elided, or `"none"` when nothing is injected
+    /// (no-op knobs on an inactive spec are dropped). A fixpoint of
+    /// [`FaultSpec::parse`].
+    pub fn key(&self) -> String {
+        if self.is_none() {
+            return "none".to_string();
+        }
+        let mut clauses = Vec::new();
+        if self.corrupt > 0.0 {
+            clauses.push(format!("corrupt:{}", self.corrupt));
+        }
+        if self.crash > 0.0 {
+            clauses.push(format!("crash:{}", self.crash));
+        }
+        if self.dup > 0.0 {
+            clauses.push(format!("dup:{}", self.dup));
+        }
+        if self.outage_prob > 0.0 {
+            clauses.push(format!("outage:{}@{}", self.outage_prob, self.outage_secs));
+        }
+        if self.quorum > 0.0 {
+            clauses.push(format!("quorum:{}", self.quorum));
+        }
+        if self.retry != DEFAULT_RETRY {
+            clauses.push(format!("retry:{}", self.retry));
+        }
+        if self.backoff != DEFAULT_BACKOFF_SECS {
+            clauses.push(format!("backoff:{}", self.backoff));
+        }
+        clauses.join("|")
+    }
+}
+
+/// A [`Transport`] decorator injecting the faults of a [`FaultSpec`] and
+/// running the recovery runtime (integrity check → bounded retransmit with
+/// exponential backoff → quorum accounting).
+///
+/// Stacking order is `ScenarioNet(FaultNet(SimNet | InProc))`: the fault
+/// plane sits directly on the wire so corruption, retransmit billing and
+/// outages apply to physical deliveries, while the scenario engine above it
+/// keeps its own virtual clock (it folds [`LinkReport::backoff_secs`] into
+/// the round's simulated time).
+///
+/// Fault fates are decided *once per client per round* on first touch —
+/// matching the [`Transport`] contract that repeated broadcasts (and
+/// multi-vector uplinks like Scaffold's `(Δx, Δc)`) see one coherent
+/// participant set.
+pub struct FaultNet<'a> {
+    inner: &'a mut dyn Transport,
+    spec: FaultSpec,
+    rng: Rng,
+    /// Round stamped by the first broadcast; uplinks from other rounds are
+    /// stale replays and are rejected.
+    round: Option<u32>,
+    /// Size of the sampled cohort (first broadcast's target list), the
+    /// quorum denominator.
+    expected: usize,
+    /// Sticky per-round downlink fate per client.
+    down_ok: BTreeMap<usize, bool>,
+    /// Sticky per-round uplink fate per client.
+    up_ok: BTreeMap<usize, bool>,
+    /// Clients whose uplink survived this round (quorum numerator).
+    delivered: BTreeSet<usize>,
+    corrupt_frames: u64,
+    retransmits: u64,
+    dup_frames: u64,
+    stale_frames: u64,
+    faulted_clients: u64,
+    backoff_secs: f64,
+}
+
+impl<'a> FaultNet<'a> {
+    /// Wrap `inner` with the fault plane described by `spec`, drawing all
+    /// fault randomness from the stream `seed ^ FAULT_SALT`.
+    pub fn new(inner: &'a mut dyn Transport, spec: FaultSpec, seed: u64) -> FaultNet<'a> {
+        FaultNet {
+            inner,
+            spec,
+            rng: Rng::seed_from_u64(seed ^ FAULT_SALT),
+            round: None,
+            expected: 0,
+            down_ok: BTreeMap::new(),
+            up_ok: BTreeMap::new(),
+            delivered: BTreeSet::new(),
+            corrupt_frames: 0,
+            retransmits: 0,
+            dup_frames: 0,
+            stale_frames: 0,
+            faulted_clients: 0,
+            backoff_secs: 0.0,
+        }
+    }
+
+    /// Stale uplink frames rejected at the boundary this round (replays
+    /// carrying a round stamp other than the current one).
+    pub fn stale_frames(&self) -> u64 {
+        self.stale_frames
+    }
+
+    /// Produce the damaged frame byte-for-byte and verify the boundary
+    /// detects it: either [`Message::decode`] surfaces a structured
+    /// [`crate::fed::message::WireError`] (the totality contract — no
+    /// panics), or decode still succeeds and the modeled link-layer CRC
+    /// catches the damage. Returns `true` when the damage was detected;
+    /// the injected damage always changes at least one byte, so the CRC
+    /// backstop makes silent acceptance impossible.
+    fn damage_detected(&mut self, msg: &Message) -> bool {
+        let mut bytes = msg.encode();
+        let clean_crc = crc32(&bytes);
+        if self.rng.bernoulli(0.25) {
+            // Truncation: the tail never made it.
+            let keep = self.rng.below_usize(bytes.len());
+            bytes.truncate(keep);
+        } else {
+            // Bit rot: flip 1–4 bytes with a nonzero xor mask.
+            let flips = 1 + self.rng.below_usize(4);
+            for _ in 0..flips {
+                let pos = self.rng.below_usize(bytes.len());
+                let mask = (self.rng.next_u64() as u8) | 1;
+                bytes[pos] ^= mask;
+            }
+        }
+        match Message::decode(&bytes) {
+            Err(_) => true,
+            Ok(_) => crc32(&bytes) != clean_crc,
+        }
+    }
+
+    /// Charge one backoff delay for retransmit attempt `attempt` (1-based).
+    fn charge_backoff(&mut self, attempt: u32) {
+        self.retransmits += 1;
+        self.backoff_secs += self.spec.backoff * f64::powi(2.0, attempt as i32 - 1);
+    }
+
+    /// Decide a client's downlink fate for the round: outage check, then a
+    /// corruption/retransmit loop. The first transmission was already
+    /// billed by the wrapping [`FaultNet::broadcast`]; every retransmit is
+    /// billed through the inner transport here.
+    fn resolve_downlink(&mut self, client: usize, msg: &Message) -> bool {
+        if self.spec.outage_prob > 0.0 && self.rng.bernoulli(self.spec.outage_prob) {
+            // Link down for the outage window: the client misses the round.
+            self.backoff_secs += self.spec.outage_secs;
+            self.faulted_clients += 1;
+            return false;
+        }
+        let mut attempt = 0u32;
+        loop {
+            let corrupted = self.spec.corrupt > 0.0 && self.rng.bernoulli(self.spec.corrupt);
+            if !corrupted {
+                return true;
+            }
+            self.corrupt_frames += 1;
+            let detected = self.damage_detected(msg);
+            assert!(detected, "fault plane injected undetectable frame damage");
+            if attempt >= self.spec.retry {
+                self.faulted_clients += 1;
+                return false;
+            }
+            attempt += 1;
+            self.charge_backoff(attempt);
+            self.inner.broadcast(&[client], msg);
+        }
+    }
+
+    /// Decide a client's uplink fate: crash check, then the
+    /// corruption/retransmit loop. Damaged transmissions are billed as they
+    /// happen; the final clean transmission is billed by the caller.
+    fn resolve_uplink(&mut self, client: usize, msg: &Message) -> bool {
+        if self.spec.crash > 0.0 && self.rng.bernoulli(self.spec.crash) {
+            // Crashed mid-round: nothing reached the wire, nothing billed.
+            self.faulted_clients += 1;
+            return false;
+        }
+        let mut attempt = 0u32;
+        loop {
+            let corrupted = self.spec.corrupt > 0.0 && self.rng.bernoulli(self.spec.corrupt);
+            if !corrupted {
+                return true;
+            }
+            self.corrupt_frames += 1;
+            let detected = self.damage_detected(msg);
+            assert!(detected, "fault plane injected undetectable frame damage");
+            // The damaged transmission still crossed (and is billed on)
+            // the wire.
+            self.inner.uplink(client, msg.clone());
+            if attempt >= self.spec.retry {
+                self.faulted_clients += 1;
+                return false;
+            }
+            attempt += 1;
+            self.charge_backoff(attempt);
+        }
+    }
+}
+
+impl Transport for FaultNet<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn broadcast(&mut self, clients: &[usize], msg: &Message) -> Vec<usize> {
+        let reached = self.inner.broadcast(clients, msg);
+        if self.round.is_none() {
+            self.round = Some(msg.header.round);
+            self.expected = clients.len();
+        }
+        let mut out = Vec::with_capacity(reached.len());
+        for &c in &reached {
+            let ok = match self.down_ok.get(&c) {
+                Some(&ok) => ok,
+                None => {
+                    let ok = self.resolve_downlink(c, msg);
+                    self.down_ok.insert(c, ok);
+                    ok
+                }
+            };
+            if ok {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    fn uplink(&mut self, client: usize, msg: Message) -> Option<Message> {
+        if let Some(round) = self.round {
+            if msg.header.round != round {
+                // Replayed stale frame: rejected at the boundary.
+                self.stale_frames += 1;
+                return None;
+            }
+        }
+        let ok = match self.up_ok.get(&client) {
+            Some(&ok) => ok,
+            None => {
+                let ok = self.resolve_uplink(client, &msg);
+                self.up_ok.insert(client, ok);
+                ok
+            }
+        };
+        if !ok {
+            return None;
+        }
+        let received = self.inner.uplink(client, msg)?;
+        if self.spec.dup > 0.0 && self.rng.bernoulli(self.spec.dup) {
+            // Duplicated delivery: billed on the wire, deduplicated here.
+            self.dup_frames += 1;
+            let _ = self.inner.uplink(client, received.clone());
+        }
+        self.delivered.insert(client);
+        Some(received)
+    }
+
+    fn end_round(&mut self) -> LinkReport {
+        let mut report = self.inner.end_round();
+        report.corrupt_frames += self.corrupt_frames;
+        report.retransmits += self.retransmits;
+        report.dup_frames += self.dup_frames;
+        report.dropped_clients += self.faulted_clients;
+        report.backoff_secs += self.backoff_secs;
+        report.sim_secs += self.backoff_secs;
+        if self.spec.quorum > 0.0 && self.expected > 0 {
+            let needed = (self.spec.quorum * self.expected as f64).ceil() as usize;
+            if self.delivered.len() < needed {
+                report.aborted = true;
+            }
+        }
+        self.round = None;
+        self.expected = 0;
+        self.down_ok.clear();
+        self.up_ok.clear();
+        self.delivered.clear();
+        self.corrupt_frames = 0;
+        self.retransmits = 0;
+        self.dup_frames = 0;
+        self.stale_frames = 0;
+        self.faulted_clients = 0;
+        self.backoff_secs = 0.0;
+        report
+    }
+
+    fn link_secs(&self, client: usize, bits: u64) -> f64 {
+        self.inner.link_secs(client, bits)
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        // Retries resolve within their round, so the only cross-round
+        // fault state is the RNG cursor; the wrapped transport's section
+        // nests after it.
+        let mut w = ByteWriter::new();
+        w.put_rng(&self.rng);
+        w.put_bytes(&self.inner.save_state());
+        w.into_bytes()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = ByteReader::new(bytes, "faultnet state");
+        self.rng = r.take_rng()?;
+        let inner = r.take_bytes()?;
+        r.finish()?;
+        self.inner.restore_state(&inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fed::message::SERVER;
+    use crate::fed::transport::InProc;
+
+    fn spec(s: &str) -> FaultSpec {
+        FaultSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn parse_full_grammar_and_key_fixpoint() {
+        let s = spec("corrupt:0.02|crash:0.01|dup:0.01|outage:0.005@3|quorum:0.6|retry:4|backoff:0.25");
+        assert_eq!(s.corrupt, 0.02);
+        assert_eq!(s.crash, 0.01);
+        assert_eq!(s.dup, 0.01);
+        assert_eq!(s.outage_prob, 0.005);
+        assert_eq!(s.outage_secs, 3.0);
+        assert_eq!(s.quorum, 0.6);
+        assert_eq!(s.retry, 4);
+        assert_eq!(s.backoff, 0.25);
+        let key = s.key();
+        assert_eq!(
+            key,
+            "corrupt:0.02|crash:0.01|dup:0.01|outage:0.005@3|quorum:0.6|retry:4|backoff:0.25"
+        );
+        assert_eq!(spec(&key).key(), key, "key() must be a parse fixpoint");
+    }
+
+    #[test]
+    fn none_empty_and_zero_probs_are_none() {
+        assert!(spec("none").is_none());
+        assert!(spec("").is_none());
+        assert!(spec("corrupt:0").is_none());
+        assert_eq!(spec("corrupt:0").key(), "none");
+        // No-op knobs without an active fault collapse to none.
+        assert_eq!(spec("retry:9").key(), "none");
+        // Defaults are elided from canonical keys.
+        assert_eq!(spec("corrupt:0.1|retry:2|backoff:0.5").key(), "corrupt:0.1");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "corrupt",             // missing value
+            "corrupt:1.5",         // out of range
+            "corrupt:x",           // not a number
+            "corrupt:0.1|corrupt:0.2", // duplicate clause
+            "outage:0.1",          // missing @secs
+            "outage:0.1@-2",       // negative duration
+            "retry:-1",            // not a count
+            "jitter:0.5",          // unknown clause
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "expected error for {bad:?}");
+        }
+    }
+
+    fn msg(round: usize, d: usize) -> Message {
+        Message::dense(round, SERVER, &vec![1.0f32; d])
+    }
+
+    #[test]
+    fn injected_damage_is_always_detected() {
+        let mut inner = InProc::default();
+        let mut net = FaultNet::new(&mut inner, spec("corrupt:1"), 7);
+        let m = msg(0, 17);
+        for _ in 0..200 {
+            assert!(net.damage_detected(&m));
+        }
+    }
+
+    #[test]
+    fn retransmit_recovers_and_is_billed() {
+        // corrupt:0.5 with a deep retry budget: every delivery eventually
+        // succeeds, corruption is observed, and retransmits are billed.
+        let mut inner = InProc::default();
+        let mut net = FaultNet::new(&mut inner, spec("corrupt:0.5|retry:16"), 3);
+        let clients = [0usize, 1, 2, 3];
+        let delivered = net.broadcast(&clients, &msg(0, 8));
+        assert_eq!(delivered, clients, "deep retries always recover");
+        for &c in &clients {
+            let up = net.uplink(c, msg(0, 8)).expect("uplink recovers");
+            assert_eq!(up.header.sender, SERVER);
+        }
+        let report = net.end_round();
+        assert!(report.corrupt_frames > 0, "corruption must have been observed");
+        assert_eq!(report.retransmits, report.corrupt_frames);
+        assert!(report.backoff_secs > 0.0);
+        assert!(report.sim_secs >= report.backoff_secs);
+        assert!(!report.aborted);
+        // A fault-free run bills one broadcast and four uplink messages;
+        // every corrupted transmission on top of that was also billed.
+        let clean_msgs = 1 + clients.len() as u64;
+        assert_eq!(
+            report.usage.downlink_msgs + report.usage.uplink_msgs,
+            clean_msgs + report.corrupt_frames
+        );
+    }
+
+    #[test]
+    fn exhausted_retries_lose_the_client() {
+        let mut inner = InProc::default();
+        let mut net = FaultNet::new(&mut inner, spec("corrupt:1|retry:1"), 11);
+        let delivered = net.broadcast(&[0, 1], &msg(0, 4));
+        assert!(delivered.is_empty(), "corrupt:1 can never deliver");
+        let report = net.end_round();
+        assert_eq!(report.dropped_clients, 2);
+        assert_eq!(report.retransmits, 2, "one bounded retry per client");
+        assert_eq!(report.corrupt_frames, 4, "initial + retry per client");
+    }
+
+    #[test]
+    fn crash_loses_uplink_without_billing() {
+        let mut inner = InProc::default();
+        let mut net = FaultNet::new(&mut inner, spec("crash:1"), 5);
+        let delivered = net.broadcast(&[0], &msg(0, 4));
+        assert_eq!(delivered, vec![0], "crash only affects uplinks");
+        assert!(net.uplink(0, msg(0, 4)).is_none());
+        // Sticky within the round: a second stream from the same client is
+        // also lost (coherent participant set).
+        assert!(net.uplink(0, msg(0, 4)).is_none());
+        let report = net.end_round();
+        assert_eq!(report.dropped_clients, 1);
+        assert_eq!(report.usage.uplink_msgs, 0, "a crashed client bills nothing");
+    }
+
+    #[test]
+    fn duplicates_are_billed_and_deduplicated() {
+        let mut inner = InProc::default();
+        let mut net = FaultNet::new(&mut inner, spec("dup:1"), 9);
+        net.broadcast(&[0, 1], &msg(0, 6));
+        for c in 0..2 {
+            assert!(net.uplink(c, msg(0, 6)).is_some(), "dup never loses data");
+        }
+        let report = net.end_round();
+        assert_eq!(report.dup_frames, 2);
+        assert_eq!(report.usage.uplink_msgs, 4, "each duplicate is billed");
+    }
+
+    #[test]
+    fn stale_replayed_frames_are_rejected() {
+        let mut inner = InProc::default();
+        let mut net = FaultNet::new(&mut inner, spec("dup:0.5"), 13);
+        net.broadcast(&[0], &msg(3, 4));
+        assert!(net.uplink(0, msg(1, 4)).is_none(), "round-1 frame in round 3");
+        assert_eq!(net.stale_frames(), 1);
+        assert!(net.uplink(0, msg(3, 4)).is_some(), "current round passes");
+    }
+
+    #[test]
+    fn quorum_aborts_round_below_threshold() {
+        let mut inner = InProc::default();
+        let mut net = FaultNet::new(&mut inner, spec("crash:1|quorum:0.5"), 1);
+        net.broadcast(&[0, 1, 2, 3], &msg(0, 4));
+        for c in 0..4 {
+            assert!(net.uplink(c, msg(0, 4)).is_none());
+        }
+        let report = net.end_round();
+        assert!(report.aborted, "0/4 uplinks < quorum 0.5");
+        // Per-round state cleared: a clean next round is not aborted.
+        let mut inner2 = InProc::default();
+        let mut ok = FaultNet::new(&mut inner2, spec("quorum:0.5"), 1);
+        ok.broadcast(&[0, 1], &msg(0, 4));
+        ok.uplink(0, msg(0, 4)).unwrap();
+        ok.uplink(1, msg(0, 4)).unwrap();
+        assert!(!ok.end_round().aborted);
+    }
+
+    #[test]
+    fn same_seed_same_faults_and_state_roundtrips() {
+        let run = |seed: u64| {
+            let mut inner = InProc::default();
+            let mut net = FaultNet::new(&mut inner, spec("corrupt:0.3|dup:0.2"), seed);
+            let mut reports = Vec::new();
+            for round in 0..4 {
+                net.broadcast(&[0, 1, 2], &msg(round, 8));
+                for c in 0..3 {
+                    net.uplink(c, msg(round, 8));
+                }
+                let r = net.end_round();
+                reports.push((r.corrupt_frames, r.retransmits, r.dup_frames));
+            }
+            reports
+        };
+        assert_eq!(run(42), run(42), "identical seed, identical fault stream");
+        assert_ne!(run(42), run(43), "fault stream is seed-dependent");
+
+        // Saving at a round boundary and restoring onto a fresh decorator
+        // continues the identical fault stream.
+        let mut inner_a = InProc::default();
+        let mut a = FaultNet::new(&mut inner_a, spec("corrupt:0.3|dup:0.2"), 42);
+        a.broadcast(&[0, 1, 2], &msg(0, 8));
+        for c in 0..3 {
+            a.uplink(c, msg(0, 8));
+        }
+        a.end_round();
+        let state = a.save_state();
+        let mut inner_b = InProc::default();
+        let mut b = FaultNet::new(&mut inner_b, spec("corrupt:0.3|dup:0.2"), 999);
+        b.restore_state(&state).unwrap();
+        fn drive(net: &mut FaultNet<'_>) -> (u64, u64, u64) {
+            net.broadcast(&[0, 1, 2], &msg(1, 8));
+            for c in 0..3 {
+                net.uplink(c, msg(1, 8));
+            }
+            let r = net.end_round();
+            (r.corrupt_frames, r.retransmits, r.dup_frames)
+        }
+        assert_eq!(drive(&mut a), drive(&mut b), "restored RNG continues the stream");
+    }
+}

@@ -27,6 +27,7 @@
 
 pub mod algorithm;
 pub mod cost;
+pub mod faults;
 pub mod fedavg;
 pub mod feddyn;
 pub mod message;
@@ -416,6 +417,13 @@ pub struct RunConfig {
     /// [`sim`] — the server folds the first K arrivals and stragglers
     /// land staleness-weighted in later rounds.
     pub scenario: String,
+    /// Fault-plane spec ([`faults::FaultSpec`] grammar): `"none"` runs the
+    /// legacy loop bit-identically; an active spec (e.g.
+    /// `"corrupt:0.02|crash:0.01|quorum:0.6"`) wraps the transport in a
+    /// [`faults::FaultNet`] that injects seeded frame corruption, crashes,
+    /// duplicates and outages, and runs the retransmit/quorum recovery
+    /// machinery.
+    pub faults: String,
 }
 
 impl RunConfig {
@@ -452,6 +460,7 @@ impl RunConfig {
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
             scenario: "sync".to_string(),
+            faults: "none".to_string(),
         }
     }
 
@@ -484,6 +493,7 @@ impl RunConfig {
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
             scenario: "sync".to_string(),
+            faults: "none".to_string(),
         }
     }
 
@@ -505,6 +515,13 @@ impl RunConfig {
     pub fn scenario_spec(&self) -> sim::Scenario {
         sim::Scenario::parse(&self.scenario)
             .unwrap_or_else(|e| panic!("invalid scenario '{}': {e}", self.scenario))
+    }
+
+    /// The validated fault-plane spec (panics on an invalid string — the
+    /// config layer validates on entry).
+    pub fn faults_spec(&self) -> faults::FaultSpec {
+        faults::FaultSpec::parse(&self.faults)
+            .unwrap_or_else(|e| panic!("invalid faults '{}': {e}", self.faults))
     }
 }
 
@@ -819,6 +836,11 @@ impl<'a> RoundLogger<'a> {
             dropped_clients: report.dropped_clients,
             stale_updates: report.stale_updates,
             churned_clients: report.churned_clients,
+            corrupt_frames: report.corrupt_frames,
+            retransmits: report.retransmits,
+            dup_frames: report.dup_frames,
+            backoff_secs: report.backoff_secs,
+            aborted: report.aborted as u64,
         });
     }
 
@@ -877,18 +899,33 @@ pub fn run_with_transport_observed(
 ) -> Result<MetricsLog, String> {
     let mut algo = spec.build();
     let mut fed = Federation::new(cfg, trainer);
+    let fault_spec = cfg.faults_spec();
+    if fault_spec.is_none() {
+        // No fault plane is constructed at all: `faults = "none"` is
+        // bit-identical to every pre-fault-plane release by construction.
+        dispatch_scenario(cfg, &mut fed, algo.as_mut(), transport, observer)
+    } else {
+        // The fault plane sits directly on the wire; a scenario decorator
+        // (built inside the dispatch) stacks above it, folding the fault
+        // plane's backoff time into its virtual clock.
+        let mut fault_net = faults::FaultNet::new(transport, fault_spec, cfg.seed);
+        dispatch_scenario(cfg, &mut fed, algo.as_mut(), &mut fault_net, observer)
+    }
+}
+
+/// Route a prepared run through the round runtime `cfg.scenario` selects.
+fn dispatch_scenario(
+    cfg: &RunConfig,
+    fed: &mut Federation,
+    algo: &mut dyn FedAlgorithm,
+    transport: &mut dyn transport::Transport,
+    observer: &mut dyn DriveObserver,
+) -> Result<MetricsLog, String> {
     match cfg.scenario_spec() {
-        sim::Scenario::Sync => {
-            drive_federation_observed(cfg, &mut fed, algo.as_mut(), transport, observer)
+        sim::Scenario::Sync => drive_federation_observed(cfg, fed, algo, transport, observer),
+        scenario @ sim::Scenario::Semisync { .. } => {
+            sim::drive_scenario_federation_observed(cfg, fed, algo, transport, &scenario, observer)
         }
-        scenario @ sim::Scenario::Semisync { .. } => sim::drive_scenario_federation_observed(
-            cfg,
-            &mut fed,
-            algo.as_mut(),
-            transport,
-            &scenario,
-            observer,
-        ),
     }
 }
 

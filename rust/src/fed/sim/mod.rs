@@ -195,8 +195,15 @@ pub fn drive_scenario_federation_observed(
         log = log.with_meta("compress_down", &cfg.compress_down);
     }
     log = log.with_meta("scenario", scenario.key());
+    if cfg.faults != "none" {
+        log = log.with_meta("faults", &cfg.faults);
+    }
     algo.setup(fed, cfg);
     let kind = algo.uplink_kind();
+    // See `drive_federation_observed`: a quorum-gated fault plane can
+    // abort a round, carrying the model over unchanged. The snapshot is
+    // taken after `fold_arrivals`, so straggler folds survive an abort.
+    let quorum_gated = cfg.faults != "none" && cfg.faults_spec().quorum > 0.0;
     let mut logger = RoundLogger::new(cfg, log);
     let mut net = ScenarioNet::new(transport, k, staleness, kind, cfg);
     let start = observer.on_start(fed, algo, &mut net, &mut logger)?;
@@ -206,6 +213,7 @@ pub fn drive_scenario_federation_observed(
         net.fold_arrivals(round, &mut fed.x);
         let sampled = fed.sample_clients(cfg.clients_per_round);
         net.begin_round(round, &sampled);
+        let pre_round_x = quorum_gated.then(|| fed.x.clone());
         let outcome = {
             let mut ctx = RoundCtx {
                 cfg,
@@ -218,6 +226,11 @@ pub fn drive_scenario_federation_observed(
         };
         net.note_local_steps(outcome.local_steps);
         let report = net.end_round();
+        if report.aborted {
+            if let Some(x0) = &pre_round_x {
+                fed.x.copy_from_slice(x0);
+            }
+        }
         let eval = if (round + 1) % cfg.eval_every == 0 || round + 1 == cfg.rounds {
             Some(fed.evaluate())
         } else {

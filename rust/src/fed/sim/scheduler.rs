@@ -330,9 +330,13 @@ impl Transport for ScenarioNet<'_> {
                 delta,
             });
         }
-        let sim_secs = done - self.now;
+        let mut sim_secs = done - self.now;
         self.now = done;
         let inner = self.inner.end_round();
+        // A wrapped fault plane spends extra simulated time in retransmit
+        // backoff and outages; that time belongs to the round's clock too.
+        sim_secs += inner.backoff_secs;
+        self.now += inner.backoff_secs;
         LinkReport {
             usage: inner.usage,
             sim_secs,
@@ -341,6 +345,11 @@ impl Transport for ScenarioNet<'_> {
             dropped_clients: inner.dropped_clients,
             stale_updates: self.stale_this_round,
             churned_clients: self.churned_this_round,
+            corrupt_frames: inner.corrupt_frames,
+            retransmits: inner.retransmits,
+            dup_frames: inner.dup_frames,
+            backoff_secs: inner.backoff_secs,
+            aborted: inner.aborted,
         }
     }
 

@@ -75,6 +75,22 @@ pub struct LinkReport {
     /// In-flight straggler updates discarded this round because their
     /// client was re-sampled before arrival (0 for plain transports).
     pub churned_clients: u64,
+    /// Frames the fault plane corrupted in flight this round (0 unless a
+    /// [`crate::fed::faults::FaultNet`] wraps the transport).
+    pub corrupt_frames: u64,
+    /// Retransmission attempts the recovery layer issued this round after
+    /// corrupted deliveries (0 without an active fault plane).
+    pub retransmits: u64,
+    /// Duplicated deliveries the fault plane injected (and the receiver
+    /// deduplicated) this round (0 without an active fault plane).
+    pub dup_frames: u64,
+    /// Simulated seconds spent in retransmit backoff and link outages this
+    /// round — already included in `sim_secs` (0 without a fault plane).
+    pub backoff_secs: f64,
+    /// True when the round failed its `quorum:<f>` threshold: too few
+    /// uplinks survived, so the server aggregated nothing and the model is
+    /// carried over unchanged (never set without an active fault plane).
+    pub aborted: bool,
 }
 
 /// A bidirectional client/server message channel with per-round accounting.
@@ -159,10 +175,7 @@ impl Transport for InProc {
     fn end_round(&mut self) -> LinkReport {
         LinkReport {
             usage: std::mem::take(&mut self.usage),
-            sim_secs: 0.0,
-            dropped_clients: 0,
-            stale_updates: 0,
-            churned_clients: 0,
+            ..LinkReport::default()
         }
     }
 }
@@ -212,10 +225,10 @@ pub struct SimNet {
 }
 
 impl SimNet {
-    /// Build a simulated network for a population of `_n_clients` (kept in
-    /// the signature for spec symmetry; per-client bandwidths are derived
-    /// from `seed` and the client *id* on demand, deterministic per run).
-    pub fn new(cfg: SimNetCfg, _n_clients: usize, seed: u64) -> SimNet {
+    /// Build a simulated network. The population size is not a parameter:
+    /// per-client bandwidths are derived from `seed` and the client *id*
+    /// on demand, deterministic per run at any population.
+    pub fn new(cfg: SimNetCfg, seed: u64) -> SimNet {
         assert!(cfg.bandwidth_bps > 0.0, "bandwidth must be positive");
         assert!((0.0..=1.0).contains(&cfg.drop_prob), "drop_prob in [0,1]");
         assert!(cfg.heterogeneity >= 1.0, "heterogeneity factor >= 1");
@@ -286,8 +299,7 @@ impl Transport for SimNet {
             usage: std::mem::take(&mut self.usage),
             sim_secs,
             dropped_clients: dropped,
-            stale_updates: 0,
-            churned_clients: 0,
+            ..LinkReport::default()
         }
     }
 
@@ -315,11 +327,7 @@ impl Transport for SimNet {
 /// Parse a transport spec string: `inproc` (default) or
 /// `simnet[:BW_MBPS[:LATENCY_MS[:DROP_PROB[:HETEROGENEITY]]]]`, e.g.
 /// `simnet:10:50:0.1:4`.
-pub fn parse_transport(
-    spec: &str,
-    n_clients: usize,
-    seed: u64,
-) -> Result<Box<dyn Transport>, String> {
+pub fn parse_transport(spec: &str, seed: u64) -> Result<Box<dyn Transport>, String> {
     let spec = spec.trim();
     let (kind, rest) = match spec.split_once(':') {
         Some((k, r)) => (k, Some(r)),
@@ -364,7 +372,7 @@ pub fn parse_transport(
             if cfg.heterogeneity < 1.0 {
                 return Err("simnet heterogeneity factor must be >= 1".into());
             }
-            Ok(Box::new(SimNet::new(cfg, n_clients, seed)))
+            Ok(Box::new(SimNet::new(cfg, seed)))
         }
         other => Err(format!("unknown transport '{other}' (have: inproc, simnet)")),
     }
@@ -405,7 +413,7 @@ mod tests {
             drop_prob: 0.0,
             heterogeneity: 1.0,
         };
-        let mut t = SimNet::new(cfg, 4, 7);
+        let mut t = SimNet::new(cfg, 7);
         let msg = dense_msg(1000); // 32_000 bits -> 0.032 s at 1 Mbit/s
         let delivered = t.broadcast(&[0, 1], &msg);
         assert_eq!(delivered, vec![0, 1]);
@@ -428,7 +436,7 @@ mod tests {
         };
         let clients: Vec<usize> = (0..64).collect();
         let run = |seed: u64| {
-            let mut t = SimNet::new(cfg, 64, seed);
+            let mut t = SimNet::new(cfg, seed);
             let msg = dense_msg(10);
             let first = t.broadcast(&clients, &msg);
             // Second broadcast in the same round sees the same availability.
@@ -449,7 +457,7 @@ mod tests {
             heterogeneity: 8.0,
             ..SimNetCfg::default()
         };
-        let t = SimNet::new(cfg, 200, 3);
+        let t = SimNet::new(cfg, 3);
         let bws: Vec<f64> = (0..200).map(|c| t.client_bw(c)).collect();
         let min = bws.iter().cloned().fold(f64::MAX, f64::min);
         let max = bws.iter().cloned().fold(0.0, f64::max);
@@ -459,7 +467,7 @@ mod tests {
         // Pure per-id derivation: stable across queries and independent of
         // population size — a million-client net derives the same link.
         assert_eq!(t.client_bw(137).to_bits(), t.client_bw(137).to_bits());
-        let big = SimNet::new(cfg, 1_000_000, 3);
+        let big = SimNet::new(cfg, 3);
         assert_eq!(big.client_bw(137).to_bits(), t.client_bw(137).to_bits());
         let far = big.client_bw(999_999);
         assert!(far <= cfg.bandwidth_bps + 1e-6 && far >= cfg.bandwidth_bps / 8.0 - 1e-6);
@@ -467,18 +475,18 @@ mod tests {
 
     #[test]
     fn transport_spec_parsing() {
-        assert_eq!(parse_transport("inproc", 4, 0).unwrap().name(), "inproc");
-        assert_eq!(parse_transport("", 4, 0).unwrap().name(), "inproc");
-        assert_eq!(parse_transport("simnet", 4, 0).unwrap().name(), "simnet");
+        assert_eq!(parse_transport("inproc", 0).unwrap().name(), "inproc");
+        assert_eq!(parse_transport("", 0).unwrap().name(), "inproc");
+        assert_eq!(parse_transport("simnet", 0).unwrap().name(), "simnet");
         assert_eq!(
-            parse_transport("simnet:10:50:0.1:4", 4, 0).unwrap().name(),
+            parse_transport("simnet:10:50:0.1:4", 0).unwrap().name(),
             "simnet"
         );
-        assert!(parse_transport("simnet:0", 4, 0).is_err());
-        assert!(parse_transport("simnet:10:50:1.5", 4, 0).is_err());
-        assert!(parse_transport("simnet:1:1:0:0.5", 4, 0).is_err());
-        assert!(parse_transport("carrier-pigeon", 4, 0).is_err());
-        assert!(parse_transport("inproc:fast", 4, 0).is_err());
+        assert!(parse_transport("simnet:0", 0).is_err());
+        assert!(parse_transport("simnet:10:50:1.5", 0).is_err());
+        assert!(parse_transport("simnet:1:1:0:0.5", 0).is_err());
+        assert!(parse_transport("carrier-pigeon", 0).is_err());
+        assert!(parse_transport("inproc:fast", 0).is_err());
     }
 
     #[test]
@@ -490,14 +498,14 @@ mod tests {
         };
         let clients: Vec<usize> = (0..32).collect();
         let msg = dense_msg(10);
-        let mut a = SimNet::new(cfg, 32, 9);
+        let mut a = SimNet::new(cfg, 9);
         // Advance a few rounds, snapshot, rebuild-from-spec + restore.
         for _ in 0..3 {
             a.broadcast(&clients, &msg);
             a.end_round();
         }
         let state = a.save_state();
-        let mut b = SimNet::new(cfg, 32, 9);
+        let mut b = SimNet::new(cfg, 9);
         b.restore_state(&state).unwrap();
         for round in 0..4 {
             assert_eq!(

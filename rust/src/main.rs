@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   sweep             declarative scenario sweeps (run | list, EXPERIMENTS.md)
-//!   train             run one federated algorithm end-to-end
+//!   train             run one federated algorithm end-to-end (--faults injects
+//!                     deterministic corruption/crash/outage chaos)
 //!   experiment        regenerate paper tables/figures (sweep-preset aliases)
 //!   list-experiments  show the experiment registry
 //!   list-algorithms   show the algorithm registry (spec strings for --algo)
@@ -100,7 +101,7 @@ SUBCOMMANDS:
     train             run one federated algorithm end-to-end
     run               train with crash-tolerant checkpointing (bit-identical resume)
     serve             answer eval/predict requests from a checkpoint (JSON lines)
-    ckpt              checkpoint utilities: ckpt inspect <file>
+    ckpt              checkpoint utilities: ckpt inspect <file> | ckpt verify <dir>
     experiment        regenerate paper tables/figures (sweep-preset aliases)
     list-experiments  show the experiment registry
     list-algorithms   show the algorithm registry (spec strings for --algo)
@@ -148,6 +149,11 @@ fn train_options(cmd: Command) -> Command {
             "scenario",
             "SPEC",
             "round runtime: sync | semisync:<K>[@<staleness>] (fold first K arrivals)",
+        )
+        .opt(
+            "faults",
+            "SPEC",
+            "fault-injection plan: none | corrupt:<p>|crash:<p>|dup:<p>|outage:<p>@<secs>|quorum:<f>|retry:<n>|backoff:<secs>",
         )
         .opt_default(
             "transport",
@@ -255,12 +261,8 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
     let (cfg, spec) = resolve_train_setup(&args)?;
-    let mut transport = parse_transport(
-        args.get("transport").unwrap_or("inproc"),
-        cfg.n_clients,
-        cfg.seed,
-    )
-    .map_err(|e| anyhow::anyhow!(e))?;
+    let mut transport = parse_transport(args.get("transport").unwrap_or("inproc"), cfg.seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
 
     let opts = ExpOptions {
         out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
@@ -321,6 +323,16 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
             }
         }
     }
+    let corrupt: u64 = log.records.iter().map(|r| r.corrupt_frames).sum();
+    let retrans: u64 = log.records.iter().map(|r| r.retransmits).sum();
+    let aborted: u64 = log.records.iter().map(|r| r.aborted).sum();
+    if corrupt > 0 || retrans > 0 || aborted > 0 {
+        let backoff: f64 = log.records.iter().map(|r| r.backoff_secs).sum();
+        println!(
+            "fault plane: {corrupt} corrupt frames, {retrans} retransmits \
+             ({backoff:.2} s backoff), {aborted} aborted rounds"
+        );
+    }
     println!("metrics: {}/train/{}.csv", opts.out_dir.display(), log.run_name);
     Ok(())
 }
@@ -359,12 +371,8 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
     let (cfg, spec) = resolve_train_setup(&args)?;
-    let mut transport = parse_transport(
-        args.get("transport").unwrap_or("inproc"),
-        cfg.n_clients,
-        cfg.seed,
-    )
-    .map_err(|e| anyhow::anyhow!(e))?;
+    let mut transport = parse_transport(args.get("transport").unwrap_or("inproc"), cfg.seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
     let opts = ExpOptions {
         out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
         trainer: args.get("trainer").unwrap_or("auto").to_string(),
@@ -434,6 +442,16 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         log.best_accuracy(),
         log.final_train_loss()
     );
+    let corrupt: u64 = log.records.iter().map(|r| r.corrupt_frames).sum();
+    let retrans: u64 = log.records.iter().map(|r| r.retransmits).sum();
+    let aborted: u64 = log.records.iter().map(|r| r.aborted).sum();
+    if corrupt > 0 || retrans > 0 || aborted > 0 {
+        let backoff: f64 = log.records.iter().map(|r| r.backoff_secs).sum();
+        println!(
+            "fault plane: {corrupt} corrupt frames, {retrans} retransmits \
+             ({backoff:.2} s backoff), {aborted} aborted rounds"
+        );
+    }
     println!("metrics: {}/run/{}.csv", opts.out_dir.display(), log.run_name);
     Ok(())
 }
@@ -545,14 +563,38 @@ fn cmd_ckpt(argv: &[String]) -> anyhow::Result<()> {
             print!("{}", snap.describe());
             Ok(())
         }
+        Some("verify") => {
+            let cmd = Command::new(
+                "fedcomloc ckpt verify",
+                "CRC-check every section of every checkpoint in a directory",
+            );
+            let args = cmd.parse(&argv[1..]).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if args.wants_help() {
+                println!("{}", args.help_text());
+                println!("\nUSAGE:\n    fedcomloc ckpt verify <dir>");
+                return Ok(());
+            }
+            let dir = args
+                .positionals
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("pass a checkpoint directory: ckpt verify <dir>"))?;
+            match fedcomloc::ckpt::verify_dir(std::path::Path::new(dir)) {
+                Ok(report) => {
+                    print!("{report}");
+                    Ok(())
+                }
+                Err(report) => anyhow::bail!("{report}"),
+            }
+        }
         Some("--help") | Some("-h") | None => {
             println!(
                 "fedcomloc ckpt — checkpoint utilities\n\n\
-                 USAGE:\n    fedcomloc ckpt inspect <file.fckp>   print schema/round/algorithm/sections"
+                 USAGE:\n    fedcomloc ckpt inspect <file.fckp>   print schema/round/algorithm/sections\n    \
+                 fedcomloc ckpt verify <dir>          CRC-check every snapshot in a directory"
             );
             Ok(())
         }
-        Some(other) => anyhow::bail!("unknown ckpt subcommand '{other}' (try inspect)"),
+        Some(other) => anyhow::bail!("unknown ckpt subcommand '{other}' (try inspect | verify)"),
     }
 }
 

@@ -19,7 +19,7 @@
 //!   dropped_clients, stale_updates, churned_clients` (test columns empty
 //!   between evaluations; the last two are produced by the scenario
 //!   engine, `fed::sim`, and stay 0 on synchronous runs).
-//! * **Sweep sink, result schema v3** (`sweep::sink`, written by
+//! * **Sweep sink, result schema v4** (`sweep::sink`, written by
 //!   `fedcomloc sweep run`): one summary-CSV row per *run* plus one JSONL
 //!   object per round,
 //!   both versioned with an explicit `schema` field and deliberately
@@ -73,6 +73,21 @@ pub struct RoundRecord {
     /// In-flight straggler updates discarded this round because their
     /// client was re-sampled before arrival. 0 on synchronous runs.
     pub churned_clients: u64,
+    /// Frames the fault plane ([`crate::fed::faults`]) corrupted in flight
+    /// this round. 0 without an active fault plane.
+    pub corrupt_frames: u64,
+    /// Retransmission attempts the recovery layer issued this round. 0
+    /// without an active fault plane.
+    pub retransmits: u64,
+    /// Duplicated deliveries injected (and deduplicated) this round. 0
+    /// without an active fault plane.
+    pub dup_frames: u64,
+    /// Simulated seconds spent in retransmit backoff and link outages this
+    /// round (already included in `sim_secs`). 0 without a fault plane.
+    pub backoff_secs: f64,
+    /// 1 when the round failed its quorum threshold and the server carried
+    /// the model over unchanged, else 0.
+    pub aborted: u64,
 }
 
 impl RoundRecord {
@@ -217,6 +232,20 @@ impl MetricsLog {
                     o.set("stale_updates", r.stale_updates.into());
                     o.set("churned_clients", r.churned_clients.into());
                 }
+                // Fault/recovery counters appear only when a fault plane
+                // produced activity, keeping legacy output byte-stable.
+                if r.corrupt_frames > 0
+                    || r.retransmits > 0
+                    || r.dup_frames > 0
+                    || r.backoff_secs > 0.0
+                    || r.aborted > 0
+                {
+                    o.set("corrupt_frames", r.corrupt_frames.into());
+                    o.set("retransmits", r.retransmits.into());
+                    o.set("dup_frames", r.dup_frames.into());
+                    o.set("backoff_secs", r.backoff_secs.into());
+                    o.set("aborted", r.aborted.into());
+                }
                 o
             })
             .collect();
@@ -257,6 +286,11 @@ mod tests {
             dropped_clients: 0,
             stale_updates: 0,
             churned_clients: 0,
+            corrupt_frames: 0,
+            retransmits: 0,
+            dup_frames: 0,
+            backoff_secs: 0.0,
+            aborted: 0,
         }
     }
 

@@ -16,7 +16,7 @@ pub struct SweepPreset {
     pub toml: &'static str,
 }
 
-static SWEEP_PRESETS: [SweepPreset; 12] = [
+static SWEEP_PRESETS: [SweepPreset; 13] = [
     SweepPreset {
         name: "sparsity",
         paper: "Table 1, Figure 1",
@@ -76,6 +76,11 @@ static SWEEP_PRESETS: [SweepPreset; 12] = [
         name: "scale",
         paper: "",
         toml: include_str!("../../../experiments/scale.toml"),
+    },
+    SweepPreset {
+        name: "chaos",
+        paper: "",
+        toml: include_str!("../../../experiments/chaos.toml"),
     },
 ];
 
@@ -137,5 +142,6 @@ mod tests {
         assert_eq!(runs("bidir"), 6 + 4, "up curve + asymmetric grid");
         assert_eq!(runs("stragglers"), 6, "2 uplinks x 3 scenarios");
         assert_eq!(runs("smoke"), 2);
+        assert_eq!(runs("chaos"), 6, "fault-free baseline + 5 fault plans");
     }
 }

@@ -166,7 +166,7 @@ fn run_unit(
         }
     };
     let algo = AlgorithmSpec::parse(&unit.algo)?;
-    let mut transport = parse_transport(&unit.transport, cfg.n_clients, cfg.seed)?;
+    let mut transport = parse_transport(&unit.transport, cfg.seed)?;
     let t0 = std::time::Instant::now();
     let log = match &opts.checkpoint_dir {
         Some(root) => {

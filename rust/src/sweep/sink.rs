@@ -10,22 +10,26 @@
 //!   rounds/<run_id>.jsonl    one JSON object per communication round
 //! ```
 //!
-//! # Summary CSV schema (v3)
+//! # Summary CSV schema (v4)
 //!
 //! ```text
 //! schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,
 //! local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,
 //! batch_size,eval_batch,eval_every,tau,data_dir,compress_up,
-//! compress_down,scenario,best_accuracy,final_accuracy,final_train_loss,
-//! total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,
-//! dropped_clients,stale_updates,churned_clients
+//! compress_down,scenario,faults,best_accuracy,final_accuracy,
+//! final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,
+//! total_sim_secs,dropped_clients,stale_updates,churned_clients,
+//! corrupt_frames,retransmits,backoff_secs,aborted_rounds
 //! ```
 //!
 //! v2 appended the `compress_up`/`compress_down` columns to the
 //! configuration prefix (they are result-affecting); v3 added the
 //! `scenario` axis (`fed::sim` round runtime) to the prefix and the
-//! `stale_updates`/`churned_clients` metric columns; the sweep-*file*
-//! schema is versioned separately and stayed at
+//! `stale_updates`/`churned_clients` metric columns; v4 added the
+//! `faults` axis ([`crate::fed::faults`] fault-injection plane) to the
+//! prefix and the `corrupt_frames`/`retransmits`/`backoff_secs`/
+//! `aborted_rounds` recovery columns; the sweep-*file* schema is
+//! versioned separately and stayed at
 //! [`crate::sweep::spec::SCHEMA_VERSION`] = 1.
 //!
 //! The columns through `data_dir` are the run's complete *result-affecting*
@@ -49,7 +53,9 @@
 //! `cum_uplink_bits`, `cum_downlink_bits`, `total_cost`, `sim_secs`,
 //! `cum_sim_secs`, `dropped_clients`, `stale_updates`, `churned_clients`
 //! (the last five only when a simulated transport or scenario produced
-//! them). Keys serialize in lexicographic order.
+//! them), plus `corrupt_frames`, `retransmits`, `dup_frames`,
+//! `backoff_secs`, `aborted` (only when the fault plane produced them).
+//! Keys serialize in lexicographic order.
 //!
 //! Wall-clock time is deliberately **excluded** from both formats (it would
 //! break bit-reproducibility); per-run wall time goes to the log output.
@@ -65,10 +71,10 @@ use std::path::{Path, PathBuf};
 /// Version of the *result* schema (summary CSV + round JSONL): stamped
 /// into every row/line and matched by `--resume`, so results written under
 /// an older schema are never silently reused.
-pub const RESULT_SCHEMA: i64 = 3;
+pub const RESULT_SCHEMA: i64 = 4;
 
-/// The pinned v3 summary header (also the golden-test reference).
-pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,compress_up,compress_down,scenario,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients";
+/// The pinned v4 summary header (also the golden-test reference).
+pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,compress_up,compress_down,scenario,faults,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients,corrupt_frames,retransmits,backoff_secs,aborted_rounds";
 
 /// `<out>/<sweep>/summary.csv`.
 pub fn summary_path(sweep_dir: &Path) -> PathBuf {
@@ -95,7 +101,7 @@ fn opt_f64(v: Option<f64>) -> String {
 pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
     let cfg = &unit.cfg;
     format!(
-        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir},{compress_up},{compress_down},{scenario}",
+        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir},{compress_up},{compress_down},{scenario},{faults}",
         schema = RESULT_SCHEMA,
         id = unit.id,
         algo = unit.algo,
@@ -120,6 +126,7 @@ pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
         compress_up = cfg.compress_up,
         compress_down = cfg.compress_down,
         scenario = cfg.scenario,
+        faults = cfg.faults,
     )
 }
 
@@ -129,8 +136,12 @@ pub fn summary_row(sweep: &str, trainer: &str, unit: &RunUnit, log: &MetricsLog)
     let dropped: u64 = log.records.iter().map(|r| r.dropped_clients).sum();
     let stale: u64 = log.records.iter().map(|r| r.stale_updates).sum();
     let churned: u64 = log.records.iter().map(|r| r.churned_clients).sum();
+    let corrupt: u64 = log.records.iter().map(|r| r.corrupt_frames).sum();
+    let retrans: u64 = log.records.iter().map(|r| r.retransmits).sum();
+    let backoff: f64 = log.records.iter().map(|r| r.backoff_secs).sum();
+    let aborted: u64 = log.records.iter().map(|r| r.aborted).sum();
     format!(
-        "{key},{best},{fin},{loss},{up},{down},{cost},{sim},{dropped},{stale},{churned}",
+        "{key},{best},{fin},{loss},{up},{down},{cost},{sim},{dropped},{stale},{churned},{corrupt},{retrans},{backoff},{aborted}",
         key = summary_key(sweep, trainer, unit),
         best = opt_f64(log.best_accuracy()),
         fin = opt_f64(log.final_accuracy()),
@@ -172,6 +183,18 @@ pub fn round_line(run_id: &str, r: &RoundRecord) -> String {
         o.set("dropped_clients", r.dropped_clients.into());
         o.set("stale_updates", r.stale_updates.into());
         o.set("churned_clients", r.churned_clients.into());
+    }
+    if r.corrupt_frames > 0
+        || r.retransmits > 0
+        || r.dup_frames > 0
+        || r.backoff_secs > 0.0
+        || r.aborted > 0
+    {
+        o.set("corrupt_frames", r.corrupt_frames.into());
+        o.set("retransmits", r.retransmits.into());
+        o.set("dup_frames", r.dup_frames.into());
+        o.set("backoff_secs", r.backoff_secs.into());
+        o.set("aborted", r.aborted.into());
     }
     o.to_string_compact()
 }
@@ -278,6 +301,11 @@ mod tests {
             dropped_clients: 0,
             stale_updates: 0,
             churned_clients: 0,
+            corrupt_frames: 0,
+            retransmits: 0,
+            dup_frames: 0,
+            backoff_secs: 0.0,
+            aborted: 0,
         }
     }
 
@@ -287,7 +315,7 @@ mod tests {
         assert_eq!(
             line,
             "{\"cum_downlink_bits\":200,\"cum_uplink_bits\":100,\"downlink_bits\":200,\
-             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":3,\
+             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":4,\
              \"total_cost\":1.07,\"train_loss\":0.5,\"uplink_bits\":100}"
         );
         let eval = round_line("r000-x", &record(1));
@@ -303,8 +331,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = summary_path(&dir);
         let rows = vec![
-            format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,sync,0.8,0.7,0.3,1,2,3,0,0,0,0"),
-            format!("{RESULT_SCHEMA},r001-b,s,scaffold,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,q8,none,semisync:2@0.5,,,,1,2,3,0,0,1,1"),
+            format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,sync,none,0.8,0.7,0.3,1,2,3,0,0,0,0,0,0,0,0"),
+            format!("{RESULT_SCHEMA},r001-b,s,scaffold,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,q8,none,semisync:2@0.5,corrupt:0.02,,,,1,2,3,0,0,1,1,4,2,1.5,1"),
         ];
         write_summary(&path, &rows).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
@@ -313,7 +341,7 @@ mod tests {
         assert_eq!(back.len(), 2);
         assert_eq!(back.get("r000-a"), Some(&rows[0]));
         // Foreign-schema rows (e.g. pre-compression v1 results) are ignored.
-        write_summary(&path, &["1,r009-z,s,x,m,m,t,native,1,1,0,0,0,0,1,1,1,1,1,1,1,0,d,,,,0,0,0,0,0".to_string()])
+        write_summary(&path, &["1,r009-z,s,x,m,m,t,native,1,1,0,0,0,0,1,1,1,1,1,1,1,0,d,,,,,0,0,0,0,0".to_string()])
             .unwrap();
         assert!(read_summary_rows(&path).is_empty());
         let _ = std::fs::remove_dir_all(&dir);
@@ -325,7 +353,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         let path = summary_path(&dir);
-        let complete = format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,sync,0.8,0.7,0.3,1,2,3,0,0,0,0");
+        let complete = format!("{RESULT_SCHEMA},r000-a,s,fedavg,mnist,mlp,inproc,native,5,10,0.1,0.7,0.05,42,600,150,6,3,16,32,2,0.01,data,none,none,sync,none,0.8,0.7,0.3,1,2,3,0,0,0,0,0,0,0,0");
         let torn = format!("{RESULT_SCHEMA},r001-b,s,scaffold,mnist,mlp,inproc,nat");
         // Simulate a crash mid-append: one complete row, then a row cut
         // short with no trailing newline.

@@ -25,7 +25,9 @@
 //! Axis keys (each accepts a scalar or a list; a missing axis inherits the
 //! base value): `algos`, `models`, `datasets`, `transports`, `scenarios`
 //! (`sync` / `semisync:<K>[@<staleness>]` round runtimes — see
-//! [`crate::fed::sim`]), `compress_up`, `compress_down` over the
+//! [`crate::fed::sim`]), `faults` (fault-injection plans —
+//! [`crate::fed::faults::FaultSpec`] grammar), `compress_up`,
+//! `compress_down` over the
 //! string-keyed registries, plus scalar grids `rounds`, `local_iters`,
 //! `alphas`, `gammas`, `ps`, `seeds`, and the population-scale axes
 //! `clients` (`n_clients`) / `sampled` (`clients_per_round`). Any *other*
@@ -35,7 +37,7 @@
 //! Expansion order is canonical and documented: grid blocks in file order;
 //! within a block, nested loops over dataset → model → transport →
 //! scenario → compress_up → compress_down → algo → rounds → local_iters →
-//! alpha → gamma → p → seed → clients → sampled. Every expanded unit is fully validated (registry
+//! alpha → gamma → p → seed → clients → sampled → faults. Every expanded unit is fully validated (registry
 //! specs resolve, model/dataset dims agree, directional pipelines don't
 //! collide with algorithm-embedded compressors) before anything runs, so a
 //! typo fails the whole sweep up front instead of panicking inside a
@@ -100,6 +102,9 @@ pub struct GridBlock {
     pub clients: Vec<usize>,
     /// Cohort sizes per round (`clients_per_round`).
     pub sampled: Vec<usize>,
+    /// Fault-injection plans ([`crate::fed::faults::FaultSpec`] grammar),
+    /// stored canonicalized.
+    pub faults: Vec<String>,
 }
 
 /// A parsed, not-yet-expanded sweep file.
@@ -226,6 +231,7 @@ impl GridBlock {
                 }
                 "clients" => block.clients = list_of_usize(key, value)?,
                 "sampled" => block.sampled = list_of_usize(key, value)?,
+                "faults" => block.faults = list_of_strings(key, value)?,
                 // Anything else is a fixed per-block run-config override;
                 // config::apply_kv validates it at expansion time.
                 _ => block.fixed.push((key.clone(), value.clone())),
@@ -255,6 +261,7 @@ impl GridBlock {
             * axis(self.seeds.len())
             * axis(self.clients.len())
             * axis(self.sampled.len())
+            * axis(self.faults.len())
     }
 
     /// True when the block expands to no runs (never, post-validation).
@@ -472,6 +479,22 @@ impl SweepSpec {
         };
         let compress_up = compress_axis(&block.compress_up, "compress_up")?;
         let compress_down = compress_axis(&block.compress_down, "compress_down")?;
+        // Fault plans are stored canonicalized (default retry/backoff knobs
+        // elided) so summary keys and run ids are stable across equivalent
+        // spellings.
+        let faults: Vec<Option<String>> = if block.faults.is_empty() {
+            vec![None]
+        } else {
+            block
+                .faults
+                .iter()
+                .map(|s| {
+                    crate::fed::faults::FaultSpec::parse(s)
+                        .map(|f| Some(f.key()))
+                        .map_err(|e| format!("faults '{s}': {e}"))
+                })
+                .collect::<Result<_, _>>()?
+        };
 
         let opt =
             |xs: &[usize]| -> Vec<Option<usize>> {
@@ -555,25 +578,31 @@ impl SweepSpec {
                                                                     let transport_spec = transport
                                                                         .clone()
                                                                         .unwrap_or_else(|| "inproc".to_string());
-                                                                    validate_unit(&cfg, &transport_spec, algo)?;
-                                                                    let index = units.len();
-                                                                    // Scale axes suffix the id only when
-                                                                    // actually swept, keeping legacy ids
-                                                                    // byte-stable.
-                                                                    let mut id = unit_id(index, algo, &cfg);
-                                                                    if let Some(n) = nc {
-                                                                        id.push_str(&format!("-n-{n}"));
+                                                                    for fault in &faults {
+                                                                        let mut cfg = cfg.clone();
+                                                                        if let Some(f) = fault {
+                                                                            cfg.faults = f.clone();
+                                                                        }
+                                                                        validate_unit(&cfg, &transport_spec, algo)?;
+                                                                        let index = units.len();
+                                                                        // Scale axes suffix the id only when
+                                                                        // actually swept, keeping legacy ids
+                                                                        // byte-stable.
+                                                                        let mut id = unit_id(index, algo, &cfg);
+                                                                        if let Some(n) = nc {
+                                                                            id.push_str(&format!("-n-{n}"));
+                                                                        }
+                                                                        if let Some(m) = mc {
+                                                                            id.push_str(&format!("-m-{m}"));
+                                                                        }
+                                                                        units.push(RunUnit {
+                                                                            index,
+                                                                            id,
+                                                                            algo: algo.clone(),
+                                                                            transport: transport_spec.clone(),
+                                                                            cfg,
+                                                                        });
                                                                     }
-                                                                    if let Some(m) = mc {
-                                                                        id.push_str(&format!("-m-{m}"));
-                                                                    }
-                                                                    units.push(RunUnit {
-                                                                        index,
-                                                                        id,
-                                                                        algo: algo.clone(),
-                                                                        transport: transport_spec,
-                                                                        cfg,
-                                                                    });
                                                                 }
                                                             }
                                                         }
@@ -594,14 +623,17 @@ impl SweepSpec {
 }
 
 /// Stable, filesystem-safe run id. Legacy shape (`r<idx>-<algo>`) when no
-/// directional pipeline or scenario is set; runs that differ only in
-/// `compress_up`/`compress_down`/`scenario` gain `-u-<spec>` / `-d-<spec>`
-/// / `-s-<spec>` suffixes so ids stay unique (they key resume and the
-/// JSONL files).
+/// directional pipeline, scenario, or fault plan is set; runs that differ
+/// only in `compress_up`/`compress_down`/`scenario`/`faults` gain
+/// `-u-<spec>` / `-d-<spec>` / `-s-<spec>` / `-f-<spec>` suffixes so ids
+/// stay unique (they key resume and the JSONL files).
 fn unit_id(index: usize, algo: &str, cfg: &RunConfig) -> String {
     let mut id = format!("r{index:03}-{}", sanitize(algo));
     if cfg.scenario != "sync" {
         id.push_str(&format!("-s-{}", sanitize(&cfg.scenario)));
+    }
+    if cfg.faults != "none" {
+        id.push_str(&format!("-f-{}", sanitize(&cfg.faults)));
     }
     if cfg.compress_up != "none" {
         id.push_str(&format!("-u-{}", sanitize(&cfg.compress_up)));
@@ -616,7 +648,9 @@ fn unit_id(index: usize, algo: &str, cfg: &RunConfig) -> String {
 /// surfaced as errors at expansion time so a bad combination fails the
 /// sweep up front instead of panicking in a worker thread.
 fn validate_unit(cfg: &RunConfig, transport: &str, algo: &str) -> Result<(), String> {
-    parse_transport(transport, cfg.n_clients, cfg.seed)?;
+    parse_transport(transport, cfg.seed)?;
+    crate::fed::faults::FaultSpec::parse(&cfg.faults)
+        .map_err(|e| format!("faults '{}': {e}", cfg.faults))?;
     let up = CompressorSpec::parse(&cfg.compress_up)
         .map_err(|e| format!("compress_up '{}': {e}", cfg.compress_up))?;
     let down = CompressorSpec::parse(&cfg.compress_down)
@@ -938,6 +972,33 @@ rounds = 3
                 .unwrap_err();
             assert!(err.contains(needle), "toml: {toml}\nerr: {err}");
         }
+    }
+
+    #[test]
+    fn faults_axis_expands_canonicalizes_and_suffixes_ids() {
+        let spec = SweepSpec::parse_str(
+            "name = \"f\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
+             faults = [\"none\", \"corrupt:0.02|retry:2|backoff:0.5\", \"crash:0.1|quorum:0.6\"]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.grids[0].len(), 3);
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 3);
+        assert_eq!(units[0].cfg.faults, "none");
+        // Default retry/backoff knobs are elided by canonicalization.
+        assert_eq!(units[1].cfg.faults, "corrupt:0.02");
+        assert_eq!(units[2].cfg.faults, "crash:0.1|quorum:0.6");
+        // "none" keeps the legacy id shape; active plans gain -f- suffixes.
+        assert_eq!(units[0].id, "r000-fedavg");
+        assert_eq!(units[1].id, "r001-fedavg-f-corrupt_0.02");
+        assert_eq!(units[2].id, "r002-fedavg-f-crash_0.1_quorum_0.6");
+        // A malformed plan fails the whole sweep up front.
+        let err = SweepSpec::parse_str(
+            "name = \"f\"\n[[grid]]\nalgos = [\"fedavg\"]\nfaults = [\"jitter:0.5\"]\n",
+        )
+        .and_then(|s| s.expand(1.0, None).map(|_| ()))
+        .unwrap_err();
+        assert!(err.contains("unknown fault clause"), "{err}");
     }
 
     #[test]

@@ -56,7 +56,7 @@ fn tiny_cfg(compress_up: &str) -> RunConfig {
 fn run_observed(cfg: &RunConfig, spec: &AlgorithmSpec, ckpt: &mut Checkpointer) -> MetricsLog {
     let trainer =
         fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
-    let mut transport = parse_transport("inproc", cfg.n_clients, cfg.seed).unwrap();
+    let mut transport = parse_transport("inproc", cfg.seed).unwrap();
     run_with_transport_observed(cfg, trainer, spec, transport.as_mut(), ckpt)
         .unwrap_or_else(|e| panic!("observed run failed: {e}"))
 }
@@ -186,7 +186,7 @@ fn observer_never_perturbs_training() {
     let spec = AlgorithmSpec::parse("fedcomloc-com").unwrap();
     let trainer =
         fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
-    let mut plain_transport = parse_transport("inproc", cfg.n_clients, cfg.seed).unwrap();
+    let mut plain_transport = parse_transport("inproc", cfg.seed).unwrap();
     let plain = run_with_transport(&cfg, trainer, &spec, plain_transport.as_mut());
 
     let root = tmp_dir("noperturb");

@@ -1,0 +1,194 @@
+//! Acceptance pins for the deterministic fault-injection plane and its
+//! recovery runtime (`fedcomloc::fed::faults`):
+//!
+//! * **transparency** — a `FaultNet` built from an inactive spec is an
+//!   exact no-op decorator: wrapping the transport changes nothing, byte
+//!   for byte, across all four algorithm families (and `faults = "none"`
+//!   never constructs one at all, so legacy output is preserved by
+//!   construction);
+//! * **thread invariance** — an *active* fault plan draws every fault from
+//!   the coordinator-side salted RNG stream, so results are bit-identical
+//!   at any `threads` setting;
+//! * **EF correctness across retransmits** — with a deep retry budget every
+//!   corrupted frame eventually recovers, and the learning trajectory
+//!   (losses/accuracies) is bit-identical to the fault-free run even
+//!   through a stateful `ef(...)` uplink pipeline: retransmits re-send the
+//!   identical encoded frame, never re-folding residuals;
+//! * **crash + resume under chaos** — a run killed mid-flight under an
+//!   active fault plan resumes bit-identically (the fault RNG cursor rides
+//!   in the transport's checkpoint section).
+
+use fedcomloc::ckpt::Checkpointer;
+use fedcomloc::data::DatasetSpec;
+use fedcomloc::fed::faults::{FaultNet, FaultSpec};
+use fedcomloc::fed::transport::parse_transport;
+use fedcomloc::fed::{
+    run_with_transport, run_with_transport_observed, AlgorithmSpec, RunConfig,
+};
+use fedcomloc::metrics::MetricsLog;
+use fedcomloc::sweep::sink;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedcomloc-faults-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Fast convex workload (softmax on flat synthetic Gaussians) driven
+/// through the `semisync:2` scenario, so the fault plane is exercised in
+/// its full stacking order `ScenarioNet(FaultNet(inner))` with straggler
+/// buffering above it.
+fn tiny_cfg(compress_up: &str, faults: &str) -> RunConfig {
+    RunConfig {
+        dataset: DatasetSpec::parse("synthetic:32-c4").unwrap(),
+        train_n: 400,
+        test_n: 100,
+        n_clients: 6,
+        clients_per_round: 4,
+        rounds: 6,
+        eval_every: 2,
+        batch_size: 16,
+        eval_batch: 32,
+        threads: 1,
+        compress_up: compress_up.to_string(),
+        scenario: "semisync:2".to_string(),
+        faults: faults.to_string(),
+        ..RunConfig::default_mnist()
+    }
+}
+
+fn run(cfg: &RunConfig, algo: &str) -> MetricsLog {
+    let spec = AlgorithmSpec::parse(algo).unwrap_or_else(|e| panic!("{algo}: {e}"));
+    let trainer =
+        fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
+    let mut transport = parse_transport("inproc", cfg.seed).unwrap();
+    run_with_transport(cfg, trainer, &spec, transport.as_mut())
+}
+
+/// The deterministic per-round serialization the sweep sink writes —
+/// byte equality here covers losses, wire accounting, *and* the fault/
+/// recovery counters.
+fn lines(log: &MetricsLog) -> Vec<String> {
+    log.records.iter().map(|r| sink::round_line("case", r)).collect()
+}
+
+#[test]
+fn inactive_fault_plane_is_a_transparent_decorator_for_all_algorithms() {
+    for (algo, up) in [
+        ("fedcomloc-com", "ef(topk:0.25)"),
+        ("fedavg", "ef(topk:0.25)"),
+        ("scaffold", "none"),
+        ("feddyn:0.01", "ef(topk:0.25)"),
+    ] {
+        let cfg = tiny_cfg(up, "none");
+        let plain = run(&cfg, algo);
+
+        // Same run with the transport explicitly wrapped in an inactive
+        // FaultNet: the decorator must be invisible — it draws no RNG and
+        // filters nothing, so every byte of the output is unchanged.
+        let spec = AlgorithmSpec::parse(algo).unwrap();
+        let trainer =
+            fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
+        let mut inner = parse_transport("inproc", cfg.seed).unwrap();
+        let mut net = FaultNet::new(inner.as_mut(), FaultSpec::default(), cfg.seed);
+        let wrapped = run_with_transport(&cfg, trainer, &spec, &mut net);
+
+        assert_eq!(
+            lines(&plain),
+            lines(&wrapped),
+            "{algo}: an inactive FaultNet perturbed the run"
+        );
+    }
+}
+
+#[test]
+fn active_fault_plan_is_bit_identical_across_thread_counts() {
+    let plan = "corrupt:0.3|crash:0.1|dup:0.2|quorum:0.5|retry:4";
+    let mut cfg1 = tiny_cfg("ef(topk:0.25)", plan);
+    cfg1.threads = 1;
+    let mut cfg4 = cfg1.clone();
+    cfg4.threads = 4;
+    let (log1, log4) = (run(&cfg1, "fedcomloc-com"), run(&cfg4, "fedcomloc-com"));
+    assert_eq!(lines(&log1), lines(&log4), "fault stream must be thread-invariant");
+    // The plan actually fired: corruption was observed and recovered from.
+    let corrupt: u64 = log1.records.iter().map(|r| r.corrupt_frames).sum();
+    let retrans: u64 = log1.records.iter().map(|r| r.retransmits).sum();
+    assert!(corrupt > 0, "corrupt:0.3 over 6 rounds must corrupt something");
+    assert!(retrans > 0, "recovery must have retransmitted");
+}
+
+#[test]
+fn deep_retries_recover_every_frame_and_preserve_ef_learning() {
+    // corrupt:0.4 with a deep retry budget: every transmission eventually
+    // succeeds, so the participant sets — and therefore the entire
+    // learning trajectory through the stateful ef(...) pipeline — are
+    // bit-identical to the fault-free run. Only the recovery accounting
+    // (extra billed frames, backoff seconds) differs: retransmits re-send
+    // the identical encoded frame and never re-fold EF residuals.
+    let faulty = run(&tiny_cfg("ef(topk:0.25)", "corrupt:0.4|retry:24"), "fedcomloc-com");
+    let clean = run(&tiny_cfg("ef(topk:0.25)", "none"), "fedcomloc-com");
+    assert_eq!(faulty.records.len(), clean.records.len());
+    for (f, c) in faulty.records.iter().zip(&clean.records) {
+        assert_eq!(
+            f.train_loss.to_bits(),
+            c.train_loss.to_bits(),
+            "round {}: loss diverged under recovered corruption",
+            f.round
+        );
+        assert_eq!(
+            f.test_accuracy.map(f64::to_bits),
+            c.test_accuracy.map(f64::to_bits),
+            "round {}: accuracy diverged under recovered corruption",
+            f.round
+        );
+        assert_eq!(f.aborted, 0, "deep retries must never abort a round");
+    }
+    let corrupt: u64 = faulty.records.iter().map(|r| r.corrupt_frames).sum();
+    let retrans: u64 = faulty.records.iter().map(|r| r.retransmits).sum();
+    let backoff: f64 = faulty.records.iter().map(|r| r.backoff_secs).sum();
+    assert!(corrupt > 0, "corruption must have been observed");
+    assert_eq!(retrans, corrupt, "every corrupted frame was retransmitted");
+    assert!(backoff > 0.0, "backoff must be charged to the simulated clock");
+    // Recovery is billed: the faulty run ships strictly more uplink bits.
+    let bits = |l: &MetricsLog| l.records.iter().map(|r| r.uplink_bits).sum::<u64>();
+    assert!(bits(&faulty) > bits(&clean), "retransmits must be billed on the wire");
+}
+
+#[test]
+fn crash_and_resume_under_active_faults_is_bit_identical() {
+    let cfg = tiny_cfg("ef(topk:0.25)", "corrupt:0.3|crash:0.1|dup:0.2|quorum:0.5|retry:4");
+    let spec = AlgorithmSpec::parse("fedcomloc-com").unwrap();
+    let root = tmp_dir("resume");
+    let observed = |ckpt: &mut Checkpointer| -> MetricsLog {
+        let trainer =
+            fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
+        let mut transport = parse_transport("inproc", cfg.seed).unwrap();
+        run_with_transport_observed(&cfg, trainer, &spec, transport.as_mut(), ckpt)
+            .unwrap_or_else(|e| panic!("observed run failed: {e}"))
+    };
+
+    // Uninterrupted reference under the active plan.
+    let dir_a = root.join("a");
+    let mut ckpt_a = Checkpointer::new(&dir_a, spec.key());
+    let log_a = observed(&mut ckpt_a);
+    assert_eq!(log_a.records.len(), cfg.rounds);
+
+    // Kill after round 3, restart in a fresh "process": the fault RNG
+    // cursor rides in the transport's checkpoint section, so the restarted
+    // run replays the identical fault stream.
+    let dir_b = root.join("b");
+    let mut crash = Checkpointer::new(&dir_b, spec.key()).crash_after(3);
+    let partial = observed(&mut crash);
+    assert_eq!(partial.records.len(), 3, "crash must stop the drive mid-run");
+    let mut resume = Checkpointer::new(&dir_b, spec.key());
+    let log_b = observed(&mut resume);
+    assert_eq!(resume.resumed_from(), Some(3), "must resume at round 3");
+
+    assert_eq!(
+        lines(&log_a),
+        lines(&log_b),
+        "resumed run diverged under the active fault plan"
+    );
+    let _ = std::fs::remove_dir_all(&root);
+}

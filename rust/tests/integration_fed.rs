@@ -207,7 +207,7 @@ fn simnet_smoke_accounts_latency_and_drops() {
         drop_prob: 0.3,
         heterogeneity: 4.0,
     };
-    let mut transport = SimNet::new(sim, cfg.n_clients, cfg.seed);
+    let mut transport = SimNet::new(sim, cfg.seed);
     let log = run_with_transport(
         &cfg,
         native(),
@@ -245,7 +245,7 @@ fn simnet_is_deterministic_given_seed() {
         ..SimNetCfg::default()
     };
     let run_once = || {
-        let mut transport = SimNet::new(sim, cfg.n_clients, cfg.seed);
+        let mut transport = SimNet::new(sim, cfg.seed);
         run_with_transport(&cfg, native(), &algo("fedcomloc-com:topk:0.3"), &mut transport)
     };
     let a = run_once();

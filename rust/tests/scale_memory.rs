@@ -77,7 +77,7 @@ fn measured_run(n_clients: usize) -> (usize, usize) {
     let trainer =
         fedcomloc::runtime::build_trainer("native", Path::new("artifacts"), &cfg.model_spec());
     let mut algo = spec.build();
-    let mut transport = parse_transport("inproc", cfg.n_clients, cfg.seed).unwrap();
+    let mut transport = parse_transport("inproc", cfg.seed).unwrap();
 
     let base = LIVE.load(Ordering::SeqCst);
     PEAK.store(base, Ordering::SeqCst);

@@ -185,7 +185,7 @@ fn transport_dropout_and_scheduler_churn_never_double_count() {
     let run_scenario = |scenario: &str| {
         let mut cfg = tiny_cfg();
         cfg.scenario = scenario.to_string();
-        let mut transport = parse_transport("simnet:10:5:0.2:2", cfg.n_clients, cfg.seed).unwrap();
+        let mut transport = parse_transport("simnet:10:5:0.2:2", cfg.seed).unwrap();
         fedcomloc::fed::run_with_transport(
             &cfg,
             native(),

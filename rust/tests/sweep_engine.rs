@@ -81,17 +81,18 @@ fn summary_schema_is_golden() {
         sink::SUMMARY_HEADER,
         "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,\
          train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,\
-         compress_up,compress_down,scenario,\
+         compress_up,compress_down,scenario,faults,\
          best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,\
-         total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients",
-        "summary schema v3 is pinned; bump sink::RESULT_SCHEMA to change it"
+         total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients,\
+         corrupt_frames,retransmits,backoff_secs,aborted_rounds",
+        "summary schema v4 is pinned; bump sink::RESULT_SCHEMA to change it"
     );
     let rows: Vec<&str> = lines.collect();
     assert_eq!(rows.len(), 6);
     for (row, unit) in rows.iter().zip(&outcome.units) {
         let fields: Vec<&str> = row.split(',').collect();
-        assert_eq!(fields.len(), 36, "{row}");
-        assert_eq!(fields[0], "3");
+        assert_eq!(fields.len(), 41, "{row}");
+        assert_eq!(fields[0], "4");
         assert_eq!(fields[1], unit.id);
         assert_eq!(fields[2], "enginetest");
         assert_eq!(fields[3], unit.algo);
@@ -103,8 +104,9 @@ fn summary_schema_is_golden() {
         assert_eq!(fields[23], unit.cfg.compress_up, "compress_up column");
         assert_eq!(fields[24], unit.cfg.compress_down, "compress_down column");
         assert_eq!(fields[25], "sync", "scenario column");
+        assert_eq!(fields[26], "none", "faults column");
         // Evaluated runs carry a best accuracy in (0, 1].
-        let best: f64 = fields[26].parse().unwrap_or_else(|e| panic!("{row}: {e}"));
+        let best: f64 = fields[27].parse().unwrap_or_else(|e| panic!("{row}: {e}"));
         assert!(best > 0.0 && best <= 1.0, "{row}");
     }
     // The EF/bidirectional run keeps the legacy id shape plus suffixes.
@@ -112,14 +114,14 @@ fn summary_schema_is_golden() {
     assert_eq!(outcome.units[5].cfg.compress_down, "q8");
     assert!(outcome.units[5].id.contains("-u-ef_topk_0.5_"), "{}", outcome.units[5].id);
     // The SimNet run accumulated simulated seconds; InProc runs did not.
-    assert!(rows[4].split(',').nth(32).unwrap().parse::<f64>().unwrap() > 0.0);
-    assert_eq!(rows[0].split(',').nth(32), Some("0"));
+    assert!(rows[4].split(',').nth(33).unwrap().parse::<f64>().unwrap() > 0.0);
+    assert_eq!(rows[0].split(',').nth(33), Some("0"));
     // Per-round JSONL exists for every run, with one line per round.
     for unit in &outcome.units {
         let jsonl = read(&sink::rounds_path(&outcome.dir, &unit.id));
         assert_eq!(jsonl.lines().count(), 3, "{}", unit.id);
         let first = fedcomloc::util::json::parse(jsonl.lines().next().unwrap()).unwrap();
-        assert_eq!(first.get("schema").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(first.get("schema").unwrap().as_usize().unwrap(), 4);
         assert_eq!(first.get("run").unwrap().as_str().unwrap(), unit.id);
         assert_eq!(first.get("round").unwrap().as_usize().unwrap(), 0);
         assert!(first.get("wall_secs").is_none(), "wall clock must not leak");
@@ -167,7 +169,7 @@ fn sweep_runs_are_bit_identical_to_direct_fed_runs() {
             &unit.cfg.model_spec(),
         );
         let mut transport =
-            parse_transport(&unit.transport, unit.cfg.n_clients, unit.cfg.seed).unwrap();
+            parse_transport(&unit.transport, unit.cfg.seed).unwrap();
         let log = run_with_transport(&unit.cfg, trainer, &algo, transport.as_mut());
         let direct: String = log
             .records

@@ -7,9 +7,18 @@
 //! Valid frames are produced by the real codec registry (every family
 //! plus a chain), so the declared-length checks are exercised against
 //! every payload layout the federation actually ships.
+//!
+//! The second half extends the totality contract from single frames to
+//! adversarial *delivery sequences* at the transport boundary: duplicated
+//! frames, frames replayed from earlier rounds, and rounds arriving out
+//! of order must all be absorbed by the fault plane ([`FaultNet`]) as
+//! counted, structured outcomes — never a panic, never a silently
+//! accepted stale update.
 
 use fedcomloc::compress::CompressorSpec;
+use fedcomloc::fed::faults::{FaultNet, FaultSpec};
 use fedcomloc::fed::message::Message;
+use fedcomloc::fed::transport::{InProc, Transport};
 use fedcomloc::util::quickcheck::{check, Gen};
 use fedcomloc::util::rng::Rng;
 
@@ -109,4 +118,68 @@ fn declared_length_bombs_are_rejected_before_allocation() {
     let dim_pos = 9;
     bytes[dim_pos..dim_pos + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     assert!(Message::decode(&bytes).is_err(), "dim bomb must be rejected");
+}
+
+#[test]
+fn duplicated_deliveries_are_counted_and_collapse_to_one_update() {
+    // dup:1 duplicates every uplink delivery; the caller still observes
+    // exactly one received message per send, and the extra physical frame
+    // is billed and counted rather than folded twice.
+    let mut inner = InProc::default();
+    let mut net = FaultNet::new(&mut inner, FaultSpec::parse("dup:1").unwrap(), 11);
+    let clients = [0usize, 1, 2];
+    let down = Message::dense(0, u32::MAX, &[1.0, 2.0]);
+    assert_eq!(net.broadcast(&clients, &down), clients.to_vec());
+    for &c in &clients {
+        let up = Message::dense(0, c as u32, &[0.5, 0.5]);
+        assert!(net.uplink(c, up).is_some(), "client {c} must deliver once");
+    }
+    let report = net.end_round();
+    assert_eq!(report.dup_frames, 3, "every uplink duplicated");
+    // 3 clean sends + 3 duplicates cross the wire.
+    assert_eq!(report.usage.uplink_msgs, 6);
+    assert!(!report.aborted);
+}
+
+#[test]
+fn frames_replayed_from_earlier_rounds_are_rejected() {
+    // Capture a round-0 uplink frame, then replay its decoded message into
+    // round 2: the fault plane must reject it as stale (None) and count
+    // it, not hand the driver a stale update.
+    let replayed_bytes = Message::dense(0, 7, &[9.0, 9.0]).encode();
+    let replayed = Message::decode(&replayed_bytes).expect("captured frame is valid");
+
+    let mut inner = InProc::default();
+    let mut net = FaultNet::new(&mut inner, FaultSpec::default(), 5);
+    let down = Message::dense(2, u32::MAX, &[1.0, 2.0]);
+    assert_eq!(net.broadcast(&[7], &down), vec![7]);
+    assert!(net.uplink(7, replayed).is_none(), "stale frame must be dropped");
+    assert_eq!(net.stale_frames(), 1);
+    // The client's *current* frame still goes through afterwards.
+    assert!(net.uplink(7, Message::dense(2, 7, &[1.0, 1.0])).is_some());
+    let report = net.end_round();
+    assert!(!report.aborted);
+}
+
+#[test]
+fn out_of_order_rounds_never_leak_stale_state_across_round_boundaries() {
+    // Drive rounds 5 then 3 then 5 again (a reordered scheduler would do
+    // this after a recovery): each round's sequencing is self-contained —
+    // frames stamped with the round broadcast last are accepted, anything
+    // else is stale, and per-round fate maps reset at end_round.
+    let mut inner = InProc::default();
+    let mut net = FaultNet::new(&mut inner, FaultSpec::default(), 5);
+    for &round in &[5u32, 3, 5] {
+        let down = Message::dense(round as usize, u32::MAX, &[1.0]);
+        assert_eq!(net.broadcast(&[0, 1], &down), vec![0, 1]);
+        // A frame from any *other* round is stale for this one.
+        let other = if round == 5 { 3 } else { 5 };
+        assert!(net.uplink(0, Message::dense(other as usize, 0, &[2.0])).is_none());
+        assert_eq!(net.stale_frames(), 1, "one replay rejected this round");
+        assert!(net.uplink(0, Message::dense(round as usize, 0, &[2.0])).is_some());
+        assert!(net.uplink(1, Message::dense(round as usize, 1, &[2.0])).is_some());
+        let report = net.end_round();
+        assert!(!report.aborted, "full participation can never miss quorum");
+        assert_eq!(net.stale_frames(), 0, "per-round counters reset at end_round");
+    }
 }

@@ -1,7 +1,10 @@
 //! Micro-bench: the local-step hot path on the native plane — gradient,
 //! fused control-variate update, aggregation, and the full step — on both
 //! the allocating API and the zero-allocation `Workspace` fast path the
-//! federated drivers run.
+//! federated drivers run. The `train_step_simd_*` groups rerun the
+//! workspace path on the `native-simd` backend's kernels (AVX2 lanes when
+//! the CPU has them, bit-identical by construction) and record the
+//! scalar→SIMD speedup as a metric.
 //!
 //! Exports `BENCH_train_step.json` (see `util::benchkit::finalize`); CI's
 //! `perf-smoke` job gates it against `benches/baseline/BENCH_train_step.json`.
@@ -72,6 +75,39 @@ fn main() {
     });
     b.finish();
 
+    // Same hot path on the `native-simd` backend's kernels. The gate pins
+    // these cases too, so a SIMD-path regression fails CI even while the
+    // scalar plane stays fast.
+    let simd = NativeTrainer::with_kernels(
+        trainer.model().clone(),
+        &fedcomloc::backend::kernels::SIMD,
+    );
+    let mut ws_simd = Workspace::for_model(simd.model(), 64);
+    let mut b = Bench::new("train_step_simd_mlp");
+    b.case("grad_into (workspace)", || {
+        bb(simd.grad_into(bb(&params), bb(&batch), &mut ws_simd));
+    });
+    b.case("train_step_into (workspace)", || {
+        bb(simd.train_step_into(bb(&params), bb(&h), bb(&batch), 0.05, &mut ws_simd));
+    });
+    // Headline number for the PR trajectory: scalar vs SIMD at equal work
+    // (≈1.0 on CPUs without AVX2, where native-simd falls back to scalar).
+    let speedup = {
+        let reps = 20u32;
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            bb(trainer.grad_into(bb(&params), bb(&batch), &mut ws));
+        }
+        let scalar_ns = t.elapsed().as_nanos() as f64;
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            bb(simd.grad_into(bb(&params), bb(&batch), &mut ws_simd));
+        }
+        scalar_ns / (t.elapsed().as_nanos() as f64).max(1.0)
+    };
+    b.record_metric("simd speedup grad_into (mlp)", speedup, "x");
+    b.finish();
+
     // CNN single step (heavier; fewer samples by config). The CNN config
     // is the acceptance gauge: ≥1.5× steps/s over the PR-3 kernel. Note
     // that `cnn grad` and `cnn grad_into` both run the NEW kernel (grad is
@@ -102,6 +138,17 @@ fn main() {
     });
     b.case("cnn train_step_into (workspace)", || {
         bb(trainer.train_step_into(bb(&params), bb(&h), bb(&batch), 0.05, &mut ws));
+    });
+    b.finish();
+
+    let simd = NativeTrainer::with_kernels(
+        trainer.model().clone(),
+        &fedcomloc::backend::kernels::SIMD,
+    );
+    let mut ws_simd = Workspace::for_model(simd.model(), 32);
+    let mut b = Bench::new("train_step_simd_cnn");
+    b.case("cnn grad_into (workspace)", || {
+        bb(simd.grad_into(bb(&params), bb(&batch), &mut ws_simd));
     });
     b.finish();
 

@@ -63,7 +63,7 @@ fn main() {
         let opts = SweepOptions {
             out_dir: out.clone(),
             threads,
-            trainer: "native".into(),
+            backend: "native".into(),
             ..SweepOptions::default()
         };
         let t0 = Instant::now();

@@ -1,0 +1,138 @@
+//! Minimal bfloat16 conversions for the opt-in bf16 storage modes.
+//!
+//! bf16 is the upper 16 bits of an IEEE-754 f32 (1 sign, 8 exponent,
+//! 7 mantissa bits): same dynamic range as f32, ~2–3 decimal digits of
+//! precision. Conversion here is **round-to-nearest-even** on the
+//! truncated mantissa — the rounding every mainstream bf16 hardware unit
+//! (TPU, AVX-512 BF16, NEON BF16) implements — so values produced by this
+//! software path match what a device with native bf16 storage would hold.
+//!
+//! Two consumers:
+//! * the `native-bf16` backend rounds hidden activations through
+//!   [`round_bf16`] after every layer (logits stay f32) — see
+//!   `backend::kernels::Bf16Kernels`;
+//! * the `bf16` wire codec stores model payloads as raw bf16 halves
+//!   (16 bits/coordinate) — see `compress::bf16`.
+//!
+//! Determinism: conversion is a pure function of the input bits (no RNG,
+//! no flags, no table state), so both consumers are bit-reproducible.
+
+/// Convert one f32 to bf16 bits with round-to-nearest-even.
+///
+/// NaNs are quieted (the top mantissa bit is forced on) so a NaN can never
+/// round to infinity; infinities and zeros pass through exactly.
+#[inline]
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        // Keep the sign, force a quiet NaN payload that survives the
+        // truncation (an all-zero truncated mantissa would read as Inf).
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Round to nearest, ties to even: add 0x7FFF plus the lowest kept
+    // mantissa bit, then truncate. Overflow of the mantissa carries into
+    // the exponent, correctly rounding huge finite values to infinity.
+    let round_bit = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF).wrapping_add(round_bit)) >> 16) as u16
+}
+
+/// Convert bf16 bits back to f32 (exact: bf16 ⊂ f32).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round one f32 onto the bf16 grid (an f32→bf16→f32 round trip).
+#[inline]
+pub fn round_bf16(v: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(v))
+}
+
+/// Round a whole slice onto the bf16 grid in place.
+#[inline]
+pub fn round_slice_bf16(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = round_bf16(*v);
+    }
+}
+
+/// Largest relative rounding error of the bf16 grid for normal values:
+/// half a ulp of a 7-bit mantissa, 2⁻⁸. Used by the tolerance goldens in
+/// `tests/backend_identity.rs` to bound bf16-vs-f32 drift per operation.
+pub const BF16_EPS: f32 = 1.0 / 256.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(round_bf16(v).to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1.0 + 2^-8 sits exactly between 1.0 and the next bf16 (1.0078125);
+        // ties go to even (1.0, whose kept mantissa is even).
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(round_bf16(tie), 1.0);
+        // Just above the tie rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(round_bf16(above), f32::from_bits(0x3F81_0000));
+        // Just below rounds down.
+        let below = f32::from_bits(0x3F80_7FFF);
+        assert_eq!(round_bf16(below), 1.0);
+    }
+
+    #[test]
+    fn relative_error_bounded_by_eps() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let v = rng.normal_f32(0.0, 10.0);
+            let r = round_bf16(v);
+            assert!(
+                (r - v).abs() <= BF16_EPS * v.abs(),
+                "{v} -> {r} (err {})",
+                (r - v).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn nan_stays_nan_and_infinite_overflow() {
+        assert!(round_bf16(f32::NAN).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(-f32::NAN)).is_nan());
+        // Largest finite f32 rounds to +inf on the bf16 grid (its nearest
+        // bf16 neighbour above is out of range).
+        assert_eq!(round_bf16(f32::MAX), f32::INFINITY);
+        assert_eq!(round_bf16(f32::MIN), f32::NEG_INFINITY);
+        // But the largest exact bf16 value stays finite.
+        let max_bf16 = bf16_to_f32(0x7F7F);
+        assert_eq!(round_bf16(max_bf16), max_bf16);
+    }
+
+    #[test]
+    fn sign_preserved_and_idempotent() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(2);
+        for _ in 0..1_000 {
+            let v = rng.normal_f32(0.0, 1.0);
+            let r = round_bf16(v);
+            assert_eq!(r.is_sign_negative(), v.is_sign_negative());
+            // Rounding is a projection: applying it twice changes nothing.
+            assert_eq!(round_bf16(r).to_bits(), r.to_bits());
+        }
+    }
+
+    #[test]
+    fn slice_rounding_matches_scalar() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(3);
+        let xs: Vec<f32> = (0..257).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let mut ys = xs.clone();
+        round_slice_bf16(&mut ys);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(y.to_bits(), round_bf16(*x).to_bits());
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! The micro-kernel vocabulary a native compute plane plugs into the
+//! model walks.
+//!
+//! [`MicroKernels`] is the *inner* interface of the backend layer: the
+//! handful of dense-linear-algebra primitives `Model::forward_into_with` /
+//! `grad_into_with` call per layer, plus the optimizer step and an
+//! activation-storage hook. The outer interface — trainer construction,
+//! codec verbs, registry — is the [`super::Backend`] trait; every native
+//! `Backend` is just a named pair of (key, `&'static dyn MicroKernels`).
+//!
+//! Three implementations ship:
+//! * [`ScalarKernels`] — delegates 1:1 to the canonical loops in
+//!   [`crate::model::ops`] / [`crate::tensor`]. The `native` plane. All
+//!   golden and identity pins are defined against this path.
+//! * [`SimdKernels`] — routes through the AVX2 mirrors in
+//!   [`super::simd`], which are bit-identical to scalar by construction
+//!   (same accumulation order, no FMA) and fall back to the scalar loops
+//!   when AVX2 is absent. The `native-simd` plane.
+//! * [`Bf16Kernels`] — wraps another kernel set and rounds stored hidden
+//!   activations onto the bf16 grid after every non-logit layer via
+//!   [`MicroKernels::store_activations`]. The `native-bf16` plane:
+//!   numerics deliberately differ from f32 (bounded by the tolerance
+//!   goldens in `tests/backend_identity.rs`), so it is opt-in only and
+//!   never selected by `auto`.
+
+use crate::model::ops;
+
+/// Object-safe micro-kernel set used by the native model walks.
+///
+/// Implementations MUST be either bit-identical to [`ScalarKernels`]
+/// (same IEEE operation sequence per output element) or clearly documented
+/// as a different numerics mode with its own tolerance pins — nothing in
+/// between. The bit-identity contract is what lets `native`-family
+/// backends share the repo's seed-level reproducibility goldens.
+pub trait MicroKernels: std::fmt::Debug + Send + Sync {
+    /// Short identifier used in logs and Debug output.
+    fn name(&self) -> &'static str;
+
+    /// C[m×n] += A[m×k]·B[k×n].
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize);
+
+    /// C = A·B with fused `+bias[col]` (+ optional ReLU) epilogue; the
+    /// Dense-layer forward.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    );
+
+    /// C[m×n] = Aᵀ·B with A stored k×m; the weight-gradient orientation.
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize);
+
+    /// C[m×n] = A·Bᵀ with B stored n×k; the input-gradient orientation.
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize);
+
+    /// `matmul_a_bt` with fused `+bias[row]` (+ optional ReLU) epilogue;
+    /// the Conv-layer forward over im2col panels.
+    #[allow(clippy::too_many_arguments)]
+    fn matmul_a_bt_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    );
+
+    /// Optimizer verb: `out = x − γ·(g − h)` (the Scaffnew
+    /// control-variate step). Elementwise, so every implementation is
+    /// bit-identical; overriding is purely a throughput decision.
+    fn apply_step(&self, x: &[f32], g: &[f32], h: &[f32], gamma: f32, out: &mut [f32]) {
+        crate::tensor::sgd_control_variate_step(x, g, h, gamma, out);
+    }
+
+    /// Storage hook applied to each *hidden* activation buffer right after
+    /// a layer writes it (logits are never passed through). The default is
+    /// the identity (full-f32 storage); [`Bf16Kernels`] overrides it to
+    /// round onto the bf16 grid.
+    fn store_activations(&self, _acts: &mut [f32]) {}
+}
+
+/// The canonical scalar plane (`native`): thin delegation to
+/// [`crate::model::ops`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarKernels;
+
+impl MicroKernels for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        ops::matmul_acc(a, b, c, m, k, n);
+    }
+
+    fn matmul_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) {
+        ops::matmul_bias_act(a, b, bias, c, m, k, n, relu);
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        ops::matmul_at_b(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        ops::matmul_a_bt(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) {
+        ops::matmul_a_bt_bias_act(a, b, bias, c, m, k, n, relu);
+    }
+}
+
+/// The wide plane (`native-simd`): AVX2 mirrors of the scalar kernels,
+/// bit-identical by construction (see [`super::simd`] module docs for the
+/// per-kernel argument). Falls back to scalar loops at runtime when AVX2
+/// is unavailable, so it is safe to select unconditionally.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimdKernels;
+
+impl MicroKernels for SimdKernels {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        super::simd::matmul_acc(a, b, c, m, k, n);
+    }
+
+    fn matmul_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) {
+        super::simd::matmul_bias_act(a, b, bias, c, m, k, n, relu);
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        super::simd::matmul_at_b(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        super::simd::matmul_a_bt(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) {
+        super::simd::matmul_a_bt_bias_act(a, b, bias, c, m, k, n, relu);
+    }
+
+    fn apply_step(&self, x: &[f32], g: &[f32], h: &[f32], gamma: f32, out: &mut [f32]) {
+        super::simd::sgd_control_variate_step(x, g, h, gamma, out);
+    }
+}
+
+/// The bf16-storage plane (`native-bf16`): compute stays f32 inside each
+/// kernel, but every hidden activation buffer is rounded onto the bf16
+/// grid before the next layer (and the backward pass) reads it — the
+/// software model of an accelerator holding activations in bf16. Wraps an
+/// inner kernel set for the arithmetic itself; we pin it over
+/// [`ScalarKernels`] so its tolerance goldens are independent of the host's
+/// AVX2 support.
+#[derive(Debug, Clone, Copy)]
+pub struct Bf16Kernels {
+    /// Kernel set performing the actual f32 arithmetic.
+    pub inner: &'static dyn MicroKernels,
+}
+
+impl MicroKernels for Bf16Kernels {
+    fn name(&self) -> &'static str {
+        "bf16-storage"
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        self.inner.matmul_acc(a, b, c, m, k, n);
+    }
+
+    fn matmul_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) {
+        self.inner.matmul_bias_act(a, b, bias, c, m, k, n, relu);
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        self.inner.matmul_at_b(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        self.inner.matmul_a_bt(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt_bias_act(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        bias: &[f32],
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) {
+        self.inner.matmul_a_bt_bias_act(a, b, bias, c, m, k, n, relu);
+    }
+
+    fn apply_step(&self, x: &[f32], g: &[f32], h: &[f32], gamma: f32, out: &mut [f32]) {
+        self.inner.apply_step(x, g, h, gamma, out);
+    }
+
+    fn store_activations(&self, acts: &mut [f32]) {
+        super::bf16::round_slice_bf16(acts);
+    }
+}
+
+/// Shared instance backing the `native` plane.
+pub static SCALAR: ScalarKernels = ScalarKernels;
+/// Shared instance backing the `native-simd` plane.
+pub static SIMD: SimdKernels = SimdKernels;
+/// Shared instance backing the `native-bf16` plane (bf16 storage over
+/// scalar arithmetic).
+pub static BF16: Bf16Kernels = Bf16Kernels { inner: &SCALAR };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_kernels_delegate_to_ops_bitwise() {
+        let mut rng = Rng::seed_from_u64(21);
+        let (m, k, n) = (5, 9, 17);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut c0 = vec![0.0; m * n];
+        let mut c1 = vec![0.0; m * n];
+        ops::matmul_bias_act(&a, &b, &bias, &mut c0, m, k, n, true);
+        SCALAR.matmul_bias_act(&a, &b, &bias, &mut c1, m, k, n, true);
+        assert!(c0.iter().zip(&c1).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn simd_kernels_match_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(22);
+        let (m, k, n) = (6, 13, 31); // remainders on every axis
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bias: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut c0 = vec![0.0; m * n];
+        let mut c1 = vec![0.0; m * n];
+        SCALAR.matmul_a_bt_bias_act(&a, &bt, &bias, &mut c0, m, k, n, true);
+        SIMD.matmul_a_bt_bias_act(&a, &bt, &bias, &mut c1, m, k, n, true);
+        assert!(c0.iter().zip(&c1).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn bf16_storage_hook_rounds_only_on_bf16_plane() {
+        let mut acts = vec![1.0f32 + 1.0 / 512.0; 9]; // off the bf16 grid
+        let copy = acts.clone();
+        SCALAR.store_activations(&mut acts);
+        assert_eq!(acts, copy, "scalar hook must be the identity");
+        SIMD.store_activations(&mut acts);
+        assert_eq!(acts, copy, "simd hook must be the identity");
+        BF16.store_activations(&mut acts);
+        for v in &acts {
+            assert_eq!(*v, 1.0, "ties round to even on the bf16 grid");
+        }
+    }
+
+    #[test]
+    fn apply_step_is_bit_identical_across_planes() {
+        let mut rng = Rng::seed_from_u64(23);
+        let d = 1001;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let g: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut o0 = vec![0.0; d];
+        let mut o1 = vec![0.0; d];
+        let mut o2 = vec![0.0; d];
+        SCALAR.apply_step(&x, &g, &h, 0.21, &mut o0);
+        SIMD.apply_step(&x, &g, &h, 0.21, &mut o1);
+        BF16.apply_step(&x, &g, &h, 0.21, &mut o2);
+        assert!(o0.iter().zip(&o1).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(o0.iter().zip(&o2).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

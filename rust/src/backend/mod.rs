@@ -1,0 +1,344 @@
+//! The compute-plane backend layer: who executes `forward`/`grad`/
+//! `apply_step`, and how.
+//!
+//! FedComLoc's algorithm layer ([`crate::fed`]) only ever talks to a
+//! [`crate::model::LocalTrainer`]. This module owns the *selection* of that
+//! trainer: a [`Backend`] is a named compute plane in a string-keyed open
+//! registry (the same pattern as `AlgorithmSpec` / `ModelSpec` /
+//! `DatasetSpec` / `CompressorSpec`), chosen by the `backend` config key.
+//!
+//! Registered planes:
+//!
+//! | key           | plane                                   | numerics vs `native` |
+//! |---------------|------------------------------------------|----------------------|
+//! | `native`      | scalar [`kernels::ScalarKernels`]        | reference            |
+//! | `native-simd` | AVX2 [`kernels::SimdKernels`]            | **bit-identical**    |
+//! | `native-bf16` | bf16 activation storage over scalar      | tolerance-pinned     |
+//! | `xla`         | AOT HLO via PJRT (`vendor/xla` facade)   | cross-checked        |
+//!
+//! plus the alias `pjrt` → `xla` (the historical `--trainer pjrt` spelling)
+//! and the pseudo-key `auto`, resolved by [`resolve`] to `xla` for the CNN
+//! when artifacts exist and `native` otherwise — exactly the policy
+//! `runtime::build_trainer` hard-coded before this layer existed.
+//!
+//! A backend owns two kinds of verbs:
+//! * the **model-walk verbs** (`forward_into`, `grad_into`, `apply_step`,
+//!   `eval_batch_into`) — reached through the trainer it builds, which for
+//!   native planes routes every layer through a
+//!   [`kernels::MicroKernels`] set;
+//! * the **codec verbs** ([`Backend::pack_topk_keys`],
+//!   [`Backend::quantize_grid`]) — the O(d) scans in front of the TopK
+//!   selection and the stochastic quantizer. These default to the wide
+//!   implementations in [`simd`], which are bit-identical to the scalar
+//!   loops and runtime-gated on AVX2, so *every* backend gets the fast
+//!   scans; the compress layer calls the same helpers directly.
+//!
+//! bf16 is never selected silently: `auto` only ever resolves to `native`
+//! or `xla`, and `native-bf16` must be spelled out in config (it changes
+//! numerics, bounded by the tolerance goldens in
+//! `tests/backend_identity.rs`).
+
+pub mod bf16;
+pub mod kernels;
+pub mod simd;
+
+pub use kernels::{Bf16Kernels, MicroKernels, ScalarKernels, SimdKernels, BF16, SCALAR, SIMD};
+
+use crate::model::{LocalTrainer, Model};
+use std::path::Path;
+use std::sync::Arc;
+
+/// A named compute plane: builds [`LocalTrainer`]s and owns the
+/// codec-side scans. Registered in [`backend_registry`]; selected by the
+/// `backend` config key / `--backend` flag.
+pub trait Backend: Send + Sync {
+    /// Registry key (`native`, `native-simd`, `native-bf16`, `xla`).
+    fn key(&self) -> &'static str;
+
+    /// One-line description for `list-backends` and docs.
+    fn summary(&self) -> &'static str;
+
+    /// Whether this plane is bit-identical to the `native` reference on
+    /// every model walk (and therefore shares its reproducibility pins).
+    fn bit_identical(&self) -> bool;
+
+    /// The micro-kernel set native model walks route through. Non-native
+    /// planes (xla) return the scalar set, which backs their host-side
+    /// fallback paths.
+    fn kernels(&self) -> &'static dyn MicroKernels;
+
+    /// Construct the trainer for `model`. `artifacts_dir` is only
+    /// consulted by artifact-backed planes (xla). Errors are surfaced to
+    /// the caller, which decides the fallback policy.
+    fn build(
+        &self,
+        model: &Model,
+        artifacts_dir: &Path,
+    ) -> Result<Arc<dyn LocalTrainer>, String>;
+
+    /// TopK threshold scan: fill `keys` with the packed sort keys
+    /// `(|x[i]| << 32) | !i` for every coordinate. Default: the wide scan
+    /// in [`simd::pack_topk_keys`] (bit-identical to scalar, AVX2-gated at
+    /// runtime).
+    fn pack_topk_keys(&self, x: &[f32], keys: &mut Vec<u64>) {
+        simd::pack_topk_keys(x, keys);
+    }
+
+    /// Quantization grid: `out[i] = min(|src[i]|/norm, 1)` — the
+    /// normalized magnitudes the stochastic quantizer snaps onto. Default:
+    /// the wide scan in [`simd::quantize_grid`].
+    fn quantize_grid(&self, src: &[f32], norm: f32, out: &mut [f32]) {
+        simd::quantize_grid(src, norm, out);
+    }
+}
+
+/// The three native planes differ only in which kernel set they hand the
+/// model walks, so one struct covers them.
+struct NativeBackend {
+    key: &'static str,
+    summary: &'static str,
+    bit_identical: bool,
+    kernels: &'static dyn MicroKernels,
+}
+
+impl Backend for NativeBackend {
+    fn key(&self) -> &'static str {
+        self.key
+    }
+    fn summary(&self) -> &'static str {
+        self.summary
+    }
+    fn bit_identical(&self) -> bool {
+        self.bit_identical
+    }
+    fn kernels(&self) -> &'static dyn MicroKernels {
+        self.kernels
+    }
+    fn build(
+        &self,
+        model: &Model,
+        _artifacts_dir: &Path,
+    ) -> Result<Arc<dyn LocalTrainer>, String> {
+        Ok(Arc::new(crate::model::native::NativeTrainer::with_kernels(
+            model.clone(),
+            self.kernels,
+        )))
+    }
+}
+
+/// The AOT plane: compiled HLO executed through the PJRT facade. Formerly
+/// a special case inside `runtime::build_trainer`; now just another
+/// registry entry.
+struct XlaBackend;
+
+impl Backend for XlaBackend {
+    fn key(&self) -> &'static str {
+        "xla"
+    }
+    fn summary(&self) -> &'static str {
+        "AOT-compiled HLO via PJRT (requires artifacts/; alias: pjrt)"
+    }
+    fn bit_identical(&self) -> bool {
+        false
+    }
+    fn kernels(&self) -> &'static dyn MicroKernels {
+        &SCALAR
+    }
+    fn build(
+        &self,
+        model: &Model,
+        artifacts_dir: &Path,
+    ) -> Result<Arc<dyn LocalTrainer>, String> {
+        crate::runtime::PjrtTrainer::load(artifacts_dir, model)
+            .map(|t| Arc::new(t) as Arc<dyn LocalTrainer>)
+            .map_err(|e| e.to_string())
+    }
+}
+
+static NATIVE: NativeBackend = NativeBackend {
+    key: "native",
+    summary: "pure-Rust scalar compute plane (the bit-identity reference)",
+    bit_identical: true,
+    kernels: &SCALAR,
+};
+static NATIVE_SIMD: NativeBackend = NativeBackend {
+    key: "native-simd",
+    summary: "explicit AVX2 lanes in the matmul micro-kernels; bit-identical to native",
+    bit_identical: true,
+    kernels: &SIMD,
+};
+static NATIVE_BF16: NativeBackend = NativeBackend {
+    key: "native-bf16",
+    summary: "bf16 activation storage over scalar arithmetic (opt-in; tolerance-pinned)",
+    bit_identical: false,
+    kernels: &BF16,
+};
+static XLA: XlaBackend = XlaBackend;
+
+static REGISTRY: [&dyn Backend; 4] = [&NATIVE, &NATIVE_SIMD, &NATIVE_BF16, &XLA];
+
+/// All registered compute planes, in listing order.
+pub fn backend_registry() -> &'static [&'static dyn Backend] {
+    &REGISTRY
+}
+
+/// Look up a backend by key, resolving the `pjrt` alias. `auto` is not a
+/// backend (see [`resolve`]) and returns `None` here.
+pub fn lookup(key: &str) -> Option<&'static dyn Backend> {
+    let key = if key == "pjrt" { "xla" } else { key };
+    REGISTRY.iter().copied().find(|b| b.key() == key)
+}
+
+/// Validate and canonicalize a user-supplied backend key: trims, resolves
+/// the `pjrt` alias, accepts the pseudo-key `auto`, and rejects anything
+/// not in the registry with a message listing the known keys.
+pub fn canonical_backend_key(key: &str) -> Result<String, String> {
+    let k = key.trim();
+    let k = if k == "pjrt" { "xla" } else { k };
+    if k == "auto" {
+        return Ok("auto".to_string());
+    }
+    if lookup(k).is_some() {
+        Ok(k.to_string())
+    } else {
+        let known: Vec<&str> = REGISTRY.iter().map(|b| b.key()).collect();
+        Err(format!(
+            "unknown backend `{key}` (known: auto, {}, pjrt)",
+            known.join(", ")
+        ))
+    }
+}
+
+/// Resolve a requested backend key to a concrete registry key for `model`.
+///
+/// `auto` (and the empty string) keep the historical trainer policy: the
+/// XLA plane for the CNN when artifacts are present — measured faster for
+/// convolutions in EXPERIMENTS.md §Perf — and the scalar native plane for
+/// everything else. `auto` never resolves to a plane whose numerics differ
+/// silently (`native-bf16` must be requested explicitly). Unknown keys
+/// warn and fall back to the `auto` policy, matching the old permissive
+/// `--trainer` parsing.
+pub fn resolve(requested: &str, model: &Model, artifacts_ok: bool) -> &'static str {
+    let req = if requested == "pjrt" { "xla" } else { requested };
+    if !req.is_empty() && req != "auto" {
+        if let Some(b) = lookup(req) {
+            return b.key();
+        }
+        log::warn!("unknown backend `{requested}`; using the auto policy");
+    }
+    if model.artifact_name() == "cnn" && artifacts_ok {
+        "xla"
+    } else {
+        "native"
+    }
+}
+
+/// Combine the per-run config key with the CLI/default option: an explicit
+/// config `backend` wins; `auto` (the config default) defers to the
+/// option, so `--backend` keeps working for runs that don't pin a plane.
+pub fn effective_backend<'a>(cfg_backend: &'a str, opt_backend: &'a str) -> &'a str {
+    if !cfg_backend.is_empty() && cfg_backend != "auto" {
+        cfg_backend
+    } else {
+        opt_backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    #[test]
+    fn registry_keys_are_stable_and_unique() {
+        let keys: Vec<&str> = backend_registry().iter().map(|b| b.key()).collect();
+        assert_eq!(keys, vec!["native", "native-simd", "native-bf16", "xla"]);
+    }
+
+    #[test]
+    fn lookup_resolves_the_pjrt_alias() {
+        assert_eq!(lookup("pjrt").unwrap().key(), "xla");
+        assert_eq!(lookup("native-simd").unwrap().key(), "native-simd");
+        assert!(lookup("auto").is_none());
+        assert!(lookup("cuda").is_none());
+    }
+
+    #[test]
+    fn canonicalization_accepts_known_and_rejects_unknown() {
+        assert_eq!(canonical_backend_key("auto").unwrap(), "auto");
+        assert_eq!(canonical_backend_key(" native-simd ").unwrap(), "native-simd");
+        assert_eq!(canonical_backend_key("pjrt").unwrap(), "xla");
+        let err = canonical_backend_key("gpu").unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
+        assert!(err.contains("native-simd"), "{err}");
+    }
+
+    #[test]
+    fn auto_policy_matches_the_historical_trainer_policy() {
+        let mlp = ModelSpec::parse("mlp").unwrap().build();
+        let cnn = ModelSpec::parse("cnn").unwrap().build();
+        assert_eq!(resolve("auto", &mlp, true), "native");
+        assert_eq!(resolve("auto", &cnn, false), "native");
+        assert_eq!(resolve("auto", &cnn, true), "xla");
+        assert_eq!(resolve("native", &cnn, true), "native");
+        assert_eq!(resolve("native-simd", &mlp, false), "native-simd");
+        assert_eq!(resolve("pjrt", &mlp, false), "xla");
+        // Unknown keys keep the old permissive fallback-to-auto behaviour.
+        assert_eq!(resolve("not-a-backend", &mlp, false), "native");
+    }
+
+    #[test]
+    fn auto_never_resolves_to_a_numerics_changing_plane() {
+        let mlp = ModelSpec::parse("mlp").unwrap().build();
+        let cnn = ModelSpec::parse("cnn").unwrap().build();
+        for (model, artifacts) in [(&mlp, false), (&mlp, true), (&cnn, false), (&cnn, true)] {
+            let key = resolve("auto", model, artifacts);
+            let b = lookup(key).unwrap();
+            assert!(
+                b.bit_identical() || b.key() == "xla",
+                "auto resolved to silent-numerics plane {key}"
+            );
+            assert_ne!(key, "native-bf16");
+        }
+    }
+
+    #[test]
+    fn effective_backend_prefers_explicit_config() {
+        assert_eq!(effective_backend("native-simd", "auto"), "native-simd");
+        assert_eq!(effective_backend("auto", "native"), "native");
+        assert_eq!(effective_backend("", "xla"), "xla");
+    }
+
+    #[test]
+    fn native_backends_build_trainers_with_their_kernel_sets() {
+        let model = ModelSpec::parse("mlp").unwrap().build();
+        let dir = std::path::Path::new("/nonexistent");
+        for key in ["native", "native-simd", "native-bf16"] {
+            let b = lookup(key).unwrap();
+            let t = b.build(&model, dir).expect("native planes always build");
+            assert_eq!(t.dim(), model.layout.dim);
+        }
+        // The xla plane surfaces its error instead of silently falling back.
+        assert!(XLA.build(&model, dir).is_err());
+    }
+
+    #[test]
+    fn codec_verbs_match_the_scalar_reference() {
+        let b = lookup("native-simd").unwrap();
+        let x = [0.5f32, -2.0, 0.0, 3.5, -0.25];
+        let mut keys = Vec::new();
+        b.pack_topk_keys(&x, &mut keys);
+        let reference: Vec<u64> = x
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64)
+            .collect();
+        assert_eq!(keys, reference);
+        let norm = crate::tensor::norm2(&x);
+        let mut grid = vec![0.0; x.len()];
+        b.quantize_grid(&x, norm, &mut grid);
+        for (g, &v) in grid.iter().zip(x.iter()) {
+            assert_eq!(g.to_bits(), (v.abs() / norm).min(1.0).to_bits());
+        }
+    }
+}

@@ -1,0 +1,804 @@
+//! Explicit AVX2 vectorizations of the compute-plane hot loops.
+//!
+//! Every function here is a **bit-identical** reimplementation of a scalar
+//! loop elsewhere in the crate: same accumulation order, same rounding,
+//! same NaN/signed-zero behaviour. That invariant is what lets the
+//! `native-simd` backend share the seed-level reproducibility pins
+//! (`api_regression.rs`, `workspace_identity.rs`, threads-1 ≡ threads-N)
+//! with the scalar `native` plane, and what lets the codec scans below be
+//! enabled unconditionally (there is no numerical difference to opt into).
+//!
+//! How identity is preserved, kernel by kernel:
+//!
+//! * **4×16 matmul tiles** (`ops::acc_rows4` and friends): the scalar
+//!   kernel already keeps 16 independent f32 accumulators per row and adds
+//!   one `a·b` product into each per k step. Two 8-lane vectors hold those
+//!   16 accumulators; a broadcast-multiply-add performs the same 16
+//!   lanewise `t[l] += x * b[l]` operations. Addition and multiplication
+//!   are IEEE-exact per lane, so each accumulator sees the identical
+//!   sequence of rounded operations. We deliberately do **not** use FMA:
+//!   fused multiply-add skips the intermediate rounding and would change
+//!   bits.
+//! * **Lane-split dot products** (`ops::dot_lanes`): the scalar code
+//!   accumulates into 8 lanes (`acc[l] += a[i+l] * b[i+l]`) and combines
+//!   with a fixed tree. The vector version keeps one 8-lane accumulator,
+//!   spills it to an array, and applies the *same* combine tree in scalar
+//!   code.
+//! * **Fused bias+ReLU epilogues**: scalar computes `s = v + bias` then
+//!   `if s < 0.0 { 0.0 } else { s }`. Vector: lanewise add, then
+//!   `andnot(s < 0, s)`. The comparison `_CMP_LT_OQ` is false for NaN and
+//!   for `-0.0 < 0.0`, so NaN and −0.0 pass through unchanged — exactly
+//!   the scalar branch's behaviour.
+//! * **TopK key pack** (`compress::topk::select_topk_into`): the packed
+//!   sort key `(|x|.to_bits() << 32) | !i` is pure bit manipulation; the
+//!   vector path ANDs out the sign bit, XORs the index, and interleaves
+//!   32-bit halves into the same little-endian u64 layout.
+//! * **Quantization grid** (`compress::quantize`): `min(|x|/norm, 1.0)` is
+//!   elementwise; division and `min` are IEEE-exact per lane
+//!   (`_mm256_min_ps(y, 1.0)` returns `1.0` for NaN `y`, matching
+//!   `f32::min`'s NaN fallback to the other operand).
+//!
+//! All wide paths fall back to the scalar formulation when AVX2 is absent
+//! at runtime (detected once, cached), on non-x86_64 targets, or for
+//! remainder elements — the fallbacks *are* the reference loops, restated,
+//! and the unit tests below pin vector ≡ scalar across remainder-heavy
+//! shapes.
+
+#![allow(unsafe_code)]
+
+/// Whether the wide (AVX2) paths are usable on this machine.
+///
+/// Detected once per process and cached; the answer never changes at
+/// runtime. On non-x86_64 builds this is always `false` and every entry
+/// point below runs its scalar reference loop.
+#[inline]
+pub fn wide_lanes_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Human-readable description of the active wide path, for logs and docs.
+pub fn lane_description() -> &'static str {
+    if wide_lanes_available() {
+        "avx2 (8 × f32 lanes)"
+    } else {
+        "scalar fallback (no avx2)"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matmul micro-kernels (the 4×16 register-blocked tiles from model/ops).
+// ---------------------------------------------------------------------------
+
+/// C[m×n] += A[m×k]·B[k×n], vectorized tile walk. Bit-identical to
+/// `ops::matmul_acc`.
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() {
+        unsafe { avx2::matmul_acc(a, b, c, m, k, n) };
+        return;
+    }
+    crate::model::ops::matmul_acc(a, b, c, m, k, n);
+}
+
+/// C = A·B then fused `c = relu(c + bias[col])` epilogue (bias length n,
+/// broadcast down rows). Bit-identical to `ops::matmul_bias_act`.
+pub fn matmul_bias_act(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() {
+        for v in c.iter_mut() {
+            *v = 0.0;
+        }
+        unsafe {
+            avx2::matmul_acc(a, b, c, m, k, n);
+            avx2::bias_act_cols(c, bias, m, n, relu);
+        }
+        return;
+    }
+    crate::model::ops::matmul_bias_act(a, b, bias, c, m, k, n, relu);
+}
+
+/// C[m×n] = Aᵀ[m×k]·B[k×n] where A is stored k×m. Bit-identical to
+/// `ops::matmul_at_b`.
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() {
+        unsafe { avx2::matmul_at_b(a, b, c, m, k, n) };
+        return;
+    }
+    crate::model::ops::matmul_at_b(a, b, c, m, k, n);
+}
+
+/// C[m×n] = A[m×k]·Bᵀ where B is stored n×k (row-major rows of length k).
+/// Bit-identical to `ops::matmul_a_bt`.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() {
+        unsafe { avx2::matmul_a_bt(a, b, c, m, k, n) };
+        return;
+    }
+    crate::model::ops::matmul_a_bt(a, b, c, m, k, n);
+}
+
+/// `matmul_a_bt` with fused per-row `relu(c + bias[row])` epilogue (bias
+/// length m). Bit-identical to `ops::matmul_a_bt_bias_act`.
+pub fn matmul_a_bt_bias_act(
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() {
+        unsafe {
+            avx2::matmul_a_bt(a, b, c, m, k, n);
+            avx2::bias_act_rows(c, bias, m, n, relu);
+        }
+        return;
+    }
+    crate::model::ops::matmul_a_bt_bias_act(a, b, bias, c, m, k, n, relu);
+}
+
+/// `out = x − γ·(g − h)`, the Scaffnew control-variate step. Elementwise,
+/// so lanewise IEEE arithmetic is bit-identical to
+/// `tensor::sgd_control_variate_step`.
+pub fn sgd_control_variate_step(x: &[f32], g: &[f32], h: &[f32], gamma: f32, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() {
+        unsafe { avx2::sgd_control_variate_step(x, g, h, gamma, out) };
+        return;
+    }
+    crate::tensor::sgd_control_variate_step(x, g, h, gamma, out);
+}
+
+// ---------------------------------------------------------------------------
+// Codec scans (TopK threshold keys, quantization grid).
+// ---------------------------------------------------------------------------
+
+/// Fill `keys` with the packed TopK sort keys
+/// `(|x[i]|.to_bits() << 32) | !(i as u32)` for every coordinate.
+///
+/// This is the O(d) scan in front of `select_nth_unstable_by`; key order in
+/// the vector is irrelevant downstream (selection has set semantics), but
+/// we produce ascending order anyway so the scalar and wide paths are
+/// byte-identical. Clears `keys` first; capacity is reused.
+pub fn pack_topk_keys(x: &[f32], keys: &mut Vec<u64>) {
+    keys.clear();
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() && x.len() <= i32::MAX as usize {
+        keys.resize(x.len(), 0);
+        unsafe { avx2::pack_topk_keys(x, keys) };
+        return;
+    }
+    keys.extend(
+        x.iter()
+            .enumerate()
+            .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64),
+    );
+}
+
+/// `out[i] = min(|src[i]| / norm, 1.0)` — the normalized-magnitude grid the
+/// stochastic quantizer snaps onto. `out.len()` must equal `src.len()`.
+pub fn quantize_grid(src: &[f32], norm: f32, out: &mut [f32]) {
+    assert_eq!(src.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if wide_lanes_available() {
+        unsafe { avx2::quantize_grid(src, norm, out) };
+        return;
+    }
+    for (o, &v) in out.iter_mut().zip(src.iter()) {
+        *o = (v.abs() / norm).min(1.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The AVX2 bodies. Each function mirrors one scalar loop; comments point at
+// the reference. `#[target_feature]` keeps them safe to compile everywhere
+// and gated behind the runtime check above.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Tile width of the register block (matches `ops::NR`).
+    const NR: usize = 16;
+    /// Lane-split width of the dot-product kernels (matches `ops::DL`).
+    const DL: usize = 8;
+
+    /// Lanewise `t += x * b` without FMA (two roundings, like scalar code).
+    #[inline(always)]
+    unsafe fn mul_add(t: __m256, x: __m256, b: __m256) -> __m256 {
+        _mm256_add_ps(t, _mm256_mul_ps(x, b))
+    }
+
+    /// Lanewise `relu(s)` that keeps NaN and −0.0, matching the scalar
+    /// branch `if s < 0.0 { 0.0 } else { s }`.
+    #[inline(always)]
+    unsafe fn relu_lanes(s: __m256) -> __m256 {
+        let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(s, _mm256_setzero_ps());
+        _mm256_andnot_ps(neg, s)
+    }
+
+    /// See `ops::matmul_acc` / `ops::acc_rows4`: 4-row × 16-column tiles,
+    /// ascending-k accumulation, with the same scalar tail handling for
+    /// row remainders (m % 4) and column remainders (n % 16).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mut i = 0;
+        while i + 4 <= m {
+            acc_rows4(&a[i * k..], b, c, i, k, n);
+            i += 4;
+        }
+        while i < m {
+            acc_row1(&a[i * k..(i + 1) * k], b, &mut c[i * n..(i + 1) * n], k, n);
+            i += 1;
+        }
+    }
+
+    /// Four rows at once over 16-wide column tiles (two __m256 per row).
+    #[target_feature(enable = "avx2")]
+    unsafe fn acc_rows4(a4: &[f32], b: &[f32], c: &mut [f32], i0: usize, k: usize, n: usize) {
+        let mut j = 0;
+        while j + NR <= n {
+            // 4 rows × 2 vectors of accumulators, loaded from C.
+            let mut t: [[__m256; 2]; 4] = [[_mm256_setzero_ps(); 2]; 4];
+            for (r, tr) in t.iter_mut().enumerate() {
+                let row = &c[(i0 + r) * n + j..];
+                tr[0] = _mm256_loadu_ps(row.as_ptr());
+                tr[1] = _mm256_loadu_ps(row.as_ptr().add(8));
+            }
+            for kk in 0..k {
+                let br = &b[kk * n + j..];
+                let b0 = _mm256_loadu_ps(br.as_ptr());
+                let b1 = _mm256_loadu_ps(br.as_ptr().add(8));
+                for (r, tr) in t.iter_mut().enumerate() {
+                    let x = _mm256_set1_ps(a4[r * k + kk]);
+                    tr[0] = mul_add(tr[0], x, b0);
+                    tr[1] = mul_add(tr[1], x, b1);
+                }
+            }
+            for (r, tr) in t.iter().enumerate() {
+                let row = &mut c[(i0 + r) * n + j..];
+                _mm256_storeu_ps(row.as_mut_ptr(), tr[0]);
+                _mm256_storeu_ps(row.as_mut_ptr().add(8), tr[1]);
+            }
+            j += NR;
+        }
+        if j < n {
+            // Column tail: exact copy of the scalar tail in ops::acc_rows4.
+            let w = n - j;
+            let mut t = [[0.0f32; NR]; 4];
+            for r in 0..4 {
+                t[r][..w].copy_from_slice(&c[(i0 + r) * n + j..(i0 + r) * n + j + w]);
+            }
+            for kk in 0..k {
+                let br = &b[kk * n + j..kk * n + j + w];
+                for r in 0..4 {
+                    let x = a4[r * k + kk];
+                    for (l, &bv) in br.iter().enumerate() {
+                        t[r][l] += x * bv;
+                    }
+                }
+            }
+            for r in 0..4 {
+                c[(i0 + r) * n + j..(i0 + r) * n + j + w].copy_from_slice(&t[r][..w]);
+            }
+        }
+    }
+
+    /// Single-row remainder of `matmul_acc` (mirrors `ops::acc_row1`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn acc_row1(a1: &[f32], b: &[f32], crow: &mut [f32], k: usize, n: usize) {
+        let mut j = 0;
+        while j + NR <= n {
+            let mut t0 = _mm256_loadu_ps(crow.as_ptr().add(j));
+            let mut t1 = _mm256_loadu_ps(crow.as_ptr().add(j + 8));
+            for (kk, &av) in a1.iter().enumerate().take(k) {
+                let br = &b[kk * n + j..];
+                let x = _mm256_set1_ps(av);
+                t0 = mul_add(t0, x, _mm256_loadu_ps(br.as_ptr()));
+                t1 = mul_add(t1, x, _mm256_loadu_ps(br.as_ptr().add(8)));
+            }
+            _mm256_storeu_ps(crow.as_mut_ptr().add(j), t0);
+            _mm256_storeu_ps(crow.as_mut_ptr().add(j + 8), t1);
+            j += NR;
+        }
+        if j < n {
+            let w = n - j;
+            let mut t = [0.0f32; NR];
+            t[..w].copy_from_slice(&crow[j..j + w]);
+            for (kk, &x) in a1.iter().enumerate().take(k) {
+                let br = &b[kk * n + j..kk * n + j + w];
+                for (l, &bv) in br.iter().enumerate() {
+                    t[l] += x * bv;
+                }
+            }
+            crow[j..j + w].copy_from_slice(&t[..w]);
+        }
+    }
+
+    /// See `ops::matmul_at_b`: A is stored k×m (strided reads down a
+    /// column become broadcasts of `a[kk*m + i + r]`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        for v in c.iter_mut() {
+            *v = 0.0;
+        }
+        let mut i = 0;
+        while i + 4 <= m {
+            at_b_rows4(a, b, c, i, m, k, n);
+            i += 4;
+        }
+        while i < m {
+            at_b_row1(a, b, c, i, m, k, n);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn at_b_rows4(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, m: usize, k: usize, n: usize) {
+        let mut j = 0;
+        while j + NR <= n {
+            let mut t: [[__m256; 2]; 4] = [[_mm256_setzero_ps(); 2]; 4];
+            for kk in 0..k {
+                let ar = &a[kk * m + i0..kk * m + i0 + 4];
+                let br = &b[kk * n + j..];
+                let b0 = _mm256_loadu_ps(br.as_ptr());
+                let b1 = _mm256_loadu_ps(br.as_ptr().add(8));
+                for (r, tr) in t.iter_mut().enumerate() {
+                    let x = _mm256_set1_ps(ar[r]);
+                    tr[0] = mul_add(tr[0], x, b0);
+                    tr[1] = mul_add(tr[1], x, b1);
+                }
+            }
+            for (r, tr) in t.iter().enumerate() {
+                let row = &mut c[(i0 + r) * n + j..];
+                _mm256_storeu_ps(row.as_mut_ptr(), tr[0]);
+                _mm256_storeu_ps(row.as_mut_ptr().add(8), tr[1]);
+            }
+            j += NR;
+        }
+        if j < n {
+            let w = n - j;
+            let mut t = [[0.0f32; NR]; 4];
+            for kk in 0..k {
+                let ar = &a[kk * m + i0..kk * m + i0 + 4];
+                let br = &b[kk * n + j..kk * n + j + w];
+                for r in 0..4 {
+                    for (l, &bv) in br.iter().enumerate() {
+                        t[r][l] += ar[r] * bv;
+                    }
+                }
+            }
+            for r in 0..4 {
+                c[(i0 + r) * n + j..(i0 + r) * n + j + w].copy_from_slice(&t[r][..w]);
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn at_b_row1(a: &[f32], b: &[f32], c: &mut [f32], i: usize, m: usize, k: usize, n: usize) {
+        let mut j = 0;
+        while j + NR <= n {
+            let mut t0 = _mm256_setzero_ps();
+            let mut t1 = _mm256_setzero_ps();
+            for kk in 0..k {
+                let x = _mm256_set1_ps(a[kk * m + i]);
+                let br = &b[kk * n + j..];
+                t0 = mul_add(t0, x, _mm256_loadu_ps(br.as_ptr()));
+                t1 = mul_add(t1, x, _mm256_loadu_ps(br.as_ptr().add(8)));
+            }
+            _mm256_storeu_ps(c.as_mut_ptr().add(i * n + j), t0);
+            _mm256_storeu_ps(c.as_mut_ptr().add(i * n + j + 8), t1);
+            j += NR;
+        }
+        if j < n {
+            let w = n - j;
+            let mut t = [0.0f32; NR];
+            for kk in 0..k {
+                let x = a[kk * m + i];
+                let br = &b[kk * n + j..kk * n + j + w];
+                for (l, &bv) in br.iter().enumerate() {
+                    t[l] += x * bv;
+                }
+            }
+            c[i * n + j..i * n + j + w].copy_from_slice(&t[..w]);
+        }
+    }
+
+    /// The 8-way lane-split dot product of `ops::dot_lanes`, with the same
+    /// fixed combine tree. One vector accumulator replaces the 8 scalar
+    /// lanes; the spill + tree reduction reproduces the scalar combine
+    /// bit-for-bit.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_lanes(a: &[f32], b: &[f32], k: usize) -> f32 {
+        let mut accv = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + DL <= k {
+            accv = mul_add(
+                accv,
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            i += DL;
+        }
+        let mut acc = [0.0f32; DL];
+        _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+        // Same combine tree as ops::dot_lanes.
+        let mut s = ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+        while i < k {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// See `ops::matmul_a_bt`: B stored n×k, each output is a dot of two
+    /// contiguous length-k rows. Walks 4 A-rows at a time like the scalar
+    /// `dot_lanes4` grouping (the per-output arithmetic is independent, so
+    /// row grouping affects only locality, not bits).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        let mut i = 0;
+        while i + 4 <= m {
+            let (a0, a1, a2, a3) = (
+                &a[i * k..(i + 1) * k],
+                &a[(i + 1) * k..(i + 2) * k],
+                &a[(i + 2) * k..(i + 3) * k],
+                &a[(i + 3) * k..(i + 4) * k],
+            );
+            for j in 0..n {
+                let br = &b[j * k..(j + 1) * k];
+                c[i * n + j] = dot_lanes(a0, br, k);
+                c[(i + 1) * n + j] = dot_lanes(a1, br, k);
+                c[(i + 2) * n + j] = dot_lanes(a2, br, k);
+                c[(i + 3) * n + j] = dot_lanes(a3, br, k);
+            }
+            i += 4;
+        }
+        while i < m {
+            let ar = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                c[i * n + j] = dot_lanes(ar, &b[j * k..(j + 1) * k], k);
+            }
+            i += 1;
+        }
+    }
+
+    /// Column-broadcast epilogue: `c[i][j] = relu(c[i][j] + bias[j])`
+    /// (bias length n). Mirrors the loop in `ops::matmul_bias_act`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bias_act_cols(c: &mut [f32], bias: &[f32], m: usize, n: usize, relu: bool) {
+        debug_assert_eq!(bias.len(), n);
+        for i in 0..m {
+            let row = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + 8 <= n {
+                let s = _mm256_add_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(j)),
+                    _mm256_loadu_ps(bias.as_ptr().add(j)),
+                );
+                let s = if relu { relu_lanes(s) } else { s };
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), s);
+                j += 8;
+            }
+            while j < n {
+                let s = row[j] + bias[j];
+                row[j] = if relu && s < 0.0 { 0.0 } else { s };
+                j += 1;
+            }
+        }
+    }
+
+    /// Row-broadcast epilogue: `c[i][j] = relu(c[i][j] + bias[i])`
+    /// (bias length m). Mirrors the loop in `ops::matmul_a_bt_bias_act`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bias_act_rows(c: &mut [f32], bias: &[f32], m: usize, n: usize, relu: bool) {
+        debug_assert_eq!(bias.len(), m);
+        for i in 0..m {
+            let bv = bias[i];
+            let bvv = _mm256_set1_ps(bv);
+            let row = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + 8 <= n {
+                let s = _mm256_add_ps(_mm256_loadu_ps(row.as_ptr().add(j)), bvv);
+                let s = if relu { relu_lanes(s) } else { s };
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), s);
+                j += 8;
+            }
+            while j < n {
+                let s = row[j] + bv;
+                row[j] = if relu && s < 0.0 { 0.0 } else { s };
+                j += 1;
+            }
+        }
+    }
+
+    /// Elementwise `out = x − γ·(g − h)` (see
+    /// `tensor::sgd_control_variate_step`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sgd_control_variate_step(
+        x: &[f32],
+        g: &[f32],
+        h: &[f32],
+        gamma: f32,
+        out: &mut [f32],
+    ) {
+        let d = out.len();
+        debug_assert!(x.len() == d && g.len() == d && h.len() == d);
+        let gv = _mm256_set1_ps(gamma);
+        let mut i = 0;
+        while i + 8 <= d {
+            let diff = _mm256_sub_ps(
+                _mm256_loadu_ps(g.as_ptr().add(i)),
+                _mm256_loadu_ps(h.as_ptr().add(i)),
+            );
+            let step = _mm256_mul_ps(gv, diff);
+            let r = _mm256_sub_ps(_mm256_loadu_ps(x.as_ptr().add(i)), step);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < d {
+            out[i] = x[i] - gamma * (g[i] - h[i]);
+            i += 1;
+        }
+    }
+
+    /// Packed TopK sort keys (see `pack_topk_keys` above): per coordinate,
+    /// `(|x|.to_bits() << 32) | !i`, stored in index order.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_topk_keys(x: &[f32], keys: &mut [u64]) {
+        debug_assert_eq!(x.len(), keys.len());
+        let abs_mask = _mm256_set1_epi32(0x7FFF_FFFF);
+        let all_ones = _mm256_set1_epi32(-1);
+        let iota = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let d = x.len();
+        let mut i = 0;
+        while i + 8 <= d {
+            let v = _mm256_castps_si256(_mm256_loadu_ps(x.as_ptr().add(i)));
+            let mag = _mm256_and_si256(v, abs_mask);
+            let idx = _mm256_add_epi32(iota, _mm256_set1_epi32(i as i32));
+            let ninv = _mm256_xor_si256(idx, all_ones);
+            // Interleave (¬idx, mag) pairs: little-endian u64 = ¬idx | mag<<32.
+            let lo = _mm256_unpacklo_epi32(ninv, mag); // pairs 0,1 | 4,5
+            let hi = _mm256_unpackhi_epi32(ninv, mag); // pairs 2,3 | 6,7
+            let k0 = _mm256_permute2x128_si256::<0x20>(lo, hi); // keys 0..4
+            let k1 = _mm256_permute2x128_si256::<0x31>(lo, hi); // keys 4..8
+            _mm256_storeu_si256(keys.as_mut_ptr().add(i) as *mut __m256i, k0);
+            _mm256_storeu_si256(keys.as_mut_ptr().add(i + 4) as *mut __m256i, k1);
+            i += 8;
+        }
+        while i < d {
+            keys[i] = ((x[i].abs().to_bits() as u64) << 32) | (!(i as u32)) as u64;
+            i += 1;
+        }
+    }
+
+    /// `out[i] = min(|src[i]| / norm, 1.0)` (see `quantize_grid` above).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_grid(src: &[f32], norm: f32, out: &mut [f32]) {
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let nv = _mm256_set1_ps(norm);
+        let one = _mm256_set1_ps(1.0);
+        let d = src.len();
+        let mut i = 0;
+        while i + 8 <= d {
+            let v = _mm256_and_ps(_mm256_loadu_ps(src.as_ptr().add(i)), abs_mask);
+            let y = _mm256_div_ps(v, nv);
+            // min_ps(y, 1) returns 1 when y is NaN — same as f32::min.
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_min_ps(y, one));
+            i += 8;
+        }
+        while i < d {
+            out[i] = (src[i].abs() / norm).min(1.0);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ops;
+    use crate::util::rng::Rng;
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    // Shapes chosen to exercise full tiles, column tails (n % 16), row
+    // remainders (m % 4) and lane tails (k % 8) in every combination.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (4, 8, 16),
+        (5, 9, 17),
+        (3, 7, 15),
+        (8, 40, 33),
+        (6, 13, 31),
+        (9, 24, 16),
+    ];
+
+    #[test]
+    fn matmul_acc_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(11);
+        for &(m, k, n) in SHAPES {
+            let a = fill(&mut rng, m * k);
+            let b = fill(&mut rng, k * n);
+            let seed = fill(&mut rng, m * n);
+            let mut c_s = seed.clone();
+            let mut c_v = seed.clone();
+            ops::matmul_acc(&a, &b, &mut c_s, m, k, n);
+            matmul_acc(&a, &b, &mut c_v, m, k, n);
+            assert!(
+                c_s.iter().zip(&c_v).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "matmul_acc diverged at shape {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_bias_act_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(12);
+        for &(m, k, n) in SHAPES {
+            for relu in [false, true] {
+                let a = fill(&mut rng, m * k);
+                let b = fill(&mut rng, k * n);
+                let bias = fill(&mut rng, n);
+                let mut c_s = vec![0.0; m * n];
+                let mut c_v = vec![0.0; m * n];
+                ops::matmul_bias_act(&a, &b, &bias, &mut c_s, m, k, n, relu);
+                matmul_bias_act(&a, &b, &bias, &mut c_v, m, k, n, relu);
+                assert!(
+                    c_s.iter().zip(&c_v).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "matmul_bias_act diverged at {m}x{k}x{n} relu={relu}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(13);
+        for &(m, k, n) in SHAPES {
+            let a = fill(&mut rng, k * m);
+            let b = fill(&mut rng, k * n);
+            let mut c_s = vec![1.0; m * n]; // pre-poisoned: both paths overwrite
+            let mut c_v = vec![2.0; m * n];
+            ops::matmul_at_b(&a, &b, &mut c_s, m, k, n);
+            matmul_at_b(&a, &b, &mut c_v, m, k, n);
+            assert!(
+                c_s.iter().zip(&c_v).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "matmul_at_b diverged at {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_a_bt_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(14);
+        for &(m, k, n) in SHAPES {
+            for relu in [false, true] {
+                let a = fill(&mut rng, m * k);
+                let b = fill(&mut rng, n * k);
+                let bias = fill(&mut rng, m);
+                let mut c_s = vec![0.0; m * n];
+                let mut c_v = vec![0.0; m * n];
+                ops::matmul_a_bt(&a, &b, &mut c_s, m, k, n);
+                matmul_a_bt(&a, &b, &mut c_v, m, k, n);
+                assert!(
+                    c_s.iter().zip(&c_v).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "matmul_a_bt diverged at {m}x{k}x{n}"
+                );
+                ops::matmul_a_bt_bias_act(&a, &b, &bias, &mut c_s, m, k, n, relu);
+                matmul_a_bt_bias_act(&a, &b, &bias, &mut c_v, m, k, n, relu);
+                assert!(
+                    c_s.iter().zip(&c_v).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "matmul_a_bt_bias_act diverged at {m}x{k}x{n} relu={relu}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relu_edge_cases_match_scalar() {
+        // −0.0 and exact zeros must survive the vector ReLU exactly like
+        // the scalar branch (neither is `< 0.0`, hence both are kept).
+        // m=1, k=1, n=16 with A=[1] makes C a copy of B plus bias.
+        let xs: Vec<f32> = vec![
+            -0.0, 0.0, 1.0, -1.0, f32::MIN_POSITIVE, -f32::MIN_POSITIVE, 0.5, -0.5, 2.0, -2.0,
+            3.0, -3.0, 4.0, -4.0, 5.0, -5.0,
+        ];
+        let ident = [1.0f32];
+        let bias = vec![0.0f32; 16];
+        let mut c_s = vec![0.0; 16];
+        let mut c_v = vec![0.0; 16];
+        ops::matmul_bias_act(&ident, &xs, &bias, &mut c_s, 1, 1, 16, true);
+        matmul_bias_act(&ident, &xs, &bias, &mut c_v, 1, 1, 16, true);
+        assert!(c_s.iter().zip(&c_v).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn sgd_step_matches_scalar_bitwise() {
+        let mut rng = Rng::seed_from_u64(15);
+        for d in [1, 7, 8, 9, 64, 1001] {
+            let x = fill(&mut rng, d);
+            let g = fill(&mut rng, d);
+            let h = fill(&mut rng, d);
+            let mut o_s = vec![0.0; d];
+            let mut o_v = vec![0.0; d];
+            crate::tensor::sgd_control_variate_step(&x, &g, &h, 0.37, &mut o_s);
+            sgd_control_variate_step(&x, &g, &h, 0.37, &mut o_v);
+            assert!(o_s.iter().zip(&o_v).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn topk_keys_match_scalar_reference() {
+        let mut rng = Rng::seed_from_u64(16);
+        for d in [0, 1, 7, 8, 9, 16, 100, 1000] {
+            let x = fill(&mut rng, d);
+            let reference: Vec<u64> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64)
+                .collect();
+            let mut keys = Vec::new();
+            pack_topk_keys(&x, &mut keys);
+            assert_eq!(keys, reference, "key pack diverged at d={d}");
+        }
+    }
+
+    #[test]
+    fn quantize_grid_matches_scalar_reference() {
+        let mut rng = Rng::seed_from_u64(17);
+        for d in [1, 7, 8, 9, 100, 1025] {
+            let x = fill(&mut rng, d);
+            let norm = crate::tensor::norm2(&x);
+            let reference: Vec<f32> = x.iter().map(|&v| (v.abs() / norm).min(1.0)).collect();
+            let mut out = vec![0.0; d];
+            quantize_grid(&x, norm, &mut out);
+            assert!(
+                reference.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "grid diverged at d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_description_is_stable() {
+        // Smoke: the description reflects the cached runtime probe.
+        let d = lane_description();
+        assert!(d.contains("avx2") || d.contains("scalar"));
+        assert_eq!(wide_lanes_available(), wide_lanes_available());
+    }
+}

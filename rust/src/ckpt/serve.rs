@@ -65,9 +65,11 @@ pub struct ServeState {
 
 impl ServeState {
     /// Load a checkpoint file and rebuild everything inference needs.
-    /// `trainer_mode` is the shared `--trainer auto|native|pjrt` policy
-    /// (see [`crate::runtime::build_trainer`]); `artifacts_dir` is where
-    /// the AOT artifacts live when the PJRT plane is selected.
+    /// `trainer_mode` is a backend key from the [`crate::backend`]
+    /// registry (`--backend auto|native|native-simd|native-bf16|xla`, with
+    /// `--trainer` and `pjrt` as the legacy spellings — see
+    /// [`crate::runtime::build_trainer`]); `artifacts_dir` is where the
+    /// AOT artifacts live when the XLA plane is selected.
     pub fn load(path: &Path, trainer_mode: &str, artifacts_dir: &Path) -> Result<ServeState, String> {
         let snap = Snapshot::load(path)?;
         Self::from_snapshot(&snap, trainer_mode, artifacts_dir)

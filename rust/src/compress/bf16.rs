@@ -1,0 +1,117 @@
+//! bf16 storage codec: deterministic round-to-nearest-even truncation to
+//! bfloat16, 16 bits per coordinate on the wire.
+//!
+//! Unlike the stochastic quantizer Q_r this operator is *deterministic*
+//! (and therefore biased): every coordinate is independently rounded to the
+//! nearest bfloat16 (ties to even) and shipped as its 16-bit pattern. It is
+//! the wire twin of the `native-bf16` backend's activation storage
+//! ([`crate::backend::bf16`]) — a run that stores activations in bf16 can
+//! ship its payloads in the same precision, halving dense wire cost with a
+//! bounded relative error of [`crate::backend::bf16::BF16_EPS`] per
+//! coordinate. Exact wire format: `2·dim` little-endian `u16` bf16
+//! patterns, no header.
+
+use super::{CodecMeta, Codec, Compressed, Compressor};
+use crate::backend::bf16::{bf16_to_f32, f32_to_bf16, round_slice_bf16};
+use crate::util::rng::Rng;
+
+/// Deterministic bf16 truncation codec (`bf16` in the registry).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bf16C;
+
+impl Compressor for Bf16C {
+    fn name(&self) -> String {
+        "bf16".to_string()
+    }
+
+    fn compress_into(&self, x: &[f32], _rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
+        payload.clear();
+        payload.reserve(2 * x.len());
+        for &v in x {
+            payload.extend_from_slice(&f32_to_bf16(v).to_le_bytes());
+        }
+        CodecMeta {
+            wire_bits: 16 * x.len() as u64,
+            dim: x.len(),
+            codec: Codec::Bf16,
+        }
+    }
+
+    fn decompress(&self, c: &Compressed) -> Vec<f32> {
+        super::decode_payload(c.codec, c.dim, &c.payload)
+    }
+
+    fn apply(&self, x: &mut [f32], _rng: &mut Rng) {
+        // Semantically identical to the codec round-trip, without touching
+        // any bytes — bf16 rounding is idempotent and elementwise.
+        round_slice_bf16(x);
+    }
+
+    fn nominal_bits(&self, d: usize) -> u64 {
+        16 * d as u64
+    }
+}
+
+/// Decode a bf16 payload (`2·dim` LE bytes) into `out` (length `dim`).
+pub(super) fn decode_bf16_into(dim: usize, payload: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(payload.len(), 2 * dim);
+    for (o, pair) in out.iter_mut().zip(payload.chunks_exact(2)) {
+        *o = bf16_to_f32(u16::from_le_bytes([pair[0], pair[1]]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::bf16::BF16_EPS;
+
+    fn sample(d: usize) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(21);
+        (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn wire_is_exactly_two_bytes_per_coordinate() {
+        let x = sample(257);
+        let mut rng = Rng::seed_from_u64(0);
+        let c = Bf16C.compress(&x, &mut rng);
+        assert_eq!(c.payload.len(), 2 * x.len());
+        assert_eq!(c.wire_bits, 16 * x.len() as u64);
+        assert_eq!(c.dim, x.len());
+        assert_eq!(Bf16C.nominal_bits(x.len()), c.wire_bits);
+    }
+
+    #[test]
+    fn roundtrip_matches_apply_and_bounds_relative_error() {
+        let x = sample(400);
+        let mut rng = Rng::seed_from_u64(0);
+        let c = Bf16C.compress(&x, &mut rng);
+        let y = Bf16C.decompress(&c);
+        let mut applied = x.clone();
+        Bf16C.apply(&mut applied, &mut rng);
+        assert_eq!(y, applied, "codec roundtrip must equal in-place apply");
+        for (yi, xi) in y.iter().zip(&x) {
+            assert!((yi - xi).abs() <= BF16_EPS * xi.abs(), "{yi} vs {xi}");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_rng_free() {
+        let x = sample(64);
+        let mut rng = Rng::seed_from_u64(7);
+        let a = Bf16C.compress(&x, &mut rng);
+        let b = Bf16C.compress(&x, &mut rng);
+        assert_eq!(a.payload, b.payload);
+        // No randomness consumed.
+        let mut fresh = Rng::seed_from_u64(7);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+    }
+
+    #[test]
+    fn exactly_representable_values_pass_through() {
+        let x = vec![0.0f32, -0.0, 1.0, -2.5, 0.15625, f32::INFINITY];
+        let mut rng = Rng::seed_from_u64(0);
+        let c = Bf16C.compress(&x, &mut rng);
+        assert_eq!(Bf16C.decompress(&c), x);
+    }
+}

@@ -4,7 +4,9 @@
 //! This module implements the paper's §3.1 operators — the biased TopK
 //! sparsifier (Definition 3.1) and the unbiased stochastic quantizer Q_r
 //! (Definition 3.2, QSGD-style) — plus a RandK support ablation, natural
-//! compression C_nat (Horváth et al.), the identity, and their composition
+//! compression C_nat (Horváth et al.), deterministic bf16 truncation
+//! ([`Bf16C`], the wire twin of the `native-bf16` backend's storage
+//! precision), the identity, and their composition
 //! (Appendix B.3) behind an open, string-keyed registry
 //! ([`compressor_registry`] / [`CompressorSpec`], mirroring
 //! [`crate::fed::AlgorithmSpec`] and friends). Every compressor produces a
@@ -33,6 +35,7 @@
 //! implementations are cross-checked through the `quantize.hlo.txt` artifact
 //! test in `rust/tests/runtime_artifacts.rs`.
 
+mod bf16;
 pub mod ef;
 mod identity;
 mod natural;
@@ -42,6 +45,7 @@ pub mod schedule;
 pub mod spec;
 pub mod topk;
 
+pub use bf16::Bf16C;
 pub use identity::Identity;
 pub use natural::Natural;
 pub use pipeline::{Chain, Pipeline};
@@ -123,6 +127,8 @@ pub enum Codec {
     },
     /// Natural compression: 1 sign bit + 8 exponent bits per coordinate.
     Natural,
+    /// Deterministic bf16 truncation: 16-bit LE patterns, 16·d bits.
+    Bf16,
 }
 
 /// A payload failed structural validation against its codec/dimension
@@ -238,6 +244,7 @@ pub fn validate_payload(codec: Codec, dim: usize, payload: &[u8]) -> Result<(), 
             (9 * dim as u64).div_ceil(8) as usize,
             "natural payload length != ceil(9*dim/8)",
         ),
+        Codec::Bf16 => check_exact(2 * dim, "bf16 payload length != 2*dim"),
     }
 }
 
@@ -277,6 +284,7 @@ pub fn decode_payload_into(codec: Codec, dim: usize, payload: &[u8], out: &mut [
             quantize::decode_sparse_quantized_into(dim, payload, bits, bucket as usize, out)
         }
         Codec::Natural => natural::decode_natural_into(dim, payload, out),
+        Codec::Bf16 => bf16::decode_bf16_into(dim, payload, out),
     }
 }
 
@@ -398,6 +406,7 @@ mod tests {
             Box::new(RandK::with_density(0.2)),
             Box::new(QuantizeR::new(5)),
             Box::new(Natural),
+            Box::new(Bf16C),
             parse_spec("topk:0.25|q4").unwrap(),
         ];
         for c in comps {
@@ -475,6 +484,7 @@ mod tests {
                     Box::new(QuantizeR::new(4)),
                     Box::new(QuantizeR::with_bucket(3, 100)),
                     Box::new(Natural),
+                    Box::new(Bf16C),
                     parse_spec("topk:0.25|q4").unwrap(),
                     parse_spec("topk:0.5|q9").unwrap(),
                     parse_spec("q8|topk:0.1").unwrap(),

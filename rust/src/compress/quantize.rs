@@ -26,6 +26,15 @@ use crate::util::rng::Rng;
 /// Default normalization-bucket size (coordinates per bucket norm).
 pub const DEFAULT_BUCKET: usize = 1024;
 
+/// Stack-buffer span for the two-pass grid scan: pass 1 computes the
+/// normalized magnitudes `min(|x|/norm, 1)` for a span through the wide
+/// scan in [`crate::backend::simd::quantize_grid`] (elementwise, so
+/// bit-identical to the former inline division), pass 2 runs the
+/// reduction-order-sensitive part — sign bits, RNG draws, bit writes — in
+/// the exact original per-coordinate order. A fixed-size stack array keeps
+/// the hot path allocation-free (`tests/alloc_steady_state.rs`).
+const GRID_SPAN: usize = 256;
+
 /// The unbiased stochastic quantizer Q_r (Definition 3.2).
 #[derive(Debug, Clone, Copy)]
 pub struct QuantizeR {
@@ -74,6 +83,7 @@ impl Compressor for QuantizeR {
     fn compress_into(&self, x: &[f32], rng: &mut Rng, payload: &mut Vec<u8>) -> CodecMeta {
         let d = x.len();
         let level_bits = self.bits + 1;
+        let mut ybuf = [0.0f32; GRID_SPAN];
         let mut w = BitWriter::over(std::mem::take(payload));
         for bucket in x.chunks(self.bucket_size) {
             // Non-finite norms (diverged models) encode as 0 so encoder and
@@ -82,10 +92,13 @@ impl Compressor for QuantizeR {
             let norm = if raw.is_finite() { raw } else { 0.0 };
             w.write_f32(norm);
             if norm > 0.0 {
-                for &v in bucket {
-                    w.write_bit(v.is_sign_negative());
-                    let y = (v.abs() / norm).min(1.0);
-                    w.write_bits(self.quantize_level(y, rng), level_bits);
+                for span in bucket.chunks(GRID_SPAN) {
+                    let y = &mut ybuf[..span.len()];
+                    crate::backend::simd::quantize_grid(span, norm, y);
+                    for (&v, &yv) in span.iter().zip(y.iter()) {
+                        w.write_bit(v.is_sign_negative());
+                        w.write_bits(self.quantize_level(yv, rng), level_bits);
+                    }
                 }
             }
         }
@@ -123,16 +136,20 @@ impl Compressor for QuantizeR {
         // without serializing. This is the path generic chains take for
         // their leading stages.
         let s = self.levels() as f32;
+        let mut ybuf = [0.0f32; GRID_SPAN];
         for bucket in x.chunks_mut(self.bucket_size) {
             let raw = crate::tensor::norm2(bucket);
             let norm = if raw.is_finite() { raw } else { 0.0 };
             if norm > 0.0 {
-                for v in bucket.iter_mut() {
-                    let neg = v.is_sign_negative();
-                    let y = (v.abs() / norm).min(1.0);
-                    let level = self.quantize_level(y, rng) as f32;
-                    let mag = norm * level / s;
-                    *v = if neg { -mag } else { mag };
+                for span in bucket.chunks_mut(GRID_SPAN) {
+                    let y = &mut ybuf[..span.len()];
+                    crate::backend::simd::quantize_grid(span, norm, y);
+                    for (v, &yv) in span.iter_mut().zip(y.iter()) {
+                        let neg = v.is_sign_negative();
+                        let level = self.quantize_level(yv, rng) as f32;
+                        let mag = norm * level / s;
+                        *v = if neg { -mag } else { mag };
+                    }
                 }
             } else {
                 bucket.fill(0.0);
@@ -192,18 +209,24 @@ pub(super) fn encode_sparse_quantized_into(
     let q = QuantizeR::with_bucket(bits, bucket);
     let idx_bits = bits_for(d as u64);
     let level_bits = bits + 1;
+    let mut ybuf = [0.0f32; GRID_SPAN];
     let mut w = BitWriter::over(std::mem::take(payload));
     w.write_u32(idx.len() as u32);
     for (ichunk, vchunk) in idx.chunks(bucket).zip(vals.chunks(bucket)) {
         let raw = crate::tensor::norm2(vchunk);
         let norm = if raw.is_finite() { raw } else { 0.0 };
         w.write_f32(norm);
-        for (&i, &v) in ichunk.iter().zip(vchunk) {
-            w.write_bits(i as u64, idx_bits);
+        for (ispan, vspan) in ichunk.chunks(GRID_SPAN).zip(vchunk.chunks(GRID_SPAN)) {
+            let y = &mut ybuf[..vspan.len()];
             if norm > 0.0 {
-                w.write_bit(v.is_sign_negative());
-                let y = (v.abs() / norm).min(1.0);
-                w.write_bits(q.quantize_level(y, rng), level_bits);
+                crate::backend::simd::quantize_grid(vspan, norm, y);
+            }
+            for (j, (&i, &v)) in ispan.iter().zip(vspan).enumerate() {
+                w.write_bits(i as u64, idx_bits);
+                if norm > 0.0 {
+                    w.write_bit(v.is_sign_negative());
+                    w.write_bits(q.quantize_level(y[j], rng), level_bits);
+                }
             }
         }
     }

@@ -13,7 +13,8 @@
 //! ```
 //!
 //! Families (see [`compressor_registry`]): `none`, `topk:<density>`,
-//! `randk:<density>`, `q<bits>` (also `q:<bits>`), `natural`. The seed's
+//! `randk:<density>`, `q<bits>` (also `q:<bits>`), `natural`, `bf16`. The
+//! seed's
 //! `topk:<d>+q:<b>` double-compression spelling still parses — `+` is
 //! accepted as a chain separator — and a sparsifier→quantizer chain emits
 //! the seed's exact fused wire layout (see [`super::Chain`]). Schedules are
@@ -26,6 +27,7 @@
 //! validated [`CompressorSpec`] — one per (client, direction), owned by
 //! `Federation`.
 
+use super::bf16::Bf16C;
 use super::identity::Identity;
 use super::natural::Natural;
 use super::pipeline::{Chain, Pipeline};
@@ -87,7 +89,14 @@ fn build_natural(arg: &str) -> Result<Box<dyn Compressor>, String> {
     Ok(Box::new(Natural))
 }
 
-static COMPRESSOR_REGISTRY: [CompressorFamily; 5] = [
+fn build_bf16(arg: &str) -> Result<Box<dyn Compressor>, String> {
+    if !arg.is_empty() {
+        return Err(format!("bf16 takes no argument, got '{arg}'"));
+    }
+    Ok(Box::new(Bf16C))
+}
+
+static COMPRESSOR_REGISTRY: [CompressorFamily; 6] = [
     CompressorFamily {
         key: "none",
         arg_help: "",
@@ -117,6 +126,12 @@ static COMPRESSOR_REGISTRY: [CompressorFamily; 5] = [
         arg_help: "",
         summary: "natural compression C_nat: sign + exponent, 9 bits/coordinate",
         build: build_natural,
+    },
+    CompressorFamily {
+        key: "bf16",
+        arg_help: "",
+        summary: "deterministic bf16 truncation: round-to-nearest-even, 16 bits/coordinate",
+        build: build_bf16,
     },
 ];
 
@@ -296,6 +311,7 @@ mod tests {
             ("q:8", "q8"),
             ("q8", "q8"),
             ("natural", "natural"),
+            ("bf16", "bf16"),
         ] {
             assert_eq!(build_atom(spec).unwrap().name(), want, "{spec}");
         }
@@ -335,6 +351,7 @@ mod tests {
             "q8x",
             "none:7",
             "natural:2",
+            "bf16:8",
             "topk:0.1|",       // empty chain stage
             "|q8",
             "ef(",             // unbalanced

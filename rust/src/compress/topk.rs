@@ -85,12 +85,9 @@ pub fn select_topk_into(x: &[f32], k: usize, keys: &mut Vec<u64>, out_idx: &mut 
     // (mag << 32 | !index) sorts by descending magnitude with ascending-
     // index tie-break — one integer cmp per comparison instead of an f32
     // partial_cmp chain (≈1.7× faster selection; EXPERIMENTS.md §Perf L3).
-    keys.clear();
-    keys.extend(
-        x.iter()
-            .enumerate()
-            .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64),
-    );
+    // The O(d) key pack is the wide scan in `backend::simd` (AVX2 when
+    // available, this exact loop otherwise — byte-identical key stream).
+    crate::backend::simd::pack_topk_keys(x, keys);
     keys.select_nth_unstable_by(k - 1, |a, b| b.cmp(a));
     keys.truncate(k);
     out_idx.extend(keys.iter().map(|&key| !(key as u32) as usize));

@@ -129,6 +129,10 @@ pub fn apply_kv(cfg: &mut RunConfig, key: &str, value: &TomlValue) -> Result<(),
             let s = value.as_str().ok_or("expected string")?;
             cfg.faults = crate::fed::faults::FaultSpec::parse(s)?.key();
         }
+        "backend" | "trainer" => {
+            let s = value.as_str().ok_or("expected string")?;
+            cfg.backend = crate::backend::canonical_backend_key(s)?;
+        }
         other => return Err(format!("unknown key '{other}'")),
     }
     Ok(())
@@ -176,6 +180,14 @@ pub fn to_kv(cfg: &RunConfig) -> Vec<(String, String)> {
     put("compress_down", cfg.compress_down.clone());
     put("scenario", cfg.scenario.clone());
     put("faults", cfg.faults.clone());
+    // `auto` (the default) is elided so checkpoints written before the
+    // backend key existed keep byte-identical kv sections — and resume
+    // under whatever `--backend` the resuming invocation picks, exactly
+    // like `threads`. An explicit key is result-affecting for
+    // `native-bf16`/`xla` and pinned for reproducibility on all planes.
+    if cfg.backend != "auto" {
+        put("backend", cfg.backend.clone());
+    }
     kv
 }
 
@@ -217,6 +229,7 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
         ("compress-down", "compress_down"),
         ("scenario", "scenario"),
         ("faults", "faults"),
+        ("backend", "backend"),
     ];
     for (flag, key) in pairs {
         if let Some(raw) = args.get(flag) {
@@ -238,7 +251,7 @@ pub fn apply_cli(cfg: &mut RunConfig, args: &crate::cli::Args) -> Result<(), Con
 fn parse_flag_value(key: &str, raw: &str) -> Result<TomlValue, String> {
     match key {
         "dataset" | "data_dir" | "model" | "compress_up" | "compress_down" | "scenario"
-        | "faults" => Ok(TomlValue::Str(raw.to_string())),
+        | "faults" | "backend" | "trainer" => Ok(TomlValue::Str(raw.to_string())),
         "alpha" | "p" | "gamma" | "tau" => raw
             .parse::<f64>()
             .map(TomlValue::Float)
@@ -400,6 +413,44 @@ clients = 50
         let mut cfg = RunConfig::default_mnist();
         apply_cli(&mut cfg, &args).unwrap();
         assert_eq!(cfg.faults, "crash:0.1|quorum:0.6");
+    }
+
+    #[test]
+    fn backend_key_applies_validates_and_resolves_aliases() {
+        let mut cfg = RunConfig::default_mnist();
+        assert_eq!(cfg.backend, "auto");
+        let doc = toml::parse("[run]\nbackend = \"native-simd\"").unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.backend, "native-simd");
+        // The legacy `trainer` key and `pjrt` spelling still work.
+        let doc = toml::parse("[run]\ntrainer = \"pjrt\"").unwrap();
+        apply_toml(&mut cfg, &doc).unwrap();
+        assert_eq!(cfg.backend, "xla");
+        let doc = toml::parse("[run]\nbackend = \"cuda\"").unwrap();
+        let err = apply_toml(&mut cfg, &doc).unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
+        // CLI flag routes to the same schema point.
+        let cmd = crate::cli::Command::new("train", "t").opt("backend", "KEY", "");
+        let args = cmd.parse(&["--backend".into(), "native-bf16".into()]).unwrap();
+        let mut cfg = RunConfig::default_mnist();
+        apply_cli(&mut cfg, &args).unwrap();
+        assert_eq!(cfg.backend, "native-bf16");
+    }
+
+    #[test]
+    fn backend_auto_is_elided_from_kv_export() {
+        let cfg = RunConfig::default_mnist();
+        let kv = to_kv(&cfg);
+        assert!(kv.iter().all(|(k, _)| k != "backend"), "auto must be elided");
+        let mut pinned = RunConfig::default_mnist();
+        pinned.backend = "native-simd".into();
+        let kv = to_kv(&pinned);
+        assert!(kv.iter().any(|(k, v)| k == "backend" && v == "native-simd"));
+        let mut back = RunConfig::default_mnist();
+        for (k, v) in &kv {
+            apply_kv_str(&mut back, k, v).unwrap();
+        }
+        assert_eq!(back.backend, "native-simd");
     }
 
     #[test]

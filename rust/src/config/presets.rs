@@ -34,6 +34,8 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
             scenario: "sync".to_string(),
+            faults: "none".to_string(),
+            backend: "auto".to_string(),
         }),
         "paper-cifar" => Some(RunConfig {
             dataset: DatasetSpec::cifar10(),
@@ -57,6 +59,8 @@ pub fn by_name(name: &str) -> Option<RunConfig> {
             compress_up: "none".to_string(),
             compress_down: "none".to_string(),
             scenario: "sync".to_string(),
+            faults: "none".to_string(),
+            backend: "auto".to_string(),
         }),
         "smoke" => Some(RunConfig {
             train_n: 1_000,

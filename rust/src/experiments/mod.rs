@@ -43,8 +43,9 @@ pub struct ExpOptions {
     pub out_dir: PathBuf,
     /// Multiplier on the scaled default rounds/sizes (1.0 = testbed scale).
     pub scale: f64,
-    /// Compute plane: "auto" (PJRT if artifacts exist), "native", "pjrt".
-    pub trainer: String,
+    /// Compute-plane backend key ([`crate::backend`] registry): "auto",
+    /// "native", "native-simd", "native-bf16", "xla" (alias "pjrt").
+    pub backend: String,
     /// Artifacts directory for the PJRT plane.
     pub artifacts_dir: PathBuf,
     /// RNG seed every run starts from (sweep `seeds` axes still win).
@@ -56,7 +57,7 @@ impl Default for ExpOptions {
         Self {
             out_dir: PathBuf::from("results"),
             scale: 1.0,
-            trainer: "auto".into(),
+            backend: "auto".into(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             seed: 42,
         }
@@ -65,15 +66,18 @@ impl Default for ExpOptions {
 
 impl ExpOptions {
     /// Build the compute plane for a model spec (the shared
-    /// [`crate::runtime::build_trainer`] policy).
+    /// [`crate::runtime::build_trainer`] policy over the [`crate::backend`]
+    /// registry).
     pub fn make_trainer(&self, spec: &ModelSpec) -> Arc<dyn LocalTrainer> {
-        crate::runtime::build_trainer(&self.trainer, &self.artifacts_dir, spec)
+        crate::runtime::build_trainer(&self.backend, &self.artifacts_dir, spec)
     }
 
     /// The compute plane for a run config (its explicit model, or the
-    /// dataset's default pairing).
+    /// dataset's default pairing). The config's own `backend` key wins over
+    /// these options when set ([`crate::backend::effective_backend`]).
     pub fn trainer_for(&self, cfg: &RunConfig) -> Arc<dyn LocalTrainer> {
-        self.make_trainer(&cfg.model_spec())
+        let key = crate::backend::effective_backend(&cfg.backend, &self.backend);
+        crate::runtime::build_trainer(key, &self.artifacts_dir, &cfg.model_spec())
     }
 
     /// Apply `--scale` and the seed to a run config (the literally shared
@@ -99,7 +103,7 @@ impl ExpOptions {
             out_dir: self.out_dir.clone(),
             scale: self.scale,
             seed: Some(self.seed),
-            trainer: self.trainer.clone(),
+            backend: self.backend.clone(),
             artifacts_dir: self.artifacts_dir.clone(),
             ..sweep::SweepOptions::default()
         }
@@ -290,13 +294,13 @@ mod tests {
         let opts = ExpOptions {
             scale: 0.5,
             seed: 7,
-            trainer: "native".into(),
+            backend: "native".into(),
             ..Default::default()
         };
         let so = opts.sweep_options();
         assert_eq!(so.scale, 0.5);
         assert_eq!(so.seed, Some(7));
-        assert_eq!(so.trainer, "native");
+        assert_eq!(so.backend, "native");
         assert!(!so.dry_run && !so.resume);
     }
 }

@@ -124,12 +124,15 @@ fn codec_tag(codec: Codec) -> u8 {
         Codec::Quantized { .. } => 3,
         Codec::SparseQuantized { .. } => 4,
         Codec::Natural => 5,
+        Codec::Bf16 => 6,
     }
 }
 
 fn codec_params(codec: Codec) -> (u8, u32) {
     match codec {
-        Codec::Dense | Codec::SparseIdx | Codec::SparseBitmap | Codec::Natural => (0, 0),
+        Codec::Dense | Codec::SparseIdx | Codec::SparseBitmap | Codec::Natural | Codec::Bf16 => {
+            (0, 0)
+        }
         Codec::Quantized { bits, bucket } | Codec::SparseQuantized { bits, bucket } => {
             (bits as u8, bucket)
         }
@@ -153,6 +156,7 @@ fn codec_from_wire(tag: u8, bits: u8, bucket: u32) -> Result<Codec, WireError> {
         3 => quant(|bits, bucket| Codec::Quantized { bits, bucket }),
         4 => quant(|bits, bucket| Codec::SparseQuantized { bits, bucket }),
         5 => Ok(Codec::Natural),
+        6 => Ok(Codec::Bf16),
         t => Err(WireError::BadCodecTag(t)),
     }
 }
@@ -333,7 +337,7 @@ fn validate_consistency(codec: Codec, dim: usize, payload: &[u8]) -> Result<(), 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{parse_spec, Compressor, Identity, Natural, QuantizeR, RandK, TopK};
+    use crate::compress::{parse_spec, Bf16C, Compressor, Identity, Natural, QuantizeR, RandK, TopK};
 
     fn sample(d: usize) -> Vec<f32> {
         let mut rng = Rng::seed_from_u64(3);
@@ -351,6 +355,7 @@ mod tests {
             Box::new(QuantizeR::new(6)),
             Box::new(QuantizeR::with_bucket(3, 128)),
             Box::new(Natural),
+            Box::new(Bf16C),
             parse_spec("topk:0.25|q4").unwrap(),
             parse_spec("q8|topk:0.2").unwrap(),
         ];

@@ -424,6 +424,12 @@ pub struct RunConfig {
     /// duplicates and outages, and runs the retransmit/quorum recovery
     /// machinery.
     pub faults: String,
+    /// Compute-plane backend key ([`crate::backend`] registry): `"auto"`
+    /// (the default) defers to the CLI/option layer and ultimately the
+    /// shared auto policy; an explicit key (`native`, `native-simd`,
+    /// `native-bf16`, `xla`) pins the plane for this run and wins over
+    /// `--backend`. Validated on entry by the config layer.
+    pub backend: String,
 }
 
 impl RunConfig {
@@ -461,6 +467,7 @@ impl RunConfig {
             compress_down: "none".to_string(),
             scenario: "sync".to_string(),
             faults: "none".to_string(),
+            backend: "auto".to_string(),
         }
     }
 
@@ -494,6 +501,7 @@ impl RunConfig {
             compress_down: "none".to_string(),
             scenario: "sync".to_string(),
             faults: "none".to_string(),
+            backend: "auto".to_string(),
         }
     }
 

@@ -38,6 +38,7 @@
 // their own documentation pass.
 #![warn(missing_docs)]
 
+pub mod backend;
 pub mod ckpt;
 #[allow(missing_docs)]
 pub mod cli;

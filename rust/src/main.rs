@@ -10,6 +10,7 @@
 //!   list-compressors  show the compressor registry (specs for --compress-up/-down)
 //!   list-models       show the model registry (spec strings for --model)
 //!   list-datasets     show the dataset registry (spec strings for --dataset)
+//!   list-backends     show the compute-plane backend registry (--backend keys)
 //!   data-stats        Figure 11 class-distribution report
 //!   artifacts         inspect artifacts/manifest.json
 //!
@@ -40,6 +41,7 @@ fn main() {
         Some("list-compressors") => cmd_list_compressors(),
         Some("list-models") => cmd_list_models(&argv[1..]),
         Some("list-datasets") => cmd_list_datasets(&argv[1..]),
+        Some("list-backends") => cmd_list_backends(),
         Some("data-stats") => cmd_data_stats(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
         Some("--help") | Some("-h") | None => {
@@ -108,6 +110,7 @@ SUBCOMMANDS:
     list-compressors  show the compressor registry (specs for --compress-up/-down)
     list-models       show the model registry (spec strings for --model)
     list-datasets     show the dataset registry (spec strings for --dataset)
+    list-backends     show the compute-plane backend registry (--backend keys)
     data-stats        Figure 11 class-distribution report
     artifacts         inspect the AOT artifact manifest
 
@@ -163,7 +166,13 @@ fn train_options(cmd: Command) -> Command {
         )
         .opt("preset", "NAME", "config preset (see list below)")
         .opt("config", "FILE", "TOML config file with a [run] table")
-        .opt_default("trainer", "T", "compute plane: auto|native|pjrt", "auto")
+        .opt_default(
+            "backend",
+            "KEY",
+            "compute-plane backend: auto|native|native-simd|native-bf16|xla (see list-backends)",
+            "auto",
+        )
+        .opt("trainer", "T", "legacy alias for --backend (native|pjrt spellings)")
         .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
         .opt_default("out", "DIR", "metrics output directory", "results")
         .opt("dataset", "SPEC", "dataset spec, e.g. mnist | synthetic:3x16x16 (see list-datasets)")
@@ -185,6 +194,18 @@ fn train_options(cmd: Command) -> Command {
         .opt("threads", "N", "worker threads (0 = auto)")
         .opt("data-dir", "DIR", "real-dataset directory (IDX/CIFAR bins)")
         .flag("quiet", "suppress per-round logging")
+}
+
+/// The backend key from `--backend`, falling back to the legacy
+/// `--trainer` spelling (kept working: scripts and CI pass
+/// `--trainer native` verbatim), then to `default`. Validation happens in
+/// [`fedcomloc::backend::resolve`] / `config::apply_kv`, which also map
+/// the `pjrt` alias.
+fn backend_arg(args: &fedcomloc::cli::Args, default: &str) -> String {
+    args.get("backend")
+        .or_else(|| args.get("trainer"))
+        .unwrap_or(default)
+        .to_string()
 }
 
 /// Resolve the run configuration and algorithm spec from parsed `train`/
@@ -266,13 +287,13 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
 
     let opts = ExpOptions {
         out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
-        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        backend: backend_arg(&args, "auto"),
         artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
         seed: cfg.seed,
         ..Default::default()
     };
     let model = cfg.model_spec();
-    let trainer = opts.make_trainer(&model);
+    let trainer = opts.trainer_for(&cfg);
 
     println!(
         "running {} on {} with model {} (d={}; {} clients, {} sampled, {} rounds, α={}, γ={})",
@@ -375,12 +396,12 @@ fn cmd_run(argv: &[String]) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let opts = ExpOptions {
         out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
-        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        backend: backend_arg(&args, "auto"),
         artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
         seed: cfg.seed,
         ..Default::default()
     };
-    let trainer = opts.make_trainer(&cfg.model_spec());
+    let trainer = opts.trainer_for(&cfg);
 
     let ckpt_dir = PathBuf::from(args.get("checkpoint-dir").unwrap_or("checkpoints"));
     let mut ckpt = fedcomloc::ckpt::Checkpointer::new(&ckpt_dir, spec.key())
@@ -467,7 +488,13 @@ fn serve_command() -> Command {
         "DIR",
         "serve the newest checkpoint in DIR (alternative to --checkpoint)",
     )
-    .opt_default("trainer", "T", "compute plane: auto|native|pjrt", "native")
+    .opt_default(
+        "backend",
+        "KEY",
+        "compute-plane backend: auto|native|native-simd|native-bf16|xla",
+        "native",
+    )
+    .opt("trainer", "T", "legacy alias for --backend (native|pjrt spellings)")
     .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
     .opt(
         "tcp",
@@ -500,7 +527,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     };
     let mut state = fedcomloc::ckpt::ServeState::load(
         &path,
-        args.get("trainer").unwrap_or("native"),
+        &backend_arg(&args, "native"),
         std::path::Path::new(args.get("artifacts").unwrap_or("artifacts")),
     )
     .map_err(|e| anyhow::anyhow!(e))?;
@@ -603,7 +630,13 @@ fn experiment_command() -> Command {
         .opt("id", "ID", "experiment id (see list-experiments)")
         .flag("all", "run every experiment in the registry")
         .opt_default("scale", "F", "scale factor on rounds/sizes", "1.0")
-        .opt_default("trainer", "T", "auto|native|pjrt", "auto")
+        .opt_default(
+            "backend",
+            "KEY",
+            "compute-plane backend: auto|native|native-simd|native-bf16|xla",
+            "auto",
+        )
+        .opt("trainer", "T", "legacy alias for --backend (native|pjrt spellings)")
         .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
         .opt_default("out", "DIR", "output directory", "results")
         .opt_default("seed", "N", "RNG seed", "42")
@@ -619,7 +652,7 @@ fn cmd_experiment(argv: &[String]) -> anyhow::Result<()> {
     let opts = ExpOptions {
         out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
         scale: args.get_or("scale", 1.0).map_err(|e| anyhow::anyhow!("{e}"))?,
-        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        backend: backend_arg(&args, "auto"),
         artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
         seed: args.get_or("seed", 42).map_err(|e| anyhow::anyhow!("{e}"))?,
     };
@@ -649,7 +682,13 @@ fn sweep_run_command() -> Command {
         .opt_default("threads", "N", "parallel runs (0 = auto; inner pools drop to 1)", "0")
         .opt_default("scale", "F", "scale factor on rounds/dataset sizes", "1.0")
         .opt("seed", "N", "base-seed override (an explicit 'seeds' axis wins)")
-        .opt_default("trainer", "T", "compute plane: auto|native|pjrt", "auto")
+        .opt_default(
+            "backend",
+            "KEY",
+            "compute-plane backend: auto|native|native-simd|native-bf16|xla (a 'backends' axis wins)",
+            "auto",
+        )
+        .opt("trainer", "T", "legacy alias for --backend (native|pjrt spellings)")
         .opt_default("artifacts", "DIR", "AOT artifacts directory", "artifacts")
         .flag("dry-run", "print the expanded run matrix and exit")
         .flag("resume", "skip runs whose summary row exists with a matching config")
@@ -723,7 +762,7 @@ fn cmd_sweep_run(argv: &[String]) -> anyhow::Result<()> {
         resume: args.flag("resume"),
         scale: args.get_or("scale", 1.0).map_err(|e| anyhow::anyhow!("{e}"))?,
         seed: args.get_parsed("seed").map_err(|e| anyhow::anyhow!("{e}"))?,
-        trainer: args.get("trainer").unwrap_or("auto").to_string(),
+        backend: backend_arg(&args, "auto"),
         artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
         checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
         checkpoint_every: args.get_or("checkpoint-every", 1).map_err(|e| anyhow::anyhow!("{e}"))?,
@@ -841,6 +880,20 @@ fn cmd_list_datasets(argv: &[String]) -> anyhow::Result<()> {
         println!("{:<12}{:<70}{}", fam.key, fam.arg_help, fam.summary);
     }
     println!("\nSpec grammar: <key>[:<argument>], e.g. synthetic:3x16x16-c5 — pass via --dataset");
+    Ok(())
+}
+
+fn cmd_list_backends() -> anyhow::Result<()> {
+    println!("{:<14}{:<14}{}", "key", "numerics", "description");
+    for b in fedcomloc::backend::backend_registry() {
+        let numerics = if b.bit_identical() { "bit-exact" } else { "differs" };
+        println!("{:<14}{:<14}{}", b.key(), numerics, b.summary());
+    }
+    println!(
+        "\nPass via --backend (or the 'backend' [run]-table key / 'backends' sweep axis).\n\
+         'auto' picks xla for the CNN when artifacts exist, native otherwise; 'pjrt' is\n\
+         an alias for xla. bit-exact planes reproduce the native plane bit for bit."
+    );
     Ok(())
 }
 

@@ -16,6 +16,7 @@
 
 use super::ops::{self, ConvShape};
 use super::workspace::Workspace;
+use crate::backend::kernels::{MicroKernels, SCALAR};
 use crate::util::rng::Rng;
 
 /// One stage of a model, described over the flat parameter vector.
@@ -329,10 +330,30 @@ impl Model {
     /// argmax bookkeeping `ws.args`. Bias and ReLU run fused in the matmul
     /// epilogues; no allocation once the workspace is warm.
     pub fn forward_into(&self, params: &[f32], x: &[f32], batch: usize, ws: &mut Workspace) {
+        self.forward_into_with(&SCALAR, params, x, batch, ws);
+    }
+
+    /// [`Model::forward_into`] with every layer's matmul routed through a
+    /// backend [`MicroKernels`] set. The scalar set reproduces
+    /// `forward_into` bit-for-bit (it delegates to the same `ops` loops in
+    /// the same order); the wide set is bit-identical by construction; the
+    /// bf16 set additionally rounds each *hidden* activation buffer onto
+    /// the bf16 grid through [`MicroKernels::store_activations`] before
+    /// the next layer (or the backward pass) reads it — logits are never
+    /// rounded.
+    pub fn forward_into_with(
+        &self,
+        kernels: &dyn MicroKernels,
+        params: &[f32],
+        x: &[f32],
+        batch: usize,
+        ws: &mut Workspace,
+    ) {
         debug_assert_eq!(params.len(), self.dim());
         debug_assert_eq!(x.len(), batch * self.input_dim);
         ws.ensure(self, batch);
         let Workspace { acts, args, col, .. } = ws;
+        let last = self.layers.len() - 1;
         for (i, (layer, slice)) in self.layers.iter().zip(&self.layout.slices).enumerate() {
             let (prev, rest) = acts.split_at_mut(i);
             let input: &[f32] = if i == 0 {
@@ -349,7 +370,7 @@ impl Model {
                 } => {
                     let (w0, w1) = slice.weight;
                     let (b0, b1) = slice.bias;
-                    ops::matmul_bias_act(
+                    kernels.matmul_bias_act(
                         input,
                         &params[w0..w1],
                         &params[b0..b1],
@@ -365,7 +386,8 @@ impl Model {
                     let (w0, w1) = slice.weight;
                     let (b0, b1) = slice.bias;
                     let panel = s.col_rows() * s.col_cols();
-                    ops::conv2d_forward(
+                    ops::conv2d_forward_with(
+                        kernels,
                         input,
                         &params[w0..w1],
                         &params[b0..b1],
@@ -385,6 +407,9 @@ impl Model {
                     ops::maxpool2_forward(input, batch * channels, in_h, in_w, out, argmax);
                 }
             }
+            if i < last {
+                kernels.store_activations(out);
+            }
         }
     }
 
@@ -394,8 +419,24 @@ impl Model {
     /// wrapper over this), regardless of how warm the workspace is — every
     /// buffer is fully overwritten before it is read.
     pub fn grad_into(&self, params: &[f32], x: &[f32], y: &[i32], ws: &mut Workspace) -> f32 {
+        self.grad_into_with(&SCALAR, params, x, y, ws)
+    }
+
+    /// [`Model::grad_into`] with the matmuls routed through a backend
+    /// [`MicroKernels`] set (see [`Model::forward_into_with`] for the
+    /// numerics contract). Softmax, bias reductions, pool/ReLU backward
+    /// and im2col stay canonical — they are either reduction-order
+    /// sensitive or pure data movement.
+    pub fn grad_into_with(
+        &self,
+        kernels: &dyn MicroKernels,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> f32 {
         let batch = y.len();
-        self.forward_into(params, x, batch, ws);
+        self.forward_into_with(kernels, params, x, batch, ws);
         let nc = self.num_classes;
         let Workspace {
             acts,
@@ -429,10 +470,10 @@ impl Model {
                     let (w0, w1) = slice.weight;
                     let (b0, b1) = slice.bias;
                     let dz = &delta_a[..dz_len];
-                    ops::matmul_at_b(input, dz, &mut g[w0..w1], in_dim, batch, out_dim);
+                    kernels.matmul_at_b(input, dz, &mut g[w0..w1], in_dim, batch, out_dim);
                     ops::bias_grad(dz, &mut g[b0..b1], batch, out_dim);
                     if need_dx {
-                        ops::matmul_a_bt(
+                        kernels.matmul_a_bt(
                             dz,
                             &params[w0..w1],
                             &mut delta_b[..batch * in_dim],
@@ -457,7 +498,8 @@ impl Model {
                     } else {
                         None
                     };
-                    ops::conv2d_backward(
+                    ops::conv2d_backward_with(
+                        kernels,
                         input,
                         &params[w0..w1],
                         &delta_a[..dz_len],
@@ -512,8 +554,23 @@ impl Model {
         valid: usize,
         ws: &mut Workspace,
     ) -> (f64, usize) {
+        self.eval_batch_into_with(&SCALAR, params, x, y, valid, ws)
+    }
+
+    /// [`Model::eval_batch_into`] with the forward pass routed through a
+    /// backend [`MicroKernels`] set; the loss/accuracy reductions stay
+    /// canonical.
+    pub fn eval_batch_into_with(
+        &self,
+        kernels: &dyn MicroKernels,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        valid: usize,
+        ws: &mut Workspace,
+    ) -> (f64, usize) {
         let batch = y.len();
-        self.forward_into(params, x, batch, ws);
+        self.forward_into_with(kernels, params, x, batch, ws);
         let logits = &ws.acts[self.layers.len() - 1][..batch * self.num_classes];
         (
             ops::cross_entropy_sum(logits, y, self.num_classes, valid),

@@ -10,23 +10,42 @@
 
 use super::workspace::Workspace;
 use super::{LocalTrainer, Model};
+use crate::backend::kernels::MicroKernels;
 use crate::data::loader::Batch;
 
 /// The pure-Rust compute plane for any registry [`Model`].
+///
+/// Parameterized by a [`MicroKernels`] set: [`NativeTrainer::new`] routes
+/// the model walks through the canonical scalar kernels (the `native`
+/// backend), while [`NativeTrainer::with_kernels`] plugs in the wide or
+/// bf16-storage sets for the `native-simd` / `native-bf16` backends.
 #[derive(Debug, Clone)]
 pub struct NativeTrainer {
     model: Model,
+    kernels: &'static dyn MicroKernels,
 }
 
 impl NativeTrainer {
-    /// A trainer computing over `model` (stateless besides the descriptor).
+    /// A trainer computing over `model` with the canonical scalar kernels
+    /// (stateless besides the descriptor).
     pub fn new(model: Model) -> Self {
-        Self { model }
+        Self::with_kernels(model, &crate::backend::kernels::SCALAR)
+    }
+
+    /// A trainer routing every model walk through `kernels` — the hook the
+    /// `native-simd` and `native-bf16` backends use.
+    pub fn with_kernels(model: Model, kernels: &'static dyn MicroKernels) -> Self {
+        Self { model, kernels }
     }
 
     /// Build straight from a registry spec string (`"mlp"`, `"linear:784"`, …).
     pub fn from_spec(spec: &str) -> Result<Self, String> {
         Ok(Self::new(super::build_model(spec)?))
+    }
+
+    /// The micro-kernel set this trainer walks the model with.
+    pub fn kernels(&self) -> &'static dyn MicroKernels {
+        self.kernels
     }
 }
 
@@ -38,13 +57,66 @@ impl LocalTrainer for NativeTrainer {
     fn grad(&self, params: &[f32], batch: &Batch) -> (Vec<f32>, f32) {
         assert_eq!(params.len(), self.model.dim());
         assert_eq!(batch.feature_dim, self.model.input_dim());
-        self.model.grad(params, &batch.x, &batch.y)
+        let mut ws = Workspace::for_model(&self.model, batch.y.len());
+        let loss = self
+            .model
+            .grad_into_with(self.kernels, params, &batch.x, &batch.y, &mut ws);
+        (std::mem::take(&mut ws.grad), loss)
     }
 
     fn grad_into(&self, params: &[f32], batch: &Batch, ws: &mut Workspace) -> f32 {
         assert_eq!(params.len(), self.model.dim());
         assert_eq!(batch.feature_dim, self.model.input_dim());
-        self.model.grad_into(params, &batch.x, &batch.y, ws)
+        self.model
+            .grad_into_with(self.kernels, params, &batch.x, &batch.y, ws)
+    }
+
+    fn train_step_into(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        ws: &mut Workspace,
+    ) -> f32 {
+        // Same shape as the trait default, with the optimizer verb routed
+        // through the backend kernel set (bit-identical across planes —
+        // the step is elementwise — but vectorized on native-simd).
+        let loss = self.grad_into(params, batch, ws);
+        let (g, out) = ws.grad_and_step(params.len());
+        self.kernels.apply_step(params, g, h, gamma, out);
+        loss
+    }
+
+    fn train_step_masked_into(
+        &self,
+        params: &[f32],
+        h: &[f32],
+        batch: &Batch,
+        gamma: f32,
+        density: f64,
+        ws: &mut Workspace,
+    ) -> f32 {
+        let d = params.len();
+        let k = ((density * d as f64).ceil() as usize).clamp(1, d);
+        // Mirrors the trait default (see `LocalTrainer::train_step_masked_into`
+        // for the buffer choreography), with `apply_step` routed through the
+        // backend kernels.
+        let mut masked = std::mem::take(&mut ws.masked);
+        if masked.len() < d {
+            masked.resize(d, 0.0);
+        }
+        masked[..d].copy_from_slice(params);
+        let mut keys = std::mem::take(&mut ws.topk_keys);
+        let mut idx = std::mem::take(&mut ws.topk_idx);
+        crate::compress::topk::apply_topk_with(&mut masked[..d], k, &mut keys, &mut idx);
+        ws.topk_keys = keys;
+        ws.topk_idx = idx;
+        let loss = self.grad_into(&masked[..d], batch, ws);
+        ws.masked = masked;
+        let (g, out) = ws.grad_and_step(d);
+        self.kernels.apply_step(params, g, h, gamma, out);
+        loss
     }
 
     fn eval_batch(
@@ -54,7 +126,8 @@ impl LocalTrainer for NativeTrainer {
         valid: usize,
         ws: &mut Workspace,
     ) -> (f64, usize) {
-        self.model.eval_batch_into(params, &batch.x, &batch.y, valid, ws)
+        self.model
+            .eval_batch_into_with(self.kernels, params, &batch.x, &batch.y, valid, ws)
     }
 }
 

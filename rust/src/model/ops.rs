@@ -661,6 +661,34 @@ pub fn conv2d_forward(
     col_buf: &mut [f32],
     relu: bool,
 ) {
+    conv2d_forward_with(
+        &crate::backend::kernels::SCALAR,
+        x,
+        w,
+        bias,
+        s,
+        batch,
+        y,
+        col_buf,
+        relu,
+    );
+}
+
+/// [`conv2d_forward`] with the matmul routed through a backend
+/// [`MicroKernels`](crate::backend::kernels::MicroKernels) set; im2col
+/// stays canonical (pure data movement).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_forward_with(
+    kernels: &dyn crate::backend::kernels::MicroKernels,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    s: &ConvShape,
+    batch: usize,
+    y: &mut [f32],
+    col_buf: &mut [f32],
+    relu: bool,
+) {
     let (oh, ow) = (s.out_h(), s.out_w());
     let ysz = s.out_ch * oh * ow;
     let xsz = s.in_ch * s.in_h * s.in_w;
@@ -672,13 +700,45 @@ pub fn conv2d_forward(
         // y_b[out_ch × (oh·ow)] = W[out_ch × cc] @ colᵀ[(cc) × (oh·ow)],
         // bias per output channel and ReLU applied in the epilogue.
         let yb = &mut y[b * ysz..(b + 1) * ysz];
-        matmul_a_bt_bias_act(w, col_buf, bias, yb, s.out_ch, s.col_cols(), s.col_rows(), relu);
+        kernels.matmul_a_bt_bias_act(w, col_buf, bias, yb, s.out_ch, s.col_cols(), s.col_rows(), relu);
     }
 }
 
 /// Backward conv: given dy, produce dW, db, and (optionally) dx.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_backward(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    s: &ConvShape,
+    batch: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+    col_buf: &mut [f32],
+    dcol_buf: &mut [f32],
+) {
+    conv2d_backward_with(
+        &crate::backend::kernels::SCALAR,
+        x,
+        w,
+        dy,
+        s,
+        batch,
+        dw,
+        db,
+        dx,
+        col_buf,
+        dcol_buf,
+    );
+}
+
+/// [`conv2d_backward`] with the two matmuls routed through a backend
+/// [`MicroKernels`](crate::backend::kernels::MicroKernels) set; im2col /
+/// col2im and the bias reduction stay canonical.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward_with(
+    kernels: &dyn crate::backend::kernels::MicroKernels,
     x: &[f32],
     w: &[f32],
     dy: &[f32],
@@ -705,13 +765,13 @@ pub fn conv2d_backward(
         let dyb = &dy[b * ysz..(b + 1) * ysz]; // [out_ch × cr]
         im2col(&x[b * xsz..(b + 1) * xsz], s, col_buf); // [cr × cc]
         // dW[oc × cc] += dyb[oc × cr] @ col[cr × cc]
-        matmul_acc(dyb, col_buf, dw, s.out_ch, cr, cc);
+        kernels.matmul_acc(dyb, col_buf, dw, s.out_ch, cr, cc);
         for oc in 0..s.out_ch {
             db[oc] += dyb[oc * cr..(oc + 1) * cr].iter().sum::<f32>();
         }
         if let Some(dx) = dx.as_deref_mut() {
             // dcol[cr × cc] = dybᵀ[cr × oc] @ W[oc × cc]
-            matmul_at_b(dyb, w, dcol_buf, cr, s.out_ch, cc);
+            kernels.matmul_at_b(dyb, w, dcol_buf, cr, s.out_ch, cc);
             col2im_acc(dcol_buf, s, &mut dx[b * xsz..(b + 1) * xsz]);
         }
     }

@@ -49,33 +49,34 @@ pub fn artifacts_available(dir: &Path) -> bool {
     dir.join("manifest.json").is_file()
 }
 
-/// Build the compute plane for a model spec under the shared trainer
-/// policy — the one place `--trainer auto|native|pjrt` is interpreted, used
-/// by `fedcomloc train`, the experiment presets, and the sweep engine.
+/// Build the compute plane for a model spec under the shared backend
+/// policy — the one place `--backend auto|native|native-simd|native-bf16|xla`
+/// (and the legacy `--trainer` spellings `native`/`pjrt`) is interpreted,
+/// used by `fedcomloc train`, the experiment presets, and the sweep engine.
 ///
-/// Default (`auto`) policy, measured in EXPERIMENTS.md §Perf: the native
-/// plane wins for the MLP (parallel clients, no engine lock), the XLA plane
-/// wins for the CNN (optimized convolutions). Parameterized specs have no
-/// prebuilt artifacts and always run native unless `pjrt` is forced, which
-/// then falls back to native with a warning.
+/// Dispatch goes through the [`crate::backend`] registry:
+/// [`crate::backend::resolve`] maps the requested key (plus the model and
+/// artifact availability) to a concrete backend, whose
+/// [`crate::backend::Backend::build`] constructs the trainer. The `auto`
+/// policy is unchanged from the seed's trainer policy, measured in
+/// EXPERIMENTS.md §Perf: the native plane wins for the MLP (parallel
+/// clients, no engine lock), the XLA plane wins for the CNN (optimized
+/// convolutions). Parameterized specs have no prebuilt artifacts and always
+/// run native unless `xla`/`pjrt` is forced, which then falls back to
+/// native with a warning — exactly the seed's fallback semantics.
 pub fn build_trainer(
     mode: &str,
     artifacts_dir: &Path,
     spec: &crate::model::ModelSpec,
 ) -> std::sync::Arc<dyn crate::model::LocalTrainer> {
     let model = spec.build();
-    let want_pjrt = match mode {
-        "native" => false,
-        "pjrt" => true,
-        _ => model.artifact_name() == "cnn" && artifacts_available(artifacts_dir),
-    };
-    if want_pjrt {
-        match PjrtTrainer::load(artifacts_dir, &model) {
-            Ok(t) => return std::sync::Arc::new(t),
-            Err(e) => {
-                log::warn!("PJRT trainer unavailable ({e}); falling back to native");
-            }
+    let key = crate::backend::resolve(mode, &model, artifacts_available(artifacts_dir));
+    let backend = crate::backend::lookup(key).expect("resolve returns registry keys");
+    match backend.build(&model, artifacts_dir) {
+        Ok(t) => t,
+        Err(e) => {
+            log::warn!("backend '{key}' unavailable ({e}); falling back to native");
+            std::sync::Arc::new(crate::model::native::NativeTrainer::new(model))
         }
     }
-    std::sync::Arc::new(crate::model::native::NativeTrainer::new(model))
 }

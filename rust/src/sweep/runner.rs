@@ -14,7 +14,7 @@
 //!
 //! `resume: true` reads the existing `summary.csv` and skips every run
 //! whose row is already present **with a matching configuration prefix**
-//! (schema, run id, algo, dataset, model, transport, trainer policy, and
+//! (schema, run id, algo, dataset, model, transport, effective backend, and
 //! every scalar setting — see [`sink::summary_key`]) **and** whose
 //! per-round JSONL file is still on disk; a row left over from an edited
 //! sweep file or different CLI options mismatches and is re-executed, so
@@ -35,9 +35,11 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-/// One compute plane per distinct model key, shared by every run in the
-/// sweep (a PJRT engine load is expensive; units overwhelmingly share one
-/// model). Building happens under the lock so a cold engine is loaded
+/// One compute plane per distinct `backend|model` pair, shared by every
+/// run in the sweep (a PJRT engine load is expensive; units overwhelmingly
+/// share one model). The key includes the *effective* backend so a sweep
+/// mixing a `backends` axis never hands a `native` unit a SIMD plane (or
+/// vice versa). Building happens under the lock so a cold engine is loaded
 /// exactly once even when many workers race on the same key.
 type TrainerCache = Mutex<BTreeMap<String, Arc<dyn LocalTrainer>>>;
 
@@ -58,8 +60,12 @@ pub struct SweepOptions {
     pub scale: f64,
     /// Base-seed override (an explicit `seeds` axis still wins).
     pub seed: Option<u64>,
-    /// Compute plane policy: `auto` | `native` | `pjrt`.
-    pub trainer: String,
+    /// Compute-plane backend key ([`crate::backend`] registry): `auto`,
+    /// `native`, `native-simd`, `native-bf16`, `xla` (alias `pjrt`). A
+    /// unit whose config pins its own `backend` key (e.g. via a sweep
+    /// `backends` axis) wins over this option
+    /// ([`crate::backend::effective_backend`]).
+    pub backend: String,
     /// AOT artifacts directory for the PJRT plane.
     pub artifacts_dir: PathBuf,
     /// When set, every run checkpoints into
@@ -82,7 +88,7 @@ impl Default for SweepOptions {
             resume: false,
             scale: 1.0,
             seed: None,
-            trainer: "auto".to_string(),
+            backend: "auto".to_string(),
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             checkpoint_dir: None,
             checkpoint_every: 0,
@@ -154,13 +160,15 @@ fn run_unit(
         cfg.threads = 1;
     }
     let model = cfg.model_spec();
+    let backend = crate::backend::effective_backend(&cfg.backend, &opts.backend);
     let trainer = {
         let mut cache = trainers.lock().unwrap();
-        match cache.get(model.key()) {
+        let cache_key = format!("{backend}|{}", model.key());
+        match cache.get(&cache_key) {
             Some(t) => Arc::clone(t),
             None => {
-                let t = crate::runtime::build_trainer(&opts.trainer, &opts.artifacts_dir, &model);
-                cache.insert(model.key().to_string(), Arc::clone(&t));
+                let t = crate::runtime::build_trainer(backend, &opts.artifacts_dir, &model);
+                cache.insert(cache_key, Arc::clone(&t));
                 t
             }
         }
@@ -185,7 +193,7 @@ fn run_unit(
     );
     sink::write_rounds_jsonl(sweep_dir, &unit.id, &log)
         .map_err(|e| format!("{}: writing rounds jsonl: {e}", unit.id))?;
-    Ok(sink::summary_row(sweep_name, &opts.trainer, unit, &log))
+    Ok(sink::summary_row(sweep_name, backend, unit, &log))
 }
 
 /// Expand and execute a sweep (see module docs). Returns an error if the
@@ -226,7 +234,8 @@ pub fn run_sweep(spec: &SweepSpec, opts: &SweepOptions) -> Result<SweepOutcome, 
                 // the per-round file still on disk (both outputs must be
                 // complete for the run to count as done).
                 let row = rows.get(&u.id)?;
-                let key = sink::summary_key(&spec.name, &opts.trainer, u);
+                let backend = crate::backend::effective_backend(&u.cfg.backend, &opts.backend);
+                let key = sink::summary_key(&spec.name, backend, u);
                 (row.starts_with(&format!("{key},"))
                     && sink::rounds_path(&dir, &u.id).is_file())
                 .then(|| (u.id.clone(), row.clone()))

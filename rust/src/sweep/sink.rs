@@ -10,10 +10,10 @@
 //!   rounds/<run_id>.jsonl    one JSON object per communication round
 //! ```
 //!
-//! # Summary CSV schema (v4)
+//! # Summary CSV schema (v5)
 //!
 //! ```text
-//! schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,
+//! schema,run_id,sweep,algo,dataset,model,transport,backend,rounds,
 //! local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,
 //! batch_size,eval_batch,eval_every,tau,data_dir,compress_up,
 //! compress_down,scenario,faults,best_accuracy,final_accuracy,
@@ -28,14 +28,18 @@
 //! `stale_updates`/`churned_clients` metric columns; v4 added the
 //! `faults` axis ([`crate::fed::faults`] fault-injection plane) to the
 //! prefix and the `corrupt_frames`/`retransmits`/`backoff_secs`/
-//! `aborted_rounds` recovery columns; the sweep-*file* schema is
-//! versioned separately and stayed at
+//! `aborted_rounds` recovery columns; v5 renamed the `trainer` column to
+//! `backend` in place (the [`crate::backend`] registry key — same
+//! position, same column count, so positional consumers are unaffected)
+//! and records the per-unit *effective* backend rather than the sweep-wide
+//! CLI flag; the sweep-*file* schema is versioned separately and stayed at
 //! [`crate::sweep::spec::SCHEMA_VERSION`] = 1.
 //!
 //! The columns through `data_dir` are the run's complete *result-affecting*
 //! configuration — every `RunConfig` field except `threads` (results are
 //! bit-invariant to worker counts), plus the algorithm/transport specs and
-//! the compute-plane policy (`--trainer`) — and form the `--resume` match
+//! the compute-plane backend (`--backend` / the `backends` sweep axis) —
+//! and form the `--resume` match
 //! key (see [`summary_key`]); the rest are the run's result metrics. Fields
 //! never contain commas except possibly a pathological `data_dir` path —
 //! avoid commas in data directories.
@@ -71,10 +75,10 @@ use std::path::{Path, PathBuf};
 /// Version of the *result* schema (summary CSV + round JSONL): stamped
 /// into every row/line and matched by `--resume`, so results written under
 /// an older schema are never silently reused.
-pub const RESULT_SCHEMA: i64 = 4;
+pub const RESULT_SCHEMA: i64 = 5;
 
-/// The pinned v4 summary header (also the golden-test reference).
-pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,compress_up,compress_down,scenario,faults,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients,corrupt_frames,retransmits,backoff_secs,aborted_rounds";
+/// The pinned v5 summary header (also the golden-test reference).
+pub const SUMMARY_HEADER: &str = "schema,run_id,sweep,algo,dataset,model,transport,backend,rounds,local_steps,p,alpha,gamma,seed,train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,compress_up,compress_down,scenario,faults,best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients,corrupt_frames,retransmits,backoff_secs,aborted_rounds";
 
 /// `<out>/<sweep>/summary.csv`.
 pub fn summary_path(sweep_dir: &Path) -> PathBuf {
@@ -93,15 +97,15 @@ fn opt_f64(v: Option<f64>) -> String {
 /// The configuration prefix of a summary row (everything before the metric
 /// columns: `schema` through `data_dir` — every result-affecting field of
 /// the run's [`crate::fed::RunConfig`] plus the algorithm/transport specs
-/// and the compute-plane policy; `threads` is deliberately excluded since
+/// and the compute-plane backend; `threads` is deliberately excluded since
 /// results are bit-invariant to it). This is the key `--resume` matches
 /// existing rows against, so a resumed sweep can never silently reuse a
 /// result produced under different settings, including a different
-/// `--trainer`.
-pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
+/// `--backend`.
+pub fn summary_key(sweep: &str, backend: &str, unit: &RunUnit) -> String {
     let cfg = &unit.cfg;
     format!(
-        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{trainer},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir},{compress_up},{compress_down},{scenario},{faults}",
+        "{schema},{id},{sweep},{algo},{dataset},{model},{transport},{backend},{rounds},{local_steps},{p},{alpha},{gamma},{seed},{train_n},{test_n},{clients},{sampled},{batch_size},{eval_batch},{eval_every},{tau},{data_dir},{compress_up},{compress_down},{scenario},{faults}",
         schema = RESULT_SCHEMA,
         id = unit.id,
         algo = unit.algo,
@@ -131,7 +135,7 @@ pub fn summary_key(sweep: &str, trainer: &str, unit: &RunUnit) -> String {
 }
 
 /// Render one summary row for a finished run (no trailing newline).
-pub fn summary_row(sweep: &str, trainer: &str, unit: &RunUnit, log: &MetricsLog) -> String {
+pub fn summary_row(sweep: &str, backend: &str, unit: &RunUnit, log: &MetricsLog) -> String {
     let last = log.records.last();
     let dropped: u64 = log.records.iter().map(|r| r.dropped_clients).sum();
     let stale: u64 = log.records.iter().map(|r| r.stale_updates).sum();
@@ -142,7 +146,7 @@ pub fn summary_row(sweep: &str, trainer: &str, unit: &RunUnit, log: &MetricsLog)
     let aborted: u64 = log.records.iter().map(|r| r.aborted).sum();
     format!(
         "{key},{best},{fin},{loss},{up},{down},{cost},{sim},{dropped},{stale},{churned},{corrupt},{retrans},{backoff},{aborted}",
-        key = summary_key(sweep, trainer, unit),
+        key = summary_key(sweep, backend, unit),
         best = opt_f64(log.best_accuracy()),
         fin = opt_f64(log.final_accuracy()),
         loss = opt_f64(log.final_train_loss()),
@@ -315,7 +319,7 @@ mod tests {
         assert_eq!(
             line,
             "{\"cum_downlink_bits\":200,\"cum_uplink_bits\":100,\"downlink_bits\":200,\
-             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":4,\
+             \"local_steps\":7,\"round\":0,\"run\":\"r000-x\",\"schema\":5,\
              \"total_cost\":1.07,\"train_loss\":0.5,\"uplink_bits\":100}"
         );
         let eval = round_line("r000-x", &record(1));

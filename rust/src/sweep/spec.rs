@@ -26,7 +26,8 @@
 //! base value): `algos`, `models`, `datasets`, `transports`, `scenarios`
 //! (`sync` / `semisync:<K>[@<staleness>]` round runtimes — see
 //! [`crate::fed::sim`]), `faults` (fault-injection plans —
-//! [`crate::fed::faults::FaultSpec`] grammar), `compress_up`,
+//! [`crate::fed::faults::FaultSpec`] grammar), `backends` (compute-plane
+//! keys — the [`crate::backend`] registry), `compress_up`,
 //! `compress_down` over the
 //! string-keyed registries, plus scalar grids `rounds`, `local_iters`,
 //! `alphas`, `gammas`, `ps`, `seeds`, and the population-scale axes
@@ -37,7 +38,8 @@
 //! Expansion order is canonical and documented: grid blocks in file order;
 //! within a block, nested loops over dataset → model → transport →
 //! scenario → compress_up → compress_down → algo → rounds → local_iters →
-//! alpha → gamma → p → seed → clients → sampled → faults. Every expanded unit is fully validated (registry
+//! alpha → gamma → p → seed → clients → sampled → faults → backends.
+//! Every expanded unit is fully validated (registry
 //! specs resolve, model/dataset dims agree, directional pipelines don't
 //! collide with algorithm-embedded compressors) before anything runs, so a
 //! typo fails the whole sweep up front instead of panicking inside a
@@ -105,6 +107,11 @@ pub struct GridBlock {
     /// Fault-injection plans ([`crate::fed::faults::FaultSpec`] grammar),
     /// stored canonicalized.
     pub faults: Vec<String>,
+    /// Compute-plane backend keys ([`crate::backend`] registry: `auto`,
+    /// `native`, `native-simd`, `native-bf16`, `xla`; alias `pjrt`),
+    /// stored canonicalized. An explicit axis entry pins the unit's plane
+    /// and wins over the CLI `--backend`.
+    pub backends: Vec<String>,
 }
 
 /// A parsed, not-yet-expanded sweep file.
@@ -232,6 +239,7 @@ impl GridBlock {
                 "clients" => block.clients = list_of_usize(key, value)?,
                 "sampled" => block.sampled = list_of_usize(key, value)?,
                 "faults" => block.faults = list_of_strings(key, value)?,
+                "backends" => block.backends = list_of_strings(key, value)?,
                 // Anything else is a fixed per-block run-config override;
                 // config::apply_kv validates it at expansion time.
                 _ => block.fixed.push((key.clone(), value.clone())),
@@ -262,6 +270,7 @@ impl GridBlock {
             * axis(self.clients.len())
             * axis(self.sampled.len())
             * axis(self.faults.len())
+            * axis(self.backends.len())
     }
 
     /// True when the block expands to no runs (never, post-validation).
@@ -495,6 +504,22 @@ impl SweepSpec {
                 })
                 .collect::<Result<_, _>>()?
         };
+        // Backend keys are validated against the registry and canonicalized
+        // (`pjrt` → `xla`) up front, so a typo'd plane fails the whole
+        // sweep before any run starts.
+        let backends: Vec<Option<String>> = if block.backends.is_empty() {
+            vec![None]
+        } else {
+            block
+                .backends
+                .iter()
+                .map(|b| {
+                    crate::backend::canonical_backend_key(b)
+                        .map(Some)
+                        .map_err(|e| format!("backends '{b}': {e}"))
+                })
+                .collect::<Result<_, _>>()?
+        };
 
         let opt =
             |xs: &[usize]| -> Vec<Option<usize>> {
@@ -579,29 +604,34 @@ impl SweepSpec {
                                                                         .clone()
                                                                         .unwrap_or_else(|| "inproc".to_string());
                                                                     for fault in &faults {
-                                                                        let mut cfg = cfg.clone();
-                                                                        if let Some(f) = fault {
-                                                                            cfg.faults = f.clone();
+                                                                        for backend in &backends {
+                                                                            let mut cfg = cfg.clone();
+                                                                            if let Some(f) = fault {
+                                                                                cfg.faults = f.clone();
+                                                                            }
+                                                                            if let Some(b) = backend {
+                                                                                cfg.backend = b.clone();
+                                                                            }
+                                                                            validate_unit(&cfg, &transport_spec, algo)?;
+                                                                            let index = units.len();
+                                                                            // Scale axes suffix the id only when
+                                                                            // actually swept, keeping legacy ids
+                                                                            // byte-stable.
+                                                                            let mut id = unit_id(index, algo, &cfg);
+                                                                            if let Some(n) = nc {
+                                                                                id.push_str(&format!("-n-{n}"));
+                                                                            }
+                                                                            if let Some(m) = mc {
+                                                                                id.push_str(&format!("-m-{m}"));
+                                                                            }
+                                                                            units.push(RunUnit {
+                                                                                index,
+                                                                                id,
+                                                                                algo: algo.clone(),
+                                                                                transport: transport_spec.clone(),
+                                                                                cfg,
+                                                                            });
                                                                         }
-                                                                        validate_unit(&cfg, &transport_spec, algo)?;
-                                                                        let index = units.len();
-                                                                        // Scale axes suffix the id only when
-                                                                        // actually swept, keeping legacy ids
-                                                                        // byte-stable.
-                                                                        let mut id = unit_id(index, algo, &cfg);
-                                                                        if let Some(n) = nc {
-                                                                            id.push_str(&format!("-n-{n}"));
-                                                                        }
-                                                                        if let Some(m) = mc {
-                                                                            id.push_str(&format!("-m-{m}"));
-                                                                        }
-                                                                        units.push(RunUnit {
-                                                                            index,
-                                                                            id,
-                                                                            algo: algo.clone(),
-                                                                            transport: transport_spec.clone(),
-                                                                            cfg,
-                                                                        });
                                                                     }
                                                                 }
                                                             }
@@ -623,10 +653,11 @@ impl SweepSpec {
 }
 
 /// Stable, filesystem-safe run id. Legacy shape (`r<idx>-<algo>`) when no
-/// directional pipeline, scenario, or fault plan is set; runs that differ
-/// only in `compress_up`/`compress_down`/`scenario`/`faults` gain
-/// `-u-<spec>` / `-d-<spec>` / `-s-<spec>` / `-f-<spec>` suffixes so ids
-/// stay unique (they key resume and the JSONL files).
+/// directional pipeline, scenario, fault plan, or backend pin is set; runs
+/// that differ only in
+/// `compress_up`/`compress_down`/`scenario`/`faults`/`backend` gain
+/// `-u-<spec>` / `-d-<spec>` / `-s-<spec>` / `-f-<spec>` / `-b-<key>`
+/// suffixes so ids stay unique (they key resume and the JSONL files).
 fn unit_id(index: usize, algo: &str, cfg: &RunConfig) -> String {
     let mut id = format!("r{index:03}-{}", sanitize(algo));
     if cfg.scenario != "sync" {
@@ -634,6 +665,9 @@ fn unit_id(index: usize, algo: &str, cfg: &RunConfig) -> String {
     }
     if cfg.faults != "none" {
         id.push_str(&format!("-f-{}", sanitize(&cfg.faults)));
+    }
+    if cfg.backend != "auto" {
+        id.push_str(&format!("-b-{}", sanitize(&cfg.backend)));
     }
     if cfg.compress_up != "none" {
         id.push_str(&format!("-u-{}", sanitize(&cfg.compress_up)));
@@ -651,6 +685,7 @@ fn validate_unit(cfg: &RunConfig, transport: &str, algo: &str) -> Result<(), Str
     parse_transport(transport, cfg.seed)?;
     crate::fed::faults::FaultSpec::parse(&cfg.faults)
         .map_err(|e| format!("faults '{}': {e}", cfg.faults))?;
+    crate::backend::canonical_backend_key(&cfg.backend)?;
     let up = CompressorSpec::parse(&cfg.compress_up)
         .map_err(|e| format!("compress_up '{}': {e}", cfg.compress_up))?;
     let down = CompressorSpec::parse(&cfg.compress_down)
@@ -999,6 +1034,33 @@ rounds = 3
         .and_then(|s| s.expand(1.0, None).map(|_| ()))
         .unwrap_err();
         assert!(err.contains("unknown fault clause"), "{err}");
+    }
+
+    #[test]
+    fn backends_axis_expands_canonicalizes_and_suffixes_ids() {
+        let spec = SweepSpec::parse_str(
+            "name = \"b\"\n[base]\npreset = \"smoke\"\n[[grid]]\nalgos = [\"fedavg\"]\n\
+             backends = [\"auto\", \"native-simd\", \"pjrt\"]\n",
+        )
+        .unwrap();
+        assert_eq!(spec.grids[0].len(), 3);
+        let units = spec.expand(1.0, None).unwrap();
+        assert_eq!(units.len(), 3);
+        assert_eq!(units[0].cfg.backend, "auto");
+        assert_eq!(units[1].cfg.backend, "native-simd");
+        // The pjrt alias canonicalizes to the registry key.
+        assert_eq!(units[2].cfg.backend, "xla");
+        // "auto" keeps the legacy id shape; pinned planes gain -b- suffixes.
+        assert_eq!(units[0].id, "r000-fedavg");
+        assert_eq!(units[1].id, "r001-fedavg-b-native-simd");
+        assert_eq!(units[2].id, "r002-fedavg-b-xla");
+        // An unknown plane fails the whole sweep up front.
+        let err = SweepSpec::parse_str(
+            "name = \"b\"\n[[grid]]\nalgos = [\"fedavg\"]\nbackends = [\"cuda\"]\n",
+        )
+        .and_then(|s| s.expand(1.0, None).map(|_| ()))
+        .unwrap_err();
+        assert!(err.contains("unknown backend"), "{err}");
     }
 
     #[test]

@@ -10,18 +10,67 @@
 //! [`write_snapshot`] / [`finalize`] — the format the committed perf
 //! baselines under `rust/benches/baseline/` use and the CI `perf-smoke`
 //! job diffs against ([`check_baseline`], default ±20% throughput gate).
+//!
+//! Frozen baselines compare **calibration-relative**: every snapshot
+//! records `calib_ns` — the cost of a fixed serial f32 workload on the
+//! machine that produced it ([`calibration_ns`]) — and the gate rescales
+//! baseline means by the ratio of the two calibrations, so committed
+//! numbers transfer across machines of different speeds. A baseline may
+//! also carry its own `max_regress` field (how trustworthy its numbers
+//! are), which overrides the caller's gate width.
 
 use crate::util::json::Json;
 use crate::util::stats::{format_duration_ns, Summary};
 use std::hint::black_box;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 pub use std::hint::black_box as bb;
 
 /// Schema version of the `BENCH_<suite>.json` snapshot/baseline format.
 pub const BENCH_SCHEMA: u64 = 1;
+
+/// Length of the calibration vector ([`calibration_ns`]).
+const CALIB_LEN: usize = 65_536;
+/// Serial passes over the vector per calibration rep.
+const CALIB_PASSES: usize = 8;
+
+/// Nanoseconds for one rep of the fixed calibration workload: a single
+/// serial-dependent f32 multiply-add chain over a 64k vector, swept
+/// [`CALIB_PASSES`] times. The loop-carried dependency makes it FP-latency
+/// bound — neither auto-vectorization nor wider SIMD units can reassociate
+/// a float chain — so the number tracks core clock × FP latency, the same
+/// resource the scalar micro-kernels bottleneck on, and the ratio
+/// `mean_ns / calib_ns` is comparable across machines. Measured once per
+/// process (min over 10 reps, robust to scheduler noise). Snapshots embed
+/// it as `calib_ns`; [`check_baseline`] uses the committed value to
+/// rescale frozen means onto the current machine.
+pub fn calibration_ns() -> f64 {
+    static CALIB: OnceLock<f64> = OnceLock::new();
+    *CALIB.get_or_init(|| {
+        let x: Vec<f32> = (0..CALIB_LEN)
+            .map(|i| ((i as f32) * 0.618_034).fract() - 0.5)
+            .collect();
+        let mut best = f64::INFINITY;
+        for rep in 0..10 {
+            let t = Instant::now();
+            let mut acc = 0.0f32;
+            for _ in 0..CALIB_PASSES {
+                for &v in &x {
+                    acc = acc * 0.999_9 + v;
+                }
+            }
+            black_box(acc);
+            let dt = t.elapsed().as_nanos() as f64;
+            // Rep 0 doubles as warmup (page-in, frequency ramp).
+            if rep > 0 && dt < best {
+                best = dt;
+            }
+        }
+        best.max(1.0)
+    })
+}
 
 /// Harness configuration (tunable per bench binary or via env).
 #[derive(Clone, Debug)]
@@ -246,6 +295,8 @@ fn snapshot_json(suite: &str) -> Json {
     root.set("suite", suite.into());
     root.set("provisional", false.into());
     root.set("unix_time", (stamp as f64).into());
+    let calib = calibration_ns();
+    root.set("calib_ns", calib.into());
     let cases: Vec<Json> = snap
         .0
         .iter()
@@ -262,6 +313,8 @@ fn snapshot_json(suite: &str) -> Json {
                 "per_sec",
                 if c.mean_ns > 0.0 { 1e9 / c.mean_ns } else { 0.0 }.into(),
             );
+            // Machine-independent cost: mean over the calibration workload.
+            o.set("calib_ratio", (c.mean_ns / calib).into());
             o
         })
         .collect();
@@ -308,6 +361,22 @@ pub fn check_baseline(suite: &str, baseline: &Path, max_regress: f64) -> Result<
     };
     let doc = crate::util::json::parse(&text)
         .map_err(|e| format!("baseline {} unparsable: {e}", baseline.display()))?;
+    // The file may carry its own gate width — how trustworthy its numbers
+    // are. Estimate-frozen baselines ship wider than machine-measured
+    // ones; tighten by copying a measured snapshot over the file.
+    let max_regress = doc
+        .get("max_regress")
+        .and_then(Json::as_f64)
+        .unwrap_or(max_regress);
+    // Calibration-relative rescale: when the baseline recorded the fixed
+    // workload's cost on its reference machine, frozen means are scaled
+    // by how much faster or slower this machine runs the same workload,
+    // making the gate machine-independent. Absent `calib_ns` (pre-freeze
+    // files), means compare raw.
+    let scale = match doc.get("calib_ns").and_then(Json::as_f64) {
+        Some(base_calib) if base_calib > 0.0 => calibration_ns() / base_calib,
+        _ => 1.0,
+    };
     let snap = SNAPSHOT.lock().unwrap();
     // Presence gate first — it applies even to provisional baselines, so a
     // renamed or silently-dropped bench case fails CI instead of making
@@ -356,12 +425,13 @@ pub fn check_baseline(suite: &str, baseline: &Path, max_regress: f64) -> Result<
             continue;
         };
         compared += 1;
-        if base_mean > 0.0 && cur.mean_ns > base_mean * (1.0 + max_regress) {
+        let base_eff = base_mean * scale;
+        if base_eff > 0.0 && cur.mean_ns > base_eff * (1.0 + max_regress) {
             regressions.push(format!(
                 "{bench} / {case}: {} -> {} ({:+.1}%)",
-                format_duration_ns(base_mean),
+                format_duration_ns(base_eff),
                 format_duration_ns(cur.mean_ns),
-                (cur.mean_ns / base_mean - 1.0) * 100.0
+                (cur.mean_ns / base_eff - 1.0) * 100.0
             ));
         }
     }
@@ -380,8 +450,13 @@ pub fn check_baseline(suite: &str, baseline: &Path, max_regress: f64) -> Result<
         println!("  baseline case not measured this run (skipped): {s}");
     }
     if regressions.is_empty() {
+        let cal = if scale != 1.0 {
+            format!(" (calibration x{scale:.3})")
+        } else {
+            String::new()
+        };
         Ok(format!(
-            "{compared} case(s) within {:.0}% of baseline {}",
+            "{compared} case(s) within {:.0}% of baseline {}{cal}",
             max_regress * 100.0,
             baseline.display()
         ))
@@ -466,6 +541,7 @@ mod tests {
         let j = snapshot_json("selftest");
         assert_eq!(j.get("schema").and_then(Json::as_f64), Some(BENCH_SCHEMA as f64));
         assert_eq!(j.get("suite").and_then(Json::as_str), Some("selftest"));
+        assert!(j.get("calib_ns").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
         let cases = j.get("cases").and_then(Json::as_arr).unwrap();
         assert!(cases.iter().any(|c| {
             c.get("bench").and_then(Json::as_str) == Some("benchkit_snapshot")
@@ -548,6 +624,101 @@ mod tests {
         )
         .unwrap();
         assert!(check_baseline("gate", &slow, 0.2).is_ok());
+    }
+
+    #[test]
+    fn calibration_is_positive_and_memoized() {
+        let a = calibration_ns();
+        assert!(a.is_finite() && a > 0.0);
+        let b = calibration_ns();
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn frozen_baseline_rescales_by_calibration_ratio() {
+        {
+            let mut b = Bench::new("benchkit_calib").with_config(tiny_config());
+            b.case("work", || {
+                black_box((0..256u64).sum::<u64>());
+            });
+            b.finish();
+        }
+        let dir = std::env::temp_dir().join("fedcomloc_benchkit_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let cur = calibration_ns();
+        // The baseline claims 0.001 ns — an absolute gate would always
+        // fail — but records its reference machine as a billion times
+        // slower, so the rescaled bound (≈1 ms) passes.
+        let loose = dir.join("BENCH_calib_loose.json");
+        std::fs::write(
+            &loose,
+            format!(
+                r#"{{"schema":1,"suite":"calib","provisional":false,"calib_ns":{},
+                    "cases":[{{"bench":"benchkit_calib","case":"work","mean_ns":0.001}}]}}"#,
+                cur / 1e9
+            ),
+        )
+        .unwrap();
+        let ok = check_baseline("calib", &loose, 0.2).unwrap();
+        assert!(ok.contains("calibration x"), "{ok}");
+        // Conversely an hour-long claim from a machine recorded as vastly
+        // faster rescales into an impossibly tight bound and fails.
+        let tight = dir.join("BENCH_calib_tight.json");
+        std::fs::write(
+            &tight,
+            format!(
+                r#"{{"schema":1,"suite":"calib","provisional":false,"calib_ns":{},
+                    "cases":[{{"bench":"benchkit_calib","case":"work","mean_ns":3600000000000.0}}]}}"#,
+                cur * 1e18
+            ),
+        )
+        .unwrap();
+        assert!(check_baseline("calib", &tight, 0.2).is_err());
+    }
+
+    #[test]
+    fn baseline_max_regress_field_overrides_caller_width() {
+        {
+            let mut b = Bench::new("benchkit_width").with_config(tiny_config());
+            b.case("work", || {
+                black_box((0..256u64).sum::<u64>());
+            });
+            b.finish();
+        }
+        let measured = {
+            let snap = SNAPSHOT.lock().unwrap();
+            snap.0
+                .iter()
+                .find(|c| c.bench == "benchkit_width" && c.case == "work")
+                .unwrap()
+                .mean_ns
+        };
+        let dir = std::env::temp_dir().join("fedcomloc_benchkit_test");
+        let _ = std::fs::create_dir_all(&dir);
+        // A claim of a third of the measured mean fails the caller's 20%
+        // gate, but the file can widen its own gate to 4.0 (5x) and pass.
+        let wide = dir.join("BENCH_width_wide.json");
+        std::fs::write(
+            &wide,
+            format!(
+                r#"{{"schema":1,"suite":"width","provisional":false,"max_regress":4.0,
+                    "cases":[{{"bench":"benchkit_width","case":"work","mean_ns":{}}}]}}"#,
+                measured / 3.0
+            ),
+        )
+        .unwrap();
+        assert!(check_baseline("width", &wide, 0.2).is_ok());
+        let narrow = dir.join("BENCH_width_narrow.json");
+        std::fs::write(
+            &narrow,
+            format!(
+                r#"{{"schema":1,"suite":"width","provisional":false,
+                    "cases":[{{"bench":"benchkit_width","case":"work","mean_ns":{}}}]}}"#,
+                measured / 3.0
+            ),
+        )
+        .unwrap();
+        assert!(check_baseline("width", &narrow, 0.2).is_err());
     }
 
     #[test]

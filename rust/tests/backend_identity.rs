@@ -1,0 +1,323 @@
+//! Backend compute-plane pins (ISSUE 10 acceptance):
+//!
+//! * `native-simd` is **bit-identical** to `native` on every model walk
+//!   (grad / train_step / masked step, MLP and CNN architectures) and on
+//!   full federated runs for every codec family — the AVX2 lanes replay
+//!   the scalar combine trees exactly, so they inherit the seed's
+//!   reproducibility pins;
+//! * the codec-side scans every backend shares ([`Backend::pack_topk_keys`],
+//!   [`Backend::quantize_grid`]) match the scalar reference loops bitwise;
+//! * `native-bf16` is tolerance-pinned against f32: activations round
+//!   through bf16, so per-walk outputs stay within the committed goldens
+//!   below (never bit-equal, never silently selected);
+//! * the bf16 **wire** codec is exact: 2·d little-endian bf16 patterns,
+//!   deterministic, decode == round-to-nearest-even of the input;
+//! * a sweep with a `backends` axis is byte-identical at `--threads 1`
+//!   and `--threads 4` (the backend axis joins the existing thread pin).
+
+use fedcomloc::backend::{self, Backend};
+use fedcomloc::compress::parse_spec;
+use fedcomloc::data::loader::Batch;
+use fedcomloc::fed::{run, AlgorithmSpec, RunConfig};
+use fedcomloc::model::{init_params, LocalTrainer, Workspace};
+use fedcomloc::sweep::{self, sink, SweepOptions, SweepSpec};
+use fedcomloc::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Committed tolerance golden for the bf16 activation plane: bf16 has an
+/// 8-bit mantissa (eps = 2^-8), and the deepest walk below re-rounds at
+/// most three stored activation layers, so a 16·eps envelope on relative
+/// error is generous without ever passing an f32-vs-f32 mismatch (which
+/// would be ~2^-23).
+const BF16_REL_TOL: f32 = 16.0 * fedcomloc::backend::bf16::BF16_EPS;
+/// Absolute floor for coordinates near zero, same provenance.
+const BF16_ABS_TOL: f32 = 1e-3;
+
+fn plane(key: &str) -> &'static dyn Backend {
+    backend::lookup(key).unwrap()
+}
+
+fn trainer_on(key: &str, model_spec: &str) -> Arc<dyn LocalTrainer> {
+    let model = fedcomloc::model::build_model(model_spec).unwrap();
+    plane(key).build(&model, Path::new("artifacts")).unwrap()
+}
+
+fn toy_batch(t: &dyn LocalTrainer, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Batch) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let params = init_params(t.model(), &mut rng);
+    let x: Vec<f32> = (0..n * t.model().input_dim())
+        .map(|_| rng.uniform_f32())
+        .collect();
+    let y: Vec<i32> = (0..n)
+        .map(|_| rng.below(t.model().num_classes() as u64) as i32)
+        .collect();
+    let mut h = vec![0.0f32; params.len()];
+    rng.fill_normal_f32(&mut h, 0.0, 0.01);
+    (params, h, Batch { x, y })
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("fedcomloc_backend_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn simd_plane_is_bit_identical_on_every_model_walk() {
+    for (spec, batch) in [
+        ("mlp:12x8x5", 7),
+        ("cnn:c4-c6-f16@1x16", 4),
+        ("softmax:9x4", 5),
+        ("linear:6", 3),
+    ] {
+        let scalar = trainer_on("native", spec);
+        let simd = trainer_on("native-simd", spec);
+        let (params, h, batch) = toy_batch(scalar.as_ref(), batch, 11);
+
+        let (g_s, l_s) = scalar.grad(&params, &batch);
+        let (g_v, l_v) = simd.grad(&params, &batch);
+        assert_eq!(l_s.to_bits(), l_v.to_bits(), "{spec}: grad loss");
+        assert_eq!(bits(&g_s), bits(&g_v), "{spec}: grad");
+
+        let (x_s, ls_s) = scalar.train_step(&params, &h, &batch, 0.05);
+        let (x_v, ls_v) = simd.train_step(&params, &h, &batch, 0.05);
+        assert_eq!(ls_s.to_bits(), ls_v.to_bits(), "{spec}: step loss");
+        assert_eq!(bits(&x_s), bits(&x_v), "{spec}: step");
+
+        let (xm_s, lm_s) = scalar.train_step_masked(&params, &h, &batch, 0.05, 0.3);
+        let (xm_v, lm_v) = simd.train_step_masked(&params, &h, &batch, 0.05, 0.3);
+        assert_eq!(lm_s.to_bits(), lm_v.to_bits(), "{spec}: masked loss");
+        assert_eq!(bits(&xm_s), bits(&xm_v), "{spec}: masked step");
+
+        // Workspace fast path too (the one federated drivers actually run).
+        let mut ws_s = Workspace::new();
+        let mut ws_v = Workspace::new();
+        let lw_s = scalar.grad_into(&params, &batch, &mut ws_s);
+        let lw_v = simd.grad_into(&params, &batch, &mut ws_v);
+        assert_eq!(lw_s.to_bits(), lw_v.to_bits(), "{spec}: grad_into loss");
+        let d = scalar.model().dim();
+        assert_eq!(bits(&ws_s.grad[..d]), bits(&ws_v.grad[..d]), "{spec}: grad_into");
+    }
+}
+
+/// Deterministic fingerprint of a run's metrics log (every deterministic
+/// field at bit level; wall time exempt, as in `api_regression.rs`).
+fn fingerprint(log: &fedcomloc::metrics::MetricsLog) -> Vec<(usize, u64, u64, u64, u64, u64)> {
+    log.records
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.train_loss.to_bits(),
+                r.test_loss.map(f64::to_bits).unwrap_or(0),
+                r.test_accuracy.map(f64::to_bits).unwrap_or(0),
+                r.uplink_bits,
+                r.cum_downlink_bits,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn simd_plane_matches_native_on_federated_runs_for_every_codec_family() {
+    let cfg = RunConfig {
+        train_n: 240,
+        test_n: 120,
+        n_clients: 6,
+        clients_per_round: 2,
+        rounds: 3,
+        eval_every: 3,
+        local_steps: 4,
+        batch_size: 16,
+        eval_batch: 64,
+        ..RunConfig::default_mnist()
+    };
+    let model = cfg.model_spec().build();
+    for algo in [
+        "fedavg",
+        "scaffold",
+        "fedcomloc-com:topk:0.3",
+        "fedcomloc-com:randk:0.2",
+        "fedcomloc-com:q:4",
+        "fedcomloc-com:natural",
+        "fedcomloc-com:bf16",
+        "fedcomloc-com:topk:0.25+q:8",
+    ] {
+        let spec = AlgorithmSpec::parse(algo).unwrap();
+        let on_native = run(
+            &cfg,
+            plane("native").build(&model, Path::new("artifacts")).unwrap(),
+            &spec,
+        );
+        let on_simd = run(
+            &cfg,
+            plane("native-simd").build(&model, Path::new("artifacts")).unwrap(),
+            &spec,
+        );
+        assert_eq!(
+            fingerprint(&on_native),
+            fingerprint(&on_simd),
+            "{algo}: native-simd diverged from native"
+        );
+    }
+}
+
+#[test]
+fn shared_codec_scans_match_the_scalar_reference_loops() {
+    let mut rng = Rng::seed_from_u64(17);
+    // Lengths straddle the lane width, including ragged tails and empty.
+    for len in [0usize, 1, 7, 8, 9, 31, 64, 1000, 4097] {
+        let x: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        for b in backend::backend_registry() {
+            let mut keys = vec![0xFFu64; 3]; // dirty, must be cleared
+            b.pack_topk_keys(&x, &mut keys);
+            let want: Vec<u64> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| ((v.abs().to_bits() as u64) << 32) | (!(i as u32)) as u64)
+                .collect();
+            assert_eq!(keys, want, "{}: pack_topk_keys len={len}", b.key());
+
+            let norm = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+            let mut grid = vec![f32::NAN; len];
+            b.quantize_grid(&x, norm, &mut grid);
+            let want: Vec<u32> = x
+                .iter()
+                .map(|&v| (v.abs() / norm).min(1.0).to_bits())
+                .collect();
+            assert_eq!(bits(&grid), want, "{}: quantize_grid len={len}", b.key());
+        }
+    }
+}
+
+#[test]
+fn bf16_plane_is_tolerance_pinned_against_f32_and_never_bit_equal_by_accident() {
+    let scalar = trainer_on("native", "mlp:12x8x5");
+    let bf16 = trainer_on("native-bf16", "mlp:12x8x5");
+    let (params, h, batch) = toy_batch(scalar.as_ref(), 9, 23);
+
+    let (g_f32, l_f32) = scalar.grad(&params, &batch);
+    let (g_bf, l_bf) = bf16.grad(&params, &batch);
+    assert!(
+        (l_f32 - l_bf).abs() <= BF16_REL_TOL * l_f32.abs().max(1.0),
+        "loss drifted past the bf16 golden: f32={l_f32} bf16={l_bf}"
+    );
+    let mut max_rel = 0.0f32;
+    for (i, (&a, &b)) in g_f32.iter().zip(&g_bf).enumerate() {
+        let tol = BF16_ABS_TOL.max(BF16_REL_TOL * a.abs());
+        assert!(
+            (a - b).abs() <= tol,
+            "grad[{i}] drifted past the bf16 golden: f32={a} bf16={b}"
+        );
+        if a.abs() > BF16_ABS_TOL {
+            max_rel = max_rel.max((a - b).abs() / a.abs());
+        }
+    }
+    // The plane must actually be doing bf16 storage: on a 3-layer walk the
+    // gradients cannot all be bit-equal to f32.
+    assert_ne!(bits(&g_f32), bits(&g_bf), "bf16 plane computed in f32?");
+
+    let (x_f32, _) = scalar.train_step(&params, &h, &batch, 0.05);
+    let (x_bf, _) = bf16.train_step(&params, &h, &batch, 0.05);
+    for (i, (&a, &b)) in x_f32.iter().zip(&x_bf).enumerate() {
+        let tol = BF16_ABS_TOL.max(BF16_REL_TOL * a.abs());
+        assert!((a - b).abs() <= tol, "step[{i}]: f32={a} bf16={b}");
+    }
+}
+
+#[test]
+fn bf16_wire_codec_is_exact_and_deterministic() {
+    let mut rng = Rng::seed_from_u64(29);
+    let x: Vec<f32> = (0..1537).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+    let comp = parse_spec("bf16").unwrap();
+    let mut rng_a = Rng::seed_from_u64(1);
+    let mut rng_b = Rng::seed_from_u64(2);
+    let a = comp.compress(&x, &mut rng_a);
+    let b = comp.compress(&x, &mut rng_b);
+    // Deterministic: the RNG stream is never consumed.
+    assert_eq!(a.payload, b.payload);
+    assert_eq!(a.payload.len(), 2 * x.len(), "bf16 payload is 2 bytes/coord");
+    assert_eq!(a.wire_bits, 16 * x.len() as u64);
+    // Decode == round-to-nearest-even of the input, bitwise.
+    let decoded = comp.decompress(&a);
+    let want: Vec<u32> = x
+        .iter()
+        .map(|&v| fedcomloc::backend::bf16::round_bf16(v).to_bits())
+        .collect();
+    assert_eq!(bits(&decoded), want);
+}
+
+#[test]
+fn sweep_with_backends_axis_is_byte_identical_across_thread_counts() {
+    const SWEEP: &str = r#"
+schema = 1
+name = "backendpin"
+title = "backend axis thread pin"
+
+[base]
+preset = "smoke"
+dataset = "synthetic:32-c4"
+train_n = 300
+test_n = 80
+clients = 6
+sampled = 3
+rounds = 3
+eval_every = 2
+batch_size = 16
+eval_batch = 32
+
+[[grid]]
+algos = ["fedcomloc-com:topk:0.5", "fedavg"]
+backends = ["native", "native-simd"]
+"#;
+    let spec = SweepSpec::parse_str(SWEEP).unwrap();
+    let mut summaries = Vec::new();
+    for threads in [1usize, 4] {
+        let out = tmp_dir(&format!("pin_t{threads}"));
+        let opts = SweepOptions {
+            out_dir: out.clone(),
+            threads,
+            backend: "native".to_string(),
+            ..SweepOptions::default()
+        };
+        let outcome = sweep::run_sweep(&spec, &opts).unwrap();
+        assert_eq!(outcome.executed, 4);
+        // Both planes got their own units, tagged in the run id.
+        assert!(outcome.units.iter().any(|u| u.id.ends_with("-b-native")));
+        assert!(outcome.units.iter().any(|u| u.id.ends_with("-b-native-simd")));
+        summaries.push(std::fs::read_to_string(sink::summary_path(&outcome.dir)).unwrap());
+        let _ = std::fs::remove_dir_all(&out);
+    }
+    assert_eq!(
+        summaries[0], summaries[1],
+        "backend-axis sweep diverged across thread counts"
+    );
+    // And the native-simd rows are identical to the native rows except for
+    // the run id and backend columns — the bit-identity pin end to end.
+    let rows: Vec<&str> = summaries[0].lines().skip(1).collect();
+    let strip = |row: &str| -> Vec<String> {
+        row.split(',')
+            .enumerate()
+            .filter(|(i, _)| *i != 1 && *i != 7) // run_id, backend
+            .map(|(_, f)| f.to_string())
+            .collect()
+    };
+    let native: Vec<Vec<String>> = rows
+        .iter()
+        .filter(|r| r.split(',').nth(7) == Some("native"))
+        .map(|r| strip(r))
+        .collect();
+    let simd: Vec<Vec<String>> = rows
+        .iter()
+        .filter(|r| r.split(',').nth(7) == Some("native-simd"))
+        .map(|r| strip(r))
+        .collect();
+    assert_eq!(native.len(), 2);
+    assert_eq!(native, simd, "native-simd rows differ from native rows");
+}

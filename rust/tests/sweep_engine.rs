@@ -59,7 +59,7 @@ fn opts(out: &Path, threads: usize) -> SweepOptions {
     SweepOptions {
         out_dir: out.to_path_buf(),
         threads,
-        trainer: "native".to_string(),
+        backend: "native".to_string(),
         ..SweepOptions::default()
     }
 }
@@ -79,26 +79,26 @@ fn summary_schema_is_golden() {
     assert_eq!(lines.next(), Some(sink::SUMMARY_HEADER));
     assert_eq!(
         sink::SUMMARY_HEADER,
-        "schema,run_id,sweep,algo,dataset,model,transport,trainer,rounds,local_steps,p,alpha,gamma,seed,\
+        "schema,run_id,sweep,algo,dataset,model,transport,backend,rounds,local_steps,p,alpha,gamma,seed,\
          train_n,test_n,clients,sampled,batch_size,eval_batch,eval_every,tau,data_dir,\
          compress_up,compress_down,scenario,faults,\
          best_accuracy,final_accuracy,final_train_loss,total_uplink_bits,total_downlink_bits,\
          total_cost,total_sim_secs,dropped_clients,stale_updates,churned_clients,\
          corrupt_frames,retransmits,backoff_secs,aborted_rounds",
-        "summary schema v4 is pinned; bump sink::RESULT_SCHEMA to change it"
+        "summary schema v5 is pinned; bump sink::RESULT_SCHEMA to change it"
     );
     let rows: Vec<&str> = lines.collect();
     assert_eq!(rows.len(), 6);
     for (row, unit) in rows.iter().zip(&outcome.units) {
         let fields: Vec<&str> = row.split(',').collect();
         assert_eq!(fields.len(), 41, "{row}");
-        assert_eq!(fields[0], "4");
+        assert_eq!(fields[0], "5");
         assert_eq!(fields[1], unit.id);
         assert_eq!(fields[2], "enginetest");
         assert_eq!(fields[3], unit.algo);
         assert_eq!(fields[4], "synthetic:32-c4");
         assert_eq!(fields[5], "softmax:32x4");
-        assert_eq!(fields[7], "native", "trainer column");
+        assert_eq!(fields[7], "native", "backend column");
         assert_eq!(fields[14], "400", "train_n column");
         assert_eq!(fields[16], "6", "clients column");
         assert_eq!(fields[23], unit.cfg.compress_up, "compress_up column");
@@ -121,7 +121,7 @@ fn summary_schema_is_golden() {
         let jsonl = read(&sink::rounds_path(&outcome.dir, &unit.id));
         assert_eq!(jsonl.lines().count(), 3, "{}", unit.id);
         let first = fedcomloc::util::json::parse(jsonl.lines().next().unwrap()).unwrap();
-        assert_eq!(first.get("schema").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(first.get("schema").unwrap().as_usize().unwrap(), 5);
         assert_eq!(first.get("run").unwrap().as_str().unwrap(), unit.id);
         assert_eq!(first.get("round").unwrap().as_usize().unwrap(), 0);
         assert!(first.get("wall_secs").is_none(), "wall clock must not leak");

@@ -23,7 +23,8 @@ use fedcomloc::util::quickcheck::{check, Gen};
 use fedcomloc::util::rng::Rng;
 
 /// One spec per codec family, plus the chained spelling (its own codec
-/// tag) — the full set of wire formats `Message::decode` accepts.
+/// tag) and the bf16 truncation codec (tag 6, the `native-bf16` plane's
+/// wire twin) — the full set of wire formats `Message::decode` accepts.
 const SPECS: &[&str] = &[
     "none",
     "topk:0.25",
@@ -32,6 +33,7 @@ const SPECS: &[&str] = &[
     "q:4",
     "natural",
     "topk:0.1|q8",
+    "bf16",
 ];
 
 /// Encode a valid frame for a random codec, dimension, and payload.
